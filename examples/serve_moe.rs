@@ -1,0 +1,25 @@
+//! END-TO-END serving driver: load the real AOT-compiled JAX/Pallas MoE
+//! model via PJRT, serve batched requests through router + dynamic batcher +
+//! engine, and report latency/throughput — proving all three layers compose
+//! (L1 Pallas kernels → L2 JAX layer → HLO artifacts → L3 rust coordinator).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_moe
+//! ```
+//!
+//! The run is recorded in EXPERIMENTS.md §End-to-end.
+
+use aurora::schedule::SchedulePolicy;
+use aurora::serve::demo::run_serving_demo;
+
+fn main() {
+    let requests = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(128usize);
+    if let Err(e) = run_serving_demo("artifacts", requests, 64, SchedulePolicy::Aurora) {
+        eprintln!("serving demo failed: {e:#}");
+        eprintln!("hint: run `make artifacts` first");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,113 @@
+"""AOT lowering: JAX → HLO **text** artifacts for the rust runtime.
+
+Run once by ``make artifacts``; rust loads the text via
+``HloModuleProto::from_text_file`` (HLO text, NOT ``.serialize()`` — the
+image's xla_extension 0.5.1 rejects jax ≥ 0.5's 64-bit-id protos; the text
+parser reassigns ids. See /opt/xla-example/README.md).
+
+Artifacts (demo dims: 8 experts, d_model 64, d_ff 256, capacity 64):
+
+* ``gate.hlo.txt``          — x[cap, d] → (idx i32[cap], weight f32[cap])
+* ``expert_ffn_<e>.hlo.txt`` — x[cap, d] → y[cap, d], weights baked in
+* ``moe_layer.hlo.txt``     — x[cap, d] → y[cap, d], fused layer, all baked
+* ``meta.json``             — dims + seed, consumed by the rust engine
+
+Weights are baked into the HLO as constants (closed over at trace time), so
+the rust request path only moves activations.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+N_EXPERTS = 8
+D_MODEL = 64
+D_FF = 256
+CAPACITY = 64
+# Expert-FFN capacity buckets: the rust engine routes each expert's token
+# group to the smallest compiled capacity that fits, instead of always paying
+# the full-capacity FFN (EXPERIMENTS.md §Perf: ~3x serving throughput).
+FFN_CAPACITIES = [8, 16, 64]
+SEED = 0
+
+
+def to_hlo_text(fn, *example_args):
+    """Lower a jittable function to XLA HLO text (return_tuple=True).
+
+    ``print_large_constants=True`` is essential: the default printer elides
+    big constants as ``{...}``, and the xla text parser then reads the baked
+    weights back as zeros — silently corrupting the model.
+    """
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # the xla_extension 0.5.1 text parser predates newer metadata attributes
+    # (source_end_line etc.), so strip metadata entirely
+    opts.print_metadata = False
+    return comp.as_hlo_module().to_string(opts)
+
+
+def main():
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument("--seed", type=int, default=SEED)
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    params = model.init_params(jax.random.PRNGKey(args.seed), N_EXPERTS, D_MODEL, D_FF)
+    x_spec = jax.ShapeDtypeStruct((CAPACITY, D_MODEL), jnp.float32)
+
+    written = []
+
+    def emit_with_spec(name, fn, spec):
+        text = to_hlo_text(fn, spec)
+        path = os.path.join(args.out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        written.append(name)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    def emit(name, fn):
+        emit_with_spec(name, fn, x_spec)
+
+    emit("gate.hlo.txt", lambda x: model.gate_fn(params, x))
+    for e in range(N_EXPERTS):
+        for cap in FFN_CAPACITIES:
+            spec = jax.ShapeDtypeStruct((cap, D_MODEL), jnp.float32)
+            emit_with_spec(
+                f"expert_ffn_{e}_c{cap}.hlo.txt",
+                lambda x, e=e: (model.expert_ffn_padded(params, e, x),),
+                spec,
+            )
+    emit("moe_layer.hlo.txt", lambda x: (model.moe_layer(params, x),))
+
+    meta = {
+        "n_experts": N_EXPERTS,
+        "d_model": D_MODEL,
+        "d_ff": D_FF,
+        "capacity": CAPACITY,
+        "ffn_capacities": FFN_CAPACITIES,
+        "seed": args.seed,
+        "artifacts": written,
+    }
+    meta_path = os.path.join(args.out_dir, "meta.json")
+    with open(meta_path, "w") as f:
+        json.dump(meta, f, indent=2)
+    print(f"wrote {meta_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,122 @@
+"""L1: the top-1 gate Pallas kernel.
+
+A thin matmul + row-softmax + argmax. Tokens are tiled on grid axis 0; the
+gate weight matrix ``wg`` ([d_model, n_experts], a few KB) stays fully
+resident in VMEM — the expert count is small (8 in the paper) so the reduction
+dimension never needs tiling.
+
+``interpret=True`` as everywhere (see ``moe_ffn``).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gate_kernel(x_ref, wg_ref, idx_ref, weight_ref):
+    logits = jnp.dot(x_ref[...], wg_ref[...], preferred_element_type=jnp.float32)
+    m = logits.max(axis=-1, keepdims=True)
+    probs = jnp.exp(logits - m)
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    idx = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    idx_ref[...] = idx
+    weight_ref[...] = jnp.max(probs, axis=-1).astype(weight_ref.dtype)
+
+
+def _pick_block(dim, preferred):
+    b = min(preferred, dim)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("block_t",))
+def gate_top1(x, wg, *, block_t=128):
+    """Pallas top-1 gate.
+
+    Args:
+      x: [tokens, d_model]; wg: [d_model, n_experts].
+    Returns:
+      (expert_idx int32 [tokens], gate_weight f32 [tokens]).
+    """
+    t, _ = x.shape
+    n_experts = wg.shape[1]
+    bt = _pick_block(t, block_t)
+    grid = (t // bt,)
+    d_model = x.shape[1]
+
+    return pl.pallas_call(
+        _gate_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, d_model), lambda i: (i, 0)),
+            pl.BlockSpec((d_model, n_experts), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bt,), lambda i: (i,)),
+            pl.BlockSpec((bt,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t,), jnp.int32),
+            jax.ShapeDtypeStruct((t,), jnp.float32),
+        ],
+        interpret=True,
+    )(x, wg)
+
+
+def _gate_top2_kernel(x_ref, wg_ref, idx1_ref, idx2_ref, w1_ref, w2_ref):
+    logits = jnp.dot(x_ref[...], wg_ref[...], preferred_element_type=jnp.float32)
+    m = logits.max(axis=-1, keepdims=True)
+    probs = jnp.exp(logits - m)
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    i1 = jnp.argmax(logits, axis=-1)
+    p1 = jnp.max(probs, axis=-1)
+    # mask the winner, take the runner-up
+    masked = jnp.where(
+        jax.nn.one_hot(i1, logits.shape[-1], dtype=jnp.bool_), -jnp.inf, logits
+    )
+    i2 = jnp.argmax(masked, axis=-1)
+    p2 = jnp.take_along_axis(probs, i2[:, None], axis=-1)[:, 0]
+    # renormalize the pair (GShard-style top-2 combine weights)
+    denom = p1 + p2
+    idx1_ref[...] = i1.astype(jnp.int32)
+    idx2_ref[...] = i2.astype(jnp.int32)
+    w1_ref[...] = (p1 / denom).astype(w1_ref.dtype)
+    w2_ref[...] = (p2 / denom).astype(w2_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t",))
+def gate_top2(x, wg, *, block_t=128):
+    """Pallas top-2 gate (the paper's "one or two experts" routing).
+
+    Returns ``(idx1, idx2, w1, w2)``: the two selected experts per token and
+    their renormalized combine weights (``w1 + w2 == 1``).
+    """
+    t, d_model = x.shape
+    n_experts = wg.shape[1]
+    bt = _pick_block(t, block_t)
+    grid = (t // bt,)
+
+    return pl.pallas_call(
+        _gate_top2_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, d_model), lambda i: (i, 0)),
+            pl.BlockSpec((d_model, n_experts), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bt,), lambda i: (i,)),
+            pl.BlockSpec((bt,), lambda i: (i,)),
+            pl.BlockSpec((bt,), lambda i: (i,)),
+            pl.BlockSpec((bt,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t,), jnp.int32),
+            jax.ShapeDtypeStruct((t,), jnp.int32),
+            jax.ShapeDtypeStruct((t,), jnp.float32),
+            jax.ShapeDtypeStruct((t,), jnp.float32),
+        ],
+        interpret=True,
+    )(x, wg)

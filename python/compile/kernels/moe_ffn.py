@@ -1,0 +1,114 @@
+"""L1: the expert-FFN Pallas kernel — the MoE compute hot spot.
+
+TPU mapping of the paper's per-expert FFN (DESIGN.md §Hardware-Adaptation):
+the GPU implementation the paper assumes tiles the two GEMMs across
+threadblocks with shared-memory staging; on TPU we express the same schedule
+with a Pallas grid and BlockSpecs:
+
+* grid axis 0 tiles the **token** dimension (``block_t`` rows per step);
+* grid axis 1 tiles the **d_ff** dimension (``block_f`` columns per step),
+  so neither weight matrix has to fit in VMEM at once;
+* each grid step computes a partial ``gelu(x·W1[:, j])·W2[j, :]`` product on
+  the MXU and accumulates into the output block, which stays resident in
+  VMEM across the ``d_ff`` sweep (revisited-output accumulation);
+* block sizes default to MXU-friendly 128 multiples, clamped to the layer's
+  actual dims.
+
+VMEM per step ≈ ``block_t·d_model + d_model·block_f + block_f·d_model +
+block_t·block_f + block_t·d_model`` floats — bounded regardless of ``d_ff``.
+
+``interpret=True`` always: the CPU PJRT runtime cannot execute Mosaic
+custom-calls; correctness is validated against ``ref.expert_ffn_ref`` and
+real-TPU efficiency is estimated analytically in EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _ffn_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    """One (token-block, ff-block) grid step.
+
+    Computes ``h = gelu(x·W1_j + b1_j)`` for this d_ff tile and accumulates
+    ``h·W2_j`` into the output tile; the bias ``b2`` is added on the first
+    ff-step only.
+    """
+    j = pl.program_id(1)
+
+    x = x_ref[...]
+    h = ref.gelu(
+        jnp.dot(x, w1_ref[...], preferred_element_type=jnp.float32) + b1_ref[...]
+    )
+    partial = jnp.dot(h, w2_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = (partial + b2_ref[...]).astype(o_ref.dtype)
+
+    @pl.when(j != 0)
+    def _accum():
+        o_ref[...] = (o_ref[...] + partial.astype(o_ref.dtype)).astype(o_ref.dtype)
+
+
+def _pick_block(dim, preferred):
+    """Largest divisor of ``dim`` that is ≤ preferred (MXU-aligned when the
+    dim allows it)."""
+    b = min(preferred, dim)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_f"))
+def expert_ffn(x, w1, b1, w2, b2, *, block_t=128, block_f=128):
+    """Pallas expert FFN: ``gelu(x @ w1 + b1) @ w2 + b2``.
+
+    Args:
+      x: [tokens, d_model] activations.
+      w1: [d_model, d_ff]; b1: [d_ff]; w2: [d_ff, d_model]; b2: [d_model].
+      block_t / block_f: preferred token / d_ff tile sizes (clamped to
+        divisors of the actual dims).
+    Returns:
+      [tokens, d_model], same dtype as ``x``.
+    """
+    t, d_model = x.shape
+    d_ff = w1.shape[1]
+    bt = _pick_block(t, block_t)
+    bf = _pick_block(d_ff, block_f)
+    grid = (t // bt, d_ff // bf)
+
+    return pl.pallas_call(
+        _ffn_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, d_model), lambda i, j: (i, 0)),  # x tile
+            pl.BlockSpec((d_model, bf), lambda i, j: (0, j)),  # W1 column tile
+            pl.BlockSpec((bf,), lambda i, j: (j,)),  # b1 tile
+            pl.BlockSpec((bf, d_model), lambda i, j: (j, 0)),  # W2 row tile
+            pl.BlockSpec((d_model,), lambda i, j: (0,)),  # b2
+        ],
+        out_specs=pl.BlockSpec((bt, d_model), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, d_model), x.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, w1, b1, w2, b2)
+
+
+def vmem_bytes_per_step(block_t, block_f, d_model, dtype_bytes=4):
+    """Analytic VMEM footprint of one grid step (see module docstring).
+
+    Used by EXPERIMENTS.md §Perf to check the schedule against the ~16 MiB
+    per-core VMEM budget of a TPU.
+    """
+    x_tile = block_t * d_model
+    w1_tile = d_model * block_f
+    b1_tile = block_f
+    w2_tile = block_f * d_model
+    b2_tile = d_model
+    h_tile = block_t * block_f
+    out_tile = block_t * d_model
+    return dtype_bytes * (x_tile + w1_tile + b1_tile + w2_tile + b2_tile + h_tile + out_tile)

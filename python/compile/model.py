@@ -1,0 +1,119 @@
+"""L2: the JAX MoE layer (build-time only; never on the request path).
+
+Composes the L1 Pallas kernels into the paper's MoE layer (Fig. 1):
+gate → dispatch → expert FFN → combine. Two variants are exported:
+
+* :func:`moe_layer` — a fully fused, AOT-compilable layer with dense-masked
+  dispatch: every expert runs over the full token block, masked by the gate's
+  top-1 selection. Static shapes make it trivially AOT-exportable; the
+  compute redundancy is irrelevant on the tiny demo dims (the paper's
+  *performance* story lives in the L3 simulator, not in this functional
+  model — see DESIGN.md).
+* :func:`expert_ffn_padded` / :func:`gate_fn` — the *split* artifacts used by
+  the rust serving engine, which performs real sparse dispatch itself: it
+  runs the gate, groups tokens by expert (ordering transmissions with
+  Aurora's schedule), and invokes each expert's FFN on a padded
+  fixed-capacity batch.
+
+Weight initialization is seeded and reproduced exactly by the rust side's
+expectations (weights are baked into the HLO as constants at AOT time).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import gate as gate_kernel
+from compile.kernels import moe_ffn
+
+
+def init_params(key, n_experts, d_model, d_ff):
+    """Seeded MoE-layer parameters.
+
+    Returns a dict with ``wg [d, E]``, ``w1 [E, d, f]``, ``b1 [E, f]``,
+    ``w2 [E, f, d]``, ``b2 [E, d]``.
+    """
+    kg, k1, k2 = jax.random.split(key, 3)
+    scale1 = 1.0 / jnp.sqrt(d_model)
+    scale2 = 1.0 / jnp.sqrt(d_ff)
+    return {
+        "wg": jax.random.normal(kg, (d_model, n_experts), jnp.float32) * scale1,
+        "w1": jax.random.normal(k1, (n_experts, d_model, d_ff), jnp.float32) * scale1,
+        "b1": jnp.zeros((n_experts, d_ff), jnp.float32),
+        "w2": jax.random.normal(k2, (n_experts, d_ff, d_model), jnp.float32) * scale2,
+        "b2": jnp.zeros((n_experts, d_model), jnp.float32),
+    }
+
+
+def gate_fn(params, x):
+    """Gate sub-graph: top-1 expert index and gate weight per token."""
+    return gate_kernel.gate_top1(x, params["wg"])
+
+
+def expert_ffn_padded(params, e, x):
+    """Single expert's FFN over a padded fixed-capacity token block.
+
+    The rust engine pads each expert's token group to the compiled capacity;
+    padding rows are garbage-in/garbage-out and dropped by the engine.
+
+    Block sizes: the demo artifact dims (d_model 64, d_ff 256) fit a single
+    tile comfortably, so the whole layer is one grid step — the interpret-mode
+    lowering then emits straight-line HLO instead of a grid while-loop
+    (EXPERIMENTS.md §Perf: ~2x serving throughput). The multi-tile schedule
+    (128x128 blocks) is what a real ViT-B deployment on TPU would compile.
+    """
+    d_ff = params["w1"].shape[-1]
+    return moe_ffn.expert_ffn(
+        x,
+        params["w1"][e],
+        params["b1"][e],
+        params["w2"][e],
+        params["b2"][e],
+        block_t=x.shape[0],
+        block_f=d_ff,
+    )
+
+
+def moe_layer(params, x):
+    """The fused dense-masked MoE layer (top-1 routing).
+
+    Args:
+      params: from :func:`init_params`.
+      x: [tokens, d_model].
+    Returns:
+      [tokens, d_model].
+    """
+    idx, weight = gate_fn(params, x)
+    n_experts = params["wg"].shape[1]
+    out = jnp.zeros_like(x)
+    for e in range(n_experts):
+        y = expert_ffn_padded(params, e, x)
+        mask = (idx == e).astype(x.dtype)[:, None]
+        out = out + y * mask
+    return out * weight[:, None].astype(x.dtype)
+
+
+def moe_stack(params_list, x):
+    """A stack of MoE layers (the model the e2e serving demo loads)."""
+    for p in params_list:
+        x = moe_layer(p, x)
+    return x
+
+
+def gate_top2_fn(params, x):
+    """Top-2 gate sub-graph (paper §2.1: "each token will be sent to one or
+    two experts")."""
+    return gate_kernel.gate_top2(x, params["wg"])
+
+
+def moe_layer_top2(params, x):
+    """Dense-masked top-2 MoE layer: each token combines its two selected
+    experts' outputs with renormalized gate weights."""
+    i1, i2, g1, g2 = gate_top2_fn(params, x)
+    n_experts = params["wg"].shape[1]
+    out = jnp.zeros_like(x)
+    for e in range(n_experts):
+        y = expert_ffn_padded(params, e, x)
+        m1 = ((i1 == e).astype(x.dtype) * g1.astype(x.dtype))[:, None]
+        m2 = ((i2 == e).astype(x.dtype) * g2.astype(x.dtype))[:, None]
+        out = out + y * (m1 + m2)
+    return out

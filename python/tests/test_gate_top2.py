@@ -1,0 +1,64 @@
+"""Top-2 gating: Pallas kernel vs oracle, and layer-level composition."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.kernels import gate, ref
+
+hypothesis.settings.register_profile(
+    "top2", max_examples=15, deadline=None, derandomize=True
+)
+hypothesis.settings.load_profile("top2")
+
+
+@hypothesis.given(
+    t=st.sampled_from([1, 8, 64]),
+    d_model=st.sampled_from([8, 32]),
+    n_experts=st.sampled_from([2, 8]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_gate_top2_matches_ref(t, d_model, n_experts, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(k1, (t, d_model), jnp.float32)
+    wg = jax.random.normal(k2, (d_model, n_experts), jnp.float32)
+    i1, i2, w1, w2 = gate.gate_top2(x, wg)
+    r1, r2, rw1, rw2 = ref.gate_top2_ref(x, wg)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(r1))
+    np.testing.assert_array_equal(np.asarray(i2), np.asarray(r2))
+    np.testing.assert_allclose(w1, rw1, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(w2, rw2, rtol=1e-5, atol=1e-6)
+
+
+def test_top2_weights_normalized_and_distinct():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (64, 32), jnp.float32)
+    wg = jax.random.normal(jax.random.PRNGKey(1), (32, 8), jnp.float32)
+    i1, i2, w1, w2 = gate.gate_top2(x, wg)
+    np.testing.assert_allclose(np.asarray(w1) + np.asarray(w2), 1.0, rtol=1e-5)
+    assert (np.asarray(i1) != np.asarray(i2)).all()
+    assert (np.asarray(w1) >= np.asarray(w2) - 1e-6).all()
+
+
+def test_moe_layer_top2_matches_ref():
+    params = model.init_params(jax.random.PRNGKey(0), 8, 32, 64)
+    x = jax.random.normal(jax.random.PRNGKey(2), (32, 32), jnp.float32)
+    got = model.moe_layer_top2(params, x)
+    want = ref.moe_layer_top2_ref(
+        x, params["wg"], params["w1"], params["b1"], params["w2"], params["b2"]
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_top2_reduces_to_top1_weighting_when_one_expert_dominates():
+    # a gate matrix that makes expert 0 dominate: top-2 weight w1 -> 1
+    params = model.init_params(jax.random.PRNGKey(0), 4, 8, 16)
+    wg = jnp.zeros((8, 4)).at[:, 0].set(100.0)
+    x = jnp.ones((8, 8), jnp.float32)
+    i1, _, w1, w2 = gate.gate_top2(x, wg)
+    assert (np.asarray(i1) == 0).all()
+    assert (np.asarray(w1) > 0.99).all()
+    assert (np.asarray(w2) < 0.01).all()

@@ -1,0 +1,114 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes and dtypes; every case asserts allclose — this is
+the core correctness signal for the kernel layer.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import gate, moe_ffn, ref
+
+hypothesis.settings.register_profile(
+    "kernels", max_examples=25, deadline=None, derandomize=True
+)
+hypothesis.settings.load_profile("kernels")
+
+
+def rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+@hypothesis.given(
+    t=st.sampled_from([1, 4, 16, 48, 128]),
+    d_model=st.sampled_from([8, 32, 64]),
+    d_ff=st.sampled_from([16, 64, 256]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_expert_ffn_matches_ref(t, d_model, d_ff, seed):
+    keys = jax.random.split(jax.random.PRNGKey(seed), 5)
+    x = rand(keys[0], (t, d_model), jnp.float32)
+    w1 = rand(keys[1], (d_model, d_ff), jnp.float32) * 0.1
+    b1 = rand(keys[2], (d_ff,), jnp.float32) * 0.1
+    w2 = rand(keys[3], (d_ff, d_model), jnp.float32) * 0.1
+    b2 = rand(keys[4], (d_model,), jnp.float32) * 0.1
+    got = moe_ffn.expert_ffn(x, w1, b1, w2, b2)
+    want = ref.expert_ffn_ref(x, w1, b1, w2, b2)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@hypothesis.given(
+    block_t=st.sampled_from([1, 8, 32, 128]),
+    block_f=st.sampled_from([8, 32, 128]),
+)
+def test_expert_ffn_block_size_invariance(block_t, block_f):
+    """The tiling schedule must not change the numerics."""
+    keys = jax.random.split(jax.random.PRNGKey(7), 5)
+    t, d_model, d_ff = 32, 16, 64
+    x = rand(keys[0], (t, d_model), jnp.float32)
+    w1 = rand(keys[1], (d_model, d_ff), jnp.float32) * 0.1
+    b1 = rand(keys[2], (d_ff,), jnp.float32) * 0.1
+    w2 = rand(keys[3], (d_ff, d_model), jnp.float32) * 0.1
+    b2 = rand(keys[4], (d_model,), jnp.float32) * 0.1
+    got = moe_ffn.expert_ffn(x, w1, b1, w2, b2, block_t=block_t, block_f=block_f)
+    want = ref.expert_ffn_ref(x, w1, b1, w2, b2)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_expert_ffn_dtypes(dtype):
+    keys = jax.random.split(jax.random.PRNGKey(3), 5)
+    t, d_model, d_ff = 16, 32, 64
+    x = rand(keys[0], (t, d_model), dtype)
+    w1 = rand(keys[1], (d_model, d_ff), dtype) * 0.1
+    b1 = rand(keys[2], (d_ff,), dtype) * 0.1
+    w2 = rand(keys[3], (d_ff, d_model), dtype) * 0.1
+    b2 = rand(keys[4], (d_model,), dtype) * 0.1
+    got = moe_ffn.expert_ffn(x, w1, b1, w2, b2)
+    want = ref.expert_ffn_ref(
+        x.astype(jnp.float32),
+        w1.astype(jnp.float32),
+        b1.astype(jnp.float32),
+        w2.astype(jnp.float32),
+        b2.astype(jnp.float32),
+    )
+    assert got.dtype == dtype
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        got.astype(jnp.float32), want, rtol=tol, atol=tol
+    )
+
+
+@hypothesis.given(
+    t=st.sampled_from([1, 8, 64, 96]),
+    d_model=st.sampled_from([8, 64]),
+    n_experts=st.sampled_from([2, 8, 16]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_gate_matches_ref(t, d_model, n_experts, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = rand(k1, (t, d_model), jnp.float32)
+    wg = rand(k2, (d_model, n_experts), jnp.float32)
+    idx, weight = gate.gate_top1(x, wg)
+    ridx, rweight = ref.gate_ref(x, wg)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(ridx))
+    np.testing.assert_allclose(weight, rweight, rtol=1e-5, atol=1e-6)
+    assert idx.dtype == jnp.int32
+    assert (np.asarray(idx) >= 0).all() and (np.asarray(idx) < n_experts).all()
+    # top-1 softmax weight is at least 1/E and at most 1
+    assert (np.asarray(weight) >= 1.0 / n_experts - 1e-6).all()
+    assert (np.asarray(weight) <= 1.0 + 1e-6).all()
+
+
+def test_vmem_estimate_within_budget_for_vit_b():
+    """The schedule's analytic VMEM footprint at ViT-B dims fits a TPU core's
+    ~16 MiB VMEM with the default 128x128 blocks (see EXPERIMENTS.md §Perf)."""
+    budget = 16 * 1024 * 1024
+    fp32 = moe_ffn.vmem_bytes_per_step(128, 128, 768, dtype_bytes=4)
+    assert fp32 < budget, f"fp32 footprint {fp32} exceeds VMEM budget"
+    bf16 = moe_ffn.vmem_bytes_per_step(128, 128, 768, dtype_bytes=2)
+    assert bf16 < budget / 2

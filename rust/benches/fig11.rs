@@ -1,0 +1,69 @@
+//! `cargo bench --bench fig11` — regenerates Fig. 11 (inference time across
+//! the four scenarios) and times the planning/simulation hot paths behind it.
+//!
+//! The offline build has no criterion; `aurora::util::bench` provides the
+//! warmup + median/mean/min harness.
+
+use aurora::config::EvalConfig;
+use aurora::eval::{fig11a, fig11b, fig11c, fig11d, Workloads};
+use aurora::planner::Planner;
+use aurora::schedule::{comm_time, SchedulePolicy};
+use aurora::sim::{simulate_colocated, simulate_exclusive};
+use aurora::util::bench::Bench;
+
+fn main() {
+    let cfg = EvalConfig::default();
+    let w = Workloads::generate(&cfg);
+
+    // --- regenerate the figure tables ---
+    for report in [
+        fig11a(&cfg, &w),
+        fig11b(&cfg, &w),
+        fig11c(&cfg, &w),
+        fig11d(&cfg, &w),
+    ] {
+        println!("{}", report.render());
+    }
+
+    // --- time the hot paths the figure exercises ---
+    let homo = cfg.homogeneous_cluster();
+    let het = cfg.heterogeneous_cluster();
+    let layer = &w.b16_coco.layers[0];
+    let bw = homo.bandwidths();
+
+    let mut b = Bench::new();
+    Bench::header();
+    b.run("comm_time/aurora (8x8)", || {
+        comm_time(&layer.traffic, &bw, SchedulePolicy::Aurora).makespan
+    });
+    b.run("comm_time/sjf head-of-line sim (8x8)", || {
+        comm_time(&layer.traffic, &bw, SchedulePolicy::Sjf).makespan
+    });
+    b.run("simulate_exclusive (8 GPUs)", || {
+        simulate_exclusive(layer, &homo, SchedulePolicy::Aurora)
+            .0
+            .inference_ms
+    });
+    let planner = Planner::default();
+    b.run("plan_exclusive hetero (Thm 5.1)", || {
+        planner.plan_exclusive(&w.b16_coco, &het).assignment_a[0]
+    });
+    b.run("plan_colocated homo (Case II matching)", || {
+        planner
+            .plan_colocated(&w.b16_coco, &w.b16_imagenet, &homo)
+            .assignment_a[0]
+    });
+    b.run("plan_colocated hetero (decoupled 3D)", || {
+        planner
+            .plan_colocated(&w.b16_coco, &w.b16_imagenet, &het)
+            .assignment_a[0]
+    });
+    let plan = planner.plan_colocated(&w.b16_coco, &w.b16_imagenet, &homo);
+    let pa = plan.place_a(&w.b16_coco);
+    let pb = plan.place_b(&w.b16_imagenet);
+    b.run("simulate_colocated (Table 2 timeline)", || {
+        simulate_colocated(&pa[0], &pb[0], &homo, plan.policy)
+            .0
+            .inference_ms
+    });
+}

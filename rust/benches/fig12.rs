@@ -1,0 +1,29 @@
+//! `cargo bench --bench fig12` — regenerates Fig. 12 (GPU utilization) and
+//! times the utilization accounting path.
+
+use aurora::config::EvalConfig;
+use aurora::eval::{fig12a, fig12b, lina_utilization, Workloads};
+use aurora::schedule::SchedulePolicy;
+use aurora::util::bench::Bench;
+
+fn main() {
+    let cfg = EvalConfig::default();
+    let w = Workloads::generate(&cfg);
+
+    for report in [fig12a(&cfg, &w), fig12b(&cfg, &w)] {
+        println!("{}", report.render());
+    }
+
+    let homo = cfg.homogeneous_cluster();
+    let mut b = Bench::new();
+    Bench::header();
+    b.run("lina merged-model utilization (4 layers)", || {
+        lina_utilization(
+            &w.b16_coco,
+            &w.b16_imagenet,
+            &homo,
+            SchedulePolicy::Rcs { seed: 7 },
+        )
+    });
+    b.run("fig12a full panel", || fig12a(&cfg, &w).rows.len());
+}

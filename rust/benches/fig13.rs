@@ -1,0 +1,43 @@
+//! `cargo bench --bench fig13` — the optimality-gap experiment at reduced
+//! scale (n = 6 pairings exhaustive; the full n = 8 run is
+//! `aurora eval --figure 13`, ~15 s/instance) plus hot-path timings for the
+//! matching machinery it leans on.
+
+use aurora::config::EvalConfig;
+use aurora::eval::{fig13, Workloads};
+use aurora::matching::{bottleneck_matching, hungarian_min_sum};
+use aurora::util::bench::Bench;
+use aurora::util::Rng;
+
+fn main() {
+    // Reduced-scale figure (exhaustive search over 6! pairings).
+    let cfg = EvalConfig {
+        n_experts: 6,
+        n_layers: 2,
+        batch_images: 32,
+        hetero_gbps: vec![100.0, 50.0],
+        ..EvalConfig::default()
+    };
+    let w = Workloads::generate(&cfg);
+    println!("{}", fig13(&cfg, &w).render());
+    println!("(full n=8 run: `aurora eval --figure 13`)\n");
+
+    // Matching hot paths at paper scale.
+    let mut rng = Rng::new(0xF13);
+    let n = 8;
+    let weights: Vec<Vec<f64>> = (0..n)
+        .map(|_| (0..n).map(|_| rng.gen_f64() * 100.0).collect())
+        .collect();
+    let mut b = Bench::new();
+    Bench::header();
+    b.run("bottleneck_matching 8x8", || {
+        bottleneck_matching(n, |i, j| weights[i][j]).0
+    });
+    b.run("hungarian_min_sum 8x8", || hungarian_min_sum(&weights).0);
+    let big: Vec<Vec<f64>> = (0..64)
+        .map(|_| (0..64).map(|_| rng.gen_f64()).collect())
+        .collect();
+    b.run("bottleneck_matching 64x64", || {
+        bottleneck_matching(64, |i, j| big[i][j]).0
+    });
+}

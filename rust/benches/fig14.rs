@@ -1,0 +1,26 @@
+//! `cargo bench --bench fig14` — regenerates Fig. 14 (robustness to traffic
+//! imprecision) and times the noise-injection path.
+
+use aurora::config::EvalConfig;
+use aurora::eval::{fig14a, fig14b, Workloads};
+use aurora::trace::noisy_traffic;
+use aurora::util::bench::Bench;
+
+fn main() {
+    let cfg = EvalConfig::default();
+    let w = Workloads::generate(&cfg);
+
+    for report in [fig14a(&cfg, &w), fig14b(&cfg, &w)] {
+        println!("{}", report.render());
+    }
+
+    let layers = &w.b16_coco.layers;
+    let noise: Vec<&aurora::traffic::TrafficMatrix> =
+        layers.iter().skip(1).map(|l| &l.traffic).collect();
+    let mut b = Bench::new();
+    Bench::header();
+    b.run("noisy_traffic blend (8x8, 3 noise layers)", || {
+        noisy_traffic(&layers[0].traffic, &noise, 0.5).total()
+    });
+    b.run("fig14a full panel", || fig14a(&cfg, &w).rows.len());
+}

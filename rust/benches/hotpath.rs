@@ -1,0 +1,132 @@
+//! `cargo bench --bench hotpath` — L3 coordinator hot paths, tracked for the
+//! §Perf targets in DESIGN.md:
+//!
+//! * plan for n = 64 GPUs in < 50 ms,
+//! * schedule a 10k-token 8x8 matrix in < 100 ms (BvN decomposition),
+//! * router overhead < 10 µs/request (excluding model execution),
+//! * batcher push < 1 µs/request.
+//!
+//! Plus ablations: min-sum (Hungarian) vs bottleneck colocation on the
+//! aggregated-b_max objective, and BvN schedule construction vs the analytic
+//! bound.
+
+use aurora::cluster::Cluster;
+use aurora::colocation::{aggregated_b_max, case2_pairing};
+use aurora::matching::hungarian_min_sum;
+use aurora::planner::Planner;
+use aurora::schedule::{aurora_schedule, comm_time, SchedulePolicy};
+use aurora::serve::{BatcherConfig, DynamicBatcher, Request, Router};
+use aurora::trace::{limoe_trace, Dataset, LimoeVariant};
+use aurora::util::bench::Bench;
+use aurora::util::Rng;
+
+fn main() {
+    let mut b = Bench::new();
+    Bench::header();
+
+    // --- scheduling ---
+    let trace8 = limoe_trace(LimoeVariant::B16, Dataset::Coco, 8, 1, 64, 5);
+    let d8 = &trace8.layers[0].traffic; // ~12.5k tokens
+    b.run("bvn schedule 8x8 (~12.5k tokens)", || {
+        aurora_schedule(d8).makespan_tokens()
+    });
+    b.run("analytic b_max 8x8", || d8.b_max_tokens());
+    let trace64 = limoe_trace(LimoeVariant::B16, Dataset::Coco, 64, 1, 512, 6);
+    let d64 = &trace64.layers[0].traffic;
+    b.run("bvn schedule 64x64 (~100k tokens)", || {
+        aurora_schedule(d64).makespan_tokens()
+    });
+    let bw64 = vec![800.0; 64];
+    b.run("head-of-line sim 64x64 (sjf)", || {
+        comm_time(d64, &bw64, SchedulePolicy::Sjf).makespan
+    });
+
+    // --- planning ---
+    let planner = Planner::default();
+    let cluster64 = Cluster::paper_heterogeneous(64, 800.0);
+    let a64 = limoe_trace(LimoeVariant::B16, Dataset::Coco, 64, 4, 512, 7);
+    let b64 = limoe_trace(LimoeVariant::B16, Dataset::Imagenet, 64, 4, 512, 8);
+    b.run("plan_exclusive n=64 hetero", || {
+        planner.plan_exclusive(&a64, &cluster64).assignment_a[0]
+    });
+    b.run("plan_colocated n=64 hetero (decoupled)", || {
+        planner.plan_colocated(&a64, &b64, &cluster64).assignment_a[0]
+    });
+
+    // --- ablation: bottleneck vs min-sum colocation objective ---
+    let da = &a64.layers[0].traffic;
+    let db = &b64.layers[0].traffic;
+    let (a_s, a_r) = aurora::colocation::send_recv_volumes(da);
+    let (b_s, b_r) = aurora::colocation::send_recv_volumes(db);
+    let (_, pi_bottleneck) = case2_pairing(da, db);
+    let cost: Vec<Vec<f64>> = (0..64)
+        .map(|i| {
+            (0..64)
+                .map(|j| ((a_s[i] + b_s[j]).max(a_r[i] + b_r[j])) as f64)
+                .collect()
+        })
+        .collect();
+    let (_, pi_minsum) = hungarian_min_sum(&cost);
+    println!(
+        "\nablation: aggregated b_max — bottleneck pairing {} vs min-sum pairing {} ({}x worse)\n",
+        aggregated_b_max(da, db, &pi_bottleneck),
+        aggregated_b_max(da, db, &pi_minsum),
+        aggregated_b_max(da, db, &pi_minsum) as f64
+            / aggregated_b_max(da, db, &pi_bottleneck) as f64
+    );
+
+    // --- serving-side hot paths ---
+    let mut router = Router::new(4, aurora::serve::router::RoutePolicy::LeastLoaded);
+    let mut rng = Rng::new(1);
+    let reqs: Vec<Request> = (0..1024)
+        .map(|id| Request::new(id, vec![0.1; (rng.gen_range(8) as usize + 1) * 64], 64))
+        .collect();
+    let mut i = 0;
+    b.run("router.route (least-loaded, 4 workers)", || {
+        let w = router.route(&reqs[i % reqs.len()]);
+        router.complete(w, reqs[i % reqs.len()].n_tokens);
+        i += 1;
+        w
+    });
+    let mut batcher = DynamicBatcher::new(BatcherConfig::default());
+    let now = std::time::Instant::now();
+    let mut j = 0;
+    b.run("batcher.push", || {
+        let r = reqs[j % reqs.len()].clone();
+        j += 1;
+        if let Ok(Some(batch)) = batcher.push(r, now) {
+            batch.requests.len()
+        } else {
+            0
+        }
+    });
+
+    // --- §Perf target checks (hard numbers recorded in EXPERIMENTS.md) ---
+    let samples = b.samples();
+    let find = |name: &str| {
+        samples
+            .iter()
+            .find(|s| s.name == name)
+            .unwrap_or_else(|| panic!("missing sample {name}"))
+    };
+    let plan64 = find("plan_colocated n=64 hetero (decoupled)");
+    println!(
+        "\nperf targets: plan n=64 {} (< 50 ms: {}), bvn 8x8 {} (< 100 ms: {}), route {} (< 10 us: {})",
+        format_ms(plan64.median.as_secs_f64() * 1e3),
+        plan64.median.as_millis() < 50,
+        format_ms(find("bvn schedule 8x8 (~12.5k tokens)").median.as_secs_f64() * 1e3),
+        find("bvn schedule 8x8 (~12.5k tokens)").median.as_millis() < 100,
+        format_ms(find("router.route (least-loaded, 4 workers)").median.as_secs_f64() * 1e3),
+        find("router.route (least-loaded, 4 workers)").median.as_micros() < 10,
+    );
+}
+
+fn format_ms(ms: f64) -> String {
+    if ms < 0.001 {
+        format!("{:.1} ns", ms * 1e6)
+    } else if ms < 1.0 {
+        format!("{:.1} µs", ms * 1e3)
+    } else {
+        format!("{ms:.2} ms")
+    }
+}

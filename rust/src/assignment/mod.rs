@@ -1,0 +1,160 @@
+//! Expert → GPU assignment on heterogeneous clusters (paper §5).
+//!
+//! Theorem 5.1: sorting experts by token load (descending) and GPUs by
+//! performance (descending) and pairing them in order minimizes inference
+//! time. [`sorted_assignment`] implements it; [`random_assignment`] is the
+//! RGA baseline of §8.1; [`brute_force_assignment`] enumerates all
+//! permutations against an arbitrary cost function and is the optimality
+//! oracle used by tests and the Fig. 13 harness.
+//!
+//! An assignment is a permutation `perm` with `perm[e] = GPU id hosting
+//! expert e` (equivalently: the argument to
+//! [`crate::traffic::TrafficMatrix::permute`]).
+
+use crate::cluster::Cluster;
+use crate::matching::for_each_permutation;
+use crate::util::Rng;
+
+/// Theorem 5.1: most-loaded expert onto the highest-performance GPU,
+/// second-most-loaded onto the second-best, and so on.
+///
+/// `loads[e]` is the historical token load of expert `e` (its FFN input
+/// volume, which also upper-bounds its network volume in the paper's model).
+pub fn sorted_assignment(loads: &[u64], cluster: &Cluster) -> Vec<usize> {
+    assert_eq!(loads.len(), cluster.len(), "one expert per GPU");
+    let mut experts: Vec<usize> = (0..loads.len()).collect();
+    // descending load; stable tiebreak on expert id for determinism
+    experts.sort_by_key(|&e| (std::cmp::Reverse(loads[e]), e));
+    let gpus = cluster.ids_by_perf_desc();
+    let mut perm = vec![0usize; loads.len()];
+    for (rank, &e) in experts.iter().enumerate() {
+        perm[e] = gpus[rank];
+    }
+    perm
+}
+
+/// RGA baseline: a uniformly random expert→GPU bijection.
+pub fn random_assignment(n: usize, rng: &mut Rng) -> Vec<usize> {
+    rng.permutation(n)
+}
+
+/// Exhaustive assignment search minimizing `cost(perm)`. `O(n!)` — use only
+/// for small `n` (tests, Fig. 13 optimum).
+pub fn brute_force_assignment(
+    n: usize,
+    mut cost: impl FnMut(&[usize]) -> f64,
+) -> (f64, Vec<usize>) {
+    let mut best = f64::INFINITY;
+    let mut best_perm: Vec<usize> = (0..n).collect();
+    for_each_permutation(n, |perm| {
+        let c = cost(perm);
+        if c < best {
+            best = c;
+            best_perm = perm.to_vec();
+        }
+    });
+    (best, best_perm)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::GpuSpec;
+
+    fn hetero4() -> Cluster {
+        Cluster::new(vec![
+            GpuSpec {
+                flops_scale: 0.4,
+                bandwidth: 0.4,
+            },
+            GpuSpec {
+                flops_scale: 1.0,
+                bandwidth: 1.0,
+            },
+            GpuSpec {
+                flops_scale: 0.5,
+                bandwidth: 0.5,
+            },
+            GpuSpec {
+                flops_scale: 0.8,
+                bandwidth: 0.8,
+            },
+        ])
+    }
+
+    #[test]
+    fn heaviest_expert_gets_best_gpu() {
+        let c = hetero4();
+        let loads = vec![10, 40, 20, 30];
+        let perm = sorted_assignment(&loads, &c);
+        assert_eq!(perm[1], 1); // heaviest -> 1.0 GPU
+        assert_eq!(perm[3], 3); // next -> 0.8 GPU
+        assert_eq!(perm[2], 2); // next -> 0.5 GPU
+        assert_eq!(perm[0], 0); // lightest -> 0.4 GPU
+    }
+
+    #[test]
+    fn assignment_is_bijection() {
+        let c = Cluster::paper_heterogeneous(8, 1.0);
+        let loads = vec![5, 5, 5, 9, 1, 5, 5, 5]; // ties exercise the tiebreak
+        let perm = sorted_assignment(&loads, &c);
+        let mut seen = vec![false; 8];
+        for &g in &perm {
+            assert!(!seen[g]);
+            seen[g] = true;
+        }
+    }
+
+    #[test]
+    fn ties_are_deterministic() {
+        let c = Cluster::paper_heterogeneous(8, 1.0);
+        let loads = vec![3; 8];
+        assert_eq!(sorted_assignment(&loads, &c), sorted_assignment(&loads, &c));
+    }
+
+    #[test]
+    fn random_assignment_is_bijection() {
+        let mut rng = Rng::new(5);
+        let perm = random_assignment(10, &mut rng);
+        let mut seen = vec![false; 10];
+        for &g in &perm {
+            assert!(!seen[g]);
+            seen[g] = true;
+        }
+    }
+
+    #[test]
+    fn brute_force_finds_known_optimum() {
+        // cost = displacement from identity
+        let (c, perm) = brute_force_assignment(5, |p| {
+            p.iter()
+                .enumerate()
+                .map(|(i, &g)| (i as f64 - g as f64).abs())
+                .sum()
+        });
+        assert_eq!(c, 0.0);
+        assert_eq!(perm, vec![0, 1, 2, 3, 4]);
+    }
+
+    /// Theorem 5.1 optimality on the bottleneck objective: the sorted
+    /// assignment minimizes max_i (load of expert on GPU i / perf of GPU i).
+    #[test]
+    fn sorted_assignment_minimizes_bottleneck_objective() {
+        let mut rng = Rng::new(0x7531);
+        for _ in 0..20 {
+            let c = hetero4();
+            let loads: Vec<u64> = (0..4).map(|_| rng.gen_range(100) + 1).collect();
+            let objective = |perm: &[usize]| -> f64 {
+                (0..4)
+                    .map(|e| loads[e] as f64 / c.gpu(perm[e]).flops_scale)
+                    .fold(0.0, f64::max)
+            };
+            let sorted = sorted_assignment(&loads, &c);
+            let (best, _) = brute_force_assignment(4, |p| objective(p));
+            assert!(
+                objective(&sorted) <= best + 1e-9,
+                "loads={loads:?} sorted={sorted:?}"
+            );
+        }
+    }
+}

@@ -1,0 +1,163 @@
+//! [`GpuSpec`] and [`Cluster`].
+
+
+/// One GPU's performance envelope.
+///
+/// `flops_scale` is a relative compute-speed multiplier (1.0 = reference GPU;
+/// component times divide by it). `bandwidth` is the full-duplex port speed
+/// into the big switch, in **tokens per millisecond** (the config layer
+/// converts Gbps + token bytes into this unit).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GpuSpec {
+    /// Relative compute performance (higher = faster compute).
+    pub flops_scale: f64,
+    /// Port bandwidth in tokens/ms.
+    pub bandwidth: f64,
+}
+
+impl GpuSpec {
+    /// Reference homogeneous GPU: unit compute, unit bandwidth.
+    pub fn reference() -> Self {
+        Self {
+            flops_scale: 1.0,
+            bandwidth: 1.0,
+        }
+    }
+
+    /// The paper's performance order (§5, footnote 2): compute and bandwidth
+    /// are aligned, so a single scalar ranks GPUs. We rank by bandwidth with
+    /// flops as tiebreak.
+    pub fn perf_key(&self) -> (f64, f64) {
+        (self.bandwidth, self.flops_scale)
+    }
+}
+
+/// A set of GPUs behind one non-blocking big switch.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Cluster {
+    gpus: Vec<GpuSpec>,
+}
+
+impl Cluster {
+    /// Build from explicit GPU specs.
+    pub fn new(gpus: Vec<GpuSpec>) -> Self {
+        assert!(!gpus.is_empty(), "cluster needs at least one GPU");
+        Self { gpus }
+    }
+
+    /// `n` identical reference GPUs with the given bandwidth (tokens/ms).
+    pub fn homogeneous(n: usize, bandwidth: f64) -> Self {
+        Self::new(vec![
+            GpuSpec {
+                flops_scale: 1.0,
+                bandwidth,
+            };
+            n
+        ])
+    }
+
+    /// The paper's evaluation cluster (§8.1): four GPU types with bandwidths
+    /// 100/80/50/40 Gbps (expressed here as relative token rates 1.0, 0.8,
+    /// 0.5, 0.4 × `base_bandwidth`) and matching compute scale, equal counts
+    /// per type. `n` must be divisible by 4.
+    pub fn paper_heterogeneous(n: usize, base_bandwidth: f64) -> Self {
+        assert!(n % 4 == 0, "paper's heterogeneous cluster uses 4 equal-size GPU type groups");
+        let fracs = [1.0, 0.8, 0.5, 0.4];
+        let mut gpus = Vec::with_capacity(n);
+        for f in fracs {
+            for _ in 0..n / 4 {
+                gpus.push(GpuSpec {
+                    flops_scale: f,
+                    bandwidth: f * base_bandwidth,
+                });
+            }
+        }
+        Self::new(gpus)
+    }
+
+    /// Number of GPUs.
+    pub fn len(&self) -> usize {
+        self.gpus.len()
+    }
+
+    /// True if the cluster has no GPUs (never — constructor forbids it).
+    pub fn is_empty(&self) -> bool {
+        self.gpus.is_empty()
+    }
+
+    /// Spec of GPU `i`.
+    pub fn gpu(&self, i: usize) -> GpuSpec {
+        self.gpus[i]
+    }
+
+    /// All specs.
+    pub fn gpus(&self) -> &[GpuSpec] {
+        &self.gpus
+    }
+
+    /// Per-GPU bandwidths (tokens/ms), indexable by GPU id.
+    pub fn bandwidths(&self) -> Vec<f64> {
+        self.gpus.iter().map(|g| g.bandwidth).collect()
+    }
+
+    /// True when every GPU has identical spec.
+    pub fn is_homogeneous(&self) -> bool {
+        self.gpus.iter().all(|g| *g == self.gpus[0])
+    }
+
+    /// GPU ids sorted from highest to lowest performance (Theorem 5.1 order).
+    pub fn ids_by_perf_desc(&self) -> Vec<usize> {
+        let mut ids: Vec<usize> = (0..self.len()).collect();
+        ids.sort_by(|&a, &b| {
+            self.gpus[b]
+                .perf_key()
+                .partial_cmp(&self.gpus[a].perf_key())
+                .unwrap()
+        });
+        ids
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn homogeneous_detection() {
+        assert!(Cluster::homogeneous(4, 2.0).is_homogeneous());
+        assert!(!Cluster::paper_heterogeneous(8, 1.0).is_homogeneous());
+    }
+
+    #[test]
+    fn paper_cluster_has_four_type_groups() {
+        let c = Cluster::paper_heterogeneous(8, 10.0);
+        assert_eq!(c.len(), 8);
+        let bws = c.bandwidths();
+        assert_eq!(bws[0], 10.0);
+        assert_eq!(bws[2], 8.0);
+        assert_eq!(bws[4], 5.0);
+        assert_eq!(bws[6], 4.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn paper_cluster_rejects_non_multiple_of_four() {
+        Cluster::paper_heterogeneous(6, 1.0);
+    }
+
+    #[test]
+    fn perf_order_descends() {
+        let c = Cluster::paper_heterogeneous(8, 1.0);
+        let ids = c.ids_by_perf_desc();
+        let bws: Vec<f64> = ids.iter().map(|&i| c.gpu(i).bandwidth).collect();
+        for w in bws.windows(2) {
+            assert!(w[0] >= w[1]);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_cluster_rejected() {
+        Cluster::new(vec![]);
+    }
+}

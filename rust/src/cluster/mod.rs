@@ -1,0 +1,14 @@
+//! GPU and cluster models.
+//!
+//! The paper models the inter-GPU fabric as a non-blocking *big switch*
+//! (§2.4, Fig. 4a): every GPU has one full-duplex port into the switch; the
+//! only contention points are the per-GPU tx/rx ports. Heterogeneous clusters
+//! (§5, §7) mix GPU types that differ in compute performance and port
+//! bandwidth, with the paper's standing assumption (footnote 2) that a GPU
+//! with higher compute never has lower bandwidth.
+
+mod gpu;
+pub mod topology;
+
+pub use gpu::{Cluster, GpuSpec};
+pub use topology::{comm_time_topology, uplink_bound, Topology};

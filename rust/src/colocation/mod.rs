@@ -1,0 +1,281 @@
+//! Expert colocation across two MoE models (paper §6, §7).
+//!
+//! Aurora pairs each expert of Model *a* with one expert of Model *b* on a
+//! shared GPU so that one model computes while the other communicates
+//! (Fig. 3b). The pairing is chosen to minimize the *aggregated*
+//! communication time — by Theorem 6.1 this also minimizes inference time on
+//! homogeneous clusters.
+//!
+//! * [`case1_pairing`] — Theorem 6.2: when per-GPU send and receive volumes
+//!   coincide, sort one vector ascending, the other descending, pair in
+//!   order.
+//! * [`case2_pairing`] — the general case as a bottleneck matching over edge
+//!   weights `max(a_i + b_j, a_{n+i} + b_{n+j})` (§6.2, Fig. 8b).
+//! * [`lina_grouping`] — the Lina baseline: packs two experts of the *same*
+//!   model per GPU (most popular with least popular).
+//! * [`random_pairing`] — REC: random cross-model colocation.
+//! * [`hetero`] — the NP-hard Colocating + Heterogeneous scenario (§7):
+//!   decoupled two-stage matching plus a brute-force optimum for Fig. 13.
+
+pub mod hetero;
+
+use crate::matching::bottleneck_matching;
+use crate::traffic::TrafficMatrix;
+use crate::util::Rng;
+
+/// A colocation is a permutation `pi`: expert `i` of Model *a* shares its GPU
+/// with expert `pi[i]` of Model *b*.
+pub type Colocation = Vec<usize>;
+
+/// Per-GPU send/receive volume vectors of a traffic matrix: the paper's
+/// `a = [(a_1, a_{n+1}), ...]` (§6.2). Returns `(send, recv)`.
+pub fn send_recv_volumes(d: &TrafficMatrix) -> (Vec<u64>, Vec<u64>) {
+    let n = d.n();
+    (
+        (0..n).map(|i| d.row_sum(i)).collect(),
+        (0..n).map(|i| d.col_sum(i)).collect(),
+    )
+}
+
+/// Theorem 6.2 (Case I): given scalar per-expert volumes (send == receive),
+/// pair ascending `a` with descending `b`. Returns `pi` minimizing
+/// `max_i (a_i + b_{pi[i]})`.
+pub fn case1_pairing(a: &[u64], b: &[u64]) -> Colocation {
+    assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let mut ai: Vec<usize> = (0..n).collect();
+    ai.sort_by_key(|&i| (a[i], i)); // ascending
+    let mut bi: Vec<usize> = (0..n).collect();
+    bi.sort_by_key(|&j| (std::cmp::Reverse(b[j]), j)); // descending
+    let mut pi = vec![0usize; n];
+    for k in 0..n {
+        pi[ai[k]] = bi[k];
+    }
+    pi
+}
+
+/// Case II (§6.2): bottleneck matching on the complete bipartite graph whose
+/// edge `(i, j)` weighs `max(a_i + b_j, a_{n+i} + b_{n+j})` — the worst of
+/// combined send and combined receive volume if experts `i` (Model a) and
+/// `j` (Model b) share a GPU.
+///
+/// Returns `(bottleneck_volume, pi)`.
+pub fn case2_pairing(da: &TrafficMatrix, db: &TrafficMatrix) -> (u64, Colocation) {
+    assert_eq!(da.n(), db.n(), "colocated models must have equal expert counts");
+    let (a_send, a_recv) = send_recv_volumes(da);
+    let (b_send, b_recv) = send_recv_volumes(db);
+    let weight = |i: usize, j: usize| -> f64 {
+        let s = a_send[i] + b_send[j];
+        let r = a_recv[i] + b_recv[j];
+        s.max(r) as f64
+    };
+    let (w, pi) = bottleneck_matching(da.n(), weight);
+    (w as u64, pi)
+}
+
+/// REC baseline: uniformly random cross-model pairing.
+pub fn random_pairing(n: usize, rng: &mut Rng) -> Colocation {
+    rng.permutation(n)
+}
+
+/// Lina baseline grouping: pack two experts of the *same* model per GPU,
+/// pairing the most popular with the least popular (§8.1, footnote 5).
+///
+/// `loads[e]` is expert `e`'s token load; returns `n/2` groups of two expert
+/// ids each. Panics if `n` is odd.
+pub fn lina_grouping(loads: &[u64]) -> Vec<Vec<usize>> {
+    let n = loads.len();
+    assert!(n % 2 == 0, "Lina packs experts in pairs");
+    let mut ids: Vec<usize> = (0..n).collect();
+    ids.sort_by_key(|&e| (loads[e], e)); // ascending popularity
+    (0..n / 2).map(|k| vec![ids[k], ids[n - 1 - k]]).collect()
+}
+
+/// The aggregated traffic matrix of two colocated models: Model b's experts
+/// are relabelled onto Model a's GPU indices via `pi`, then summed.
+pub fn aggregate_traffic(da: &TrafficMatrix, db: &TrafficMatrix, pi: &[usize]) -> TrafficMatrix {
+    // pi[i] = b-expert on the GPU of a-expert i  =>  b-expert j lands on GPU
+    // inv[j] where inv[pi[i]] = i.
+    let n = da.n();
+    let mut inv = vec![0usize; n];
+    for (i, &j) in pi.iter().enumerate() {
+        inv[j] = i;
+    }
+    da.sum(&db.permute(&inv))
+}
+
+/// The aggregated bottleneck volume `max column/row sum` of the colocated
+/// pair under `pi` — the quantity Theorem 6.1 says to minimize.
+pub fn aggregated_b_max(da: &TrafficMatrix, db: &TrafficMatrix, pi: &[usize]) -> u64 {
+    aggregate_traffic(da, db, pi).b_max_tokens()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rand_matrix(n: usize, seed: u64, hi: u64) -> TrafficMatrix {
+        let mut rng = Rng::new(seed);
+        let mut d = TrafficMatrix::zeros(n);
+        for i in 0..n {
+            for j in 0..n {
+                if i != j {
+                    d.set(i, j, rng.gen_range(hi));
+                }
+            }
+        }
+        d
+    }
+
+    #[test]
+    fn case1_pairs_large_with_small() {
+        let a = vec![1, 5, 3];
+        let b = vec![2, 6, 4];
+        let pi = case1_pairing(&a, &b);
+        // smallest a (idx 0) pairs with largest b (idx 1)
+        assert_eq!(pi[0], 1);
+        // largest a (idx 1) pairs with smallest b (idx 0)
+        assert_eq!(pi[1], 0);
+        assert_eq!(pi[2], 2);
+    }
+
+    #[test]
+    fn case1_minimizes_max_sum_vs_exhaustive() {
+        use crate::matching::for_each_permutation;
+        let mut rng = Rng::new(0xC1);
+        for n in 1..=6 {
+            for _ in 0..10 {
+                let a: Vec<u64> = (0..n).map(|_| rng.gen_range(50)).collect();
+                let b: Vec<u64> = (0..n).map(|_| rng.gen_range(50)).collect();
+                let pi = case1_pairing(&a, &b);
+                let ours = (0..n).map(|i| a[i] + b[pi[i]]).max().unwrap();
+                let mut best = u64::MAX;
+                for_each_permutation(n, |p| {
+                    let m = (0..n).map(|i| a[i] + b[p[i]]).max().unwrap();
+                    best = best.min(m);
+                });
+                assert_eq!(ours, best, "a={a:?} b={b:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn case2_is_valid_permutation() {
+        let da = rand_matrix(8, 1, 20);
+        let db = rand_matrix(8, 2, 20);
+        let (_, pi) = case2_pairing(&da, &db);
+        let mut seen = vec![false; 8];
+        for &j in &pi {
+            assert!(!seen[j]);
+            seen[j] = true;
+        }
+    }
+
+    #[test]
+    fn case2_bottleneck_beats_random_pairings() {
+        let da = rand_matrix(8, 3, 30);
+        let db = rand_matrix(8, 4, 30);
+        let (w, pi) = case2_pairing(&da, &db);
+        // the weight function is the max of aggregated send/recv *volumes*;
+        // verify optimality against 500 random pairings on the same metric
+        let (a_send, a_recv) = send_recv_volumes(&da);
+        let (b_send, b_recv) = send_recv_volumes(&db);
+        let vol = |p: &[usize]| -> u64 {
+            (0..8)
+                .map(|i| (a_send[i] + b_send[p[i]]).max(a_recv[i] + b_recv[p[i]]))
+                .max()
+                .unwrap()
+        };
+        assert_eq!(w, vol(&pi));
+        let mut rng = Rng::new(5);
+        for _ in 0..500 {
+            let p = rng.permutation(8);
+            assert!(w <= vol(&p));
+        }
+    }
+
+    #[test]
+    fn case2_reduces_to_case1_when_symmetric() {
+        // build symmetric matrices (send == recv per GPU) and check both
+        // approaches achieve the same bottleneck volume
+        let mut da = TrafficMatrix::zeros(4);
+        let mut db = TrafficMatrix::zeros(4);
+        for (i, v) in [(0usize, 3u64), (1, 7), (2, 5), (3, 1)] {
+            // ring traffic: i sends v to i+1 and receives v from i-1 — but to
+            // make send == recv per GPU, use a symmetric pattern
+            da.set(i, (i + 1) % 4, v);
+            da.set((i + 1) % 4, i, v);
+            db.set(i, (i + 2) % 4, v + 1);
+            db.set((i + 2) % 4, i, v + 1);
+        }
+        let (a_send, a_recv) = send_recv_volumes(&da);
+        assert_eq!(a_send, a_recv);
+        let (w2, _) = case2_pairing(&da, &db);
+        let (b_send, _) = send_recv_volumes(&db);
+        let pi1 = case1_pairing(&a_send, &b_send);
+        let w1 = (0..4).map(|i| a_send[i] + b_send[pi1[i]]).max().unwrap();
+        assert_eq!(w1, w2);
+    }
+
+    #[test]
+    fn lina_pairs_popular_with_unpopular() {
+        let loads = vec![100, 10, 50, 70, 20, 90, 40, 60];
+        let groups = lina_grouping(&loads);
+        assert_eq!(groups.len(), 4);
+        // least popular (1: load 10) pairs with most popular (0: load 100)
+        assert_eq!(groups[0], vec![1, 0]);
+        // all experts covered exactly once
+        let mut seen = vec![false; 8];
+        for g in &groups {
+            for &e in g {
+                assert!(!seen[e]);
+                seen[e] = true;
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn lina_rejects_odd_expert_count() {
+        lina_grouping(&[1, 2, 3]);
+    }
+
+    #[test]
+    fn aggregate_traffic_conserves_totals() {
+        let da = rand_matrix(6, 7, 15);
+        let db = rand_matrix(6, 8, 15);
+        let mut rng = Rng::new(9);
+        let pi = random_pairing(6, &mut rng);
+        let agg = aggregate_traffic(&da, &db, &pi);
+        assert_eq!(agg.total(), da.total() + db.total());
+    }
+
+    #[test]
+    fn identity_pairing_aggregates_in_place() {
+        let da = rand_matrix(4, 11, 10);
+        let db = rand_matrix(4, 12, 10);
+        let pi: Vec<usize> = (0..4).collect();
+        let agg = aggregate_traffic(&da, &db, &pi);
+        assert_eq!(agg.get(0, 1), da.get(0, 1) + db.get(0, 1));
+    }
+
+    #[test]
+    fn case2_aggregated_b_max_not_worse_than_rec_average() {
+        // Aurora's pairing should beat the average random pairing on the
+        // aggregated b_max objective (the actual optimality is on volume,
+        // which equals b_max here because b_max == max send/recv volume).
+        let da = rand_matrix(8, 21, 40);
+        let db = rand_matrix(8, 22, 40);
+        let (_, pi) = case2_pairing(&da, &db);
+        let ours = aggregated_b_max(&da, &db, &pi);
+        let mut rng = Rng::new(23);
+        let mut worse = 0;
+        for _ in 0..200 {
+            let p = rng.permutation(8);
+            if aggregated_b_max(&da, &db, &p) >= ours {
+                worse += 1;
+            }
+        }
+        assert!(worse >= 190, "random beat Aurora too often: {}", 200 - worse);
+    }
+}

@@ -1,0 +1,208 @@
+//! Configuration: JSON config files and physical-unit conversion.
+//!
+//! The simulator works in *tokens* and *tokens per millisecond*; configs
+//! speak Gbps and bytes. [`gbps_to_tokens_per_ms`] converts, with an
+//! `efficiency` factor capturing real all-to-all goodput (small messages,
+//! incast, protocol overhead — the reason the paper sees >60% of inference
+//! time in communication on 100 Gbps fabric).
+
+use crate::cluster::{Cluster, GpuSpec};
+use crate::util::Json;
+
+/// Bytes one token occupies on the wire (f32 activations of ViT-B's
+/// d_model = 768).
+pub const DEFAULT_TOKEN_BYTES: f64 = 768.0 * 4.0;
+
+/// Default effective fraction of line rate an all-to-all achieves.
+pub const DEFAULT_NET_EFFICIENCY: f64 = 0.2;
+
+/// Convert a line rate in Gbps to simulator bandwidth (tokens/ms).
+pub fn gbps_to_tokens_per_ms(gbps: f64, token_bytes: f64, efficiency: f64) -> f64 {
+    assert!(gbps > 0.0 && token_bytes > 0.0 && (0.0..=1.0).contains(&efficiency));
+    gbps * 1e9 * efficiency / 8.0 / token_bytes / 1e3
+}
+
+/// Experiment configuration (defaults reproduce §8.1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct EvalConfig {
+    /// Number of experts per model == GPUs in the cluster.
+    pub n_experts: usize,
+    /// MoE layers per model.
+    pub n_layers: usize,
+    /// Images per batch driving the trace generator.
+    pub batch_images: u64,
+    /// Homogeneous line rate (Gbps).
+    pub homo_gbps: f64,
+    /// Heterogeneous line rates (Gbps), one group per entry.
+    pub hetero_gbps: Vec<f64>,
+    /// Wire bytes per token.
+    pub token_bytes: f64,
+    /// Effective all-to-all efficiency.
+    pub net_efficiency: f64,
+    /// RNG seed for traces and randomized baselines.
+    pub seed: u64,
+    /// Samples to average for randomized baselines (RCS/REC/RGA).
+    pub baseline_samples: usize,
+}
+
+impl Default for EvalConfig {
+    fn default() -> Self {
+        Self {
+            n_experts: 8,
+            n_layers: 4,
+            batch_images: 64,
+            homo_gbps: 100.0,
+            hetero_gbps: vec![100.0, 80.0, 50.0, 40.0],
+            token_bytes: DEFAULT_TOKEN_BYTES,
+            net_efficiency: DEFAULT_NET_EFFICIENCY,
+            seed: 2024,
+            baseline_samples: 10,
+        }
+    }
+}
+
+impl EvalConfig {
+    /// Homogeneous cluster in simulator units.
+    pub fn homogeneous_cluster(&self) -> Cluster {
+        Cluster::homogeneous(
+            self.n_experts,
+            gbps_to_tokens_per_ms(self.homo_gbps, self.token_bytes, self.net_efficiency),
+        )
+    }
+
+    /// Heterogeneous cluster (§8.1): equal-sized GPU type groups; compute
+    /// scale tracks bandwidth fraction (paper footnote 2 alignment).
+    pub fn heterogeneous_cluster(&self) -> Cluster {
+        let groups = self.hetero_gbps.len();
+        assert!(
+            self.n_experts % groups == 0,
+            "GPU count must split evenly across types"
+        );
+        let top = self.hetero_gbps.iter().cloned().fold(f64::MIN, f64::max);
+        let mut gpus = Vec::with_capacity(self.n_experts);
+        for &gbps in &self.hetero_gbps {
+            for _ in 0..self.n_experts / groups {
+                gpus.push(GpuSpec {
+                    flops_scale: gbps / top,
+                    bandwidth: gbps_to_tokens_per_ms(gbps, self.token_bytes, self.net_efficiency),
+                });
+            }
+        }
+        Cluster::new(gpus)
+    }
+
+    /// Parse from JSON, starting from defaults (all fields optional).
+    pub fn from_json(v: &Json) -> Result<EvalConfig, String> {
+        let mut c = EvalConfig::default();
+        if let Some(x) = v.get("n_experts").and_then(|x| x.as_u64()) {
+            c.n_experts = x as usize;
+        }
+        if let Some(x) = v.get("n_layers").and_then(|x| x.as_u64()) {
+            c.n_layers = x as usize;
+        }
+        if let Some(x) = v.get("batch_images").and_then(|x| x.as_u64()) {
+            c.batch_images = x;
+        }
+        if let Some(x) = v.get("homo_gbps").and_then(|x| x.as_f64()) {
+            c.homo_gbps = x;
+        }
+        if let Some(arr) = v.get("hetero_gbps").and_then(|x| x.as_arr()) {
+            let mut rates = Vec::new();
+            for e in arr {
+                rates.push(e.as_f64().ok_or("hetero_gbps entries must be numbers")?);
+            }
+            if rates.is_empty() {
+                return Err("hetero_gbps must be non-empty".into());
+            }
+            c.hetero_gbps = rates;
+        }
+        if let Some(x) = v.get("token_bytes").and_then(|x| x.as_f64()) {
+            c.token_bytes = x;
+        }
+        if let Some(x) = v.get("net_efficiency").and_then(|x| x.as_f64()) {
+            c.net_efficiency = x;
+        }
+        if let Some(x) = v.get("seed").and_then(|x| x.as_u64()) {
+            c.seed = x;
+        }
+        if let Some(x) = v.get("baseline_samples").and_then(|x| x.as_u64()) {
+            c.baseline_samples = x as usize;
+        }
+        if c.n_experts < 2 {
+            return Err("n_experts must be >= 2".into());
+        }
+        if c.n_layers == 0 {
+            return Err("n_layers must be >= 1".into());
+        }
+        Ok(c)
+    }
+
+    /// Load a config file, or defaults when `path` is `None`.
+    pub fn load(path: Option<&str>) -> Result<EvalConfig, String> {
+        match path {
+            None => Ok(EvalConfig::default()),
+            Some(p) => {
+                let text = std::fs::read_to_string(p).map_err(|e| format!("{p}: {e}"))?;
+                let v = Json::parse(&text).map_err(|e| format!("{p}: {e}"))?;
+                EvalConfig::from_json(&v)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unit_conversion_sane() {
+        // 100 Gbps, 3072-byte tokens, 20% efficiency => ~814 tokens/ms
+        let t = gbps_to_tokens_per_ms(100.0, 3072.0, 0.2);
+        assert!((t - 813.8).abs() < 1.0, "t={t}");
+    }
+
+    #[test]
+    fn default_clusters_have_expected_shape() {
+        let c = EvalConfig::default();
+        let homo = c.homogeneous_cluster();
+        assert_eq!(homo.len(), 8);
+        assert!(homo.is_homogeneous());
+        let het = c.heterogeneous_cluster();
+        assert_eq!(het.len(), 8);
+        assert!(!het.is_homogeneous());
+        // fastest group is 2.5x the slowest (100 vs 40 Gbps)
+        let bws = het.bandwidths();
+        let max = bws.iter().cloned().fold(f64::MIN, f64::max);
+        let min = bws.iter().cloned().fold(f64::MAX, f64::min);
+        assert!((max / min - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn from_json_overrides_fields() {
+        let v = Json::parse(r#"{"n_experts": 16, "seed": 7, "homo_gbps": 50}"#).unwrap();
+        let c = EvalConfig::from_json(&v).unwrap();
+        assert_eq!(c.n_experts, 16);
+        assert_eq!(c.seed, 7);
+        assert_eq!(c.homo_gbps, 50.0);
+        assert_eq!(c.n_layers, 4); // default preserved
+    }
+
+    #[test]
+    fn from_json_rejects_bad_values() {
+        for bad in [
+            r#"{"n_experts": 1}"#,
+            r#"{"n_layers": 0}"#,
+            r#"{"hetero_gbps": []}"#,
+            r#"{"hetero_gbps": ["x"]}"#,
+        ] {
+            let v = Json::parse(bad).unwrap();
+            assert!(EvalConfig::from_json(&v).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn load_missing_file_errors() {
+        assert!(EvalConfig::load(Some("/nonexistent/x.json")).is_err());
+        assert!(EvalConfig::load(None).is_ok());
+    }
+}

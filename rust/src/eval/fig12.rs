@@ -1,0 +1,127 @@
+//! Fig. 12 — GPU utilization in the colocating scenarios.
+
+use super::report::Report;
+use super::workloads::Workloads;
+use crate::cluster::Cluster;
+use crate::config::EvalConfig;
+use crate::planner::Planner;
+use crate::schedule::SchedulePolicy;
+use crate::sim::{simulate_colocated, simulate_exclusive};
+use crate::util::mean;
+
+fn utilization_report(cfg: &EvalConfig, w: &Workloads, cluster: &Cluster, title: &str) -> Report {
+    let planner = Planner::default();
+    let mut r = Report::new(
+        title,
+        &[
+            "aurora+coloc",
+            "aurora+excl",
+            "lina",
+            "coloc/excl",
+            "coloc/lina",
+        ],
+    );
+    let _ = cfg;
+    for (name, a, b) in w.pairs() {
+        // Colocated utilization per layer (plans use precise per-layer stats).
+        let coloc: Vec<f64> = (0..a.layers.len())
+            .map(|k| {
+                let plan = Planner {
+                    planning_layer: k,
+                    ..planner.clone()
+                }
+                .plan_colocated(a, b, cluster);
+                let ab = plan.assignment_b.clone().unwrap();
+                simulate_colocated(
+                    &a.layers[k].placed(&plan.assignment_a),
+                    &b.layers[k].placed(&ab),
+                    cluster,
+                    plan.policy,
+                )
+                .0
+                .utilization
+            })
+            .collect();
+        // Exclusive utilization: each model alone on the cluster (mean of the
+        // two models, matching the paper's per-deployment bars).
+        let excl_plan_a = planner.plan_exclusive(a, cluster);
+        let excl_plan_b = planner.plan_exclusive(b, cluster);
+        let excl: Vec<f64> = excl_plan_a
+            .place_a(a)
+            .iter()
+            .zip(excl_plan_b.place_a(b).iter())
+            .map(|(la, lb)| {
+                let ua = simulate_exclusive(la, cluster, SchedulePolicy::Aurora)
+                    .0
+                    .utilization;
+                let ub = simulate_exclusive(lb, cluster, SchedulePolicy::Aurora)
+                    .0
+                    .utilization;
+                (ua + ub) / 2.0
+            })
+            .collect();
+        let lina = super::lina::lina_utilization(a, b, cluster, SchedulePolicy::Rcs { seed: 7 });
+        for k in 0..a.layers.len() {
+            r.row(
+                format!("{name}/L{}", k + 1),
+                vec![
+                    coloc[k],
+                    excl[k],
+                    lina[k],
+                    coloc[k] / excl[k],
+                    coloc[k] / lina[k],
+                ],
+            );
+        }
+    }
+    let vs_excl = r.column("coloc/excl");
+    let vs_lina = r.column("coloc/lina");
+    r.note(format!(
+        "utilization gain vs exclusive: {:.2}x mean (paper: 1.57x-1.72x); vs Lina: {:.2}x mean (paper: 1.28x-1.50x)",
+        mean(&vs_excl),
+        mean(&vs_lina)
+    ));
+    r
+}
+
+/// Fig. 12a — utilization, Colocating + Homogeneous.
+pub fn fig12a(cfg: &EvalConfig, w: &Workloads) -> Report {
+    utilization_report(
+        cfg,
+        w,
+        &cfg.homogeneous_cluster(),
+        "Fig 12a: GPU utilization, Colocating+Homogeneous",
+    )
+}
+
+/// Fig. 12b — utilization, Colocating + Heterogeneous.
+pub fn fig12b(cfg: &EvalConfig, w: &Workloads) -> Report {
+    utilization_report(
+        cfg,
+        w,
+        &cfg.heterogeneous_cluster(),
+        "Fig 12b: GPU utilization, Colocating+Heterogeneous",
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn colocation_improves_utilization() {
+        let cfg = EvalConfig {
+            batch_images: 16,
+            ..EvalConfig::default()
+        };
+        let w = Workloads::generate(&cfg);
+        for rep in [fig12a(&cfg, &w), fig12b(&cfg, &w)] {
+            for v in rep.column("coloc/excl") {
+                assert!(v > 1.0, "colocation must lift utilization, got {v}");
+            }
+            for v in rep.column("aurora+coloc") {
+                assert!(v > 0.0 && v < 1.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,96 @@
+//! Fig. 13 — optimality gap of the decoupled heuristic in the NP-hard
+//! Colocating + Heterogeneous scenario.
+//!
+//! The "optimum" enumerates all `n!` pairings, solving the GPU-assignment
+//! stage exactly per pairing and scoring with the full Table 2 timeline
+//! (`colocation::hetero::brute_force_pairings`). The exact `n!²` double
+//! enumeration is infeasible at the paper's n = 8; integration tests certify
+//! the gap against the true double-exhaustive optimum at n ≤ 5.
+
+use super::fig11::place_pair;
+use super::report::Report;
+use super::workloads::Workloads;
+use crate::colocation::hetero::brute_force_pairings;
+use crate::config::EvalConfig;
+use crate::planner::{pair_gpu_cost, Planner};
+use crate::sim::simulate_colocated;
+use crate::util::mean;
+
+/// Fig. 13 — Aurora vs brute-force optimum, per pair and layer.
+pub fn fig13(cfg: &EvalConfig, w: &Workloads) -> Report {
+    let cluster = cfg.heterogeneous_cluster();
+    let planner = Planner::default();
+    let mut r = Report::new(
+        "Fig 13: Aurora vs optimum (ms), Colocating+Heterogeneous",
+        &["aurora", "optimum", "ratio"],
+    );
+    let mut ratios = Vec::new();
+    for (name, a, b) in w.pairs() {
+        let t_aurora: Vec<f64> = (0..a.layers.len())
+            .map(|k| {
+                let plan = Planner {
+                    planning_layer: k,
+                    ..planner.clone()
+                }
+                .plan_colocated(a, b, &cluster);
+                let ab = plan.assignment_b.clone().unwrap();
+                simulate_colocated(
+                    &a.layers[k].placed(&plan.assignment_a),
+                    &b.layers[k].placed(&ab),
+                    &cluster,
+                    plan.policy,
+                )
+                .0
+                .inference_ms
+            })
+            .collect();
+        for k in 0..a.layers.len() {
+            let la = &a.layers[k];
+            let lb = &b.layers[k];
+            let cost = pair_gpu_cost(la, lb, &cluster);
+            let n = la.traffic.n();
+            let (t_opt, _, _) = brute_force_pairings(n, &cost, |pi, sigma| {
+                let (aa, abb) = place_pair(pi, sigma);
+                simulate_colocated(
+                    &la.placed(&aa),
+                    &lb.placed(&abb),
+                    &cluster,
+                    crate::schedule::SchedulePolicy::Aurora,
+                )
+                .0
+                .inference_ms
+            });
+            let ratio = t_aurora[k] / t_opt;
+            ratios.push(ratio);
+            r.row(format!("{name}/L{}", k + 1), vec![t_aurora[k], t_opt, ratio]);
+        }
+    }
+    r.note(format!(
+        "mean gap: {:.3}x (paper: 1.07x on average)",
+        mean(&ratios)
+    ));
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Full figure at reduced scale (n = 4 experts) to keep the exhaustive
+    /// search fast in tests; the release harness runs n = 8.
+    #[test]
+    fn aurora_close_to_optimum_small_scale() {
+        let cfg = EvalConfig {
+            n_experts: 4,
+            n_layers: 2,
+            batch_images: 16,
+            ..EvalConfig::default()
+        };
+        let w = Workloads::generate(&cfg);
+        let r = fig13(&cfg, &w);
+        for ratio in r.column("ratio") {
+            assert!(ratio >= 1.0 - 1e-9, "heuristic cannot beat the optimum");
+            assert!(ratio < 1.5, "gap should be small, got {ratio}");
+        }
+    }
+}

@@ -1,0 +1,169 @@
+//! Fig. 14 — robustness to imprecise traffic inputs (Q4).
+//!
+//! The plan is optimized on layer 1's traffic matrix; the evaluated traffic
+//! mixes in the other layers' matrices at 0 / 25 / 50 / 75 % (§8.2): each
+//! additional layer of noise raises the imprecision level by 25 points.
+
+use super::fig11::place_pair;
+use super::report::Report;
+use super::workloads::Workloads;
+use crate::assignment::random_assignment;
+use crate::colocation::random_pairing;
+use crate::config::EvalConfig;
+use crate::planner::Planner;
+use crate::schedule::SchedulePolicy;
+use crate::sim::{simulate_colocated, simulate_exclusive, MoeLayerStats};
+use crate::trace::noisy_traffic;
+use crate::util::{mean, Rng};
+
+const NOISE_LEVELS: [f64; 4] = [0.0, 0.25, 0.50, 0.75];
+
+fn noisy_layer(trace_layers: &[MoeLayerStats], frac: f64) -> MoeLayerStats {
+    let noise: Vec<&crate::traffic::TrafficMatrix> = trace_layers
+        .iter()
+        .skip(1)
+        .map(|l| &l.traffic)
+        .collect();
+    MoeLayerStats {
+        traffic: noisy_traffic(&trace_layers[0].traffic, &noise, frac),
+        ..trace_layers[0]
+    }
+}
+
+/// Fig. 14a — Exclusive + Heterogeneous acceleration vs RGA under noise.
+pub fn fig14a(cfg: &EvalConfig, w: &Workloads) -> Report {
+    let cluster = cfg.heterogeneous_cluster();
+    let planner = Planner::default();
+    let mut r = Report::new(
+        "Fig 14a: acceleration vs RGA under traffic imprecision, Exclusive+Heterogeneous",
+        &["0%", "25%", "50%", "75%"],
+    );
+    let mut degradations = Vec::new();
+    for (name, trace) in w.singles() {
+        // plan once, on the clean layer-1 statistics
+        let plan = planner.plan_exclusive(trace, &cluster);
+        let mut rng = Rng::new(cfg.seed ^ 0x14A);
+        let mut row = Vec::new();
+        for frac in NOISE_LEVELS {
+            let actual = noisy_layer(&trace.layers, frac);
+            let t_aurora =
+                simulate_exclusive(&actual.placed(&plan.assignment_a), &cluster, plan.policy)
+                    .0
+                    .inference_ms;
+            let rga: Vec<f64> = (0..cfg.baseline_samples)
+                .map(|_| {
+                    let p = random_assignment(trace.n_experts(), &mut rng);
+                    simulate_exclusive(&actual.placed(&p), &cluster, SchedulePolicy::Aurora)
+                        .0
+                        .inference_ms
+                })
+                .collect();
+            row.push(mean(&rga) / t_aurora);
+        }
+        degradations.push((row[0] - row[3]) / row[0]);
+        r.row(name, row);
+    }
+    r.note(format!(
+        "max acceleration loss at 75% noise: {:.1}% (paper: <= 15.8%)",
+        degradations.iter().cloned().fold(f64::MIN, f64::max) * 100.0
+    ));
+    r
+}
+
+/// Fig. 14b — Colocating + Heterogeneous acceleration vs RGA+REC under noise.
+pub fn fig14b(cfg: &EvalConfig, w: &Workloads) -> Report {
+    let cluster = cfg.heterogeneous_cluster();
+    let planner = Planner::default();
+    let mut r = Report::new(
+        "Fig 14b: acceleration vs RGA+REC under traffic imprecision, Colocating+Heterogeneous",
+        &["0%", "25%", "50%", "75%"],
+    );
+    let mut degradations = Vec::new();
+    for (name, a, b) in w.pairs() {
+        let plan = planner.plan_colocated(a, b, &cluster);
+        let ab = plan.assignment_b.clone().unwrap();
+        let n = a.n_experts();
+        let mut rng = Rng::new(cfg.seed ^ 0x14B);
+        let mut row = Vec::new();
+        for frac in NOISE_LEVELS {
+            let actual_a = noisy_layer(&a.layers, frac);
+            let actual_b = noisy_layer(&b.layers, frac);
+            let t_aurora = simulate_colocated(
+                &actual_a.placed(&plan.assignment_a),
+                &actual_b.placed(&ab),
+                &cluster,
+                plan.policy,
+            )
+            .0
+            .inference_ms;
+            let base: Vec<f64> = (0..cfg.baseline_samples)
+                .map(|_| {
+                    let pi = random_pairing(n, &mut rng);
+                    let sigma = random_assignment(n, &mut rng);
+                    let (aa, abb) = place_pair(&pi, &sigma);
+                    simulate_colocated(
+                        &actual_a.placed(&aa),
+                        &actual_b.placed(&abb),
+                        &cluster,
+                        SchedulePolicy::Rcs { seed: cfg.seed },
+                    )
+                    .0
+                    .inference_ms
+                })
+                .collect();
+            row.push(mean(&base) / t_aurora);
+        }
+        degradations.push((row[0] - row[3]) / row[0]);
+        r.row(name, row);
+    }
+    r.note(format!(
+        "max acceleration loss at 75% noise: {:.1}% (paper: <= 15.8%)",
+        degradations.iter().cloned().fold(f64::MIN, f64::max) * 100.0
+    ));
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn acceleration_stays_positive_under_noise() {
+        let cfg = EvalConfig {
+            batch_images: 16,
+            baseline_samples: 3,
+            ..EvalConfig::default()
+        };
+        let w = Workloads::generate(&cfg);
+        for rep in [fig14a(&cfg, &w), fig14b(&cfg, &w)] {
+            for (_, values) in &rep.rows {
+                // with precise inputs Aurora must win outright
+                assert!(values[0] > 1.0, "0% noise: {}", values[0]);
+                // under noise (tiny test batches, few baseline samples) it
+                // must at least stay competitive; the full-size harness run
+                // recorded in EXPERIMENTS.md stays > 1.0 throughout
+                for &v in &values[1..] {
+                    assert!(v > 0.8, "Aurora collapsed under noise: {v}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn noise_weakens_the_plan_only_mildly() {
+        let cfg = EvalConfig {
+            batch_images: 32,
+            baseline_samples: 5,
+            ..EvalConfig::default()
+        };
+        let w = Workloads::generate(&cfg);
+        let r = fig14a(&cfg, &w);
+        for (_, values) in &r.rows {
+            let degradation = (values[0] - values[3]) / values[0];
+            assert!(
+                degradation < 0.5,
+                "75% noise should not halve the speedup: {degradation}"
+            );
+        }
+    }
+}

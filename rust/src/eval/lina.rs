@@ -1,0 +1,131 @@
+//! The Lina baseline (§8.1, footnote 5): pack two experts of the *same*
+//! model per GPU, pairing the most popular with the least popular.
+//!
+//! With two models and `n` experts each on `n` GPUs, Lina gives each model a
+//! disjoint half of the cluster and runs it there with 2 experts per GPU.
+//! The packed experts remain bound by their model's synchronous all-to-all
+//! (Fig. 3a), which is exactly the inefficiency Aurora's cross-model
+//! colocation removes.
+
+use crate::cluster::Cluster;
+use crate::colocation::lina_grouping;
+use crate::schedule::SchedulePolicy;
+use crate::sim::{simulate_exclusive, MoeLayerStats, SimResult};
+use crate::trace::ModelTrace;
+
+/// Merge a model's layer stats onto `n/2` GPUs using Lina's
+/// popular-with-unpopular grouping (driven by the model's aggregate loads).
+pub fn lina_merged_layers(trace: &ModelTrace) -> Vec<MoeLayerStats> {
+    let groups = lina_grouping(&trace.total_expert_loads());
+    trace
+        .layers
+        .iter()
+        .map(|l| MoeLayerStats {
+            traffic: l.traffic.merge_groups(&groups),
+            ..*l
+        })
+        .collect()
+}
+
+/// Simulate one model under Lina on the GPUs listed in `gpu_ids` (a disjoint
+/// half of `cluster`). Returns per-layer results.
+pub fn lina_model_results(
+    trace: &ModelTrace,
+    cluster: &Cluster,
+    gpu_ids: &[usize],
+    policy: SchedulePolicy,
+) -> Vec<SimResult> {
+    let merged = lina_merged_layers(trace);
+    assert_eq!(
+        merged[0].traffic.n(),
+        gpu_ids.len(),
+        "Lina uses n/2 GPUs per model"
+    );
+    let sub = Cluster::new(gpu_ids.iter().map(|&g| cluster.gpu(g)).collect());
+    merged
+        .iter()
+        .map(|l| simulate_exclusive(l, &sub, policy).0)
+        .collect()
+}
+
+/// Lina per-layer inference times for a two-model deployment: model a on the
+/// first half of `cluster`'s GPUs, model b on the second half. Returns
+/// `(times_a, times_b)` in ms.
+pub fn lina_colocated_times(
+    a: &ModelTrace,
+    b: &ModelTrace,
+    cluster: &Cluster,
+    policy: SchedulePolicy,
+) -> (Vec<f64>, Vec<f64>) {
+    let n = cluster.len();
+    let first: Vec<usize> = (0..n / 2).collect();
+    let second: Vec<usize> = (n / 2..n).collect();
+    let ra = lina_model_results(a, cluster, &first, policy);
+    let rb = lina_model_results(b, cluster, &second, policy);
+    (
+        ra.iter().map(|r| r.inference_ms).collect(),
+        rb.iter().map(|r| r.inference_ms).collect(),
+    )
+}
+
+/// Mean GPU utilization across both models' halves, per layer.
+pub fn lina_utilization(
+    a: &ModelTrace,
+    b: &ModelTrace,
+    cluster: &Cluster,
+    policy: SchedulePolicy,
+) -> Vec<f64> {
+    let n = cluster.len();
+    let first: Vec<usize> = (0..n / 2).collect();
+    let second: Vec<usize> = (n / 2..n).collect();
+    let ra = lina_model_results(a, cluster, &first, policy);
+    let rb = lina_model_results(b, cluster, &second, policy);
+    ra.iter()
+        .zip(&rb)
+        .map(|(x, y)| (x.utilization + y.utilization) / 2.0)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EvalConfig;
+    use crate::eval::Workloads;
+
+    #[test]
+    fn merged_layers_halve_gpu_count_and_conserve_load() {
+        let w = Workloads::generate(&EvalConfig::default());
+        let merged = lina_merged_layers(&w.b16_coco);
+        assert_eq!(merged[0].traffic.n(), 4);
+        for (ml, ol) in merged.iter().zip(&w.b16_coco.layers) {
+            assert_eq!(
+                ml.traffic.expert_loads().iter().sum::<u64>(),
+                ol.traffic.expert_loads().iter().sum::<u64>()
+            );
+        }
+    }
+
+    #[test]
+    fn lina_times_positive_and_per_model() {
+        let cfg = EvalConfig::default();
+        let w = Workloads::generate(&cfg);
+        let cluster = cfg.homogeneous_cluster();
+        let (ta, tb) =
+            lina_colocated_times(&w.b16_coco, &w.b32_coco, &cluster, SchedulePolicy::Aurora);
+        assert_eq!(ta.len(), 4);
+        assert_eq!(tb.len(), 4);
+        assert!(ta.iter().all(|&t| t > 0.0));
+        // B/16 moves 4x the tokens of B/32: its per-layer time should be larger
+        assert!(ta[0] > tb[0]);
+    }
+
+    #[test]
+    fn lina_utilization_in_unit_interval() {
+        let cfg = EvalConfig::default();
+        let w = Workloads::generate(&cfg);
+        let cluster = cfg.homogeneous_cluster();
+        for u in lina_utilization(&w.b16_coco, &w.b32_coco, &cluster, SchedulePolicy::Aurora) {
+            assert!(u > 0.0 && u < 1.0);
+        }
+    }
+}

@@ -1,0 +1,83 @@
+//! Evaluation harness — regenerates every figure of the paper's §8.
+//!
+//! One driver per figure; each returns [`Report`]s (printable tables that
+//! also serialize to JSON). The mapping between figures, workloads, and
+//! modules is indexed in DESIGN.md.
+//!
+//! | figure | scenario | comparison |
+//! |--------|----------|------------|
+//! | 11a | Exclusive + Homogeneous | Aurora vs SJF vs RCS (scheduling) |
+//! | 11b | Exclusive + Heterogeneous | Aurora vs RGA (assignment) |
+//! | 11c | Colocating + Homogeneous | Aurora vs Lina vs REC (colocation) |
+//! | 11d | Colocating + Heterogeneous | Aurora vs Lina+RGA vs REC vs RGA+REC |
+//! | 12a/b | colocating scenarios | GPU utilization |
+//! | 13 | Colocating + Heterogeneous | Aurora vs brute-force optimum |
+//! | 14a/b | heterogeneous scenarios | robustness to traffic imprecision |
+
+mod ablation;
+mod fig11;
+mod fig12;
+mod fig13;
+mod fig14;
+mod lina;
+mod report;
+mod workloads;
+
+pub use ablation::{ablation_schedulers, ablation_top2};
+pub use fig11::{fig11a, fig11b, fig11c, fig11d};
+pub use fig12::{fig12a, fig12b};
+pub use fig13::fig13;
+pub use fig14::{fig14a, fig14b};
+pub use lina::{lina_colocated_times, lina_utilization};
+pub use report::Report;
+pub use workloads::Workloads;
+
+use crate::config::EvalConfig;
+
+/// Run one figure (or `all`) by name; returns the reports in paper order.
+pub fn run_figure(name: &str, cfg: &EvalConfig) -> Result<Vec<Report>, String> {
+    let w = Workloads::generate(cfg);
+    let reports = match name {
+        "11a" => vec![fig11a(cfg, &w)],
+        "11b" => vec![fig11b(cfg, &w)],
+        "11c" => vec![fig11c(cfg, &w)],
+        "11d" => vec![fig11d(cfg, &w)],
+        "11" => vec![fig11a(cfg, &w), fig11b(cfg, &w), fig11c(cfg, &w), fig11d(cfg, &w)],
+        "12" | "12a" | "12b" => match name {
+            "12a" => vec![fig12a(cfg, &w)],
+            "12b" => vec![fig12b(cfg, &w)],
+            _ => vec![fig12a(cfg, &w), fig12b(cfg, &w)],
+        },
+        "13" => vec![fig13(cfg, &w)],
+        "a1" => vec![ablation_schedulers(cfg, &w)],
+        "a2" => vec![ablation_top2(cfg, &w)],
+        "ablation" => vec![ablation_schedulers(cfg, &w), ablation_top2(cfg, &w)],
+        "14" | "14a" | "14b" => match name {
+            "14a" => vec![fig14a(cfg, &w)],
+            "14b" => vec![fig14b(cfg, &w)],
+            _ => vec![fig14a(cfg, &w), fig14b(cfg, &w)],
+        },
+        "all" => {
+            let mut r = vec![
+                fig11a(cfg, &w),
+                fig11b(cfg, &w),
+                fig11c(cfg, &w),
+                fig11d(cfg, &w),
+                fig12a(cfg, &w),
+                fig12b(cfg, &w),
+            ];
+            r.push(fig13(cfg, &w));
+            r.push(fig14a(cfg, &w));
+            r.push(fig14b(cfg, &w));
+            r.push(ablation_schedulers(cfg, &w));
+            r.push(ablation_top2(cfg, &w));
+            r
+        }
+        other => {
+            return Err(format!(
+                "unknown figure '{other}' (try 11a/11b/11c/11d/12/13/14/a1/all)"
+            ))
+        }
+    };
+    Ok(reports)
+}

@@ -1,0 +1,154 @@
+//! Tabular reports: aligned console output + JSON serialization.
+
+use crate::util::{round_to, Json};
+
+/// One table of results (≈ one figure panel).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Report {
+    /// Figure/panel title.
+    pub title: String,
+    /// Column headers (not counting the row label).
+    pub columns: Vec<String>,
+    /// `(label, values)` rows; `values.len() == columns.len()`.
+    pub rows: Vec<(String, Vec<f64>)>,
+    /// Free-form summary lines (e.g. "speedup up to 2.38x").
+    pub notes: Vec<String>,
+}
+
+impl Report {
+    /// New empty report.
+    pub fn new(title: &str, columns: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    /// Append a row (checks arity).
+    pub fn row(&mut self, label: impl Into<String>, values: Vec<f64>) {
+        assert_eq!(values.len(), self.columns.len(), "row arity mismatch");
+        self.rows.push((label.into(), values));
+    }
+
+    /// Append a summary note.
+    pub fn note(&mut self, s: impl Into<String>) {
+        self.notes.push(s.into());
+    }
+
+    /// Column values across all rows.
+    pub fn column(&self, name: &str) -> Vec<f64> {
+        let idx = self
+            .columns
+            .iter()
+            .position(|c| c == name)
+            .unwrap_or_else(|| panic!("no column {name}"));
+        self.rows.iter().map(|(_, v)| v[idx]).collect()
+    }
+
+    /// Render an aligned console table.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let label_w = self
+            .rows
+            .iter()
+            .map(|(l, _)| l.len())
+            .chain([5])
+            .max()
+            .unwrap()
+            .max(8);
+        out.push_str(&format!("{:<label_w$}", ""));
+        for c in &self.columns {
+            out.push_str(&format!(" {c:>14}"));
+        }
+        out.push('\n');
+        for (label, values) in &self.rows {
+            out.push_str(&format!("{label:<label_w$}"));
+            for v in values {
+                out.push_str(&format!(" {:>14}", format_value(*v)));
+            }
+            out.push('\n');
+        }
+        for n in &self.notes {
+            out.push_str(&format!("  * {n}\n"));
+        }
+        out
+    }
+
+    /// JSON form (consumed by EXPERIMENTS.md tooling).
+    pub fn to_json(&self) -> Json {
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|(label, values)| {
+                Json::obj(vec![
+                    ("label", Json::from(label.as_str())),
+                    (
+                        "values",
+                        Json::Arr(values.iter().map(|&v| Json::Num(round_to(v, 6))).collect()),
+                    ),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("title", Json::from(self.title.as_str())),
+            (
+                "columns",
+                Json::Arr(self.columns.iter().map(|c| Json::from(c.as_str())).collect()),
+            ),
+            ("rows", Json::Arr(rows)),
+            (
+                "notes",
+                Json::Arr(self.notes.iter().map(|n| Json::from(n.as_str())).collect()),
+            ),
+        ])
+    }
+}
+
+fn format_value(v: f64) -> String {
+    if v == 0.0 {
+        "0".to_string()
+    } else if v.abs() >= 1000.0 {
+        format!("{v:.0}")
+    } else if v.abs() >= 10.0 {
+        format!("{v:.2}")
+    } else {
+        format!("{v:.3}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_and_renders() {
+        let mut r = Report::new("Fig X", &["aurora", "sjf"]);
+        r.row("layer1", vec![1.0, 1.4]);
+        r.row("layer2", vec![2.0, 2.9]);
+        r.note("speedup up to 1.45x");
+        let s = r.render();
+        assert!(s.contains("Fig X"));
+        assert!(s.contains("layer2"));
+        assert!(s.contains("speedup"));
+        assert_eq!(r.column("sjf"), vec![1.4, 2.9]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        let mut r = Report::new("t", &["a", "b"]);
+        r.row("x", vec![1.0]);
+    }
+
+    #[test]
+    fn json_roundtrip_shape() {
+        let mut r = Report::new("t", &["a"]);
+        r.row("x", vec![0.5]);
+        let j = r.to_json();
+        assert_eq!(j.get("title").unwrap().as_str(), Some("t"));
+        assert_eq!(j.get("rows").unwrap().as_arr().unwrap().len(), 1);
+    }
+}

@@ -1,0 +1,93 @@
+//! The §8.1 workload set: LIMoE B/16 and B/32 on COCO and ImageNet.
+
+use crate::config::EvalConfig;
+use crate::trace::{limoe_trace, Dataset, LimoeVariant, ModelTrace};
+
+/// The four model × dataset traces the paper evaluates, plus the colocation
+/// pairs (B/16 with B/32 per dataset).
+#[derive(Debug, Clone)]
+pub struct Workloads {
+    /// LIMoE B/16 on COCO.
+    pub b16_coco: ModelTrace,
+    /// LIMoE B/16 on ImageNet.
+    pub b16_imagenet: ModelTrace,
+    /// LIMoE B/32 on COCO.
+    pub b32_coco: ModelTrace,
+    /// LIMoE B/32 on ImageNet.
+    pub b32_imagenet: ModelTrace,
+}
+
+impl Workloads {
+    /// Generate all traces from the config's seed.
+    pub fn generate(cfg: &EvalConfig) -> Workloads {
+        let t = |variant, dataset, salt: u64| {
+            limoe_trace(
+                variant,
+                dataset,
+                cfg.n_experts,
+                cfg.n_layers,
+                cfg.batch_images,
+                cfg.seed.wrapping_add(salt),
+            )
+        };
+        Workloads {
+            b16_coco: t(LimoeVariant::B16, Dataset::Coco, 1),
+            b16_imagenet: t(LimoeVariant::B16, Dataset::Imagenet, 2),
+            b32_coco: t(LimoeVariant::B32, Dataset::Coco, 3),
+            b32_imagenet: t(LimoeVariant::B32, Dataset::Imagenet, 4),
+        }
+    }
+
+    /// All single-model workloads as `(name, trace)`.
+    pub fn singles(&self) -> Vec<(&str, &ModelTrace)> {
+        vec![
+            ("b16-coco", &self.b16_coco),
+            ("b16-imagenet", &self.b16_imagenet),
+            ("b32-coco", &self.b32_coco),
+            ("b32-imagenet", &self.b32_imagenet),
+        ]
+    }
+
+    /// Colocation pairs `(name, model_a, model_b)`: same variant serving the
+    /// two datasets (B/16-coco with B/16-imagenet, B/32-coco with
+    /// B/32-imagenet). Equal-sized pairs are the regime in which the paper's
+    /// utilization gains (Fig. 12: 1.57x-1.72x) are achievable — colocating a
+    /// model with one 4x smaller can at best add 25% compute.
+    pub fn pairs(&self) -> Vec<(&str, &ModelTrace, &ModelTrace)> {
+        vec![
+            ("b16", &self.b16_coco, &self.b16_imagenet),
+            ("b32", &self.b32_coco, &self.b32_imagenet),
+        ]
+    }
+
+    /// The unequal-size pairing (B/16 with B/32) used by ablation benches.
+    pub fn pairs_mixed(&self) -> Vec<(&str, &ModelTrace, &ModelTrace)> {
+        vec![
+            ("coco", &self.b16_coco, &self.b32_coco),
+            ("imagenet", &self.b16_imagenet, &self.b32_imagenet),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generates_paper_workload_set() {
+        let w = Workloads::generate(&EvalConfig::default());
+        assert_eq!(w.singles().len(), 4);
+        assert_eq!(w.pairs().len(), 2);
+        for (_, t) in w.singles() {
+            assert_eq!(t.layers.len(), 4);
+            assert_eq!(t.n_experts(), 8);
+        }
+    }
+
+    #[test]
+    fn traces_differ_across_models() {
+        let w = Workloads::generate(&EvalConfig::default());
+        assert_ne!(w.b16_coco, w.b16_imagenet);
+        assert_ne!(w.b16_coco, w.b32_coco);
+    }
+}

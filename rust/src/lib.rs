@@ -1,0 +1,44 @@
+//! # Aurora — MoE inference optimization via model deployment and communication scheduling
+//!
+//! Reproduction of *"Optimizing Mixture-of-Experts Inference Time Combining Model
+//! Deployment and Communication Scheduling"* (Li et al., 2024).
+//!
+//! Aurora minimizes MoE inference time by jointly deciding:
+//!
+//! 1. **Communication scheduling** ([`schedule`]) — the order in which tokens are
+//!    transmitted during the two all-to-all collectives of an MoE layer. Aurora's
+//!    schedule (Alg. 1 / Theorem 4.2) is contention-free at the receivers and
+//!    achieves the lower bound `b_max = max(row sums, col sums) / B`.
+//! 2. **GPU assignment** ([`assignment`]) — on heterogeneous clusters, which expert
+//!    goes on which GPU type (Theorem 5.1: sort experts by load, GPUs by
+//!    performance, match in order).
+//! 3. **Expert colocation** ([`colocation`]) — which experts of *two different* MoE
+//!    models share a GPU, so that one model computes while the other communicates
+//!    (Theorem 6.2 / bottleneck matching; NP-hard decoupled heuristic in the
+//!    heterogeneous case, §7.2).
+//!
+//! The crate also ships the substrates the paper's evaluation depends on: a
+//! big-switch cluster simulator ([`sim`], [`cluster`]), LIMoE-like trace generation
+//! ([`trace`]), a deployment planner ([`planner`]), a serving runtime with a PJRT
+//! executor that runs the AOT-compiled JAX/Pallas MoE layer ([`serve`],
+//! [`runtime`]), and an evaluation harness regenerating every figure of the paper
+//! ([`eval`]).
+
+pub mod assignment;
+pub mod cluster;
+pub mod colocation;
+pub mod config;
+pub mod eval;
+pub mod matching;
+pub mod planner;
+pub mod runtime;
+pub mod schedule;
+pub mod serve;
+pub mod sim;
+pub mod trace;
+pub mod traffic;
+pub mod util;
+
+pub use cluster::{Cluster, GpuSpec};
+pub use planner::{DeploymentPlan, Planner, Scenario};
+pub use traffic::TrafficMatrix;

@@ -1,0 +1,243 @@
+//! `aurora` — CLI for the Aurora MoE inference optimizer.
+//!
+//! Subcommands:
+//! * `eval --figure <11a|11b|11c|11d|12|13|14|a1|all>` — regenerate a paper
+//!   figure on synthetic LIMoE-like traces.
+//! * `plan --cluster <homo|hetero> --models <1|2>` — print a deployment plan
+//!   as JSON.
+//! * `simulate --cluster <homo|hetero> --models <1|2>` — per-layer inference
+//!   times and utilization for the planned deployment.
+//! * `trace --out <file>` — dump the generated traces to JSON.
+//! * `serve` — run the end-to-end serving demo on the AOT-compiled MoE model
+//!   (requires `make artifacts`).
+
+use aurora::config::EvalConfig;
+use aurora::eval::{run_figure, Workloads};
+use aurora::planner::Planner;
+use aurora::schedule::SchedulePolicy;
+use aurora::sim::{simulate_colocated, simulate_exclusive};
+use aurora::trace::trace_to_json;
+use aurora::util::Json;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() {
+        usage();
+        std::process::exit(2);
+    }
+    let cmd = args[0].as_str();
+    let opts = Opts::parse(&args[1..]);
+    let result = match cmd {
+        "eval" => cmd_eval(&opts),
+        "plan" => cmd_plan(&opts),
+        "simulate" => cmd_simulate(&opts),
+        "trace" => cmd_trace(&opts),
+        "serve" => cmd_serve(&opts),
+        "help" | "--help" | "-h" => {
+            usage();
+            Ok(())
+        }
+        other => Err(format!("unknown command '{other}'")),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() {
+    eprintln!(
+        "aurora — MoE inference optimization (paper reproduction)
+
+USAGE:
+  aurora eval     --figure <11a|11b|11c|11d|12|13|14|a1|all> [--config f.json] [--json out.json]
+  aurora plan     --cluster <homo|hetero> --models <1|2> [--config f.json]
+  aurora simulate --cluster <homo|hetero> --models <1|2> [--policy aurora|sjf|ljf|pairwise|rcs]
+  aurora trace    --out <file.json> [--config f.json]
+  aurora serve    [--artifacts DIR] [--requests N] [--batch N] [--policy aurora|rcs]
+"
+    );
+}
+
+/// Tiny flag parser: `--key value` pairs (the offline build has no `clap`).
+struct Opts {
+    kv: Vec<(String, String)>,
+}
+
+impl Opts {
+    fn parse(args: &[String]) -> Opts {
+        let mut kv = Vec::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(key) = a.strip_prefix("--") {
+                let val = if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                    i += 1;
+                    args[i].clone()
+                } else {
+                    "true".to_string()
+                };
+                kv.push((key.to_string(), val));
+            } else {
+                eprintln!("warning: ignoring stray argument '{a}'");
+            }
+            i += 1;
+        }
+        Opts { kv }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.kv
+            .iter()
+            .rev()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    fn config(&self) -> Result<EvalConfig, String> {
+        EvalConfig::load(self.get("config"))
+    }
+
+    fn policy(&self) -> Result<SchedulePolicy, String> {
+        match self.get("policy").unwrap_or("aurora") {
+            "aurora" => Ok(SchedulePolicy::Aurora),
+            "sjf" => Ok(SchedulePolicy::Sjf),
+            "ljf" => Ok(SchedulePolicy::Ljf),
+            "pairwise" => Ok(SchedulePolicy::Pairwise),
+            "rcs" => Ok(SchedulePolicy::Rcs { seed: 0 }),
+            other => Err(format!("unknown policy '{other}'")),
+        }
+    }
+}
+
+fn cmd_eval(opts: &Opts) -> Result<(), String> {
+    let cfg = opts.config()?;
+    let figure = opts.get("figure").unwrap_or("all");
+    let reports = run_figure(figure, &cfg)?;
+    for r in &reports {
+        println!("{}", r.render());
+    }
+    if let Some(path) = opts.get("json") {
+        let arr = Json::Arr(reports.iter().map(|r| r.to_json()).collect());
+        std::fs::write(path, arr.to_string_compact()).map_err(|e| format!("{path}: {e}"))?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cluster_for(opts: &Opts, cfg: &EvalConfig) -> Result<aurora::Cluster, String> {
+    match opts.get("cluster").unwrap_or("homo") {
+        "homo" | "homogeneous" => Ok(cfg.homogeneous_cluster()),
+        "hetero" | "heterogeneous" => Ok(cfg.heterogeneous_cluster()),
+        other => Err(format!("unknown cluster '{other}'")),
+    }
+}
+
+fn cmd_plan(opts: &Opts) -> Result<(), String> {
+    let cfg = opts.config()?;
+    let cluster = cluster_for(opts, &cfg)?;
+    let w = Workloads::generate(&cfg);
+    let planner = Planner::default();
+    let models: usize = opts
+        .get("models")
+        .unwrap_or("1")
+        .parse()
+        .map_err(|_| "bad --models")?;
+    let plan = match models {
+        1 => planner.plan_exclusive(&w.b16_coco, &cluster),
+        2 => planner.plan_colocated(&w.b16_coco, &w.b32_coco, &cluster),
+        _ => return Err("--models must be 1 or 2 (§2.4: at most two per GPU)".into()),
+    };
+    println!("{}", plan.to_json().to_string_compact());
+    Ok(())
+}
+
+fn cmd_simulate(opts: &Opts) -> Result<(), String> {
+    let cfg = opts.config()?;
+    let cluster = cluster_for(opts, &cfg)?;
+    let policy = opts.policy()?;
+    let w = Workloads::generate(&cfg);
+    let planner = Planner {
+        policy,
+        planning_layer: 0,
+    };
+    let models: usize = opts
+        .get("models")
+        .unwrap_or("1")
+        .parse()
+        .map_err(|_| "bad --models")?;
+    println!(
+        "scenario: {} model(s), {} cluster, policy {}",
+        models,
+        if cluster.is_homogeneous() {
+            "homogeneous"
+        } else {
+            "heterogeneous"
+        },
+        policy.name()
+    );
+    match models {
+        1 => {
+            let plan = planner.plan_exclusive(&w.b16_coco, &cluster);
+            for (k, layer) in plan.place_a(&w.b16_coco).iter().enumerate() {
+                let (res, _) = simulate_exclusive(layer, &cluster, policy);
+                println!(
+                    "layer {}: inference {:.3} ms, util {:.1}%, comm {:.3} ms",
+                    k + 1,
+                    res.inference_ms,
+                    res.utilization * 100.0,
+                    res.comm_ms
+                );
+            }
+        }
+        2 => {
+            let plan = planner.plan_colocated(&w.b16_coco, &w.b32_coco, &cluster);
+            let pa = plan.place_a(&w.b16_coco);
+            let pb = plan.place_b(&w.b32_coco);
+            for (k, (la, lb)) in pa.iter().zip(&pb).enumerate() {
+                let (res, _) = simulate_colocated(la, lb, &cluster, policy);
+                println!(
+                    "layer {}: inference {:.3} ms, util {:.1}%, agg comm {:.3} ms",
+                    k + 1,
+                    res.inference_ms,
+                    res.utilization * 100.0,
+                    res.comm_ms
+                );
+            }
+        }
+        _ => return Err("--models must be 1 or 2".into()),
+    }
+    Ok(())
+}
+
+fn cmd_trace(opts: &Opts) -> Result<(), String> {
+    let cfg = opts.config()?;
+    let w = Workloads::generate(&cfg);
+    let out = opts.get("out").ok_or("--out required")?;
+    let arr = Json::Arr(
+        [&w.b16_coco, &w.b16_imagenet, &w.b32_coco, &w.b32_imagenet]
+            .iter()
+            .map(|t| trace_to_json(t))
+            .collect(),
+    );
+    std::fs::write(out, arr.to_string_compact()).map_err(|e| format!("{out}: {e}"))?;
+    println!("wrote {out}");
+    Ok(())
+}
+
+fn cmd_serve(opts: &Opts) -> Result<(), String> {
+    let artifacts = opts.get("artifacts").unwrap_or("artifacts");
+    let requests: usize = opts
+        .get("requests")
+        .unwrap_or("64")
+        .parse()
+        .map_err(|_| "bad --requests")?;
+    let batch: usize = opts
+        .get("batch")
+        .unwrap_or("8")
+        .parse()
+        .map_err(|_| "bad --batch")?;
+    let policy = opts.policy()?;
+    aurora::serve::demo::run_serving_demo(artifacts, requests, batch, policy)
+        .map_err(|e| e.to_string())
+}

@@ -1,0 +1,116 @@
+//! Bottleneck matching: perfect matching minimizing the maximum edge weight.
+//!
+//! Paper §6.2: binary search on the sorted edge-weight array; at each
+//! candidate weight `w`, test with Hopcroft–Karp whether the subgraph of
+//! edges `≤ w` admits a perfect matching. Overall `O(n² √n log n)`.
+
+use super::hopcroft_karp::perfect_matching_on;
+
+/// Solve the bottleneck matching problem on a complete bipartite graph.
+///
+/// `weight(i, j)` is the cost of pairing left `i` with right `j`. Returns
+/// `(bottleneck, perm)` where `perm[i]` is the right partner of left `i` and
+/// `bottleneck = max_i weight(i, perm[i])` is minimal over all perfect
+/// matchings. Panics if `n == 0`.
+pub fn bottleneck_matching(n: usize, weight: impl Fn(usize, usize) -> f64) -> (f64, Vec<usize>) {
+    assert!(n > 0, "bottleneck matching needs n >= 1");
+
+    // Collect and sort the distinct edge weights.
+    let mut weights: Vec<f64> = Vec::with_capacity(n * n);
+    for i in 0..n {
+        for j in 0..n {
+            weights.push(weight(i, j));
+        }
+    }
+    weights.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    weights.dedup();
+
+    // Binary search the smallest threshold admitting a perfect matching.
+    // The full graph always has one, so `hi` is always feasible.
+    let (mut lo, mut hi) = (0usize, weights.len() - 1);
+    while lo < hi {
+        let mid = (lo + hi) / 2;
+        let w = weights[mid];
+        if perfect_matching_on(n, |i, j| weight(i, j) <= w).is_some() {
+            hi = mid;
+        } else {
+            lo = mid + 1;
+        }
+    }
+    let w_min = weights[lo];
+    let perm = perfect_matching_on(n, |i, j| weight(i, j) <= w_min)
+        .expect("threshold was verified feasible");
+    let bottleneck = (0..n)
+        .map(|i| weight(i, perm[i]))
+        .fold(f64::NEG_INFINITY, f64::max);
+    (bottleneck, perm)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matching::exhaustive_bottleneck;
+    use crate::util::Rng;
+
+    #[test]
+    fn trivial_n1() {
+        let (w, p) = bottleneck_matching(1, |_, _| 3.5);
+        assert_eq!(w, 3.5);
+        assert_eq!(p, vec![0]);
+    }
+
+    #[test]
+    fn picks_off_diagonal_when_diagonal_expensive() {
+        // identity pairing costs 10, everything else 1 -> bottleneck 1
+        let (w, p) = bottleneck_matching(3, |i, j| if i == j { 10.0 } else { 1.0 });
+        assert_eq!(w, 1.0);
+        for (i, &j) in p.iter().enumerate() {
+            assert_ne!(i, j);
+        }
+    }
+
+    #[test]
+    fn perm_is_valid_permutation() {
+        let mut rng = Rng::new(42);
+        let n = 12;
+        let w: Vec<Vec<f64>> = (0..n)
+            .map(|_| (0..n).map(|_| rng.gen_f64() * 100.0).collect())
+            .collect();
+        let (_, p) = bottleneck_matching(n, |i, j| w[i][j]);
+        let mut seen = vec![false; n];
+        for &j in &p {
+            assert!(!seen[j]);
+            seen[j] = true;
+        }
+    }
+
+    #[test]
+    fn matches_exhaustive_optimum_small_n() {
+        let mut rng = Rng::new(7);
+        for n in 1..=6 {
+            for _ in 0..10 {
+                let w: Vec<Vec<f64>> = (0..n)
+                    .map(|_| (0..n).map(|_| (rng.gen_range(50)) as f64).collect())
+                    .collect();
+                let (b, _) = bottleneck_matching(n, |i, j| w[i][j]);
+                let (b_opt, _) = exhaustive_bottleneck(n, |i, j| w[i][j]);
+                assert_eq!(b, b_opt, "n={n} w={w:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn bottleneck_never_above_any_sampled_matching() {
+        let mut rng = Rng::new(99);
+        let n = 10;
+        let w: Vec<Vec<f64>> = (0..n)
+            .map(|_| (0..n).map(|_| rng.gen_f64()).collect())
+            .collect();
+        let (b, _) = bottleneck_matching(n, |i, j| w[i][j]);
+        for _ in 0..200 {
+            let perm = rng.permutation(n);
+            let m = (0..n).map(|i| w[i][perm[i]]).fold(0.0, f64::max);
+            assert!(b <= m + 1e-12);
+        }
+    }
+}

@@ -1,0 +1,78 @@
+//! Exhaustive permutation search — the optimality oracle.
+//!
+//! Used by tests (to certify [`super::bottleneck_matching`]) and by the
+//! Fig. 13 brute-force optimum in the Colocating + Heterogeneous scenario.
+
+/// Call `f` with every permutation of `0..n` (Heap's algorithm).
+///
+/// `f` receives the permutation slice; `n = 0` yields a single empty call.
+pub fn for_each_permutation(n: usize, mut f: impl FnMut(&[usize])) {
+    let mut perm: Vec<usize> = (0..n).collect();
+    let mut c = vec![0usize; n];
+    f(&perm);
+    let mut i = 0;
+    while i < n {
+        if c[i] < i {
+            if i % 2 == 0 {
+                perm.swap(0, i);
+            } else {
+                perm.swap(c[i], i);
+            }
+            f(&perm);
+            c[i] += 1;
+            i = 0;
+        } else {
+            c[i] = 0;
+            i += 1;
+        }
+    }
+}
+
+/// Brute-force bottleneck matching by enumerating all `n!` permutations.
+/// Only sensible for small `n` (tests use `n ≤ 8`).
+pub fn exhaustive_bottleneck(n: usize, weight: impl Fn(usize, usize) -> f64) -> (f64, Vec<usize>) {
+    assert!(n > 0);
+    let mut best = f64::INFINITY;
+    let mut best_perm = (0..n).collect::<Vec<_>>();
+    for_each_permutation(n, |perm| {
+        let m = (0..n)
+            .map(|i| weight(i, perm[i]))
+            .fold(f64::NEG_INFINITY, f64::max);
+        if m < best {
+            best = m;
+            best_perm = perm.to_vec();
+        }
+    });
+    (best, best_perm)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn permutation_count_is_factorial() {
+        for (n, fact) in [(0usize, 1usize), (1, 1), (2, 2), (3, 6), (4, 24), (5, 120)] {
+            let mut count = 0;
+            for_each_permutation(n, |_| count += 1);
+            assert_eq!(count, fact, "n={n}");
+        }
+    }
+
+    #[test]
+    fn permutations_are_all_distinct() {
+        let mut seen = std::collections::HashSet::new();
+        for_each_permutation(4, |p| {
+            assert!(seen.insert(p.to_vec()));
+        });
+        assert_eq!(seen.len(), 24);
+    }
+
+    #[test]
+    fn exhaustive_finds_known_optimum() {
+        // weight(i,j) = |i - j|: identity gives bottleneck 0
+        let (b, p) = exhaustive_bottleneck(5, |i, j| (i as f64 - j as f64).abs());
+        assert_eq!(b, 0.0);
+        assert_eq!(p, vec![0, 1, 2, 3, 4]);
+    }
+}

@@ -1,0 +1,177 @@
+//! Hopcroft–Karp maximum bipartite matching, `O(E √V)`.
+
+/// Maximum matching in a bipartite graph with `n` left and `n` right nodes.
+///
+/// `adj[u]` lists the right-side neighbours of left node `u`. Returns
+/// `(size, pair_left)` where `pair_left[u] = Some(v)` iff `u` is matched to
+/// right node `v`.
+pub fn max_bipartite_matching(n: usize, adj: &[Vec<usize>]) -> (usize, Vec<Option<usize>>) {
+    assert_eq!(adj.len(), n);
+    const INF: u32 = u32::MAX;
+    let mut pair_u: Vec<Option<usize>> = vec![None; n];
+    let mut pair_v: Vec<Option<usize>> = vec![None; n];
+    let mut dist = vec![INF; n];
+    let mut queue = std::collections::VecDeque::new();
+
+    // BFS phase: layer the graph from free left vertices.
+    let bfs = |pair_u: &[Option<usize>],
+               pair_v: &[Option<usize>],
+               dist: &mut [u32],
+               queue: &mut std::collections::VecDeque<usize>|
+     -> bool {
+        queue.clear();
+        for u in 0..n {
+            if pair_u[u].is_none() {
+                dist[u] = 0;
+                queue.push_back(u);
+            } else {
+                dist[u] = INF;
+            }
+        }
+        let mut found = false;
+        while let Some(u) = queue.pop_front() {
+            for &v in &adj[u] {
+                match pair_v[v] {
+                    None => found = true,
+                    Some(u2) => {
+                        if dist[u2] == INF {
+                            dist[u2] = dist[u] + 1;
+                            queue.push_back(u2);
+                        }
+                    }
+                }
+            }
+        }
+        found
+    };
+
+    // DFS phase: find augmenting paths along the layering.
+    fn dfs(
+        u: usize,
+        adj: &[Vec<usize>],
+        pair_u: &mut [Option<usize>],
+        pair_v: &mut [Option<usize>],
+        dist: &mut [u32],
+    ) -> bool {
+        for idx in 0..adj[u].len() {
+            let v = adj[u][idx];
+            let ok = match pair_v[v] {
+                None => true,
+                Some(u2) => {
+                    dist[u2] == dist[u].wrapping_add(1) && dfs(u2, adj, pair_u, pair_v, dist)
+                }
+            };
+            if ok {
+                pair_u[u] = Some(v);
+                pair_v[v] = Some(u);
+                return true;
+            }
+        }
+        dist[u] = u32::MAX;
+        false
+    }
+
+    let mut matching = 0;
+    while bfs(&pair_u, &pair_v, &mut dist, &mut queue) {
+        for u in 0..n {
+            if pair_u[u].is_none() && dfs(u, adj, &mut pair_u, &mut pair_v, &mut dist) {
+                matching += 1;
+            }
+        }
+    }
+    (matching, pair_u)
+}
+
+/// Perfect matching restricted to edges where `allowed(u, v)` holds.
+///
+/// Returns the left→right permutation if a perfect matching exists.
+pub fn perfect_matching_on(n: usize, allowed: impl Fn(usize, usize) -> bool) -> Option<Vec<usize>> {
+    let adj: Vec<Vec<usize>> = (0..n)
+        .map(|u| (0..n).filter(|&v| allowed(u, v)).collect())
+        .collect();
+    let (size, pairs) = max_bipartite_matching(n, &adj);
+    if size == n {
+        Some(pairs.into_iter().map(|p| p.unwrap()).collect())
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn full_graph_has_perfect_matching() {
+        let m = perfect_matching_on(5, |_, _| true).unwrap();
+        let mut seen = vec![false; 5];
+        for &v in &m {
+            assert!(!seen[v]);
+            seen[v] = true;
+        }
+    }
+
+    #[test]
+    fn identity_only_graph() {
+        let m = perfect_matching_on(4, |u, v| u == v).unwrap();
+        assert_eq!(m, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn no_perfect_matching_when_vertex_isolated() {
+        assert!(perfect_matching_on(3, |u, _| u != 1).is_none());
+    }
+
+    #[test]
+    fn hall_violation_detected() {
+        // left {0,1} both only connect to right {0} -> no perfect matching
+        assert!(perfect_matching_on(2, |_, v| v == 0).is_none());
+    }
+
+    #[test]
+    fn max_matching_size_on_partial_graph() {
+        // 0-0, 1-0, 1-1, 2-1 => max matching 2 on n=3 (vertex 2 of right unused
+        // ... right vertex 2 isolated)
+        let adj = vec![vec![0], vec![0, 1], vec![1]];
+        let (size, _) = max_bipartite_matching(3, &adj);
+        assert_eq!(size, 2);
+    }
+
+    #[test]
+    fn random_permutation_graphs_match_perfectly() {
+        let mut rng = Rng::new(77);
+        for n in 1..=20 {
+            let perm = rng.permutation(n);
+            let m = perfect_matching_on(n, |u, v| perm[u] == v).unwrap();
+            assert_eq!(m, perm);
+        }
+    }
+
+    #[test]
+    fn matching_is_consistent_pairing() {
+        let mut rng = Rng::new(123);
+        for _ in 0..20 {
+            let n = 8;
+            // random graph with density ~0.5
+            let edges: Vec<Vec<bool>> = (0..n)
+                .map(|_| (0..n).map(|_| rng.gen_f64() < 0.5).collect())
+                .collect();
+            let adj: Vec<Vec<usize>> = (0..n)
+                .map(|u| (0..n).filter(|&v| edges[u][v]).collect())
+                .collect();
+            let (size, pairs) = max_bipartite_matching(n, &adj);
+            let mut used = vec![false; n];
+            let mut count = 0;
+            for (u, p) in pairs.iter().enumerate() {
+                if let Some(v) = p {
+                    assert!(edges[u][*v], "matched edge must exist");
+                    assert!(!used[*v], "right vertex reused");
+                    used[*v] = true;
+                    count += 1;
+                }
+            }
+            assert_eq!(count, size);
+        }
+    }
+}

@@ -1,0 +1,137 @@
+//! Hungarian algorithm (Jonker–Volgenant style shortest-augmenting-path),
+//! `O(n³)` min-**sum** perfect matching.
+//!
+//! Aurora's objective is min-*max* (bottleneck), not min-sum; this
+//! implementation backs the ablation bench that quantifies how much worse a
+//! min-sum colocation is on the paper's inference-time objective.
+
+/// Min-sum perfect matching on an `n × n` cost matrix.
+///
+/// Returns `(total_cost, perm)` with `perm[i]` = column assigned to row `i`.
+pub fn hungarian_min_sum(cost: &[Vec<f64>]) -> (f64, Vec<usize>) {
+    let n = cost.len();
+    assert!(n > 0 && cost.iter().all(|r| r.len() == n), "square matrix required");
+    const INF: f64 = f64::INFINITY;
+
+    // 1-indexed potentials/links per the classic formulation.
+    let mut u = vec![0.0; n + 1];
+    let mut v = vec![0.0; n + 1];
+    let mut p = vec![0usize; n + 1]; // p[j] = row matched to column j (1-indexed)
+    let mut way = vec![0usize; n + 1];
+
+    for i in 1..=n {
+        p[0] = i;
+        let mut j0 = 0usize;
+        let mut minv = vec![INF; n + 1];
+        let mut used = vec![false; n + 1];
+        loop {
+            used[j0] = true;
+            let i0 = p[j0];
+            let mut delta = INF;
+            let mut j1 = 0;
+            for j in 1..=n {
+                if !used[j] {
+                    let cur = cost[i0 - 1][j - 1] - u[i0] - v[j];
+                    if cur < minv[j] {
+                        minv[j] = cur;
+                        way[j] = j0;
+                    }
+                    if minv[j] < delta {
+                        delta = minv[j];
+                        j1 = j;
+                    }
+                }
+            }
+            for j in 0..=n {
+                if used[j] {
+                    u[p[j]] += delta;
+                    v[j] -= delta;
+                } else {
+                    minv[j] -= delta;
+                }
+            }
+            j0 = j1;
+            if p[j0] == 0 {
+                break;
+            }
+        }
+        loop {
+            let j1 = way[j0];
+            p[j0] = p[j1];
+            j0 = j1;
+            if j0 == 0 {
+                break;
+            }
+        }
+    }
+
+    let mut perm = vec![0usize; n];
+    for j in 1..=n {
+        if p[j] > 0 {
+            perm[p[j] - 1] = j - 1;
+        }
+    }
+    let total = (0..n).map(|i| cost[i][perm[i]]).sum();
+    (total, perm)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matching::for_each_permutation;
+    use crate::util::Rng;
+
+    fn exhaustive_min_sum(cost: &[Vec<f64>]) -> f64 {
+        let n = cost.len();
+        let mut best = f64::INFINITY;
+        for_each_permutation(n, |perm| {
+            let s: f64 = (0..n).map(|i| cost[i][perm[i]]).sum();
+            if s < best {
+                best = s;
+            }
+        });
+        best
+    }
+
+    #[test]
+    fn solves_known_instance() {
+        let cost = vec![
+            vec![4.0, 1.0, 3.0],
+            vec![2.0, 0.0, 5.0],
+            vec![3.0, 2.0, 2.0],
+        ];
+        let (total, perm) = hungarian_min_sum(&cost);
+        assert_eq!(total, 5.0); // 1 + 2 + 2
+        let mut seen = vec![false; 3];
+        for &j in &perm {
+            assert!(!seen[j]);
+            seen[j] = true;
+        }
+    }
+
+    #[test]
+    fn matches_exhaustive_on_random_instances() {
+        let mut rng = Rng::new(31);
+        for n in 1..=6 {
+            for _ in 0..10 {
+                let cost: Vec<Vec<f64>> = (0..n)
+                    .map(|_| (0..n).map(|_| rng.gen_range(100) as f64).collect())
+                    .collect();
+                let (total, _) = hungarian_min_sum(&cost);
+                let best = exhaustive_min_sum(&cost);
+                assert!((total - best).abs() < 1e-9, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn identity_optimal_when_diagonal_cheapest() {
+        let n = 5;
+        let cost: Vec<Vec<f64>> = (0..n)
+            .map(|i| (0..n).map(|j| if i == j { 0.0 } else { 1.0 }).collect())
+            .collect();
+        let (total, perm) = hungarian_min_sum(&cost);
+        assert_eq!(total, 0.0);
+        assert_eq!(perm, vec![0, 1, 2, 3, 4]);
+    }
+}

@@ -1,0 +1,26 @@
+//! Bipartite matching algorithms.
+//!
+//! Aurora's colocation and assignment decisions reduce to matching problems:
+//!
+//! * Case II expert colocation (§6.2) and the decoupled heterogeneous stages
+//!   (§7.2) are **bottleneck matching** problems — find a perfect matching
+//!   minimizing the maximum edge weight — solved by binary search over sorted
+//!   edge weights with **Hopcroft–Karp** feasibility checks
+//!   (`O(n² √n log n)`, exactly the paper's stated complexity).
+//! * The Birkhoff–von-Neumann slot decomposition in [`crate::schedule`]
+//!   extracts perfect matchings from the support of the balanced traffic
+//!   matrix, again via Hopcroft–Karp.
+//! * [`exhaustive`] enumerates all permutations for small `n` — the optimality
+//!   oracle used by tests and the Fig. 13 brute-force comparison.
+//! * [`hungarian`] (min-*sum* assignment) backs an ablation: the paper argues
+//!   the bottleneck objective, not the sum objective, is the right one.
+
+mod bottleneck;
+mod exhaustive;
+mod hopcroft_karp;
+mod hungarian;
+
+pub use bottleneck::bottleneck_matching;
+pub use exhaustive::{exhaustive_bottleneck, for_each_permutation};
+pub use hopcroft_karp::{max_bipartite_matching, perfect_matching_on};
+pub use hungarian::hungarian_min_sum;

@@ -1,0 +1,419 @@
+//! The Aurora planner: scenario detection → colocation → assignment →
+//! schedule, producing a [`DeploymentPlan`] (the paper's Fig. 2 decision
+//! tree).
+//!
+//! Planning is offline and statistics-driven (§2.4): the planner consumes
+//! [`ModelTrace`]s (historical per-layer traffic + compute times) and a
+//! [`Cluster`], and emits expert→GPU assignments for one or two models plus
+//! the communication policy. The serving layer and the simulator both
+//! consume the same plan.
+
+use crate::assignment::sorted_assignment;
+use crate::cluster::Cluster;
+use crate::colocation::hetero::decoupled_solution;
+use crate::colocation::{case2_pairing, send_recv_volumes};
+use crate::schedule::SchedulePolicy;
+use crate::sim::MoeLayerStats;
+use crate::trace::ModelTrace;
+use crate::util::Json;
+
+/// The four GPU-cluster settings of Fig. 2.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scenario {
+    /// One model, identical GPUs (§4). Optimal.
+    ExclusiveHomogeneous,
+    /// One model, mixed GPUs (§5). Optimal.
+    ExclusiveHeterogeneous,
+    /// Two models share GPUs, identical GPUs (§6). Optimal.
+    ColocatedHomogeneous,
+    /// Two models share GPUs, mixed GPUs (§7). NP-hard; 1.07× heuristic.
+    ColocatedHeterogeneous,
+}
+
+impl Scenario {
+    /// Scenario for a model count and cluster.
+    pub fn detect(n_models: usize, cluster: &Cluster) -> Scenario {
+        match (n_models, cluster.is_homogeneous()) {
+            (1, true) => Scenario::ExclusiveHomogeneous,
+            (1, false) => Scenario::ExclusiveHeterogeneous,
+            (2, true) => Scenario::ColocatedHomogeneous,
+            (2, false) => Scenario::ColocatedHeterogeneous,
+            (n, _) => panic!("Aurora colocates at most two models per GPU (§2.4), got {n}"),
+        }
+    }
+
+    /// Display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scenario::ExclusiveHomogeneous => "exclusive+homogeneous",
+            Scenario::ExclusiveHeterogeneous => "exclusive+heterogeneous",
+            Scenario::ColocatedHomogeneous => "colocating+homogeneous",
+            Scenario::ColocatedHeterogeneous => "colocating+heterogeneous",
+        }
+    }
+}
+
+/// A complete deployment decision: who goes where, and in what order tokens
+/// move.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeploymentPlan {
+    /// Which of the four scenarios this plan was made for.
+    pub scenario: Scenario,
+    /// `assignment_a[e]` = GPU hosting Model a's expert `e`.
+    pub assignment_a: Vec<usize>,
+    /// Model b's assignment when colocating (same GPU ↔ colocated pair).
+    pub assignment_b: Option<Vec<usize>>,
+    /// Communication scheduling policy.
+    pub policy: SchedulePolicy,
+}
+
+impl DeploymentPlan {
+    /// Model a's layer stats relabelled onto GPUs.
+    pub fn place_a(&self, trace: &ModelTrace) -> Vec<MoeLayerStats> {
+        trace
+            .layers
+            .iter()
+            .map(|l| l.placed(&self.assignment_a))
+            .collect()
+    }
+
+    /// Model b's layer stats relabelled onto GPUs. Panics on exclusive plans.
+    pub fn place_b(&self, trace: &ModelTrace) -> Vec<MoeLayerStats> {
+        let b = self
+            .assignment_b
+            .as_ref()
+            .expect("plan has no second model");
+        trace.layers.iter().map(|l| l.placed(b)).collect()
+    }
+
+    /// The colocation pairing implied by the two assignments:
+    /// `pairing[i]` = b-expert sharing a GPU with a-expert `i`.
+    pub fn pairing(&self) -> Option<Vec<usize>> {
+        let b = self.assignment_b.as_ref()?;
+        let n = self.assignment_a.len();
+        let mut gpu_to_b = vec![usize::MAX; n];
+        for (e, &g) in b.iter().enumerate() {
+            gpu_to_b[g] = e;
+        }
+        Some(
+            self.assignment_a
+                .iter()
+                .map(|&g| gpu_to_b[g])
+                .collect(),
+        )
+    }
+
+    /// JSON rendering (for the CLI and for plan files consumed by serving).
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("scenario", Json::from(self.scenario.name())),
+            ("policy", Json::from(self.policy.name())),
+            (
+                "assignment_a",
+                Json::Arr(self.assignment_a.iter().map(|&g| Json::from(g)).collect()),
+            ),
+        ];
+        if let Some(b) = &self.assignment_b {
+            fields.push((
+                "assignment_b",
+                Json::Arr(b.iter().map(|&g| Json::from(g)).collect()),
+            ));
+        }
+        Json::obj(fields)
+    }
+}
+
+/// Aurora's planner. `planning_layer` selects which layer's statistics drive
+/// colocation (the paper plans on layer 1 and studies robustness to the
+/// other layers in Fig. 14).
+#[derive(Debug, Clone)]
+pub struct Planner {
+    /// Communication policy to embed in plans (Aurora by default; baselines
+    /// use Sjf/Rcs for comparison figures).
+    pub policy: SchedulePolicy,
+    /// Index of the layer whose traffic drives colocation decisions.
+    pub planning_layer: usize,
+}
+
+impl Default for Planner {
+    fn default() -> Self {
+        Self {
+            policy: SchedulePolicy::Aurora,
+            planning_layer: 0,
+        }
+    }
+}
+
+impl Planner {
+    /// Plan one model running exclusively on `cluster`.
+    ///
+    /// Homogeneous: the identity assignment (observation 1: no placement
+    /// decision matters). Heterogeneous: Theorem 5.1's sorted assignment on
+    /// the trace's aggregate expert loads.
+    pub fn plan_exclusive(&self, trace: &ModelTrace, cluster: &Cluster) -> DeploymentPlan {
+        let scenario = Scenario::detect(1, cluster);
+        let assignment_a = match scenario {
+            Scenario::ExclusiveHomogeneous => (0..trace.n_experts()).collect(),
+            _ => sorted_assignment(&trace.total_expert_loads(), cluster),
+        };
+        DeploymentPlan {
+            scenario,
+            assignment_a,
+            assignment_b: None,
+            policy: self.policy,
+        }
+    }
+
+    /// Like [`Planner::plan_exclusive`], but optimized for a single layer's
+    /// statistics (used when per-layer deployment is being studied, e.g. the
+    /// precise-input figures of §8.2).
+    pub fn plan_exclusive_layer(
+        &self,
+        trace: &ModelTrace,
+        layer: usize,
+        cluster: &Cluster,
+    ) -> DeploymentPlan {
+        let scenario = Scenario::detect(1, cluster);
+        let assignment_a = match scenario {
+            Scenario::ExclusiveHomogeneous => (0..trace.n_experts()).collect(),
+            _ => sorted_assignment(&trace.layers[layer].expert_loads(), cluster),
+        };
+        DeploymentPlan {
+            scenario,
+            assignment_a,
+            assignment_b: None,
+            policy: self.policy,
+        }
+    }
+
+    /// Plan two models colocated on `cluster`.
+    ///
+    /// Homogeneous (§6): Case II bottleneck matching on the planning layer's
+    /// traffic; pairs stay on Model a's GPU indices.
+    /// Heterogeneous (§7.2): decoupled two-stage matching with a per-GPU
+    /// completion-estimate cost.
+    pub fn plan_colocated(
+        &self,
+        a: &ModelTrace,
+        b: &ModelTrace,
+        cluster: &Cluster,
+    ) -> DeploymentPlan {
+        let scenario = Scenario::detect(2, cluster);
+        let n = a.n_experts();
+        assert_eq!(n, b.n_experts(), "colocated models need equal expert counts (§6 fn3)");
+        assert_eq!(n, cluster.len(), "one expert pair per GPU");
+        let la = &a.layers[self.planning_layer.min(a.layers.len() - 1)];
+        let lb = &b.layers[self.planning_layer.min(b.layers.len() - 1)];
+
+        match scenario {
+            Scenario::ColocatedHomogeneous => {
+                let (_, pairing) = case2_pairing(&la.traffic, &lb.traffic);
+                // a-expert i on GPU i; b-expert pairing[i] joins it.
+                let mut assignment_b = vec![0usize; n];
+                for (i, &j) in pairing.iter().enumerate() {
+                    assignment_b[j] = i;
+                }
+                DeploymentPlan {
+                    scenario,
+                    assignment_a: (0..n).collect(),
+                    assignment_b: Some(assignment_b),
+                    policy: self.policy,
+                }
+            }
+            Scenario::ColocatedHeterogeneous => {
+                let cost = pair_gpu_cost(la, lb, cluster);
+                let sol = decoupled_solution(&la.traffic, &lb.traffic, n, cost);
+                let mut assignment_b = vec![0usize; n];
+                for (i, &j) in sol.pairing.iter().enumerate() {
+                    assignment_b[j] = sol.assignment[i];
+                }
+                DeploymentPlan {
+                    scenario,
+                    assignment_a: sol.assignment,
+                    assignment_b: Some(assignment_b),
+                    policy: self.policy,
+                }
+            }
+            _ => unreachable!("detect(2, _) returns colocated scenarios"),
+        }
+    }
+}
+
+/// Per-GPU completion estimate for colocating a-expert `i` and b-expert `j`
+/// on GPU `g` — the edge weight of the stage-2 matching (§7.2): serialized
+/// compute of both experts plus the pair's worst-direction wire time.
+pub fn pair_gpu_cost<'s>(
+    la: &'s MoeLayerStats,
+    lb: &'s MoeLayerStats,
+    cluster: &'s Cluster,
+) -> impl Fn(usize, usize, usize) -> f64 + 's {
+    let loads_a = la.expert_loads();
+    let loads_b = lb.expert_loads();
+    let (a_send, a_recv) = send_recv_volumes(&la.traffic);
+    let (b_send, b_recv) = send_recv_volumes(&lb.traffic);
+    move |i: usize, j: usize, g: usize| {
+        let gpu = cluster.gpu(g);
+        let compute = (la.gate_ms
+            + lb.gate_ms
+            + la.agg_ms
+            + lb.agg_ms
+            + loads_a[i] as f64 * la.ffn_ms_per_token
+            + loads_b[j] as f64 * lb.ffn_ms_per_token)
+            / gpu.flops_scale;
+        let wire = (a_send[i] + b_send[j]).max(a_recv[i] + b_recv[j]) as f64 / gpu.bandwidth;
+        compute + wire
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{simulate_colocated, simulate_exclusive};
+    use crate::trace::{limoe_trace, Dataset, LimoeVariant};
+    use crate::util::Rng;
+
+    fn traces() -> (ModelTrace, ModelTrace) {
+        (
+            limoe_trace(LimoeVariant::B16, Dataset::Coco, 8, 4, 32, 1),
+            limoe_trace(LimoeVariant::B32, Dataset::Imagenet, 8, 4, 128, 2),
+        )
+    }
+
+    #[test]
+    fn scenario_detection() {
+        let homo = Cluster::homogeneous(8, 1.0);
+        let het = Cluster::paper_heterogeneous(8, 1.0);
+        assert_eq!(Scenario::detect(1, &homo), Scenario::ExclusiveHomogeneous);
+        assert_eq!(Scenario::detect(1, &het), Scenario::ExclusiveHeterogeneous);
+        assert_eq!(Scenario::detect(2, &homo), Scenario::ColocatedHomogeneous);
+        assert_eq!(Scenario::detect(2, &het), Scenario::ColocatedHeterogeneous);
+    }
+
+    #[test]
+    #[should_panic]
+    fn three_models_rejected() {
+        Scenario::detect(3, &Cluster::homogeneous(8, 1.0));
+    }
+
+    #[test]
+    fn exclusive_homo_plan_is_identity() {
+        let (a, _) = traces();
+        let plan = Planner::default().plan_exclusive(&a, &Cluster::homogeneous(8, 1.0));
+        assert_eq!(plan.assignment_a, (0..8).collect::<Vec<_>>());
+        assert!(plan.assignment_b.is_none());
+    }
+
+    #[test]
+    fn exclusive_hetero_puts_heavy_experts_on_fast_gpus() {
+        let (a, _) = traces();
+        let cluster = Cluster::paper_heterogeneous(8, 1.0);
+        let plan = Planner::default().plan_exclusive(&a, &cluster);
+        let loads = a.total_expert_loads();
+        let heaviest = (0..8).max_by_key(|&e| loads[e]).unwrap();
+        let lightest = (0..8).min_by_key(|&e| loads[e]).unwrap();
+        let bw = cluster.bandwidths();
+        assert!(bw[plan.assignment_a[heaviest]] >= bw[plan.assignment_a[lightest]]);
+    }
+
+    #[test]
+    fn colocated_plan_pairs_each_gpu_once() {
+        let (a, b) = traces();
+        for cluster in [
+            Cluster::homogeneous(8, 1.0),
+            Cluster::paper_heterogeneous(8, 1.0),
+        ] {
+            let plan = Planner::default().plan_colocated(&a, &b, &cluster);
+            let pb = plan.assignment_b.clone().unwrap();
+            let mut seen_a = vec![false; 8];
+            let mut seen_b = vec![false; 8];
+            for e in 0..8 {
+                assert!(!seen_a[plan.assignment_a[e]]);
+                seen_a[plan.assignment_a[e]] = true;
+                assert!(!seen_b[pb[e]]);
+                seen_b[pb[e]] = true;
+            }
+            let pairing = plan.pairing().unwrap();
+            let mut seen_p = vec![false; 8];
+            for &j in &pairing {
+                assert!(!seen_p[j]);
+                seen_p[j] = true;
+            }
+        }
+    }
+
+    #[test]
+    fn plan_end_to_end_beats_random_plans_colocated_homo() {
+        let (a, b) = traces();
+        let cluster = Cluster::homogeneous(8, 10.0);
+        let plan = Planner::default().plan_colocated(&a, &b, &cluster);
+        let t_plan: f64 = plan
+            .place_a(&a)
+            .iter()
+            .zip(plan.place_b(&b))
+            .map(|(sa, sb)| {
+                simulate_colocated(sa, &sb, &cluster, plan.policy)
+                    .0
+                    .inference_ms
+            })
+            .sum();
+        let mut rng = Rng::new(0xF00D);
+        for _ in 0..10 {
+            let p = rng.permutation(8);
+            let t_rand: f64 = a
+                .layers
+                .iter()
+                .zip(&b.layers)
+                .map(|(sa, sb)| {
+                    simulate_colocated(sa, &sb.placed(&p), &cluster, SchedulePolicy::Aurora)
+                        .0
+                        .inference_ms
+                })
+                .sum();
+            // planned on layer 0 only while layers 1-3 route differently, so
+            // allow slack across the 4-layer sum; layer-0 optimality itself
+            // is asserted exactly in eval::fig11 tests
+            assert!(
+                t_plan <= t_rand * 1.15,
+                "planned {t_plan} vs random {t_rand}"
+            );
+        }
+    }
+
+    #[test]
+    fn exclusive_hetero_plan_beats_random_end_to_end() {
+        let (a, _) = traces();
+        let cluster = Cluster::paper_heterogeneous(8, 10.0);
+        let plan = Planner::default().plan_exclusive(&a, &cluster);
+        let t_plan: f64 = plan
+            .place_a(&a)
+            .iter()
+            .map(|l| simulate_exclusive(l, &cluster, plan.policy).0.inference_ms)
+            .sum();
+        let mut rng = Rng::new(0xBEE);
+        for _ in 0..20 {
+            let p = rng.permutation(8);
+            let t_rand: f64 = a
+                .layers
+                .iter()
+                .map(|l| {
+                    simulate_exclusive(&l.placed(&p), &cluster, SchedulePolicy::Aurora)
+                        .0
+                        .inference_ms
+                })
+                .sum();
+            assert!(t_plan <= t_rand + 1e-9);
+        }
+    }
+
+    #[test]
+    fn plan_json_renders() {
+        let (a, b) = traces();
+        let plan = Planner::default().plan_colocated(&a, &b, &Cluster::homogeneous(8, 1.0));
+        let j = plan.to_json();
+        assert_eq!(
+            j.get("scenario").unwrap().as_str(),
+            Some("colocating+homogeneous")
+        );
+        assert_eq!(j.get("assignment_b").unwrap().as_arr().unwrap().len(), 8);
+    }
+}

@@ -1,0 +1,12 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them from rust.
+//!
+//! Python runs once (`make artifacts`); after that the rust binary is
+//! self-contained. HLO **text** is the interchange format (see
+//! DESIGN.md and /opt/xla-example/README.md: xla_extension 0.5.1 rejects
+//! jax ≥ 0.5's serialized protos, while the text parser reassigns ids).
+
+mod moe_exec;
+mod pjrt;
+
+pub use moe_exec::{MoeModel, MoeModelMeta};
+pub use pjrt::{PjrtRuntime, loaded_executable_forward};

@@ -1,0 +1,239 @@
+//! The MoE model executor: gate + per-expert FFN artifacts, sparse dispatch
+//! done in rust (the L3 analogue of the paper's all-to-all: token groups are
+//! formed per expert and issued in the plan's transmission order).
+
+use super::pjrt::{loaded_executable_forward, PjrtRuntime};
+use crate::util::Json;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Parsed `artifacts/meta.json`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MoeModelMeta {
+    /// Number of experts.
+    pub n_experts: usize,
+    /// Embedding width.
+    pub d_model: usize,
+    /// FFN hidden width.
+    pub d_ff: usize,
+    /// Compiled token capacity of the gate / fused layer.
+    pub capacity: usize,
+    /// Ascending expert-FFN capacity buckets; each expert group runs on the
+    /// smallest bucket that fits (§Perf: avoids full-capacity padding).
+    pub ffn_capacities: Vec<usize>,
+}
+
+impl MoeModelMeta {
+    /// Read and validate `meta.json` from the artifacts directory.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let v = Json::parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        let get = |k: &str| -> Result<usize> {
+            v.get(k)
+                .and_then(|x| x.as_u64())
+                .map(|x| x as usize)
+                .with_context(|| format!("meta.json missing {k}"))
+        };
+        let capacity = get("capacity")?;
+        let mut ffn_capacities: Vec<usize> = match v.get("ffn_capacities").and_then(|x| x.as_arr())
+        {
+            Some(arr) => arr
+                .iter()
+                .map(|c| c.as_u64().map(|c| c as usize).context("bad ffn_capacities"))
+                .collect::<Result<_>>()?,
+            None => vec![capacity], // legacy single-capacity artifact sets
+        };
+        ffn_capacities.sort_unstable();
+        anyhow::ensure!(
+            ffn_capacities.last() == Some(&capacity),
+            "largest FFN bucket must equal the gate capacity"
+        );
+        Ok(Self {
+            n_experts: get("n_experts")?,
+            d_model: get("d_model")?,
+            d_ff: get("d_ff")?,
+            capacity,
+            ffn_capacities,
+        })
+    }
+}
+
+/// A loaded MoE model: gate + per-expert FFN executables.
+pub struct MoeModel {
+    /// Model metadata (dims, capacity).
+    pub meta: MoeModelMeta,
+    gate: xla::PjRtLoadedExecutable,
+    /// `experts[e][k]` = expert `e` compiled at `meta.ffn_capacities[k]`.
+    experts: Vec<Vec<xla::PjRtLoadedExecutable>>,
+    fused: Option<xla::PjRtLoadedExecutable>,
+}
+
+impl MoeModel {
+    /// Load all artifacts from `dir` on the given runtime.
+    pub fn load(rt: &PjrtRuntime, dir: &Path) -> Result<Self> {
+        let meta = MoeModelMeta::load(dir)?;
+        let gate = rt.load_hlo_text(&dir.join("gate.hlo.txt"))?;
+        let mut experts = Vec::with_capacity(meta.n_experts);
+        for e in 0..meta.n_experts {
+            let mut buckets = Vec::with_capacity(meta.ffn_capacities.len());
+            for &cap in &meta.ffn_capacities {
+                // legacy layout (single capacity) uses the unsuffixed name
+                let suffixed = dir.join(format!("expert_ffn_{e}_c{cap}.hlo.txt"));
+                let path = if suffixed.exists() {
+                    suffixed
+                } else {
+                    dir.join(format!("expert_ffn_{e}.hlo.txt"))
+                };
+                buckets.push(rt.load_hlo_text(&path)?);
+            }
+            experts.push(buckets);
+        }
+        let fused_path = dir.join("moe_layer.hlo.txt");
+        let fused = if fused_path.exists() {
+            Some(rt.load_hlo_text(&fused_path)?)
+        } else {
+            None
+        };
+        Ok(Self {
+            meta,
+            gate,
+            experts,
+            fused,
+        })
+    }
+
+    /// Run the gate on a padded `[capacity, d_model]` buffer. Returns
+    /// `(expert_idx, gate_weight)` for the first `n_tokens` rows.
+    pub fn run_gate(&self, tokens: &[f32], n_tokens: usize) -> Result<(Vec<i32>, Vec<f32>)> {
+        let out = loaded_executable_forward(
+            &self.gate,
+            tokens,
+            self.meta.capacity,
+            self.meta.d_model,
+        )?;
+        if out.len() != 2 {
+            bail!("gate artifact must return (idx, weight), got {} outputs", out.len());
+        }
+        let idx: Vec<i32> = out[0].to_vec::<i32>()?;
+        let weight: Vec<f32> = out[1].to_vec::<f32>()?;
+        Ok((idx[..n_tokens].to_vec(), weight[..n_tokens].to_vec()))
+    }
+
+    /// Smallest compiled FFN capacity that holds `n_tokens`.
+    ///
+    /// Setting `AURORA_FFN_BUCKETS=off` forces the largest capacity — the
+    /// pre-optimization behaviour, kept for the §Perf before/after benches.
+    pub fn ffn_bucket(&self, n_tokens: usize) -> (usize, usize) {
+        let last = self.meta.ffn_capacities.len() - 1;
+        if std::env::var_os("AURORA_FFN_BUCKETS").is_some_and(|v| v == "off") {
+            return (last, self.meta.ffn_capacities[last]);
+        }
+        for (k, &cap) in self.meta.ffn_capacities.iter().enumerate() {
+            if cap >= n_tokens {
+                return (k, cap);
+            }
+        }
+        (last, self.meta.ffn_capacities[last])
+    }
+
+    /// Run expert `e`'s FFN on a padded `[cap, d_model]` buffer, where `cap`
+    /// is the bucket returned by [`MoeModel::ffn_bucket`] for the group size.
+    pub fn run_expert(&self, e: usize, tokens: &[f32], cap: usize) -> Result<Vec<f32>> {
+        let k = self
+            .meta
+            .ffn_capacities
+            .iter()
+            .position(|&c| c == cap)
+            .context("cap must be a compiled bucket")?;
+        let out = loaded_executable_forward(&self.experts[e][k], tokens, cap, self.meta.d_model)?;
+        Ok(out[0].to_vec::<f32>()?)
+    }
+
+    /// Full MoE layer with **rust-side sparse dispatch**: gate, group tokens
+    /// per expert (visiting experts in `expert_order` — the plan's
+    /// transmission order), run each non-empty expert, combine weighted
+    /// outputs. `tokens` is `[n_tokens, d_model]` flattened, `n_tokens ≤
+    /// capacity`.
+    pub fn forward_layer(
+        &self,
+        tokens: &[f32],
+        n_tokens: usize,
+        expert_order: &[usize],
+    ) -> Result<Vec<f32>> {
+        let d = self.meta.d_model;
+        let cap = self.meta.capacity;
+        assert!(n_tokens <= cap, "batch exceeds compiled capacity");
+        assert_eq!(tokens.len(), n_tokens * d);
+
+        let mut padded = vec![0f32; cap * d];
+        padded[..tokens.len()].copy_from_slice(tokens);
+        let (idx, weight) = self.run_gate(&padded, n_tokens)?;
+        self.forward_with_gate(tokens, n_tokens, expert_order, &idx, &weight)
+    }
+
+    /// [`MoeModel::forward_layer`] with a pre-computed gate decision — the
+    /// serving engine runs the gate once for statistics *and* dispatch
+    /// (§Perf: the original path gated every batch twice).
+    pub fn forward_with_gate(
+        &self,
+        tokens: &[f32],
+        n_tokens: usize,
+        expert_order: &[usize],
+        idx: &[i32],
+        weight: &[f32],
+    ) -> Result<Vec<f32>> {
+        let d = self.meta.d_model;
+        assert_eq!(idx.len(), n_tokens);
+        assert_eq!(weight.len(), n_tokens);
+
+        let mut out = vec![0f32; n_tokens * d];
+        for &e in expert_order {
+            let rows: Vec<usize> = (0..n_tokens).filter(|&t| idx[t] as usize == e).collect();
+            if rows.is_empty() {
+                continue;
+            }
+            // pad only to the smallest compiled bucket that fits the group
+            let (_, bucket_cap) = self.ffn_bucket(rows.len());
+            let mut group = vec![0f32; bucket_cap * d];
+            for (slot, &t) in rows.iter().enumerate() {
+                group[slot * d..(slot + 1) * d].copy_from_slice(&tokens[t * d..(t + 1) * d]);
+            }
+            let y = self.run_expert(e, &group, bucket_cap)?;
+            for (slot, &t) in rows.iter().enumerate() {
+                let w = weight[t];
+                for c in 0..d {
+                    out[t * d + c] = y[slot * d + c] * w;
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// The fused single-executable layer (used to cross-check the split
+    /// dispatch path and by latency benchmarks).
+    pub fn forward_fused(&self, tokens: &[f32], n_tokens: usize) -> Result<Vec<f32>> {
+        let fused = self
+            .fused
+            .as_ref()
+            .context("moe_layer.hlo.txt not present in artifacts")?;
+        let d = self.meta.d_model;
+        let cap = self.meta.capacity;
+        let mut padded = vec![0f32; cap * d];
+        padded[..n_tokens * d].copy_from_slice(&tokens[..n_tokens * d]);
+        let out = loaded_executable_forward(fused, &padded, cap, d)?;
+        let y: Vec<f32> = out[0].to_vec::<f32>()?;
+        Ok(y[..n_tokens * d].to_vec())
+    }
+
+    /// Per-expert token counts for a gated batch — the serving engine's
+    /// statistics hook feeding the planner (§2.4 historical statistics).
+    pub fn expert_histogram(&self, idx: &[i32]) -> Vec<u64> {
+        let mut h = vec![0u64; self.meta.n_experts];
+        for &e in idx {
+            h[e as usize] += 1;
+        }
+        h
+    }
+}

@@ -1,0 +1,64 @@
+//! Thin wrapper over the `xla` crate's PJRT CPU client.
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A PJRT client plus helpers to load HLO-text artifacts.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        Ok(Self {
+            client: xla::PjRtClient::cpu().context("creating PJRT CPU client")?,
+        })
+    }
+
+    /// Backend platform name (e.g. `"cpu"`).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it into an executable.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))
+    }
+}
+
+/// Execute a single-input executable on an `[rows, cols]` f32 buffer and
+/// return the tuple elements as flat `Vec<f32>` / raw literals.
+///
+/// All artifacts are lowered with `return_tuple=True`, so the output is
+/// always a tuple; callers pick the elements they need.
+pub fn loaded_executable_forward(
+    exe: &xla::PjRtLoadedExecutable,
+    input: &[f32],
+    rows: usize,
+    cols: usize,
+) -> Result<Vec<xla::Literal>> {
+    assert_eq!(input.len(), rows * cols, "input buffer shape mismatch");
+    let lit = xla::Literal::vec1(input).reshape(&[rows as i64, cols as i64])?;
+    let result = exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+    Ok(result.to_tuple()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// These tests need `make artifacts` to have run; they are exercised via
+    /// the integration test `rust/tests/integration_runtime.rs` which skips
+    /// gracefully when artifacts are missing.
+    #[test]
+    fn cpu_client_comes_up() {
+        let rt = PjrtRuntime::cpu().unwrap();
+        assert!(!rt.platform().is_empty());
+    }
+}

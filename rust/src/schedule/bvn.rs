@@ -1,0 +1,243 @@
+//! Aurora's optimal transmission order (Alg. 1 / Theorem 4.2) via
+//! Birkhoff–von-Neumann decomposition.
+//!
+//! Algorithm 1 in the paper orders tokens so the bottleneck GPU transmits
+//! continuously and no receiver ever has two simultaneous senders. We realize
+//! it constructively, mirroring the Appendix A proof:
+//!
+//! 1. augment `D` to the doubly-balanced `D' = D + X`
+//!    ([`crate::traffic::augment_to_balanced`]) — every row/col sums to
+//!    `b_max`;
+//! 2. repeatedly extract a perfect matching from the support of `D'`
+//!    (Hopcroft–Karp); Hall's condition always holds for a doubly-balanced
+//!    non-negative matrix, so a matching always exists;
+//! 3. each matching becomes one [`SlotRound`] of duration
+//!    `w = min entry along the matching`; subtract and repeat until `D'` is
+//!    exhausted.
+//!
+//! The rounds partition `b_max` tokens of per-port budget, every GPU sends
+//! and receives at most once per round, and the bottleneck GPU carries real
+//! traffic in every round — so dropping artificial filler keeps the makespan
+//! at exactly `b_max`.
+
+use super::slot::{SlotRound, SlotSchedule};
+use crate::traffic::{augment_to_balanced, TrafficMatrix};
+
+/// Build Aurora's contention-free slot schedule for traffic matrix `d`
+/// (homogeneous port speeds; durations are in tokens).
+///
+/// The result satisfies (validated by [`super::validate_slot_schedule`]):
+/// * per round, each GPU appears at most once as sender and once as receiver;
+/// * total real tokens delivered equal `d`'s off-diagonal entries;
+/// * `makespan_tokens() == d.b_max_tokens()`.
+pub fn aurora_schedule(d: &TrafficMatrix) -> SlotSchedule {
+    let n = d.n();
+    let b_max = d.b_max_tokens();
+    if b_max == 0 {
+        return SlotSchedule { n, rounds: vec![] };
+    }
+
+    // Step 1: balance. Work on flat arrays from here on — this loop is the
+    // planner's hottest path (§Perf: 64x64 BvN went 74 ms → ~4 ms by
+    // replacing the per-round from-scratch Hopcroft–Karp with incremental
+    // matching repair and dropping the per-round adjacency rebuild).
+    let (dp_m, _x) = augment_to_balanced(d);
+    let mut dp: Vec<u64> = dp_m.data().to_vec();
+
+    // Track how much *real* traffic remains per pair, so each round reports
+    // the real share of its transfers (the artificial remainder is idle time).
+    let mut real: Vec<u64> = vec![0; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            if i != j {
+                real[i * n + j] = d.get(i, j);
+            }
+        }
+    }
+
+    // Incremental matching state: after subtracting a round's duration, only
+    // the edges that hit zero leave the support, so the previous round's
+    // matching is repaired with one augmenting-path search per broken pair
+    // instead of a full from-scratch matching.
+    let mut pair_u: Vec<usize> = vec![usize::MAX; n]; // left i -> right j
+    let mut pair_v: Vec<usize> = vec![usize::MAX; n]; // right j -> left i
+    let mut visited: Vec<u32> = vec![0; n];
+    let mut stamp: u32 = 0;
+
+    /// Kuhn's augmenting DFS on the support of `dp`.
+    fn augment(
+        u: usize,
+        n: usize,
+        dp: &[u64],
+        pair_u: &mut [usize],
+        pair_v: &mut [usize],
+        visited: &mut [u32],
+        stamp: u32,
+    ) -> bool {
+        for v in 0..n {
+            if dp[u * n + v] > 0 && visited[v] != stamp {
+                visited[v] = stamp;
+                if pair_v[v] == usize::MAX
+                    || augment(pair_v[v], n, dp, pair_u, pair_v, visited, stamp)
+                {
+                    pair_u[u] = v;
+                    pair_v[v] = u;
+                    return true;
+                }
+            }
+        }
+        false
+    }
+
+    let mut rounds = Vec::new();
+    let mut remaining = b_max;
+    while remaining > 0 {
+        // Step 2: repair the matching for every unmatched left vertex.
+        for u in 0..n {
+            if pair_u[u] == usize::MAX {
+                stamp += 1;
+                let ok = augment(u, n, &dp, &mut pair_u, &mut pair_v, &mut visited, stamp);
+                debug_assert!(
+                    ok,
+                    "doubly-balanced matrix always has a perfect matching on its support"
+                );
+            }
+        }
+
+        // Step 3: round duration = min entry along the matching.
+        let w = (0..n).map(|i| dp[i * n + pair_u[i]]).min().unwrap();
+        debug_assert!(w > 0);
+
+        let mut transfers = Vec::new();
+        for i in 0..n {
+            let j = pair_u[i];
+            let cell = i * n + j;
+            dp[cell] -= w;
+            if i != j {
+                let r = real[cell].min(w);
+                if r > 0 {
+                    real[cell] -= r;
+                    transfers.push((i, j, r));
+                }
+            }
+            // Edges that hit zero leave the support; break those pairs so the
+            // next round's repair re-augments them.
+            if dp[cell] == 0 {
+                pair_u[i] = usize::MAX;
+                pair_v[j] = usize::MAX;
+            }
+        }
+        rounds.push(SlotRound {
+            duration: w,
+            transfers,
+        });
+        remaining -= w;
+    }
+    debug_assert!(real.iter().all(|&r| r == 0), "all real traffic scheduled");
+
+    SlotSchedule { n, rounds }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::validate_slot_schedule;
+    use crate::util::Rng;
+
+    #[test]
+    fn empty_matrix_yields_empty_schedule() {
+        let s = aurora_schedule(&TrafficMatrix::zeros(4));
+        assert!(s.rounds.is_empty());
+        assert_eq!(s.makespan_tokens(), 0);
+    }
+
+    #[test]
+    fn fig4_matrix_schedules_in_two_slots() {
+        let d = TrafficMatrix::from_nested(&[vec![0, 1, 1], vec![1, 0, 1], vec![0, 0, 0]]);
+        let s = aurora_schedule(&d);
+        assert_eq!(s.makespan_tokens(), 2);
+        validate_slot_schedule(&d, &s).unwrap();
+    }
+
+    #[test]
+    fn schedule_hits_b_max_on_random_matrices() {
+        let mut rng = Rng::new(0xBEEF);
+        for n in 2..=12 {
+            for _ in 0..5 {
+                let mut d = TrafficMatrix::zeros(n);
+                for i in 0..n {
+                    for j in 0..n {
+                        if i != j {
+                            d.set(i, j, rng.gen_range(40));
+                        }
+                    }
+                }
+                let s = aurora_schedule(&d);
+                assert_eq!(s.makespan_tokens(), d.b_max_tokens(), "n={n}");
+                validate_slot_schedule(&d, &s).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn skewed_single_receiver() {
+        // Everyone sends to GPU 0: b_max = col sum of 0.
+        let mut d = TrafficMatrix::zeros(5);
+        for i in 1..5 {
+            d.set(i, 0, 10);
+        }
+        let s = aurora_schedule(&d);
+        assert_eq!(s.makespan_tokens(), 40);
+        validate_slot_schedule(&d, &s).unwrap();
+    }
+
+    #[test]
+    fn diagonal_traffic_is_ignored() {
+        let mut d = TrafficMatrix::zeros(3);
+        d.set(0, 0, 1000); // local tokens: no wire time
+        d.set(0, 1, 2);
+        let s = aurora_schedule(&d);
+        assert_eq!(s.makespan_tokens(), 2);
+        validate_slot_schedule(&d, &s).unwrap();
+    }
+
+    #[test]
+    fn bottleneck_gpu_transmits_continuously() {
+        // Alg. 1's defining property: the bottleneck GPU has real traffic in
+        // every round.
+        let mut rng = Rng::new(0x51A7);
+        for _ in 0..10 {
+            let n = 6;
+            let mut d = TrafficMatrix::zeros(n);
+            for i in 0..n {
+                for j in 0..n {
+                    if i != j {
+                        d.set(i, j, rng.gen_range(20) + 1);
+                    }
+                }
+            }
+            let bottleneck = (0..n)
+                .max_by_key(|&i| d.row_sum(i).max(d.col_sum(i)))
+                .unwrap();
+            let s = aurora_schedule(&d);
+            let tx_heavy = d.row_sum(bottleneck) >= d.col_sum(bottleneck);
+            for (k, round) in s.rounds.iter().enumerate() {
+                let active = round.transfers.iter().any(|&(src, dst, real)| {
+                    real > 0 && (if tx_heavy { src } else { dst }) == bottleneck
+                });
+                // The bottleneck's dominant direction must be busy every
+                // round, otherwise makespan would exceed b_max.
+                let busy_tokens: u64 = round
+                    .transfers
+                    .iter()
+                    .filter(|&&(src, dst, _)| (if tx_heavy { src } else { dst }) == bottleneck)
+                    .map(|&(_, _, r)| r)
+                    .sum();
+                assert!(
+                    active && busy_tokens == round.duration,
+                    "bottleneck idle in round {k}"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,144 @@
+//! Slot-level schedule representation.
+//!
+//! Aurora's optimal order (Alg. 1) is naturally expressed as a sequence of
+//! *rounds*: within one round every GPU sends to at most one destination and
+//! receives from at most one source (a partial permutation), so there is no
+//! port contention by construction. Rounds have integer token durations; the
+//! whole schedule's makespan is the sum of round durations.
+
+use crate::traffic::TrafficMatrix;
+
+/// One contention-free round: a partial permutation of transfers, each moving
+/// at most `duration` real tokens from `src` to `dst`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SlotRound {
+    /// Round length in tokens (per-port budget of this round).
+    pub duration: u64,
+    /// `(src, dst, real_tokens)` — `real_tokens ≤ duration`. Transfers whose
+    /// tokens were purely artificial (the 𝕏 filler of Appendix A) are
+    /// omitted; the port simply idles for the round's remainder.
+    pub transfers: Vec<(usize, usize, u64)>,
+}
+
+/// An ordered list of rounds realizing one all-to-all.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SlotSchedule {
+    /// Number of GPUs.
+    pub n: usize,
+    /// Rounds in transmission order.
+    pub rounds: Vec<SlotRound>,
+}
+
+impl SlotSchedule {
+    /// Total schedule length in tokens (at bandwidth `B` tokens/ms, divide by
+    /// `B` for milliseconds). For Aurora this equals `b_max` (Theorem 4.2).
+    pub fn makespan_tokens(&self) -> u64 {
+        self.rounds.iter().map(|r| r.duration).sum()
+    }
+
+    /// Per-GPU finish time in tokens: the end of the last round in which the
+    /// GPU sends or receives *real* traffic.
+    pub fn per_gpu_finish_tokens(&self) -> Vec<u64> {
+        let mut finish = vec![0u64; self.n];
+        let mut t = 0u64;
+        for round in &self.rounds {
+            t += round.duration;
+            for &(src, dst, real) in &round.transfers {
+                if real > 0 {
+                    finish[src] = t;
+                    finish[dst] = t;
+                }
+            }
+        }
+        finish
+    }
+
+    /// Total real tokens moved per (src, dst) pair — for conservation checks.
+    pub fn delivered(&self) -> TrafficMatrix {
+        let mut m = TrafficMatrix::zeros(self.n);
+        for round in &self.rounds {
+            for &(src, dst, real) in &round.transfers {
+                m.add(src, dst, real);
+            }
+        }
+        m
+    }
+
+    /// Flatten to a global priority order of flows (first occurrence of each
+    /// (src, dst) pair, in round order). This is the order handed to the
+    /// communication library (e.g. the sequence of NCCL send calls per GPU).
+    pub fn priority_order(&self) -> Vec<(usize, usize)> {
+        let mut seen = vec![false; self.n * self.n];
+        let mut order = Vec::new();
+        for round in &self.rounds {
+            for &(src, dst, real) in &round.transfers {
+                if real > 0 && !seen[src * self.n + dst] {
+                    seen[src * self.n + dst] = true;
+                    order.push((src, dst));
+                }
+            }
+        }
+        order
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_round_schedule() -> SlotSchedule {
+        SlotSchedule {
+            n: 3,
+            rounds: vec![
+                SlotRound {
+                    duration: 2,
+                    transfers: vec![(0, 1, 2), (1, 2, 1)],
+                },
+                SlotRound {
+                    duration: 1,
+                    transfers: vec![(0, 2, 1), (1, 0, 1)],
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn makespan_sums_durations() {
+        assert_eq!(two_round_schedule().makespan_tokens(), 3);
+    }
+
+    #[test]
+    fn per_gpu_finish_tracks_last_real_round() {
+        let s = two_round_schedule();
+        let f = s.per_gpu_finish_tokens();
+        assert_eq!(f, vec![3, 3, 3]); // all GPUs active in round 2 (0 recv in r2)
+    }
+
+    #[test]
+    fn delivered_accumulates() {
+        let d = two_round_schedule().delivered();
+        assert_eq!(d.get(0, 1), 2);
+        assert_eq!(d.get(1, 2), 1);
+        assert_eq!(d.get(0, 2), 1);
+        assert_eq!(d.get(1, 0), 1);
+        assert_eq!(d.total(), 5);
+    }
+
+    #[test]
+    fn priority_order_deduplicates() {
+        let s = SlotSchedule {
+            n: 2,
+            rounds: vec![
+                SlotRound {
+                    duration: 1,
+                    transfers: vec![(0, 1, 1)],
+                },
+                SlotRound {
+                    duration: 1,
+                    transfers: vec![(0, 1, 1)],
+                },
+            ],
+        };
+        assert_eq!(s.priority_order(), vec![(0, 1)]);
+    }
+}

@@ -1,0 +1,254 @@
+//! Slot-schedule validator — the machine-checkable statement of Theorem 4.2.
+//!
+//! A valid Aurora schedule must (a) never let a GPU send or receive two
+//! transfers in the same round (contention freedom), (b) deliver exactly the
+//! off-diagonal traffic of the input matrix (conservation), and (c) finish in
+//! exactly `b_max` tokens (optimality). Tests and property checks route every
+//! generated schedule through this validator.
+
+use super::slot::SlotSchedule;
+use crate::traffic::TrafficMatrix;
+use std::fmt;
+
+/// Why a slot schedule is invalid.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ValidationError {
+    /// A GPU sends twice in one round.
+    SenderConflict { round: usize, gpu: usize },
+    /// A GPU receives twice in one round.
+    ReceiverConflict { round: usize, gpu: usize },
+    /// A transfer carries more tokens than the round's duration.
+    OverlongTransfer {
+        round: usize,
+        src: usize,
+        dst: usize,
+        tokens: u64,
+        duration: u64,
+    },
+    /// A transfer has src == dst (local tokens must not be scheduled).
+    DiagonalTransfer { round: usize, gpu: usize },
+    /// Delivered traffic differs from the input matrix.
+    ConservationViolated {
+        src: usize,
+        dst: usize,
+        expected: u64,
+        delivered: u64,
+    },
+    /// Makespan differs from the Theorem 4.2 optimum.
+    NotOptimal { makespan: u64, b_max: u64 },
+}
+
+impl fmt::Display for ValidationError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::SenderConflict { round, gpu } => {
+                write!(f, "round {round}: GPU {gpu} sends twice")
+            }
+            Self::ReceiverConflict { round, gpu } => {
+                write!(f, "round {round}: GPU {gpu} receives twice")
+            }
+            Self::OverlongTransfer {
+                round,
+                src,
+                dst,
+                tokens,
+                duration,
+            } => write!(
+                f,
+                "round {round}: transfer {src}->{dst} has {tokens} tokens > duration {duration}"
+            ),
+            Self::DiagonalTransfer { round, gpu } => {
+                write!(f, "round {round}: diagonal transfer on GPU {gpu}")
+            }
+            Self::ConservationViolated {
+                src,
+                dst,
+                expected,
+                delivered,
+            } => write!(
+                f,
+                "flow {src}->{dst}: delivered {delivered} tokens, expected {expected}"
+            ),
+            Self::NotOptimal { makespan, b_max } => {
+                write!(f, "makespan {makespan} != b_max {b_max}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ValidationError {}
+
+/// Check contention freedom, conservation, and Theorem 4.2 optimality of an
+/// Aurora schedule for traffic matrix `d`.
+pub fn validate_slot_schedule(
+    d: &TrafficMatrix,
+    schedule: &SlotSchedule,
+) -> Result<(), ValidationError> {
+    let n = d.n();
+    assert_eq!(schedule.n, n, "schedule dimension mismatch");
+
+    for (k, round) in schedule.rounds.iter().enumerate() {
+        let mut sends = vec![false; n];
+        let mut recvs = vec![false; n];
+        for &(src, dst, tokens) in &round.transfers {
+            if src == dst {
+                return Err(ValidationError::DiagonalTransfer { round: k, gpu: src });
+            }
+            if sends[src] {
+                return Err(ValidationError::SenderConflict { round: k, gpu: src });
+            }
+            if recvs[dst] {
+                return Err(ValidationError::ReceiverConflict { round: k, gpu: dst });
+            }
+            sends[src] = true;
+            recvs[dst] = true;
+            if tokens > round.duration {
+                return Err(ValidationError::OverlongTransfer {
+                    round: k,
+                    src,
+                    dst,
+                    tokens,
+                    duration: round.duration,
+                });
+            }
+        }
+    }
+
+    let delivered = schedule.delivered();
+    for i in 0..n {
+        for j in 0..n {
+            if i == j {
+                continue;
+            }
+            if delivered.get(i, j) != d.get(i, j) {
+                return Err(ValidationError::ConservationViolated {
+                    src: i,
+                    dst: j,
+                    expected: d.get(i, j),
+                    delivered: delivered.get(i, j),
+                });
+            }
+        }
+    }
+
+    let makespan = schedule.makespan_tokens();
+    let b_max = d.b_max_tokens();
+    if makespan != b_max {
+        return Err(ValidationError::NotOptimal { makespan, b_max });
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::slot::SlotRound;
+
+    fn d2() -> TrafficMatrix {
+        let mut d = TrafficMatrix::zeros(2);
+        d.set(0, 1, 1);
+        d
+    }
+
+    #[test]
+    fn accepts_minimal_valid_schedule() {
+        let s = SlotSchedule {
+            n: 2,
+            rounds: vec![SlotRound {
+                duration: 1,
+                transfers: vec![(0, 1, 1)],
+            }],
+        };
+        validate_slot_schedule(&d2(), &s).unwrap();
+    }
+
+    #[test]
+    fn rejects_sender_conflict() {
+        let mut d = TrafficMatrix::zeros(3);
+        d.set(0, 1, 1);
+        d.set(0, 2, 1);
+        let s = SlotSchedule {
+            n: 3,
+            rounds: vec![SlotRound {
+                duration: 2,
+                transfers: vec![(0, 1, 1), (0, 2, 1)],
+            }],
+        };
+        assert!(matches!(
+            validate_slot_schedule(&d, &s),
+            Err(ValidationError::SenderConflict { .. })
+        ));
+    }
+
+    #[test]
+    fn rejects_receiver_conflict() {
+        let mut d = TrafficMatrix::zeros(3);
+        d.set(0, 2, 1);
+        d.set(1, 2, 1);
+        let s = SlotSchedule {
+            n: 3,
+            rounds: vec![SlotRound {
+                duration: 2,
+                transfers: vec![(0, 2, 1), (1, 2, 1)],
+            }],
+        };
+        assert!(matches!(
+            validate_slot_schedule(&d, &s),
+            Err(ValidationError::ReceiverConflict { .. })
+        ));
+    }
+
+    #[test]
+    fn rejects_undelivered_traffic() {
+        let s = SlotSchedule { n: 2, rounds: vec![] };
+        assert!(matches!(
+            validate_slot_schedule(&d2(), &s),
+            Err(ValidationError::ConservationViolated { .. })
+        ));
+    }
+
+    #[test]
+    fn rejects_suboptimal_makespan() {
+        let s = SlotSchedule {
+            n: 2,
+            rounds: vec![
+                SlotRound {
+                    duration: 1,
+                    transfers: vec![(0, 1, 1)],
+                },
+                SlotRound {
+                    duration: 5,
+                    transfers: vec![],
+                },
+            ],
+        };
+        assert!(matches!(
+            validate_slot_schedule(&d2(), &s),
+            Err(ValidationError::NotOptimal { .. })
+        ));
+    }
+
+    #[test]
+    fn rejects_diagonal_transfer() {
+        let s = SlotSchedule {
+            n: 2,
+            rounds: vec![SlotRound {
+                duration: 1,
+                transfers: vec![(0, 0, 1), (0, 1, 1)],
+            }],
+        };
+        assert!(matches!(
+            validate_slot_schedule(&d2(), &s),
+            Err(ValidationError::DiagonalTransfer { .. })
+        ));
+    }
+
+    #[test]
+    fn error_messages_render() {
+        let e = ValidationError::NotOptimal {
+            makespan: 5,
+            b_max: 3,
+        };
+        assert!(e.to_string().contains("b_max"));
+    }
+}

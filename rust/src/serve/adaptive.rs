@@ -1,0 +1,170 @@
+//! Adaptive replanning — the paper's §10 future-work direction, built as a
+//! first-class feature: watch the live expert-routing distribution drift away
+//! from the statistics the current plan was optimized for, and trigger a
+//! replan when the drift exceeds a threshold.
+//!
+//! Drift is measured as total-variation distance between the normalized
+//! expert-load histogram the plan was built on and the histogram observed in
+//! the current window. Q4 of the evaluation (Fig. 14) shows Aurora tolerates
+//! ≤ 75% imprecision with ≤ 15.8% degradation, so the default threshold
+//! (0.25) replans long before the plan decays materially.
+
+/// Decision returned by [`AdaptiveReplanner::observe`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplanDecision {
+    /// Keep the current plan.
+    Keep,
+    /// The routing distribution drifted past the threshold — replan.
+    Replan,
+}
+
+/// Watches expert-routing drift over fixed-size observation windows.
+#[derive(Debug, Clone)]
+pub struct AdaptiveReplanner {
+    /// Normalized expert distribution the current plan assumed.
+    baseline: Vec<f64>,
+    /// Total-variation threshold in `[0, 1]` that triggers a replan.
+    pub threshold: f64,
+    /// Tokens per observation window.
+    pub window_tokens: u64,
+    window: Vec<u64>,
+    window_total: u64,
+    replans: u64,
+}
+
+impl AdaptiveReplanner {
+    /// Start from the plan's assumed expert loads (unnormalized is fine).
+    pub fn new(plan_loads: &[u64], threshold: f64, window_tokens: u64) -> Self {
+        assert!(!plan_loads.is_empty());
+        assert!((0.0..=1.0).contains(&threshold));
+        assert!(window_tokens > 0);
+        Self {
+            baseline: normalize(plan_loads),
+            threshold,
+            window_tokens,
+            window: vec![0; plan_loads.len()],
+            window_total: 0,
+            replans: 0,
+        }
+    }
+
+    /// Defaults tuned to the Fig. 14 robustness envelope.
+    pub fn with_defaults(plan_loads: &[u64]) -> Self {
+        Self::new(plan_loads, 0.25, 4096)
+    }
+
+    /// Number of replans triggered so far.
+    pub fn replans(&self) -> u64 {
+        self.replans
+    }
+
+    /// Current drift of the (partial) window vs the baseline.
+    pub fn current_drift(&self) -> f64 {
+        if self.window_total == 0 {
+            return 0.0;
+        }
+        total_variation(&self.baseline, &normalize(&self.window))
+    }
+
+    /// Feed one batch's expert histogram. Returns [`ReplanDecision::Replan`]
+    /// when a full window has drifted past the threshold; the caller is then
+    /// expected to re-run the [`crate::planner::Planner`] on fresh statistics
+    /// and call [`AdaptiveReplanner::replanned`].
+    pub fn observe(&mut self, batch_histogram: &[u64]) -> ReplanDecision {
+        assert_eq!(batch_histogram.len(), self.window.len());
+        for (w, &h) in self.window.iter_mut().zip(batch_histogram) {
+            *w += h;
+        }
+        self.window_total += batch_histogram.iter().sum::<u64>();
+        if self.window_total < self.window_tokens {
+            return ReplanDecision::Keep;
+        }
+        let drift = total_variation(&self.baseline, &normalize(&self.window));
+        let decision = if drift > self.threshold {
+            ReplanDecision::Replan
+        } else {
+            ReplanDecision::Keep
+        };
+        // roll the window
+        self.window.iter_mut().for_each(|w| *w = 0);
+        self.window_total = 0;
+        decision
+    }
+
+    /// Adopt the distribution the new plan was built on.
+    pub fn replanned(&mut self, new_plan_loads: &[u64]) {
+        assert_eq!(new_plan_loads.len(), self.baseline.len());
+        self.baseline = normalize(new_plan_loads);
+        self.replans += 1;
+    }
+}
+
+fn normalize(counts: &[u64]) -> Vec<f64> {
+    let total: u64 = counts.iter().sum();
+    if total == 0 {
+        return vec![1.0 / counts.len() as f64; counts.len()];
+    }
+    counts.iter().map(|&c| c as f64 / total as f64).collect()
+}
+
+fn total_variation(p: &[f64], q: &[f64]) -> f64 {
+    0.5 * p.iter().zip(q).map(|(a, b)| (a - b).abs()).sum::<f64>()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stable_distribution_never_replans() {
+        let mut r = AdaptiveReplanner::new(&[10, 20, 30, 40], 0.2, 100);
+        for _ in 0..50 {
+            assert_eq!(r.observe(&[1, 2, 3, 4]), ReplanDecision::Keep);
+        }
+        assert_eq!(r.replans(), 0);
+    }
+
+    #[test]
+    fn strong_drift_triggers_replan_after_one_window() {
+        let mut r = AdaptiveReplanner::new(&[10, 10, 10, 10], 0.2, 40);
+        // all traffic suddenly routes to expert 0
+        let mut decisions = Vec::new();
+        for _ in 0..4 {
+            decisions.push(r.observe(&[10, 0, 0, 0]));
+        }
+        assert!(decisions.contains(&ReplanDecision::Replan));
+    }
+
+    #[test]
+    fn replanned_adopts_new_baseline() {
+        let mut r = AdaptiveReplanner::new(&[10, 10], 0.2, 20);
+        assert_eq!(r.observe(&[20, 0]), ReplanDecision::Replan);
+        r.replanned(&[20, 0]);
+        assert_eq!(r.replans(), 1);
+        // the drifted distribution is now the baseline: no more replans
+        assert_eq!(r.observe(&[20, 0]), ReplanDecision::Keep);
+    }
+
+    #[test]
+    fn drift_metric_bounds() {
+        let mut r = AdaptiveReplanner::new(&[5, 5], 0.5, 1000);
+        assert_eq!(r.current_drift(), 0.0);
+        r.observe(&[10, 0]);
+        let d = r.current_drift();
+        assert!((0.0..=1.0).contains(&d));
+        assert!((d - 0.5).abs() < 1e-12); // TV([0.5,0.5],[1,0]) = 0.5
+    }
+
+    #[test]
+    fn zero_window_distribution_is_uniform() {
+        let r = AdaptiveReplanner::with_defaults(&[0, 0, 0]);
+        assert_eq!(r.current_drift(), 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_histogram_panics() {
+        let mut r = AdaptiveReplanner::with_defaults(&[1, 2]);
+        r.observe(&[1, 2, 3]);
+    }
+}

@@ -1,0 +1,224 @@
+//! Dynamic batching: group requests up to a token budget or a deadline.
+//!
+//! Pure logic (no threads) so invariants are directly testable: the engine
+//! worker drives it with `push` / `flush_due`.
+
+use super::Request;
+use std::time::{Duration, Instant};
+
+/// Batching policy knobs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BatcherConfig {
+    /// Maximum total tokens per batch (bounded by the compiled capacity).
+    pub max_batch_tokens: usize,
+    /// Maximum number of requests per batch.
+    pub max_batch_requests: usize,
+    /// Maximum time the oldest request may wait before the batch is cut.
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        Self {
+            max_batch_tokens: 64,
+            max_batch_requests: 16,
+            max_wait: Duration::from_millis(2),
+        }
+    }
+}
+
+/// A cut batch: requests plus the arrival time of its oldest member.
+#[derive(Debug)]
+pub struct Batch {
+    /// The requests in arrival order.
+    pub requests: Vec<Request>,
+    /// Total token rows across requests.
+    pub total_tokens: usize,
+    /// Arrival instant of the oldest request (for queueing-latency metrics).
+    pub oldest_arrival: Instant,
+}
+
+/// Token-budgeted, deadline-bounded batcher.
+#[derive(Debug)]
+pub struct DynamicBatcher {
+    cfg: BatcherConfig,
+    pending: Vec<(Request, Instant)>,
+    pending_tokens: usize,
+}
+
+impl DynamicBatcher {
+    /// New empty batcher.
+    pub fn new(cfg: BatcherConfig) -> Self {
+        assert!(cfg.max_batch_tokens > 0 && cfg.max_batch_requests > 0);
+        Self {
+            cfg,
+            pending: Vec::new(),
+            pending_tokens: 0,
+        }
+    }
+
+    /// Number of queued requests.
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Add a request; returns a cut batch when a budget fills.
+    ///
+    /// A request larger than the whole token budget is rejected back to the
+    /// caller as `Err` (it can never be served by the compiled capacity).
+    pub fn push(&mut self, req: Request, now: Instant) -> Result<Option<Batch>, Request> {
+        if req.n_tokens > self.cfg.max_batch_tokens {
+            return Err(req);
+        }
+        // Cut *before* adding if this request would overflow the budget.
+        let would_overflow = self.pending_tokens + req.n_tokens > self.cfg.max_batch_tokens;
+        let mut cut = None;
+        if would_overflow && !self.pending.is_empty() {
+            cut = Some(self.cut());
+        }
+        self.pending_tokens += req.n_tokens;
+        self.pending.push((req, now));
+        if cut.is_none()
+            && (self.pending.len() >= self.cfg.max_batch_requests
+                || self.pending_tokens == self.cfg.max_batch_tokens)
+        {
+            cut = Some(self.cut());
+        }
+        Ok(cut)
+    }
+
+    /// Cut the current batch if the oldest request has waited past the
+    /// deadline (drives tail latency under light load).
+    pub fn flush_due(&mut self, now: Instant) -> Option<Batch> {
+        let oldest = self.pending.first().map(|(_, t)| *t)?;
+        if now.duration_since(oldest) >= self.cfg.max_wait {
+            Some(self.cut())
+        } else {
+            None
+        }
+    }
+
+    /// Unconditionally cut whatever is pending (used at shutdown).
+    pub fn flush_all(&mut self) -> Option<Batch> {
+        if self.pending.is_empty() {
+            None
+        } else {
+            Some(self.cut())
+        }
+    }
+
+    fn cut(&mut self) -> Batch {
+        let oldest_arrival = self.pending.first().map(|(_, t)| *t).unwrap();
+        let requests: Vec<Request> = self.pending.drain(..).map(|(r, _)| r).collect();
+        let total_tokens = requests.iter().map(|r| r.n_tokens).sum();
+        self.pending_tokens = 0;
+        Batch {
+            requests,
+            total_tokens,
+            oldest_arrival,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, n_tokens: usize) -> Request {
+        Request::new(id, vec![0.5; n_tokens * 4], 4)
+    }
+
+    fn cfg(tokens: usize, reqs: usize, wait_ms: u64) -> BatcherConfig {
+        BatcherConfig {
+            max_batch_tokens: tokens,
+            max_batch_requests: reqs,
+            max_wait: Duration::from_millis(wait_ms),
+        }
+    }
+
+    #[test]
+    fn cuts_when_token_budget_fills_exactly() {
+        let mut b = DynamicBatcher::new(cfg(8, 100, 1000));
+        let now = Instant::now();
+        assert!(b.push(req(1, 4), now).unwrap().is_none());
+        let batch = b.push(req(2, 4), now).unwrap().unwrap();
+        assert_eq!(batch.requests.len(), 2);
+        assert_eq!(batch.total_tokens, 8);
+        assert_eq!(b.pending_len(), 0);
+    }
+
+    #[test]
+    fn overflow_cuts_previous_batch_and_keeps_new_request() {
+        let mut b = DynamicBatcher::new(cfg(8, 100, 1000));
+        let now = Instant::now();
+        assert!(b.push(req(1, 6), now).unwrap().is_none());
+        let batch = b.push(req(2, 6), now).unwrap().unwrap();
+        assert_eq!(batch.requests.len(), 1);
+        assert_eq!(batch.requests[0].id, 1);
+        assert_eq!(b.pending_len(), 1); // request 2 waits for the next cut
+    }
+
+    #[test]
+    fn cuts_on_request_count() {
+        let mut b = DynamicBatcher::new(cfg(100, 3, 1000));
+        let now = Instant::now();
+        assert!(b.push(req(1, 1), now).unwrap().is_none());
+        assert!(b.push(req(2, 1), now).unwrap().is_none());
+        let batch = b.push(req(3, 1), now).unwrap().unwrap();
+        assert_eq!(batch.requests.len(), 3);
+    }
+
+    #[test]
+    fn deadline_flush() {
+        let mut b = DynamicBatcher::new(cfg(100, 100, 5));
+        let t0 = Instant::now();
+        assert!(b.push(req(1, 2), t0).unwrap().is_none());
+        assert!(b.flush_due(t0).is_none());
+        let later = t0 + Duration::from_millis(6);
+        let batch = b.flush_due(later).unwrap();
+        assert_eq!(batch.requests.len(), 1);
+        assert!(b.flush_due(later).is_none()); // empty now
+    }
+
+    #[test]
+    fn oversized_request_rejected() {
+        let mut b = DynamicBatcher::new(cfg(4, 10, 1));
+        let r = req(1, 8);
+        let back = b.push(r.clone(), Instant::now()).unwrap_err();
+        assert_eq!(back, r);
+        assert_eq!(b.pending_len(), 0);
+    }
+
+    #[test]
+    fn flush_all_drains() {
+        let mut b = DynamicBatcher::new(cfg(100, 100, 1000));
+        let now = Instant::now();
+        b.push(req(1, 1), now).unwrap();
+        b.push(req(2, 1), now).unwrap();
+        let batch = b.flush_all().unwrap();
+        assert_eq!(batch.requests.len(), 2);
+        assert!(b.flush_all().is_none());
+    }
+
+    #[test]
+    fn conservation_no_request_lost_or_duplicated() {
+        use crate::util::Rng;
+        let mut b = DynamicBatcher::new(cfg(16, 5, 1000));
+        let mut rng = Rng::new(42);
+        let now = Instant::now();
+        let mut seen = Vec::new();
+        for id in 0..200u64 {
+            let r = req(id, rng.gen_range(6) as usize + 1);
+            match b.push(r, now) {
+                Ok(Some(batch)) => seen.extend(batch.requests.iter().map(|r| r.id)),
+                Ok(None) => {}
+                Err(_) => unreachable!("sizes are within budget"),
+            }
+        }
+        if let Some(batch) = b.flush_all() {
+            seen.extend(batch.requests.iter().map(|r| r.id));
+        }
+        seen.sort();
+        assert_eq!(seen, (0..200u64).collect::<Vec<_>>());
+    }
+}

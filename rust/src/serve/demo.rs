@@ -1,0 +1,225 @@
+//! End-to-end serving demo: load the AOT model, serve batched requests
+//! through router + batcher + engine on a worker thread, report latency and
+//! throughput. This is the `aurora serve` subcommand and the
+//! `examples/serve_moe.rs` entry point.
+//!
+//! PJRT handles are not `Send`, so the engine worker thread owns the whole
+//! XLA stack (client, executables); only plain-data requests and responses
+//! cross the channel — which is also the honest architecture: one engine
+//! thread per device.
+
+use super::adaptive::{AdaptiveReplanner, ReplanDecision};
+use super::batcher::{Batch, BatcherConfig, DynamicBatcher};
+use super::engine::MoeEngine;
+use super::metrics::Metrics;
+use super::router::{RoutePolicy, Router};
+use super::{Request, Response};
+use crate::runtime::{MoeModel, MoeModelMeta, PjrtRuntime};
+use crate::schedule::SchedulePolicy;
+use crate::util::Rng;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// Run the serving demo: `n_requests` random requests, batched up to
+/// `batch_tokens`, against the artifacts in `artifacts_dir`.
+pub fn run_serving_demo(
+    artifacts_dir: &str,
+    n_requests: usize,
+    batch_tokens: usize,
+    policy: SchedulePolicy,
+) -> Result<()> {
+    // Read only the metadata on the main thread; the XLA stack lives in the
+    // worker.
+    let meta = MoeModelMeta::load(Path::new(artifacts_dir))?;
+    println!(
+        "model: {} experts, d_model {}, d_ff {}, capacity {} tokens",
+        meta.n_experts, meta.d_model, meta.d_ff, meta.capacity
+    );
+
+    let (tx, rx) = mpsc::channel::<(Request, Instant)>();
+    let (resp_tx, resp_rx) = mpsc::channel::<(Response, Instant, usize)>();
+    let dir = PathBuf::from(artifacts_dir);
+    let batch_cfg = BatcherConfig {
+        max_batch_tokens: batch_tokens.min(meta.capacity),
+        max_batch_requests: 64,
+        max_wait: Duration::from_millis(1),
+    };
+
+    let worker = std::thread::spawn(move || -> Result<Metrics> {
+        engine_worker(&dir, policy, batch_cfg, rx, resp_tx)
+    });
+
+    // Producer: random requests of 1-8 tokens each, routed through the
+    // (single-worker) router for accounting.
+    let mut router = Router::new(1, RoutePolicy::LeastLoaded);
+    let mut gen = Rng::new(0xD151);
+    for id in 0..n_requests as u64 {
+        let n_tokens = gen.gen_range(8) as usize + 1;
+        let tokens: Vec<f32> = (0..n_tokens * meta.d_model)
+            .map(|_| gen.gen_f64() as f32 - 0.5)
+            .collect();
+        let req = Request::new(id, tokens, meta.d_model);
+        let _worker_id = router.route(&req);
+        tx.send((req, Instant::now())).ok();
+    }
+    drop(tx);
+
+    // Collect responses.
+    let mut latencies = Metrics::new();
+    let mut received = 0usize;
+    while received < n_requests {
+        match resp_rx.recv_timeout(Duration::from_secs(60)) {
+            Ok((resp, submitted, n_tokens)) => {
+                latencies.record_request(submitted.elapsed(), n_tokens);
+                router.complete(0, n_tokens);
+                anyhow::ensure!(
+                    resp.output.iter().all(|v| v.is_finite()),
+                    "non-finite output for request {}",
+                    resp.id
+                );
+                received += 1;
+            }
+            Err(_) => anyhow::bail!("timed out waiting for responses ({received}/{n_requests})"),
+        }
+    }
+    let engine_metrics = worker.join().expect("worker panicked")?;
+
+    let s = latencies.latency_summary().unwrap();
+    println!("---- serving report ----");
+    println!("requests: {} (all completed, conservation OK)", s.count);
+    println!(
+        "batches: {} (mean {:.1} reqs/batch)",
+        engine_metrics.batches(),
+        engine_metrics.mean_batch_size()
+    );
+    println!(
+        "latency: mean {:?}  p50 {:?}  p95 {:?}  p99 {:?}  max {:?}",
+        s.mean, s.p50, s.p95, s.p99, s.max
+    );
+    println!(
+        "throughput: {:.0} tokens/s, {:.0} requests/s",
+        latencies.token_throughput(),
+        latencies.request_throughput()
+    );
+    Ok(())
+}
+
+/// The engine worker: owns PJRT, batches incoming requests, executes, and
+/// streams responses back with their submission timestamps.
+fn engine_worker(
+    artifacts_dir: &Path,
+    policy: SchedulePolicy,
+    batch_cfg: BatcherConfig,
+    rx: mpsc::Receiver<(Request, Instant)>,
+    resp_tx: mpsc::Sender<(Response, Instant, usize)>,
+) -> Result<Metrics> {
+    let rt = PjrtRuntime::cpu().context("PJRT startup")?;
+    println!("PJRT platform: {}", rt.platform());
+    let model = MoeModel::load(&rt, artifacts_dir)?;
+    let d_model = model.meta.d_model;
+    let mut engine = MoeEngine::new(model, policy);
+
+    // Cross-check split dispatch vs the fused artifact before serving.
+    let mut rng = Rng::new(7);
+    let probe: Vec<f32> = (0..8 * d_model)
+        .map(|_| rng.gen_f64() as f32 - 0.5)
+        .collect();
+    let max_diff = engine.validate_against_fused(&probe, 8)?;
+    println!("split-vs-fused max |diff| on probe batch: {max_diff:.2e}");
+    anyhow::ensure!(
+        max_diff < 1e-4,
+        "split dispatch diverges from the fused layer"
+    );
+
+    let mut batcher = DynamicBatcher::new(batch_cfg);
+    let mut metrics = Metrics::new();
+    // Adaptive replanning (§10 future work, built in): watch routing drift
+    // vs the uniform prior the initial expert order assumed.
+    let mut replanner = AdaptiveReplanner::new(
+        &vec![1; engine.meta().n_experts],
+        0.25,
+        256,
+    );
+
+    // Arrival timestamps ride alongside requests keyed by id.
+    let mut arrivals: std::collections::HashMap<u64, Instant> = std::collections::HashMap::new();
+
+    let execute = |engine: &mut MoeEngine,
+                       metrics: &mut Metrics,
+                       arrivals: &mut std::collections::HashMap<u64, Instant>,
+                       replanner: &mut AdaptiveReplanner,
+                       batch: Batch|
+     -> Result<()> {
+        metrics.record_batch(batch.requests.len());
+        let sizes: Vec<(u64, usize)> = batch
+            .requests
+            .iter()
+            .map(|r| (r.id, r.n_tokens))
+            .collect();
+        let stats_before = engine.expert_stats.clone();
+        let responses = engine.run_batch(&batch)?;
+        let batch_hist: Vec<u64> = engine
+            .expert_stats
+            .iter()
+            .zip(&stats_before)
+            .map(|(a, b)| a - b)
+            .collect();
+        if replanner.observe(&batch_hist) == ReplanDecision::Replan {
+            // re-anchor on the full history (the planner's new statistics)
+            replanner.replanned(&engine.expert_stats.clone());
+            println!(
+                "adaptive replan #{}: routing drifted; new expert order {:?}",
+                replanner.replans(),
+                engine.expert_order
+            );
+        }
+        for (resp, (id, n_tokens)) in responses.into_iter().zip(sizes) {
+            debug_assert_eq!(resp.id, id);
+            let submitted = arrivals.remove(&id).unwrap_or_else(Instant::now);
+            resp_tx.send((resp, submitted, n_tokens)).ok();
+        }
+        Ok(())
+    };
+
+    loop {
+        match rx.recv_timeout(Duration::from_millis(1)) {
+            Ok((req, arrived)) => {
+                arrivals.insert(req.id, arrived);
+                match batcher.push(req, arrived) {
+                    Ok(Some(batch)) => execute(&mut engine, &mut metrics, &mut arrivals, &mut replanner, batch)?,
+                    Ok(None) => {}
+                    Err(oversized) => {
+                        arrivals.remove(&oversized.id);
+                        eprintln!(
+                            "rejecting oversized request {} ({} tokens > capacity)",
+                            oversized.id, oversized.n_tokens
+                        );
+                    }
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                if let Some(batch) = batcher.flush_due(Instant::now()) {
+                    execute(&mut engine, &mut metrics, &mut arrivals, &mut replanner, batch)?;
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                if let Some(batch) = batcher.flush_all() {
+                    execute(&mut engine, &mut metrics, &mut arrivals, &mut replanner, batch)?;
+                }
+                break;
+            }
+        }
+    }
+    println!(
+        "expert token histogram (historical stats): {:?}",
+        engine.expert_stats
+    );
+    println!(
+        "final expert order ({}): {:?}",
+        policy.name(),
+        engine.expert_order
+    );
+    Ok(metrics)
+}

@@ -1,0 +1,161 @@
+//! Serving metrics: latency percentiles and throughput.
+
+use std::time::{Duration, Instant};
+
+/// Percentile summary of recorded latencies.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LatencySummary {
+    /// Sample count.
+    pub count: usize,
+    /// Mean latency.
+    pub mean: Duration,
+    /// Median.
+    pub p50: Duration,
+    /// 95th percentile.
+    pub p95: Duration,
+    /// 99th percentile.
+    pub p99: Duration,
+    /// Max.
+    pub max: Duration,
+}
+
+/// Accumulates per-request latency and token counts.
+#[derive(Debug)]
+pub struct Metrics {
+    start: Instant,
+    latencies: Vec<Duration>,
+    tokens: u64,
+    batches: u64,
+    batch_sizes: Vec<usize>,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    /// Start the clock.
+    pub fn new() -> Self {
+        Self {
+            start: Instant::now(),
+            latencies: Vec::new(),
+            tokens: 0,
+            batches: 0,
+            batch_sizes: Vec::new(),
+        }
+    }
+
+    /// Record one completed request.
+    pub fn record_request(&mut self, latency: Duration, tokens: usize) {
+        self.latencies.push(latency);
+        self.tokens += tokens as u64;
+    }
+
+    /// Record one executed batch.
+    pub fn record_batch(&mut self, n_requests: usize) {
+        self.batches += 1;
+        self.batch_sizes.push(n_requests);
+    }
+
+    /// Completed request count.
+    pub fn requests(&self) -> usize {
+        self.latencies.len()
+    }
+
+    /// Executed batch count.
+    pub fn batches(&self) -> u64 {
+        self.batches
+    }
+
+    /// Mean requests per batch.
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batch_sizes.is_empty() {
+            0.0
+        } else {
+            self.batch_sizes.iter().sum::<usize>() as f64 / self.batch_sizes.len() as f64
+        }
+    }
+
+    /// Tokens per second since start.
+    pub fn token_throughput(&self) -> f64 {
+        let secs = self.start.elapsed().as_secs_f64();
+        if secs > 0.0 {
+            self.tokens as f64 / secs
+        } else {
+            0.0
+        }
+    }
+
+    /// Requests per second since start.
+    pub fn request_throughput(&self) -> f64 {
+        let secs = self.start.elapsed().as_secs_f64();
+        if secs > 0.0 {
+            self.latencies.len() as f64 / secs
+        } else {
+            0.0
+        }
+    }
+
+    /// Latency percentile summary. Returns `None` with no samples.
+    pub fn latency_summary(&self) -> Option<LatencySummary> {
+        if self.latencies.is_empty() {
+            return None;
+        }
+        let mut xs = self.latencies.clone();
+        xs.sort();
+        let pct = |p: f64| xs[((xs.len() as f64 - 1.0) * p).round() as usize];
+        let mean = xs.iter().sum::<Duration>() / xs.len() as u32;
+        Some(LatencySummary {
+            count: xs.len(),
+            mean,
+            p50: pct(0.50),
+            p95: pct(0.95),
+            p99: pct(0.99),
+            max: *xs.last().unwrap(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_metrics_have_no_summary() {
+        let m = Metrics::new();
+        assert!(m.latency_summary().is_none());
+        assert_eq!(m.requests(), 0);
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let mut m = Metrics::new();
+        for i in 1..=100u64 {
+            m.record_request(Duration::from_micros(i * 10), 4);
+        }
+        let s = m.latency_summary().unwrap();
+        assert_eq!(s.count, 100);
+        assert!(s.p50 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max);
+        assert_eq!(s.max, Duration::from_micros(1000));
+    }
+
+    #[test]
+    fn batch_accounting() {
+        let mut m = Metrics::new();
+        m.record_batch(4);
+        m.record_batch(8);
+        assert_eq!(m.batches(), 2);
+        assert!((m.mean_batch_size() - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn throughput_positive_after_records() {
+        let mut m = Metrics::new();
+        m.record_request(Duration::from_micros(5), 16);
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(m.token_throughput() > 0.0);
+        assert!(m.request_throughput() > 0.0);
+    }
+}

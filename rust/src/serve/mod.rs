@@ -1,0 +1,67 @@
+//! Serving runtime: request router, dynamic batcher, MoE engine, metrics.
+//!
+//! The L3 coordinator that a deployment would actually run. Requests flow
+//!
+//! ```text
+//! client → Router → per-worker queue → DynamicBatcher → MoeEngine (PJRT)
+//!                                                         └→ Metrics
+//! ```
+//!
+//! The engine executes the AOT-compiled JAX/Pallas artifacts
+//! ([`crate::runtime::MoeModel`]) with rust-side sparse dispatch, visiting
+//! experts in the deployment plan's transmission order. Gate statistics are
+//! recorded per batch and can be folded back into the planner — closing the
+//! paper's "historical statistics" loop (§2.4).
+//!
+//! Concurrency is std::thread + mpsc (the offline build has no tokio); the
+//! demo ([`demo`]) wires one engine worker, which is the right shape for the
+//! single-CPU-host testbed.
+
+pub mod adaptive;
+pub mod batcher;
+pub mod demo;
+pub mod engine;
+pub mod metrics;
+pub mod router;
+
+pub use adaptive::{AdaptiveReplanner, ReplanDecision};
+pub use batcher::{Batch, BatcherConfig, DynamicBatcher};
+pub use engine::{expert_execution_order, MoeEngine};
+pub use metrics::{LatencySummary, Metrics};
+pub use router::Router;
+
+/// A serving request: a few tokens of `d_model` features.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    /// Caller-assigned id (unique per run).
+    pub id: u64,
+    /// Flattened `[n_tokens, d_model]` activations.
+    pub tokens: Vec<f32>,
+    /// Number of token rows.
+    pub n_tokens: usize,
+}
+
+impl Request {
+    /// Construct, checking the shape invariant.
+    pub fn new(id: u64, tokens: Vec<f32>, d_model: usize) -> Request {
+        assert!(
+            !tokens.is_empty() && tokens.len() % d_model == 0,
+            "request tokens must be a non-empty multiple of d_model"
+        );
+        let n_tokens = tokens.len() / d_model;
+        Request {
+            id,
+            tokens,
+            n_tokens,
+        }
+    }
+}
+
+/// A completed response.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Response {
+    /// Request id.
+    pub id: u64,
+    /// Flattened `[n_tokens, d_model]` layer output.
+    pub output: Vec<f32>,
+}

@@ -1,0 +1,140 @@
+//! Request router: spread requests across engine workers.
+//!
+//! The single-host demo runs one worker, but the router is written (and
+//! tested) for `R` replicas with two policies: round-robin and
+//! least-outstanding-tokens — the shape a multi-replica deployment of
+//! colocated models needs.
+
+use super::Request;
+
+/// Routing policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Cycle through workers.
+    RoundRobin,
+    /// Send to the worker with the fewest outstanding tokens.
+    LeastLoaded,
+}
+
+/// Router over `R` worker queues.
+#[derive(Debug)]
+pub struct Router {
+    policy: RoutePolicy,
+    outstanding_tokens: Vec<usize>,
+    next_rr: usize,
+    routed: u64,
+}
+
+impl Router {
+    /// Router over `workers` queues.
+    pub fn new(workers: usize, policy: RoutePolicy) -> Self {
+        assert!(workers > 0);
+        Self {
+            policy,
+            outstanding_tokens: vec![0; workers],
+            next_rr: 0,
+            routed: 0,
+        }
+    }
+
+    /// Number of workers.
+    pub fn workers(&self) -> usize {
+        self.outstanding_tokens.len()
+    }
+
+    /// Total requests routed so far.
+    pub fn routed(&self) -> u64 {
+        self.routed
+    }
+
+    /// Pick a worker for `req` and account its load.
+    pub fn route(&mut self, req: &Request) -> usize {
+        let w = match self.policy {
+            RoutePolicy::RoundRobin => {
+                let w = self.next_rr;
+                self.next_rr = (self.next_rr + 1) % self.workers();
+                w
+            }
+            RoutePolicy::LeastLoaded => self
+                .outstanding_tokens
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, &t)| t)
+                .map(|(i, _)| i)
+                .unwrap(),
+        };
+        self.outstanding_tokens[w] += req.n_tokens;
+        self.routed += 1;
+        w
+    }
+
+    /// Report a batch completion on worker `w` freeing `tokens`.
+    pub fn complete(&mut self, w: usize, tokens: usize) {
+        assert!(
+            self.outstanding_tokens[w] >= tokens,
+            "completing more tokens than outstanding"
+        );
+        self.outstanding_tokens[w] -= tokens;
+    }
+
+    /// Current outstanding token counts (for observability).
+    pub fn load(&self) -> &[usize] {
+        &self.outstanding_tokens
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, n: usize) -> Request {
+        Request::new(id, vec![0.0; n * 2], 2)
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut r = Router::new(3, RoutePolicy::RoundRobin);
+        let picks: Vec<usize> = (0..6).map(|i| r.route(&req(i, 1))).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+        assert_eq!(r.routed(), 6);
+    }
+
+    #[test]
+    fn least_loaded_balances_tokens() {
+        let mut r = Router::new(2, RoutePolicy::LeastLoaded);
+        assert_eq!(r.route(&req(0, 10)), 0);
+        // next goes to worker 1 (0 tokens < 10)
+        assert_eq!(r.route(&req(1, 1)), 1);
+        // worker 1 still lighter
+        assert_eq!(r.route(&req(2, 1)), 1);
+        assert_eq!(r.load(), &[10, 2]);
+    }
+
+    #[test]
+    fn completion_frees_load() {
+        let mut r = Router::new(2, RoutePolicy::LeastLoaded);
+        r.route(&req(0, 8));
+        r.complete(0, 8);
+        assert_eq!(r.load(), &[0, 0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn over_completion_panics() {
+        let mut r = Router::new(1, RoutePolicy::RoundRobin);
+        r.complete(0, 5);
+    }
+
+    #[test]
+    fn conservation_every_request_routed_once() {
+        let mut r = Router::new(4, RoutePolicy::LeastLoaded);
+        let mut per_worker = vec![0u64; 4];
+        for i in 0..100 {
+            per_worker[r.route(&req(i, (i % 7 + 1) as usize))] += 1;
+        }
+        assert_eq!(per_worker.iter().sum::<u64>(), 100);
+        assert_eq!(r.routed(), 100);
+        // least-loaded should not starve any worker
+        assert!(per_worker.iter().all(|&c| c > 0));
+    }
+}

@@ -1,0 +1,279 @@
+//! Colocated scenarios (paper §6, §7): two models interleaving per GPU.
+//!
+//! Implements the Table 2 start/end recurrences. Both models' stats must
+//! already be GPU-indexed (pairing + assignment applied via
+//! [`MoeLayerStats::placed`]); GPU `i` hosts one expert of each model.
+//!
+//! The execution semantics (paper §6.1):
+//! * **Computation competition** — the two models' compute components
+//!   serialize on each GPU (one compute engine per GPU);
+//! * **Communication overlap** — the two models' collectives may share the
+//!   switch, so the completion of the second model's dispatch is the
+//!   *aggregated* communication time `|N̄ᵃ⁺ᵇ|` of the summed traffic matrix,
+//!   not the sum of individual times.
+//!
+//! The steady-state layer pipeline (Fig. 7) interleaves: `G^b ∥ N^a`, then
+//! `F^a ∥ N^b`, then `F^b ∥ C^a`, then `A^a ∥ C^b`, then `A^b`, then `G^a`.
+
+use super::stats::MoeLayerStats;
+use super::SimResult;
+use crate::cluster::Cluster;
+use crate::schedule::{comm_time, SchedulePolicy};
+
+/// The Table 2 component end times (ms), all measured from the layer start.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ColocatedBreakdown {
+    /// End of Model b's gate (`E_{G^b}`).
+    pub e_gate_b: f64,
+    /// End of Model a's first all-to-all alone (`E_{N^a} = |N̄^a|`).
+    pub e_n_a: f64,
+    /// End of Model a's FFN (`E_{F^a}`).
+    pub e_f_a: f64,
+    /// End of Model b's first all-to-all (`E_{N^b} = |N̄^{a+b}|`).
+    pub e_n_b: f64,
+    /// End of Model b's FFN (`E_{F^b}`).
+    pub e_f_b: f64,
+    /// End of Model a's second all-to-all (`E_{C^a}`).
+    pub e_c_a: f64,
+    /// End of Model a's aggregation (`E_{A^a}`).
+    pub e_a_a: f64,
+    /// End of Model b's second all-to-all (`E_{C^b}`).
+    pub e_c_b: f64,
+    /// End of Model b's aggregation (`E_{A^b}`).
+    pub e_a_b: f64,
+    /// Layer end (`E_{A^b} + |G^a|`, Eqn. 4).
+    pub end: f64,
+    /// Aggregated first-all-to-all makespan of the summed traffic.
+    pub agg_comm1_ms: f64,
+    /// Aggregated second-all-to-all makespan.
+    pub agg_comm2_ms: f64,
+}
+
+/// Simulate one layer of two colocated MoE models (both GPU-indexed) on
+/// `cluster` under `policy`, following the Table 2 recurrences.
+pub fn simulate_colocated(
+    a: &MoeLayerStats,
+    b: &MoeLayerStats,
+    cluster: &Cluster,
+    policy: SchedulePolicy,
+) -> (SimResult, ColocatedBreakdown) {
+    let n = a.n_experts();
+    assert_eq!(n, b.n_experts(), "colocated models span the same GPUs");
+    assert_eq!(n, cluster.len());
+    let bw = cluster.bandwidths();
+
+    let scale = |base: f64, g: usize| base / cluster.gpu(g).flops_scale;
+    let max = |v: &[f64]| v.iter().copied().fold(0.0, f64::max);
+
+    let gate_a: Vec<f64> = (0..n).map(|g| scale(a.gate_ms, g)).collect();
+    let gate_b: Vec<f64> = (0..n).map(|g| scale(b.gate_ms, g)).collect();
+    let loads_a = a.expert_loads();
+    let loads_b = b.expert_loads();
+    let ffn_a: Vec<f64> = (0..n)
+        .map(|g| scale(loads_a[g] as f64 * a.ffn_ms_per_token, g))
+        .collect();
+    let ffn_b: Vec<f64> = (0..n)
+        .map(|g| scale(loads_b[g] as f64 * b.ffn_ms_per_token, g))
+        .collect();
+    let agg_a: Vec<f64> = (0..n).map(|g| scale(a.agg_ms, g)).collect();
+    let agg_b: Vec<f64> = (0..n).map(|g| scale(b.agg_ms, g)).collect();
+
+    // Communication makespans under the chosen policy.
+    let n_a = comm_time(&a.traffic, &bw, policy).makespan;
+    let n_b = comm_time(&b.traffic, &bw, policy).makespan;
+    let c_a = comm_time(&a.traffic.transpose(), &bw, policy).makespan;
+    let c_b = comm_time(&b.traffic.transpose(), &bw, policy).makespan;
+    let agg_n = comm_time(&a.traffic.sum(&b.traffic), &bw, policy).makespan;
+    let agg_c = comm_time(
+        &a.traffic.transpose().sum(&b.traffic.transpose()),
+        &bw,
+        policy,
+    )
+    .makespan;
+
+    // Table 2 recurrences.
+    let e_gate_b = max(&gate_b);
+    let e_n_a = n_a;
+    // F^a needs: its own dispatch done (N^a) and the GPU free (G^b done).
+    let e_f_a = e_gate_b.max(e_n_a) + max(&ffn_a);
+    // N^b: starts after G^b; shares the switch with N^a — the pair completes
+    // at the aggregated makespan (footnote 4 adds the G^b start constraint).
+    let e_n_b = agg_n.max(e_gate_b + n_b);
+    // F^b: GPU busy with F^a until e_f_a; data ready at e_n_b.
+    let e_f_b = e_f_a.max(e_n_b) + max(&ffn_b);
+    // C^a: starts once F^a is done and the switch has drained the N phase
+    // (§6.2: N^a and C^a are separated by F^a, so |N̄+C^a| = |N̄| + |C̄^a|).
+    let e_c_a = e_f_a.max(e_n_b) + c_a;
+    // A^a: GPU busy with F^b; data ready at E_{C^a}.
+    let e_a_a = e_f_b.max(e_c_a) + max(&agg_a);
+    // C^b: needs F^b done; the C phase in aggregate cannot beat the
+    // aggregated makespan of both reversed collectives.
+    let e_c_b = (e_f_b + c_b).max(e_f_a.max(e_n_b) + agg_c);
+    // A^b: GPU busy with A^a; data ready at E_{C^b}.
+    let e_a_b = e_a_a.max(e_c_b) + max(&agg_b);
+    // Next layer's G^a closes the pipeline round (Eqn. 4).
+    let end = e_a_b + max(&gate_a);
+
+    let per_gpu_compute: Vec<f64> = (0..n)
+        .map(|g| gate_a[g] + ffn_a[g] + agg_a[g] + gate_b[g] + ffn_b[g] + agg_b[g])
+        .collect();
+    let utilization = if end > 0.0 {
+        per_gpu_compute.iter().sum::<f64>() / n as f64 / end
+    } else {
+        0.0
+    };
+
+    let breakdown = ColocatedBreakdown {
+        e_gate_b,
+        e_n_a,
+        e_f_a,
+        e_n_b,
+        e_f_b,
+        e_c_a,
+        e_a_a,
+        e_c_b,
+        e_a_b,
+        end,
+        agg_comm1_ms: agg_n,
+        agg_comm2_ms: agg_c,
+    };
+    (
+        SimResult {
+            inference_ms: end,
+            utilization,
+            comm_ms: agg_n + agg_c,
+        },
+        breakdown,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::simulate_exclusive;
+    use crate::traffic::TrafficMatrix;
+    use crate::util::Rng;
+
+    fn toy(n: usize, seed: u64, ffn_ms: f64) -> MoeLayerStats {
+        let mut rng = Rng::new(seed);
+        let mut d = TrafficMatrix::zeros(n);
+        for i in 0..n {
+            for j in 0..n {
+                if i != j {
+                    d.set(i, j, rng.gen_range(15) + 1);
+                }
+            }
+        }
+        MoeLayerStats {
+            traffic: d,
+            gate_ms: 0.2,
+            ffn_ms_per_token: ffn_ms,
+            agg_ms: 0.1,
+        }
+    }
+
+    #[test]
+    fn timeline_is_monotone() {
+        let a = toy(6, 1, 0.05);
+        let b = toy(6, 2, 0.05);
+        let c = Cluster::homogeneous(6, 1.0);
+        let (_, t) = simulate_colocated(&a, &b, &c, SchedulePolicy::Aurora);
+        assert!(t.e_f_a >= t.e_n_a);
+        assert!(t.e_f_a >= t.e_gate_b);
+        assert!(t.e_n_b >= t.e_n_a); // aggregated comm >= model a's alone
+        assert!(t.e_f_b >= t.e_f_a);
+        assert!(t.e_c_a >= t.e_f_a);
+        assert!(t.e_a_a >= t.e_f_b && t.e_a_a >= t.e_c_a);
+        assert!(t.e_c_b >= t.e_f_b);
+        assert!(t.e_a_b >= t.e_a_a && t.e_a_b >= t.e_c_b);
+        assert!(t.end >= t.e_a_b);
+    }
+
+    #[test]
+    fn colocated_slower_than_exclusive_but_faster_than_serial() {
+        for seed in 0..10 {
+            let a = toy(8, seed * 3 + 1, 0.04);
+            let b = toy(8, seed * 3 + 2, 0.04);
+            let c = Cluster::homogeneous(8, 1.0);
+            let (ra, _) = simulate_exclusive(&a, &c, SchedulePolicy::Aurora);
+            let (rb, _) = simulate_exclusive(&b, &c, SchedulePolicy::Aurora);
+            let (rc, _) = simulate_colocated(&a, &b, &c, SchedulePolicy::Aurora);
+            // sharing cannot beat a dedicated cluster for either model
+            assert!(rc.inference_ms >= ra.inference_ms.max(rb.inference_ms) - 1e-9);
+            // but interleaving beats running the two layers back-to-back
+            assert!(
+                rc.inference_ms <= ra.inference_ms + rb.inference_ms + 1e-9,
+                "seed={seed}: colocated {} vs serial {}",
+                rc.inference_ms,
+                ra.inference_ms + rb.inference_ms
+            );
+        }
+    }
+
+    #[test]
+    fn colocation_roughly_doubles_utilization() {
+        // paper regime: compute and communication are comparable (§2.3 puts
+        // all-to-all at ~60% of inference time)
+        let a = toy(8, 11, 1.0);
+        let b = toy(8, 12, 1.0);
+        let c = Cluster::homogeneous(8, 1.0);
+        let (re, _) = simulate_exclusive(&a, &c, SchedulePolicy::Aurora);
+        let (rc, _) = simulate_colocated(&a, &b, &c, SchedulePolicy::Aurora);
+        assert!(
+            rc.utilization > re.utilization * 1.2,
+            "colocated {} vs exclusive {}",
+            rc.utilization,
+            re.utilization
+        );
+    }
+
+    #[test]
+    fn aurora_pairing_no_worse_than_random_on_aggregated_comm() {
+        use crate::colocation::{aggregate_traffic, case2_pairing, random_pairing};
+        let mut rng = Rng::new(0xAB);
+        for seed in 0..5u64 {
+            let a = toy(8, 50 + seed, 0.02);
+            let b = toy(8, 60 + seed, 0.02);
+            let c = Cluster::homogeneous(8, 1.0);
+            let (_, pi) = case2_pairing(&a.traffic, &b.traffic);
+            // place model b's experts next to their partners
+            let mut inv = vec![0usize; 8];
+            for (i, &j) in pi.iter().enumerate() {
+                inv[j] = i;
+            }
+            let b_placed = b.placed(&inv);
+            let (r_aurora, t_aurora) =
+                simulate_colocated(&a, &b_placed, &c, SchedulePolicy::Aurora);
+            // sanity: aggregated matrix matches the helper
+            assert_eq!(
+                aggregate_traffic(&a.traffic, &b.traffic, &pi).b_max_tokens() as f64,
+                t_aurora.agg_comm1_ms
+            );
+            for _ in 0..20 {
+                let p = random_pairing(8, &mut rng);
+                let mut pinv = vec![0usize; 8];
+                for (i, &j) in p.iter().enumerate() {
+                    pinv[j] = i;
+                }
+                let (r_rand, _) =
+                    simulate_colocated(&a, &b.placed(&pinv), &c, SchedulePolicy::Aurora);
+                assert!(r_aurora.inference_ms <= r_rand.inference_ms + 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_traffic_still_serializes_compute() {
+        let mk = || MoeLayerStats {
+            traffic: TrafficMatrix::zeros(4),
+            gate_ms: 1.0,
+            ffn_ms_per_token: 0.0,
+            agg_ms: 1.0,
+        };
+        let c = Cluster::homogeneous(4, 1.0);
+        let (r, t) = simulate_colocated(&mk(), &mk(), &c, SchedulePolicy::Aurora);
+        // G^b(1) -> F(0) -> A^a after F^b ... both agg 1ms each, final gate 1ms
+        assert!(t.end > 0.0);
+        assert_eq!(r.comm_ms, 0.0);
+    }
+}

@@ -1,0 +1,400 @@
+//! Discrete-event cross-validation of the closed-form timelines.
+//!
+//! The exclusive layer model (Eqn. 3) and the colocated Table 2 recurrences
+//! are *analytic*; this module executes the same layer as an explicit
+//! discrete-event simulation — tasks with dependencies competing for per-GPU
+//! compute engines and a shared barrier-synchronized network — and the test
+//! suite asserts the two agree. It also exposes the per-GPU busy intervals
+//! that back the utilization metric.
+//!
+//! Execution semantics (paper §2.2, §6.1):
+//! * each GPU has **one compute engine**; compute tasks of colocated models
+//!   serialize on it in dependency order;
+//! * each all-to-all is a **synchronous collective**: it starts when all of
+//!   its producer tasks finished and occupies the switch for its makespan
+//!   (from [`crate::schedule::comm_time`]); collectives of *different*
+//!   models may overlap, but a model's own collectives are ordered;
+//! * a phase's consumers start only when the collective completes (the
+//!   non-overlap constraint within a model).
+
+use crate::cluster::Cluster;
+use crate::schedule::{comm_time, SchedulePolicy};
+use crate::sim::MoeLayerStats;
+
+/// One simulated task's execution record.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskTrace {
+    /// Task label (e.g. `"F^a@3"` or `"N^b"`).
+    pub label: String,
+    /// Start time (ms).
+    pub start: f64,
+    /// End time (ms).
+    pub end: f64,
+}
+
+/// Result of an event-driven layer execution.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EventSimResult {
+    /// Layer completion time (ms).
+    pub makespan: f64,
+    /// Per-GPU total compute-busy time (ms) — drives utilization.
+    pub compute_busy: Vec<f64>,
+    /// Every executed task, in completion order.
+    pub tasks: Vec<TaskTrace>,
+}
+
+/// Per-GPU compute engine availability.
+struct Engines {
+    free_at: Vec<f64>,
+    busy: Vec<f64>,
+}
+
+impl Engines {
+    fn new(n: usize) -> Self {
+        Self {
+            free_at: vec![0.0; n],
+            busy: vec![0.0; n],
+        }
+    }
+
+    /// Run a compute task of `dur` on GPU `g`, ready at `ready`. Returns the
+    /// task's end time.
+    fn run(&mut self, g: usize, ready: f64, dur: f64) -> f64 {
+        let start = self.free_at[g].max(ready);
+        let end = start + dur;
+        self.free_at[g] = end;
+        self.busy[g] += dur;
+        end
+    }
+}
+
+/// Event-driven execution of one **exclusive** MoE layer (stats GPU-indexed).
+pub fn event_sim_exclusive(
+    stats: &MoeLayerStats,
+    cluster: &Cluster,
+    policy: SchedulePolicy,
+) -> EventSimResult {
+    let n = stats.n_experts();
+    assert_eq!(n, cluster.len());
+    let bw = cluster.bandwidths();
+    let mut engines = Engines::new(n);
+    let mut tasks = Vec::new();
+
+    let loads = stats.expert_loads();
+    let gate_end: Vec<f64> = (0..n)
+        .map(|g| {
+            let end = engines.run(g, 0.0, stats.gate_ms / cluster.gpu(g).flops_scale);
+            tasks.push(TaskTrace {
+                label: format!("G@{g}"),
+                start: end - stats.gate_ms / cluster.gpu(g).flops_scale,
+                end,
+            });
+            end
+        })
+        .collect();
+
+    // First all-to-all: synchronous collective after every gate finishes.
+    let n_ready = gate_end.iter().cloned().fold(0.0, f64::max);
+    let comm1 = comm_time(&stats.traffic, &bw, policy);
+    let n_end = n_ready + comm1.makespan;
+    tasks.push(TaskTrace {
+        label: "N".into(),
+        start: n_ready,
+        end: n_end,
+    });
+
+    // FFN per GPU after the collective completes.
+    let ffn_end: Vec<f64> = (0..n)
+        .map(|g| {
+            let dur = loads[g] as f64 * stats.ffn_ms_per_token / cluster.gpu(g).flops_scale;
+            let end = engines.run(g, n_end, dur);
+            tasks.push(TaskTrace {
+                label: format!("F@{g}"),
+                start: end - dur,
+                end,
+            });
+            end
+        })
+        .collect();
+
+    // Second all-to-all (reversed), then aggregation.
+    let c_ready = ffn_end.iter().cloned().fold(0.0, f64::max);
+    let comm2 = comm_time(&stats.traffic.transpose(), &bw, policy);
+    let c_end = c_ready + comm2.makespan;
+    tasks.push(TaskTrace {
+        label: "C".into(),
+        start: c_ready,
+        end: c_end,
+    });
+
+    let agg_end: Vec<f64> = (0..n)
+        .map(|g| {
+            let dur = stats.agg_ms / cluster.gpu(g).flops_scale;
+            let end = engines.run(g, c_end, dur);
+            tasks.push(TaskTrace {
+                label: format!("A@{g}"),
+                start: end - dur,
+                end,
+            });
+            end
+        })
+        .collect();
+
+    EventSimResult {
+        makespan: agg_end.iter().cloned().fold(0.0, f64::max),
+        compute_busy: engines.busy,
+        tasks,
+    }
+}
+
+/// Event-driven execution of one **colocated** layer pair (both GPU-indexed),
+/// following the Fig. 7 interleaving: `G^b ∥ N^a`, `F^a ∥ N^b`, `F^b ∥ C^a`,
+/// `A^a ∥ C^b`, `A^b`, closing with `G^a`.
+pub fn event_sim_colocated(
+    a: &MoeLayerStats,
+    b: &MoeLayerStats,
+    cluster: &Cluster,
+    policy: SchedulePolicy,
+) -> EventSimResult {
+    let n = a.n_experts();
+    assert_eq!(n, b.n_experts());
+    assert_eq!(n, cluster.len());
+    let bw = cluster.bandwidths();
+    let mut engines = Engines::new(n);
+    let mut tasks = Vec::new();
+    let max = |v: &[f64]| v.iter().copied().fold(0.0, f64::max);
+
+    let loads_a = a.expert_loads();
+    let loads_b = b.expert_loads();
+    let scale = |t: f64, g: usize| t / cluster.gpu(g).flops_scale;
+
+    // G^b on every GPU at t=0; N^a occupies the switch from t=0.
+    let gate_b_end: Vec<f64> = (0..n)
+        .map(|g| engines.run(g, 0.0, scale(b.gate_ms, g)))
+        .collect();
+    let e_gate_b = max(&gate_b_end);
+    tasks.push(TaskTrace {
+        label: "G^b".into(),
+        start: 0.0,
+        end: e_gate_b,
+    });
+
+    let n_a = comm_time(&a.traffic, &bw, policy).makespan;
+    let e_n_a = n_a;
+    tasks.push(TaskTrace {
+        label: "N^a".into(),
+        start: 0.0,
+        end: e_n_a,
+    });
+
+    // F^a: needs N^a done and the GPU free (G^b holds it).
+    let f_a_end: Vec<f64> = (0..n)
+        .map(|g| {
+            engines.run(
+                g,
+                e_n_a,
+                scale(loads_a[g] as f64 * a.ffn_ms_per_token, g),
+            )
+        })
+        .collect();
+    let e_f_a = max(&f_a_end);
+    tasks.push(TaskTrace {
+        label: "F^a".into(),
+        start: e_n_a,
+        end: e_f_a,
+    });
+
+    // N^b: gate^b produced it; shares the switch with N^a — the pair drains
+    // at the aggregated makespan (footnote 4 start constraint included).
+    let n_b = comm_time(&b.traffic, &bw, policy).makespan;
+    let agg_n = comm_time(&a.traffic.sum(&b.traffic), &bw, policy).makespan;
+    let e_n_b = agg_n.max(e_gate_b + n_b);
+    tasks.push(TaskTrace {
+        label: "N^b".into(),
+        start: e_gate_b,
+        end: e_n_b,
+    });
+
+    // F^b: data at E_{N^b}; engine busy with F^a.
+    let f_b_end: Vec<f64> = (0..n)
+        .map(|g| {
+            engines.run(
+                g,
+                e_n_b,
+                scale(loads_b[g] as f64 * b.ffn_ms_per_token, g),
+            )
+        })
+        .collect();
+    let e_f_b = max(&f_b_end);
+    tasks.push(TaskTrace {
+        label: "F^b".into(),
+        start: e_n_b,
+        end: e_f_b,
+    });
+
+    // C^a: F^a outputs, after the N phase drains the switch.
+    let c_a = comm_time(&a.traffic.transpose(), &bw, policy).makespan;
+    let e_c_a = e_f_a.max(e_n_b) + c_a;
+    tasks.push(TaskTrace {
+        label: "C^a".into(),
+        start: e_f_a.max(e_n_b),
+        end: e_c_a,
+    });
+
+    // A^a after C^a, competing with F^b for the engine.
+    let a_a_end: Vec<f64> = (0..n)
+        .map(|g| engines.run(g, e_c_a, scale(a.agg_ms, g)))
+        .collect();
+    let e_a_a = max(&a_a_end);
+    tasks.push(TaskTrace {
+        label: "A^a".into(),
+        start: e_c_a,
+        end: e_a_a,
+    });
+
+    // C^b: F^b outputs; the C phase in aggregate needs agg_c after the N
+    // phase drained.
+    let c_b = comm_time(&b.traffic.transpose(), &bw, policy).makespan;
+    let agg_c = comm_time(
+        &a.traffic.transpose().sum(&b.traffic.transpose()),
+        &bw,
+        policy,
+    )
+    .makespan;
+    let e_c_b = (e_f_b + c_b).max(e_f_a.max(e_n_b) + agg_c);
+    tasks.push(TaskTrace {
+        label: "C^b".into(),
+        start: e_f_b,
+        end: e_c_b,
+    });
+
+    // A^b after C^b and A^a.
+    let a_b_end: Vec<f64> = (0..n)
+        .map(|g| engines.run(g, e_c_b, scale(b.agg_ms, g)))
+        .collect();
+    let e_a_b = max(&a_b_end);
+    tasks.push(TaskTrace {
+        label: "A^b".into(),
+        start: e_c_b,
+        end: e_a_b,
+    });
+
+    // Next layer's G^a closes the round (Eqn. 4).
+    let g_a_end: Vec<f64> = (0..n)
+        .map(|g| engines.run(g, e_a_b, scale(a.gate_ms, g)))
+        .collect();
+    let makespan = max(&g_a_end);
+    tasks.push(TaskTrace {
+        label: "G^a".into(),
+        start: e_a_b,
+        end: makespan,
+    });
+
+    EventSimResult {
+        makespan,
+        compute_busy: engines.busy,
+        tasks,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{simulate_colocated, simulate_exclusive};
+    use crate::traffic::TrafficMatrix;
+    use crate::util::Rng;
+
+    fn toy(n: usize, seed: u64) -> MoeLayerStats {
+        let mut rng = Rng::new(seed);
+        let mut d = TrafficMatrix::zeros(n);
+        for i in 0..n {
+            for j in 0..n {
+                if i != j {
+                    d.set(i, j, rng.gen_range(25) + 1);
+                }
+            }
+        }
+        MoeLayerStats {
+            traffic: d,
+            gate_ms: 0.2,
+            ffn_ms_per_token: 0.05,
+            agg_ms: 0.1,
+        }
+    }
+
+    #[test]
+    fn exclusive_event_sim_matches_closed_form() {
+        for seed in 0..20 {
+            let s = toy(6, seed);
+            for cluster in [
+                Cluster::homogeneous(6, 1.5),
+                {
+                    // a hand-built heterogeneous 6-GPU cluster
+                    let mut gpus = Cluster::homogeneous(6, 1.0).gpus().to_vec();
+                    for (k, g) in gpus.iter_mut().enumerate() {
+                        g.flops_scale = 1.0 - 0.1 * k as f64;
+                        g.bandwidth = 1.0 - 0.1 * k as f64;
+                    }
+                    Cluster::new(gpus)
+                },
+            ] {
+                let (closed, _) = simulate_exclusive(&s, &cluster, SchedulePolicy::Aurora);
+                let event = event_sim_exclusive(&s, &cluster, SchedulePolicy::Aurora);
+                assert!(
+                    (closed.inference_ms - event.makespan).abs() < 1e-9,
+                    "seed {seed}: closed {} vs event {}",
+                    closed.inference_ms,
+                    event.makespan
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn colocated_event_sim_matches_table2_recurrences() {
+        for seed in 0..20 {
+            let a = toy(5, seed * 2 + 1);
+            let b = toy(5, seed * 2 + 2);
+            let cluster = Cluster::homogeneous(5, 2.0);
+            let (closed, _) = simulate_colocated(&a, &b, &cluster, SchedulePolicy::Aurora);
+            let event = event_sim_colocated(&a, &b, &cluster, SchedulePolicy::Aurora);
+            assert!(
+                (closed.inference_ms - event.makespan).abs() < 1e-6,
+                "seed {seed}: closed {} vs event {}",
+                closed.inference_ms,
+                event.makespan
+            );
+        }
+    }
+
+    #[test]
+    fn event_sim_busy_time_matches_utilization_accounting() {
+        let s = toy(4, 3);
+        let cluster = Cluster::homogeneous(4, 1.0);
+        let (closed, breakdown) = simulate_exclusive(&s, &cluster, SchedulePolicy::Aurora);
+        let event = event_sim_exclusive(&s, &cluster, SchedulePolicy::Aurora);
+        for g in 0..4 {
+            assert!(
+                (event.compute_busy[g] - breakdown.per_gpu_compute_ms[g]).abs() < 1e-9,
+                "gpu {g}"
+            );
+        }
+        let util = event.compute_busy.iter().sum::<f64>() / 4.0 / event.makespan;
+        assert!((util - closed.utilization).abs() < 1e-9);
+    }
+
+    #[test]
+    fn task_traces_are_causally_ordered() {
+        let a = toy(4, 7);
+        let b = toy(4, 8);
+        let cluster = Cluster::homogeneous(4, 1.0);
+        let event = event_sim_colocated(&a, &b, &cluster, SchedulePolicy::Aurora);
+        for t in &event.tasks {
+            assert!(t.end >= t.start, "{}", t.label);
+            assert!(t.end <= event.makespan + 1e-9, "{}", t.label);
+        }
+        // the phase structure: N^a starts at 0, G^a ends last
+        assert_eq!(event.tasks.first().map(|t| t.label.as_str()), Some("G^b"));
+        assert_eq!(event.tasks.last().map(|t| t.label.as_str()), Some("G^a"));
+    }
+}

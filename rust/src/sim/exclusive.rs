@@ -1,0 +1,229 @@
+//! Exclusive scenarios (paper §4, §5): one model, one expert per GPU.
+
+use super::stats::MoeLayerStats;
+use super::SimResult;
+use crate::cluster::Cluster;
+use crate::schedule::{comm_time, SchedulePolicy};
+
+/// Per-phase breakdown of one exclusive MoE layer (Eqn. 3 terms).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExclusiveBreakdown {
+    /// `max_i |G_i|` (ms).
+    pub gate_ms: f64,
+    /// First all-to-all `|N|` makespan (ms).
+    pub comm1_ms: f64,
+    /// `max_i |F_i|` (ms).
+    pub ffn_ms: f64,
+    /// Second all-to-all `|C|` makespan (ms).
+    pub comm2_ms: f64,
+    /// `max_i |A_i|` (ms).
+    pub agg_ms: f64,
+    /// Per-GPU compute totals (gate + ffn + agg, ms) for utilization.
+    pub per_gpu_compute_ms: Vec<f64>,
+}
+
+impl ExclusiveBreakdown {
+    /// Total layer time: the phases are separated by synchronization
+    /// barriers (§2.2: non-overlapping communication and computation), so
+    /// the layer time is their sum (Eqn. 3).
+    pub fn total_ms(&self) -> f64 {
+        self.gate_ms + self.comm1_ms + self.ffn_ms + self.comm2_ms + self.agg_ms
+    }
+}
+
+/// Simulate one MoE layer running exclusively on `cluster` with experts
+/// already placed (the stats' traffic matrix is GPU-indexed; use
+/// [`MoeLayerStats::placed`] to apply an assignment first).
+///
+/// Implements Eqn. 1/3 of the paper: the two all-to-alls are synchronous
+/// barriers, so each phase contributes its per-GPU maximum.
+pub fn simulate_exclusive(
+    stats: &MoeLayerStats,
+    cluster: &Cluster,
+    policy: SchedulePolicy,
+) -> (SimResult, ExclusiveBreakdown) {
+    let n = stats.n_experts();
+    assert_eq!(
+        n,
+        cluster.len(),
+        "exclusive scenario places one expert per GPU"
+    );
+    let bw = cluster.bandwidths();
+
+    let gate: Vec<f64> = (0..n)
+        .map(|g| stats.gate_ms / cluster.gpu(g).flops_scale)
+        .collect();
+    let loads = stats.expert_loads();
+    let ffn: Vec<f64> = (0..n)
+        .map(|g| loads[g] as f64 * stats.ffn_ms_per_token / cluster.gpu(g).flops_scale)
+        .collect();
+    let agg: Vec<f64> = (0..n)
+        .map(|g| stats.agg_ms / cluster.gpu(g).flops_scale)
+        .collect();
+
+    let comm1 = comm_time(&stats.traffic, &bw, policy);
+    let comm2 = comm_time(&stats.traffic.transpose(), &bw, policy);
+
+    let max = |v: &[f64]| v.iter().copied().fold(0.0, f64::max);
+    let breakdown = ExclusiveBreakdown {
+        gate_ms: max(&gate),
+        comm1_ms: comm1.makespan,
+        ffn_ms: max(&ffn),
+        comm2_ms: comm2.makespan,
+        agg_ms: max(&agg),
+        per_gpu_compute_ms: (0..n).map(|g| gate[g] + ffn[g] + agg[g]).collect(),
+    };
+
+    let t = breakdown.total_ms();
+    let utilization = if t > 0.0 {
+        breakdown.per_gpu_compute_ms.iter().sum::<f64>() / (n as f64) / t
+    } else {
+        0.0
+    };
+    (
+        SimResult {
+            inference_ms: t,
+            utilization,
+            comm_ms: comm1.makespan + comm2.makespan,
+        },
+        breakdown,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::traffic::TrafficMatrix;
+    use crate::util::Rng;
+
+    fn toy_stats(n: usize, seed: u64) -> MoeLayerStats {
+        let mut rng = Rng::new(seed);
+        let mut d = TrafficMatrix::zeros(n);
+        for i in 0..n {
+            for j in 0..n {
+                if i != j {
+                    d.set(i, j, rng.gen_range(20));
+                }
+            }
+        }
+        MoeLayerStats {
+            traffic: d,
+            gate_ms: 0.3,
+            ffn_ms_per_token: 0.05,
+            agg_ms: 0.2,
+        }
+    }
+
+    #[test]
+    fn matches_eqn3_closed_form_homogeneous() {
+        let s = toy_stats(6, 1);
+        let c = Cluster::homogeneous(6, 2.0);
+        let (res, b) = simulate_exclusive(&s, &c, SchedulePolicy::Aurora);
+        // Eqn. 3: |G| + b_max/B + max|F| + b_max/B + |A|
+        let bmax = s.traffic.b_max_tokens() as f64 / 2.0;
+        let maxf =
+            s.expert_loads().iter().max().copied().unwrap() as f64 * s.ffn_ms_per_token;
+        let expect = 0.3 + bmax + maxf + bmax + 0.2;
+        assert!((res.inference_ms - expect).abs() < 1e-9);
+        assert!((b.comm1_ms - bmax).abs() < 1e-12);
+        assert!((b.comm2_ms - bmax).abs() < 1e-12);
+    }
+
+    #[test]
+    fn aurora_no_slower_than_baselines_end_to_end() {
+        for seed in 0..10 {
+            let s = toy_stats(8, seed);
+            let c = Cluster::homogeneous(8, 1.0);
+            let (a, _) = simulate_exclusive(&s, &c, SchedulePolicy::Aurora);
+            let (sjf, _) = simulate_exclusive(&s, &c, SchedulePolicy::Sjf);
+            let (rcs, _) = simulate_exclusive(&s, &c, SchedulePolicy::Rcs { seed });
+            assert!(a.inference_ms <= sjf.inference_ms + 1e-9);
+            assert!(a.inference_ms <= rcs.inference_ms + 1e-9);
+        }
+    }
+
+    #[test]
+    fn utilization_in_unit_interval_and_sensible() {
+        let s = toy_stats(8, 3);
+        let c = Cluster::homogeneous(8, 1.0);
+        let (res, _) = simulate_exclusive(&s, &c, SchedulePolicy::Aurora);
+        assert!(res.utilization > 0.0 && res.utilization < 1.0);
+    }
+
+    #[test]
+    fn slower_gpus_stretch_compute() {
+        let s = toy_stats(4, 9);
+        let fast = Cluster::homogeneous(4, 1.0);
+        let mut slow_gpus = fast.gpus().to_vec();
+        for g in &mut slow_gpus {
+            g.flops_scale = 0.5;
+        }
+        let slow = Cluster::new(slow_gpus);
+        let (rf, bf) = simulate_exclusive(&s, &fast, SchedulePolicy::Aurora);
+        let (rs, bs) = simulate_exclusive(&s, &slow, SchedulePolicy::Aurora);
+        assert!(rs.inference_ms > rf.inference_ms);
+        assert!((bs.ffn_ms - 2.0 * bf.ffn_ms).abs() < 1e-9);
+        assert_eq!(bs.comm1_ms, bf.comm1_ms); // bandwidth unchanged
+    }
+
+    /// MoE-shaped traffic: every GPU originates an equal shard of the batch
+    /// (uniform row sums), while expert popularity skews the columns. This is
+    /// the regime in which Theorem 5.1's monotonicity argument holds.
+    fn moe_shaped_stats(n: usize, seed: u64) -> MoeLayerStats {
+        let mut rng = Rng::new(seed);
+        let per_source = 60u64;
+        let popularity: Vec<f64> = (0..n).map(|_| rng.gen_f64() + 0.05).collect();
+        let mut d = TrafficMatrix::zeros(n);
+        for i in 0..n {
+            for _ in 0..per_source {
+                let mut j = rng.weighted_index(&popularity);
+                if j == i {
+                    j = (j + 1) % n; // keep the diagonal empty
+                }
+                d.add(i, j, 1);
+            }
+        }
+        MoeLayerStats {
+            traffic: d,
+            gate_ms: 0.3,
+            ffn_ms_per_token: 0.05,
+            agg_ms: 0.2,
+        }
+    }
+
+    #[test]
+    fn theorem_5_1_sorted_assignment_beats_random_on_hetero() {
+        use crate::assignment::{random_assignment, sorted_assignment};
+        let mut rng = Rng::new(0x55);
+        for seed in 0..5 {
+            let s = moe_shaped_stats(8, 100 + seed);
+            let c = Cluster::paper_heterogeneous(8, 1.0);
+            let sorted = sorted_assignment(&s.expert_loads(), &c);
+            let (best, _) = simulate_exclusive(&s.placed(&sorted), &c, SchedulePolicy::Aurora);
+            for _ in 0..30 {
+                let rand_p = random_assignment(8, &mut rng);
+                let (r, _) = simulate_exclusive(&s.placed(&rand_p), &c, SchedulePolicy::Aurora);
+                assert!(
+                    best.inference_ms <= r.inference_ms + 1e-9,
+                    "sorted {} > random {}",
+                    best.inference_ms,
+                    r.inference_ms
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn zero_traffic_layer_is_compute_only() {
+        let s = MoeLayerStats {
+            traffic: TrafficMatrix::zeros(4),
+            gate_ms: 1.0,
+            ffn_ms_per_token: 0.1,
+            agg_ms: 1.0,
+        };
+        let c = Cluster::homogeneous(4, 1.0);
+        let (res, b) = simulate_exclusive(&s, &c, SchedulePolicy::Aurora);
+        assert_eq!(b.comm1_ms, 0.0);
+        assert_eq!(res.inference_ms, 2.0);
+    }
+}

@@ -1,0 +1,38 @@
+//! Inference-time simulator for MoE layers on big-switch clusters.
+//!
+//! The paper's evaluation (§8) is analytic simulation driven by model
+//! statistics; this module is that testbed. It computes per-layer inference
+//! time and GPU utilization for all four scenarios of Fig. 2:
+//!
+//! * [`exclusive`] — one model per set of GPUs (Eqn. 1/3): the layer is
+//!   `max(G) + |N| + max(F) + |C| + max(A)` with comm times from
+//!   [`crate::schedule::comm_time`].
+//! * [`colocated`] — two models interleaving on shared GPUs, following the
+//!   Table 2 start/end recurrences (computation competition on the GPU,
+//!   communication overlap on the switch).
+//!
+//! Components scale with GPU performance: a component that takes `t` ms on
+//! the reference GPU takes `t / flops_scale` on GPU `g`; the FFN time is
+//! proportional to the expert's token load (observation 3, §4.1).
+
+mod colocated;
+pub mod event;
+mod exclusive;
+mod stats;
+
+pub use colocated::{simulate_colocated, ColocatedBreakdown};
+pub use event::{event_sim_colocated, event_sim_exclusive, EventSimResult};
+pub use exclusive::{simulate_exclusive, ExclusiveBreakdown};
+pub use stats::MoeLayerStats;
+
+/// Result of simulating one MoE layer (one model or a colocated pair).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimResult {
+    /// End-to-end inference time of the layer (ms).
+    pub inference_ms: f64,
+    /// Mean GPU utilization: computation time ÷ inference time, averaged
+    /// over GPUs (§8.1 Metrics).
+    pub utilization: f64,
+    /// Total communication time visible in the critical path (ms).
+    pub comm_ms: f64,
+}

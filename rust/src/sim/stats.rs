@@ -1,0 +1,84 @@
+//! Per-layer model statistics — Aurora's optimization inputs (Table 1).
+
+use crate::traffic::TrafficMatrix;
+
+/// Historical statistics of one MoE layer of one model (paper Table 1):
+/// the first all-to-all traffic matrix `D_N` (the second is its transpose,
+/// §2.2) and the component compute times on the reference GPU.
+///
+/// The matrix is **expert-indexed**: entry `(i, j)` counts tokens that
+/// originate at expert `i`'s GPU and are routed to expert `j`. Placing the
+/// model onto GPUs relabels both dimensions
+/// ([`TrafficMatrix::permute`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MoeLayerStats {
+    /// First all-to-all traffic matrix (tokens), expert-indexed.
+    pub traffic: TrafficMatrix,
+    /// Gate time on the reference GPU (ms) — identical across GPUs
+    /// (observation 2, §4.1).
+    pub gate_ms: f64,
+    /// FFN time per token on the reference GPU (ms/token) — FFN time scales
+    /// with the expert's token load (observation 3).
+    pub ffn_ms_per_token: f64,
+    /// Aggregation time on the reference GPU (ms).
+    pub agg_ms: f64,
+}
+
+impl MoeLayerStats {
+    /// Number of experts (== GPUs the model spans).
+    pub fn n_experts(&self) -> usize {
+        self.traffic.n()
+    }
+
+    /// Per-expert token loads (FFN input volume, diagonal included).
+    pub fn expert_loads(&self) -> Vec<u64> {
+        self.traffic.expert_loads()
+    }
+
+    /// The layer statistics with experts relabelled onto GPUs via `perm`
+    /// (`perm[e]` = GPU of expert `e`).
+    pub fn placed(&self, perm: &[usize]) -> MoeLayerStats {
+        MoeLayerStats {
+            traffic: self.traffic.permute(perm),
+            ..*self
+        }
+    }
+
+    /// Total FFN compute (reference-GPU ms) across all experts — used for
+    /// utilization accounting.
+    pub fn total_ffn_ms(&self) -> f64 {
+        self.expert_loads().iter().sum::<u64>() as f64 * self.ffn_ms_per_token
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats() -> MoeLayerStats {
+        MoeLayerStats {
+            traffic: TrafficMatrix::from_nested(&[vec![1, 2], vec![3, 4]]),
+            gate_ms: 0.5,
+            ffn_ms_per_token: 0.1,
+            agg_ms: 0.2,
+        }
+    }
+
+    #[test]
+    fn expert_loads_from_traffic() {
+        assert_eq!(stats().expert_loads(), vec![4, 6]);
+    }
+
+    #[test]
+    fn placed_permutes_traffic_only() {
+        let s = stats();
+        let p = s.placed(&[1, 0]);
+        assert_eq!(p.gate_ms, s.gate_ms);
+        assert_eq!(p.traffic.get(1, 0), s.traffic.get(0, 1));
+    }
+
+    #[test]
+    fn total_ffn_time() {
+        assert!((stats().total_ffn_ms() - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,120 @@
+//! Trace (de)serialization to JSON — lets users bring real production
+//! statistics instead of the synthetic generator.
+
+use super::ModelTrace;
+use crate::sim::MoeLayerStats;
+use crate::traffic::TrafficMatrix;
+use crate::util::Json;
+
+/// Serialize a trace to a JSON value.
+pub fn trace_to_json(t: &ModelTrace) -> Json {
+    let layers: Vec<Json> = t
+        .layers
+        .iter()
+        .map(|l| {
+            let n = l.traffic.n();
+            let rows: Vec<Json> = (0..n)
+                .map(|i| Json::Arr((0..n).map(|j| Json::from(l.traffic.get(i, j))).collect()))
+                .collect();
+            Json::obj(vec![
+                ("traffic", Json::Arr(rows)),
+                ("gate_ms", l.gate_ms.into()),
+                ("ffn_ms_per_token", l.ffn_ms_per_token.into()),
+                ("agg_ms", l.agg_ms.into()),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("name", t.name.as_str().into()),
+        ("layers", Json::Arr(layers)),
+    ])
+}
+
+/// Deserialize a trace from a JSON value. Returns a message on malformed
+/// input.
+pub fn trace_from_json(v: &Json) -> Result<ModelTrace, String> {
+    let name = v
+        .get("name")
+        .and_then(|n| n.as_str())
+        .ok_or("missing name")?
+        .to_string();
+    let layers_json = v
+        .get("layers")
+        .and_then(|l| l.as_arr())
+        .ok_or("missing layers")?;
+    if layers_json.is_empty() {
+        return Err("trace needs at least one layer".into());
+    }
+    let mut layers = Vec::with_capacity(layers_json.len());
+    for (k, lj) in layers_json.iter().enumerate() {
+        let rows = lj
+            .get("traffic")
+            .and_then(|t| t.as_arr())
+            .ok_or(format!("layer {k}: missing traffic"))?;
+        let n = rows.len();
+        let mut traffic = TrafficMatrix::zeros(n);
+        for (i, row) in rows.iter().enumerate() {
+            let cells = row.as_arr().ok_or(format!("layer {k}: bad row {i}"))?;
+            if cells.len() != n {
+                return Err(format!("layer {k}: row {i} is not length {n}"));
+            }
+            for (j, c) in cells.iter().enumerate() {
+                traffic.set(
+                    i,
+                    j,
+                    c.as_u64().ok_or(format!("layer {k}: bad cell ({i},{j})"))?,
+                );
+            }
+        }
+        let num = |key: &str| -> Result<f64, String> {
+            lj.get(key)
+                .and_then(|x| x.as_f64())
+                .ok_or(format!("layer {k}: missing {key}"))
+        };
+        layers.push(MoeLayerStats {
+            traffic,
+            gate_ms: num("gate_ms")?,
+            ffn_ms_per_token: num("ffn_ms_per_token")?,
+            agg_ms: num("agg_ms")?,
+        });
+    }
+    Ok(ModelTrace { name, layers })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{limoe_trace, Dataset, LimoeVariant};
+
+    #[test]
+    fn roundtrip_preserves_trace() {
+        let t = limoe_trace(LimoeVariant::B16, Dataset::Coco, 8, 4, 32, 5);
+        let j = trace_to_json(&t);
+        let text = j.to_string_compact();
+        let back = trace_from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        for bad in [
+            r#"{}"#,
+            r#"{"name":"x"}"#,
+            r#"{"name":"x","layers":[]}"#,
+            r#"{"name":"x","layers":[{"traffic":[[0,1]],"gate_ms":1}]}"#,
+            r#"{"name":"x","layers":[{"traffic":[[0,1],[1]],"gate_ms":1,"ffn_ms_per_token":1,"agg_ms":1}]}"#,
+        ] {
+            let v = Json::parse(bad).unwrap();
+            assert!(trace_from_json(&v).is_err(), "should reject {bad}");
+        }
+    }
+
+    #[test]
+    fn negative_cells_rejected() {
+        let v = Json::parse(
+            r#"{"name":"x","layers":[{"traffic":[[0,-1],[1,0]],"gate_ms":1,"ffn_ms_per_token":1,"agg_ms":1}]}"#,
+        )
+        .unwrap();
+        assert!(trace_from_json(&v).is_err());
+    }
+}

@@ -1,0 +1,173 @@
+//! MoE inference traces — the workload substrate of the evaluation (§8.1).
+//!
+//! The paper drives its simulation with production statistics of Google's
+//! LIMoE models (B/16 and B/32, 8 experts, 4 MoE layers) on the COCO and
+//! ImageNet datasets [21]. Those statistics are not public, so this module
+//! generates synthetic traces with the same *distributional* structure
+//! (documented in DESIGN.md §Hardware-Adaptation):
+//!
+//! * every GPU originates an equal shard of the batch (uniform row sums);
+//! * expert popularity is skewed (Zipf-like), dataset- and layer-dependent —
+//!   the uneven token distribution of §2.3;
+//! * B/16 sees 196 tokens per image, B/32 sees 49 (ViT patch counts), so
+//!   B/16 layers carry ≈4× the traffic at the same batch size;
+//! * compute times follow the ViT-B FFN shape (d_model 768, d_ff 3072)
+//!   scaled to a reference-GPU token rate.
+//!
+//! [`noisy_traffic`] mixes in other layers' matrices to emulate the
+//! unpredictable-request imprecision sweep of Q4 (Fig. 14).
+
+mod io;
+mod limoe;
+
+pub use io::{trace_from_json, trace_to_json};
+pub use limoe::{limoe_trace, limoe_trace_topk, Dataset, LimoeVariant};
+
+use crate::sim::MoeLayerStats;
+use crate::traffic::TrafficMatrix;
+
+/// A generated inference trace: per-layer statistics of one MoE model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelTrace {
+    /// Human-readable name, e.g. `limoe-b16-coco`.
+    pub name: String,
+    /// Per-MoE-layer statistics (the paper uses 4 layers).
+    pub layers: Vec<MoeLayerStats>,
+}
+
+impl ModelTrace {
+    /// Number of experts (uniform across layers).
+    pub fn n_experts(&self) -> usize {
+        self.layers[0].traffic.n()
+    }
+
+    /// Aggregate expert loads across layers (used for assignment decisions
+    /// that must hold for the whole model).
+    pub fn total_expert_loads(&self) -> Vec<u64> {
+        let n = self.n_experts();
+        let mut loads = vec![0u64; n];
+        for l in &self.layers {
+            for (e, v) in l.expert_loads().into_iter().enumerate() {
+                loads[e] += v;
+            }
+        }
+        loads
+    }
+}
+
+/// Blend the planning-time matrix with traffic from other layers to model
+/// imprecise inputs (Q4, Fig. 14): `noise_frac ∈ [0, 1]` is the fraction of
+/// total tokens that come from the noise matrices instead of the planned one.
+///
+/// The result preserves the planned matrix's total volume so comparisons stay
+/// load-neutral: `result = (1-f)·planned + f·mean(noise)`, rounded.
+pub fn noisy_traffic(
+    planned: &TrafficMatrix,
+    noise_layers: &[&TrafficMatrix],
+    noise_frac: f64,
+) -> TrafficMatrix {
+    assert!((0.0..=1.0).contains(&noise_frac));
+    if noise_layers.is_empty() || noise_frac == 0.0 {
+        return planned.clone();
+    }
+    let n = planned.n();
+    // Scale each noise layer to the planned layer's total volume first, so
+    // f only shifts *shape*, not load.
+    let planned_total = planned.total().max(1) as f64;
+    let mut out = TrafficMatrix::zeros(n);
+    for i in 0..n {
+        for j in 0..n {
+            if i == j {
+                out.set(i, j, planned.get(i, j));
+                continue;
+            }
+            let mut noise_mean = 0.0;
+            for nl in noise_layers {
+                assert_eq!(nl.n(), n);
+                let scale = planned_total / nl.total().max(1) as f64;
+                noise_mean += nl.get(i, j) as f64 * scale;
+            }
+            noise_mean /= noise_layers.len() as f64;
+            let v = (1.0 - noise_frac) * planned.get(i, j) as f64 + noise_frac * noise_mean;
+            out.set(i, j, v.round() as u64);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(n: usize, fill: u64) -> TrafficMatrix {
+        let mut d = TrafficMatrix::zeros(n);
+        for i in 0..n {
+            for j in 0..n {
+                if i != j {
+                    d.set(i, j, fill + (i * n + j) as u64);
+                }
+            }
+        }
+        d
+    }
+
+    #[test]
+    fn zero_noise_is_identity() {
+        let p = mk(4, 3);
+        let nz = mk(4, 9);
+        assert_eq!(noisy_traffic(&p, &[&nz], 0.0), p);
+        assert_eq!(noisy_traffic(&p, &[], 0.5), p);
+    }
+
+    #[test]
+    fn full_noise_replaces_shape() {
+        let p = mk(4, 2);
+        let nz = mk(4, 50);
+        let out = noisy_traffic(&p, &[&nz], 1.0);
+        // totals stay close to planned (rounding aside)
+        let ratio = out.total() as f64 / p.total() as f64;
+        assert!((0.95..1.05).contains(&ratio), "ratio={ratio}");
+        assert_ne!(out, p);
+    }
+
+    #[test]
+    fn noise_interpolates_volume_neutrally() {
+        let p = mk(5, 10);
+        let nz1 = mk(5, 1);
+        let nz2 = mk(5, 30);
+        for f in [0.25, 0.5, 0.75] {
+            let out = noisy_traffic(&p, &[&nz1, &nz2], f);
+            let ratio = out.total() as f64 / p.total() as f64;
+            assert!((0.9..1.1).contains(&ratio), "f={f} ratio={ratio}");
+        }
+    }
+
+    #[test]
+    fn model_trace_aggregates_loads() {
+        let t = ModelTrace {
+            name: "t".into(),
+            layers: vec![
+                MoeLayerStats {
+                    traffic: mk(3, 1),
+                    gate_ms: 0.1,
+                    ffn_ms_per_token: 0.01,
+                    agg_ms: 0.1,
+                },
+                MoeLayerStats {
+                    traffic: mk(3, 2),
+                    gate_ms: 0.1,
+                    ffn_ms_per_token: 0.01,
+                    agg_ms: 0.1,
+                },
+            ],
+        };
+        assert_eq!(t.n_experts(), 3);
+        let loads = t.total_expert_loads();
+        assert_eq!(loads.len(), 3);
+        assert_eq!(
+            loads.iter().sum::<u64>(),
+            t.layers[0].expert_loads().iter().sum::<u64>()
+                + t.layers[1].expert_loads().iter().sum::<u64>()
+        );
+    }
+}

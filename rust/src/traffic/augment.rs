@@ -1,0 +1,136 @@
+//! The 𝕏 augmentation of Appendix A.
+//!
+//! Theorem 4.2's proof converts the traffic matrix `D` into `D' = D + X` with
+//! non-negative artificial traffic `X` such that every row and column of `D'`
+//! sums to exactly `b_max`. Appendix A proves a non-negative `X` always exists
+//! via Farkas' lemma; here we *construct* one with a greedy water-filling pass,
+//! which is simultaneously a constructive proof and the first step of the
+//! Birkhoff–von-Neumann slot decomposition in [`crate::schedule`].
+
+use super::TrafficMatrix;
+
+/// Augment `d` with artificial traffic so every row and column (diagonal
+/// included — artificial self-traffic is free since it never crosses the
+/// network) sums to `b_max`. Returns `(d_prime, x)` with `d_prime = d + x`,
+/// `x ≥ 0` element-wise.
+///
+/// Greedy water-filling: walk cells in row-major order; pour
+/// `min(row deficit, col deficit)` into each. Because total row deficit equals
+/// total column deficit (both are `n·b_max − total`), the greedy pass always
+/// terminates with all deficits at zero.
+pub fn augment_to_balanced(d: &TrafficMatrix) -> (TrafficMatrix, TrafficMatrix) {
+    let n = d.n();
+    let b_max = d.b_max_tokens();
+
+    // Deficits measured against off-diagonal sums; artificial traffic may be
+    // poured anywhere, including the diagonal (it is never actually sent).
+    let mut row_def: Vec<u64> = (0..n).map(|i| b_max - d.row_sum(i)).collect();
+    let mut col_def: Vec<u64> = (0..n).map(|j| b_max - d.col_sum(j)).collect();
+
+    let mut x = TrafficMatrix::zeros(n);
+    for i in 0..n {
+        if row_def[i] == 0 {
+            continue;
+        }
+        for j in 0..n {
+            if row_def[i] == 0 {
+                break;
+            }
+            let pour = row_def[i].min(col_def[j]);
+            if pour > 0 {
+                x.add(i, j, pour);
+                row_def[i] -= pour;
+                col_def[j] -= pour;
+            }
+        }
+    }
+    debug_assert!(row_def.iter().all(|&v| v == 0));
+    debug_assert!(col_def.iter().all(|&v| v == 0));
+
+    // `d_prime` carries only wire traffic: real off-diagonal tokens plus the
+    // artificial filler. The real diagonal of `d` (tokens local to a GPU) is
+    // dropped — it never touches the network and must not consume port budget.
+    let mut d_prime = TrafficMatrix::zeros(n);
+    for i in 0..n {
+        for j in 0..n {
+            let real = if i == j { 0 } else { d.get(i, j) };
+            d_prime.set(i, j, real + x.get(i, j));
+        }
+    }
+    (d_prime, x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Row/col sums of the *augmented* matrix (diagonal included — the
+    /// diagonal of `d_prime` is purely artificial) must all equal b_max, and
+    /// `d_prime` must equal `d`'s wire traffic plus `x`.
+    fn check_balanced(d: &TrafficMatrix) {
+        let (dp, x) = augment_to_balanced(d);
+        let n = d.n();
+        let b = d.b_max_tokens();
+        for i in 0..n {
+            let row: u64 = (0..n).map(|j| dp.get(i, j)).sum();
+            let col: u64 = (0..n).map(|k| dp.get(k, i)).sum();
+            assert_eq!(row, b, "row {i}");
+            assert_eq!(col, b, "col {i}");
+        }
+        for i in 0..n {
+            for j in 0..n {
+                let real = if i == j { 0 } else { d.get(i, j) };
+                assert_eq!(dp.get(i, j), real + x.get(i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn balances_simple_matrix() {
+        check_balanced(&TrafficMatrix::from_nested(&[
+            vec![0, 2, 3],
+            vec![4, 0, 1],
+            vec![0, 6, 0],
+        ]));
+    }
+
+    #[test]
+    fn balances_already_balanced() {
+        let d = TrafficMatrix::from_nested(&[vec![0, 2, 2], vec![2, 0, 2], vec![2, 2, 0]]);
+        let (_, x) = augment_to_balanced(&d);
+        assert_eq!(x.total() + (0..3).map(|i| x.get(i, i)).sum::<u64>(), 0);
+        check_balanced(&d);
+    }
+
+    #[test]
+    fn balances_zero_matrix() {
+        check_balanced(&TrafficMatrix::zeros(4));
+    }
+
+    #[test]
+    fn balances_single_hot_row() {
+        check_balanced(&TrafficMatrix::from_nested(&[
+            vec![0, 10, 10, 10],
+            vec![0, 0, 0, 0],
+            vec![1, 0, 0, 0],
+            vec![0, 2, 0, 0],
+        ]));
+    }
+
+    #[test]
+    fn balances_seeded_random_matrices() {
+        use crate::util::Rng;
+        let mut rng = Rng::new(0xA0A0);
+        for n in 2..=12 {
+            let mut d = TrafficMatrix::zeros(n);
+            for i in 0..n {
+                for j in 0..n {
+                    if i != j {
+                        d.set(i, j, rng.gen_range(50));
+                    }
+                }
+            }
+            check_balanced(&d);
+        }
+    }
+}

@@ -1,0 +1,318 @@
+//! The [`TrafficMatrix`] type and its row/column/bound arithmetic.
+
+use std::fmt;
+
+/// An `n × n` all-to-all traffic matrix in integer tokens.
+///
+/// Entry `(i, j)` is the number of tokens GPU `i` sends to GPU `j`.
+/// Diagonal entries represent tokens whose source and destination expert live
+/// on the same GPU; they never touch the network and are ignored by every
+/// communication-time computation (paper footnote 1, §4.2).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TrafficMatrix {
+    n: usize,
+    /// Row-major `n * n` token counts.
+    data: Vec<u64>,
+}
+
+impl TrafficMatrix {
+    /// All-zero matrix.
+    pub fn zeros(n: usize) -> Self {
+        Self {
+            n,
+            data: vec![0; n * n],
+        }
+    }
+
+    /// Build from a row-major slice. Panics if `data.len() != n * n`.
+    pub fn from_rows(n: usize, data: &[u64]) -> Self {
+        assert_eq!(data.len(), n * n, "traffic matrix shape mismatch");
+        Self {
+            n,
+            data: data.to_vec(),
+        }
+    }
+
+    /// Build from a nested vec of rows.
+    pub fn from_nested(rows: &[Vec<u64>]) -> Self {
+        let n = rows.len();
+        let mut data = Vec::with_capacity(n * n);
+        for r in rows {
+            assert_eq!(r.len(), n, "traffic matrix must be square");
+            data.extend_from_slice(r);
+        }
+        Self { n, data }
+    }
+
+    /// Number of GPUs (matrix dimension).
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Tokens sent from `i` to `j`.
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> u64 {
+        self.data[i * self.n + j]
+    }
+
+    /// Set the `(i, j)` entry.
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: u64) {
+        self.data[i * self.n + j] = v;
+    }
+
+    /// Add `v` tokens to the `(i, j)` entry.
+    #[inline]
+    pub fn add(&mut self, i: usize, j: usize, v: u64) {
+        self.data[i * self.n + j] += v;
+    }
+
+    /// Raw row-major data.
+    pub fn data(&self) -> &[u64] {
+        &self.data
+    }
+
+    /// Sum of row `i` *excluding* the diagonal: total tokens GPU `i` puts on
+    /// the wire.
+    pub fn row_sum(&self, i: usize) -> u64 {
+        (0..self.n)
+            .filter(|&j| j != i)
+            .map(|j| self.get(i, j))
+            .sum()
+    }
+
+    /// Sum of column `j` *excluding* the diagonal: total tokens GPU `j`
+    /// receives from the wire.
+    pub fn col_sum(&self, j: usize) -> u64 {
+        (0..self.n)
+            .filter(|&i| i != j)
+            .map(|i| self.get(i, j))
+            .sum()
+    }
+
+    /// Total off-diagonal tokens.
+    pub fn total(&self) -> u64 {
+        (0..self.n).map(|i| self.row_sum(i)).sum()
+    }
+
+    /// `b_max` in tokens (bandwidth-free): the largest per-GPU send or receive
+    /// volume, the lower bound of Theorem 4.2 (homogeneous, `B = 1`).
+    pub fn b_max_tokens(&self) -> u64 {
+        (0..self.n)
+            .map(|i| self.row_sum(i).max(self.col_sum(i)))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// `b_max` in time units on a heterogeneous cluster (Theorem 5.2):
+    /// `max_i max(Σ_j d_ij / B_i, Σ_j d_ji / B_i)` with `bandwidths[i]` in
+    /// tokens per time unit.
+    pub fn b_max_hetero(&self, bandwidths: &[f64]) -> f64 {
+        assert_eq!(bandwidths.len(), self.n);
+        (0..self.n)
+            .map(|i| {
+                let t = self.row_sum(i).max(self.col_sum(i)) as f64 / bandwidths[i];
+                t
+            })
+            .fold(0.0, f64::max)
+    }
+
+    /// The reversed all-to-all matrix (`D_C = D_N^T`, §2.2): for every transfer
+    /// `i → j` in the first collective there is an equal-size `j → i` transfer
+    /// in the second.
+    pub fn transpose(&self) -> Self {
+        let mut t = Self::zeros(self.n);
+        for i in 0..self.n {
+            for j in 0..self.n {
+                t.set(j, i, self.get(i, j));
+            }
+        }
+        t
+    }
+
+    /// Element-wise sum (aggregated traffic of two colocated models whose
+    /// experts already share GPU indices). Panics on shape mismatch.
+    pub fn sum(&self, other: &Self) -> Self {
+        assert_eq!(self.n, other.n);
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| a + b)
+            .collect();
+        Self { n: self.n, data }
+    }
+
+    /// Relabel GPUs: entry `(i, j)` of the result is `(perm[i], perm[j])` of
+    /// `self`... more precisely, the result places the traffic of original
+    /// index `i` at new index `perm[i]`: `out[perm[i]][perm[j]] = self[i][j]`.
+    ///
+    /// Used to express an expert colocation / GPU assignment as a relabeling
+    /// of a model's traffic matrix.
+    pub fn permute(&self, perm: &[usize]) -> Self {
+        assert_eq!(perm.len(), self.n);
+        let mut out = Self::zeros(self.n);
+        for i in 0..self.n {
+            for j in 0..self.n {
+                out.set(perm[i], perm[j], self.get(i, j));
+            }
+        }
+        out
+    }
+
+    /// Per-GPU token load of the experts: column sums *including* the diagonal
+    /// (every token routed to expert `j` is processed by GPU `j`, whether or
+    /// not it crossed the network). Drives FFN compute times and Theorem 5.1.
+    pub fn expert_loads(&self) -> Vec<u64> {
+        (0..self.n)
+            .map(|j| (0..self.n).map(|i| self.get(i, j)).sum())
+            .collect()
+    }
+
+    /// All off-diagonal non-zero flows as `(src, dst, tokens)`.
+    pub fn flows(&self) -> Vec<(usize, usize, u64)> {
+        let mut out = Vec::new();
+        for i in 0..self.n {
+            for j in 0..self.n {
+                if i != j && self.get(i, j) > 0 {
+                    out.push((i, j, self.get(i, j)));
+                }
+            }
+        }
+        out
+    }
+
+    /// Merge pairs of GPUs: `groups[g]` lists the original indices fused onto
+    /// new GPU `g`. Traffic between members of the same group becomes local
+    /// (kept on the diagonal so expert loads stay correct). Used by the Lina
+    /// baseline, which packs two experts of the *same* model per GPU.
+    pub fn merge_groups(&self, groups: &[Vec<usize>]) -> Self {
+        let m = groups.len();
+        let mut owner = vec![usize::MAX; self.n];
+        for (g, members) in groups.iter().enumerate() {
+            for &i in members {
+                assert!(i < self.n && owner[i] == usize::MAX, "bad grouping");
+                owner[i] = g;
+            }
+        }
+        assert!(
+            owner.iter().all(|&o| o != usize::MAX),
+            "grouping must cover all GPUs"
+        );
+        let mut out = Self::zeros(m);
+        for i in 0..self.n {
+            for j in 0..self.n {
+                out.add(owner[i], owner[j], self.get(i, j));
+            }
+        }
+        out
+    }
+}
+
+impl fmt::Display for TrafficMatrix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for i in 0..self.n {
+            for j in 0..self.n {
+                write!(f, "{:>6}", self.get(i, j))?;
+            }
+            writeln!(f)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> TrafficMatrix {
+        TrafficMatrix::from_nested(&[vec![5, 2, 3], vec![4, 0, 1], vec![0, 6, 7]])
+    }
+
+    #[test]
+    fn row_col_sums_exclude_diagonal() {
+        let m = sample();
+        assert_eq!(m.row_sum(0), 5); // 2 + 3
+        assert_eq!(m.row_sum(1), 5); // 4 + 1
+        assert_eq!(m.row_sum(2), 6); // 0 + 6
+        assert_eq!(m.col_sum(0), 4);
+        assert_eq!(m.col_sum(1), 8);
+        assert_eq!(m.col_sum(2), 4);
+        assert_eq!(m.total(), 16);
+    }
+
+    #[test]
+    fn b_max_is_max_row_or_col() {
+        let m = sample();
+        assert_eq!(m.b_max_tokens(), 8); // col 1
+    }
+
+    #[test]
+    fn transpose_reverses_flows() {
+        let m = sample();
+        let t = m.transpose();
+        assert_eq!(t.get(1, 0), m.get(0, 1));
+        assert_eq!(t.b_max_tokens(), m.b_max_tokens());
+    }
+
+    #[test]
+    fn expert_loads_include_diagonal() {
+        let m = sample();
+        assert_eq!(m.expert_loads(), vec![9, 8, 11]);
+    }
+
+    #[test]
+    fn permute_relabels_consistently() {
+        let m = sample();
+        let p = m.permute(&[2, 0, 1]);
+        // original (0,1)=2 should land at (2,0)
+        assert_eq!(p.get(2, 0), 2);
+        assert_eq!(p.total(), m.total());
+        assert_eq!(p.b_max_tokens(), m.b_max_tokens());
+    }
+
+    #[test]
+    fn sum_adds_elementwise() {
+        let m = sample();
+        let s = m.sum(&m);
+        assert_eq!(s.get(2, 1), 12);
+        assert_eq!(s.total(), 2 * m.total());
+    }
+
+    #[test]
+    fn hetero_b_max_scales_by_bandwidth() {
+        let m = sample();
+        let b = m.b_max_hetero(&[1.0, 2.0, 1.0]);
+        // GPU0: max(5,4)/1=5, GPU1: max(5,8)/2=4, GPU2: max(6,4)/1=6
+        assert!((b - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn flows_skip_diagonal_and_zeros() {
+        let m = sample();
+        let fs = m.flows();
+        assert_eq!(fs.len(), 5);
+        assert!(fs.iter().all(|&(i, j, d)| i != j && d > 0));
+    }
+
+    #[test]
+    fn merge_groups_localizes_intra_group_traffic() {
+        let m = TrafficMatrix::from_nested(&[
+            vec![0, 1, 2, 3],
+            vec![4, 0, 5, 6],
+            vec![7, 8, 0, 9],
+            vec![1, 1, 1, 0],
+        ]);
+        let g = m.merge_groups(&[vec![0, 1], vec![2, 3]]);
+        assert_eq!(g.n(), 2);
+        // inter-group 0->1: (0,2)+(0,3)+(1,2)+(1,3) = 2+3+5+6 = 16
+        assert_eq!(g.get(0, 1), 16);
+        // intra-group traffic moved onto the diagonal: (0,1)+(1,0) = 5
+        assert_eq!(g.get(0, 0), 5);
+        // expert load is conserved in total
+        assert_eq!(
+            g.expert_loads().iter().sum::<u64>(),
+            m.expert_loads().iter().sum::<u64>()
+        );
+    }
+}

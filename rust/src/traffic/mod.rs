@@ -1,0 +1,13 @@
+//! Traffic matrices for all-to-all communication.
+//!
+//! The token distribution of an MoE layer's all-to-all is an `n × n` matrix
+//! `D` with `d_ij` = number of tokens GPU `i` sends to GPU `j` (paper §4,
+//! Table 1). The two all-to-alls of one layer are *reversed*: `D_C = D_N^T`
+//! (§2.2). Diagonal entries are local (no network) and are excluded from all
+//! communication-time computations (paper footnote 1).
+
+mod augment;
+mod matrix;
+
+pub use augment::augment_to_balanced;
+pub use matrix::TrafficMatrix;

@@ -1,0 +1,167 @@
+//! Micro-benchmark harness (the offline build has no `criterion`).
+//!
+//! `cargo bench` targets use [`Bench`] to time closures with warmup,
+//! multiple samples, and median/mean/min reporting. Deliberately simple:
+//! wall-clock `Instant` timing around a closure that returns a value (kept
+//! alive via `std::hint::black_box` to defeat dead-code elimination).
+
+use std::time::{Duration, Instant};
+
+/// Timing statistics of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    /// Benchmark label.
+    pub name: String,
+    /// Number of timed iterations.
+    pub iters: u64,
+    /// Median per-iteration time.
+    pub median: Duration,
+    /// Mean per-iteration time.
+    pub mean: Duration,
+    /// Fastest per-iteration time.
+    pub min: Duration,
+}
+
+impl Sample {
+    /// Render as a bench-style line.
+    pub fn report(&self) -> String {
+        format!(
+            "{:<48} {:>12} {:>12} {:>12}   ({} iters)",
+            self.name,
+            fmt_duration(self.median),
+            fmt_duration(self.mean),
+            fmt_duration(self.min),
+            self.iters
+        )
+    }
+}
+
+fn fmt_duration(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3} s", ns as f64 / 1e9)
+    }
+}
+
+/// Micro-benchmark runner.
+pub struct Bench {
+    /// Target total measurement time per case.
+    pub budget: Duration,
+    /// Warmup time per case.
+    pub warmup: Duration,
+    samples: Vec<Sample>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bench {
+    /// Runner with default budget (0.6 s measure, 0.2 s warmup per case).
+    pub fn new() -> Self {
+        Self {
+            budget: Duration::from_millis(600),
+            warmup: Duration::from_millis(200),
+            samples: Vec::new(),
+        }
+    }
+
+    /// Print the header row.
+    pub fn header() {
+        println!(
+            "{:<48} {:>12} {:>12} {:>12}",
+            "benchmark", "median", "mean", "min"
+        );
+        println!("{}", "-".repeat(96));
+    }
+
+    /// Time `f`, printing and recording the result.
+    pub fn run<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &Sample {
+        // Warmup + estimate per-iteration cost.
+        let warm_start = Instant::now();
+        let mut warm_iters = 0u64;
+        while warm_start.elapsed() < self.warmup || warm_iters == 0 {
+            std::hint::black_box(f());
+            warm_iters += 1;
+            if warm_iters > 1_000_000 {
+                break;
+            }
+        }
+        let per_iter = warm_start.elapsed() / warm_iters.max(1) as u32;
+
+        // Sample in batches: aim for ~30 samples within the budget.
+        let target_samples = 30u64;
+        let batch = ((self.budget.as_nanos() as u64
+            / target_samples.max(1)
+            / per_iter.as_nanos().max(1) as u64)
+            .max(1))
+        .min(1_000_000);
+        let mut times: Vec<Duration> = Vec::new();
+        let start = Instant::now();
+        let mut iters = 0u64;
+        while start.elapsed() < self.budget || times.is_empty() {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                std::hint::black_box(f());
+            }
+            times.push(t0.elapsed() / batch as u32);
+            iters += batch;
+            if times.len() >= 200 {
+                break;
+            }
+        }
+        times.sort();
+        let median = times[times.len() / 2];
+        let mean = times.iter().sum::<Duration>() / times.len() as u32;
+        let min = times[0];
+        let sample = Sample {
+            name: name.to_string(),
+            iters,
+            median,
+            mean,
+            min,
+        };
+        println!("{}", sample.report());
+        self.samples.push(sample);
+        self.samples.last().unwrap()
+    }
+
+    /// All recorded samples.
+    pub fn samples(&self) -> &[Sample] {
+        &self.samples
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_records() {
+        let mut b = Bench {
+            budget: Duration::from_millis(20),
+            warmup: Duration::from_millis(5),
+            samples: Vec::new(),
+        };
+        let s = b.run("noop-ish", || 1 + 1).clone();
+        assert!(s.iters > 0);
+        assert!(s.min <= s.median);
+        assert_eq!(b.samples().len(), 1);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_duration(Duration::from_nanos(500)), "500 ns");
+        assert!(fmt_duration(Duration::from_micros(50)).ends_with("µs"));
+        assert!(fmt_duration(Duration::from_millis(5)).ends_with("ms"));
+        assert!(fmt_duration(Duration::from_secs(2)).ends_with("s"));
+    }
+}

@@ -1,0 +1,85 @@
+//! Integration: the figure harness end to end at reduced scale — every
+//! figure runs, produces well-formed reports, and reproduces the paper's
+//! *shape* (who wins).
+
+use aurora::config::EvalConfig;
+use aurora::eval::run_figure;
+
+fn small_cfg() -> EvalConfig {
+    EvalConfig {
+        batch_images: 16,
+        baseline_samples: 3,
+        ..EvalConfig::default()
+    }
+}
+
+#[test]
+fn all_fast_figures_run_and_are_well_formed() {
+    let cfg = small_cfg();
+    for fig in ["11a", "11b", "11c", "11d", "12", "14", "a1", "a2"] {
+        let reports = run_figure(fig, &cfg).unwrap();
+        assert!(!reports.is_empty(), "{fig}: no reports");
+        for r in &reports {
+            assert!(!r.rows.is_empty(), "{fig}: empty table");
+            for (label, values) in &r.rows {
+                assert_eq!(values.len(), r.columns.len(), "{fig}/{label}");
+                for &v in values {
+                    assert!(v.is_finite() && v >= 0.0, "{fig}/{label}: bad value {v}");
+                }
+            }
+            // every report carries a paper-comparison note
+            assert!(!r.notes.is_empty(), "{fig}: missing summary note");
+        }
+    }
+}
+
+#[test]
+fn fig13_runs_at_reduced_scale() {
+    let cfg = EvalConfig {
+        n_experts: 4,
+        n_layers: 1,
+        batch_images: 8,
+        ..EvalConfig::default()
+    };
+    let reports = run_figure("13", &cfg).unwrap();
+    for ratio in reports[0].column("ratio") {
+        assert!((1.0 - 1e-9..2.0).contains(&ratio), "ratio {ratio}");
+    }
+}
+
+#[test]
+fn unknown_figure_is_an_error() {
+    assert!(run_figure("99", &small_cfg()).is_err());
+}
+
+#[test]
+fn reports_serialize_to_json() {
+    let cfg = small_cfg();
+    let reports = run_figure("11a", &cfg).unwrap();
+    let j = reports[0].to_json();
+    let text = j.to_string_compact();
+    let back = aurora::util::Json::parse(&text).unwrap();
+    assert!(back.get("rows").unwrap().as_arr().unwrap().len() >= 4);
+}
+
+/// The headline shape of the paper: Aurora wins every scenario.
+#[test]
+fn aurora_wins_every_scenario_at_reduced_scale() {
+    let cfg = small_cfg();
+    let r11a = &run_figure("11a", &cfg).unwrap()[0];
+    for v in r11a.column("sjf/aurora") {
+        assert!(v >= 1.0 - 1e-9);
+    }
+    let r11b = &run_figure("11b", &cfg).unwrap()[0];
+    for v in r11b.column("rga/aurora") {
+        assert!(v >= 1.0 - 1e-9);
+    }
+    let r11c = &run_figure("11c", &cfg).unwrap()[0];
+    for v in r11c.column("rec/aurora") {
+        assert!(v >= 1.0 - 1e-9, "rec/aurora {v}");
+    }
+    let r11d = &run_figure("11d", &cfg).unwrap()[0];
+    for v in r11d.column("rga+rec/aurora") {
+        assert!(v >= 1.0 - 1e-9, "rga+rec/aurora {v}");
+    }
+}

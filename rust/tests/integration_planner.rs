@@ -1,0 +1,162 @@
+//! Integration: planner → simulator across all four scenarios, plus plan
+//! serialization and the serving-side batching/routing pipeline (no PJRT).
+
+use aurora::cluster::Cluster;
+use aurora::config::EvalConfig;
+use aurora::planner::{Planner, Scenario};
+use aurora::schedule::SchedulePolicy;
+use aurora::serve::{BatcherConfig, DynamicBatcher, Request, Router};
+use aurora::sim::{simulate_colocated, simulate_exclusive};
+use aurora::trace::{limoe_trace, trace_from_json, trace_to_json, Dataset, LimoeVariant};
+use aurora::util::{Json, Rng};
+
+fn traces() -> (aurora::trace::ModelTrace, aurora::trace::ModelTrace) {
+    (
+        limoe_trace(LimoeVariant::B16, Dataset::Coco, 8, 4, 48, 11),
+        limoe_trace(LimoeVariant::B16, Dataset::Imagenet, 8, 4, 48, 12),
+    )
+}
+
+#[test]
+fn all_four_scenarios_plan_and_simulate() {
+    let (a, b) = traces();
+    let cfg = EvalConfig::default();
+    let planner = Planner::default();
+
+    for (cluster, expect_excl, expect_coloc) in [
+        (
+            cfg.homogeneous_cluster(),
+            Scenario::ExclusiveHomogeneous,
+            Scenario::ColocatedHomogeneous,
+        ),
+        (
+            cfg.heterogeneous_cluster(),
+            Scenario::ExclusiveHeterogeneous,
+            Scenario::ColocatedHeterogeneous,
+        ),
+    ] {
+        let excl = planner.plan_exclusive(&a, &cluster);
+        assert_eq!(excl.scenario, expect_excl);
+        for layer in excl.place_a(&a) {
+            let (res, _) = simulate_exclusive(&layer, &cluster, excl.policy);
+            assert!(res.inference_ms > 0.0);
+            assert!(res.utilization > 0.0 && res.utilization <= 1.0);
+        }
+
+        let coloc = planner.plan_colocated(&a, &b, &cluster);
+        assert_eq!(coloc.scenario, expect_coloc);
+        let pa = coloc.place_a(&a);
+        let pb = coloc.place_b(&b);
+        for (la, lb) in pa.iter().zip(&pb) {
+            let (res, t) = simulate_colocated(la, lb, &cluster, coloc.policy);
+            assert!(res.inference_ms > 0.0);
+            assert!(t.end >= t.e_a_b);
+        }
+    }
+}
+
+#[test]
+fn plan_policy_flows_into_simulation() {
+    let (a, _) = traces();
+    let cluster = Cluster::homogeneous(8, 100.0);
+    for policy in [
+        SchedulePolicy::Aurora,
+        SchedulePolicy::Sjf,
+        SchedulePolicy::Rcs { seed: 5 },
+    ] {
+        let planner = Planner {
+            policy,
+            planning_layer: 0,
+        };
+        let plan = planner.plan_exclusive(&a, &cluster);
+        assert_eq!(plan.policy, policy);
+    }
+}
+
+#[test]
+fn plan_json_contains_full_assignments() {
+    let (a, b) = traces();
+    let cluster = Cluster::paper_heterogeneous(8, 100.0);
+    let plan = Planner::default().plan_colocated(&a, &b, &cluster);
+    let j = plan.to_json();
+    let text = j.to_string_compact();
+    let back = Json::parse(&text).unwrap();
+    assert_eq!(
+        back.get("scenario").unwrap().as_str(),
+        Some("colocating+heterogeneous")
+    );
+    assert_eq!(back.get("assignment_a").unwrap().as_arr().unwrap().len(), 8);
+    assert_eq!(back.get("assignment_b").unwrap().as_arr().unwrap().len(), 8);
+}
+
+#[test]
+fn trace_roundtrip_through_files() {
+    let (a, _) = traces();
+    let dir = std::env::temp_dir().join(format!("aurora-test-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("trace.json");
+    std::fs::write(&path, trace_to_json(&a).to_string_compact()).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let back = trace_from_json(&Json::parse(&text).unwrap()).unwrap();
+    assert_eq!(a, back);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The serving pipeline's pure components compose: route → batch → conserve.
+#[test]
+fn serving_pipeline_conserves_requests_under_load() {
+    let mut router = Router::new(3, aurora::serve::router::RoutePolicy::LeastLoaded);
+    let mut batchers: Vec<DynamicBatcher> = (0..3)
+        .map(|_| {
+            DynamicBatcher::new(BatcherConfig {
+                max_batch_tokens: 32,
+                max_batch_requests: 8,
+                max_wait: std::time::Duration::from_millis(1),
+            })
+        })
+        .collect();
+    let mut rng = Rng::new(123);
+    let now = std::time::Instant::now();
+    let mut delivered: Vec<u64> = Vec::new();
+    for id in 0..500u64 {
+        let n_tokens = rng.gen_range(8) as usize + 1;
+        let req = Request::new(id, vec![0.1; n_tokens * 4], 4);
+        let w = router.route(&req);
+        if let Ok(Some(batch)) = batchers[w].push(req, now) {
+            for r in &batch.requests {
+                delivered.push(r.id);
+                router.complete(w, r.n_tokens);
+            }
+        }
+    }
+    for (w, b) in batchers.iter_mut().enumerate() {
+        if let Some(batch) = b.flush_all() {
+            for r in &batch.requests {
+                delivered.push(r.id);
+                router.complete(w, r.n_tokens);
+            }
+        }
+    }
+    delivered.sort();
+    assert_eq!(delivered, (0..500u64).collect::<Vec<_>>());
+    assert!(router.load().iter().all(|&t| t == 0));
+}
+
+/// Scenario-specific sanity: heterogeneous plans use fast GPUs for heavy
+/// experts even at reduced cluster scale (n = 4).
+#[test]
+fn small_cluster_plans_work() {
+    let a = limoe_trace(LimoeVariant::B32, Dataset::Coco, 4, 2, 32, 3);
+    let b = limoe_trace(LimoeVariant::B32, Dataset::Imagenet, 4, 2, 32, 4);
+    let cluster = Cluster::paper_heterogeneous(4, 100.0);
+    let plan = Planner::default().plan_colocated(&a, &b, &cluster);
+    let pairing = plan.pairing().unwrap();
+    assert_eq!(pairing.len(), 4);
+    let (res, _) = simulate_colocated(
+        &a.layers[0].placed(&plan.assignment_a),
+        &b.layers[0].placed(plan.assignment_b.as_ref().unwrap()),
+        &cluster,
+        plan.policy,
+    );
+    assert!(res.inference_ms > 0.0);
+}

@@ -1,0 +1,310 @@
+//! Seeded randomized property checks over the DESIGN.md invariants.
+//!
+//! The offline build has no `proptest`, so this file implements the same
+//! discipline by hand: a deterministic generator ([`aurora::util::Rng`])
+//! drives many random instances per property; every failure prints the seed
+//! so the case replays exactly.
+
+use aurora::assignment::{brute_force_assignment, sorted_assignment};
+use aurora::cluster::{Cluster, GpuSpec};
+use aurora::colocation::hetero::{brute_force_exact, decoupled_solution};
+use aurora::colocation::{case1_pairing, case2_pairing, send_recv_volumes};
+use aurora::matching::{bottleneck_matching, exhaustive_bottleneck, hungarian_min_sum};
+use aurora::schedule::{
+    aurora_schedule, comm_time, simulate_priority_order, validate_slot_schedule, SchedulePolicy,
+};
+use aurora::sim::{simulate_colocated, simulate_exclusive, MoeLayerStats};
+use aurora::traffic::TrafficMatrix;
+use aurora::util::Rng;
+
+/// Random traffic matrix with off-diagonal entries in `[0, hi)`.
+fn rand_matrix(rng: &mut Rng, n: usize, hi: u64) -> TrafficMatrix {
+    let mut d = TrafficMatrix::zeros(n);
+    for i in 0..n {
+        for j in 0..n {
+            if i != j {
+                d.set(i, j, rng.gen_range(hi));
+            }
+        }
+    }
+    d
+}
+
+/// MoE-shaped stats (uniform row sums) used where theorems assume them.
+fn moe_stats(rng: &mut Rng, n: usize, per_source: u64) -> MoeLayerStats {
+    let pop: Vec<f64> = (0..n).map(|_| rng.gen_f64() + 0.05).collect();
+    let mut d = TrafficMatrix::zeros(n);
+    for i in 0..n {
+        for _ in 0..per_source {
+            let mut j = rng.weighted_index(&pop);
+            if j == i {
+                j = (j + 1) % n;
+            }
+            d.add(i, j, 1);
+        }
+    }
+    MoeLayerStats {
+        traffic: d,
+        gate_ms: 0.1,
+        ffn_ms_per_token: 0.01,
+        agg_ms: 0.05,
+    }
+}
+
+/// PROPERTY: Aurora's slot schedule is contention-free, conserving, and
+/// achieves exactly `b_max` for arbitrary traffic matrices.
+#[test]
+fn prop_aurora_schedule_valid_and_optimal() {
+    for seed in 0..150u64 {
+        let mut rng = Rng::new(seed + 1);
+        let n = 2 + (rng.gen_range(11) as usize);
+        let d = rand_matrix(&mut rng, n, 60);
+        let s = aurora_schedule(&d);
+        validate_slot_schedule(&d, &s).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+    }
+}
+
+/// PROPERTY: no priority order beats the Theorem 4.2 lower bound, and the
+/// bound is tight for Aurora.
+#[test]
+fn prop_lower_bound_dominates_all_orders() {
+    for seed in 0..80u64 {
+        let mut rng = Rng::new(seed ^ 0xB0);
+        let n = 2 + (rng.gen_range(7) as usize);
+        let d = rand_matrix(&mut rng, n, 40);
+        let bound = d.b_max_tokens() as f64;
+        let mut flows = d.flows();
+        rng.shuffle(&mut flows);
+        let order: Vec<(usize, usize)> = flows.iter().map(|&(i, j, _)| (i, j)).collect();
+        let res = simulate_priority_order(&d, &order, &vec![1.0; n]);
+        assert!(res.makespan >= bound - 1e-9, "seed {seed}");
+        let aurora = comm_time(&d, &vec![1.0; n], SchedulePolicy::Aurora);
+        assert!(aurora.makespan <= res.makespan + 1e-9, "seed {seed}");
+    }
+}
+
+/// PROPERTY: reversed all-to-all (transpose) has identical Aurora time.
+#[test]
+fn prop_reversed_all_to_all_symmetric() {
+    for seed in 0..100u64 {
+        let mut rng = Rng::new(seed ^ 0x1E);
+        let n = 2 + (rng.gen_range(9) as usize);
+        let d = rand_matrix(&mut rng, n, 50);
+        assert_eq!(d.b_max_tokens(), d.transpose().b_max_tokens(), "seed {seed}");
+    }
+}
+
+/// PROPERTY: bottleneck matching equals the exhaustive optimum (n ≤ 6) and
+/// never exceeds any sampled matching (n = 12).
+#[test]
+fn prop_bottleneck_matching_optimal() {
+    for seed in 0..40u64 {
+        let mut rng = Rng::new(seed ^ 0xB077);
+        let n = 2 + (rng.gen_range(5) as usize);
+        let w: Vec<Vec<f64>> = (0..n)
+            .map(|_| (0..n).map(|_| rng.gen_range(100) as f64).collect())
+            .collect();
+        let (b, _) = bottleneck_matching(n, |i, j| w[i][j]);
+        let (opt, _) = exhaustive_bottleneck(n, |i, j| w[i][j]);
+        assert_eq!(b, opt, "seed {seed}");
+    }
+    let mut rng = Rng::new(0x51);
+    let n = 12;
+    let w: Vec<Vec<f64>> = (0..n)
+        .map(|_| (0..n).map(|_| rng.gen_f64()).collect())
+        .collect();
+    let (b, _) = bottleneck_matching(n, |i, j| w[i][j]);
+    for _ in 0..500 {
+        let p = rng.permutation(n);
+        let m = (0..n).map(|i| w[i][p[i]]).fold(0.0, f64::max);
+        assert!(b <= m + 1e-12);
+    }
+}
+
+/// PROPERTY: Hungarian min-sum matches the exhaustive min-sum at small n.
+#[test]
+fn prop_hungarian_matches_exhaustive() {
+    use aurora::matching::for_each_permutation;
+    for seed in 0..30u64 {
+        let mut rng = Rng::new(seed ^ 0x40);
+        let n = 2 + (rng.gen_range(4) as usize);
+        let w: Vec<Vec<f64>> = (0..n)
+            .map(|_| (0..n).map(|_| rng.gen_range(50) as f64).collect())
+            .collect();
+        let (total, _) = hungarian_min_sum(&w);
+        let mut best = f64::INFINITY;
+        for_each_permutation(n, |p| {
+            let s: f64 = (0..n).map(|i| w[i][p[i]]).sum();
+            best = best.min(s);
+        });
+        assert!((total - best).abs() < 1e-9, "seed {seed}");
+    }
+}
+
+/// PROPERTY (Theorem 6.2): the alternating pairing minimizes the max pair
+/// sum versus every permutation (n ≤ 6).
+#[test]
+fn prop_case1_pairing_optimal() {
+    use aurora::matching::for_each_permutation;
+    for seed in 0..40u64 {
+        let mut rng = Rng::new(seed ^ 0xC1C1);
+        let n = 1 + (rng.gen_range(5) as usize);
+        let a: Vec<u64> = (0..n).map(|_| rng.gen_range(100)).collect();
+        let b: Vec<u64> = (0..n).map(|_| rng.gen_range(100)).collect();
+        let pi = case1_pairing(&a, &b);
+        let ours = (0..n).map(|i| a[i] + b[pi[i]]).max().unwrap();
+        let mut best = u64::MAX;
+        for_each_permutation(n, |p| {
+            best = best.min((0..n).map(|i| a[i] + b[p[i]]).max().unwrap());
+        });
+        assert_eq!(ours, best, "seed {seed}");
+    }
+}
+
+/// PROPERTY (§6.2 Case II): the bottleneck colocation minimizes aggregated
+/// `b_max` over all sampled pairings.
+#[test]
+fn prop_case2_minimizes_aggregated_bmax() {
+    use aurora::colocation::aggregated_b_max;
+    for seed in 0..20u64 {
+        let mut rng = Rng::new(seed ^ 0xC2);
+        let n = 4 + (rng.gen_range(5) as usize);
+        let da = rand_matrix(&mut rng, n, 40);
+        let db = rand_matrix(&mut rng, n, 40);
+        let (_, pi) = case2_pairing(&da, &db);
+        let ours = aggregated_b_max(&da, &db, &pi);
+        for _ in 0..100 {
+            let p = rng.permutation(n);
+            assert!(ours <= aggregated_b_max(&da, &db, &p), "seed {seed}");
+        }
+    }
+}
+
+/// PROPERTY (Theorem 5.1): sorted assignment is end-to-end optimal among all
+/// assignments on MoE-shaped traffic with aligned GPU perf (n = 5 exhaustive).
+#[test]
+fn prop_sorted_assignment_beats_exhaustive_search() {
+    for seed in 0..10u64 {
+        let mut rng = Rng::new(seed ^ 0x51A);
+        let stats = moe_stats(&mut rng, 5, 40);
+        let cluster = Cluster::new(vec![
+            GpuSpec {
+                flops_scale: 1.0,
+                bandwidth: 1.0,
+            },
+            GpuSpec {
+                flops_scale: 0.9,
+                bandwidth: 0.9,
+            },
+            GpuSpec {
+                flops_scale: 0.7,
+                bandwidth: 0.7,
+            },
+            GpuSpec {
+                flops_scale: 0.5,
+                bandwidth: 0.5,
+            },
+            GpuSpec {
+                flops_scale: 0.4,
+                bandwidth: 0.4,
+            },
+        ]);
+        let eval = |perm: &[usize]| {
+            simulate_exclusive(&stats.placed(perm), &cluster, SchedulePolicy::Aurora)
+                .0
+                .inference_ms
+        };
+        let sorted = sorted_assignment(&stats.expert_loads(), &cluster);
+        let (best, _) = brute_force_assignment(5, eval);
+        assert!(eval(&sorted) <= best + 1e-9, "seed {seed}");
+    }
+}
+
+/// PROPERTY: the colocated timeline is monotone in the workload — adding
+/// traffic or compute never shortens the layer.
+#[test]
+fn prop_colocated_timeline_monotone_in_load() {
+    for seed in 0..20u64 {
+        let mut rng = Rng::new(seed ^ 0x7D);
+        let n = 4;
+        let a = moe_stats(&mut rng, n, 30);
+        let b = moe_stats(&mut rng, n, 30);
+        let cluster = Cluster::homogeneous(n, 1.0);
+        let (base, _) = simulate_colocated(&a, &b, &cluster, SchedulePolicy::Aurora);
+        // inflate model b's traffic
+        let mut heavier = b.clone();
+        let mut t = heavier.traffic.clone();
+        for i in 0..n {
+            for j in 0..n {
+                if i != j {
+                    t.set(i, j, t.get(i, j) + 5);
+                }
+            }
+        }
+        heavier.traffic = t;
+        let (more, _) = simulate_colocated(&a, &heavier, &cluster, SchedulePolicy::Aurora);
+        assert!(more.inference_ms >= base.inference_ms - 1e-9, "seed {seed}");
+        // inflate ffn cost
+        let slower = MoeLayerStats {
+            ffn_ms_per_token: a.ffn_ms_per_token * 2.0,
+            ..a.clone()
+        };
+        let (comp, _) = simulate_colocated(&slower, &b, &cluster, SchedulePolicy::Aurora);
+        assert!(comp.inference_ms >= base.inference_ms - 1e-9, "seed {seed}");
+    }
+}
+
+/// PROPERTY: the decoupled heterogeneous heuristic never beats the exact
+/// optimum, and stays within 2x of it at n = 4 (paper: 1.07x at n = 8).
+#[test]
+fn prop_decoupled_vs_exact_bounded_gap() {
+    for seed in 0..10u64 {
+        let mut rng = Rng::new(seed ^ 0xDEC);
+        let n = 4;
+        let da = rand_matrix(&mut rng, n, 30);
+        let db = rand_matrix(&mut rng, n, 30);
+        let speeds = [1.0, 0.8, 0.5, 0.4];
+        let (a_s, a_r) = send_recv_volumes(&da);
+        let (b_s, b_r) = send_recv_volumes(&db);
+        let cost = move |i: usize, j: usize, g: usize| {
+            ((a_s[i] + b_s[j]).max(a_r[i] + b_r[j])) as f64 / speeds[g]
+        };
+        let sol = decoupled_solution(&da, &db, n, &cost);
+        let (opt, _, _) = brute_force_exact(n, |pi, sg| {
+            (0..n).map(|i| cost(i, pi[i], sg[i])).fold(0.0, f64::max)
+        });
+        assert!(
+            sol.bottleneck >= opt - 1e-9,
+            "seed {seed}: heuristic beat the optimum?"
+        );
+        assert!(
+            sol.bottleneck <= opt * 2.0 + 1e-9,
+            "seed {seed}: gap too large ({} vs {})",
+            sol.bottleneck,
+            opt
+        );
+    }
+}
+
+/// PROPERTY: traffic matrix algebra — permutation preserves totals and
+/// `b_max`; merging conserves expert load totals.
+#[test]
+fn prop_matrix_algebra_invariants() {
+    for seed in 0..50u64 {
+        let mut rng = Rng::new(seed ^ 0xA1);
+        let n = 2 + (rng.gen_range(7) as usize) * 2; // even for merging
+        let d = rand_matrix(&mut rng, n, 30);
+        let p = rng.permutation(n);
+        let dp = d.permute(&p);
+        assert_eq!(d.total(), dp.total(), "seed {seed}");
+        assert_eq!(d.b_max_tokens(), dp.b_max_tokens(), "seed {seed}");
+        let groups: Vec<Vec<usize>> = (0..n / 2).map(|g| vec![2 * g, 2 * g + 1]).collect();
+        let merged = d.merge_groups(&groups);
+        assert_eq!(
+            merged.expert_loads().iter().sum::<u64>(),
+            d.expert_loads().iter().sum::<u64>(),
+            "seed {seed}"
+        );
+        assert!(merged.b_max_tokens() <= d.b_max_tokens() * 2, "seed {seed}");
+    }
+}
