@@ -27,6 +27,15 @@ fn main() {
     println!("expert pairing (a-expert i shares its GPU with b-expert pairing[i]):");
     println!("  {pairing:?}");
 
+    // The same plan as a generalized Deployment — the placement core's view
+    // (any model count, any experts-per-GPU) that serving and the group
+    // simulator consume.
+    let deployment = plan.to_deployment();
+    println!(
+        "as generalized deployment: {}",
+        deployment.to_json().to_string_compact()
+    );
+
     let pa = plan.place_a(&a);
     let pb = plan.place_b(&b);
     let (lina_a, lina_b) = lina_colocated_times(&a, &b, &cluster, SchedulePolicy::Aurora);

@@ -20,6 +20,7 @@ mod fig12;
 mod fig13;
 mod fig14;
 mod lina;
+mod multi;
 mod report;
 mod workloads;
 
@@ -29,6 +30,7 @@ pub use fig12::{fig12a, fig12b};
 pub use fig13::fig13;
 pub use fig14::{fig14a, fig14b};
 pub use lina::{lina_colocated_times, lina_utilization};
+pub use multi::{multi_model_comparison, multi_workload, random_deployment};
 pub use report::Report;
 pub use workloads::Workloads;
 
@@ -57,6 +59,9 @@ pub fn run_figure(name: &str, cfg: &EvalConfig) -> Result<Vec<Report>, String> {
             "14b" => vec![fig14b(cfg, &w)],
             _ => vec![fig14a(cfg, &w), fig14b(cfg, &w)],
         },
+        // Beyond-paper extension: generalized multi-model placement
+        // (3 models, 2x the cluster's expert slots each).
+        "multi" => vec![multi_model_comparison(cfg, 3, cfg.n_experts * 2)],
         "all" => {
             let mut r = vec![
                 fig11a(cfg, &w),
@@ -71,11 +76,12 @@ pub fn run_figure(name: &str, cfg: &EvalConfig) -> Result<Vec<Report>, String> {
             r.push(fig14b(cfg, &w));
             r.push(ablation_schedulers(cfg, &w));
             r.push(ablation_top2(cfg, &w));
+            r.push(multi_model_comparison(cfg, 3, cfg.n_experts * 2));
             r
         }
         other => {
             return Err(format!(
-                "unknown figure '{other}' (try 11a/11b/11c/11d/12/13/14/a1/all)"
+                "unknown figure '{other}' (try 11a/11b/11c/11d/12/13/14/a1/a2/ablation/multi/all)"
             ))
         }
     };

@@ -1,0 +1,136 @@
+//! Multi-model extension figure: generalized placement vs random placement.
+//!
+//! The paper stops at two colocated models; this driver evaluates the
+//! generalized planner ([`crate::planner::Planner::plan_multi`]) on M ≥ 2
+//! models whose expert counts may exceed the cluster size, against the REC
+//! analogue (uniformly random expert→GPU placement), on both cluster kinds.
+
+use super::report::Report;
+use crate::config::EvalConfig;
+use crate::placement::{Deployment, Scenario};
+use crate::planner::Planner;
+use crate::trace::{limoe_trace, Dataset, LimoeVariant, ModelTrace};
+use crate::util::Rng;
+
+/// Generate `n_models` traces with `n_experts` experts each, cycling the
+/// paper's model/dataset grid for variety.
+pub fn multi_workload(cfg: &EvalConfig, n_models: usize, n_experts: usize) -> Vec<ModelTrace> {
+    let variants = [LimoeVariant::B16, LimoeVariant::B32];
+    let datasets = [Dataset::Coco, Dataset::Imagenet];
+    (0..n_models)
+        .map(|m| {
+            limoe_trace(
+                variants[m % variants.len()],
+                datasets[(m / variants.len()) % datasets.len()],
+                n_experts,
+                cfg.n_layers,
+                cfg.batch_images,
+                cfg.seed.wrapping_add(100 + m as u64),
+            )
+        })
+        .collect()
+}
+
+/// A uniformly random deployment of the given traces (the REC baseline
+/// generalized: every expert lands on an independent uniform GPU).
+pub fn random_deployment(
+    traces: &[&ModelTrace],
+    n_gpus: usize,
+    scenario: Scenario,
+    rng: &mut Rng,
+) -> Deployment {
+    let assignments: Vec<Vec<usize>> = traces
+        .iter()
+        .map(|t| {
+            (0..t.n_experts())
+                .map(|_| rng.gen_range(n_gpus as u64) as usize)
+                .collect()
+        })
+        .collect();
+    Deployment::new(
+        n_gpus,
+        assignments,
+        crate::schedule::SchedulePolicy::Aurora,
+        scenario,
+    )
+    .expect("random assignment is in range")
+}
+
+/// Planned vs random placement for `n_models` models of `n_experts` experts
+/// each, on the config's homogeneous and heterogeneous clusters. Columns are
+/// total simulated inference time (ms, all layers) and the speedup of the
+/// plan over the random mean.
+pub fn multi_model_comparison(cfg: &EvalConfig, n_models: usize, n_experts: usize) -> Report {
+    let traces = multi_workload(cfg, n_models, n_experts);
+    let refs: Vec<&ModelTrace> = traces.iter().collect();
+    let planner = Planner::default();
+    let mut report = Report::new(
+        &format!("Multi-model placement: {n_models} models x {n_experts} experts"),
+        &["aurora (ms)", "random mean (ms)", "speedup"],
+    );
+
+    for (label, cluster) in [
+        ("homogeneous", cfg.homogeneous_cluster()),
+        ("heterogeneous", cfg.heterogeneous_cluster()),
+    ] {
+        let dep = planner
+            .plan_multi(&refs, &cluster)
+            .expect("multi plan succeeds for M >= 1");
+        let t_plan = dep.total_inference_ms(&refs, &cluster);
+
+        let scenario = dep.scenario;
+        let mut rng = Rng::new(cfg.seed ^ 0x3317);
+        let mut total = 0.0;
+        for _ in 0..cfg.baseline_samples {
+            let r = random_deployment(&refs, cluster.len(), scenario, &mut rng);
+            total += r.total_inference_ms(&refs, &cluster);
+        }
+        let t_rand = total / cfg.baseline_samples as f64;
+        report.row(label, vec![t_plan, t_rand, t_rand / t_plan]);
+    }
+    let speedups = report.column("speedup");
+    let max_speedup = speedups.iter().cloned().fold(0.0, f64::max);
+    report.note(format!(
+        "generalized placement up to {max_speedup:.2}x faster than random placement"
+    ));
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comparison_report_shape_and_wins() {
+        let cfg = EvalConfig {
+            baseline_samples: 3,
+            n_layers: 2,
+            batch_images: 24,
+            ..EvalConfig::default()
+        };
+        let r = multi_model_comparison(&cfg, 3, 16);
+        assert_eq!(r.rows.len(), 2);
+        for (label, vals) in &r.rows {
+            assert!(vals[0] > 0.0, "{label}: plan time must be positive");
+            assert!(
+                vals[0] <= vals[1] * 1.05,
+                "{label}: planned {} should not lose to random mean {}",
+                vals[0],
+                vals[1]
+            );
+        }
+    }
+
+    #[test]
+    fn workload_generator_respects_shape() {
+        let cfg = EvalConfig::default();
+        let w = multi_workload(&cfg, 5, 12);
+        assert_eq!(w.len(), 5);
+        for t in &w {
+            assert_eq!(t.n_experts(), 12);
+            assert_eq!(t.layers.len(), cfg.n_layers);
+        }
+        // distinct seeds -> distinct traces
+        assert_ne!(w[0], w[2]);
+    }
+}

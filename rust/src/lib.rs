@@ -1,28 +1,45 @@
 //! # Aurora — MoE inference optimization via model deployment and communication scheduling
 //!
-//! Reproduction of *"Optimizing Mixture-of-Experts Inference Time Combining Model
-//! Deployment and Communication Scheduling"* (Li et al., 2024).
+//! Reproduction and extension of *"Optimizing Mixture-of-Experts Inference
+//! Time Combining Model Deployment and Communication Scheduling"* (Li et
+//! al., 2024), grown toward a production-shaped serving stack.
 //!
-//! Aurora minimizes MoE inference time by jointly deciding:
+//! Aurora minimizes MoE inference time by jointly deciding **where experts
+//! live** and **in what order tokens move**:
 //!
-//! 1. **Communication scheduling** ([`schedule`]) — the order in which tokens are
-//!    transmitted during the two all-to-all collectives of an MoE layer. Aurora's
-//!    schedule (Alg. 1 / Theorem 4.2) is contention-free at the receivers and
-//!    achieves the lower bound `b_max = max(row sums, col sums) / B`.
-//! 2. **GPU assignment** ([`assignment`]) — on heterogeneous clusters, which expert
-//!    goes on which GPU type (Theorem 5.1: sort experts by load, GPUs by
-//!    performance, match in order).
-//! 3. **Expert colocation** ([`colocation`]) — which experts of *two different* MoE
-//!    models share a GPU, so that one model computes while the other communicates
+//! 1. **Communication scheduling** ([`schedule`]) — the order in which
+//!    tokens are transmitted during the two all-to-all collectives of an MoE
+//!    layer. Aurora's slot schedule (Alg. 1 / Theorem 4.2) is
+//!    contention-free at every receiver and achieves the lower bound
+//!    `b_max = max(row sums, col sums) / B`; a validator
+//!    ([`schedule::validate_slot_schedule`]) machine-checks every schedule.
+//! 2. **Placement** ([`placement`]) — the generalized core. A
+//!    [`placement::Deployment`] maps `(model, expert)` → GPU with **no shape
+//!    restrictions**: any number of colocated models, several experts per
+//!    GPU, and per-model expert counts independent of the cluster size. The
+//!    paper's one/two-model shapes are the special cases the theorems cover;
+//!    [`placement::Scenario`] is the (extended) Fig. 2 decision tree that
+//!    picks the right path.
+//! 3. **Assignment** ([`assignment`]) — on heterogeneous clusters, which
+//!    expert goes on which GPU type (Theorem 5.1: sort experts by load, GPUs
+//!    by performance, match in order).
+//! 4. **Colocation** ([`colocation`]) — which experts of different models
+//!    share a GPU so one model computes while another communicates
 //!    (Theorem 6.2 / bottleneck matching; NP-hard decoupled heuristic in the
-//!    heterogeneous case, §7.2).
+//!    heterogeneous case, §7.2). [`planner::Planner::plan_multi`] stacks
+//!    these pairwise matchings iteratively to place M ≥ 3 models.
 //!
-//! The crate also ships the substrates the paper's evaluation depends on: a
-//! big-switch cluster simulator ([`sim`], [`cluster`]), LIMoE-like trace generation
-//! ([`trace`]), a deployment planner ([`planner`]), a serving runtime with a PJRT
-//! executor that runs the AOT-compiled JAX/Pallas MoE layer ([`serve`],
-//! [`runtime`]), and an evaluation harness regenerating every figure of the paper
-//! ([`eval`]).
+//! The crate also ships the substrates the evaluation depends on: a
+//! big-switch cluster simulator ([`sim`], [`cluster`]) whose generalized
+//! entry point [`sim::simulate_group`] serializes compute across all
+//! colocated experts of a GPU and aggregates per-GPU traffic before
+//! scheduling; LIMoE-like trace generation ([`trace`]); the deployment
+//! planner ([`planner`]); a serving runtime with a PJRT executor
+//! ([`serve`], [`runtime`]); and an evaluation harness regenerating every
+//! figure of the paper plus the multi-model extension ([`eval`]).
+//!
+//! See `docs/architecture.md` for the layer map, the Scenario decision tree,
+//! and which code paths are exact versus heuristic.
 
 pub mod assignment;
 pub mod cluster;
@@ -30,6 +47,7 @@ pub mod colocation;
 pub mod config;
 pub mod eval;
 pub mod matching;
+pub mod placement;
 pub mod planner;
 pub mod runtime;
 pub mod schedule;
@@ -40,5 +58,6 @@ pub mod traffic;
 pub mod util;
 
 pub use cluster::{Cluster, GpuSpec};
+pub use placement::{Deployment, PlacementError};
 pub use planner::{DeploymentPlan, Planner, Scenario};
 pub use traffic::TrafficMatrix;

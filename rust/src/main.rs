@@ -1,22 +1,24 @@
 //! `aurora` — CLI for the Aurora MoE inference optimizer.
 //!
 //! Subcommands:
-//! * `eval --figure <11a|11b|11c|11d|12|13|14|a1|all>` — regenerate a paper
-//!   figure on synthetic LIMoE-like traces.
-//! * `plan --cluster <homo|hetero> --models <1|2>` — print a deployment plan
-//!   as JSON.
-//! * `simulate --cluster <homo|hetero> --models <1|2>` — per-layer inference
-//!   times and utilization for the planned deployment.
+//! * `eval --figure <11a|11b|11c|11d|12|13|14|a1|a2|ablation|multi|all>` —
+//!   regenerate a
+//!   paper figure (or the multi-model extension) on synthetic LIMoE traces.
+//! * `plan --cluster <homo|hetero> --models <N> [--experts-per-gpu <K>]` —
+//!   print a deployment plan as JSON. N ≤ 2 with one expert per GPU uses the
+//!   paper's exact paths; anything else uses the generalized placement core.
+//! * `simulate --cluster <homo|hetero> --models <N> [--experts-per-gpu <K>]`
+//!   — per-layer inference times and utilization for the planned deployment.
 //! * `trace --out <file>` — dump the generated traces to JSON.
 //! * `serve` — run the end-to-end serving demo on the AOT-compiled MoE model
 //!   (requires `make artifacts`).
 
 use aurora::config::EvalConfig;
-use aurora::eval::{run_figure, Workloads};
+use aurora::eval::{multi_workload, run_figure, Workloads};
 use aurora::planner::Planner;
 use aurora::schedule::SchedulePolicy;
 use aurora::sim::{simulate_colocated, simulate_exclusive};
-use aurora::trace::trace_to_json;
+use aurora::trace::{trace_to_json, ModelTrace};
 use aurora::util::Json;
 
 fn main() {
@@ -50,11 +52,14 @@ fn usage() {
         "aurora — MoE inference optimization (paper reproduction)
 
 USAGE:
-  aurora eval     --figure <11a|11b|11c|11d|12|13|14|a1|all> [--config f.json] [--json out.json]
-  aurora plan     --cluster <homo|hetero> --models <1|2> [--config f.json]
-  aurora simulate --cluster <homo|hetero> --models <1|2> [--policy aurora|sjf|ljf|pairwise|rcs]
+  aurora eval     --figure <11a|11b|11c|11d|12|13|14|a1|a2|ablation|multi|all> [--config f.json] [--json out.json]
+  aurora plan     --cluster <homo|hetero> --models <N> [--experts-per-gpu <K>] [--config f.json]
+  aurora simulate --cluster <homo|hetero> --models <N> [--experts-per-gpu <K>] [--policy aurora|sjf|ljf|pairwise|rcs]
   aurora trace    --out <file.json> [--config f.json]
   aurora serve    [--artifacts DIR] [--requests N] [--batch N] [--policy aurora|rcs]
+
+  --models N           colocate N models (N >= 3 uses the generalized placement core)
+  --experts-per-gpu K  give every model K*n_gpus experts (K >= 2 packs multiple experts per GPU)
 "
     );
 }
@@ -133,22 +138,60 @@ fn cluster_for(opts: &Opts, cfg: &EvalConfig) -> Result<aurora::Cluster, String>
     }
 }
 
-fn cmd_plan(opts: &Opts) -> Result<(), String> {
-    let cfg = opts.config()?;
-    let cluster = cluster_for(opts, &cfg)?;
-    let w = Workloads::generate(&cfg);
-    let planner = Planner::default();
+/// Parse and validate `--models` / `--experts-per-gpu`. `experts_per_gpu`
+/// is `None` when the flag is absent — `None` with N ≤ 2 is the paper's
+/// shape (classic `DeploymentPlan` output); anything else takes the
+/// generalized placement path.
+fn parse_shape(opts: &Opts) -> Result<(usize, Option<usize>), String> {
     let models: usize = opts
         .get("models")
         .unwrap_or("1")
         .parse()
         .map_err(|_| "bad --models")?;
-    let plan = match models {
-        1 => planner.plan_exclusive(&w.b16_coco, &cluster),
-        2 => planner.plan_colocated(&w.b16_coco, &w.b32_coco, &cluster),
-        _ => return Err("--models must be 1 or 2 (§2.4: at most two per GPU)".into()),
+    if models == 0 {
+        return Err("--models must be >= 1".into());
+    }
+    let per_gpu = match opts.get("experts-per-gpu") {
+        None => None,
+        Some(s) => {
+            let k: usize = s.parse().map_err(|_| "bad --experts-per-gpu")?;
+            if k == 0 {
+                return Err("--experts-per-gpu must be >= 1".into());
+            }
+            // An explicit K=1 is the default shape: normalize so it plans
+            // the same workload as omitting the flag.
+            if k == 1 {
+                None
+            } else {
+                Some(k)
+            }
+        }
     };
-    println!("{}", plan.to_json().to_string_compact());
+    Ok((models, per_gpu))
+}
+
+fn cmd_plan(opts: &Opts) -> Result<(), String> {
+    let cfg = opts.config()?;
+    let cluster = cluster_for(opts, &cfg)?;
+    let planner = Planner::default();
+    let (models, per_gpu) = parse_shape(opts)?;
+    // The paper's shapes print the classic two-model plan JSON for parity.
+    if per_gpu.is_none() && models <= 2 {
+        let w = Workloads::generate(&cfg);
+        let plan = match models {
+            1 => planner.plan_exclusive(&w.b16_coco, &cluster),
+            _ => planner.plan_colocated(&w.b16_coco, &w.b32_coco, &cluster),
+        };
+        println!("{}", plan.to_json().to_string_compact());
+        return Ok(());
+    }
+    let n_experts = per_gpu.unwrap_or(1) * cluster.len();
+    let traces = multi_workload(&cfg, models, n_experts);
+    let refs: Vec<&ModelTrace> = traces.iter().collect();
+    let dep = planner
+        .plan_multi(&refs, &cluster)
+        .map_err(|e| e.to_string())?;
+    println!("{}", dep.to_json().to_string_compact());
     Ok(())
 }
 
@@ -156,16 +199,11 @@ fn cmd_simulate(opts: &Opts) -> Result<(), String> {
     let cfg = opts.config()?;
     let cluster = cluster_for(opts, &cfg)?;
     let policy = opts.policy()?;
-    let w = Workloads::generate(&cfg);
     let planner = Planner {
         policy,
         planning_layer: 0,
     };
-    let models: usize = opts
-        .get("models")
-        .unwrap_or("1")
-        .parse()
-        .map_err(|_| "bad --models")?;
+    let (models, per_gpu) = parse_shape(opts)?;
     println!(
         "scenario: {} model(s), {} cluster, policy {}",
         models,
@@ -176,8 +214,9 @@ fn cmd_simulate(opts: &Opts) -> Result<(), String> {
         },
         policy.name()
     );
-    match models {
-        1 => {
+    match (models, per_gpu) {
+        (1, None) => {
+            let w = Workloads::generate(&cfg);
             let plan = planner.plan_exclusive(&w.b16_coco, &cluster);
             for (k, layer) in plan.place_a(&w.b16_coco).iter().enumerate() {
                 let (res, _) = simulate_exclusive(layer, &cluster, policy);
@@ -190,7 +229,8 @@ fn cmd_simulate(opts: &Opts) -> Result<(), String> {
                 );
             }
         }
-        2 => {
+        (2, None) => {
+            let w = Workloads::generate(&cfg);
             let plan = planner.plan_colocated(&w.b16_coco, &w.b32_coco, &cluster);
             let pa = plan.place_a(&w.b16_coco);
             let pb = plan.place_b(&w.b32_coco);
@@ -205,7 +245,31 @@ fn cmd_simulate(opts: &Opts) -> Result<(), String> {
                 );
             }
         }
-        _ => return Err("--models must be 1 or 2".into()),
+        _ => {
+            // Generalized path: N models, K experts per GPU slot.
+            let k = per_gpu.unwrap_or(1);
+            let traces = multi_workload(&cfg, models, k * cluster.len());
+            let refs: Vec<&ModelTrace> = traces.iter().collect();
+            let dep = planner
+                .plan_multi(&refs, &cluster)
+                .map_err(|e| e.to_string())?;
+            println!(
+                "deployment: {} models x {} experts ({} per GPU slot), max group {}",
+                dep.n_models(),
+                dep.n_experts(0),
+                k,
+                dep.max_group_size()
+            );
+            for (k, res) in dep.simulate(&refs, &cluster).iter().enumerate() {
+                println!(
+                    "layer {}: inference {:.3} ms, util {:.1}%, agg comm {:.3} ms",
+                    k + 1,
+                    res.inference_ms,
+                    res.utilization * 100.0,
+                    res.comm_ms
+                );
+            }
+        }
     }
     Ok(())
 }

@@ -9,6 +9,8 @@
 //! ≤ 75% imprecision with ≤ 15.8% degradation, so the default threshold
 //! (0.25) replans long before the plan decays materially.
 
+use crate::placement::Deployment;
+
 /// Decision returned by [`AdaptiveReplanner::observe`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ReplanDecision {
@@ -51,6 +53,30 @@ impl AdaptiveReplanner {
     /// Defaults tuned to the Fig. 14 robustness envelope.
     pub fn with_defaults(plan_loads: &[u64]) -> Self {
         Self::new(plan_loads, 0.25, 4096)
+    }
+
+    /// Watch a generalized placement: the baseline is the **per-GPU**
+    /// aggregated load distribution the deployment was optimized for (what
+    /// actually decays when routing drifts is the GPU-group balance, not any
+    /// single expert's share). Feed observations through
+    /// [`AdaptiveReplanner::observe_deployment`].
+    pub fn for_deployment(
+        deployment: &Deployment,
+        model: usize,
+        plan_expert_loads: &[u64],
+    ) -> Self {
+        Self::with_defaults(&deployment.gpu_loads(model, plan_expert_loads))
+    }
+
+    /// [`AdaptiveReplanner::observe`] for deployment-watching replanners:
+    /// aggregates a per-expert batch histogram into per-GPU loads first.
+    pub fn observe_deployment(
+        &mut self,
+        deployment: &Deployment,
+        model: usize,
+        batch_histogram: &[u64],
+    ) -> ReplanDecision {
+        self.observe(&deployment.gpu_loads(model, batch_histogram))
     }
 
     /// Number of replans triggered so far.
@@ -166,5 +192,33 @@ mod tests {
     fn mismatched_histogram_panics() {
         let mut r = AdaptiveReplanner::with_defaults(&[1, 2]);
         r.observe(&[1, 2, 3]);
+    }
+
+    #[test]
+    fn deployment_watcher_tracks_gpu_groups_not_experts() {
+        use crate::placement::{Deployment, Scenario};
+        use crate::schedule::SchedulePolicy;
+        // 4 experts on 2 GPUs: {0,1} on GPU 0, {2,3} on GPU 1.
+        let dep = Deployment::new(
+            2,
+            vec![vec![0, 0, 1, 1]],
+            SchedulePolicy::Aurora,
+            Scenario::ExclusiveHomogeneous,
+        )
+        .unwrap();
+        let mut r = AdaptiveReplanner::for_deployment(&dep, 0, &[10, 10, 10, 10]);
+        r.window_tokens = 40;
+        r.threshold = 0.2;
+        // routing flips between experts *within* each GPU group: per-GPU
+        // loads are unchanged, so the placement has not decayed -> keep.
+        assert_eq!(
+            r.observe_deployment(&dep, 0, &[20, 0, 0, 20]),
+            ReplanDecision::Keep
+        );
+        // all traffic collapses onto GPU 0's experts -> replan.
+        assert_eq!(
+            r.observe_deployment(&dep, 0, &[20, 20, 0, 0]),
+            ReplanDecision::Replan
+        );
     }
 }

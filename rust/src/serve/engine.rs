@@ -3,6 +3,7 @@
 
 use super::batcher::Batch;
 use super::Response;
+use crate::placement::Deployment;
 use crate::runtime::MoeModel;
 use crate::schedule::{aurora_schedule, SchedulePolicy};
 use crate::traffic::TrafficMatrix;
@@ -62,10 +63,44 @@ pub fn expert_execution_order(
     }
 }
 
+/// Derive the expert execution order under a [`Deployment`]: experts are
+/// visited GPU group by GPU group, heaviest-loaded group first (its port is
+/// the bottleneck the slot schedule drains first), heaviest expert first
+/// within a group. Falls back to [`expert_execution_order`]'s flat ordering
+/// for non-Aurora policies, which are group-oblivious by definition.
+pub fn grouped_execution_order(
+    histogram: &[u64],
+    deployment: &Deployment,
+    model: usize,
+    policy: SchedulePolicy,
+) -> Vec<usize> {
+    if !matches!(policy, SchedulePolicy::Aurora) {
+        return expert_execution_order(histogram, policy);
+    }
+    let gpu_loads = deployment.gpu_loads(model, histogram);
+    let mut gpus: Vec<usize> = (0..deployment.n_gpus).collect();
+    gpus.sort_by_key(|&g| (std::cmp::Reverse(gpu_loads[g]), g));
+    let mut order = Vec::with_capacity(histogram.len());
+    for g in gpus {
+        let mut experts: Vec<usize> = deployment
+            .experts_on(g)
+            .into_iter()
+            .filter(|&(m, _)| m == model)
+            .map(|(_, e)| e)
+            .collect();
+        experts.sort_by_key(|&e| (std::cmp::Reverse(histogram[e]), e));
+        order.extend(experts);
+    }
+    order
+}
+
 /// Stateful engine wrapping the PJRT model.
 pub struct MoeEngine {
     model: MoeModel,
     policy: SchedulePolicy,
+    /// The generalized placement this engine executes, plus this model's
+    /// index within it. `None` runs the single-host flat ordering.
+    deployment: Option<(Deployment, usize)>,
     /// Cumulative per-expert token counts (the "historical statistics" the
     /// planner consumes, §2.4).
     pub expert_stats: Vec<u64>,
@@ -80,9 +115,42 @@ impl MoeEngine {
         Self {
             model,
             policy,
+            deployment: None,
             expert_stats: vec![0; n],
             expert_order: (0..n).collect(),
         }
+    }
+
+    /// Wrap a loaded model and bind it to its slot in a deployment; the
+    /// engine then visits experts in GPU-group order and can report per-GPU
+    /// load statistics.
+    pub fn with_deployment(
+        model: MoeModel,
+        deployment: Deployment,
+        model_index: usize,
+    ) -> Self {
+        assert!(model_index < deployment.n_models(), "model index out of range");
+        assert_eq!(
+            deployment.n_experts(model_index),
+            model.meta.n_experts,
+            "deployment expert count must match the model"
+        );
+        let policy = deployment.policy;
+        let mut engine = Self::new(model, policy);
+        engine.deployment = Some((deployment, model_index));
+        engine
+    }
+
+    /// The bound deployment, if any.
+    pub fn deployment(&self) -> Option<&Deployment> {
+        self.deployment.as_ref().map(|(d, _)| d)
+    }
+
+    /// Cumulative observed token load per GPU under the bound deployment.
+    pub fn gpu_stats(&self) -> Option<Vec<u64>> {
+        self.deployment
+            .as_ref()
+            .map(|(d, m)| d.gpu_loads(*m, &self.expert_stats))
     }
 
     /// Model metadata.
@@ -107,7 +175,10 @@ impl MoeEngine {
         for &e in &idx {
             self.expert_stats[e as usize] += 1;
         }
-        self.expert_order = expert_execution_order(&self.expert_stats, self.policy);
+        self.expert_order = match &self.deployment {
+            Some((dep, m)) => grouped_execution_order(&self.expert_stats, dep, *m, self.policy),
+            None => expert_execution_order(&self.expert_stats, self.policy),
+        };
 
         let out =
             self.model
@@ -168,6 +239,45 @@ mod tests {
             assert!(!seen[e]);
             seen[e] = true;
         }
+    }
+
+    #[test]
+    fn grouped_order_visits_heaviest_gpu_group_first() {
+        use crate::placement::{Deployment, Scenario};
+        // 4 experts on 2 GPUs: experts {0,1} on GPU 0, {2,3} on GPU 1.
+        let dep = Deployment::new(
+            2,
+            vec![vec![0, 0, 1, 1]],
+            SchedulePolicy::Aurora,
+            Scenario::ExclusiveHomogeneous,
+        )
+        .unwrap();
+        // GPU 1 carries 90 tokens vs GPU 0's 30 -> its experts go first,
+        // heaviest within the group leading.
+        let order = grouped_execution_order(&[10, 20, 40, 50], &dep, 0, SchedulePolicy::Aurora);
+        assert_eq!(order, vec![3, 2, 1, 0]);
+        // non-Aurora policies keep their flat semantics
+        let sjf = grouped_execution_order(&[10, 20, 40, 50], &dep, 0, SchedulePolicy::Sjf);
+        assert_eq!(sjf, expert_execution_order(&[10, 20, 40, 50], SchedulePolicy::Sjf));
+    }
+
+    #[test]
+    fn grouped_order_is_a_permutation() {
+        use crate::placement::{Deployment, Scenario};
+        let dep = Deployment::new(
+            3,
+            vec![vec![0, 2, 1, 2, 0, 1]],
+            SchedulePolicy::Aurora,
+            Scenario::ExclusiveHomogeneous,
+        )
+        .unwrap();
+        let order = grouped_execution_order(&[5, 0, 9, 9, 1, 2], &dep, 0, SchedulePolicy::Aurora);
+        let mut seen = vec![false; 6];
+        for &e in &order {
+            assert!(!seen[e]);
+            seen[e] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
     }
 
     #[test]

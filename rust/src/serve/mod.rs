@@ -26,7 +26,7 @@ pub mod router;
 
 pub use adaptive::{AdaptiveReplanner, ReplanDecision};
 pub use batcher::{Batch, BatcherConfig, DynamicBatcher};
-pub use engine::{expert_execution_order, MoeEngine};
+pub use engine::{expert_execution_order, grouped_execution_order, MoeEngine};
 pub use metrics::{LatencySummary, Metrics};
 pub use router::Router;
 

@@ -10,6 +10,11 @@
 //! * [`colocated`] — two models interleaving on shared GPUs, following the
 //!   Table 2 start/end recurrences (computation competition on the GPU,
 //!   communication overlap on the switch).
+//! * [`group`] — the generalized entry point ([`simulate_group`]): any number
+//!   of GPU-indexed models, dispatching to the exact paths above for M ≤ 2
+//!   and to a staggered M-way pipeline otherwise. The placement layer
+//!   ([`crate::placement::Deployment`]) projects expert-level statistics to
+//!   GPU level (aggregating multi-expert groups) before calling it.
 //!
 //! Components scale with GPU performance: a component that takes `t` ms on
 //! the reference GPU takes `t / flops_scale` on GPU `g`; the FFN time is
@@ -18,11 +23,13 @@
 mod colocated;
 pub mod event;
 mod exclusive;
+mod group;
 mod stats;
 
 pub use colocated::{simulate_colocated, ColocatedBreakdown};
 pub use event::{event_sim_colocated, event_sim_exclusive, EventSimResult};
 pub use exclusive::{simulate_exclusive, ExclusiveBreakdown};
+pub use group::{simulate_group, GroupBreakdown};
 pub use stats::MoeLayerStats;
 
 /// Result of simulating one MoE layer (one model or a colocated pair).

@@ -182,6 +182,31 @@ impl TrafficMatrix {
         out
     }
 
+    /// Project an **expert-indexed** matrix onto **GPU indices** under an
+    /// arbitrary placement: `owner[e]` is the GPU hosting expert `e`, and the
+    /// result is `m × m` with `out[owner[i]][owner[j]] += self[i][j]`.
+    ///
+    /// Unlike [`TrafficMatrix::permute`] this does not require a bijection:
+    /// several experts may share one GPU (their traffic aggregates, and
+    /// traffic between co-hosted experts lands on the diagonal, i.e. becomes
+    /// local), and the GPU count `m` may differ from the expert count. When
+    /// `owner` *is* a permutation and `m == n`, the result is identical to
+    /// `permute(owner)`.
+    pub fn project(&self, owner: &[usize], m: usize) -> Self {
+        assert_eq!(owner.len(), self.n, "one owner GPU per expert");
+        assert!(
+            owner.iter().all(|&g| g < m),
+            "owner GPU out of range (m = {m})"
+        );
+        let mut out = Self::zeros(m);
+        for i in 0..self.n {
+            for j in 0..self.n {
+                out.add(owner[i], owner[j], self.get(i, j));
+            }
+        }
+        out
+    }
+
     /// Merge pairs of GPUs: `groups[g]` lists the original indices fused onto
     /// new GPU `g`. Traffic between members of the same group becomes local
     /// (kept on the diagonal so expert loads stay correct). Used by the Lina
@@ -293,6 +318,42 @@ mod tests {
         let fs = m.flows();
         assert_eq!(fs.len(), 5);
         assert!(fs.iter().all(|&(i, j, d)| i != j && d > 0));
+    }
+
+    #[test]
+    fn project_matches_permute_for_bijections() {
+        let m = sample();
+        let p = vec![2usize, 0, 1];
+        assert_eq!(m.project(&p, 3), m.permute(&p));
+    }
+
+    #[test]
+    fn project_aggregates_and_localizes() {
+        let m = TrafficMatrix::from_nested(&[
+            vec![0, 1, 2, 3],
+            vec![4, 0, 5, 6],
+            vec![7, 8, 0, 9],
+            vec![1, 1, 1, 0],
+        ]);
+        // experts 0 and 1 share GPU 0; experts 2 and 3 share GPU 1
+        let g = m.project(&[0, 0, 1, 1], 2);
+        assert_eq!(g.n(), 2);
+        assert_eq!(g.get(0, 1), 2 + 3 + 5 + 6);
+        // intra-GPU traffic became local (diagonal)
+        assert_eq!(g.get(0, 0), 1 + 4);
+        // total token load is conserved
+        assert_eq!(
+            g.expert_loads().iter().sum::<u64>(),
+            m.expert_loads().iter().sum::<u64>()
+        );
+        // network volume can only shrink (localization)
+        assert!(g.total() <= m.total());
+    }
+
+    #[test]
+    #[should_panic]
+    fn project_rejects_out_of_range_owner() {
+        sample().project(&[0, 1, 3], 3);
     }
 
     #[test]

@@ -16,7 +16,7 @@ fn small_cfg() -> EvalConfig {
 #[test]
 fn all_fast_figures_run_and_are_well_formed() {
     let cfg = small_cfg();
-    for fig in ["11a", "11b", "11c", "11d", "12", "14", "a1", "a2"] {
+    for fig in ["11a", "11b", "11c", "11d", "12", "14", "a1", "a2", "multi"] {
         let reports = run_figure(fig, &cfg).unwrap();
         assert!(!reports.is_empty(), "{fig}: no reports");
         for r in &reports {
