@@ -107,7 +107,7 @@ pub fn ablation_top2(cfg: &EvalConfig, _w: &Workloads) -> Report {
             );
         }
     }
-    let blowup = r.column("top2/top1");
+    let blowup = r.column("top2/top1").expect("column was just added");
     r.note(format!(
         "top-2 costs {:.2}x top-1 on average (volume doubles; barriers amortize the rest)",
         mean(&blowup)
@@ -129,7 +129,7 @@ mod tests {
         let w = Workloads::generate(&cfg);
         let r = ablation_schedulers(&cfg, &w);
         for col in ["ljf", "sjf", "pairwise", "rcs"] {
-            for (v, a) in r.column(col).iter().zip(r.column("aurora")) {
+            for (v, a) in r.column(col).unwrap().iter().zip(r.column("aurora").unwrap()) {
                 assert!(*v >= a - 1e-9, "{col}: {v} < aurora {a}");
             }
         }
@@ -144,10 +144,10 @@ mod tests {
         };
         let w = Workloads::generate(&cfg);
         let r = ablation_top2(&cfg, &w);
-        for v in r.column("top2/top1") {
+        for v in r.column("top2/top1").unwrap() {
             assert!((1.2..=2.2).contains(&v), "top2/top1 = {v}");
         }
-        for v in r.column("rcs/aurora(top2)") {
+        for v in r.column("rcs/aurora(top2)").unwrap() {
             assert!(v >= 1.0 - 1e-9, "aurora must keep winning under top-2");
         }
     }
@@ -165,8 +165,8 @@ mod tests {
         };
         let w = Workloads::generate(&cfg);
         let r = ablation_schedulers(&cfg, &w);
-        let pairwise: f64 = r.column("pairwise").iter().sum();
-        let aurora: f64 = r.column("aurora").iter().sum();
+        let pairwise: f64 = r.column("pairwise").unwrap().iter().sum();
+        let aurora: f64 = r.column("aurora").unwrap().iter().sum();
         assert!(pairwise >= aurora - 1e-9);
 
         // adversarial case: all traffic concentrated on one source row means

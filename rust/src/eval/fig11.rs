@@ -300,10 +300,10 @@ mod tests {
         let w = Workloads::generate(&cfg);
         let r = fig11a(&cfg, &w);
         assert_eq!(r.rows.len(), 16); // 4 workloads x 4 layers
-        for v in r.column("sjf/aurora") {
+        for v in r.column("sjf/aurora").unwrap() {
             assert!(v >= 1.0 - 1e-9, "aurora must not lose to sjf: {v}");
         }
-        for v in r.column("rcs/aurora") {
+        for v in r.column("rcs/aurora").unwrap() {
             assert!(v >= 1.0 - 1e-9);
         }
     }
@@ -313,7 +313,7 @@ mod tests {
         let cfg = small_cfg();
         let w = Workloads::generate(&cfg);
         let r = fig11b(&cfg, &w);
-        for v in r.column("rga/aurora") {
+        for v in r.column("rga/aurora").unwrap() {
             assert!(v >= 1.0 - 1e-9);
         }
     }
@@ -324,7 +324,7 @@ mod tests {
         let w = Workloads::generate(&cfg);
         let r = fig11c(&cfg, &w);
         assert_eq!(r.rows.len(), 8); // 2 pairs x 4 layers
-        for v in r.column("rec/aurora") {
+        for v in r.column("rec/aurora").unwrap() {
             assert!(v >= 1.0 - 1e-9, "rec/aurora = {v}");
         }
     }
@@ -334,7 +334,7 @@ mod tests {
         let cfg = small_cfg();
         let w = Workloads::generate(&cfg);
         let r = fig11d(&cfg, &w);
-        for v in r.column("rga+rec/aurora") {
+        for v in r.column("rga+rec/aurora").unwrap() {
             assert!(v >= 1.0 - 1e-9, "rga+rec/aurora = {v}");
         }
     }

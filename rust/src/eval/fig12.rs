@@ -74,8 +74,8 @@ fn utilization_report(cfg: &EvalConfig, w: &Workloads, cluster: &Cluster, title:
             );
         }
     }
-    let vs_excl = r.column("coloc/excl");
-    let vs_lina = r.column("coloc/lina");
+    let vs_excl = r.column("coloc/excl").expect("column was just added");
+    let vs_lina = r.column("coloc/lina").expect("column was just added");
     r.note(format!(
         "utilization gain vs exclusive: {:.2}x mean (paper: 1.57x-1.72x); vs Lina: {:.2}x mean (paper: 1.28x-1.50x)",
         mean(&vs_excl),
@@ -116,10 +116,10 @@ mod tests {
         };
         let w = Workloads::generate(&cfg);
         for rep in [fig12a(&cfg, &w), fig12b(&cfg, &w)] {
-            for v in rep.column("coloc/excl") {
+            for v in rep.column("coloc/excl").unwrap() {
                 assert!(v > 1.0, "colocation must lift utilization, got {v}");
             }
-            for v in rep.column("aurora+coloc") {
+            for v in rep.column("aurora+coloc").unwrap() {
                 assert!(v > 0.0 && v < 1.0);
             }
         }

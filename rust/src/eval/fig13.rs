@@ -88,7 +88,7 @@ mod tests {
         };
         let w = Workloads::generate(&cfg);
         let r = fig13(&cfg, &w);
-        for ratio in r.column("ratio") {
+        for ratio in r.column("ratio").unwrap() {
             assert!(ratio >= 1.0 - 1e-9, "heuristic cannot beat the optimum");
             assert!(ratio < 1.5, "gap should be small, got {ratio}");
         }

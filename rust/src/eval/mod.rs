@@ -13,6 +13,8 @@
 //! | 12a/b | colocating scenarios | GPU utilization |
 //! | 13 | Colocating + Heterogeneous | Aurora vs brute-force optimum |
 //! | 14a/b | heterogeneous scenarios | robustness to traffic imprecision |
+//! | multi | beyond-paper | generalized M-model placement vs random |
+//! | replication | beyond-paper | replicated vs placed vs random under Zipf skew |
 
 mod ablation;
 mod fig11;
@@ -21,6 +23,7 @@ mod fig13;
 mod fig14;
 mod lina;
 mod multi;
+mod replication;
 mod report;
 mod workloads;
 
@@ -31,7 +34,8 @@ pub use fig13::fig13;
 pub use fig14::{fig14a, fig14b};
 pub use lina::{lina_colocated_times, lina_utilization};
 pub use multi::{multi_model_comparison, multi_workload, random_deployment};
-pub use report::Report;
+pub use replication::{replication_comparison, skewed_workload};
+pub use report::{MissingColumn, Report};
 pub use workloads::Workloads;
 
 use crate::config::EvalConfig;
@@ -62,6 +66,9 @@ pub fn run_figure(name: &str, cfg: &EvalConfig) -> Result<Vec<Report>, String> {
         // Beyond-paper extension: generalized multi-model placement
         // (3 models, 2x the cluster's expert slots each).
         "multi" => vec![multi_model_comparison(cfg, 3, cfg.n_experts * 2)],
+        // Beyond-paper extension: expert replication under Zipf-skewed
+        // routing (replicated vs placed vs random across the skew sweep).
+        "replication" => vec![replication_comparison(cfg, &[0.0, 0.6, 1.2])],
         "all" => {
             let mut r = vec![
                 fig11a(cfg, &w),
@@ -77,11 +84,12 @@ pub fn run_figure(name: &str, cfg: &EvalConfig) -> Result<Vec<Report>, String> {
             r.push(ablation_schedulers(cfg, &w));
             r.push(ablation_top2(cfg, &w));
             r.push(multi_model_comparison(cfg, 3, cfg.n_experts * 2));
+            r.push(replication_comparison(cfg, &[0.0, 0.6, 1.2]));
             r
         }
         other => {
             return Err(format!(
-                "unknown figure '{other}' (try 11a/11b/11c/11d/12/13/14/a1/a2/ablation/multi/all)"
+                "unknown figure '{other}' (try 11a/11b/11c/11d/12/13/14/a1/a2/ablation/multi/replication/all)"
             ))
         }
     };

@@ -88,7 +88,7 @@ pub fn multi_model_comparison(cfg: &EvalConfig, n_models: usize, n_experts: usiz
         let t_rand = total / cfg.baseline_samples as f64;
         report.row(label, vec![t_plan, t_rand, t_rand / t_plan]);
     }
-    let speedups = report.column("speedup");
+    let speedups = report.column("speedup").expect("column was just added");
     let max_speedup = speedups.iter().cloned().fold(0.0, f64::max);
     report.note(format!(
         "generalized placement up to {max_speedup:.2}x faster than random placement"

@@ -1,0 +1,155 @@
+//! Replication extension figure: replicated vs. placed vs. random
+//! deployments under Zipf-skewed routing.
+//!
+//! The paper's evaluation drives uniform-ish LIMoE traces; this driver
+//! sweeps the routing skew α of [`crate::traffic::zipf_traffic`] and
+//! compares three deployments of one 2×-oversubscribed model (two experts
+//! per GPU slot):
+//!
+//! * **replicated** — [`crate::planner::Planner::plan_replicated`] (base
+//!   plan + hot-expert replicas + water-filled token splits);
+//! * **placed** — the plain [`crate::planner::Planner::plan_multi`] plan
+//!   (the best non-replicated deployment this system produces);
+//! * **random** — uniformly random expert→GPU placement (the REC analogue).
+//!
+//! At α = 0 the replicated plan falls back to the placed plan bit-for-bit,
+//! so its column reads 1.00×; as α grows the hot expert pins one GPU and
+//! replication is the only lever that keeps the bottleneck bounded.
+
+use super::report::Report;
+use crate::config::EvalConfig;
+use crate::eval::random_deployment;
+use crate::planner::{Planner, ReplicationConfig};
+use crate::sim::MoeLayerStats;
+use crate::trace::ModelTrace;
+use crate::traffic::zipf_traffic;
+use crate::util::Rng;
+
+/// Compute-time constants of the skewed workload (the LIMoE reference-GPU
+/// profile, see `trace::limoe`).
+const GATE_MS: f64 = 0.02;
+const FFN_MS_PER_TOKEN: f64 = 0.001;
+const AGG_MS: f64 = 0.015;
+
+/// A Zipf(α)-skewed trace: `n_layers` layers of an `n_experts` model, every
+/// sender originating `tokens_per_sender` tokens per layer. One seed drives
+/// all layers, so the hot expert persists across depth — the regime where a
+/// static replication plan pays off.
+pub fn skewed_workload(
+    n_experts: usize,
+    n_layers: usize,
+    tokens_per_sender: u64,
+    alpha: f64,
+    seed: u64,
+) -> ModelTrace {
+    ModelTrace {
+        name: format!("zipf-a{alpha:.1}"),
+        layers: (0..n_layers)
+            .map(|_| MoeLayerStats {
+                traffic: zipf_traffic(n_experts, tokens_per_sender, alpha, seed),
+                gate_ms: GATE_MS,
+                ffn_ms_per_token: FFN_MS_PER_TOKEN,
+                agg_ms: AGG_MS,
+            })
+            .collect(),
+    }
+}
+
+/// Replicated vs. placed vs. random total inference time across a skew
+/// sweep, on the config's homogeneous cluster with `2 × n_experts` experts
+/// packed two per GPU slot.
+pub fn replication_comparison(cfg: &EvalConfig, alphas: &[f64]) -> Report {
+    let cluster = cfg.homogeneous_cluster();
+    let n_experts = cfg.n_experts * 2;
+    let tokens_per_sender = cfg.batch_images * 16;
+    let planner = Planner::default();
+    let rep_cfg = ReplicationConfig::default();
+
+    let mut report = Report::new(
+        &format!("Replication under Zipf skew: {n_experts} experts on {} GPUs", cluster.len()),
+        &["replicated (ms)", "placed (ms)", "random (ms)", "vs placed", "vs random"],
+    );
+
+    for &alpha in alphas {
+        let trace = skewed_workload(n_experts, cfg.n_layers, tokens_per_sender, alpha, cfg.seed);
+        let refs = [&trace];
+
+        let placed = planner
+            .plan_multi(&refs, &cluster)
+            .expect("plan_multi succeeds for one model");
+        let t_placed = placed.total_inference_ms(&refs, &cluster);
+
+        let (rep, splits) = planner
+            .plan_replicated(&refs, &cluster, &rep_cfg)
+            .expect("plan_replicated succeeds for one model");
+        let t_rep = rep.total_inference_ms(&refs, &cluster, &splits);
+
+        let mut rng = Rng::new(cfg.seed ^ 0x5EED);
+        let mut total = 0.0;
+        for _ in 0..cfg.baseline_samples {
+            let r = random_deployment(&refs, cluster.len(), placed.scenario, &mut rng);
+            total += r.total_inference_ms(&refs, &cluster);
+        }
+        let t_rand = total / cfg.baseline_samples as f64;
+
+        report.row(
+            format!("alpha={alpha:.1}"),
+            vec![t_rep, t_placed, t_rand, t_placed / t_rep, t_rand / t_rep],
+        );
+    }
+
+    let speedups = report
+        .column("vs placed")
+        .expect("column was just added");
+    let max_speedup = speedups.iter().cloned().fold(0.0, f64::max);
+    report.note(format!(
+        "replication up to {max_speedup:.2}x faster than the best non-replicated plan"
+    ));
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> EvalConfig {
+        EvalConfig {
+            n_layers: 2,
+            baseline_samples: 3,
+            ..EvalConfig::default()
+        }
+    }
+
+    #[test]
+    fn uniform_row_is_exact_fallback() {
+        let r = replication_comparison(&small_cfg(), &[0.0]);
+        assert_eq!(r.rows.len(), 1);
+        let vals = &r.rows[0].1;
+        // replicated == placed bit-for-bit at alpha = 0
+        assert!(
+            (vals[0] - vals[1]).abs() < 1e-12,
+            "replicated {} vs placed {}",
+            vals[0],
+            vals[1]
+        );
+        assert!((vals[3] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn skew_sweep_shows_replication_wins() {
+        let r = replication_comparison(&small_cfg(), &[0.0, 1.2]);
+        assert_eq!(r.rows.len(), 2);
+        let speedups = r.column("vs placed").unwrap();
+        // monotone: replication can only matter more as skew grows
+        assert!(speedups[1] > speedups[0], "{speedups:?}");
+        assert!(
+            speedups[1] >= 1.2,
+            "alpha=1.2 speedup {} below the acceptance bar",
+            speedups[1]
+        );
+        // and the planner never loses to random placement
+        for v in r.column("vs random").unwrap() {
+            assert!(v >= 0.95, "vs random {v}");
+        }
+    }
+}

@@ -1,6 +1,30 @@
 //! Tabular reports: aligned console output + JSON serialization.
 
 use crate::util::{round_to, Json};
+use std::fmt;
+
+/// A requested column the report does not have. Carries the figure title and
+/// the column name, so harness callers can *report* the mismatch instead of
+/// aborting with a context-free panic.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MissingColumn {
+    /// Title of the figure/report the lookup ran against.
+    pub figure: String,
+    /// The missing column name.
+    pub column: String,
+}
+
+impl fmt::Display for MissingColumn {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "figure '{}' has no column '{}'",
+            self.figure, self.column
+        )
+    }
+}
+
+impl std::error::Error for MissingColumn {}
 
 /// One table of results (≈ one figure panel).
 #[derive(Debug, Clone, PartialEq)]
@@ -37,14 +61,16 @@ impl Report {
         self.notes.push(s.into());
     }
 
-    /// Column values across all rows.
-    pub fn column(&self, name: &str) -> Vec<f64> {
-        let idx = self
-            .columns
-            .iter()
-            .position(|c| c == name)
-            .unwrap_or_else(|| panic!("no column {name}"));
-        self.rows.iter().map(|(_, v)| v[idx]).collect()
+    /// Column values across all rows, or a [`MissingColumn`] naming the
+    /// figure and the column when the header does not exist.
+    pub fn column(&self, name: &str) -> Result<Vec<f64>, MissingColumn> {
+        match self.columns.iter().position(|c| c == name) {
+            Some(idx) => Ok(self.rows.iter().map(|(_, v)| v[idx]).collect()),
+            None => Err(MissingColumn {
+                figure: self.title.clone(),
+                column: name.to_string(),
+            }),
+        }
     }
 
     /// Render an aligned console table.
@@ -133,7 +159,18 @@ mod tests {
         assert!(s.contains("Fig X"));
         assert!(s.contains("layer2"));
         assert!(s.contains("speedup"));
-        assert_eq!(r.column("sjf"), vec![1.4, 2.9]);
+        assert_eq!(r.column("sjf").unwrap(), vec![1.4, 2.9]);
+    }
+
+    #[test]
+    fn missing_column_names_figure_and_column() {
+        let mut r = Report::new("Fig 99", &["a"]);
+        r.row("x", vec![1.0]);
+        let err = r.column("nope").unwrap_err();
+        assert_eq!(err.figure, "Fig 99");
+        assert_eq!(err.column, "nope");
+        let msg = err.to_string();
+        assert!(msg.contains("Fig 99") && msg.contains("nope"), "{msg}");
     }
 
     #[test]

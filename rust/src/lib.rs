@@ -28,6 +28,14 @@
 //!    (Theorem 6.2 / bottleneck matching; NP-hard decoupled heuristic in the
 //!    heterogeneous case, §7.2). [`planner::Planner::plan_multi`] stacks
 //!    these pairwise matchings iteratively to place M ≥ 3 models.
+//! 5. **Replication** ([`replication`]) — beyond the paper: under skewed
+//!    routing a single hot expert pins one GPU's compute and receive port,
+//!    which no transmission ordering can fix.
+//!    [`planner::Planner::plan_replicated`] copies hot experts onto several
+//!    GPUs and a water-filling token-split plan
+//!    ([`replication::optimize_splits`]) apportions each sender's load
+//!    across the copies; with no replicas the path is bit-for-bit the plain
+//!    placement pipeline.
 //!
 //! The crate also ships the substrates the evaluation depends on: a
 //! big-switch cluster simulator ([`sim`], [`cluster`]) whose generalized
@@ -49,6 +57,7 @@ pub mod eval;
 pub mod matching;
 pub mod placement;
 pub mod planner;
+pub mod replication;
 pub mod runtime;
 pub mod schedule;
 pub mod serve;
@@ -59,5 +68,6 @@ pub mod util;
 
 pub use cluster::{Cluster, GpuSpec};
 pub use placement::{Deployment, PlacementError};
-pub use planner::{DeploymentPlan, Planner, Scenario};
+pub use planner::{DeploymentPlan, Planner, ReplicationConfig, Scenario};
+pub use replication::{ReplicatedDeployment, SplitPlan};
 pub use traffic::TrafficMatrix;

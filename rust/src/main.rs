@@ -1,21 +1,24 @@
 //! `aurora` — CLI for the Aurora MoE inference optimizer.
 //!
 //! Subcommands:
-//! * `eval --figure <11a|11b|11c|11d|12|13|14|a1|a2|ablation|multi|all>` —
-//!   regenerate a
-//!   paper figure (or the multi-model extension) on synthetic LIMoE traces.
-//! * `plan --cluster <homo|hetero> --models <N> [--experts-per-gpu <K>]` —
-//!   print a deployment plan as JSON. N ≤ 2 with one expert per GPU uses the
-//!   paper's exact paths; anything else uses the generalized placement core.
-//! * `simulate --cluster <homo|hetero> --models <N> [--experts-per-gpu <K>]`
-//!   — per-layer inference times and utilization for the planned deployment.
+//! * `eval --figure <11a|...|multi|replication|all>` — regenerate a paper
+//!   figure (or a beyond-paper extension) on synthetic traces.
+//! * `plan --cluster <homo|hetero> --models <N> [--experts-per-gpu <K>]
+//!   [--replicas <R>] [--skew <ALPHA>]` — print a deployment plan as JSON.
+//!   N ≤ 2 with one expert per GPU uses the paper's exact paths; `--replicas`
+//!   ≥ 2 runs the replication pass (optionally on a Zipf(`--skew`) workload).
+//! * `simulate --cluster <homo|hetero> --models <N> [--experts-per-gpu <K>]
+//!   [--replicas <R>] [--skew <ALPHA>]` — per-layer inference times and
+//!   utilization for the planned deployment.
+//! * `bench [--out <file>] [--budget-ms <N>]` — time the planner/schedule/sim
+//!   hot paths on fixed seeds and write a JSON perf snapshot.
 //! * `trace --out <file>` — dump the generated traces to JSON.
 //! * `serve` — run the end-to-end serving demo on the AOT-compiled MoE model
 //!   (requires `make artifacts`).
 
 use aurora::config::EvalConfig;
-use aurora::eval::{multi_workload, run_figure, Workloads};
-use aurora::planner::Planner;
+use aurora::eval::{multi_workload, run_figure, skewed_workload, Workloads};
+use aurora::planner::{Planner, ReplicationConfig};
 use aurora::schedule::SchedulePolicy;
 use aurora::sim::{simulate_colocated, simulate_exclusive};
 use aurora::trace::{trace_to_json, ModelTrace};
@@ -33,6 +36,7 @@ fn main() {
         "eval" => cmd_eval(&opts),
         "plan" => cmd_plan(&opts),
         "simulate" => cmd_simulate(&opts),
+        "bench" => cmd_bench(&opts),
         "trace" => cmd_trace(&opts),
         "serve" => cmd_serve(&opts),
         "help" | "--help" | "-h" => {
@@ -52,14 +56,17 @@ fn usage() {
         "aurora — MoE inference optimization (paper reproduction)
 
 USAGE:
-  aurora eval     --figure <11a|11b|11c|11d|12|13|14|a1|a2|ablation|multi|all> [--config f.json] [--json out.json]
-  aurora plan     --cluster <homo|hetero> --models <N> [--experts-per-gpu <K>] [--config f.json]
-  aurora simulate --cluster <homo|hetero> --models <N> [--experts-per-gpu <K>] [--policy aurora|sjf|ljf|pairwise|rcs]
+  aurora eval     --figure <11a|11b|11c|11d|12|13|14|a1|a2|ablation|multi|replication|all> [--config f.json] [--json out.json]
+  aurora plan     --cluster <homo|hetero> --models <N> [--experts-per-gpu <K>] [--replicas <R>] [--skew <ALPHA>] [--config f.json]
+  aurora simulate --cluster <homo|hetero> --models <N> [--experts-per-gpu <K>] [--replicas <R>] [--skew <ALPHA>] [--policy aurora|sjf|ljf|pairwise|rcs]
+  aurora bench    [--out BENCH_planner.json] [--budget-ms N]
   aurora trace    --out <file.json> [--config f.json]
   aurora serve    [--artifacts DIR] [--requests N] [--batch N] [--policy aurora|rcs]
 
   --models N           colocate N models (N >= 3 uses the generalized placement core)
   --experts-per-gpu K  give every model K*n_gpus experts (K >= 2 packs multiple experts per GPU)
+  --replicas R         allow up to R copies of each expert (R >= 2 enables replication)
+  --skew ALPHA         drive planning with a Zipf(ALPHA)-skewed workload (0 = uniform)
 "
     );
 }
@@ -170,13 +177,61 @@ fn parse_shape(opts: &Opts) -> Result<(usize, Option<usize>), String> {
     Ok((models, per_gpu))
 }
 
+/// Parse `--replicas` / `--skew`. Replication engages at R ≥ 2; a positive
+/// skew swaps the LIMoE workload for a Zipf(α) one.
+fn parse_replication(opts: &Opts) -> Result<(usize, f64), String> {
+    let replicas: usize = opts
+        .get("replicas")
+        .unwrap_or("1")
+        .parse()
+        .map_err(|_| "bad --replicas")?;
+    if replicas == 0 {
+        return Err("--replicas must be >= 1".into());
+    }
+    let skew: f64 = opts
+        .get("skew")
+        .unwrap_or("0")
+        .parse()
+        .map_err(|_| "bad --skew")?;
+    if skew < 0.0 {
+        return Err("--skew must be >= 0".into());
+    }
+    Ok((replicas, skew))
+}
+
+/// Workloads for the generalized paths: Zipf(`skew`) traces when a skew was
+/// requested (one hot-expert profile per model), the LIMoE grid otherwise.
+fn generalized_workload(
+    cfg: &EvalConfig,
+    models: usize,
+    n_experts: usize,
+    skew: f64,
+) -> Vec<ModelTrace> {
+    if skew > 0.0 {
+        (0..models)
+            .map(|m| {
+                skewed_workload(
+                    n_experts,
+                    cfg.n_layers,
+                    cfg.batch_images * 16,
+                    skew,
+                    cfg.seed.wrapping_add(m as u64),
+                )
+            })
+            .collect()
+    } else {
+        multi_workload(cfg, models, n_experts)
+    }
+}
+
 fn cmd_plan(opts: &Opts) -> Result<(), String> {
     let cfg = opts.config()?;
     let cluster = cluster_for(opts, &cfg)?;
     let planner = Planner::default();
     let (models, per_gpu) = parse_shape(opts)?;
+    let (replicas, skew) = parse_replication(opts)?;
     // The paper's shapes print the classic two-model plan JSON for parity.
-    if per_gpu.is_none() && models <= 2 {
+    if per_gpu.is_none() && models <= 2 && replicas == 1 && skew == 0.0 {
         let w = Workloads::generate(&cfg);
         let plan = match models {
             1 => planner.plan_exclusive(&w.b16_coco, &cluster),
@@ -186,12 +241,23 @@ fn cmd_plan(opts: &Opts) -> Result<(), String> {
         return Ok(());
     }
     let n_experts = per_gpu.unwrap_or(1) * cluster.len();
-    let traces = multi_workload(&cfg, models, n_experts);
+    let traces = generalized_workload(&cfg, models, n_experts, skew);
     let refs: Vec<&ModelTrace> = traces.iter().collect();
-    let dep = planner
-        .plan_multi(&refs, &cluster)
-        .map_err(|e| e.to_string())?;
-    println!("{}", dep.to_json().to_string_compact());
+    if replicas >= 2 {
+        let rep_cfg = ReplicationConfig {
+            max_replicas: replicas,
+            ..ReplicationConfig::default()
+        };
+        let (rep, _) = planner
+            .plan_replicated(&refs, &cluster, &rep_cfg)
+            .map_err(|e| e.to_string())?;
+        println!("{}", rep.to_json().to_string_compact());
+    } else {
+        let dep = planner
+            .plan_multi(&refs, &cluster)
+            .map_err(|e| e.to_string())?;
+        println!("{}", dep.to_json().to_string_compact());
+    }
     Ok(())
 }
 
@@ -204,6 +270,7 @@ fn cmd_simulate(opts: &Opts) -> Result<(), String> {
         planning_layer: 0,
     };
     let (models, per_gpu) = parse_shape(opts)?;
+    let (replicas, skew) = parse_replication(opts)?;
     println!(
         "scenario: {} model(s), {} cluster, policy {}",
         models,
@@ -214,6 +281,38 @@ fn cmd_simulate(opts: &Opts) -> Result<(), String> {
         },
         policy.name()
     );
+    if replicas >= 2 || skew > 0.0 {
+        // Replication / skewed-workload path: plan with replicas allowed and
+        // simulate with the water-filled token splits applied.
+        let k = per_gpu.unwrap_or(1);
+        let traces = generalized_workload(&cfg, models, k * cluster.len(), skew);
+        let refs: Vec<&ModelTrace> = traces.iter().collect();
+        let rep_cfg = ReplicationConfig {
+            max_replicas: replicas,
+            ..ReplicationConfig::default()
+        };
+        let (rep, splits) = planner
+            .plan_replicated(&refs, &cluster, &rep_cfg)
+            .map_err(|e| e.to_string())?;
+        println!(
+            "deployment: {} models x {} experts, skew {:.2}, {} added replica(s), max slots {}",
+            rep.n_models(),
+            rep.base.n_experts(0),
+            skew,
+            rep.added_replicas(),
+            rep.slots_per_gpu().into_iter().max().unwrap_or(0)
+        );
+        for (k, res) in rep.simulate(&refs, &cluster, &splits).iter().enumerate() {
+            println!(
+                "layer {}: inference {:.3} ms, util {:.1}%, agg comm {:.3} ms",
+                k + 1,
+                res.inference_ms,
+                res.utilization * 100.0,
+                res.comm_ms
+            );
+        }
+        return Ok(());
+    }
     match (models, per_gpu) {
         (1, None) => {
             let w = Workloads::generate(&cfg);
@@ -271,6 +370,85 @@ fn cmd_simulate(opts: &Opts) -> Result<(), String> {
             }
         }
     }
+    Ok(())
+}
+
+/// Time the planner / schedule / sim hot paths on fixed seeds and write a
+/// JSON perf snapshot (`BENCH_planner.json` by default) — the artifact CI
+/// archives to build a perf trajectory over time. Non-gating: numbers are
+/// recorded, not asserted.
+fn cmd_bench(opts: &Opts) -> Result<(), String> {
+    use aurora::cluster::Cluster;
+    use aurora::schedule::{aurora_schedule, comm_time};
+    use aurora::util::bench::Bench;
+    use std::time::Duration;
+
+    let out = opts.get("out").unwrap_or("BENCH_planner.json");
+    let budget_ms: u64 = opts
+        .get("budget-ms")
+        .unwrap_or("200")
+        .parse()
+        .map_err(|_| "bad --budget-ms")?;
+    let cfg = opts.config()?;
+    let mut b = Bench::new();
+    b.budget = Duration::from_millis(budget_ms);
+    b.warmup = Duration::from_millis((budget_ms / 4).max(1));
+    Bench::header();
+
+    let planner = Planner::default();
+    let cluster = Cluster::homogeneous(8, 800.0);
+
+    // Scheduling hot paths.
+    let traces = multi_workload(&cfg, 3, 16);
+    let refs: Vec<&ModelTrace> = traces.iter().collect();
+    let d = &traces[0].layers[0].traffic;
+    b.run("schedule: bvn slot schedule 16x16", || {
+        aurora_schedule(d).makespan_tokens()
+    });
+    let bw = vec![800.0f64; 16];
+    b.run("schedule: head-of-line sjf 16x16", || {
+        comm_time(d, &bw, SchedulePolicy::Sjf).makespan
+    });
+
+    // Planner hot paths.
+    b.run("planner: plan_multi 3x16 on 8 GPUs", || {
+        planner.plan_multi(&refs, &cluster).unwrap().max_group_size()
+    });
+    let skewed = skewed_workload(16, cfg.n_layers, cfg.batch_images * 16, 1.2, cfg.seed);
+    let skewed_refs = [&skewed];
+    let rep_cfg = ReplicationConfig::default();
+    b.run("planner: plan_replicated zipf(1.2) 16 on 8 GPUs", || {
+        planner
+            .plan_replicated(&skewed_refs, &cluster, &rep_cfg)
+            .unwrap()
+            .0
+            .added_replicas()
+    });
+
+    // Simulator hot path: the 3-way grouped pipeline on planned placements.
+    let dep = planner.plan_multi(&refs, &cluster).unwrap();
+    let layers: Vec<&aurora::sim::MoeLayerStats> =
+        traces.iter().map(|t| &t.layers[0]).collect();
+    b.run("sim: simulate_layer 3-way on 8 GPUs", || {
+        dep.simulate_layer(&layers, &cluster).inference_ms
+    });
+
+    let benchmarks: Vec<Json> = b
+        .samples()
+        .iter()
+        .map(|s| {
+            Json::obj(vec![
+                ("name", Json::from(s.name.as_str())),
+                ("iters", Json::from(s.iters)),
+                ("median_ns", Json::Num(s.median.as_nanos() as f64)),
+                ("mean_ns", Json::Num(s.mean.as_nanos() as f64)),
+                ("min_ns", Json::Num(s.min.as_nanos() as f64)),
+            ])
+        })
+        .collect();
+    let doc = Json::obj(vec![("benchmarks", Json::Arr(benchmarks))]);
+    std::fs::write(out, doc.to_string_compact()).map_err(|e| format!("{out}: {e}"))?;
+    println!("wrote {out}");
     Ok(())
 }
 

@@ -10,10 +10,12 @@
 //! * The Birkhoff–von-Neumann slot decomposition in [`crate::schedule`]
 //!   extracts perfect matchings from the support of the balanced traffic
 //!   matrix, again via Hopcroft–Karp.
-//! * [`exhaustive`] enumerates all permutations for small `n` — the optimality
-//!   oracle used by tests and the Fig. 13 brute-force comparison.
-//! * [`hungarian`] (min-*sum* assignment) backs an ablation: the paper argues
-//!   the bottleneck objective, not the sum objective, is the right one.
+//! * [`exhaustive_bottleneck`] enumerates all permutations for small `n` —
+//!   the optimality oracle used by tests and the Fig. 13 brute-force
+//!   comparison.
+//! * [`hungarian_min_sum`] (min-*sum* assignment) backs an ablation: the
+//!   paper argues the bottleneck objective, not the sum objective, is the
+//!   right one.
 
 mod bottleneck;
 mod exhaustive;

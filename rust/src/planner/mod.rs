@@ -24,9 +24,13 @@ use crate::cluster::Cluster;
 use crate::colocation::hetero::decoupled_solution;
 use crate::colocation::{case2_pairing, send_recv_volumes};
 use crate::placement::{estimate_one_gpu, estimate_per_gpu, Deployment};
+use crate::replication::{
+    estimate_per_gpu_replicated, optimize_splits, refine_replicated, ReplicatedDeployment,
+    SplitPlan,
+};
 use crate::schedule::SchedulePolicy;
 use crate::sim::MoeLayerStats;
-use crate::trace::ModelTrace;
+use crate::trace::{aggregate_totals, ModelTrace};
 use crate::util::Json;
 
 pub use crate::placement::{PlacementError, Scenario};
@@ -276,19 +280,7 @@ impl Planner {
         // The general path plans on aggregate statistics across layers — the
         // multi-layer analogue of plan_exclusive's total_expert_loads. (The
         // M ≤ 2 paths above keep the paper's planning-layer semantics.)
-        let totals: Vec<MoeLayerStats> = traces
-            .iter()
-            .map(|t| {
-                let mut traffic = t.layers[0].traffic.clone();
-                for l in &t.layers[1..] {
-                    traffic = traffic.sum(&l.traffic);
-                }
-                MoeLayerStats {
-                    traffic,
-                    ..t.layers[0]
-                }
-            })
-            .collect();
+        let totals = aggregate_totals(traces);
         let layers: Vec<&MoeLayerStats> = totals.iter().collect();
 
         let assignments = if traces.iter().all(|t| t.n_experts() == n_gpus) {
@@ -300,6 +292,129 @@ impl Planner {
         let mut dep = Deployment::new(n_gpus, assignments, self.policy, scenario)?;
         refine_deployment(&mut dep, &layers, cluster);
         Ok(dep)
+    }
+
+    /// Plan with **expert replication**: run [`Planner::plan_multi`], then
+    /// greedily replicate the experts of the bottleneck GPU while each copy
+    /// buys at least `cfg.min_gain` relative reduction of the split-aware
+    /// per-GPU completion estimate, then re-run the swap/move refinement
+    /// with the split-aware evaluator
+    /// ([`crate::replication::refine_replicated`]).
+    ///
+    /// Returns the deployment together with the [`SplitPlan`] it was
+    /// optimized with (recomputing it via
+    /// [`ReplicatedDeployment::plan_splits`] on the same traces yields the
+    /// identical plan).
+    ///
+    /// **Fallback guarantee:** when no replica clears the threshold (e.g.
+    /// uniform routing, where splitting a balanced load cannot shrink the
+    /// max), the result is exactly
+    /// `ReplicatedDeployment::from_deployment(plan_multi(..))` with the
+    /// trivial split plan — the refinement pass is only entered once a
+    /// replica has been accepted, so the un-replicated plan is preserved
+    /// bit-for-bit.
+    pub fn plan_replicated(
+        &self,
+        traces: &[&ModelTrace],
+        cluster: &Cluster,
+        cfg: &ReplicationConfig,
+    ) -> Result<(ReplicatedDeployment, SplitPlan), PlacementError> {
+        let base = self.plan_multi(traces, cluster)?;
+        let mut rep = ReplicatedDeployment::from_deployment(base);
+        if cfg.max_replicas <= 1 {
+            let splits = SplitPlan::trivial(&rep);
+            return Ok((rep, splits));
+        }
+
+        let totals = aggregate_totals(traces);
+        let layers: Vec<&MoeLayerStats> = totals.iter().collect();
+        let n = cluster.len();
+
+        let eval = |rep: &ReplicatedDeployment| -> (f64, Vec<f64>) {
+            let plan = optimize_splits(rep, &layers, cluster);
+            let costs = estimate_per_gpu_replicated(rep, &layers, cluster, &plan);
+            let mx = costs.iter().cloned().fold(0.0, f64::max);
+            (mx, costs)
+        };
+
+        let (mut best, mut costs) = eval(&rep);
+        // Hard cap on added replicas keeps the greedy loop polynomial even
+        // with an unlimited slot budget.
+        let cap = if cfg.slots_per_gpu > 0 { n * cfg.slots_per_gpu } else { n * 4 };
+        while rep.added_replicas() < cap {
+            // Bottleneck GPU and the experts contributing load to it.
+            let hot_gpu = (0..n)
+                .max_by(|&a, &b| costs[a].partial_cmp(&costs[b]).unwrap())
+                .expect("cluster is non-empty");
+            let slots = rep.slots_per_gpu();
+            let mut candidate: Option<(usize, usize, usize, f64)> = None;
+            for m in 0..rep.n_models() {
+                for e in 0..rep.base.n_experts(m) {
+                    if !rep.replicas[m][e].contains(&hot_gpu)
+                        || rep.replica_count(m, e) >= cfg.max_replicas
+                    {
+                        continue;
+                    }
+                    for g in 0..n {
+                        if rep.replicas[m][e].contains(&g) {
+                            continue;
+                        }
+                        if cfg.slots_per_gpu > 0 && slots[g] >= cfg.slots_per_gpu {
+                            continue;
+                        }
+                        rep.replicas[m][e].push(g);
+                        let (mx, _) = eval(&rep);
+                        rep.replicas[m][e].pop();
+                        let better = match candidate {
+                            None => true,
+                            Some((_, _, _, cur)) => mx < cur,
+                        };
+                        if better {
+                            candidate = Some((m, e, g, mx));
+                        }
+                    }
+                }
+            }
+            match candidate {
+                Some((m, e, g, mx)) if mx < best * (1.0 - cfg.min_gain) => {
+                    rep.replicas[m][e].push(g);
+                    let (b, c) = eval(&rep);
+                    best = b;
+                    costs = c;
+                }
+                _ => break,
+            }
+        }
+
+        if rep.is_replicated() {
+            refine_replicated(&mut rep, &layers, cluster, cfg.slots_per_gpu);
+        }
+        let splits = optimize_splits(&rep, &layers, cluster);
+        Ok((rep, splits))
+    }
+}
+
+/// Budget and acceptance knobs of [`Planner::plan_replicated`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplicationConfig {
+    /// Maximum copies of one expert (1 disables replication).
+    pub max_replicas: usize,
+    /// Maximum `(model, expert)` copies per GPU — the memory/slot budget.
+    /// `0` means unlimited.
+    pub slots_per_gpu: usize,
+    /// Minimum *relative* bottleneck reduction a new replica must buy to be
+    /// accepted. Keeps uniform workloads replica-free (and therefore
+    /// bit-for-bit on the un-replicated plan).
+    pub min_gain: f64,
+}
+
+impl Default for ReplicationConfig {
+    fn default() -> Self {
+        Self {
+            max_replicas: 4,
+            slots_per_gpu: 0,
+            min_gain: 0.01,
+        }
     }
 }
 
@@ -690,6 +805,109 @@ mod tests {
                 })
                 .sum();
             assert!(t_plan <= t_rand + 1e-9);
+        }
+    }
+
+    fn zipf_trace(n: usize, n_layers: usize, alpha: f64, seed: u64) -> ModelTrace {
+        ModelTrace {
+            name: format!("zipf-a{alpha}"),
+            // one seed for all layers: the hot expert persists across depth,
+            // the regime replication targets
+            layers: (0..n_layers)
+                .map(|_| MoeLayerStats {
+                    traffic: crate::traffic::zipf_traffic(n, 512, alpha, seed),
+                    gate_ms: 0.02,
+                    ffn_ms_per_token: 0.001,
+                    agg_ms: 0.015,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn replicated_plan_falls_back_bitwise_on_uniform_traffic() {
+        let t = zipf_trace(16, 2, 0.0, 41);
+        let cluster = Cluster::homogeneous(8, 800.0);
+        let planner = Planner::default();
+        let (rep, splits) = planner
+            .plan_replicated(&[&t], &cluster, &ReplicationConfig::default())
+            .unwrap();
+        assert!(!rep.is_replicated(), "uniform routing must not replicate");
+        assert_eq!(splits, SplitPlan::trivial(&rep));
+        let plain = planner.plan_multi(&[&t], &cluster).unwrap();
+        assert_eq!(rep.base, plain, "fallback must be bit-for-bit");
+        assert_eq!(rep, ReplicatedDeployment::from_deployment(plain));
+    }
+
+    #[test]
+    fn replicated_plan_spreads_the_hot_expert_under_skew() {
+        let t = zipf_trace(16, 2, 1.2, 41);
+        let cluster = Cluster::homogeneous(8, 800.0);
+        let planner = Planner::default();
+        let (rep, plan) = planner
+            .plan_replicated(&[&t], &cluster, &ReplicationConfig::default())
+            .unwrap();
+        assert!(rep.is_replicated(), "skewed routing should replicate");
+        // the hottest expert got the copies
+        let totals = aggregate_totals(&[&t]);
+        let loads = totals[0].expert_loads();
+        let hot = (0..16).max_by_key(|&e| loads[e]).unwrap();
+        assert!(
+            rep.replica_count(0, hot) > 1,
+            "hot expert {hot} not replicated: {:?}",
+            rep.replicas[0]
+        );
+        // and the split-aware bottleneck estimate improved over the plain plan
+        let layers: Vec<&MoeLayerStats> = totals.iter().collect();
+        assert_eq!(plan, optimize_splits(&rep, &layers, &cluster));
+        let replicated = estimate_per_gpu_replicated(&rep, &layers, &cluster, &plan)
+            .into_iter()
+            .fold(0.0, f64::max);
+        let plain = planner.plan_multi(&[&t], &cluster).unwrap();
+        let unreplicated = crate::placement::estimate_bottleneck(&plain, &layers, &cluster);
+        assert!(
+            replicated < unreplicated,
+            "replicated {replicated} vs plain {unreplicated}"
+        );
+    }
+
+    #[test]
+    fn replication_respects_budgets() {
+        let t = zipf_trace(16, 2, 1.2, 41);
+        let cluster = Cluster::homogeneous(8, 800.0);
+        let planner = Planner::default();
+        // max_replicas = 1 disables the pass entirely
+        let (off, _) = planner
+            .plan_replicated(
+                &[&t],
+                &cluster,
+                &ReplicationConfig {
+                    max_replicas: 1,
+                    ..ReplicationConfig::default()
+                },
+            )
+            .unwrap();
+        assert!(!off.is_replicated());
+        // a slot budget bounds per-GPU occupancy: replicas and refinement
+        // moves never push a GPU past the budget (a GPU the *base* plan
+        // already filled beyond it just receives no copies)
+        let cfg = ReplicationConfig {
+            max_replicas: 8,
+            slots_per_gpu: 3,
+            ..ReplicationConfig::default()
+        };
+        let (rep, _) = planner.plan_replicated(&[&t], &cluster, &cfg).unwrap();
+        let base_slots = planner.plan_multi(&[&t], &cluster).unwrap().experts_per_gpu();
+        for (g, &s) in rep.slots_per_gpu().iter().enumerate() {
+            assert!(
+                s <= base_slots[g].max(3),
+                "GPU {g}: {s} slots exceeds budget (base {})",
+                base_slots[g]
+            );
+        }
+        // per-expert cap holds too
+        for e in 0..16 {
+            assert!(rep.replica_count(0, e) <= 8);
         }
     }
 

@@ -1,0 +1,738 @@
+//! Expert replication: replica-aware deployments and skew-resilient serving.
+//!
+//! The placement core ([`crate::placement::Deployment`]) assumes every
+//! expert lives on exactly one GPU. Under skewed routing (one expert
+//! absorbing a large share of the batch, the regime
+//! [`crate::traffic::zipf_traffic`] generates) that single GPU becomes a
+//! bottleneck **no transmission ordering can fix**: the hot expert's FFN
+//! load and receive-port volume are pinned to one machine. Replication is
+//! the next lever — host copies of hot experts on several GPUs and split
+//! each sender's tokens across the copies.
+//!
+//! The subsystem has three parts:
+//!
+//! * [`ReplicatedDeployment`] — a validated `(model, expert) → {replica
+//!   GPUs}` map layered over a base [`Deployment`] (replica 0 is always the
+//!   primary). With all-singleton replica sets it degrades to the base
+//!   deployment **bit-for-bit**: projection, simulation, and serving all
+//!   take the exact placement paths.
+//! * [`optimize_splits`] — the fractional token-split optimizer:
+//!   water-filling each replicated expert's load across its replica GPUs'
+//!   completion levels, yielding a [`SplitPlan`] that
+//!   [`crate::traffic::TrafficMatrix::project_split`] turns into GPU-level
+//!   traffic (integerized per flow, so schedules built from split matrices
+//!   stay conservation-exact and machine-checkable).
+//! * [`refine_replicated`] — the swap/move local search of the planner
+//!   re-run with the split-aware per-GPU completion estimate
+//!   ([`estimate_per_gpu_replicated`]), so primaries can migrate after
+//!   replicas change the load landscape.
+//!
+//! [`crate::planner::Planner::plan_replicated`] drives the whole pipeline:
+//! plan a base deployment, greedily replicate the bottleneck GPU's experts
+//! while the marginal bottleneck reduction clears a threshold, then refine.
+
+mod split;
+
+pub use split::{optimize_splits, SplitPlan};
+
+use crate::cluster::Cluster;
+use crate::placement::Deployment;
+use crate::sim::{simulate_group, MoeLayerStats, SimResult};
+use crate::trace::{aggregate_totals, ModelTrace};
+use crate::traffic::{split_tokens, TrafficMatrix};
+use crate::util::Json;
+use std::fmt;
+
+/// Why a replicated deployment is invalid.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ReplicationError {
+    /// The replica map's shape does not match the base deployment.
+    ShapeMismatch {
+        /// Offending model index (or the model count itself when
+        /// `expert == usize::MAX`).
+        model: usize,
+        /// Offending expert index.
+        expert: usize,
+    },
+    /// An expert has an empty replica set.
+    EmptyReplicaSet {
+        /// Model index.
+        model: usize,
+        /// Expert index.
+        expert: usize,
+    },
+    /// Replica 0 must be the base deployment's primary GPU.
+    PrimaryMismatch {
+        /// Model index.
+        model: usize,
+        /// Expert index.
+        expert: usize,
+    },
+    /// The same GPU appears twice in one expert's replica set.
+    DuplicateReplica {
+        /// Model index.
+        model: usize,
+        /// Expert index.
+        expert: usize,
+        /// The duplicated GPU id.
+        gpu: usize,
+    },
+    /// A replica was placed on a GPU the cluster does not have.
+    GpuOutOfRange {
+        /// Model index.
+        model: usize,
+        /// Expert index.
+        expert: usize,
+        /// The out-of-range GPU id.
+        gpu: usize,
+        /// Cluster size.
+        n_gpus: usize,
+    },
+}
+
+impl fmt::Display for ReplicationError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ReplicationError::ShapeMismatch { model, expert } => write!(
+                f,
+                "replica map shape mismatch at model {model}, expert {expert}"
+            ),
+            ReplicationError::EmptyReplicaSet { model, expert } => {
+                write!(f, "model {model} expert {expert} has no replicas")
+            }
+            ReplicationError::PrimaryMismatch { model, expert } => write!(
+                f,
+                "model {model} expert {expert}: replica 0 must be the base deployment's GPU"
+            ),
+            ReplicationError::DuplicateReplica { model, expert, gpu } => write!(
+                f,
+                "model {model} expert {expert} lists GPU {gpu} twice"
+            ),
+            ReplicationError::GpuOutOfRange {
+                model,
+                expert,
+                gpu,
+                n_gpus,
+            } => write!(
+                f,
+                "model {model} expert {expert} replica on GPU {gpu}, but the cluster has {n_gpus}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ReplicationError {}
+
+/// A placement with per-expert replica sets: model `m`'s expert `e` has
+/// copies on `replicas[m][e]` (never empty; `replicas[m][e][0]` is the
+/// primary, i.e. `base.assignments[m][e]`).
+///
+/// The base [`Deployment`] keeps the primary-only view — every consumer that
+/// is not replica-aware (execution ordering, scenario bookkeeping) reads it
+/// unchanged, and a `ReplicatedDeployment` whose sets are all singletons
+/// behaves identically to its base.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplicatedDeployment {
+    /// Primary placement (replica 0 of every expert).
+    pub base: Deployment,
+    /// `replicas[m][e]` = GPUs hosting copies of model `m`'s expert `e`.
+    pub replicas: Vec<Vec<Vec<usize>>>,
+}
+
+impl ReplicatedDeployment {
+    /// Build and validate a replicated deployment.
+    pub fn new(
+        base: Deployment,
+        replicas: Vec<Vec<Vec<usize>>>,
+    ) -> Result<ReplicatedDeployment, ReplicationError> {
+        if replicas.len() != base.n_models() {
+            return Err(ReplicationError::ShapeMismatch {
+                model: replicas.len(),
+                expert: usize::MAX,
+            });
+        }
+        for (m, model) in replicas.iter().enumerate() {
+            if model.len() != base.n_experts(m) {
+                return Err(ReplicationError::ShapeMismatch {
+                    model: m,
+                    expert: model.len(),
+                });
+            }
+            for (e, set) in model.iter().enumerate() {
+                if set.is_empty() {
+                    return Err(ReplicationError::EmptyReplicaSet { model: m, expert: e });
+                }
+                if set[0] != base.gpu_of(m, e) {
+                    return Err(ReplicationError::PrimaryMismatch { model: m, expert: e });
+                }
+                let mut seen = vec![false; base.n_gpus];
+                for &g in set {
+                    if g >= base.n_gpus {
+                        return Err(ReplicationError::GpuOutOfRange {
+                            model: m,
+                            expert: e,
+                            gpu: g,
+                            n_gpus: base.n_gpus,
+                        });
+                    }
+                    if seen[g] {
+                        return Err(ReplicationError::DuplicateReplica {
+                            model: m,
+                            expert: e,
+                            gpu: g,
+                        });
+                    }
+                    seen[g] = true;
+                }
+            }
+        }
+        Ok(ReplicatedDeployment { base, replicas })
+    }
+
+    /// The trivial (un-replicated) wrapper: every expert's set is just its
+    /// primary GPU. Always valid.
+    pub fn from_deployment(base: Deployment) -> ReplicatedDeployment {
+        let replicas = base
+            .assignments
+            .iter()
+            .map(|a| a.iter().map(|&g| vec![g]).collect())
+            .collect();
+        ReplicatedDeployment { base, replicas }
+    }
+
+    /// Number of colocated models.
+    pub fn n_models(&self) -> usize {
+        self.base.n_models()
+    }
+
+    /// Cluster size.
+    pub fn n_gpus(&self) -> usize {
+        self.base.n_gpus
+    }
+
+    /// True when at least one expert has more than one replica.
+    pub fn is_replicated(&self) -> bool {
+        self.replicas
+            .iter()
+            .any(|model| model.iter().any(|set| set.len() > 1))
+    }
+
+    /// Replica count of model `m`'s expert `e`.
+    pub fn replica_count(&self, m: usize, e: usize) -> usize {
+        self.replicas[m][e].len()
+    }
+
+    /// Total number of *extra* copies beyond the primaries.
+    pub fn added_replicas(&self) -> usize {
+        self.replicas
+            .iter()
+            .flat_map(|model| model.iter().map(|set| set.len() - 1))
+            .sum()
+    }
+
+    /// Per-GPU slot occupancy: how many `(model, expert)` copies (primaries
+    /// and replicas) each GPU hosts — the quantity a memory budget bounds.
+    pub fn slots_per_gpu(&self) -> Vec<usize> {
+        let mut slots = vec![0usize; self.n_gpus()];
+        for model in &self.replicas {
+            for set in model {
+                for &g in set {
+                    slots[g] += 1;
+                }
+            }
+        }
+        slots
+    }
+
+    /// Add a replica of model `m`'s expert `e` on `gpu`. Fails on duplicate
+    /// or out-of-range GPUs.
+    pub fn add_replica(&mut self, m: usize, e: usize, gpu: usize) -> Result<(), ReplicationError> {
+        if gpu >= self.n_gpus() {
+            return Err(ReplicationError::GpuOutOfRange {
+                model: m,
+                expert: e,
+                gpu,
+                n_gpus: self.n_gpus(),
+            });
+        }
+        if self.replicas[m][e].contains(&gpu) {
+            return Err(ReplicationError::DuplicateReplica { model: m, expert: e, gpu });
+        }
+        self.replicas[m][e].push(gpu);
+        Ok(())
+    }
+
+    /// Model `m`'s layer statistics projected onto GPU indices with the
+    /// plan's split weights applied: each sender's tokens for a replicated
+    /// expert spread across its replica GPUs
+    /// ([`TrafficMatrix::project_split`]). With all-singleton sets this is
+    /// exactly [`Deployment::project_layer`].
+    pub fn project_layer_split(
+        &self,
+        m: usize,
+        layer: &MoeLayerStats,
+        plan: &SplitPlan,
+    ) -> MoeLayerStats {
+        assert_eq!(
+            layer.n_experts(),
+            self.base.assignments[m].len(),
+            "layer expert count must match model {m}'s assignment"
+        );
+        MoeLayerStats {
+            traffic: layer.traffic.project_split(
+                &self.base.assignments[m],
+                &self.replicas[m],
+                &plan.weights[m],
+                self.base.n_gpus,
+            ),
+            ..*layer
+        }
+    }
+
+    /// Aggregated split GPU-level traffic of all models for one layer set.
+    pub fn aggregated_traffic_split(
+        &self,
+        layers: &[&MoeLayerStats],
+        plan: &SplitPlan,
+    ) -> TrafficMatrix {
+        assert_eq!(layers.len(), self.n_models());
+        let mut agg = TrafficMatrix::zeros(self.n_gpus());
+        for (m, layer) in layers.iter().enumerate() {
+            agg = agg.sum(&self.project_layer_split(m, layer, plan).traffic);
+        }
+        agg
+    }
+
+    /// Aggregate a per-expert token histogram of model `m` into per-GPU
+    /// loads under this placement *and* split plan: each expert's count
+    /// splits across its replicas by the plan weights (largest-remainder
+    /// integerization, [`split_tokens`]). This is what the adaptive
+    /// replanner watches for replicated deployments.
+    pub fn gpu_loads_split(
+        &self,
+        m: usize,
+        expert_histogram: &[u64],
+        plan: &SplitPlan,
+    ) -> Vec<u64> {
+        assert_eq!(
+            expert_histogram.len(),
+            self.base.assignments[m].len(),
+            "histogram must cover model {m}'s experts"
+        );
+        let mut loads = vec![0u64; self.n_gpus()];
+        for (e, &count) in expert_histogram.iter().enumerate() {
+            let set = &self.replicas[m][e];
+            if set.len() == 1 {
+                loads[set[0]] += count;
+                continue;
+            }
+            for (r, part) in split_tokens(count, &plan.weights[m][e]).into_iter().enumerate() {
+                loads[set[r]] += part;
+            }
+        }
+        loads
+    }
+
+    /// Optimize a [`SplitPlan`] for full traces: split weights are chosen on
+    /// each model's aggregate (all-layer) traffic, the same statistics the
+    /// planner's general path plans on.
+    pub fn plan_splits(&self, traces: &[&ModelTrace], cluster: &Cluster) -> SplitPlan {
+        let totals = aggregate_totals(traces);
+        let refs: Vec<&MoeLayerStats> = totals.iter().collect();
+        optimize_splits(self, &refs, cluster)
+    }
+
+    /// Simulate one layer set under this replicated placement and `plan`:
+    /// project every model with split weights and run the generalized group
+    /// simulator under the base deployment's policy.
+    pub fn simulate_layer(
+        &self,
+        layers: &[&MoeLayerStats],
+        cluster: &Cluster,
+        plan: &SplitPlan,
+    ) -> SimResult {
+        assert_eq!(layers.len(), self.n_models());
+        assert_eq!(cluster.len(), self.n_gpus());
+        let projected: Vec<MoeLayerStats> = layers
+            .iter()
+            .enumerate()
+            .map(|(m, l)| self.project_layer_split(m, l, plan))
+            .collect();
+        let refs: Vec<&MoeLayerStats> = projected.iter().collect();
+        simulate_group(&refs, cluster, self.base.policy).0
+    }
+
+    /// Simulate full traces layer by layer under one split plan.
+    pub fn simulate(
+        &self,
+        traces: &[&ModelTrace],
+        cluster: &Cluster,
+        plan: &SplitPlan,
+    ) -> Vec<SimResult> {
+        assert_eq!(traces.len(), self.n_models());
+        let n_layers = traces[0].layers.len();
+        for t in traces {
+            assert_eq!(t.layers.len(), n_layers, "traces must have equal layer counts");
+        }
+        (0..n_layers)
+            .map(|k| {
+                let layers: Vec<&MoeLayerStats> = traces.iter().map(|t| &t.layers[k]).collect();
+                self.simulate_layer(&layers, cluster, plan)
+            })
+            .collect()
+    }
+
+    /// Total simulated inference time across all layers (ms).
+    pub fn total_inference_ms(
+        &self,
+        traces: &[&ModelTrace],
+        cluster: &Cluster,
+        plan: &SplitPlan,
+    ) -> f64 {
+        self.simulate(traces, cluster, plan)
+            .iter()
+            .map(|r| r.inference_ms)
+            .sum()
+    }
+
+    /// JSON rendering: the base deployment's fields plus the replica sets.
+    pub fn to_json(&self) -> Json {
+        let replicas = Json::Arr(
+            self.replicas
+                .iter()
+                .map(|model| {
+                    Json::Arr(
+                        model
+                            .iter()
+                            .map(|set| {
+                                Json::Arr(set.iter().map(|&g| Json::from(g)).collect())
+                            })
+                            .collect(),
+                    )
+                })
+                .collect(),
+        );
+        let mut json = self.base.to_json();
+        if let Json::Obj(map) = &mut json {
+            map.insert("replicas".to_string(), replicas);
+            map.insert(
+                "added_replicas".to_string(),
+                Json::from(self.added_replicas()),
+            );
+        }
+        json
+    }
+}
+
+/// Per-GPU completion estimates under a replicated deployment and split
+/// plan — [`crate::placement::estimate_per_gpu`] with split projection:
+/// serialized compute of every hosted copy's token share plus the GPU's
+/// worst-direction share of the aggregated split wire volume.
+pub fn estimate_per_gpu_replicated(
+    rep: &ReplicatedDeployment,
+    layers: &[&MoeLayerStats],
+    cluster: &Cluster,
+    plan: &SplitPlan,
+) -> Vec<f64> {
+    assert_eq!(layers.len(), rep.n_models());
+    assert_eq!(cluster.len(), rep.n_gpus());
+    let n = rep.n_gpus();
+
+    let mut compute = vec![0.0f64; n];
+    let mut agg = TrafficMatrix::zeros(n);
+    for (m, layer) in layers.iter().enumerate() {
+        let proj = rep.project_layer_split(m, layer, plan).traffic;
+        let loads = proj.expert_loads();
+        for (g, c) in compute.iter_mut().enumerate() {
+            *c += layer.gate_ms + layer.agg_ms + loads[g] as f64 * layer.ffn_ms_per_token;
+        }
+        agg = agg.sum(&proj);
+    }
+
+    (0..n)
+        .map(|g| {
+            let gpu = cluster.gpu(g);
+            let wire = agg.row_sum(g).max(agg.col_sum(g)) as f64 / gpu.bandwidth;
+            compute[g] / gpu.flops_scale + wire
+        })
+        .collect()
+}
+
+/// Max over [`estimate_per_gpu_replicated`] — the objective the replication
+/// pass and the split-aware refinement minimize.
+pub fn estimate_bottleneck_replicated(
+    rep: &ReplicatedDeployment,
+    layers: &[&MoeLayerStats],
+    cluster: &Cluster,
+    plan: &SplitPlan,
+) -> f64 {
+    estimate_per_gpu_replicated(rep, layers, cluster, plan)
+        .into_iter()
+        .fold(0.0, f64::max)
+}
+
+/// Split-aware swap/move refinement: the planner's local search re-run after
+/// replication. Primaries move (or swap) between GPUs whenever that shrinks
+/// the split-aware bottleneck estimate; every candidate re-optimizes the
+/// split plan, so a move is judged by the best splits it enables. Moves onto
+/// a GPU that already holds another replica of the same expert are skipped
+/// (the set must stay duplicate-free), and with a positive `slots_per_gpu`
+/// budget a move never pushes a GPU past it (swaps keep per-GPU occupancy
+/// unchanged, so they are always budget-safe). Bounded rounds, hot-GPU
+/// pruning — a candidate not touching a bottleneck GPU cannot shrink the
+/// max.
+pub fn refine_replicated(
+    rep: &mut ReplicatedDeployment,
+    layers: &[&MoeLayerStats],
+    cluster: &Cluster,
+    slots_per_gpu: usize,
+) {
+    let n = rep.n_gpus();
+    let units: Vec<(usize, usize)> = (0..rep.n_models())
+        .flat_map(|m| (0..rep.base.n_experts(m)).map(move |e| (m, e)))
+        .collect();
+
+    let eval = |rep: &ReplicatedDeployment| -> (f64, Vec<f64>) {
+        let plan = optimize_splits(rep, layers, cluster);
+        let costs = estimate_per_gpu_replicated(rep, layers, cluster, &plan);
+        let mx = costs.iter().cloned().fold(0.0, f64::max);
+        (mx, costs)
+    };
+    let is_hot = |costs: &[f64], best: f64, g: usize| costs[g] >= best - 1e-9;
+
+    let (mut best, mut costs) = eval(rep);
+    // Occupancy cache: only moves change it (swaps are occupancy-neutral),
+    // so it updates at commit points instead of being rebuilt per candidate.
+    let mut slots = rep.slots_per_gpu();
+    for _ in 0..4 {
+        let mut improved = false;
+        for &(m, e) in &units {
+            let cur = rep.base.assignments[m][e];
+            for g in 0..n {
+                if g == cur
+                    || rep.replicas[m][e].contains(&g)
+                    || !(is_hot(&costs, best, cur) || is_hot(&costs, best, g))
+                    || (slots_per_gpu > 0 && slots[g] >= slots_per_gpu)
+                {
+                    continue;
+                }
+                rep.base.assignments[m][e] = g;
+                rep.replicas[m][e][0] = g;
+                let (mx, c) = eval(rep);
+                if mx + 1e-12 < best {
+                    best = mx;
+                    costs = c;
+                    slots[cur] -= 1;
+                    slots[g] += 1;
+                    improved = true;
+                    break; // unit committed; on to the next one
+                }
+                rep.base.assignments[m][e] = cur;
+                rep.replicas[m][e][0] = cur;
+            }
+        }
+        for i in 0..units.len() {
+            for j in (i + 1)..units.len() {
+                let (m1, e1) = units[i];
+                let (m2, e2) = units[j];
+                let g1 = rep.base.assignments[m1][e1];
+                let g2 = rep.base.assignments[m2][e2];
+                if g1 == g2
+                    || rep.replicas[m1][e1].contains(&g2)
+                    || rep.replicas[m2][e2].contains(&g1)
+                    || !(is_hot(&costs, best, g1) || is_hot(&costs, best, g2))
+                {
+                    continue;
+                }
+                rep.base.assignments[m1][e1] = g2;
+                rep.replicas[m1][e1][0] = g2;
+                rep.base.assignments[m2][e2] = g1;
+                rep.replicas[m2][e2][0] = g1;
+                let (mx, c) = eval(rep);
+                if mx + 1e-12 < best {
+                    best = mx;
+                    costs = c;
+                    improved = true;
+                } else {
+                    rep.base.assignments[m1][e1] = g1;
+                    rep.replicas[m1][e1][0] = g1;
+                    rep.base.assignments[m2][e2] = g2;
+                    rep.replicas[m2][e2][0] = g2;
+                }
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+    debug_assert!(
+        ReplicatedDeployment::new(rep.base.clone(), rep.replicas.clone()).is_ok(),
+        "refinement must preserve replica-set validity"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::placement::{estimate_bottleneck, Scenario};
+    use crate::schedule::SchedulePolicy;
+    use crate::traffic::zipf_traffic;
+
+    fn hot_layer(n: usize, alpha: f64, seed: u64) -> MoeLayerStats {
+        MoeLayerStats {
+            traffic: zipf_traffic(n, 512, alpha, seed),
+            gate_ms: 0.02,
+            ffn_ms_per_token: 0.001,
+            agg_ms: 0.015,
+        }
+    }
+
+    fn packed_base(n_experts: usize, n_gpus: usize) -> Deployment {
+        // expert e -> GPU e % n_gpus
+        Deployment::new(
+            n_gpus,
+            vec![(0..n_experts).map(|e| e % n_gpus).collect()],
+            SchedulePolicy::Aurora,
+            Scenario::ExclusiveHomogeneous,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn validation_catches_bad_replica_maps() {
+        let base = packed_base(4, 2);
+        // wrong model count
+        assert!(matches!(
+            ReplicatedDeployment::new(base.clone(), vec![]),
+            Err(ReplicationError::ShapeMismatch { .. })
+        ));
+        // empty set
+        assert!(matches!(
+            ReplicatedDeployment::new(
+                base.clone(),
+                vec![vec![vec![0], vec![1], vec![], vec![1]]]
+            ),
+            Err(ReplicationError::EmptyReplicaSet { model: 0, expert: 2 })
+        ));
+        // replica 0 must be the primary
+        assert!(matches!(
+            ReplicatedDeployment::new(
+                base.clone(),
+                vec![vec![vec![1], vec![1], vec![0], vec![1]]]
+            ),
+            Err(ReplicationError::PrimaryMismatch { model: 0, expert: 0 })
+        ));
+        // duplicate GPU in a set
+        assert!(matches!(
+            ReplicatedDeployment::new(
+                base.clone(),
+                vec![vec![vec![0, 0], vec![1], vec![0], vec![1]]]
+            ),
+            Err(ReplicationError::DuplicateReplica { gpu: 0, .. })
+        ));
+        // out of range
+        let err = ReplicatedDeployment::new(
+            base,
+            vec![vec![vec![0, 5], vec![1], vec![0], vec![1]]],
+        )
+        .unwrap_err();
+        assert!(matches!(err, ReplicationError::GpuOutOfRange { gpu: 5, .. }));
+        assert!(err.to_string().contains("GPU 5"));
+    }
+
+    #[test]
+    fn trivial_wrapper_is_not_replicated() {
+        let rep = ReplicatedDeployment::from_deployment(packed_base(6, 3));
+        assert!(!rep.is_replicated());
+        assert_eq!(rep.added_replicas(), 0);
+        assert_eq!(rep.slots_per_gpu(), vec![2, 2, 2]);
+        assert_eq!(rep.replica_count(0, 0), 1);
+    }
+
+    #[test]
+    fn trivial_projection_matches_base_bitwise() {
+        let rep = ReplicatedDeployment::from_deployment(packed_base(8, 4));
+        let plan = SplitPlan::trivial(&rep);
+        let l = hot_layer(8, 1.2, 5);
+        assert_eq!(
+            rep.project_layer_split(0, &l, &plan),
+            rep.base.project_layer(0, &l)
+        );
+        // estimates agree with the placement-core estimator too
+        let cluster = Cluster::homogeneous(4, 100.0);
+        let a = estimate_per_gpu_replicated(&rep, &[&l], &cluster, &plan);
+        let b = crate::placement::estimate_per_gpu(&rep.base, &[&l], &cluster);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn replicating_the_hot_expert_cuts_the_bottleneck() {
+        let n_gpus = 4;
+        let l = hot_layer(8, 1.2, 9);
+        let cluster = Cluster::homogeneous(n_gpus, 100.0);
+        let base = packed_base(8, n_gpus);
+        let hot = (0..8)
+            .max_by_key(|&e| l.expert_loads()[e])
+            .unwrap();
+        let mut rep = ReplicatedDeployment::from_deployment(base.clone());
+        for g in 0..n_gpus {
+            if g != rep.base.gpu_of(0, hot) {
+                rep.add_replica(0, hot, g).unwrap();
+            }
+        }
+        let plan = optimize_splits(&rep, &[&l], &cluster);
+        let replicated = estimate_bottleneck_replicated(&rep, &[&l], &cluster, &plan);
+        let unreplicated = estimate_bottleneck(&base, &[&l], &cluster);
+        assert!(
+            replicated < unreplicated * 0.85,
+            "replicated {replicated} vs unreplicated {unreplicated}"
+        );
+    }
+
+    #[test]
+    fn gpu_loads_split_conserves_tokens() {
+        let mut rep = ReplicatedDeployment::from_deployment(packed_base(4, 2));
+        rep.add_replica(0, 0, 1).unwrap();
+        let plan = SplitPlan {
+            weights: vec![vec![vec![0.5, 0.5], vec![1.0], vec![1.0], vec![1.0]]],
+        };
+        let hist = [100u64, 10, 20, 30];
+        let loads = rep.gpu_loads_split(0, &hist, &plan);
+        assert_eq!(loads.iter().sum::<u64>(), 160);
+        // expert 0 (primary GPU 0) split 50/50: GPU 0 gets 50 + expert 2's 20
+        assert_eq!(loads, vec![50 + 20, 50 + 10 + 30]);
+    }
+
+    #[test]
+    fn refinement_never_worsens_and_stays_valid() {
+        let l = hot_layer(8, 1.2, 11);
+        let cluster = Cluster::homogeneous(4, 100.0);
+        let mut rep = ReplicatedDeployment::from_deployment(packed_base(8, 4));
+        let hot = (0..8).max_by_key(|&e| l.expert_loads()[e]).unwrap();
+        rep.add_replica(0, hot, (rep.base.gpu_of(0, hot) + 1) % 4).unwrap();
+        let before = {
+            let plan = optimize_splits(&rep, &[&l], &cluster);
+            estimate_bottleneck_replicated(&rep, &[&l], &cluster, &plan)
+        };
+        refine_replicated(&mut rep, &[&l], &cluster, 0);
+        let after = {
+            let plan = optimize_splits(&rep, &[&l], &cluster);
+            estimate_bottleneck_replicated(&rep, &[&l], &cluster, &plan)
+        };
+        assert!(after <= before + 1e-9, "refine worsened {before} -> {after}");
+        assert!(ReplicatedDeployment::new(rep.base.clone(), rep.replicas.clone()).is_ok());
+    }
+
+    #[test]
+    fn json_includes_replica_sets() {
+        let mut rep = ReplicatedDeployment::from_deployment(packed_base(4, 2));
+        rep.add_replica(0, 1, 0).unwrap();
+        let j = rep.to_json();
+        assert_eq!(j.get("added_replicas").unwrap().as_u64(), Some(1));
+        let sets = j.get("replicas").unwrap().as_arr().unwrap();
+        assert_eq!(sets.len(), 1);
+        assert_eq!(sets[0].as_arr().unwrap().len(), 4);
+    }
+}

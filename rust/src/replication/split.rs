@@ -1,0 +1,280 @@
+//! Fractional token-split optimization across expert replicas.
+//!
+//! Once an expert has several replicas, every sender must decide what
+//! fraction of its tokens goes to each copy. [`optimize_splits`] makes that
+//! decision by **water-filling** on a per-GPU completion level: experts are
+//! visited heaviest first, and each expert's load is poured across its
+//! replica GPUs so that their projected levels equalize — the continuous
+//! analogue of the Theorem 5.1 sorted assignment, applied within one
+//! expert's replica set. Levels charge both compute (FFN ms per token,
+//! scaled by the GPU's speed) and wire (one receive-port token), so fast
+//! well-connected GPUs absorb more of the split.
+//!
+//! The result is a [`SplitPlan`]: one weight vector per `(model, expert)`,
+//! consumed by [`crate::traffic::TrafficMatrix::project_split`] at planning
+//! time and by the serving router at inference time. Singleton replica sets
+//! always get the weight vector `[1.0]`, which keeps un-replicated
+//! deployments bit-for-bit identical to the plain placement path.
+
+use super::ReplicatedDeployment;
+use crate::cluster::Cluster;
+use crate::sim::MoeLayerStats;
+
+/// Fractional routing weights for every `(model, expert)`'s replica set.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SplitPlan {
+    /// `weights[m][e][r]` = fraction of each sender's tokens for model `m`'s
+    /// expert `e` routed to replica `r` (replica order matches
+    /// [`ReplicatedDeployment::replicas`]). Each vector sums to 1.
+    pub weights: Vec<Vec<Vec<f64>>>,
+}
+
+impl SplitPlan {
+    /// The primary-only plan: every expert routes all tokens to replica 0.
+    /// For un-replicated deployments this is also the *optimal* plan.
+    pub fn trivial(rep: &ReplicatedDeployment) -> SplitPlan {
+        let weights = rep
+            .replicas
+            .iter()
+            .map(|model| {
+                model
+                    .iter()
+                    .map(|set| {
+                        let mut w = vec![0.0; set.len()];
+                        w[0] = 1.0;
+                        w
+                    })
+                    .collect()
+            })
+            .collect();
+        SplitPlan { weights }
+    }
+
+    /// Weight vector of model `m`'s expert `e`.
+    pub fn weights_for(&self, m: usize, e: usize) -> &[f64] {
+        &self.weights[m][e]
+    }
+}
+
+/// Marginal cost (ms) of routing one more token to a copy of an expert of
+/// `layer` hosted on GPU `g`: FFN compute plus one receive-port token. The
+/// wire charge is an upper bound (tokens from the replica's own GPU stay
+/// local), which biases splits toward under-loading slow ports — the safe
+/// direction.
+fn token_cost(layer: &MoeLayerStats, cluster: &Cluster, g: usize) -> f64 {
+    let gpu = cluster.gpu(g);
+    layer.ffn_ms_per_token / gpu.flops_scale + 1.0 / gpu.bandwidth
+}
+
+/// Water-filling: pour `total` load over replicas with current `levels` and
+/// per-unit `costs`, returning per-replica allocations that equalize the
+/// resulting levels (replicas already above the water line get nothing).
+fn water_fill(total: f64, levels: &[f64], costs: &[f64]) -> Vec<f64> {
+    let k = levels.len();
+    debug_assert_eq!(k, costs.len());
+    let mut order: Vec<usize> = (0..k).collect();
+    order.sort_by(|&a, &b| levels[a].partial_cmp(&levels[b]).unwrap().then(a.cmp(&b)));
+
+    // With the `p` lowest replicas active at water level `T`:
+    // Σ_{r active} (T − L_r) / c_r = total  ⇒  T = (total + Σ L_r/c_r) / Σ 1/c_r.
+    // The first prefix whose `T` does not rise above the next replica's
+    // level is the solution (the standard water-filling argument).
+    let mut sum_lc = 0.0;
+    let mut sum_ic = 0.0;
+    let mut t_opt = 0.0;
+    let mut active = k;
+    for p in 1..=k {
+        let r = order[p - 1];
+        sum_lc += levels[r] / costs[r];
+        sum_ic += 1.0 / costs[r];
+        let t = (total + sum_lc) / sum_ic;
+        let next = if p < k { levels[order[p]] } else { f64::INFINITY };
+        if t <= next {
+            t_opt = t;
+            active = p;
+            break;
+        }
+        t_opt = t;
+    }
+
+    let mut out = vec![0.0; k];
+    for &r in order.iter().take(active) {
+        out[r] = ((t_opt - levels[r]) / costs[r]).max(0.0);
+    }
+    // Remove floating-point drift so allocations sum to exactly `total`.
+    let s: f64 = out.iter().sum();
+    if s > 0.0 {
+        for x in &mut out {
+            *x *= total / s;
+        }
+    } else {
+        out[order[0]] = total;
+    }
+    out
+}
+
+/// Compute split weights for `rep` on one layer set (one GPU-level plan per
+/// model; `layers[m]` must be **expert-indexed** statistics of model `m`).
+///
+/// Experts are processed heaviest first. Each singleton expert charges its
+/// full load to its primary's level; each replicated expert water-fills its
+/// load across its replica GPUs' levels. Deterministic: ties break on
+/// `(model, expert)` order.
+pub fn optimize_splits(
+    rep: &ReplicatedDeployment,
+    layers: &[&MoeLayerStats],
+    cluster: &Cluster,
+) -> SplitPlan {
+    assert_eq!(layers.len(), rep.n_models(), "one layer per model");
+    let n = rep.n_gpus();
+    assert_eq!(cluster.len(), n);
+
+    // Per-GPU water level, seeded with the constant per-model compute terms
+    // so slower GPUs start higher.
+    let mut level = vec![0.0f64; n];
+    for (g, l) in level.iter_mut().enumerate() {
+        let flops = cluster.gpu(g).flops_scale;
+        for layer in layers {
+            *l += (layer.gate_ms + layer.agg_ms) / flops;
+        }
+    }
+
+    let loads: Vec<Vec<u64>> = layers.iter().map(|l| l.expert_loads()).collect();
+    let mut plan = SplitPlan::trivial(rep);
+
+    // Pass 1: singleton (and zero-load) experts are not a decision — charge
+    // their full load to their primary's level up front, so every split
+    // below sees the fixed load landscape.
+    let mut replicated: Vec<(usize, usize)> = Vec::new();
+    for m in 0..rep.n_models() {
+        for e in 0..rep.base.n_experts(m) {
+            let set = &rep.replicas[m][e];
+            if set.len() == 1 || loads[m][e] == 0 {
+                level[set[0]] += loads[m][e] as f64 * token_cost(layers[m], cluster, set[0]);
+            } else {
+                replicated.push((m, e));
+            }
+        }
+    }
+
+    // Pass 2: water-fill the replicated experts, heaviest first.
+    replicated.sort_by_key(|&(m, e)| (std::cmp::Reverse(loads[m][e]), m, e));
+    for (m, e) in replicated {
+        let set = &rep.replicas[m][e];
+        let load = loads[m][e] as f64;
+        let costs: Vec<f64> = set
+            .iter()
+            .map(|&g| token_cost(layers[m], cluster, g))
+            .collect();
+        let cur: Vec<f64> = set.iter().map(|&g| level[g]).collect();
+        let alloc = water_fill(load, &cur, &costs);
+        for (r, &x) in alloc.iter().enumerate() {
+            plan.weights[m][e][r] = x / load;
+            level[set[r]] += x * costs[r];
+        }
+    }
+    plan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::placement::{Deployment, Scenario};
+    use crate::schedule::SchedulePolicy;
+    use crate::traffic::TrafficMatrix;
+
+    fn layer(n: usize, hot: usize, hot_tokens: u64) -> MoeLayerStats {
+        let mut d = TrafficMatrix::zeros(n);
+        for i in 0..n {
+            for j in 0..n {
+                d.set(i, j, if j == hot { hot_tokens } else { 1 });
+            }
+        }
+        MoeLayerStats {
+            traffic: d,
+            gate_ms: 0.02,
+            ffn_ms_per_token: 0.001,
+            agg_ms: 0.015,
+        }
+    }
+
+    fn rep_with_hot_replicated(n: usize) -> ReplicatedDeployment {
+        let base = Deployment::new(
+            n,
+            vec![(0..n).collect()],
+            SchedulePolicy::Aurora,
+            Scenario::ExclusiveHomogeneous,
+        )
+        .unwrap();
+        let mut rep = ReplicatedDeployment::from_deployment(base);
+        rep.add_replica(0, 0, 1).unwrap();
+        rep.add_replica(0, 0, 2).unwrap();
+        rep
+    }
+
+    #[test]
+    fn water_fill_equalizes_levels() {
+        let alloc = water_fill(90.0, &[0.0, 0.0, 0.0], &[1.0, 1.0, 1.0]);
+        for a in &alloc {
+            assert!((a - 30.0).abs() < 1e-9);
+        }
+        // a replica already above the water line gets nothing
+        let alloc = water_fill(10.0, &[0.0, 100.0], &[1.0, 1.0]);
+        assert!((alloc[0] - 10.0).abs() < 1e-9);
+        assert_eq!(alloc[1], 0.0);
+        // cheaper replicas absorb more
+        let alloc = water_fill(30.0, &[0.0, 0.0], &[1.0, 2.0]);
+        assert!(alloc[0] > alloc[1]);
+        assert!((alloc[0] + alloc[1] - 30.0).abs() < 1e-9);
+        // resulting levels equalize: a0 * 1 == a1 * 2
+        assert!((alloc[0] - 2.0 * alloc[1]).abs() < 1e-9);
+    }
+
+    #[test]
+    fn trivial_plan_is_primary_only() {
+        let rep = rep_with_hot_replicated(4);
+        let plan = SplitPlan::trivial(&rep);
+        assert_eq!(plan.weights_for(0, 0), &[1.0, 0.0, 0.0]);
+        assert_eq!(plan.weights_for(0, 1), &[1.0]);
+    }
+
+    #[test]
+    fn optimized_splits_spread_the_hot_expert() {
+        let rep = rep_with_hot_replicated(4);
+        let l = layer(4, 0, 50);
+        let cluster = crate::cluster::Cluster::homogeneous(4, 100.0);
+        let plan = optimize_splits(&rep, &[&l], &cluster);
+        let w = plan.weights_for(0, 0);
+        assert_eq!(w.len(), 3);
+        assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        // all three replicas carry a meaningful share of the hot expert
+        for &x in w {
+            assert!(x > 0.1, "weights {w:?}");
+        }
+        // singleton experts keep the trivial weight
+        assert_eq!(plan.weights_for(0, 3), &[1.0]);
+    }
+
+    #[test]
+    fn splits_favor_faster_gpus_on_hetero_clusters() {
+        let rep = {
+            let base = Deployment::new(
+                4,
+                vec![vec![0, 1, 2, 3]],
+                SchedulePolicy::Aurora,
+                Scenario::ExclusiveHeterogeneous,
+            )
+            .unwrap();
+            let mut rep = ReplicatedDeployment::from_deployment(base);
+            // replica of expert 0 (primary on fast GPU 0) on slow GPU 3
+            rep.add_replica(0, 0, 3).unwrap();
+            rep
+        };
+        let l = layer(4, 0, 200);
+        let cluster = crate::cluster::Cluster::paper_heterogeneous(4, 100.0);
+        let plan = optimize_splits(&rep, &[&l], &cluster);
+        let w = plan.weights_for(0, 0);
+        // GPU 0 (1.0 scale) outweighs GPU 3 (0.4 scale)
+        assert!(w[0] > w[1], "weights {w:?}");
+    }
+}

@@ -327,6 +327,43 @@ mod tests {
         }
     }
 
+    /// Replica-split matrices — expert-level traffic fanned out across
+    /// replica GPUs by fractional weights, integerized per flow — must stay
+    /// schedulable, conservation-exact, and Theorem 4.2-optimal: the split
+    /// projection only redistributes integer tokens, so the validator's
+    /// contract is unchanged.
+    #[test]
+    fn schedule_valid_on_replica_split_matrices() {
+        use crate::schedule::aurora_schedule;
+        use crate::traffic::zipf_traffic;
+        for seed in 0..8u64 {
+            // 8 experts packed two-per-GPU; the two hottest experts each get
+            // replicas on two extra GPUs with a lopsided 60/25/15 split.
+            let d = zipf_traffic(8, 300 + seed * 17, 1.2, seed);
+            let owner: Vec<usize> = (0..8).map(|e| e / 2).collect();
+            let mut replicas: Vec<Vec<usize>> = owner.iter().map(|&g| vec![g]).collect();
+            let mut weights: Vec<Vec<f64>> = owner.iter().map(|_| vec![1.0]).collect();
+            let mut by_load: Vec<usize> = (0..8).collect();
+            let loads = d.expert_loads();
+            by_load.sort_by_key(|&e| std::cmp::Reverse(loads[e]));
+            for &hot in by_load.iter().take(2) {
+                let g = owner[hot];
+                replicas[hot] = vec![g, (g + 1) % 4, (g + 2) % 4];
+                weights[hot] = vec![0.6, 0.25, 0.15];
+            }
+            let split = d.project_split(&owner, &replicas, &weights, 4);
+            // conservation of total token load through the split
+            assert_eq!(
+                split.expert_loads().iter().sum::<u64>(),
+                d.expert_loads().iter().sum::<u64>(),
+                "seed {seed}"
+            );
+            let s = aurora_schedule(&split);
+            validate_slot_schedule(&split, &s).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+            assert_eq!(s.makespan_tokens(), split.b_max_tokens(), "seed {seed}");
+        }
+    }
+
     /// Contention injection: corrupt a genuinely optimal schedule by
     /// redirecting one transfer onto another transfer's receiver; the
     /// validator must flag the exact conflicting GPU.

@@ -10,6 +10,7 @@
 //! (0.25) replans long before the plan decays materially.
 
 use crate::placement::Deployment;
+use crate::replication::{ReplicatedDeployment, SplitPlan};
 
 /// Decision returned by [`AdaptiveReplanner::observe`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -77,6 +78,32 @@ impl AdaptiveReplanner {
         batch_histogram: &[u64],
     ) -> ReplanDecision {
         self.observe(&deployment.gpu_loads(model, batch_histogram))
+    }
+
+    /// Watch a **replicated** placement: the baseline is the per-GPU load
+    /// distribution the deployment-plus-split-plan was optimized for, so
+    /// routing drift *within* a replica set (absorbed by the token splitter)
+    /// does not trigger replans — only drift that unbalances the GPUs does.
+    pub fn for_replicated(
+        rep: &ReplicatedDeployment,
+        plan: &SplitPlan,
+        model: usize,
+        plan_expert_loads: &[u64],
+    ) -> Self {
+        Self::with_defaults(&rep.gpu_loads_split(model, plan_expert_loads, plan))
+    }
+
+    /// [`AdaptiveReplanner::observe`] for replicated deployments: splits the
+    /// batch histogram across replicas by the plan weights before comparing
+    /// per-GPU loads against the baseline.
+    pub fn observe_replicated(
+        &mut self,
+        rep: &ReplicatedDeployment,
+        plan: &SplitPlan,
+        model: usize,
+        batch_histogram: &[u64],
+    ) -> ReplanDecision {
+        self.observe(&rep.gpu_loads_split(model, batch_histogram, plan))
     }
 
     /// Number of replans triggered so far.
@@ -192,6 +219,42 @@ mod tests {
     fn mismatched_histogram_panics() {
         let mut r = AdaptiveReplanner::with_defaults(&[1, 2]);
         r.observe(&[1, 2, 3]);
+    }
+
+    #[test]
+    fn replicated_watcher_absorbs_intra_replica_drift() {
+        use crate::placement::{Deployment, Scenario};
+        use crate::replication::{ReplicatedDeployment, SplitPlan};
+        use crate::schedule::SchedulePolicy;
+        // 2 experts on 2 GPUs; expert 0 is replicated on both with a 50/50
+        // split, expert 1 lives on GPU 1 only.
+        let base = Deployment::new(
+            2,
+            vec![vec![0, 1]],
+            SchedulePolicy::Aurora,
+            Scenario::ExclusiveHomogeneous,
+        )
+        .unwrap();
+        let mut rep = ReplicatedDeployment::from_deployment(base);
+        rep.add_replica(0, 0, 1).unwrap();
+        let mut plan = SplitPlan::trivial(&rep);
+        plan.weights[0][0] = vec![0.5, 0.5];
+        // plan assumed 20/20: per-GPU baseline [10, 30]
+        let mut r = AdaptiveReplanner::for_replicated(&rep, &plan, 0, &[20, 20]);
+        r.window_tokens = 40;
+        r.threshold = 0.2;
+        // all of expert 1's traffic flips onto expert 0: the split absorbs
+        // half of it onto GPU 1, so per-GPU loads stay [20, 20] vs baseline
+        // [10, 30] -> TV = 0.25 > 0.2 -> replan
+        assert_eq!(
+            r.observe_replicated(&rep, &plan, 0, &[40, 0]),
+            ReplanDecision::Replan
+        );
+        // matching the plan's histogram keeps the baseline
+        assert_eq!(
+            r.observe_replicated(&rep, &plan, 0, &[20, 20]),
+            ReplanDecision::Keep
+        );
     }
 
     #[test]

@@ -4,6 +4,7 @@
 use super::batcher::Batch;
 use super::Response;
 use crate::placement::Deployment;
+use crate::replication::{ReplicatedDeployment, SplitPlan};
 use crate::runtime::MoeModel;
 use crate::schedule::{aurora_schedule, SchedulePolicy};
 use crate::traffic::TrafficMatrix;
@@ -101,6 +102,10 @@ pub struct MoeEngine {
     /// The generalized placement this engine executes, plus this model's
     /// index within it. `None` runs the single-host flat ordering.
     deployment: Option<(Deployment, usize)>,
+    /// Replica sets and split weights when the placement is replicated; the
+    /// engine then reports split-aware per-GPU statistics (execution order
+    /// still follows the primary placement above).
+    replicated: Option<(ReplicatedDeployment, SplitPlan)>,
     /// Cumulative per-expert token counts (the "historical statistics" the
     /// planner consumes, §2.4).
     pub expert_stats: Vec<u64>,
@@ -116,6 +121,7 @@ impl MoeEngine {
             model,
             policy,
             deployment: None,
+            replicated: None,
             expert_stats: vec![0; n],
             expert_order: (0..n).collect(),
         }
@@ -141,13 +147,39 @@ impl MoeEngine {
         engine
     }
 
+    /// Like [`MoeEngine::with_deployment`], but replica-aware: execution
+    /// order follows the replicated deployment's primary placement, while
+    /// per-GPU statistics ([`MoeEngine::gpu_stats`]) split each expert's
+    /// observed tokens across its replicas by the plan weights — the load
+    /// the cluster actually sees.
+    pub fn with_replicated_deployment(
+        model: MoeModel,
+        rep: ReplicatedDeployment,
+        plan: SplitPlan,
+        model_index: usize,
+    ) -> Self {
+        let mut engine = Self::with_deployment(model, rep.base.clone(), model_index);
+        engine.replicated = Some((rep, plan));
+        engine
+    }
+
     /// The bound deployment, if any.
     pub fn deployment(&self) -> Option<&Deployment> {
         self.deployment.as_ref().map(|(d, _)| d)
     }
 
+    /// The bound replicated deployment, if any.
+    pub fn replicated_deployment(&self) -> Option<&ReplicatedDeployment> {
+        self.replicated.as_ref().map(|(r, _)| r)
+    }
+
     /// Cumulative observed token load per GPU under the bound deployment.
+    /// Replica-bound engines report split-aware loads.
     pub fn gpu_stats(&self) -> Option<Vec<u64>> {
+        if let Some((rep, plan)) = &self.replicated {
+            let m = self.deployment.as_ref().map(|(_, m)| *m).unwrap_or(0);
+            return Some(rep.gpu_loads_split(m, &self.expert_stats, plan));
+        }
         self.deployment
             .as_ref()
             .map(|(d, m)| d.gpu_loads(*m, &self.expert_stats))

@@ -22,12 +22,14 @@ pub mod batcher;
 pub mod demo;
 pub mod engine;
 pub mod metrics;
+pub mod replica;
 pub mod router;
 
 pub use adaptive::{AdaptiveReplanner, ReplanDecision};
 pub use batcher::{Batch, BatcherConfig, DynamicBatcher};
 pub use engine::{expert_execution_order, grouped_execution_order, MoeEngine};
 pub use metrics::{LatencySummary, Metrics};
+pub use replica::ReplicaRouter;
 pub use router::Router;
 
 /// A serving request: a few tokens of `d_model` features.

@@ -1,0 +1,189 @@
+//! Replica-aware token routing for the serving layer.
+//!
+//! The planner's [`SplitPlan`] says what *fraction* of each expert's tokens
+//! every replica should absorb; at inference time some component has to turn
+//! a concrete batch histogram into per-replica token counts and keep the
+//! split honest as batches stream through. [`ReplicaRouter`] is that
+//! component: it apportions each batch's tokens per expert with
+//! largest-remainder rounding ([`crate::traffic::split_tokens`]), carries
+//! the rounding *debt* across batches (so a 70/30 split stays 70/30 in the
+//! long run even when batches are tiny), and tracks per-GPU outstanding
+//! tokens for observability — the quantity
+//! [`super::AdaptiveReplanner::observe`] watches for replica-load drift.
+
+use crate::replication::{ReplicatedDeployment, SplitPlan};
+use crate::traffic::split_tokens;
+
+/// Routes each expert's token batches across its replica GPUs according to
+/// a [`SplitPlan`], amortizing rounding error across batches.
+#[derive(Debug, Clone)]
+pub struct ReplicaRouter {
+    /// `sets[m][e]` = replica GPUs of model `m`'s expert `e`.
+    sets: Vec<Vec<Vec<usize>>>,
+    /// `weights[m][e][r]` = target fraction for replica `r`.
+    weights: Vec<Vec<Vec<f64>>>,
+    /// Cumulative tokens already routed per `(m, e, r)` — the state that
+    /// lets tiny batches converge to the target split.
+    routed: Vec<Vec<Vec<u64>>>,
+    /// Outstanding (in-flight) tokens per GPU.
+    outstanding: Vec<u64>,
+    n_gpus: usize,
+}
+
+impl ReplicaRouter {
+    /// Build from a replicated deployment and its split plan.
+    pub fn new(rep: &ReplicatedDeployment, plan: &SplitPlan) -> Self {
+        let routed = rep
+            .replicas
+            .iter()
+            .map(|model| model.iter().map(|set| vec![0u64; set.len()]).collect())
+            .collect();
+        Self {
+            sets: rep.replicas.clone(),
+            weights: plan.weights.clone(),
+            routed,
+            outstanding: vec![0; rep.n_gpus()],
+            n_gpus: rep.n_gpus(),
+        }
+    }
+
+    /// Number of GPUs routed across.
+    pub fn n_gpus(&self) -> usize {
+        self.n_gpus
+    }
+
+    /// Split `tokens` of model `m`'s expert `e` across its replicas.
+    /// Returns `(gpu, tokens)` shares (zero shares omitted). Rounding debt
+    /// carries over: the *cumulative* routed counts track the target split,
+    /// so a stream of 1-token batches still converges to the plan weights.
+    pub fn route_tokens(&mut self, m: usize, e: usize, tokens: u64) -> Vec<(usize, u64)> {
+        let set = &self.sets[m][e];
+        if set.len() == 1 {
+            self.routed[m][e][0] += tokens;
+            self.outstanding[set[0]] += tokens;
+            return vec![(set[0], tokens)];
+        }
+        // Target cumulative counts after this batch, minus what's already
+        // routed, is this batch's share — rounding debt repays itself.
+        let total_after: u64 = self.routed[m][e].iter().sum::<u64>() + tokens;
+        let targets = split_tokens(total_after, &self.weights[m][e]);
+        let mut shares = Vec::new();
+        let mut remaining = tokens;
+        for (r, &target) in targets.iter().enumerate() {
+            let already = self.routed[m][e][r];
+            let give = target.saturating_sub(already).min(remaining);
+            if give > 0 {
+                shares.push((set[r], give));
+                self.routed[m][e][r] += give;
+                self.outstanding[set[r]] += give;
+                remaining -= give;
+            }
+        }
+        // Numerical corner (targets drifting below already-routed): dump the
+        // leftover on the primary so conservation always holds.
+        if remaining > 0 {
+            self.routed[m][e][0] += remaining;
+            self.outstanding[set[0]] += remaining;
+            match shares.iter().position(|&(g, _)| g == set[0]) {
+                Some(i) => shares[i].1 += remaining,
+                None => shares.push((set[0], remaining)),
+            }
+        }
+        shares
+    }
+
+    /// Report completion of `tokens` on GPU `gpu`, freeing outstanding load.
+    pub fn complete(&mut self, gpu: usize, tokens: u64) {
+        assert!(
+            self.outstanding[gpu] >= tokens,
+            "completing more tokens than outstanding on GPU {gpu}"
+        );
+        self.outstanding[gpu] -= tokens;
+    }
+
+    /// Outstanding tokens per GPU (observability; feed to the adaptive
+    /// replanner as a load histogram).
+    pub fn outstanding(&self) -> &[u64] {
+        &self.outstanding
+    }
+
+    /// Cumulative tokens routed to each replica of model `m`'s expert `e`.
+    pub fn routed_per_replica(&self, m: usize, e: usize) -> &[u64] {
+        &self.routed[m][e]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::placement::{Deployment, Scenario};
+    use crate::schedule::SchedulePolicy;
+
+    fn two_gpu_rep() -> (ReplicatedDeployment, SplitPlan) {
+        // 4 experts on 2 GPUs; expert 0 replicated onto GPU 1 at 70/30.
+        let base = Deployment::new(
+            2,
+            vec![vec![0, 1, 0, 1]],
+            SchedulePolicy::Aurora,
+            Scenario::ExclusiveHomogeneous,
+        )
+        .unwrap();
+        let mut rep = ReplicatedDeployment::from_deployment(base);
+        rep.add_replica(0, 0, 1).unwrap();
+        let mut plan = SplitPlan::trivial(&rep);
+        plan.weights[0][0] = vec![0.7, 0.3];
+        (rep, plan)
+    }
+
+    #[test]
+    fn singleton_experts_route_to_their_primary() {
+        let (rep, plan) = two_gpu_rep();
+        let mut r = ReplicaRouter::new(&rep, &plan);
+        assert_eq!(r.route_tokens(0, 1, 10), vec![(1, 10)]);
+        assert_eq!(r.route_tokens(0, 2, 5), vec![(0, 5)]);
+        assert_eq!(r.outstanding(), &[5, 10]);
+    }
+
+    #[test]
+    fn split_follows_the_plan_and_conserves() {
+        let (rep, plan) = two_gpu_rep();
+        let mut r = ReplicaRouter::new(&rep, &plan);
+        let shares = r.route_tokens(0, 0, 100);
+        let total: u64 = shares.iter().map(|&(_, t)| t).sum();
+        assert_eq!(total, 100);
+        assert_eq!(r.routed_per_replica(0, 0), &[70, 30]);
+    }
+
+    #[test]
+    fn rounding_debt_amortizes_across_tiny_batches() {
+        let (rep, plan) = two_gpu_rep();
+        let mut r = ReplicaRouter::new(&rep, &plan);
+        for _ in 0..100 {
+            let shares = r.route_tokens(0, 0, 1);
+            assert_eq!(shares.iter().map(|&(_, t)| t).sum::<u64>(), 1);
+        }
+        // after 100 single-token batches the cumulative split matches the
+        // 70/30 plan exactly
+        assert_eq!(r.routed_per_replica(0, 0), &[70, 30]);
+    }
+
+    #[test]
+    fn completion_frees_outstanding_load() {
+        let (rep, plan) = two_gpu_rep();
+        let mut r = ReplicaRouter::new(&rep, &plan);
+        r.route_tokens(0, 0, 10);
+        let before: u64 = r.outstanding().iter().sum();
+        assert_eq!(before, 10);
+        r.complete(0, 7);
+        r.complete(1, 3);
+        assert_eq!(r.outstanding(), &[0, 0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn over_completion_panics() {
+        let (rep, plan) = two_gpu_rep();
+        let mut r = ReplicaRouter::new(&rep, &plan);
+        r.complete(0, 1);
+    }
+}

@@ -110,6 +110,57 @@ mod tests {
         assert_eq!(r.load(), &[10, 2]);
     }
 
+    /// Unequal request sizes: least-loaded must weigh *tokens*, not request
+    /// counts — one giant request should send several small ones elsewhere.
+    #[test]
+    fn least_loaded_weighs_tokens_not_request_counts() {
+        let mut r = Router::new(3, RoutePolicy::LeastLoaded);
+        assert_eq!(r.route(&req(0, 100)), 0); // giant request
+        // the next five small ones avoid worker 0 entirely
+        for i in 1..=5 {
+            let w = r.route(&req(i, 4));
+            assert_ne!(w, 0, "request {i} landed on the overloaded worker");
+        }
+        assert_eq!(r.load(), &[100, 12, 8]);
+        // only once the others catch up does worker 0 become eligible again
+        r.complete(0, 96);
+        assert_eq!(r.route(&req(6, 1)), 0);
+    }
+
+    /// Ties break on the lowest worker id (min_by_key keeps the first
+    /// minimum), which makes routing deterministic.
+    #[test]
+    fn least_loaded_ties_break_deterministically() {
+        let mut r = Router::new(4, RoutePolicy::LeastLoaded);
+        assert_eq!(r.route(&req(0, 5)), 0);
+        assert_eq!(r.route(&req(1, 5)), 1);
+        assert_eq!(r.route(&req(2, 5)), 2);
+        assert_eq!(r.route(&req(3, 5)), 3);
+        // all equal again -> back to worker 0
+        assert_eq!(r.route(&req(4, 5)), 0);
+    }
+
+    /// A skewed stream of mixed sizes keeps the per-worker token imbalance
+    /// bounded by the largest single request.
+    #[test]
+    fn least_loaded_bounds_imbalance_under_mixed_sizes() {
+        let mut r = Router::new(4, RoutePolicy::LeastLoaded);
+        let sizes = [64usize, 1, 1, 1, 32, 2, 2, 2, 16, 4, 4, 4, 8, 8, 8, 8];
+        let mut max_size = 0;
+        for (i, &s) in sizes.iter().cycle().take(160).enumerate() {
+            r.route(&req(i as u64, s));
+            max_size = max_size.max(s);
+        }
+        let min = *r.load().iter().min().unwrap();
+        let max = *r.load().iter().max().unwrap();
+        assert!(
+            max - min <= max_size,
+            "imbalance {} exceeds largest request {max_size} (loads {:?})",
+            max - min,
+            r.load()
+        );
+    }
+
     #[test]
     fn completion_frees_load() {
         let mut r = Router::new(2, RoutePolicy::LeastLoaded);

@@ -361,6 +361,49 @@ mod tests {
         );
     }
 
+    /// Replicated experts reach the simulator as split-projected GPU-level
+    /// stats; splitting a hot expert must shorten the simulated layer.
+    #[test]
+    fn replica_split_projection_shortens_the_layer() {
+        use crate::placement::{Deployment, Scenario};
+        use crate::replication::{optimize_splits, ReplicatedDeployment};
+        use crate::traffic::zipf_traffic;
+
+        let stats = MoeLayerStats {
+            traffic: zipf_traffic(8, 512, 1.2, 3),
+            gate_ms: 0.02,
+            ffn_ms_per_token: 0.001,
+            agg_ms: 0.015,
+        };
+        let cluster = Cluster::homogeneous(4, 100.0);
+        let base = Deployment::new(
+            4,
+            vec![(0..8).map(|e| e % 4).collect()],
+            SchedulePolicy::Aurora,
+            Scenario::ExclusiveHomogeneous,
+        )
+        .unwrap();
+        let hot = (0..8).max_by_key(|&e| stats.expert_loads()[e]).unwrap();
+        let mut rep = ReplicatedDeployment::from_deployment(base.clone());
+        for g in 0..4 {
+            if g != base.gpu_of(0, hot) {
+                rep.add_replica(0, hot, g).unwrap();
+            }
+        }
+        let plan = optimize_splits(&rep, &[&stats], &cluster);
+
+        let plain = base.project_layer(0, &stats);
+        let split = rep.project_layer_split(0, &stats, &plan);
+        let (t_plain, _) = simulate_group(&[&plain], &cluster, SchedulePolicy::Aurora);
+        let (t_split, _) = simulate_group(&[&split], &cluster, SchedulePolicy::Aurora);
+        assert!(
+            t_split.inference_ms < t_plain.inference_ms,
+            "split {} vs plain {}",
+            t_split.inference_ms,
+            t_plain.inference_ms
+        );
+    }
+
     #[test]
     fn zero_traffic_group_still_serializes_compute() {
         let mk = || MoeLayerStats {

@@ -4,17 +4,21 @@
 //! statistics; this module is that testbed. It computes per-layer inference
 //! time and GPU utilization for all four scenarios of Fig. 2:
 //!
-//! * [`exclusive`] — one model per set of GPUs (Eqn. 1/3): the layer is
-//!   `max(G) + |N| + max(F) + |C| + max(A)` with comm times from
+//! * [`simulate_exclusive`] — one model per set of GPUs (Eqn. 1/3): the
+//!   layer is `max(G) + |N| + max(F) + |C| + max(A)` with comm times from
 //!   [`crate::schedule::comm_time`].
-//! * [`colocated`] — two models interleaving on shared GPUs, following the
-//!   Table 2 start/end recurrences (computation competition on the GPU,
-//!   communication overlap on the switch).
-//! * [`group`] — the generalized entry point ([`simulate_group`]): any number
-//!   of GPU-indexed models, dispatching to the exact paths above for M ≤ 2
+//! * [`simulate_colocated`] — two models interleaving on shared GPUs,
+//!   following the Table 2 start/end recurrences (computation competition on
+//!   the GPU, communication overlap on the switch).
+//! * [`simulate_group`] — the generalized entry point: any number of
+//!   GPU-indexed models, dispatching to the exact paths above for M ≤ 2
 //!   and to a staggered M-way pipeline otherwise. The placement layer
 //!   ([`crate::placement::Deployment`]) projects expert-level statistics to
-//!   GPU level (aggregating multi-expert groups) before calling it.
+//!   GPU level (aggregating multi-expert groups) before calling it —
+//!   replicated deployments
+//!   ([`crate::replication::ReplicatedDeployment`]) do the same through
+//!   their split projection, so replica-split traffic needs no special
+//!   simulator path.
 //!
 //! Components scale with GPU performance: a component that takes `t` ms on
 //! the reference GPU takes `t / flops_scale` on GPU `g`; the FFN time is

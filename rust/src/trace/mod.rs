@@ -55,6 +55,26 @@ impl ModelTrace {
     }
 }
 
+/// Aggregate every model's per-layer traffic into one planning stat per
+/// model — the multi-layer totals that [`crate::planner::Planner::plan_multi`]'s
+/// general path and the replication split optimizer both plan on (the
+/// multi-layer analogue of [`ModelTrace::total_expert_loads`]).
+pub fn aggregate_totals(traces: &[&ModelTrace]) -> Vec<MoeLayerStats> {
+    traces
+        .iter()
+        .map(|t| {
+            let mut traffic = t.layers[0].traffic.clone();
+            for l in &t.layers[1..] {
+                traffic = traffic.sum(&l.traffic);
+            }
+            MoeLayerStats {
+                traffic,
+                ..t.layers[0]
+            }
+        })
+        .collect()
+}
+
 /// Blend the planning-time matrix with traffic from other layers to model
 /// imprecise inputs (Q4, Fig. 14): `noise_frac ∈ [0, 1]` is the fraction of
 /// total tokens that come from the noise matrices instead of the planned one.

@@ -1,4 +1,4 @@
-//! The 𝕏 augmentation of Appendix A.
+//! The 𝕏 augmentation of Appendix A, plus the Zipf-skew workload generator.
 //!
 //! Theorem 4.2's proof converts the traffic matrix `D` into `D' = D + X` with
 //! non-negative artificial traffic `X` such that every row and column of `D'`
@@ -6,8 +6,57 @@
 //! via Farkas' lemma; here we *construct* one with a greedy water-filling pass,
 //! which is simultaneously a constructive proof and the first step of the
 //! Birkhoff–von-Neumann slot decomposition in [`crate::schedule`].
+//!
+//! [`zipf_traffic`] generates the *skewed-routing* workloads the replication
+//! subsystem ([`crate::replication`]) is built for: every sender originates
+//! the same token volume, but destination experts follow a Zipf(α)
+//! popularity, so one expert can absorb an arbitrarily large share of the
+//! batch as α grows.
 
 use super::TrafficMatrix;
+use crate::util::Rng;
+
+/// Normalized Zipf(α) popularity over `n` ranks: rank `r` (0-based) gets
+/// weight `(r + 1)^{-α} / H`. `α = 0` is exactly uniform; `α ≈ 1.2` matches
+/// heavily skewed production routing.
+pub fn zipf_weights(n: usize, alpha: f64) -> Vec<f64> {
+    assert!(n > 0, "zipf needs at least one rank");
+    assert!(alpha >= 0.0, "zipf exponent must be non-negative");
+    let raw: Vec<f64> = (0..n).map(|r| 1.0 / ((r + 1) as f64).powf(alpha)).collect();
+    let total: f64 = raw.iter().sum();
+    raw.into_iter().map(|w| w / total).collect()
+}
+
+/// Deterministic Zipf-skewed all-to-all matrix: `n × n`, expert-indexed.
+/// Every sender `i` (the data-parallel shard co-resident with expert `i`)
+/// originates exactly `tokens_per_sender` tokens; destinations follow
+/// [`zipf_weights`] with the popularity *ranking* permuted by `seed` (so the
+/// hot expert's identity varies across seeds while the load shape does not).
+/// Rows are integerized by largest-remainder rounding
+/// ([`super::split_tokens`]), so the matrix is exactly row-uniform and fully
+/// reproducible — no sampling noise. Diagonal entries (tokens routed to the
+/// sender's own expert) are kept: they count toward expert compute load but
+/// never touch the wire, exactly as in the LIMoE traces.
+pub fn zipf_traffic(n: usize, tokens_per_sender: u64, alpha: f64, seed: u64) -> TrafficMatrix {
+    let ranks = zipf_weights(n, alpha);
+    // Permute which expert holds which popularity rank.
+    let perm = Rng::new(seed ^ 0x51F7_2E3A).permutation(n);
+    let mut weights = vec![0.0f64; n];
+    for (rank, &expert) in perm.iter().enumerate() {
+        weights[expert] = ranks[rank];
+    }
+    // Every sender routes identically, so round once and reuse the parts.
+    let parts = super::split_tokens(tokens_per_sender, &weights);
+    let mut d = TrafficMatrix::zeros(n);
+    for i in 0..n {
+        for (j, &part) in parts.iter().enumerate() {
+            if part > 0 {
+                d.add(i, j, part);
+            }
+        }
+    }
+    d
+}
 
 /// Augment `d` with artificial traffic so every row and column (diagonal
 /// included — artificial self-traffic is free since it never crosses the
@@ -115,6 +164,55 @@ mod tests {
             vec![1, 0, 0, 0],
             vec![0, 2, 0, 0],
         ]));
+    }
+
+    #[test]
+    fn zipf_weights_shape() {
+        // α = 0 is exactly uniform
+        let u = zipf_weights(8, 0.0);
+        assert!(u.iter().all(|&w| (w - 0.125).abs() < 1e-12));
+        // α > 0 is strictly decreasing in rank and normalized
+        let z = zipf_weights(8, 1.2);
+        for r in 1..8 {
+            assert!(z[r] < z[r - 1]);
+        }
+        assert!((z.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        // heavier α concentrates more mass on the top rank
+        assert!(zipf_weights(8, 2.0)[0] > z[0]);
+    }
+
+    #[test]
+    fn zipf_traffic_rows_are_uniform_and_deterministic() {
+        let d = zipf_traffic(8, 100, 1.2, 7);
+        for i in 0..8 {
+            let row: u64 = (0..8).map(|j| d.get(i, j)).sum();
+            assert_eq!(row, 100, "row {i} (diagonal included)");
+        }
+        // all rows route identically (same weights, same rounding)
+        for i in 1..8 {
+            for j in 0..8 {
+                assert_eq!(d.get(i, j), d.get(0, j));
+            }
+        }
+        assert_eq!(d, zipf_traffic(8, 100, 1.2, 7));
+        // a different seed relocates the hot expert but keeps the load shape
+        let d2 = zipf_traffic(8, 100, 1.2, 8);
+        let mut loads_a = d.expert_loads();
+        let mut loads_b = d2.expert_loads();
+        loads_a.sort();
+        loads_b.sort();
+        assert_eq!(loads_a, loads_b);
+    }
+
+    #[test]
+    fn zipf_alpha_zero_is_uniform_alpha_large_is_hot() {
+        let flat = zipf_traffic(16, 160, 0.0, 3);
+        let loads = flat.expert_loads();
+        assert!(loads.iter().all(|&l| l == 160), "{loads:?}");
+        let skewed = zipf_traffic(16, 160, 1.2, 3);
+        let max = skewed.expert_loads().into_iter().max().unwrap();
+        // Zipf(1.2) over 16 ranks puts ~36% of all tokens on the hot expert
+        assert!(max as f64 > 0.3 * 16.0 * 160.0, "hot load {max}");
     }
 
     #[test]

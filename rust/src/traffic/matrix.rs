@@ -207,6 +207,67 @@ impl TrafficMatrix {
         out
     }
 
+    /// [`TrafficMatrix::project`] generalized to **replicated** destination
+    /// experts: `owner[e]` is the GPU hosting expert `e`'s *primary* copy
+    /// (the source of row `e`), while tokens routed *to* expert `j` split
+    /// across `replicas[j]` (GPU ids) according to the fractional
+    /// `weights[j]` (same length, summing to 1). Fractions are integerized
+    /// per flow by largest-remainder rounding (deterministic: remainder
+    /// tokens go to the replicas with the largest fractional parts, ties to
+    /// the lower replica index), so token conservation is exact.
+    ///
+    /// When every replica set is a singleton `[owner[j]]` with weight
+    /// `[1.0]`, the result is bit-for-bit identical to
+    /// `project(owner, m)` — replication degrades to plain placement.
+    pub fn project_split(
+        &self,
+        owner: &[usize],
+        replicas: &[Vec<usize>],
+        weights: &[Vec<f64>],
+        m: usize,
+    ) -> Self {
+        assert_eq!(owner.len(), self.n, "one primary GPU per expert");
+        assert_eq!(replicas.len(), self.n, "one replica set per expert");
+        assert_eq!(weights.len(), self.n, "one weight vector per expert");
+        assert!(
+            owner.iter().all(|&g| g < m),
+            "owner GPU out of range (m = {m})"
+        );
+        for (j, set) in replicas.iter().enumerate() {
+            assert!(!set.is_empty(), "expert {j} has an empty replica set");
+            assert_eq!(
+                set.len(),
+                weights[j].len(),
+                "expert {j}: one weight per replica"
+            );
+            assert!(
+                set.iter().all(|&g| g < m),
+                "expert {j}: replica GPU out of range (m = {m})"
+            );
+        }
+        let mut out = Self::zeros(m);
+        for i in 0..self.n {
+            let src = owner[i];
+            for j in 0..self.n {
+                let t = self.get(i, j);
+                if t == 0 {
+                    continue;
+                }
+                let set = &replicas[j];
+                if set.len() == 1 {
+                    out.add(src, set[0], t);
+                    continue;
+                }
+                for (r, part) in split_tokens(t, &weights[j]).into_iter().enumerate() {
+                    if part > 0 {
+                        out.add(src, set[r], part);
+                    }
+                }
+            }
+        }
+        out
+    }
+
     /// Merge pairs of GPUs: `groups[g]` lists the original indices fused onto
     /// new GPU `g`. Traffic between members of the same group becomes local
     /// (kept on the diagonal so expert loads stay correct). Used by the Lina
@@ -232,6 +293,42 @@ impl TrafficMatrix {
         }
         out
     }
+}
+
+/// Apportion `tokens` across fractional `weights` (non-negative, summing to
+/// roughly 1) with largest-remainder rounding: every share is floored, then
+/// the leftover tokens go one-by-one to the entries with the largest
+/// fractional parts (ties broken toward the lower index). The returned parts
+/// always sum to exactly `tokens`, which is what keeps replica-split traffic
+/// matrices conservation-exact. All-zero weights put everything on index 0.
+pub fn split_tokens(tokens: u64, weights: &[f64]) -> Vec<u64> {
+    assert!(!weights.is_empty(), "split needs at least one weight");
+    let total: f64 = weights.iter().sum();
+    if total <= 0.0 {
+        let mut parts = vec![0u64; weights.len()];
+        parts[0] = tokens;
+        return parts;
+    }
+    let mut parts = Vec::with_capacity(weights.len());
+    let mut fracs: Vec<(usize, f64)> = Vec::with_capacity(weights.len());
+    let mut assigned = 0u64;
+    for (r, &w) in weights.iter().enumerate() {
+        let exact = tokens as f64 * (w / total);
+        let floor = exact.floor() as u64;
+        parts.push(floor);
+        assigned += floor;
+        fracs.push((r, exact - floor as f64));
+    }
+    // Largest fractional parts first; ties to the lower replica index.
+    fracs.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+    let mut rest = tokens - assigned;
+    let mut k = 0;
+    while rest > 0 {
+        parts[fracs[k % fracs.len()].0] += 1;
+        rest -= 1;
+        k += 1;
+    }
+    parts
 }
 
 impl fmt::Display for TrafficMatrix {
@@ -354,6 +451,76 @@ mod tests {
     #[should_panic]
     fn project_rejects_out_of_range_owner() {
         sample().project(&[0, 1, 3], 3);
+    }
+
+    #[test]
+    fn split_tokens_conserves_and_follows_weights() {
+        assert_eq!(split_tokens(10, &[1.0]), vec![10]);
+        assert_eq!(split_tokens(10, &[0.5, 0.5]), vec![5, 5]);
+        assert_eq!(split_tokens(9, &[0.5, 0.5]), vec![5, 4]); // tie -> lower index
+        // exact shares 7.5/2.5 floor to 7+2; the leftover token goes to the
+        // lower index on the fractional tie
+        assert_eq!(split_tokens(10, &[0.75, 0.25]), vec![8, 2]);
+        assert_eq!(split_tokens(0, &[0.3, 0.7]), vec![0, 0]);
+        // all-zero weights collapse onto the first entry
+        assert_eq!(split_tokens(7, &[0.0, 0.0, 0.0]), vec![7, 0, 0]);
+        // unnormalized weights are fine
+        let parts = split_tokens(100, &[3.0, 1.0]);
+        assert_eq!(parts, vec![75, 25]);
+        for t in [1u64, 13, 97, 1000] {
+            let parts = split_tokens(t, &[0.41, 0.13, 0.46]);
+            assert_eq!(parts.iter().sum::<u64>(), t);
+        }
+    }
+
+    #[test]
+    fn project_split_singletons_match_project_bitwise() {
+        let m = sample();
+        let owner = vec![2usize, 0, 1];
+        let replicas: Vec<Vec<usize>> = owner.iter().map(|&g| vec![g]).collect();
+        let weights: Vec<Vec<f64>> = owner.iter().map(|_| vec![1.0]).collect();
+        assert_eq!(
+            m.project_split(&owner, &replicas, &weights, 3),
+            m.project(&owner, 3)
+        );
+    }
+
+    #[test]
+    fn project_split_spreads_hot_column_and_conserves() {
+        // 4 experts on 2 GPUs; expert 0 (on GPU 0) is replicated onto GPU 1
+        // with a 50/50 split.
+        let m = TrafficMatrix::from_nested(&[
+            vec![0, 2, 2, 2],
+            vec![40, 0, 1, 1],
+            vec![40, 1, 0, 1],
+            vec![40, 1, 1, 0],
+        ]);
+        let owner = vec![0usize, 0, 1, 1];
+        let replicas = vec![vec![0usize, 1], vec![0], vec![1], vec![1]];
+        let weights = vec![vec![0.5, 0.5], vec![1.0], vec![1.0], vec![1.0]];
+        let g = m.project_split(&owner, &replicas, &weights, 2);
+        // token load is conserved
+        assert_eq!(
+            g.expert_loads().iter().sum::<u64>(),
+            m.expert_loads().iter().sum::<u64>()
+        );
+        // expert 0's 120 inbound tokens split between the two GPUs, so GPU
+        // 0's receive column shrinks vs the unsplit projection
+        let unsplit = m.project(&owner, 2);
+        assert!(g.col_sum(0) < unsplit.col_sum(0));
+        assert!(g.b_max_tokens() < unsplit.b_max_tokens());
+    }
+
+    #[test]
+    #[should_panic]
+    fn project_split_rejects_mismatched_weights() {
+        let m = sample();
+        m.project_split(
+            &[0, 1, 2],
+            &[vec![0, 1], vec![1], vec![2]],
+            &[vec![1.0], vec![1.0], vec![1.0]],
+            3,
+        );
     }
 
     #[test]

@@ -9,5 +9,5 @@
 mod augment;
 mod matrix;
 
-pub use augment::augment_to_balanced;
-pub use matrix::TrafficMatrix;
+pub use augment::{augment_to_balanced, zipf_traffic, zipf_weights};
+pub use matrix::{split_tokens, TrafficMatrix};

@@ -16,7 +16,18 @@ fn small_cfg() -> EvalConfig {
 #[test]
 fn all_fast_figures_run_and_are_well_formed() {
     let cfg = small_cfg();
-    for fig in ["11a", "11b", "11c", "11d", "12", "14", "a1", "a2", "multi"] {
+    for fig in [
+        "11a",
+        "11b",
+        "11c",
+        "11d",
+        "12",
+        "14",
+        "a1",
+        "a2",
+        "multi",
+        "replication",
+    ] {
         let reports = run_figure(fig, &cfg).unwrap();
         assert!(!reports.is_empty(), "{fig}: no reports");
         for r in &reports {
@@ -42,7 +53,7 @@ fn fig13_runs_at_reduced_scale() {
         ..EvalConfig::default()
     };
     let reports = run_figure("13", &cfg).unwrap();
-    for ratio in reports[0].column("ratio") {
+    for ratio in reports[0].column("ratio").unwrap() {
         assert!((1.0 - 1e-9..2.0).contains(&ratio), "ratio {ratio}");
     }
 }
@@ -67,19 +78,19 @@ fn reports_serialize_to_json() {
 fn aurora_wins_every_scenario_at_reduced_scale() {
     let cfg = small_cfg();
     let r11a = &run_figure("11a", &cfg).unwrap()[0];
-    for v in r11a.column("sjf/aurora") {
+    for v in r11a.column("sjf/aurora").unwrap() {
         assert!(v >= 1.0 - 1e-9);
     }
     let r11b = &run_figure("11b", &cfg).unwrap()[0];
-    for v in r11b.column("rga/aurora") {
+    for v in r11b.column("rga/aurora").unwrap() {
         assert!(v >= 1.0 - 1e-9);
     }
     let r11c = &run_figure("11c", &cfg).unwrap()[0];
-    for v in r11c.column("rec/aurora") {
+    for v in r11c.column("rec/aurora").unwrap() {
         assert!(v >= 1.0 - 1e-9, "rec/aurora {v}");
     }
     let r11d = &run_figure("11d", &cfg).unwrap()[0];
-    for v in r11d.column("rga+rec/aurora") {
+    for v in r11d.column("rga+rec/aurora").unwrap() {
         assert!(v >= 1.0 - 1e-9, "rga+rec/aurora {v}");
     }
 }

@@ -188,6 +188,52 @@ fn validation_and_error_paths() {
     assert_eq!(empty.unwrap_err(), PlacementError::NoModels);
 }
 
+/// `Scenario::detect` decision-tree coverage beyond the happy paths: N ≥ 3
+/// always lands on the generalized leaf (both cluster kinds), the error
+/// variant renders a usable message, and mismatched cluster sizes surface as
+/// structured `GpuOutOfRange` errors rather than index panics.
+#[test]
+fn scenario_detect_and_cluster_size_mismatches() {
+    for cluster in [
+        Cluster::homogeneous(8, 1.0),
+        Cluster::paper_heterogeneous(8, 1.0),
+        Cluster::homogeneous(2, 1.0),
+    ] {
+        for n in 3..6 {
+            assert_eq!(Scenario::detect(n, &cluster), Ok(Scenario::MultiColocated));
+        }
+        let err = Scenario::detect(0, &cluster).unwrap_err();
+        assert_eq!(err, PlacementError::NoModels);
+        assert!(err.to_string().contains("at least one model"));
+    }
+
+    // A deployment built for one cluster size rejects a smaller cluster:
+    // every out-of-range expert is reported with its coordinates.
+    let err = Deployment::new(
+        2,
+        vec![vec![0, 1], vec![1, 2]],
+        SchedulePolicy::Aurora,
+        Scenario::ColocatedHomogeneous,
+    )
+    .unwrap_err();
+    match err {
+        PlacementError::GpuOutOfRange { model, expert, gpu, n_gpus } => {
+            assert_eq!((model, expert, gpu, n_gpus), (1, 1, 2, 2));
+        }
+        other => panic!("expected GpuOutOfRange, got {other:?}"),
+    }
+
+    // MultiColocated deployments validate like any other scenario — the
+    // leaf is a planned path, not a crash.
+    let ok = Deployment::new(
+        2,
+        vec![vec![0, 1], vec![1, 0], vec![0, 0]],
+        SchedulePolicy::Aurora,
+        Scenario::MultiColocated,
+    );
+    assert!(ok.is_ok());
+}
+
 /// Aggregation before scheduling: the group simulator's shared-phase floor
 /// equals the comm time of the summed projected matrices (Theorem 6.1
 /// generalized), which a hand aggregation reproduces.

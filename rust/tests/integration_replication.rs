@@ -1,0 +1,231 @@
+//! Integration: the expert replication subsystem.
+//!
+//! Two contracts anchor the new subsystem (the PR's acceptance criteria):
+//!
+//! 1. **Skew win** — under Zipf(1.2)-skewed routing (8 GPUs, 16 experts),
+//!    the replicated plan's simulated completion time beats the best
+//!    non-replicated plan by ≥ 1.2×, deterministically.
+//! 2. **Uniform fallback** — at α = 0 the replicated planner returns the
+//!    plain `plan_multi` deployment *bit-for-bit* (no replicas, identical
+//!    assignments, identical simulated times).
+//!
+//! Plus end-to-end checks that split matrices stay schedulable and that the
+//! serving-side split converges to the planned weights.
+
+use aurora::cluster::Cluster;
+use aurora::config::EvalConfig;
+use aurora::eval::{random_deployment, run_figure, skewed_workload};
+use aurora::planner::{Planner, ReplicationConfig};
+use aurora::replication::{optimize_splits, ReplicatedDeployment, SplitPlan};
+use aurora::schedule::{aurora_schedule, validate_slot_schedule};
+use aurora::serve::ReplicaRouter;
+use aurora::sim::MoeLayerStats;
+use aurora::trace::ModelTrace;
+use aurora::util::Rng;
+
+const N_GPUS: usize = 8;
+const N_EXPERTS: usize = 16;
+const TOKENS_PER_SENDER: u64 = 1024;
+const SEED: u64 = 2024;
+
+fn workload(alpha: f64) -> ModelTrace {
+    skewed_workload(N_EXPERTS, 4, TOKENS_PER_SENDER, alpha, SEED)
+}
+
+fn cluster() -> Cluster {
+    Cluster::homogeneous(N_GPUS, 814.0)
+}
+
+/// Acceptance: replicated vs best non-replicated ≥ 1.2× at α = 1.2,
+/// deterministic (fixed seeds, no sampling anywhere in the pipeline).
+#[test]
+fn replicated_plan_beats_plain_by_1_2x_under_skew() {
+    let trace = workload(1.2);
+    let refs = [&trace];
+    let cluster = cluster();
+    let planner = Planner::default();
+
+    let plain = planner.plan_multi(&refs, &cluster).unwrap();
+    let t_plain = plain.total_inference_ms(&refs, &cluster);
+
+    let (rep, splits) = planner
+        .plan_replicated(&refs, &cluster, &ReplicationConfig::default())
+        .unwrap();
+    assert!(rep.is_replicated(), "skewed plan must add replicas");
+    // the returned split plan is exactly what plan_splits reproduces
+    assert_eq!(splits, rep.plan_splits(&refs, &cluster));
+    let t_rep = rep.total_inference_ms(&refs, &cluster, &splits);
+
+    let speedup = t_plain / t_rep;
+    assert!(
+        speedup >= 1.2,
+        "replication speedup {speedup:.3} (plain {t_plain:.3} ms, replicated {t_rep:.3} ms)"
+    );
+
+    // determinism: the whole pipeline reproduces bit-for-bit
+    let (rep2, splits2) = planner
+        .plan_replicated(&refs, &cluster, &ReplicationConfig::default())
+        .unwrap();
+    assert_eq!(rep, rep2);
+    assert_eq!(splits, splits2);
+}
+
+/// Acceptance: uniform routing falls back to the plain plan bit-for-bit.
+#[test]
+fn uniform_routing_is_bit_for_bit_unreplicated() {
+    let trace = workload(0.0);
+    let refs = [&trace];
+    let cluster = cluster();
+    let planner = Planner::default();
+
+    let (rep, splits) = planner
+        .plan_replicated(&refs, &cluster, &ReplicationConfig::default())
+        .unwrap();
+    let plain = planner.plan_multi(&refs, &cluster).unwrap();
+    assert!(!rep.is_replicated());
+    assert_eq!(rep.base, plain);
+    assert_eq!(rep, ReplicatedDeployment::from_deployment(plain.clone()));
+
+    // the simulated path is the same computation, to the last bit
+    assert_eq!(splits, SplitPlan::trivial(&rep));
+    let per_layer_rep = rep.simulate(&refs, &cluster, &splits);
+    let per_layer_plain = plain.simulate(&refs, &cluster);
+    assert_eq!(per_layer_rep, per_layer_plain);
+}
+
+/// Replication also beats random placement under skew (sanity floor), and
+/// intermediate skew sits between the two regimes.
+#[test]
+fn skew_sweep_is_monotone_and_beats_random() {
+    let cluster = cluster();
+    let planner = Planner::default();
+    let mut speedups = Vec::new();
+    for alpha in [0.0, 0.6, 1.2] {
+        let trace = workload(alpha);
+        let refs = [&trace];
+        let plain = planner.plan_multi(&refs, &cluster).unwrap();
+        let (rep, splits) = planner
+            .plan_replicated(&refs, &cluster, &ReplicationConfig::default())
+            .unwrap();
+        let t_rep = rep.total_inference_ms(&refs, &cluster, &splits);
+        speedups.push(plain.total_inference_ms(&refs, &cluster) / t_rep);
+
+        let mut rng = Rng::new(0xC0FFEE);
+        for _ in 0..5 {
+            let rand = random_deployment(&refs, cluster.len(), plain.scenario, &mut rng);
+            let t_rand = rand.total_inference_ms(&refs, &cluster);
+            assert!(
+                t_rep <= t_rand + 1e-9,
+                "alpha {alpha}: replicated {t_rep} lost to random {t_rand}"
+            );
+        }
+    }
+    assert!(speedups[2] >= speedups[0], "{speedups:?}");
+    assert!((speedups[0] - 1.0).abs() < 1e-12, "{speedups:?}");
+}
+
+/// The schedule layer accepts replica-split matrices end to end: project the
+/// replicated plan's layers, schedule each model's split matrix and the
+/// aggregate, and machine-check every schedule.
+#[test]
+fn replicated_split_matrices_schedule_and_validate() {
+    let trace = workload(1.2);
+    let refs = [&trace];
+    let cluster = cluster();
+    let (rep, splits) = Planner::default()
+        .plan_replicated(&refs, &cluster, &ReplicationConfig::default())
+        .unwrap();
+    for (k, layer) in trace.layers.iter().enumerate() {
+        let proj = rep.project_layer_split(0, layer, &splits);
+        // conservation through the split projection
+        assert_eq!(
+            proj.traffic.expert_loads().iter().sum::<u64>(),
+            layer.traffic.expert_loads().iter().sum::<u64>(),
+            "layer {k}"
+        );
+        let s = aurora_schedule(&proj.traffic);
+        validate_slot_schedule(&proj.traffic, &s)
+            .unwrap_or_else(|e| panic!("layer {k}: {e}"));
+        // the reverse collective is schedulable too
+        let rev = aurora_schedule(&proj.traffic.transpose());
+        validate_slot_schedule(&proj.traffic.transpose(), &rev)
+            .unwrap_or_else(|e| panic!("layer {k} reverse: {e}"));
+    }
+}
+
+/// Serving-side split: the replica router's cumulative distribution
+/// converges to the optimizer's weights.
+#[test]
+fn replica_router_converges_to_planned_split() {
+    let trace = workload(1.2);
+    let refs = [&trace];
+    let cluster = cluster();
+    let (rep, splits) = Planner::default()
+        .plan_replicated(&refs, &cluster, &ReplicationConfig::default())
+        .unwrap();
+    let totals: Vec<u64> = {
+        let layers: Vec<&MoeLayerStats> = trace.layers.iter().collect();
+        let mut t = vec![0u64; N_EXPERTS];
+        for l in &layers {
+            for (e, v) in l.expert_loads().into_iter().enumerate() {
+                t[e] += v;
+            }
+        }
+        t
+    };
+    let hot = (0..N_EXPERTS).max_by_key(|&e| totals[e]).unwrap();
+    assert!(rep.replica_count(0, hot) > 1, "hot expert must be replicated");
+
+    let mut router = ReplicaRouter::new(&rep, &splits);
+    for _ in 0..200 {
+        router.route_tokens(0, hot, 37);
+    }
+    let routed = router.routed_per_replica(0, hot);
+    let total: u64 = routed.iter().sum();
+    assert_eq!(total, 200 * 37);
+    for (r, &w) in splits.weights_for(0, hot).iter().enumerate() {
+        let frac = routed[r] as f64 / total as f64;
+        assert!(
+            (frac - w).abs() < 0.01,
+            "replica {r}: routed fraction {frac:.3} vs planned {w:.3}"
+        );
+    }
+}
+
+/// The `replication` eval figure runs end to end and reports the fallback
+/// row exactly at 1.0x.
+#[test]
+fn replication_figure_runs() {
+    let cfg = EvalConfig {
+        n_layers: 2,
+        baseline_samples: 2,
+        ..EvalConfig::default()
+    };
+    let reports = run_figure("replication", &cfg).unwrap();
+    assert_eq!(reports.len(), 1);
+    let r = &reports[0];
+    assert_eq!(r.rows.len(), 3);
+    let vs_placed = r.column("vs placed").unwrap();
+    assert!((vs_placed[0] - 1.0).abs() < 1e-12, "{vs_placed:?}");
+    assert!(vs_placed[2] >= 1.2, "{vs_placed:?}");
+}
+
+/// Split-aware estimates agree with the placement-core estimator whenever
+/// nothing is replicated — the structural guarantee behind the fallback.
+#[test]
+fn trivial_split_estimates_match_placement_core() {
+    let trace = workload(0.7);
+    let refs = [&trace];
+    let cluster = cluster();
+    let plain = Planner::default().plan_multi(&refs, &cluster).unwrap();
+    let rep = ReplicatedDeployment::from_deployment(plain.clone());
+    let totals = aurora::trace::aggregate_totals(&refs);
+    let layers: Vec<&MoeLayerStats> = totals.iter().collect();
+    let plan = optimize_splits(&rep, &layers, &cluster);
+    assert_eq!(plan, SplitPlan::trivial(&rep));
+    let a = aurora::replication::estimate_per_gpu_replicated(&rep, &layers, &cluster, &plan);
+    let b = aurora::placement::estimate_per_gpu(&plain, &layers, &cluster);
+    for (x, y) in a.iter().zip(&b) {
+        assert!((x - y).abs() < 1e-12, "{a:?} vs {b:?}");
+    }
+}
