@@ -1,0 +1,251 @@
+//! Live traffic estimation and drift scoring.
+//!
+//! The planner optimizes for one traffic matrix; production routing drifts.
+//! [`TrafficEstimator`] folds observed per-window expert-indexed traffic
+//! matrices into an exponentially-weighted moving average — smooth enough
+//! that single-window sampling noise does not whipsaw the replan policy,
+//! responsive enough that a genuine regime change (the hot expert moving,
+//! the drifting-Zipf workload of
+//! [`crate::traffic::drifting_zipf_traffic`]) shows up within a couple of
+//! windows. [`DriftDetector`] scores how far the live estimate has moved
+//! from the matrix the current plan was built on, as total-variation
+//! distance between normalized expert-load distributions — the same metric
+//! [`crate::serve::AdaptiveReplanner`] thresholds, reused here as the cheap
+//! first gate of the cost-aware replan pipeline.
+
+use crate::traffic::TrafficMatrix;
+
+/// EWMA estimator over observed expert-indexed traffic matrices.
+#[derive(Debug, Clone)]
+pub struct TrafficEstimator {
+    n: usize,
+    /// Weight of the newest window in `(0, 1]` (1.0 = keep only the latest).
+    alpha: f64,
+    ewma: Vec<f64>,
+    windows: u64,
+}
+
+impl TrafficEstimator {
+    /// New estimator for `n`-expert matrices with EWMA weight `alpha`.
+    pub fn new(n: usize, alpha: f64) -> TrafficEstimator {
+        assert!(n > 0, "estimator needs at least one expert");
+        assert!(alpha > 0.0 && alpha <= 1.0, "EWMA weight must be in (0, 1]");
+        TrafficEstimator {
+            n,
+            alpha,
+            ewma: vec![0.0; n * n],
+            windows: 0,
+        }
+    }
+
+    /// Number of windows folded in so far.
+    pub fn windows(&self) -> u64 {
+        self.windows
+    }
+
+    /// Fold one observed window. The first observation seeds the average.
+    pub fn observe(&mut self, d: &TrafficMatrix) {
+        assert_eq!(d.n(), self.n, "observed matrix dimension mismatch");
+        if self.windows == 0 {
+            for (w, &v) in self.ewma.iter_mut().zip(d.data()) {
+                *w = v as f64;
+            }
+        } else {
+            for (w, &v) in self.ewma.iter_mut().zip(d.data()) {
+                *w = (1.0 - self.alpha) * *w + self.alpha * v as f64;
+            }
+        }
+        self.windows += 1;
+    }
+
+    /// The current estimate, rounded back to integer tokens. Before any
+    /// observation this is the all-zero matrix.
+    pub fn estimate(&self) -> TrafficMatrix {
+        let data: Vec<u64> = self.ewma.iter().map(|&v| v.round().max(0.0) as u64).collect();
+        TrafficMatrix::from_rows(self.n, &data)
+    }
+}
+
+/// Scores divergence between the plan-time routing distribution and a live
+/// estimate: total-variation distance of the normalized expert-load vectors,
+/// in `[0, 1]`. The score is linear in mixture weight — interpolating the
+/// live distribution from the baseline toward any target raises the score
+/// monotonically — which is what makes a fixed threshold meaningful.
+#[derive(Debug, Clone)]
+pub struct DriftDetector {
+    baseline: Vec<f64>,
+}
+
+impl DriftDetector {
+    /// Baseline from the traffic matrix the current plan was optimized for.
+    pub fn new(plan_traffic: &TrafficMatrix) -> DriftDetector {
+        DriftDetector {
+            baseline: normalize(&plan_traffic.expert_loads()),
+        }
+    }
+
+    /// Baseline from raw per-expert loads (unnormalized is fine).
+    pub fn from_loads(plan_loads: &[u64]) -> DriftDetector {
+        assert!(!plan_loads.is_empty());
+        DriftDetector {
+            baseline: normalize(plan_loads),
+        }
+    }
+
+    /// Drift of a live traffic estimate against the baseline.
+    pub fn score(&self, live: &TrafficMatrix) -> f64 {
+        self.score_loads(&live.expert_loads())
+    }
+
+    /// Drift of a live per-expert load histogram against the baseline.
+    pub fn score_loads(&self, live_loads: &[u64]) -> f64 {
+        assert_eq!(live_loads.len(), self.baseline.len());
+        total_variation(&self.baseline, &normalize(live_loads))
+    }
+
+    /// Adopt a new baseline after a replan commits.
+    pub fn rebase(&mut self, plan_traffic: &TrafficMatrix) {
+        let loads = plan_traffic.expert_loads();
+        assert_eq!(loads.len(), self.baseline.len());
+        self.baseline = normalize(&loads);
+    }
+}
+
+fn normalize(counts: &[u64]) -> Vec<f64> {
+    let total: u64 = counts.iter().sum();
+    if total == 0 {
+        return vec![1.0 / counts.len() as f64; counts.len()];
+    }
+    counts.iter().map(|&c| c as f64 / total as f64).collect()
+}
+
+fn total_variation(p: &[f64], q: &[f64]) -> f64 {
+    0.5 * p.iter().zip(q).map(|(a, b)| (a - b).abs()).sum::<f64>()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::traffic::zipf_traffic;
+
+    fn uniform(n: usize, fill: u64) -> TrafficMatrix {
+        let mut d = TrafficMatrix::zeros(n);
+        for i in 0..n {
+            for j in 0..n {
+                d.set(i, j, fill);
+            }
+        }
+        d
+    }
+
+    #[test]
+    fn first_observation_seeds_the_average() {
+        let mut est = TrafficEstimator::new(4, 0.5);
+        assert_eq!(est.windows(), 0);
+        let d = uniform(4, 8);
+        est.observe(&d);
+        assert_eq!(est.estimate(), d);
+        assert_eq!(est.windows(), 1);
+    }
+
+    #[test]
+    fn ewma_converges_to_a_new_regime() {
+        let mut est = TrafficEstimator::new(4, 0.5);
+        est.observe(&uniform(4, 100));
+        let hot = {
+            let mut d = TrafficMatrix::zeros(4);
+            for i in 0..4 {
+                d.set(i, 0, 400);
+            }
+            d
+        };
+        for _ in 0..20 {
+            est.observe(&hot);
+        }
+        // after 20 half-life windows the estimate is the new regime
+        assert_eq!(est.estimate(), hot);
+    }
+
+    #[test]
+    fn alpha_one_keeps_only_the_latest_window() {
+        let mut est = TrafficEstimator::new(3, 1.0);
+        est.observe(&uniform(3, 9));
+        let d = uniform(3, 2);
+        est.observe(&d);
+        assert_eq!(est.estimate(), d);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_observation_panics() {
+        let mut est = TrafficEstimator::new(3, 0.5);
+        est.observe(&uniform(4, 1));
+    }
+
+    #[test]
+    fn zero_drift_on_the_baseline_itself() {
+        let d = zipf_traffic(8, 256, 1.2, 7);
+        let det = DriftDetector::new(&d);
+        assert!(det.score(&d) < 1e-12);
+        // scaling the whole matrix does not change the distribution
+        let doubled = d.sum(&d);
+        assert!(det.score(&doubled) < 1e-12);
+    }
+
+    #[test]
+    fn drift_score_is_bounded() {
+        let det = DriftDetector::from_loads(&[1, 1, 1, 1]);
+        let mut hot = TrafficMatrix::zeros(4);
+        hot.set(0, 0, 100);
+        let s = det.score(&hot);
+        assert!((0.0..=1.0).contains(&s));
+        // uniform -> single expert: TV = 1 - 1/4
+        assert!((s - 0.75).abs() < 1e-12);
+    }
+
+    /// Satellite acceptance: interpolating the live distribution from the
+    /// baseline toward a fixed target raises the score monotonically (the
+    /// property that makes a fixed replan threshold meaningful).
+    #[test]
+    fn drift_score_is_monotone_in_mixture_weight() {
+        let n = 8;
+        let det = DriftDetector::from_loads(&[100u64; 8]);
+        let mut last = -1.0;
+        // expert loads (1000-100k, 100+...) interpolate uniform -> hot in
+        // exact integer steps k/10
+        for k in 0..=10u64 {
+            let mut d = TrafficMatrix::zeros(n);
+            for e in 0..n {
+                let load = if e == 0 {
+                    1000 - 100 * k + 800 * k
+                } else {
+                    1000 - 100 * k
+                };
+                d.set(0, e, load);
+            }
+            let s = det.score(&d);
+            assert!(
+                s >= last - 1e-12,
+                "drift not monotone at step {k}: {s} < {last}"
+            );
+            last = s;
+        }
+        assert!(last > 0.5, "full mixture should be far from baseline");
+    }
+
+    #[test]
+    fn rebase_adopts_the_new_distribution() {
+        let base = zipf_traffic(6, 120, 0.0, 1);
+        let skew = zipf_traffic(6, 120, 1.5, 1);
+        let mut det = DriftDetector::new(&base);
+        assert!(det.score(&skew) > 0.1);
+        det.rebase(&skew);
+        assert!(det.score(&skew) < 1e-12);
+    }
+
+    #[test]
+    fn zero_live_loads_read_as_uniform() {
+        let det = DriftDetector::from_loads(&[1, 1]);
+        assert!(det.score(&TrafficMatrix::zeros(2)) < 1e-12);
+    }
+}

@@ -1,0 +1,279 @@
+//! Live expert migration: diff two deployments into weight-transfer flows
+//! and schedule them over the same per-GPU links tokens use.
+//!
+//! A replan is only worth committing if moving the expert weights costs less
+//! than the stale plan's decay. [`plan_migration`] computes that cost
+//! honestly: it diffs the current and target
+//! [`ReplicatedDeployment`]s into per-`(model, expert)` copy transfers
+//! (every GPU that must gain a copy receives it from the least-loaded
+//! current holder), aggregates the transfers into an ordinary
+//! [`TrafficMatrix`] — weights ride the same full-duplex ports as tokens —
+//! and runs [`crate::schedule::aurora_schedule`] over it, so the staging
+//! makespan is the Theorem 4.2 bound of the weight traffic and the schedule
+//! is machine-checkable with
+//! [`crate::schedule::validate_slot_schedule`]. Copies the target drops need
+//! no transfer (freeing memory is local) and are listed separately.
+
+use crate::cluster::Cluster;
+use crate::replication::ReplicatedDeployment;
+use crate::schedule::{aurora_schedule, SlotSchedule};
+use crate::traffic::TrafficMatrix;
+
+/// One expert-weight transfer: GPU `src` streams a copy of model `model`'s
+/// expert `expert` to GPU `dst`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MigrationFlow {
+    /// Model index.
+    pub model: usize,
+    /// Expert index within the model.
+    pub expert: usize,
+    /// GPU holding the copy being read (always a current holder).
+    pub src: usize,
+    /// GPU gaining the copy (never a current holder).
+    pub dst: usize,
+    /// Transfer size in wire tokens (the expert's weight volume).
+    pub tokens: u64,
+}
+
+/// The full weight-movement plan between two deployments.
+#[derive(Debug, Clone)]
+pub struct MigrationPlan {
+    /// Every copy transfer, in `(model, expert)` order.
+    pub flows: Vec<MigrationFlow>,
+    /// `(model, expert, gpu)` copies the target no longer hosts — freed
+    /// locally after the swap, no wire traffic.
+    pub dropped: Vec<(usize, usize, usize)>,
+    /// The flows aggregated per (src GPU, dst GPU) — schedulable exactly
+    /// like token traffic.
+    pub traffic: TrafficMatrix,
+    /// Aurora slot schedule of `traffic` (contention-free, optimal).
+    pub schedule: SlotSchedule,
+}
+
+impl MigrationPlan {
+    /// True when the two deployments host identical copies.
+    pub fn is_empty(&self) -> bool {
+        self.flows.is_empty() && self.dropped.is_empty()
+    }
+
+    /// Staging makespan in tokens (`b_max` of the weight traffic).
+    pub fn makespan_tokens(&self) -> u64 {
+        self.schedule.makespan_tokens()
+    }
+
+    /// Staging makespan in milliseconds on `cluster` (Theorem 5.2: the slot
+    /// schedule is bandwidth-free; time is the worst per-port volume over
+    /// that port's rate). This is the cost the replan policy weighs against
+    /// the predicted serving-time gain.
+    pub fn migration_ms(&self, cluster: &Cluster) -> f64 {
+        assert_eq!(cluster.len(), self.traffic.n());
+        self.traffic.b_max_hetero(&cluster.bandwidths())
+    }
+}
+
+/// Diff `cur` into `target`: one flow per copy the target adds, sourced from
+/// the current holder with the least outgoing weight volume so far (ties to
+/// the lower GPU id — deterministic), `expert_weight_tokens` wire tokens per
+/// copy. Both deployments must have identical model/expert/cluster shapes.
+pub fn plan_migration(
+    cur: &ReplicatedDeployment,
+    target: &ReplicatedDeployment,
+    expert_weight_tokens: u64,
+) -> MigrationPlan {
+    assert!(expert_weight_tokens > 0, "expert weights occupy wire tokens");
+    assert_eq!(cur.n_models(), target.n_models(), "model count mismatch");
+    assert_eq!(cur.n_gpus(), target.n_gpus(), "cluster size mismatch");
+    let n = cur.n_gpus();
+
+    let mut flows = Vec::new();
+    let mut dropped = Vec::new();
+    let mut traffic = TrafficMatrix::zeros(n);
+    let mut send_load = vec![0u64; n];
+
+    for m in 0..cur.n_models() {
+        assert_eq!(
+            cur.base.n_experts(m),
+            target.base.n_experts(m),
+            "model {m} expert count mismatch"
+        );
+        for e in 0..cur.base.n_experts(m) {
+            let have = &cur.replicas[m][e];
+            let want = &target.replicas[m][e];
+            for &dst in want {
+                if have.contains(&dst) {
+                    continue;
+                }
+                let src = *have
+                    .iter()
+                    .min_by_key(|&&s| (send_load[s], s))
+                    .expect("replica sets are never empty");
+                flows.push(MigrationFlow {
+                    model: m,
+                    expert: e,
+                    src,
+                    dst,
+                    tokens: expert_weight_tokens,
+                });
+                traffic.add(src, dst, expert_weight_tokens);
+                send_load[src] += expert_weight_tokens;
+            }
+            for &g in have {
+                if !want.contains(&g) {
+                    dropped.push((m, e, g));
+                }
+            }
+        }
+    }
+
+    let schedule = aurora_schedule(&traffic);
+    MigrationPlan {
+        flows,
+        dropped,
+        traffic,
+        schedule,
+    }
+}
+
+/// Conservation check: applying `plan` to `cur` (add every flow's `dst`
+/// copy, free every `dropped` copy) hosts each `(model, expert)` exactly on
+/// the target's replica set. `plan_migration` output always satisfies this;
+/// tests machine-check it.
+pub fn migration_preserves_target(
+    cur: &ReplicatedDeployment,
+    target: &ReplicatedDeployment,
+    plan: &MigrationPlan,
+) -> bool {
+    if cur.n_models() != target.n_models() || cur.n_gpus() != target.n_gpus() {
+        return false;
+    }
+    for m in 0..cur.n_models() {
+        if cur.base.n_experts(m) != target.base.n_experts(m) {
+            return false;
+        }
+        for e in 0..cur.base.n_experts(m) {
+            let mut after: Vec<usize> = cur.replicas[m][e].clone();
+            for f in &plan.flows {
+                if f.model == m && f.expert == e {
+                    // a flow must source from a current holder and land on a
+                    // GPU that does not already hold a copy
+                    if !cur.replicas[m][e].contains(&f.src) || after.contains(&f.dst) {
+                        return false;
+                    }
+                    after.push(f.dst);
+                }
+            }
+            for &(dm, de, dg) in &plan.dropped {
+                if dm == m && de == e {
+                    match after.iter().position(|&g| g == dg) {
+                        Some(i) => {
+                            after.remove(i);
+                        }
+                        None => return false,
+                    }
+                }
+            }
+            let mut want = target.replicas[m][e].clone();
+            after.sort_unstable();
+            want.sort_unstable();
+            if after != want {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::placement::{Deployment, Scenario};
+    use crate::schedule::{validate_slot_schedule, SchedulePolicy};
+
+    fn rep(n_gpus: usize, assignment: Vec<usize>) -> ReplicatedDeployment {
+        let base = Deployment::new(
+            n_gpus,
+            vec![assignment],
+            SchedulePolicy::Aurora,
+            Scenario::ExclusiveHomogeneous,
+        )
+        .unwrap();
+        ReplicatedDeployment::from_deployment(base)
+    }
+
+    #[test]
+    fn identical_deployments_need_no_migration() {
+        let a = rep(4, vec![0, 1, 2, 3]);
+        let plan = plan_migration(&a, &a, 100);
+        assert!(plan.is_empty());
+        assert_eq!(plan.makespan_tokens(), 0);
+        assert_eq!(plan.migration_ms(&Cluster::homogeneous(4, 10.0)), 0.0);
+        assert!(migration_preserves_target(&a, &a, &plan));
+    }
+
+    #[test]
+    fn added_replica_becomes_one_flow() {
+        let cur = rep(4, vec![0, 1, 2, 3]);
+        let mut tgt = rep(4, vec![0, 1, 2, 3]);
+        tgt.add_replica(0, 0, 3).unwrap();
+        let plan = plan_migration(&cur, &tgt, 64);
+        assert_eq!(plan.flows.len(), 1);
+        let f = &plan.flows[0];
+        assert_eq!((f.model, f.expert, f.src, f.dst, f.tokens), (0, 0, 0, 3, 64));
+        assert!(plan.dropped.is_empty());
+        assert_eq!(plan.traffic.get(0, 3), 64);
+        assert!(migration_preserves_target(&cur, &tgt, &plan));
+        validate_slot_schedule(&plan.traffic, &plan.schedule).unwrap();
+    }
+
+    #[test]
+    fn moved_primary_transfers_and_frees() {
+        let cur = rep(4, vec![0, 1, 2, 3]);
+        let tgt = rep(4, vec![1, 1, 2, 3]);
+        let plan = plan_migration(&cur, &tgt, 50);
+        // expert 0 moves 0 -> 1: one transfer plus one freed copy on GPU 0
+        assert_eq!(plan.flows.len(), 1);
+        assert_eq!(plan.dropped, vec![(0, 0, 0)]);
+        assert!(!plan.is_empty());
+        assert!(migration_preserves_target(&cur, &tgt, &plan));
+    }
+
+    #[test]
+    fn sources_balance_across_existing_holders() {
+        // expert 0 already has copies on GPUs 0 and 1; the target adds
+        // copies on GPUs 2 and 3 — one from each holder, not both from 0.
+        let mut cur = rep(4, vec![0, 1, 2, 3]);
+        cur.add_replica(0, 0, 1).unwrap();
+        let mut tgt = rep(4, vec![0, 1, 2, 3]);
+        tgt.add_replica(0, 0, 1).unwrap();
+        tgt.add_replica(0, 0, 2).unwrap();
+        tgt.add_replica(0, 0, 3).unwrap();
+        let plan = plan_migration(&cur, &tgt, 100);
+        assert_eq!(plan.flows.len(), 2);
+        let srcs: Vec<usize> = plan.flows.iter().map(|f| f.src).collect();
+        assert!(srcs.contains(&0) && srcs.contains(&1), "srcs {srcs:?}");
+        assert!(migration_preserves_target(&cur, &tgt, &plan));
+        validate_slot_schedule(&plan.traffic, &plan.schedule).unwrap();
+    }
+
+    #[test]
+    fn migration_ms_scales_with_bandwidth() {
+        let cur = rep(2, vec![0, 1]);
+        let mut tgt = rep(2, vec![0, 1]);
+        tgt.add_replica(0, 0, 1).unwrap();
+        let plan = plan_migration(&cur, &tgt, 800);
+        let fast = plan.migration_ms(&Cluster::homogeneous(2, 800.0));
+        let slow = plan.migration_ms(&Cluster::homogeneous(2, 400.0));
+        assert!((fast - 1.0).abs() < 1e-12);
+        assert!((slow - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tampered_plan_fails_conservation() {
+        let cur = rep(3, vec![0, 1, 2]);
+        let mut tgt = rep(3, vec![0, 1, 2]);
+        tgt.add_replica(0, 0, 2).unwrap();
+        let mut plan = plan_migration(&cur, &tgt, 10);
+        plan.flows.clear(); // lose the transfer
+        assert!(!migration_preserves_target(&cur, &tgt, &plan));
+    }
+}

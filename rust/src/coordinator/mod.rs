@@ -1,1 +1,487 @@
-// paper's L3 coordination contribution
+//! Online coordination: traffic-drift detection, cost-aware replanning, and
+//! live expert migration — the L3 layer above the offline planner.
+//!
+//! [`crate::planner::Planner`] optimizes for **one** traffic matrix, but
+//! production MoE routing drifts: hot experts move, skew sharpens and
+//! relaxes, and a static plan silently decays toward the random baseline.
+//! The serving layer's [`crate::serve::AdaptiveReplanner`] can *detect* that
+//! decay; this module closes the loop — it decides **whether a replan pays
+//! for itself** and executes the switch without stalling serving:
+//!
+//! ```text
+//! observed windows ─▶ TrafficEstimator (EWMA) ─▶ DriftDetector (TV vs plan)
+//!                                              │ drift > θ, cooldown clear
+//!                                              ▼
+//!                    Planner::plan_replicated on the live estimate
+//!                                              │ candidate plan
+//!                                              ▼
+//!        cost gate: (cur − new) × horizon  >  2 × migration makespan ?
+//!                                              │ yes
+//!                                              ▼
+//!   plan_migration  (diff replica sets → weight flows → aurora_schedule)
+//!                                              ▼
+//!   PlanSwap: stage (links shared with tokens) → atomic swap → drain
+//! ```
+//!
+//! Every stage reuses the offline machinery: candidate plans come from
+//! [`crate::planner::Planner::plan_replicated`], serving times from the
+//! split-aware completion estimator
+//! ([`crate::replication::estimate_bottleneck_replicated`]), and migration
+//! makespans from the same slot scheduler that orders tokens — weight
+//! transfers are just one more traffic matrix on the same per-GPU ports.
+//! The two hysteresis gates (drift threshold, predicted-gain-vs-cost) keep a
+//! stationary workload replan-free: under uniform routing the coordinator
+//! never touches the plan, bit for bit.
+//!
+//! [`online`] ships the drifting-Zipf discrete-event serving simulation that
+//! pins the coordinator against a static plan, naive replan-every-window,
+//! and a zero-cost oracle (the `online` eval figure and the `serve-sim` CLI
+//! subcommand drive it).
+
+mod estimator;
+mod migration;
+pub mod online;
+mod swap;
+
+pub use estimator::{DriftDetector, TrafficEstimator};
+pub use migration::{migration_preserves_target, plan_migration, MigrationFlow, MigrationPlan};
+pub use online::{run_online, OnlineConfig, OnlineOutcome, OnlineStrategy};
+pub use swap::{PlanSwap, SwapPhase};
+
+use crate::cluster::Cluster;
+use crate::planner::{Planner, ReplicationConfig};
+use crate::replication::{estimate_bottleneck_replicated, ReplicatedDeployment, SplitPlan};
+use crate::sim::MoeLayerStats;
+use crate::trace::ModelTrace;
+use crate::traffic::TrafficMatrix;
+
+/// Knobs of the cost-aware replan policy.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CoordinatorConfig {
+    /// Total-variation drift (plan-time vs live expert distribution) below
+    /// which the planner is never even consulted.
+    pub drift_threshold: f64,
+    /// Minimum *relative* improvement of the candidate's completion estimate
+    /// over the current plan's (both on the live estimate) — the hysteresis
+    /// band that stops near-tie plan churn.
+    pub min_gain: f64,
+    /// Windows over which a migration amortizes: a replan commits only when
+    /// `(cur − new) × horizon` exceeds the staging cost (twice the
+    /// migration makespan — weights ride both collectives of the staging
+    /// window).
+    pub horizon_windows: f64,
+    /// Windows that must pass after a plan activates before the next replan
+    /// may be considered.
+    pub cooldown_windows: u64,
+    /// Wire tokens one expert's weights occupy during migration.
+    pub expert_weight_tokens: u64,
+    /// EWMA weight of the newest window in the traffic estimator.
+    pub ewma_alpha: f64,
+    /// Drain window after each atomic swap (ms of serving time).
+    pub drain_ms: f64,
+    /// Budgets for the candidate plans ([`Planner::plan_replicated`]).
+    pub replication: ReplicationConfig,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        Self {
+            drift_threshold: 0.1,
+            min_gain: 0.05,
+            horizon_windows: 8.0,
+            cooldown_windows: 2,
+            expert_weight_tokens: 4096,
+            ewma_alpha: 0.5,
+            drain_ms: 0.0,
+            replication: ReplicationConfig::default(),
+        }
+    }
+}
+
+/// Counters the coordinator keeps (reported by the serving simulation and
+/// the `serve-sim` CLI).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CoordinatorStats {
+    /// Windows observed.
+    pub windows: u64,
+    /// Replans committed (migrations started).
+    pub replans: u64,
+    /// Atomic swaps completed.
+    pub swaps: u64,
+    /// Replans skipped because a swap was in flight or the cooldown held.
+    pub skipped_cooldown: u64,
+    /// Replans skipped because the candidate's estimated gain was inside the
+    /// hysteresis band.
+    pub skipped_gain: u64,
+    /// Replans skipped because the migration cost exceeded the amortized
+    /// gain.
+    pub skipped_cost: u64,
+    /// Times the detector settled (rebased) after repeated rejections.
+    pub settles: u64,
+    /// Total staged-migration makespan (ms).
+    pub migration_ms_total: f64,
+}
+
+/// What a committed replan looked like.
+#[derive(Debug, Clone)]
+pub struct ReplanOutcome {
+    /// Drift score that triggered the evaluation.
+    pub drift: f64,
+    /// Predicted serving-time gain over the amortization horizon (ms).
+    pub predicted_gain_ms: f64,
+    /// Staged migration makespan (ms; 0 for an in-place adoption).
+    pub migration_ms: f64,
+    /// The weight-transfer plan now staging. **Empty** means the candidate
+    /// needed no new copies (only split weights / primary labels changed):
+    /// the plan was adopted in place, no swap will fire later, and a caller
+    /// driving a real engine should commit it immediately
+    /// ([`crate::serve::MoeEngine::swap_replicated`]).
+    pub migration: MigrationPlan,
+}
+
+/// Decision returned by [`Coordinator::observe_window`].
+#[derive(Debug, Clone)]
+pub enum CoordinatorDecision {
+    /// Keep the active plan (drift low, swap busy, or gates not cleared).
+    Keep {
+        /// Drift score of the live estimate vs the active plan.
+        drift: f64,
+    },
+    /// A replan committed; its migration is staging.
+    Replan(Box<ReplanOutcome>),
+}
+
+/// The online coordinator for one served model: estimator → detector → cost
+/// model → migration → swap, one `observe_window` call per serving window.
+///
+/// Scope: the coordinator watches a single model (its deployment may still
+/// replicate experts arbitrarily). Multi-model coordination is a mechanical
+/// extension — one estimator per model, candidate plans from the same
+/// multi-trace planner entry point.
+#[derive(Debug)]
+pub struct Coordinator {
+    cfg: CoordinatorConfig,
+    planner: Planner,
+    /// Compute constants of the served model (the traffic part of the live
+    /// statistics comes from the estimator).
+    gate_ms: f64,
+    ffn_ms_per_token: f64,
+    agg_ms: f64,
+    estimator: TrafficEstimator,
+    detector: DriftDetector,
+    active: (ReplicatedDeployment, SplitPlan),
+    swap: PlanSwap,
+    staging_traffic: Option<TrafficMatrix>,
+    windows_since_replan: u64,
+    /// Consecutive gate-rejected candidates since the last commit/settle.
+    rejections: u64,
+    /// Counters (public for reporting).
+    pub stats: CoordinatorStats,
+}
+
+/// After this many consecutive gate-rejected candidates the detector
+/// rebases onto the live estimate ("settle"): the standing decision is that
+/// for this distribution the current plan stays, so the expensive planner is
+/// not consulted again until the distribution moves materially *further*.
+const MAX_CONSECUTIVE_REJECTIONS: u64 = 3;
+
+impl Coordinator {
+    /// Start coordinating: `rep`/`splits` is the deployed plan, `plan_layer`
+    /// the statistics it was optimized for (traffic seeds the estimator and
+    /// the drift baseline; compute constants carry into live estimates).
+    pub fn new(
+        planner: Planner,
+        rep: ReplicatedDeployment,
+        splits: SplitPlan,
+        plan_layer: &MoeLayerStats,
+        cfg: CoordinatorConfig,
+    ) -> Coordinator {
+        assert_eq!(rep.n_models(), 1, "the coordinator watches one model");
+        assert_eq!(
+            plan_layer.n_experts(),
+            rep.base.n_experts(0),
+            "plan statistics must cover the deployed model's experts"
+        );
+        assert!((0.0..=1.0).contains(&cfg.drift_threshold));
+        assert!(cfg.min_gain >= 0.0 && cfg.horizon_windows > 0.0);
+        let mut estimator = TrafficEstimator::new(plan_layer.n_experts(), cfg.ewma_alpha);
+        estimator.observe(&plan_layer.traffic);
+        let detector = DriftDetector::new(&plan_layer.traffic);
+        let swap = PlanSwap::new(cfg.drain_ms);
+        Coordinator {
+            planner,
+            gate_ms: plan_layer.gate_ms,
+            ffn_ms_per_token: plan_layer.ffn_ms_per_token,
+            agg_ms: plan_layer.agg_ms,
+            estimator,
+            detector,
+            active: (rep, splits),
+            swap,
+            staging_traffic: None,
+            windows_since_replan: 0,
+            rejections: 0,
+            stats: CoordinatorStats::default(),
+            cfg,
+        }
+    }
+
+    /// A candidate was rejected by the gain/cost gates. After
+    /// [`MAX_CONSECUTIVE_REJECTIONS`] in a row, settle: rebase the drift
+    /// baseline onto the live estimate so the planner stops being consulted
+    /// every window for a distribution we have already decided to keep
+    /// serving with the current plan.
+    fn note_rejection(&mut self, est: &TrafficMatrix) {
+        self.rejections += 1;
+        if self.rejections >= MAX_CONSECUTIVE_REJECTIONS {
+            self.detector.rebase(est);
+            self.rejections = 0;
+            self.stats.settles += 1;
+        }
+    }
+
+    /// The plan currently serving.
+    pub fn active(&self) -> (&ReplicatedDeployment, &SplitPlan) {
+        (&self.active.0, &self.active.1)
+    }
+
+    /// Weight traffic currently staging over the links (charge it to the
+    /// serving simulation as background contention), if any.
+    pub fn staging_traffic(&self) -> Option<&TrafficMatrix> {
+        if self.swap.phase() == SwapPhase::Staging {
+            self.staging_traffic.as_ref()
+        } else {
+            None
+        }
+    }
+
+    /// Current swap phase.
+    pub fn swap_phase(&self) -> SwapPhase {
+        self.swap.phase()
+    }
+
+    /// Drift of the current live estimate vs the active plan's baseline.
+    pub fn current_drift(&self) -> f64 {
+        self.detector.score(&self.estimator.estimate())
+    }
+
+    /// Advance serving time by `dt_ms`: drives the staging/drain clock and
+    /// installs a staged plan at its atomic swap point.
+    pub fn advance(&mut self, dt_ms: f64) {
+        if let Some((rep, splits)) = self.swap.advance(dt_ms) {
+            self.active = (rep, splits);
+            self.stats.swaps += 1;
+            self.windows_since_replan = 0;
+        }
+        if self.swap.phase() != SwapPhase::Staging {
+            self.staging_traffic = None;
+        }
+    }
+
+    /// Feed one serving window's observed expert-indexed traffic and run the
+    /// replan pipeline: estimate → drift gate → candidate plan → hysteresis
+    /// and cost gates → stage the migration.
+    pub fn observe_window(
+        &mut self,
+        observed: &TrafficMatrix,
+        cluster: &Cluster,
+    ) -> CoordinatorDecision {
+        self.stats.windows += 1;
+        self.windows_since_replan += 1;
+        self.estimator.observe(observed);
+        let est = self.estimator.estimate();
+        let drift = self.detector.score(&est);
+
+        if drift <= self.cfg.drift_threshold {
+            return CoordinatorDecision::Keep { drift };
+        }
+        if self.swap.is_busy() || self.windows_since_replan <= self.cfg.cooldown_windows {
+            self.stats.skipped_cooldown += 1;
+            return CoordinatorDecision::Keep { drift };
+        }
+
+        // Candidate plan on the live estimate.
+        let live_layer = MoeLayerStats {
+            traffic: est.clone(),
+            gate_ms: self.gate_ms,
+            ffn_ms_per_token: self.ffn_ms_per_token,
+            agg_ms: self.agg_ms,
+        };
+        let live_trace = ModelTrace {
+            name: "live-estimate".to_string(),
+            layers: vec![live_layer],
+        };
+        let refs = [&live_trace];
+        let (cand_rep, cand_splits) = self
+            .planner
+            .plan_replicated(&refs, cluster, &self.cfg.replication)
+            .expect("one model always plans");
+
+        // Completion estimates of both plans on the *live* statistics.
+        let layers = [&live_trace.layers[0]];
+        let cur_ms =
+            estimate_bottleneck_replicated(&self.active.0, &layers, cluster, &self.active.1);
+        let new_ms = estimate_bottleneck_replicated(&cand_rep, &layers, cluster, &cand_splits);
+        if new_ms >= cur_ms * (1.0 - self.cfg.min_gain) {
+            self.stats.skipped_gain += 1;
+            self.note_rejection(&est);
+            return CoordinatorDecision::Keep { drift };
+        }
+
+        let migration = plan_migration(&self.active.0, &cand_rep, self.cfg.expert_weight_tokens);
+        let migration_ms = if migration.is_empty() {
+            0.0
+        } else {
+            migration.migration_ms(cluster)
+        };
+        // The staging window carries the weight volume on both collectives
+        // of the serving model ([`crate::sim::simulate_window`]'s
+        // conservative charge), so the cost side of the gate is twice the
+        // one-way makespan.
+        let staging_cost_ms = 2.0 * migration_ms;
+        let predicted_gain_ms = (cur_ms - new_ms) * self.cfg.horizon_windows;
+        if predicted_gain_ms <= staging_cost_ms {
+            self.stats.skipped_cost += 1;
+            self.note_rejection(&est);
+            return CoordinatorDecision::Keep { drift };
+        }
+
+        // Commit.
+        if migration.is_empty() {
+            // Every copy the candidate needs is already hosted — only split
+            // weights (or primary labels) changed. No weights move, so the
+            // swap is trivially atomic: install the candidate in place.
+            self.active = (cand_rep, cand_splits);
+        } else {
+            // Stage the weights; the swap activates at the staging end.
+            let began = self.swap.begin(cand_rep, cand_splits, migration_ms);
+            debug_assert!(began, "swap was checked idle above");
+            self.staging_traffic = Some(migration.traffic.clone());
+        }
+        self.detector.rebase(&est);
+        self.windows_since_replan = 0;
+        self.rejections = 0;
+        self.stats.replans += 1;
+        self.stats.migration_ms_total += migration_ms;
+        CoordinatorDecision::Replan(Box::new(ReplanOutcome {
+            drift,
+            predicted_gain_ms,
+            migration_ms,
+            migration,
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::traffic::{drifting_zipf_traffic, zipf_traffic};
+
+    const GATE_MS: f64 = 0.02;
+    const FFN_MS_PER_TOKEN: f64 = 0.001;
+    const AGG_MS: f64 = 0.015;
+
+    fn layer(traffic: TrafficMatrix) -> MoeLayerStats {
+        MoeLayerStats {
+            traffic,
+            gate_ms: GATE_MS,
+            ffn_ms_per_token: FFN_MS_PER_TOKEN,
+            agg_ms: AGG_MS,
+        }
+    }
+
+    fn coordinator_for(traffic: TrafficMatrix, cluster: &Cluster) -> Coordinator {
+        let stats = layer(traffic);
+        let trace = ModelTrace {
+            name: "plan".to_string(),
+            layers: vec![stats.clone()],
+        };
+        let planner = Planner::default();
+        let (rep, splits) = planner
+            .plan_replicated(&[&trace], cluster, &ReplicationConfig::default())
+            .unwrap();
+        Coordinator::new(planner, rep, splits, &stats, CoordinatorConfig::default())
+    }
+
+    #[test]
+    fn stationary_uniform_never_consults_the_planner() {
+        let cluster = Cluster::homogeneous(8, 814.0);
+        let uniform = zipf_traffic(16, 512, 0.0, 3);
+        let mut coord = coordinator_for(uniform.clone(), &cluster);
+        let before = coord.active().0.clone();
+        for _ in 0..12 {
+            let d = coord.observe_window(&uniform, &cluster);
+            assert!(matches!(d, CoordinatorDecision::Keep { drift } if drift < 1e-9));
+            coord.advance(1.0);
+        }
+        assert_eq!(coord.stats.replans, 0);
+        assert_eq!(coord.stats.swaps, 0);
+        assert_eq!(coord.active().0, &before);
+    }
+
+    #[test]
+    fn rotated_hot_expert_triggers_a_cost_cleared_replan() {
+        let cluster = Cluster::homogeneous(8, 814.0);
+        let phase0 = drifting_zipf_traffic(16, 512, 1.2, 3, 0);
+        let mut coord = coordinator_for(phase0, &cluster);
+        // the hot expert rotates: feed the new regime until the EWMA and the
+        // cooldown both clear
+        let phase2 = drifting_zipf_traffic(16, 512, 1.2, 3, 2);
+        let mut replanned = false;
+        for w in 0..8 {
+            let decision = coord.observe_window(&phase2, &cluster);
+            coord.advance(5.0);
+            if let CoordinatorDecision::Replan(outcome) = decision {
+                assert!(outcome.drift > 0.1, "window {w}: drift {}", outcome.drift);
+                assert!(outcome.migration_ms > 0.0);
+                assert!(outcome.predicted_gain_ms > outcome.migration_ms);
+                assert!(!outcome.migration.is_empty());
+                replanned = true;
+                break;
+            }
+        }
+        assert!(replanned, "drifted hot expert must eventually replan");
+        assert_eq!(coord.stats.replans, 1);
+        // staging traffic is exposed until the swap point passes
+        coord.advance(1e6);
+        assert_eq!(coord.stats.swaps, 1);
+        assert!(coord.staging_traffic().is_none());
+        assert_eq!(coord.swap_phase(), SwapPhase::Serving);
+        // after adopting the new regime the drift reads low again
+        for _ in 0..6 {
+            coord.observe_window(&phase2, &cluster);
+            coord.advance(1.0);
+        }
+        assert!(coord.current_drift() < 0.1);
+        assert_eq!(coord.stats.replans, 1, "no churn once adapted");
+    }
+
+    #[test]
+    fn busy_swap_defers_further_replans() {
+        let cluster = Cluster::homogeneous(8, 814.0);
+        let phase0 = drifting_zipf_traffic(16, 512, 1.2, 3, 0);
+        let mut coord = coordinator_for(phase0, &cluster);
+        let phase2 = drifting_zipf_traffic(16, 512, 1.2, 3, 2);
+        // drive to the replan without advancing time: the swap stays staged
+        let mut committed = false;
+        for _ in 0..8 {
+            let d = coord.observe_window(&phase2, &cluster);
+            if matches!(d, CoordinatorDecision::Replan(_)) {
+                committed = true;
+                break;
+            }
+            coord.advance(5.0);
+        }
+        assert!(committed);
+        assert_eq!(coord.swap_phase(), SwapPhase::Staging);
+        assert!(coord.staging_traffic().is_some());
+        // a further drifted regime cannot preempt the in-flight swap
+        let phase4 = drifting_zipf_traffic(16, 512, 1.2, 3, 4);
+        let skipped_before = coord.stats.skipped_cooldown;
+        for _ in 0..3 {
+            let d = coord.observe_window(&phase4, &cluster);
+            assert!(matches!(d, CoordinatorDecision::Keep { .. }));
+        }
+        assert!(coord.stats.skipped_cooldown > skipped_before);
+        assert_eq!(coord.stats.replans, 1);
+    }
+}

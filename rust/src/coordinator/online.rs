@@ -1,0 +1,447 @@
+//! Drifting-Zipf discrete-event serving simulation: static plan vs periodic
+//! replanning vs the cost-aware coordinator vs a zero-cost oracle.
+//!
+//! The workload is a stream of serving windows whose expert popularity is
+//! Zipf(α) with the hot expert **rotating** every `rotate_every` windows
+//! ([`crate::traffic::drifting_zipf_traffic`]; optionally multinomial-sampled
+//! per window, [`crate::traffic::sampled_zipf_traffic`], so consecutive
+//! windows of one regime fluctuate like live batches). Each window is served
+//! by [`crate::sim::simulate_window`] under the strategy's active plan, with
+//! any staged migration traffic charged to the same links. Four strategies
+//! share the identical initial plan (optimized for phase 0):
+//!
+//! * **static** — never replans; decays as the hot expert moves away from
+//!   its replicas;
+//! * **periodic** — replans on every window's raw observation, paying the
+//!   migration for every plan diff (no smoothing, no hysteresis — the naive
+//!   baseline the coordinator's gates exist to beat);
+//! * **coordinator** — the full [`super::Coordinator`] pipeline;
+//! * **oracle** — replans each window on that window's true traffic at zero
+//!   migration cost: the (unrealizable) lower bound.
+
+use super::{plan_migration, Coordinator, CoordinatorConfig, PlanSwap, SwapPhase};
+use crate::cluster::Cluster;
+use crate::config::EvalConfig;
+use crate::planner::Planner;
+use crate::replication::{ReplicatedDeployment, SplitPlan};
+use crate::serve::metrics::p50_p95_p99;
+use crate::sim::{simulate_window, MoeLayerStats};
+use crate::trace::ModelTrace;
+use crate::traffic::{drifting_zipf_traffic, sampled_zipf_traffic, TrafficMatrix};
+
+/// Compute constants of the simulated model (the LIMoE reference-GPU
+/// profile, as in `eval::replication`).
+const GATE_MS: f64 = 0.02;
+const FFN_MS_PER_TOKEN: f64 = 0.001;
+const AGG_MS: f64 = 0.015;
+
+/// Which serving strategy drives the plan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OnlineStrategy {
+    /// Keep the initial plan forever.
+    Static,
+    /// Replan on every window's observation, paying every migration.
+    EveryWindow,
+    /// The cost-aware coordinator.
+    Coordinator,
+    /// Per-window replan with perfect knowledge and free migration.
+    Oracle,
+}
+
+impl OnlineStrategy {
+    /// Display name (CLI/eval row label).
+    pub fn name(&self) -> &'static str {
+        match self {
+            OnlineStrategy::Static => "static",
+            OnlineStrategy::EveryWindow => "periodic",
+            OnlineStrategy::Coordinator => "coordinator",
+            OnlineStrategy::Oracle => "oracle",
+        }
+    }
+}
+
+/// Workload and policy knobs of the online simulation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OnlineConfig {
+    /// Cluster size (the cluster passed to [`run_online`] must match).
+    pub n_gpus: usize,
+    /// Experts of the served model.
+    pub n_experts: usize,
+    /// Tokens each sender originates per window.
+    pub tokens_per_sender: u64,
+    /// Zipf skew of the rotating popularity (0 = stationary uniform).
+    pub alpha: f64,
+    /// Number of serving windows.
+    pub windows: usize,
+    /// Windows between hot-expert rotations.
+    pub rotate_every: usize,
+    /// Workload seed.
+    pub seed: u64,
+    /// Sample each window multinomially instead of the exact shape.
+    pub sampled: bool,
+    /// Coordinator policy knobs (also supplies the replication budgets and
+    /// the expert weight volume every strategy's migrations use).
+    pub coordinator: CoordinatorConfig,
+}
+
+impl Default for OnlineConfig {
+    fn default() -> Self {
+        Self {
+            n_gpus: 8,
+            n_experts: 16,
+            // Long enough windows that a replan's one-window staging cost
+            // amortizes against the per-window decay it removes.
+            tokens_per_sender: 1024,
+            alpha: 1.2,
+            windows: 32,
+            rotate_every: 8,
+            seed: 2024,
+            sampled: false,
+            coordinator: CoordinatorConfig::default(),
+        }
+    }
+}
+
+impl OnlineConfig {
+    /// The canonical workload shape for an [`EvalConfig`]: its homogeneous
+    /// cluster serving one `2 × n_experts`-expert model at
+    /// `batch_images × 16` tokens per sender. The `online` eval figure and
+    /// the `serve-sim` CLI both derive their configs here, so the two
+    /// surfaces can never drift apart.
+    pub fn from_eval(
+        cfg: &EvalConfig,
+        alpha: f64,
+        windows: usize,
+        rotate_every: usize,
+        sampled: bool,
+    ) -> OnlineConfig {
+        OnlineConfig {
+            n_gpus: cfg.n_experts,
+            n_experts: cfg.n_experts * 2,
+            tokens_per_sender: cfg.batch_images * 16,
+            alpha,
+            windows,
+            rotate_every,
+            seed: cfg.seed,
+            sampled,
+            coordinator: CoordinatorConfig::default(),
+        }
+    }
+}
+
+/// End-to-end result of one strategy over the window stream.
+#[derive(Debug, Clone)]
+pub struct OnlineOutcome {
+    /// Strategy name.
+    pub strategy: &'static str,
+    /// Total simulated serving time (ms), migration contention included.
+    pub total_ms: f64,
+    /// Per-window serving times (ms).
+    pub per_window_ms: Vec<f64>,
+    /// Replans committed (migrations started; oracle counts plan changes).
+    pub replans: u64,
+    /// Atomic swaps completed.
+    pub swaps: u64,
+    /// Total staged-migration makespan (ms).
+    pub migration_ms: f64,
+    /// Median window serving time (ms).
+    pub p50_ms: f64,
+    /// 95th-percentile window serving time (ms).
+    pub p95_ms: f64,
+    /// 99th-percentile window serving time (ms).
+    pub p99_ms: f64,
+}
+
+fn outcome(
+    strategy: OnlineStrategy,
+    per_window_ms: Vec<f64>,
+    replans: u64,
+    swaps: u64,
+    migration_ms: f64,
+) -> OnlineOutcome {
+    let total_ms = per_window_ms.iter().sum();
+    let (p50_ms, p95_ms, p99_ms) = p50_p95_p99(&per_window_ms).unwrap_or((0.0, 0.0, 0.0));
+    OnlineOutcome {
+        strategy: strategy.name(),
+        total_ms,
+        per_window_ms,
+        replans,
+        swaps,
+        migration_ms,
+        p50_ms,
+        p95_ms,
+        p99_ms,
+    }
+}
+
+fn window_traffic(cfg: &OnlineConfig, w: usize) -> TrafficMatrix {
+    let phase = w / cfg.rotate_every.max(1);
+    if cfg.sampled {
+        let draw_seed = cfg.seed ^ (w as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        sampled_zipf_traffic(
+            cfg.n_experts,
+            cfg.tokens_per_sender,
+            cfg.alpha,
+            cfg.seed,
+            phase,
+            draw_seed,
+        )
+    } else {
+        drifting_zipf_traffic(cfg.n_experts, cfg.tokens_per_sender, cfg.alpha, cfg.seed, phase)
+    }
+}
+
+fn layer(traffic: TrafficMatrix) -> MoeLayerStats {
+    MoeLayerStats {
+        traffic,
+        gate_ms: GATE_MS,
+        ffn_ms_per_token: FFN_MS_PER_TOKEN,
+        agg_ms: AGG_MS,
+    }
+}
+
+fn trace_of(stats: MoeLayerStats) -> ModelTrace {
+    ModelTrace {
+        name: "online-window".to_string(),
+        layers: vec![stats],
+    }
+}
+
+/// Serve one window under `(rep, splits)` with optional staged weight
+/// traffic sharing the links; returns the window's inference time (ms).
+fn serve_window(
+    rep: &ReplicatedDeployment,
+    splits: &SplitPlan,
+    stats: &MoeLayerStats,
+    background: Option<&TrafficMatrix>,
+    cluster: &Cluster,
+) -> f64 {
+    let gpu_stats = rep.project_layer_split(0, stats, splits);
+    simulate_window(&[&gpu_stats], background, cluster, rep.base.policy).inference_ms
+}
+
+/// Run the drifting-Zipf serving simulation for one strategy. Every
+/// strategy starts from the identical plan, optimized (with replication)
+/// for the exact phase-0 traffic. Deterministic for a fixed config.
+pub fn run_online(
+    cfg: &OnlineConfig,
+    cluster: &Cluster,
+    strategy: OnlineStrategy,
+) -> OnlineOutcome {
+    assert_eq!(cluster.len(), cfg.n_gpus, "cluster size mismatch");
+    assert!(cfg.windows > 0, "simulate at least one window");
+
+    let planner = Planner::default();
+    let plan_layer = layer(drifting_zipf_traffic(
+        cfg.n_experts,
+        cfg.tokens_per_sender,
+        cfg.alpha,
+        cfg.seed,
+        0,
+    ));
+    let plan_trace = trace_of(plan_layer.clone());
+    let (rep0, splits0) = planner
+        .plan_replicated(&[&plan_trace], cluster, &cfg.coordinator.replication)
+        .expect("one model always plans");
+
+    match strategy {
+        OnlineStrategy::Static => {
+            let mut per_window = Vec::with_capacity(cfg.windows);
+            for w in 0..cfg.windows {
+                let stats = layer(window_traffic(cfg, w));
+                per_window.push(serve_window(&rep0, &splits0, &stats, None, cluster));
+            }
+            outcome(strategy, per_window, 0, 0, 0.0)
+        }
+        OnlineStrategy::Coordinator => {
+            let mut coord =
+                Coordinator::new(planner, rep0, splits0, &plan_layer, cfg.coordinator.clone());
+            let mut per_window = Vec::with_capacity(cfg.windows);
+            for w in 0..cfg.windows {
+                let observed = window_traffic(cfg, w);
+                let stats = layer(observed.clone());
+                let background = coord.staging_traffic().cloned();
+                let (rep, splits) = coord.active();
+                let ms = serve_window(rep, splits, &stats, background.as_ref(), cluster);
+                per_window.push(ms);
+                coord.advance(ms);
+                coord.observe_window(&observed, cluster);
+            }
+            outcome(
+                strategy,
+                per_window,
+                coord.stats.replans,
+                coord.stats.swaps,
+                coord.stats.migration_ms_total,
+            )
+        }
+        OnlineStrategy::EveryWindow => {
+            let mut active = (rep0, splits0);
+            let mut swap = PlanSwap::new(cfg.coordinator.drain_ms);
+            let mut staging: Option<TrafficMatrix> = None;
+            let mut per_window = Vec::with_capacity(cfg.windows);
+            let mut replans = 0u64;
+            let mut migration_total = 0.0f64;
+            for w in 0..cfg.windows {
+                let observed = window_traffic(cfg, w);
+                let stats = layer(observed.clone());
+                let background = if swap.phase() == SwapPhase::Staging {
+                    staging.clone()
+                } else {
+                    None
+                };
+                let ms = serve_window(&active.0, &active.1, &stats, background.as_ref(), cluster);
+                per_window.push(ms);
+                if let Some(new_plan) = swap.advance(ms) {
+                    active = new_plan;
+                    staging = None;
+                }
+                if !swap.is_busy() {
+                    // naive: replan on this window's raw observation, no
+                    // smoothing, no gain or cost gate
+                    let trace = trace_of(stats);
+                    let (cand_rep, cand_splits) = Planner::default()
+                        .plan_replicated(&[&trace], cluster, &cfg.coordinator.replication)
+                        .expect("one model always plans");
+                    let migration = plan_migration(
+                        &active.0,
+                        &cand_rep,
+                        cfg.coordinator.expert_weight_tokens,
+                    );
+                    if migration.is_empty() {
+                        // in-place plan change: no weights move, but it is
+                        // still a replan (same accounting as the coordinator)
+                        active = (cand_rep, cand_splits);
+                        replans += 1;
+                    } else {
+                        let mig_ms = migration.migration_ms(cluster);
+                        let began = swap.begin(cand_rep, cand_splits, mig_ms);
+                        debug_assert!(began, "swap was checked idle above");
+                        staging = Some(migration.traffic.clone());
+                        migration_total += mig_ms;
+                        replans += 1;
+                    }
+                }
+            }
+            let swaps = swap.swaps();
+            outcome(strategy, per_window, replans, swaps, migration_total)
+        }
+        OnlineStrategy::Oracle => {
+            let mut active = (rep0, splits0);
+            let mut per_window = Vec::with_capacity(cfg.windows);
+            let mut replans = 0u64;
+            for w in 0..cfg.windows {
+                let observed = window_traffic(cfg, w);
+                let stats = layer(observed.clone());
+                // perfect knowledge, free migration: adopt the best plan for
+                // this exact window before serving it
+                let trace = trace_of(stats.clone());
+                let (cand_rep, cand_splits) = Planner::default()
+                    .plan_replicated(&[&trace], cluster, &cfg.coordinator.replication)
+                    .expect("one model always plans");
+                if cand_rep != active.0 {
+                    replans += 1;
+                }
+                active = (cand_rep, cand_splits);
+                per_window.push(serve_window(&active.0, &active.1, &stats, None, cluster));
+            }
+            // the oracle's plan changes are free and instantaneous — it
+            // never stages, so it never swaps
+            outcome(strategy, per_window, replans, 0, 0.0)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small(alpha: f64, sampled: bool) -> OnlineConfig {
+        OnlineConfig {
+            n_gpus: 4,
+            n_experts: 8,
+            tokens_per_sender: 2048,
+            alpha,
+            windows: 16,
+            rotate_every: 8,
+            seed: 7,
+            sampled,
+            ..OnlineConfig::default()
+        }
+    }
+
+    #[test]
+    fn stationary_uniform_coordinator_matches_static_exactly() {
+        let cfg = small(0.0, false);
+        let cluster = Cluster::homogeneous(4, 814.0);
+        let stat = run_online(&cfg, &cluster, OnlineStrategy::Static);
+        let coord = run_online(&cfg, &cluster, OnlineStrategy::Coordinator);
+        assert_eq!(coord.replans, 0, "uniform traffic must not replan");
+        assert_eq!(coord.swaps, 0);
+        assert_eq!(coord.per_window_ms, stat.per_window_ms);
+        assert!((coord.total_ms - stat.total_ms).abs() < 1e-12);
+    }
+
+    #[test]
+    fn drifting_skew_makes_the_coordinator_adapt() {
+        let cfg = small(1.2, false);
+        let cluster = Cluster::homogeneous(4, 814.0);
+        let stat = run_online(&cfg, &cluster, OnlineStrategy::Static);
+        let coord = run_online(&cfg, &cluster, OnlineStrategy::Coordinator);
+        assert!(coord.replans >= 1, "rotating hot expert must replan");
+        assert!(
+            coord.total_ms <= stat.total_ms,
+            "coordinator {} vs static {}",
+            coord.total_ms,
+            stat.total_ms
+        );
+        // determinism
+        let again = run_online(&cfg, &cluster, OnlineStrategy::Coordinator);
+        assert_eq!(coord.per_window_ms, again.per_window_ms);
+    }
+
+    #[test]
+    fn outcome_percentiles_are_ordered() {
+        let cfg = small(1.2, true);
+        let cluster = Cluster::homogeneous(4, 814.0);
+        for strategy in [
+            OnlineStrategy::Static,
+            OnlineStrategy::EveryWindow,
+            OnlineStrategy::Coordinator,
+            OnlineStrategy::Oracle,
+        ] {
+            let out = run_online(&cfg, &cluster, strategy);
+            assert_eq!(out.per_window_ms.len(), cfg.windows);
+            assert!(out.total_ms > 0.0);
+            assert!(
+                out.p50_ms <= out.p95_ms && out.p95_ms <= out.p99_ms,
+                "{}: p50 {} p95 {} p99 {}",
+                out.strategy,
+                out.p50_ms,
+                out.p95_ms,
+                out.p99_ms
+            );
+        }
+    }
+
+    #[test]
+    fn oracle_is_a_floor_for_the_static_plan() {
+        let cfg = small(1.2, false);
+        let cluster = Cluster::homogeneous(4, 814.0);
+        let stat = run_online(&cfg, &cluster, OnlineStrategy::Static);
+        let oracle = run_online(&cfg, &cluster, OnlineStrategy::Oracle);
+        assert!(
+            oracle.total_ms <= stat.total_ms + 1e-9,
+            "oracle {} vs static {}",
+            oracle.total_ms,
+            stat.total_ms
+        );
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_cluster_size_panics() {
+        let cfg = small(0.5, false);
+        run_online(&cfg, &Cluster::homogeneous(8, 814.0), OnlineStrategy::Static);
+    }
+}

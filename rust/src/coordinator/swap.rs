@@ -1,0 +1,217 @@
+//! Hitless plan-swap state machine: stage weights → atomic swap → drain.
+//!
+//! Swapping a live deployment must never stall serving. [`PlanSwap`] models
+//! the three-phase protocol the serving engine follows
+//! ([`crate::serve::MoeEngine::swap_replicated`] is the commit point):
+//!
+//! 1. **Staging** — the old plan keeps serving while expert weights stream
+//!    to their new GPUs (the migration traffic of
+//!    [`super::MigrationPlan`], sharing the links with tokens);
+//! 2. **atomic swap** — once every copy has landed, the active plan flips
+//!    between two batches ([`PlanSwap::advance`] returns the new plan
+//!    exactly once, at this instant);
+//! 3. **Draining** — batches dispatched under the old plan finish on the old
+//!    copies; the freed replicas are reclaimed when the drain window closes,
+//!    and only then may another swap begin (a structural cooldown).
+//!
+//! The machine is time-driven (milliseconds of serving progress), so the
+//! discrete-event simulation and unit tests advance it deterministically.
+
+use crate::replication::{ReplicatedDeployment, SplitPlan};
+
+/// Which phase of the swap protocol is active.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SwapPhase {
+    /// No swap in flight.
+    Serving,
+    /// New weights are streaming in; the old plan still serves.
+    Staging,
+    /// The new plan serves; old in-flight work finishes on the old copies.
+    Draining,
+}
+
+/// The hitless swap state machine.
+#[derive(Debug, Clone)]
+pub struct PlanSwap {
+    phase: SwapPhase,
+    stage_remaining_ms: f64,
+    drain_remaining_ms: f64,
+    drain_ms: f64,
+    pending: Option<(ReplicatedDeployment, SplitPlan)>,
+    swaps: u64,
+}
+
+impl PlanSwap {
+    /// New idle machine; every swap's drain window lasts `drain_ms`.
+    pub fn new(drain_ms: f64) -> PlanSwap {
+        assert!(drain_ms >= 0.0, "drain window cannot be negative");
+        PlanSwap {
+            phase: SwapPhase::Serving,
+            stage_remaining_ms: 0.0,
+            drain_remaining_ms: 0.0,
+            drain_ms,
+            pending: None,
+            swaps: 0,
+        }
+    }
+
+    /// Current phase.
+    pub fn phase(&self) -> SwapPhase {
+        self.phase
+    }
+
+    /// True while a swap is staging or draining — no new swap may begin.
+    pub fn is_busy(&self) -> bool {
+        self.phase != SwapPhase::Serving
+    }
+
+    /// Completed (atomic) swaps so far.
+    pub fn swaps(&self) -> u64 {
+        self.swaps
+    }
+
+    /// Milliseconds of staging left (0 outside [`SwapPhase::Staging`]).
+    pub fn stage_remaining_ms(&self) -> f64 {
+        self.stage_remaining_ms
+    }
+
+    /// Start staging a new plan. Returns `false` (and changes nothing) when
+    /// a swap is already in flight.
+    pub fn begin(
+        &mut self,
+        rep: ReplicatedDeployment,
+        splits: SplitPlan,
+        staging_ms: f64,
+    ) -> bool {
+        assert!(staging_ms >= 0.0, "staging time cannot be negative");
+        if self.is_busy() {
+            return false;
+        }
+        self.pending = Some((rep, splits));
+        self.stage_remaining_ms = staging_ms;
+        self.phase = SwapPhase::Staging;
+        true
+    }
+
+    /// Advance the machine by `dt_ms` of serving time. Returns the newly
+    /// active plan **exactly once** — at the staging→draining transition,
+    /// the atomic swap point; the caller installs it between batches.
+    pub fn advance(&mut self, dt_ms: f64) -> Option<(ReplicatedDeployment, SplitPlan)> {
+        assert!(dt_ms >= 0.0, "time flows forward");
+        let mut dt = dt_ms;
+        let mut swapped = None;
+        if self.phase == SwapPhase::Staging {
+            if dt >= self.stage_remaining_ms {
+                dt -= self.stage_remaining_ms;
+                self.stage_remaining_ms = 0.0;
+                swapped = self.pending.take();
+                debug_assert!(swapped.is_some(), "staging always has a pending plan");
+                self.swaps += 1;
+                self.phase = SwapPhase::Draining;
+                self.drain_remaining_ms = self.drain_ms;
+            } else {
+                self.stage_remaining_ms -= dt;
+                return None;
+            }
+        }
+        if self.phase == SwapPhase::Draining {
+            if dt >= self.drain_remaining_ms {
+                self.drain_remaining_ms = 0.0;
+                self.phase = SwapPhase::Serving;
+            } else {
+                self.drain_remaining_ms -= dt;
+            }
+        }
+        swapped
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::placement::{Deployment, Scenario};
+    use crate::schedule::SchedulePolicy;
+
+    fn plan(n: usize) -> (ReplicatedDeployment, SplitPlan) {
+        let base = Deployment::new(
+            n,
+            vec![(0..n).collect()],
+            SchedulePolicy::Aurora,
+            Scenario::ExclusiveHomogeneous,
+        )
+        .unwrap();
+        let rep = ReplicatedDeployment::from_deployment(base);
+        let splits = SplitPlan::trivial(&rep);
+        (rep, splits)
+    }
+
+    #[test]
+    fn full_lifecycle_swaps_exactly_once() {
+        let mut s = PlanSwap::new(1.0);
+        assert_eq!(s.phase(), SwapPhase::Serving);
+        let (rep, splits) = plan(4);
+        assert!(s.begin(rep.clone(), splits, 5.0));
+        assert_eq!(s.phase(), SwapPhase::Staging);
+        assert!(s.is_busy());
+        // partial staging: nothing swaps
+        assert!(s.advance(3.0).is_none());
+        assert!((s.stage_remaining_ms() - 2.0).abs() < 1e-12);
+        // staging completes, atomic swap fires, drain begins
+        let swapped = s.advance(2.0).expect("swap point");
+        assert_eq!(swapped.0, rep);
+        assert_eq!(s.phase(), SwapPhase::Draining);
+        assert_eq!(s.swaps(), 1);
+        // drain completes; no second delivery
+        assert!(s.advance(1.0).is_none());
+        assert_eq!(s.phase(), SwapPhase::Serving);
+    }
+
+    #[test]
+    fn busy_machine_rejects_a_second_begin() {
+        let mut s = PlanSwap::new(0.0);
+        let (rep, splits) = plan(2);
+        assert!(s.begin(rep.clone(), splits.clone(), 10.0));
+        assert!(!s.begin(rep.clone(), splits.clone(), 1.0));
+        // still rejects while draining
+        let mut d = PlanSwap::new(4.0);
+        assert!(d.begin(rep.clone(), splits.clone(), 0.0));
+        assert!(d.advance(0.0).is_some());
+        assert_eq!(d.phase(), SwapPhase::Draining);
+        assert!(!d.begin(rep, splits, 1.0));
+    }
+
+    #[test]
+    fn zero_staging_swaps_on_first_advance() {
+        let mut s = PlanSwap::new(0.0);
+        let (rep, splits) = plan(3);
+        assert!(s.begin(rep, splits, 0.0));
+        assert!(s.advance(0.5).is_some());
+        // zero drain: straight back to serving in the same advance
+        assert_eq!(s.phase(), SwapPhase::Serving);
+        assert!(!s.is_busy());
+    }
+
+    #[test]
+    fn one_advance_cascades_through_staging_and_drain() {
+        let mut s = PlanSwap::new(2.0);
+        let (rep, splits) = plan(2);
+        assert!(s.begin(rep, splits, 3.0));
+        // 10 ms covers staging (3) and drain (2) in one call
+        assert!(s.advance(10.0).is_some());
+        assert_eq!(s.phase(), SwapPhase::Serving);
+        assert_eq!(s.swaps(), 1);
+    }
+
+    #[test]
+    fn drain_is_a_structural_cooldown() {
+        let mut s = PlanSwap::new(5.0);
+        let (rep, splits) = plan(2);
+        assert!(s.begin(rep.clone(), splits.clone(), 1.0));
+        assert!(s.advance(1.0).is_some());
+        assert_eq!(s.phase(), SwapPhase::Draining);
+        assert!(s.advance(2.0).is_none());
+        assert!(!s.begin(rep.clone(), splits.clone(), 1.0));
+        assert!(s.advance(3.0).is_none());
+        assert!(s.begin(rep, splits, 1.0));
+    }
+}

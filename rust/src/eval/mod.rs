@@ -15,6 +15,7 @@
 //! | 14a/b | heterogeneous scenarios | robustness to traffic imprecision |
 //! | multi | beyond-paper | generalized M-model placement vs random |
 //! | replication | beyond-paper | replicated vs placed vs random under Zipf skew |
+//! | online | beyond-paper | drifting routing: static vs periodic vs coordinator vs oracle |
 
 mod ablation;
 mod fig11;
@@ -23,6 +24,7 @@ mod fig13;
 mod fig14;
 mod lina;
 mod multi;
+mod online;
 mod replication;
 mod report;
 mod workloads;
@@ -34,6 +36,7 @@ pub use fig13::fig13;
 pub use fig14::{fig14a, fig14b};
 pub use lina::{lina_colocated_times, lina_utilization};
 pub use multi::{multi_model_comparison, multi_workload, random_deployment};
+pub use online::online_comparison;
 pub use replication::{replication_comparison, skewed_workload};
 pub use report::{MissingColumn, Report};
 pub use workloads::Workloads;
@@ -69,6 +72,9 @@ pub fn run_figure(name: &str, cfg: &EvalConfig) -> Result<Vec<Report>, String> {
         // Beyond-paper extension: expert replication under Zipf-skewed
         // routing (replicated vs placed vs random across the skew sweep).
         "replication" => vec![replication_comparison(cfg, &[0.0, 0.6, 1.2])],
+        // Beyond-paper extension: online serving under drifting routing —
+        // static vs periodic vs coordinator vs oracle.
+        "online" => vec![online_comparison(cfg, 1.2, 24, 8)],
         "all" => {
             let mut r = vec![
                 fig11a(cfg, &w),
@@ -85,11 +91,12 @@ pub fn run_figure(name: &str, cfg: &EvalConfig) -> Result<Vec<Report>, String> {
             r.push(ablation_top2(cfg, &w));
             r.push(multi_model_comparison(cfg, 3, cfg.n_experts * 2));
             r.push(replication_comparison(cfg, &[0.0, 0.6, 1.2]));
+            r.push(online_comparison(cfg, 1.2, 24, 8));
             r
         }
         other => {
             return Err(format!(
-                "unknown figure '{other}' (try 11a/11b/11c/11d/12/13/14/a1/a2/ablation/multi/replication/all)"
+                "unknown figure '{other}' (try 11a/11b/11c/11d/12/13/14/a1/a2/ablation/multi/replication/online/all)"
             ))
         }
     };

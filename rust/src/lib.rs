@@ -36,6 +36,14 @@
 //!    ([`replication::optimize_splits`]) apportions each sender's load
 //!    across the copies; with no replicas the path is bit-for-bit the plain
 //!    placement pipeline.
+//! 6. **Online coordination** ([`coordinator`]) — the paper plans for one
+//!    traffic matrix; production routing drifts. The [`coordinator::Coordinator`]
+//!    tracks the live distribution (EWMA + total-variation drift scoring),
+//!    replans on the live estimate only when the predicted inference-time
+//!    gain exceeds the cost of migrating expert weights (scheduled over the
+//!    same per-GPU links with the slot scheduler), and swaps plans hitlessly
+//!    (stage → atomic swap → drain). Under stationary routing it never
+//!    touches the plan.
 //!
 //! The crate also ships the substrates the evaluation depends on: a
 //! big-switch cluster simulator ([`sim`], [`cluster`]) whose generalized
@@ -53,6 +61,7 @@ pub mod assignment;
 pub mod cluster;
 pub mod colocation;
 pub mod config;
+pub mod coordinator;
 pub mod eval;
 pub mod matching;
 pub mod placement;
@@ -67,6 +76,7 @@ pub mod traffic;
 pub mod util;
 
 pub use cluster::{Cluster, GpuSpec};
+pub use coordinator::{Coordinator, CoordinatorConfig};
 pub use placement::{Deployment, PlacementError};
 pub use planner::{DeploymentPlan, Planner, ReplicationConfig, Scenario};
 pub use replication::{ReplicatedDeployment, SplitPlan};

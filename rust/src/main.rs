@@ -39,6 +39,7 @@ fn main() {
         "bench" => cmd_bench(&opts),
         "trace" => cmd_trace(&opts),
         "serve" => cmd_serve(&opts),
+        "serve-sim" => cmd_serve_sim(&opts),
         "help" | "--help" | "-h" => {
             usage();
             Ok(())
@@ -62,11 +63,14 @@ USAGE:
   aurora bench    [--out BENCH_planner.json] [--budget-ms N]
   aurora trace    --out <file.json> [--config f.json]
   aurora serve    [--artifacts DIR] [--requests N] [--batch N] [--policy aurora|rcs]
+  aurora serve-sim [--drift ALPHA] [--windows N] [--rotate-every N] [--strategy static|periodic|coordinator|oracle|all] [--noise] [--config f.json]
 
   --models N           colocate N models (N >= 3 uses the generalized placement core)
   --experts-per-gpu K  give every model K*n_gpus experts (K >= 2 packs multiple experts per GPU)
   --replicas R         allow up to R copies of each expert (R >= 2 enables replication)
   --skew ALPHA         drive planning with a Zipf(ALPHA)-skewed workload (0 = uniform)
+  --drift ALPHA        serve-sim: Zipf skew of the rotating hot expert (0 = stationary uniform)
+  --noise              serve-sim: sample each window multinomially (live-batch fluctuation)
 "
     );
 }
@@ -446,9 +450,114 @@ fn cmd_bench(opts: &Opts) -> Result<(), String> {
             ])
         })
         .collect();
-    let doc = Json::obj(vec![("benchmarks", Json::Arr(benchmarks))]);
+    // Each run appends one git-SHA + timestamp-stamped snapshot, so the file
+    // accumulates the perf trajectory across commits instead of losing it.
+    let sha = aurora::util::bench::git_sha().map_or(Json::Null, Json::Str);
+    let entry = Json::obj(vec![
+        ("git_sha", sha),
+        ("timestamp", Json::Str(aurora::util::bench::iso_utc_now())),
+        ("budget_ms", Json::from(budget_ms)),
+        ("benchmarks", Json::Arr(benchmarks)),
+    ]);
+    let mut history: Vec<Json> = match std::fs::read_to_string(out) {
+        // no existing file: start a fresh history
+        Err(_) => Vec::new(),
+        // never silently discard an existing trajectory: a file we cannot
+        // understand is an error, not an empty history
+        Ok(text) => {
+            let v = Json::parse(&text).map_err(|e| {
+                format!("{out}: existing bench file is not valid JSON ({e}); move it aside to start a new history")
+            })?;
+            match v.get("history").and_then(|h| h.as_arr()) {
+                Some(arr) => arr.to_vec(),
+                // legacy single-snapshot file: keep it as the first entry
+                None if v.get("benchmarks").is_some() => vec![v.clone()],
+                None => {
+                    return Err(format!(
+                        "{out}: unrecognized bench file format; move it aside to start a new history"
+                    ))
+                }
+            }
+        }
+    };
+    history.push(entry);
+    let n_snapshots = history.len();
+    let doc = Json::obj(vec![("history", Json::Arr(history))]);
     std::fs::write(out, doc.to_string_compact()).map_err(|e| format!("{out}: {e}"))?;
-    println!("wrote {out}");
+    println!("wrote {out} ({n_snapshots} snapshot(s))");
+    Ok(())
+}
+
+/// Drifting-Zipf online-serving simulation: static plan vs periodic
+/// replanning vs the cost-aware coordinator vs a zero-cost oracle, with
+/// per-window p50/p95/p99 serving-time percentiles.
+fn cmd_serve_sim(opts: &Opts) -> Result<(), String> {
+    use aurora::cluster::Cluster;
+    use aurora::coordinator::{run_online, OnlineConfig, OnlineStrategy};
+
+    let cfg = opts.config()?;
+    let alpha: f64 = opts
+        .get("drift")
+        .unwrap_or("1.2")
+        .parse()
+        .map_err(|_| "bad --drift")?;
+    if alpha < 0.0 {
+        return Err("--drift must be >= 0".into());
+    }
+    let windows: usize = opts
+        .get("windows")
+        .unwrap_or("24")
+        .parse()
+        .map_err(|_| "bad --windows")?;
+    if windows == 0 {
+        return Err("--windows must be >= 1".into());
+    }
+    let rotate_every: usize = opts
+        .get("rotate-every")
+        .unwrap_or("8")
+        .parse()
+        .map_err(|_| "bad --rotate-every")?;
+    if rotate_every == 0 {
+        return Err("--rotate-every must be >= 1".into());
+    }
+    let sampled = opts.get("noise").is_some_and(|v| v != "false");
+    let cluster: Cluster = cfg.homogeneous_cluster();
+    let ocfg = OnlineConfig::from_eval(&cfg, alpha, windows, rotate_every, sampled);
+
+    let strategies: Vec<OnlineStrategy> = match opts.get("strategy").unwrap_or("all") {
+        "static" => vec![OnlineStrategy::Static],
+        "periodic" => vec![OnlineStrategy::EveryWindow],
+        "coordinator" => vec![OnlineStrategy::Coordinator],
+        "oracle" => vec![OnlineStrategy::Oracle],
+        "all" => vec![
+            OnlineStrategy::Static,
+            OnlineStrategy::EveryWindow,
+            OnlineStrategy::Coordinator,
+            OnlineStrategy::Oracle,
+        ],
+        other => return Err(format!("unknown strategy '{other}'")),
+    };
+
+    println!(
+        "online serving: {} experts on {} GPUs, {windows} windows, Zipf({alpha:.2}) rotating every {rotate_every}{}",
+        ocfg.n_experts,
+        cluster.len(),
+        if sampled { ", sampled windows" } else { "" }
+    );
+    for strategy in strategies {
+        let out = run_online(&ocfg, &cluster, strategy);
+        println!(
+            "{:<12} total {:>9.3} ms | windows p50 {:.3} / p95 {:.3} / p99 {:.3} ms | {} replan(s), {} swap(s), migration {:.3} ms",
+            out.strategy,
+            out.total_ms,
+            out.p50_ms,
+            out.p95_ms,
+            out.p99_ms,
+            out.replans,
+            out.swaps,
+            out.migration_ms
+        );
+    }
     Ok(())
 }
 

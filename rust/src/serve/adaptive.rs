@@ -8,6 +8,11 @@
 //! the current window. Q4 of the evaluation (Fig. 14) shows Aurora tolerates
 //! ≤ 75% imprecision with ≤ 15.8% degradation, so the default threshold
 //! (0.25) replans long before the plan decays materially.
+//!
+//! This watcher is the lightweight in-engine trigger. The full cost-aware
+//! loop — EWMA traffic estimation, replan hysteresis, migration costing over
+//! the slot scheduler, and the hitless plan swap — lives one layer up in
+//! [`crate::coordinator`].
 
 use crate::placement::Deployment;
 use crate::replication::{ReplicatedDeployment, SplitPlan};

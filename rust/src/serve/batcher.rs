@@ -1,10 +1,60 @@
 //! Dynamic batching: group requests up to a token budget or a deadline.
 //!
 //! Pure logic (no threads) so invariants are directly testable: the engine
-//! worker drives it with `push` / `flush_due`.
+//! worker drives it with `push` / `flush_due`. Deadline behavior is
+//! clock-injectable ([`Clock`]) — production uses the wall clock
+//! ([`SystemClock`]); tests and the coordinator's serving simulation drive a
+//! [`ManualClock`] deterministically instead of sleeping.
 
 use super::Request;
+use std::cell::Cell;
+use std::rc::Rc;
 use std::time::{Duration, Instant};
+
+/// Time source for deadline decisions.
+pub trait Clock: std::fmt::Debug {
+    /// The current instant.
+    fn now(&self) -> Instant;
+}
+
+/// The real wall clock ([`Instant::now`]).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SystemClock;
+
+impl Clock for SystemClock {
+    fn now(&self) -> Instant {
+        Instant::now()
+    }
+}
+
+/// A manually-advanced clock. Clones share the same time, so a test keeps
+/// one handle and advances the batcher's view of time deterministically.
+#[derive(Debug, Clone)]
+pub struct ManualClock(Rc<Cell<Instant>>);
+
+impl ManualClock {
+    /// New clock frozen at the current instant.
+    pub fn new() -> ManualClock {
+        ManualClock(Rc::new(Cell::new(Instant::now())))
+    }
+
+    /// Move time forward by `d` for every clone of this clock.
+    pub fn advance(&self, d: Duration) {
+        self.0.set(self.0.get() + d);
+    }
+}
+
+impl Default for ManualClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for ManualClock {
+    fn now(&self) -> Instant {
+        self.0.get()
+    }
+}
 
 /// Batching policy knobs.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -40,26 +90,47 @@ pub struct Batch {
 
 /// Token-budgeted, deadline-bounded batcher.
 #[derive(Debug)]
-pub struct DynamicBatcher {
+pub struct DynamicBatcher<C: Clock = SystemClock> {
     cfg: BatcherConfig,
     pending: Vec<(Request, Instant)>,
     pending_tokens: usize,
+    clock: C,
 }
 
 impl DynamicBatcher {
-    /// New empty batcher.
-    pub fn new(cfg: BatcherConfig) -> Self {
+    /// New empty batcher on the wall clock.
+    pub fn new(cfg: BatcherConfig) -> DynamicBatcher {
+        DynamicBatcher::with_clock(cfg, SystemClock)
+    }
+}
+
+impl<C: Clock> DynamicBatcher<C> {
+    /// New empty batcher with an injected time source.
+    pub fn with_clock(cfg: BatcherConfig, clock: C) -> DynamicBatcher<C> {
         assert!(cfg.max_batch_tokens > 0 && cfg.max_batch_requests > 0);
-        Self {
+        DynamicBatcher {
             cfg,
             pending: Vec::new(),
             pending_tokens: 0,
+            clock,
         }
     }
 
     /// Number of queued requests.
     pub fn pending_len(&self) -> usize {
         self.pending.len()
+    }
+
+    /// [`DynamicBatcher::push`] stamped with the injected clock.
+    pub fn push_now(&mut self, req: Request) -> Result<Option<Batch>, Request> {
+        let now = self.clock.now();
+        self.push(req, now)
+    }
+
+    /// [`DynamicBatcher::flush_due`] evaluated at the injected clock's time.
+    pub fn flush_due_now(&mut self) -> Option<Batch> {
+        let now = self.clock.now();
+        self.flush_due(now)
     }
 
     /// Add a request; returns a cut batch when a budget fills.
@@ -178,6 +249,29 @@ mod tests {
         let batch = b.flush_due(later).unwrap();
         assert_eq!(batch.requests.len(), 1);
         assert!(b.flush_due(later).is_none()); // empty now
+    }
+
+    #[test]
+    fn manual_clock_drives_deadlines_deterministically() {
+        let clock = ManualClock::new();
+        let mut b = DynamicBatcher::with_clock(cfg(100, 100, 5), clock.clone());
+        assert!(b.push_now(req(1, 2)).unwrap().is_none());
+        // no wall time passes in this test, only the manual clock moves
+        assert!(b.flush_due_now().is_none());
+        clock.advance(Duration::from_millis(4));
+        assert!(b.flush_due_now().is_none());
+        clock.advance(Duration::from_millis(1));
+        let batch = b.flush_due_now().unwrap();
+        assert_eq!(batch.requests.len(), 1);
+        assert!(b.flush_due_now().is_none());
+    }
+
+    #[test]
+    fn system_clock_batcher_still_constructs() {
+        let mut b = DynamicBatcher::new(cfg(8, 4, 1000));
+        assert!(b.push_now(req(1, 4)).unwrap().is_none());
+        let batch = b.push_now(req(2, 4)).unwrap().unwrap();
+        assert_eq!(batch.total_tokens, 8);
     }
 
     #[test]

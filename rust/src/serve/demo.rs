@@ -200,7 +200,7 @@ fn engine_worker(
                 }
             }
             Err(mpsc::RecvTimeoutError::Timeout) => {
-                if let Some(batch) = batcher.flush_due(Instant::now()) {
+                if let Some(batch) = batcher.flush_due_now() {
                     execute(&mut engine, &mut metrics, &mut arrivals, &mut replanner, batch)?;
                 }
             }

@@ -111,6 +111,8 @@ pub struct MoeEngine {
     pub expert_stats: Vec<u64>,
     /// Current expert visit order (re-derived as stats accumulate).
     pub expert_order: Vec<usize>,
+    /// Atomic plan swaps performed ([`MoeEngine::swap_replicated`]).
+    pub plan_swaps: u64,
 }
 
 impl MoeEngine {
@@ -124,6 +126,7 @@ impl MoeEngine {
             replicated: None,
             expert_stats: vec![0; n],
             expert_order: (0..n).collect(),
+            plan_swaps: 0,
         }
     }
 
@@ -166,6 +169,27 @@ impl MoeEngine {
     /// The bound deployment, if any.
     pub fn deployment(&self) -> Option<&Deployment> {
         self.deployment.as_ref().map(|(d, _)| d)
+    }
+
+    /// Atomically install a new replicated deployment and split plan — the
+    /// serving-side commit point of the coordinator's stage → swap → drain
+    /// pipeline ([`crate::coordinator::PlanSwap`] decides *when*; this
+    /// method is the swap itself, called between batches). Accumulated gate
+    /// statistics carry over (they are routing history, not plan state);
+    /// the expert visit order is re-derived under the new placement.
+    pub fn swap_replicated(&mut self, rep: ReplicatedDeployment, plan: SplitPlan) {
+        let m = self.deployment.as_ref().map(|(_, i)| *i).unwrap_or(0);
+        assert!(m < rep.n_models(), "model index out of range in the new deployment");
+        assert_eq!(
+            rep.base.n_experts(m),
+            self.model.meta.n_experts,
+            "new deployment expert count must match the model"
+        );
+        self.policy = rep.base.policy;
+        self.expert_order = grouped_execution_order(&self.expert_stats, &rep.base, m, self.policy);
+        self.deployment = Some((rep.base.clone(), m));
+        self.replicated = Some((rep, plan));
+        self.plan_swaps += 1;
     }
 
     /// The bound replicated deployment, if any.

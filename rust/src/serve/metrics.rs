@@ -1,6 +1,49 @@
 //! Serving metrics: latency percentiles and throughput.
+//!
+//! [`Metrics`] accumulates wall-clock request latencies in the live serving
+//! path; the free functions [`percentile`] / [`p50_p95_p99`] work on plain
+//! `f64` samples (simulated milliseconds), so the discrete-event serving
+//! simulation ([`crate::coordinator::online`]) reports the same tail
+//! statistics the demo prints.
 
 use std::time::{Duration, Instant};
+
+/// Nearest-rank pick from an already-sorted non-empty sample slice — the
+/// one rank convention every percentile in this module uses.
+fn pick_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!((0.0..=1.0).contains(&p), "percentile must be in [0, 1]");
+    sorted[((sorted.len() as f64 - 1.0) * p).round() as usize]
+}
+
+fn sorted_copy(samples: &[f64]) -> Vec<f64> {
+    let mut xs = samples.to_vec();
+    xs.sort_by(|a, b| a.partial_cmp(b).expect("samples must be finite"));
+    xs
+}
+
+/// Nearest-rank percentile of `samples` (any unit; must be finite), `p` in
+/// `[0, 1]`. Sorts a copy; returns `None` on empty input.
+pub fn percentile(samples: &[f64], p: f64) -> Option<f64> {
+    assert!((0.0..=1.0).contains(&p), "percentile must be in [0, 1]");
+    if samples.is_empty() {
+        return None;
+    }
+    Some(pick_sorted(&sorted_copy(samples), p))
+}
+
+/// The (p50, p95, p99) summary of `samples` — sorted once, the trio every
+/// serving report leads with. `None` on empty input.
+pub fn p50_p95_p99(samples: &[f64]) -> Option<(f64, f64, f64)> {
+    if samples.is_empty() {
+        return None;
+    }
+    let xs = sorted_copy(samples);
+    Some((
+        pick_sorted(&xs, 0.50),
+        pick_sorted(&xs, 0.95),
+        pick_sorted(&xs, 0.99),
+    ))
+}
 
 /// Percentile summary of recorded latencies.
 #[derive(Debug, Clone, PartialEq)]
@@ -148,6 +191,36 @@ mod tests {
         m.record_batch(8);
         assert_eq!(m.batches(), 2);
         assert!((m.mean_batch_size() - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_helpers_match_by_hand_values() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 0.0), Some(1.0));
+        assert_eq!(percentile(&xs, 1.0), Some(100.0));
+        // nearest-rank on 100 samples: (99 * 0.5).round() = 50 -> 51.0
+        assert_eq!(percentile(&xs, 0.5), Some(51.0));
+        let (p50, p95, p99) = p50_p95_p99(&xs).unwrap();
+        assert_eq!(p50, 51.0);
+        assert_eq!(p95, 95.0);
+        assert_eq!(p99, 99.0);
+        assert!(p50 <= p95 && p95 <= p99);
+        // order-independent: helpers sort internally
+        let shuffled = [3.0, 1.0, 2.0];
+        assert_eq!(percentile(&shuffled, 0.5), Some(2.0));
+    }
+
+    #[test]
+    fn percentile_helpers_handle_empty_and_singleton() {
+        assert_eq!(percentile(&[], 0.5), None);
+        assert_eq!(p50_p95_p99(&[]), None);
+        assert_eq!(p50_p95_p99(&[7.0]), Some((7.0, 7.0, 7.0)));
+    }
+
+    #[test]
+    #[should_panic]
+    fn percentile_rejects_out_of_range_p() {
+        percentile(&[1.0], 1.5);
     }
 
     #[test]

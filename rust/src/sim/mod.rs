@@ -10,6 +10,9 @@
 //! * [`simulate_colocated`] — two models interleaving on shared GPUs,
 //!   following the Table 2 start/end recurrences (computation competition on
 //!   the GPU, communication overlap on the switch).
+//! * [`simulate_window`] — one serving window with optional zero-compute
+//!   *background* traffic (staged expert weights of a live migration,
+//!   [`crate::coordinator`]) sharing the links.
 //! * [`simulate_group`] — the generalized entry point: any number of
 //!   GPU-indexed models, dispatching to the exact paths above for M ≤ 2
 //!   and to a staggered M-way pipeline otherwise. The placement layer
@@ -28,12 +31,14 @@ mod colocated;
 pub mod event;
 mod exclusive;
 mod group;
+mod online;
 mod stats;
 
 pub use colocated::{simulate_colocated, ColocatedBreakdown};
 pub use event::{event_sim_colocated, event_sim_exclusive, EventSimResult};
 pub use exclusive::{simulate_exclusive, ExclusiveBreakdown};
 pub use group::{simulate_group, GroupBreakdown};
+pub use online::simulate_window;
 pub use stats::MoeLayerStats;
 
 /// Result of simulating one MoE layer (one model or a colocated pair).

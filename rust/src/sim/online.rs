@@ -1,0 +1,94 @@
+//! Serving-window simulation with background (weight-migration) traffic.
+//!
+//! The online coordinator ([`crate::coordinator`]) stages expert weights
+//! over the **same per-GPU ports** tokens use, so a window served during
+//! staging must pay link contention. [`simulate_window`] models that by
+//! treating the staged weight matrix as one more colocated "model" with
+//! zero compute — [`simulate_group`] then charges it in both collectives'
+//! aggregated makespans (a deliberate upper bound: weights are assumed on
+//! the wire during the whole window, which can only *overstate* the
+//! migration cost the coordinator pays, never hide it). With no background
+//! traffic the result is bit-for-bit [`simulate_group`].
+
+use super::{simulate_group, MoeLayerStats, SimResult};
+use crate::cluster::Cluster;
+use crate::schedule::SchedulePolicy;
+use crate::traffic::TrafficMatrix;
+
+/// Simulate one serving window: `models` are GPU-indexed layer stats (one
+/// per served model, already projected through the deployment), `background`
+/// an optional GPU-indexed traffic matrix sharing the links (e.g. staged
+/// expert weights).
+pub fn simulate_window(
+    models: &[&MoeLayerStats],
+    background: Option<&TrafficMatrix>,
+    cluster: &Cluster,
+    policy: SchedulePolicy,
+) -> SimResult {
+    match background {
+        None => simulate_group(models, cluster, policy).0,
+        Some(bg) if bg.total() == 0 => simulate_group(models, cluster, policy).0,
+        Some(bg) => {
+            assert_eq!(bg.n(), cluster.len(), "background traffic must be GPU-indexed");
+            let bg_layer = MoeLayerStats {
+                traffic: bg.clone(),
+                gate_ms: 0.0,
+                ffn_ms_per_token: 0.0,
+                agg_ms: 0.0,
+            };
+            let mut all: Vec<&MoeLayerStats> = models.to_vec();
+            all.push(&bg_layer);
+            simulate_group(&all, cluster, policy).0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::traffic::zipf_traffic;
+
+    fn stats(seed: u64) -> MoeLayerStats {
+        MoeLayerStats {
+            traffic: zipf_traffic(4, 256, 0.8, seed),
+            gate_ms: 0.02,
+            ffn_ms_per_token: 0.001,
+            agg_ms: 0.015,
+        }
+    }
+
+    #[test]
+    fn no_background_is_bit_for_bit_simulate_group() {
+        let s = stats(5);
+        let cluster = Cluster::homogeneous(4, 100.0);
+        let a = simulate_window(&[&s], None, &cluster, SchedulePolicy::Aurora);
+        let b = simulate_group(&[&s], &cluster, SchedulePolicy::Aurora).0;
+        assert_eq!(a, b);
+        // an all-zero background takes the same path
+        let z = TrafficMatrix::zeros(4);
+        let c = simulate_window(&[&s], Some(&z), &cluster, SchedulePolicy::Aurora);
+        assert_eq!(a, c);
+    }
+
+    #[test]
+    fn background_traffic_never_shortens_the_window() {
+        let s = stats(9);
+        let cluster = Cluster::homogeneous(4, 100.0);
+        let clean = simulate_window(&[&s], None, &cluster, SchedulePolicy::Aurora);
+        let mut bg = TrafficMatrix::zeros(4);
+        bg.set(0, 1, 500);
+        bg.set(2, 3, 500);
+        let loaded = simulate_window(&[&s], Some(&bg), &cluster, SchedulePolicy::Aurora);
+        assert!(
+            loaded.inference_ms >= clean.inference_ms,
+            "background {} vs clean {}",
+            loaded.inference_ms,
+            clean.inference_ms
+        );
+        // a big enough transfer dominates the window
+        let mut heavy = TrafficMatrix::zeros(4);
+        heavy.set(0, 1, 50_000);
+        let slow = simulate_window(&[&s], Some(&heavy), &cluster, SchedulePolicy::Aurora);
+        assert!(slow.inference_ms > clean.inference_ms * 2.0);
+    }
+}

@@ -38,13 +38,39 @@ pub fn zipf_weights(n: usize, alpha: f64) -> Vec<f64> {
 /// sender's own expert) are kept: they count toward expert compute load but
 /// never touch the wire, exactly as in the LIMoE traces.
 pub fn zipf_traffic(n: usize, tokens_per_sender: u64, alpha: f64, seed: u64) -> TrafficMatrix {
+    drifting_zipf_traffic(n, tokens_per_sender, alpha, seed, 0)
+}
+
+/// Per-expert Zipf popularity with the ranking *rotated* by `phase` through
+/// the seed's permutation: the expert holding rank `r` at phase 0 holds rank
+/// `(r + phase) mod n` afterwards, so the hot expert's identity moves while
+/// the load shape stays fixed. Phase 0 is exactly [`zipf_traffic`]'s
+/// assignment.
+fn rotated_zipf_popularity(n: usize, alpha: f64, seed: u64, phase: usize) -> Vec<f64> {
     let ranks = zipf_weights(n, alpha);
     // Permute which expert holds which popularity rank.
     let perm = Rng::new(seed ^ 0x51F7_2E3A).permutation(n);
     let mut weights = vec![0.0f64; n];
     for (rank, &expert) in perm.iter().enumerate() {
-        weights[expert] = ranks[rank];
+        weights[expert] = ranks[(rank + phase) % n];
     }
+    weights
+}
+
+/// Drifting variant of [`zipf_traffic`]: the popularity ranking rotates
+/// through the seed's permutation as `phase` advances — the *traffic drift*
+/// regime the online coordinator ([`crate::coordinator`]) tracks. `phase = 0`
+/// is bit-for-bit [`zipf_traffic`]; holding `phase` fixed gives a stationary
+/// workload; each phase relocates the hot expert while preserving the exact
+/// load shape (the per-expert load multiset is phase-invariant).
+pub fn drifting_zipf_traffic(
+    n: usize,
+    tokens_per_sender: u64,
+    alpha: f64,
+    seed: u64,
+    phase: usize,
+) -> TrafficMatrix {
+    let weights = rotated_zipf_popularity(n, alpha, seed, phase);
     // Every sender routes identically, so round once and reuse the parts.
     let parts = super::split_tokens(tokens_per_sender, &weights);
     let mut d = TrafficMatrix::zeros(n);
@@ -53,6 +79,33 @@ pub fn zipf_traffic(n: usize, tokens_per_sender: u64, alpha: f64, seed: u64) -> 
             if part > 0 {
                 d.add(i, j, part);
             }
+        }
+    }
+    d
+}
+
+/// Sampled (noisy) variant of [`drifting_zipf_traffic`]: each sender's
+/// `tokens_per_sender` tokens are drawn one by one from the rotated Zipf
+/// popularity with an RNG seeded by `draw_seed`, so repeated windows of one
+/// stationary phase fluctuate the way live batches do — the regime that
+/// separates a smoothing coordinator from naive replan-every-window. Row
+/// sums stay exact; only the destination mix is noisy. Deterministic for a
+/// fixed `(seed, phase, draw_seed)` triple.
+pub fn sampled_zipf_traffic(
+    n: usize,
+    tokens_per_sender: u64,
+    alpha: f64,
+    seed: u64,
+    phase: usize,
+    draw_seed: u64,
+) -> TrafficMatrix {
+    let weights = rotated_zipf_popularity(n, alpha, seed, phase);
+    let mut rng = Rng::new(draw_seed ^ 0xD21F_7A11);
+    let mut d = TrafficMatrix::zeros(n);
+    for i in 0..n {
+        for _ in 0..tokens_per_sender {
+            let j = rng.weighted_index(&weights);
+            d.add(i, j, 1);
         }
     }
     d
@@ -213,6 +266,57 @@ mod tests {
         let max = skewed.expert_loads().into_iter().max().unwrap();
         // Zipf(1.2) over 16 ranks puts ~36% of all tokens on the hot expert
         assert!(max as f64 > 0.3 * 16.0 * 160.0, "hot load {max}");
+    }
+
+    #[test]
+    fn drifting_phase_zero_is_zipf_traffic() {
+        assert_eq!(
+            drifting_zipf_traffic(8, 100, 1.2, 7, 0),
+            zipf_traffic(8, 100, 1.2, 7)
+        );
+    }
+
+    #[test]
+    fn drifting_phases_relocate_the_hot_expert_but_keep_the_shape() {
+        let n = 8;
+        let hot_of = |phase: usize| {
+            let d = drifting_zipf_traffic(n, 160, 1.2, 7, phase);
+            let loads = d.expert_loads();
+            (0..n).max_by_key(|&e| loads[e]).unwrap()
+        };
+        // every phase shifts the hot expert somewhere new; after n phases
+        // the rotation wraps around
+        let hots: Vec<usize> = (0..n).map(hot_of).collect();
+        for p in 1..n {
+            assert_ne!(hots[p], hots[0], "phase {p} kept the hot expert");
+        }
+        assert_eq!(hot_of(n), hots[0]);
+        // the load multiset is phase-invariant
+        let mut a = drifting_zipf_traffic(n, 160, 1.2, 7, 0).expert_loads();
+        let mut b = drifting_zipf_traffic(n, 160, 1.2, 7, 3).expert_loads();
+        a.sort();
+        b.sort();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn sampled_windows_conserve_rows_and_track_the_shape() {
+        let n = 8;
+        let d = sampled_zipf_traffic(n, 400, 1.2, 7, 0, 11);
+        for i in 0..n {
+            let row: u64 = (0..n).map(|j| d.get(i, j)).sum();
+            assert_eq!(row, 400, "row {i} (diagonal included)");
+        }
+        // deterministic per draw seed, noisy across draw seeds
+        assert_eq!(d, sampled_zipf_traffic(n, 400, 1.2, 7, 0, 11));
+        assert_ne!(d, sampled_zipf_traffic(n, 400, 1.2, 7, 0, 12));
+        // the sample's hot expert matches the exact generator's
+        let exact = drifting_zipf_traffic(n, 400, 1.2, 7, 0);
+        let hot = |m: &TrafficMatrix| {
+            let loads = m.expert_loads();
+            (0..n).max_by_key(|&e| loads[e]).unwrap()
+        };
+        assert_eq!(hot(&d), hot(&exact));
     }
 
     #[test]

@@ -474,6 +474,101 @@ mod tests {
     }
 
     #[test]
+    fn split_tokens_single_replica_is_identity() {
+        for t in [0u64, 1, 7, 1_000_000] {
+            assert_eq!(split_tokens(t, &[0.37]), vec![t]);
+            // weight magnitude is irrelevant for a single replica
+            assert_eq!(split_tokens(t, &[1e-12]), vec![t]);
+        }
+    }
+
+    #[test]
+    fn split_tokens_zero_tokens_yield_all_zero_parts() {
+        for w in [
+            vec![1.0],
+            vec![0.5, 0.5],
+            vec![0.0, 0.0, 0.0],
+            vec![1e-9, 1e9],
+        ] {
+            let parts = split_tokens(0, &w);
+            assert_eq!(parts.len(), w.len());
+            assert!(parts.iter().all(|&p| p == 0), "{w:?} -> {parts:?}");
+        }
+    }
+
+    #[test]
+    fn split_tokens_all_equal_remainders_break_toward_lower_indices() {
+        // 10 tokens over 4 equal weights: every exact share is 2.5, so the
+        // two leftover tokens must go to replicas 0 and 1, in order.
+        assert_eq!(split_tokens(10, &[0.25; 4]), vec![3, 3, 2, 2]);
+        // 3 over 4 equal weights: fractional parts all tie at 0.75
+        assert_eq!(split_tokens(3, &[1.0; 4]), vec![1, 1, 1, 0]);
+        // ties are by fractional part, not weight scale
+        assert_eq!(split_tokens(10, &[2.5; 4]), vec![3, 3, 2, 2]);
+    }
+
+    #[test]
+    fn split_tokens_conserves_under_adversarial_weights() {
+        use crate::util::Rng;
+        let adversarial: Vec<Vec<f64>> = vec![
+            vec![1e-300, 1.0],            // denormal-scale weight
+            vec![1e300, 1.0],             // huge imbalance
+            vec![0.0, 1.0, 0.0],          // zeros inside
+            vec![f64::MIN_POSITIVE; 5],   // all tiny
+            vec![0.1; 10],                // many equal
+            vec![0.9999999, 0.0000001],   // near-degenerate
+        ];
+        for w in &adversarial {
+            for t in [0u64, 1, 2, 999, 12_345] {
+                let parts = split_tokens(t, w);
+                assert_eq!(parts.len(), w.len());
+                assert_eq!(parts.iter().sum::<u64>(), t, "weights {w:?} tokens {t}");
+            }
+        }
+        // seeded random weight vectors: conservation and floor/ceil bounds
+        let mut rng = Rng::new(0x5EED5);
+        for _ in 0..200 {
+            let k = rng.gen_range(6) as usize + 1;
+            let w: Vec<f64> = (0..k).map(|_| rng.gen_f64()).collect();
+            let t = rng.gen_range(10_000);
+            let parts = split_tokens(t, &w);
+            assert_eq!(parts.iter().sum::<u64>(), t);
+            let total: f64 = w.iter().sum();
+            if total > 0.0 {
+                for (r, &p) in parts.iter().enumerate() {
+                    let exact = t as f64 * (w[r] / total);
+                    // largest-remainder: every part is its floor or ceiling
+                    assert!(
+                        (p as f64) >= exact.floor() - 1e-9 && (p as f64) <= exact.ceil() + 1e-9,
+                        "part {r}={p} vs exact {exact} (weights {w:?}, tokens {t})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn project_split_zero_rows_conserve() {
+        // senders 1 and 2 originate nothing: splitting must not invent tokens
+        let m = TrafficMatrix::from_nested(&[
+            vec![0, 30, 0],
+            vec![0, 0, 0],
+            vec![0, 0, 0],
+        ]);
+        let owner = vec![0usize, 1, 2];
+        let replicas = vec![vec![0], vec![1, 2], vec![2]];
+        let weights = vec![vec![1.0], vec![0.5, 0.5], vec![1.0]];
+        let g = m.project_split(&owner, &replicas, &weights, 3);
+        assert_eq!(
+            g.expert_loads().iter().sum::<u64>(),
+            m.expert_loads().iter().sum::<u64>()
+        );
+        assert_eq!(g.row_sum(1), 0);
+        assert_eq!(g.row_sum(2), 0);
+        assert_eq!(g.get(0, 1) + g.get(0, 2), 30);
+    }
+
+    #[test]
     fn project_split_singletons_match_project_bitwise() {
         let m = sample();
         let owner = vec![2usize, 0, 1];

@@ -9,5 +9,7 @@
 mod augment;
 mod matrix;
 
-pub use augment::{augment_to_balanced, zipf_traffic, zipf_weights};
+pub use augment::{
+    augment_to_balanced, drifting_zipf_traffic, sampled_zipf_traffic, zipf_traffic, zipf_weights,
+};
 pub use matrix::{split_tokens, TrafficMatrix};

@@ -140,6 +140,53 @@ impl Bench {
     }
 }
 
+/// Short git SHA of the working tree's HEAD, if `git` is available and the
+/// process runs inside a repository — stamps perf snapshots so the bench
+/// history maps back to commits.
+pub fn git_sha() -> Option<String> {
+    let out = std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()?;
+    if !out.status.success() {
+        return None;
+    }
+    let sha = String::from_utf8(out.stdout).ok()?.trim().to_string();
+    if sha.is_empty() {
+        None
+    } else {
+        Some(sha)
+    }
+}
+
+/// ISO-8601 UTC timestamp (`YYYY-MM-DDThh:mm:ssZ`) for `secs` seconds since
+/// the Unix epoch. The offline build has no `chrono`, so the civil-from-days
+/// conversion (Howard Hinnant's algorithm) is inlined here.
+pub fn iso_utc(secs: u64) -> String {
+    let days = (secs / 86_400) as i64;
+    let rem = secs % 86_400;
+    let (h, mi, s) = (rem / 3600, (rem % 3600) / 60, rem % 60);
+    let z = days + 719_468;
+    let era = z.div_euclid(146_097);
+    let doe = z.rem_euclid(146_097);
+    let yoe = (doe - doe / 1460 + doe / 36_524 - doe / 146_096) / 365;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100);
+    let mp = (5 * doy + 2) / 153;
+    let d = doy - (153 * mp + 2) / 5 + 1;
+    let m = if mp < 10 { mp + 3 } else { mp - 9 };
+    let y = yoe + era * 400 + i64::from(m <= 2);
+    format!("{y:04}-{m:02}-{d:02}T{h:02}:{mi:02}:{s:02}Z")
+}
+
+/// [`iso_utc`] of the current system time.
+pub fn iso_utc_now() -> String {
+    let secs = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    iso_utc(secs)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -155,6 +202,27 @@ mod tests {
         assert!(s.iters > 0);
         assert!(s.min <= s.median);
         assert_eq!(b.samples().len(), 1);
+    }
+
+    #[test]
+    fn iso_utc_known_instants() {
+        assert_eq!(iso_utc(0), "1970-01-01T00:00:00Z");
+        // leap day
+        assert_eq!(iso_utc(951_782_400), "2000-02-29T00:00:00Z");
+        // a well-known round number: 2023-11-14 22:13:20 UTC
+        assert_eq!(iso_utc(1_700_000_000), "2023-11-14T22:13:20Z");
+        // year boundary
+        assert_eq!(iso_utc(1_704_067_199), "2023-12-31T23:59:59Z");
+        assert_eq!(iso_utc(1_704_067_200), "2024-01-01T00:00:00Z");
+    }
+
+    #[test]
+    fn iso_utc_now_has_the_right_shape() {
+        let s = iso_utc_now();
+        assert_eq!(s.len(), 20, "{s}");
+        assert!(s.ends_with('Z'));
+        assert_eq!(&s[4..5], "-");
+        assert_eq!(&s[10..11], "T");
     }
 
     #[test]

@@ -1,0 +1,211 @@
+//! Integration: the online coordinator.
+//!
+//! Acceptance contracts of the subsystem (all deterministic — fixed seeds,
+//! exact or seeded-sampled workloads):
+//!
+//! 1. **Drift win** — under a drifting Zipf workload (skew rotating across
+//!    experts every 8 windows), the coordinator's simulated end-to-end
+//!    serving time beats the static initial plan by ≥ 1.15×.
+//! 2. **Hysteresis** — under stationary uniform routing the coordinator
+//!    never replans, and its serving times equal the static plan's exactly.
+//! 3. **Migration conservation** — diffing two replicated plans yields
+//!    weight flows that host every `(model, expert)` exactly per the target
+//!    deployment after the swap, and the flow schedule passes
+//!    `validate_slot_schedule`.
+
+use aurora::cluster::Cluster;
+use aurora::coordinator::{
+    migration_preserves_target, plan_migration, run_online, OnlineConfig, OnlineStrategy,
+};
+use aurora::planner::{Planner, ReplicationConfig};
+use aurora::schedule::validate_slot_schedule;
+use aurora::sim::MoeLayerStats;
+use aurora::trace::ModelTrace;
+use aurora::traffic::drifting_zipf_traffic;
+
+const N_GPUS: usize = 8;
+const N_EXPERTS: usize = 16;
+const TOKENS_PER_SENDER: u64 = 1024;
+const SEED: u64 = 2024;
+
+fn cluster() -> Cluster {
+    Cluster::homogeneous(N_GPUS, 814.0)
+}
+
+fn online_cfg(alpha: f64, sampled: bool) -> OnlineConfig {
+    OnlineConfig {
+        n_gpus: N_GPUS,
+        n_experts: N_EXPERTS,
+        tokens_per_sender: TOKENS_PER_SENDER,
+        alpha,
+        windows: 32,
+        rotate_every: 8,
+        seed: SEED,
+        sampled,
+        ..OnlineConfig::default()
+    }
+}
+
+fn phase_trace(alpha: f64, phase: usize) -> ModelTrace {
+    ModelTrace {
+        name: format!("phase-{phase}"),
+        layers: vec![MoeLayerStats {
+            traffic: drifting_zipf_traffic(N_EXPERTS, TOKENS_PER_SENDER, alpha, SEED, phase),
+            gate_ms: 0.02,
+            ffn_ms_per_token: 0.001,
+            agg_ms: 0.015,
+        }],
+    }
+}
+
+/// Acceptance 1: the coordinator beats the static plan by ≥ 1.15× under a
+/// rotating-hot-expert Zipf workload, deterministically.
+#[test]
+fn coordinator_beats_static_by_1_15x_under_drifting_zipf() {
+    let cfg = online_cfg(1.2, false);
+    let cluster = cluster();
+    let stat = run_online(&cfg, &cluster, OnlineStrategy::Static);
+    let coord = run_online(&cfg, &cluster, OnlineStrategy::Coordinator);
+
+    assert!(coord.replans >= 1, "rotating hot expert must replan");
+    assert!(coord.swaps >= 1, "staged plans must swap in");
+    let speedup = stat.total_ms / coord.total_ms;
+    assert!(
+        speedup >= 1.15,
+        "coordinator speedup {speedup:.3} (static {:.3} ms, coordinator {:.3} ms, {} replans)",
+        stat.total_ms,
+        coord.total_ms,
+        coord.replans
+    );
+
+    // determinism: bit-for-bit reproducible
+    let again = run_online(&cfg, &cluster, OnlineStrategy::Coordinator);
+    assert_eq!(coord.per_window_ms, again.per_window_ms);
+    assert_eq!(coord.replans, again.replans);
+}
+
+/// Acceptance 2: stationary uniform routing never replans — the hysteresis
+/// gates hold and the coordinator's serving is bit-for-bit the static plan.
+#[test]
+fn stationary_uniform_never_replans() {
+    let cfg = online_cfg(0.0, false);
+    let cluster = cluster();
+    let stat = run_online(&cfg, &cluster, OnlineStrategy::Static);
+    let coord = run_online(&cfg, &cluster, OnlineStrategy::Coordinator);
+    assert_eq!(coord.replans, 0, "uniform routing must never replan");
+    assert_eq!(coord.swaps, 0);
+    assert_eq!(coord.migration_ms, 0.0);
+    assert_eq!(coord.per_window_ms, stat.per_window_ms);
+}
+
+/// The coordinator's gates also beat naive replan-every-window once live
+/// batches fluctuate: the naive strategy chases sampling noise and pays a
+/// weight migration for nearly every window.
+#[test]
+fn coordinator_beats_naive_replan_every_window_under_noise() {
+    let cfg = online_cfg(1.2, true);
+    let cluster = cluster();
+    let naive = run_online(&cfg, &cluster, OnlineStrategy::EveryWindow);
+    let coord = run_online(&cfg, &cluster, OnlineStrategy::Coordinator);
+    assert!(
+        coord.total_ms < naive.total_ms,
+        "coordinator {:.3} ms vs naive {:.3} ms (naive {} replans, coordinator {})",
+        coord.total_ms,
+        naive.total_ms,
+        naive.replans,
+        coord.replans
+    );
+    assert!(
+        coord.replans <= naive.replans,
+        "the gates must suppress churn: coordinator {} vs naive {}",
+        coord.replans,
+        naive.replans
+    );
+}
+
+/// Acceptance 3: migration flows conserve expert weights — after applying
+/// the flows (and frees), every `(model, expert)` is hosted exactly per the
+/// target deployment — and the weight schedule is contention-free, exact,
+/// and optimal.
+#[test]
+fn migration_flows_conserve_and_schedules_validate() {
+    let cluster = cluster();
+    let planner = Planner::default();
+    let rep_cfg = ReplicationConfig::default();
+
+    let cur_trace = phase_trace(1.2, 0);
+    let tgt_trace = phase_trace(1.2, 2);
+    let (cur, _) = planner.plan_replicated(&[&cur_trace], &cluster, &rep_cfg).unwrap();
+    let (tgt, _) = planner.plan_replicated(&[&tgt_trace], &cluster, &rep_cfg).unwrap();
+    assert_ne!(cur, tgt, "rotated hot expert must change the plan");
+
+    let plan = plan_migration(&cur, &tgt, 4096);
+    assert!(!plan.is_empty(), "different plans need weight movement");
+    assert!(
+        migration_preserves_target(&cur, &tgt, &plan),
+        "flows + frees must reproduce the target hosting exactly"
+    );
+    for f in &plan.flows {
+        assert!(
+            cur.replicas[f.model][f.expert].contains(&f.src),
+            "flow source must hold a current copy: {f:?}"
+        );
+        assert!(
+            tgt.replicas[f.model][f.expert].contains(&f.dst),
+            "flow destination must host per the target: {f:?}"
+        );
+        assert_eq!(f.tokens, 4096);
+        assert_ne!(f.src, f.dst);
+    }
+    // the aggregated weight traffic is exactly the flows
+    assert_eq!(
+        plan.traffic.total(),
+        4096 * plan.flows.len() as u64,
+        "all weight tokens are off-diagonal wire traffic"
+    );
+    // slot-scheduled over the same links, machine-checked
+    validate_slot_schedule(&plan.traffic, &plan.schedule).unwrap();
+    assert_eq!(plan.makespan_tokens(), plan.traffic.b_max_tokens());
+    assert!(plan.migration_ms(&cluster) > 0.0);
+
+    // self-diff is empty
+    assert!(plan_migration(&cur, &cur, 4096).is_empty());
+}
+
+/// The oracle (free, clairvoyant replanning) floors the static plan on the
+/// exact drifting workload, and tracks every rotation.
+#[test]
+fn oracle_floors_the_static_plan() {
+    let cfg = online_cfg(1.2, false);
+    let cluster = cluster();
+    let stat = run_online(&cfg, &cluster, OnlineStrategy::Static);
+    let oracle = run_online(&cfg, &cluster, OnlineStrategy::Oracle);
+    assert!(
+        oracle.total_ms <= stat.total_ms + 1e-9,
+        "oracle {:.3} vs static {:.3}",
+        oracle.total_ms,
+        stat.total_ms
+    );
+    // one plan change per rotation (phases 1..3), none inside a phase
+    assert_eq!(oracle.replans, 3, "exact workload: adapt exactly per phase");
+}
+
+/// The `online` eval figure runs end to end with the expected rows.
+#[test]
+fn online_figure_runs() {
+    use aurora::config::EvalConfig;
+    use aurora::eval::run_figure;
+    let cfg = EvalConfig {
+        n_experts: 4,
+        batch_images: 128,
+        ..EvalConfig::default()
+    };
+    let reports = run_figure("online", &cfg).unwrap();
+    assert_eq!(reports.len(), 1);
+    let r = &reports[0];
+    assert_eq!(r.rows.len(), 4);
+    let vs_static = r.column("vs static").unwrap();
+    assert!((vs_static[0] - 1.0).abs() < 1e-9, "{vs_static:?}");
+    // the coordinator row must not lose to the static plan
+    assert!(vs_static[2] >= 1.0, "{vs_static:?}");
+}
