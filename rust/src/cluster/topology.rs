@@ -9,15 +9,94 @@
 //! The Theorem 4.2 lower bound generalizes cleanly: a collective can finish
 //! no earlier than the slowest of (a) any GPU's port drain time and (b) any
 //! group uplink's drain time in either direction. Aurora's contention-free
-//! ordering still achieves the port part; the uplink part is a fluid bound
-//! the schedule inherits (transfers crossing a saturated uplink are what
-//! they are regardless of order), so we report
-//! `max(port bound, uplink bound)` for Aurora and
-//! `max(flat simulated makespan, uplink bound)` for ordered baselines.
+//! ordering still achieves the port part; the uplink part needs a schedule
+//! that *coordinates* uplink usage — that is
+//! [`crate::schedule::hierarchical_schedule`], the two-phase decomposition
+//! that runs Aurora within each group at port rate and slot-schedules the
+//! residual cross-group traffic on the uplinks via a group-level BvN
+//! decomposition. [`comm_time_topology`] keeps the fluid-bound view for
+//! ordered baselines: `max(flat simulated makespan, uplink bound)`.
+//!
+//! Construction is validated: [`Topology::two_tier`] and
+//! [`Topology::even_two_tier`] return a typed [`TopologyError`] (consistent
+//! with [`crate::placement::Scenario::detect`]) instead of panicking on
+//! overlapping, non-covering, or empty groups.
 
 use super::Cluster;
 use crate::schedule::{comm_time, CommResult, SchedulePolicy};
 use crate::traffic::TrafficMatrix;
+use std::fmt;
+
+/// Why a two-tier topology description is invalid.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TopologyError {
+    /// A two-tier topology needs at least one group.
+    NoGroups,
+    /// A group has no member GPUs.
+    EmptyGroup {
+        /// Offending group index.
+        group: usize,
+    },
+    /// A GPU appears in more than one group (or twice in one group).
+    OverlappingGroups {
+        /// The GPU listed more than once.
+        gpu: usize,
+    },
+    /// A group lists a GPU the cluster does not have.
+    GpuOutOfRange {
+        /// The out-of-range GPU id.
+        gpu: usize,
+        /// Group that listed it.
+        group: usize,
+        /// Cluster size.
+        n_gpus: usize,
+    },
+    /// A cluster GPU belongs to no group (the grouping must cover).
+    UncoveredGpu {
+        /// The unassigned GPU.
+        gpu: usize,
+    },
+    /// Oversubscription must be a finite factor ≥ 1.
+    BadOversubscription {
+        /// The rejected value.
+        value: f64,
+    },
+    /// `even_two_tier` needs the group count to divide the GPU count.
+    UnevenGroups {
+        /// Cluster size.
+        n_gpus: usize,
+        /// Requested group count.
+        n_groups: usize,
+    },
+}
+
+impl fmt::Display for TopologyError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TopologyError::NoGroups => write!(f, "two-tier topology needs at least one group"),
+            TopologyError::EmptyGroup { group } => write!(f, "group {group} has no member GPUs"),
+            TopologyError::OverlappingGroups { gpu } => {
+                write!(f, "GPU {gpu} appears in more than one group")
+            }
+            TopologyError::GpuOutOfRange { gpu, group, n_gpus } => write!(
+                f,
+                "group {group} lists GPU {gpu}, but the cluster has {n_gpus}"
+            ),
+            TopologyError::UncoveredGpu { gpu } => {
+                write!(f, "GPU {gpu} belongs to no group (grouping must cover the cluster)")
+            }
+            TopologyError::BadOversubscription { value } => {
+                write!(f, "oversubscription must be a finite factor >= 1, got {value}")
+            }
+            TopologyError::UnevenGroups { n_gpus, n_groups } => write!(
+                f,
+                "{n_groups} equal groups cannot tile {n_gpus} GPUs (count must divide evenly)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for TopologyError {}
 
 /// Inter-GPU network topology.
 #[derive(Debug, Clone, PartialEq)]
@@ -26,6 +105,8 @@ pub enum Topology {
     BigSwitch,
     /// Two-tier leaf/spine: `groups[g]` lists member GPU ids;
     /// `oversubscription ≥ 1` divides each group's aggregate uplink rate.
+    /// Build via [`Topology::two_tier`] / [`Topology::even_two_tier`] so the
+    /// invariants (disjoint, non-empty groups; sane factor) are checked.
     TwoTier {
         /// Disjoint GPU groups covering the cluster.
         groups: Vec<Vec<usize>>,
@@ -35,34 +116,124 @@ pub enum Topology {
 }
 
 impl Topology {
+    /// Validated two-tier topology from explicit groups. Coverage is checked
+    /// against a cluster size later ([`Topology::owners`]); everything
+    /// cluster-independent — empty group lists, duplicate members, a bad
+    /// factor — is rejected here.
+    pub fn two_tier(
+        groups: Vec<Vec<usize>>,
+        oversubscription: f64,
+    ) -> Result<Topology, TopologyError> {
+        if groups.is_empty() {
+            return Err(TopologyError::NoGroups);
+        }
+        for (g, members) in groups.iter().enumerate() {
+            if members.is_empty() {
+                return Err(TopologyError::EmptyGroup { group: g });
+            }
+        }
+        let mut seen = std::collections::BTreeSet::new();
+        for members in &groups {
+            for &i in members {
+                if !seen.insert(i) {
+                    return Err(TopologyError::OverlappingGroups { gpu: i });
+                }
+            }
+        }
+        if !(oversubscription >= 1.0 && oversubscription.is_finite()) {
+            return Err(TopologyError::BadOversubscription {
+                value: oversubscription,
+            });
+        }
+        Ok(Topology::TwoTier {
+            groups,
+            oversubscription,
+        })
+    }
+
     /// Two-tier topology with `n_groups` equal contiguous groups.
-    pub fn even_two_tier(n_gpus: usize, n_groups: usize, oversubscription: f64) -> Topology {
-        assert!(n_groups > 0 && n_gpus % n_groups == 0);
-        assert!(oversubscription >= 1.0);
+    pub fn even_two_tier(
+        n_gpus: usize,
+        n_groups: usize,
+        oversubscription: f64,
+    ) -> Result<Topology, TopologyError> {
+        if n_groups == 0 {
+            return Err(TopologyError::NoGroups);
+        }
+        if n_gpus == 0 || n_gpus % n_groups != 0 {
+            return Err(TopologyError::UnevenGroups { n_gpus, n_groups });
+        }
         let per = n_gpus / n_groups;
-        Topology::TwoTier {
-            groups: (0..n_groups)
+        Topology::two_tier(
+            (0..n_groups)
                 .map(|g| (g * per..(g + 1) * per).collect())
                 .collect(),
             oversubscription,
+        )
+    }
+
+    /// Number of groups (1 for the big switch — one non-blocking domain).
+    pub fn n_groups(&self) -> usize {
+        match self {
+            Topology::BigSwitch => 1,
+            Topology::TwoTier { groups, .. } => groups.len(),
         }
     }
 
-    /// Group id of each GPU (`None` for the big switch).
-    pub fn group_of(&self, n_gpus: usize) -> Option<Vec<usize>> {
+    /// Group id of each GPU, validated against the cluster size: `None` for
+    /// the big switch, an error when the grouping overlaps, exceeds the
+    /// cluster, or fails to cover it.
+    pub fn owners(&self, n_gpus: usize) -> Result<Option<Vec<usize>>, TopologyError> {
         match self {
-            Topology::BigSwitch => None,
+            Topology::BigSwitch => Ok(None),
             Topology::TwoTier { groups, .. } => {
                 let mut owner = vec![usize::MAX; n_gpus];
                 for (g, members) in groups.iter().enumerate() {
                     for &i in members {
-                        assert!(i < n_gpus && owner[i] == usize::MAX, "bad grouping");
+                        if i >= n_gpus {
+                            return Err(TopologyError::GpuOutOfRange {
+                                gpu: i,
+                                group: g,
+                                n_gpus,
+                            });
+                        }
+                        if owner[i] != usize::MAX {
+                            return Err(TopologyError::OverlappingGroups { gpu: i });
+                        }
                         owner[i] = g;
                     }
                 }
-                assert!(owner.iter().all(|&o| o != usize::MAX), "grouping must cover");
-                Some(owner)
+                if let Some(gpu) = owner.iter().position(|&o| o == usize::MAX) {
+                    return Err(TopologyError::UncoveredGpu { gpu });
+                }
+                Ok(Some(owner))
             }
+        }
+    }
+
+    /// Group id of each GPU (`None` for the big switch). Panics on an
+    /// invalid grouping — use [`Topology::owners`] for the checked form;
+    /// topologies built via [`Topology::two_tier`] and matched to the right
+    /// cluster size never panic here.
+    pub fn group_of(&self, n_gpus: usize) -> Option<Vec<usize>> {
+        self.owners(n_gpus).expect("invalid two-tier topology")
+    }
+
+    /// Per-group uplink rates (tokens/ms): member port sum over the
+    /// oversubscription factor. Empty for the big switch.
+    pub fn uplink_rates(&self, cluster: &Cluster) -> Vec<f64> {
+        match self {
+            Topology::BigSwitch => vec![],
+            Topology::TwoTier {
+                groups,
+                oversubscription,
+            } => groups
+                .iter()
+                .map(|members| {
+                    members.iter().map(|&i| cluster.gpu(i).bandwidth).sum::<f64>()
+                        / oversubscription
+                })
+                .collect(),
         }
     }
 }
@@ -75,17 +246,9 @@ pub fn uplink_bound(d: &TrafficMatrix, cluster: &Cluster, topo: &Topology) -> f6
     let Some(owner) = topo.group_of(n) else {
         return 0.0;
     };
-    let Topology::TwoTier {
-        groups,
-        oversubscription,
-    } = topo
-    else {
-        return 0.0;
-    };
+    let rates = topo.uplink_rates(cluster);
     let mut bound = 0.0f64;
-    for (g, members) in groups.iter().enumerate() {
-        let uplink_rate: f64 =
-            members.iter().map(|&i| cluster.gpu(i).bandwidth).sum::<f64>() / oversubscription;
+    for (g, &uplink_rate) in rates.iter().enumerate() {
         let mut up_tokens = 0u64;
         let mut down_tokens = 0u64;
         for i in 0..n {
@@ -107,8 +270,13 @@ pub fn uplink_bound(d: &TrafficMatrix, cluster: &Cluster, topo: &Topology) -> f6
     bound
 }
 
-/// Communication time under `topo`: the flat big-switch result combined with
-/// the uplink drain bound (see module docs for the modelling argument).
+/// Communication time under `topo` for **ordered baselines** (and the big
+/// switch): the flat big-switch result combined with the uplink drain bound.
+/// The fluid argument: a baseline order is what it is regardless of the
+/// topology, so transfers crossing a saturated uplink serialize there and
+/// the makespan cannot beat either bound. Aurora on a two-tier topology
+/// should instead be priced through the two-phase hierarchical schedule
+/// ([`crate::schedule::comm_time_on`]), which coordinates uplink usage.
 pub fn comm_time_topology(
     d: &TrafficMatrix,
     cluster: &Cluster,
@@ -161,7 +329,7 @@ mod tests {
         // equals member port sum)
         let d = rand_matrix(8, 2);
         let c = Cluster::homogeneous(8, 1.0);
-        let topo = Topology::even_two_tier(8, 2, 1.0);
+        let topo = Topology::even_two_tier(8, 2, 1.0).unwrap();
         let t = comm_time_topology(&d, &c, &topo, SchedulePolicy::Aurora);
         let flat = comm_time(&d, &c.bandwidths(), SchedulePolicy::Aurora);
         // uplink bound <= flat b_max when no oversubscription and groups of 4
@@ -174,7 +342,7 @@ mod tests {
         let c = Cluster::homogeneous(8, 1.0);
         let mut last = 0.0;
         for os in [1.0, 2.0, 4.0, 8.0] {
-            let topo = Topology::even_two_tier(8, 2, os);
+            let topo = Topology::even_two_tier(8, 2, os).unwrap();
             let t = comm_time_topology(&d, &c, &topo, SchedulePolicy::Aurora).makespan;
             assert!(t >= last, "os={os}");
             last = t;
@@ -183,7 +351,7 @@ mod tests {
         let t8 = comm_time_topology(
             &d,
             &c,
-            &Topology::even_two_tier(8, 2, 8.0),
+            &Topology::even_two_tier(8, 2, 8.0).unwrap(),
             SchedulePolicy::Aurora,
         )
         .makespan;
@@ -198,7 +366,7 @@ mod tests {
         d.set(0, 1, 100);
         d.set(1, 2, 100);
         let c = Cluster::homogeneous(8, 1.0);
-        let topo = Topology::even_two_tier(8, 2, 4.0);
+        let topo = Topology::even_two_tier(8, 2, 4.0).unwrap();
         assert_eq!(uplink_bound(&d, &c, &topo), 0.0);
     }
 
@@ -210,7 +378,7 @@ mod tests {
         d.set(0, 1, 100);
         d.set(1, 0, 100);
         let c = Cluster::homogeneous(4, 1.0);
-        let topo = Topology::even_two_tier(4, 2, 4.0);
+        let topo = Topology::even_two_tier(4, 2, 4.0).unwrap();
         // experts 0,1 in the same rack: no uplink traffic
         assert_eq!(uplink_bound(&d, &c, &topo), 0.0);
         // split them across racks: heavy uplink traffic
@@ -219,12 +387,88 @@ mod tests {
     }
 
     #[test]
-    #[should_panic]
     fn overlapping_groups_rejected() {
-        let topo = Topology::TwoTier {
-            groups: vec![vec![0, 1], vec![1, 2]],
-            oversubscription: 2.0,
-        };
-        topo.group_of(3);
+        // across groups
+        assert_eq!(
+            Topology::two_tier(vec![vec![0, 1], vec![1, 2]], 2.0),
+            Err(TopologyError::OverlappingGroups { gpu: 1 })
+        );
+        // within one group
+        assert_eq!(
+            Topology::two_tier(vec![vec![0, 0], vec![1, 2]], 2.0),
+            Err(TopologyError::OverlappingGroups { gpu: 0 })
+        );
+    }
+
+    #[test]
+    fn empty_and_missing_groups_rejected() {
+        assert_eq!(Topology::two_tier(vec![], 2.0), Err(TopologyError::NoGroups));
+        assert_eq!(
+            Topology::two_tier(vec![vec![0], vec![]], 2.0),
+            Err(TopologyError::EmptyGroup { group: 1 })
+        );
+        assert_eq!(
+            Topology::even_two_tier(8, 0, 2.0),
+            Err(TopologyError::NoGroups)
+        );
+    }
+
+    #[test]
+    fn non_covering_and_out_of_range_groupings_rejected() {
+        // valid construction, but checked against the wrong cluster size
+        let topo = Topology::two_tier(vec![vec![0, 1], vec![2, 3]], 2.0).unwrap();
+        assert_eq!(
+            topo.owners(3),
+            Err(TopologyError::GpuOutOfRange {
+                gpu: 3,
+                group: 1,
+                n_gpus: 3
+            })
+        );
+        // a 5-GPU cluster leaves GPU 4 uncovered
+        assert_eq!(topo.owners(5), Err(TopologyError::UncoveredGpu { gpu: 4 }));
+        // the matching size is fine
+        assert_eq!(topo.owners(4).unwrap(), Some(vec![0, 0, 1, 1]));
+    }
+
+    #[test]
+    fn bad_oversubscription_rejected() {
+        for bad in [0.5, 0.0, -1.0, f64::NAN, f64::INFINITY] {
+            let err = Topology::two_tier(vec![vec![0]], bad).unwrap_err();
+            assert!(
+                matches!(err, TopologyError::BadOversubscription { .. }),
+                "{bad}: {err}"
+            );
+            assert!(err.to_string().contains(">= 1"), "{err}");
+        }
+    }
+
+    #[test]
+    fn uneven_tiling_rejected() {
+        assert_eq!(
+            Topology::even_two_tier(10, 4, 2.0),
+            Err(TopologyError::UnevenGroups {
+                n_gpus: 10,
+                n_groups: 4
+            })
+        );
+        assert_eq!(
+            Topology::even_two_tier(0, 2, 2.0),
+            Err(TopologyError::UnevenGroups {
+                n_gpus: 0,
+                n_groups: 2
+            })
+        );
+    }
+
+    #[test]
+    fn uplink_rates_follow_member_bandwidth() {
+        let c = Cluster::homogeneous(8, 2.0);
+        let topo = Topology::even_two_tier(8, 2, 4.0).unwrap();
+        // 4 members x 2.0 tokens/ms over a 4x factor = 2.0 per uplink
+        assert_eq!(topo.uplink_rates(&c), vec![2.0, 2.0]);
+        assert!(Topology::BigSwitch.uplink_rates(&c).is_empty());
+        assert_eq!(Topology::BigSwitch.n_groups(), 1);
+        assert_eq!(topo.n_groups(), 2);
     }
 }

@@ -14,7 +14,7 @@
 //! [`crate::schedule::validate_slot_schedule`]. Copies the target drops need
 //! no transfer (freeing memory is local) and are listed separately.
 
-use crate::cluster::Cluster;
+use crate::cluster::{uplink_bound, Cluster, Topology};
 use crate::replication::ReplicatedDeployment;
 use crate::schedule::{aurora_schedule, SlotSchedule};
 use crate::traffic::TrafficMatrix;
@@ -68,6 +68,16 @@ impl MigrationPlan {
     pub fn migration_ms(&self, cluster: &Cluster) -> f64 {
         assert_eq!(cluster.len(), self.traffic.n());
         self.traffic.b_max_hetero(&cluster.bandwidths())
+    }
+
+    /// [`MigrationPlan::migration_ms`] on a network topology: weight
+    /// transfers crossing a group boundary ride the same oversubscribed
+    /// uplinks tokens do, so the staging makespan is the port bound joined
+    /// with the uplink drain bound of the weight traffic. On
+    /// [`Topology::BigSwitch`] this is exactly [`MigrationPlan::migration_ms`].
+    pub fn migration_ms_on(&self, cluster: &Cluster, topo: &Topology) -> f64 {
+        self.migration_ms(cluster)
+            .max(uplink_bound(&self.traffic, cluster, topo))
     }
 }
 
@@ -265,6 +275,27 @@ mod tests {
         let slow = plan.migration_ms(&Cluster::homogeneous(2, 400.0));
         assert!((fast - 1.0).abs() < 1e-12);
         assert!((slow - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cross_group_migration_pays_the_uplink() {
+        // GPU 0 streams one copy each to GPUs 2 and 3 — both transfers cross
+        // group 0's uplink, so the staging time doubles relative to the port
+        // bound once the uplink is 4x oversubscribed.
+        let cur = rep(4, vec![0, 1, 2, 3]);
+        let mut tgt = rep(4, vec![0, 1, 2, 3]);
+        tgt.add_replica(0, 0, 2).unwrap();
+        tgt.add_replica(0, 0, 3).unwrap();
+        let plan = plan_migration(&cur, &tgt, 400);
+        let cluster = Cluster::homogeneous(4, 400.0);
+        let flat = plan.migration_ms(&cluster);
+        assert!((flat - 2.0).abs() < 1e-12, "port bound: 800 tokens at 400/ms");
+        let big = plan.migration_ms_on(&cluster, &Topology::BigSwitch);
+        assert_eq!(big, flat);
+        // uplink rate = 2 ports * 400 / 4 = 200 tokens/ms; 800 tokens -> 4 ms
+        let topo = Topology::even_two_tier(4, 2, 4.0).unwrap();
+        let two_tier = plan.migration_ms_on(&cluster, &topo);
+        assert!((two_tier - 4.0).abs() < 1e-12, "uplink-bound staging: {two_tier}");
     }
 
     #[test]

@@ -48,7 +48,7 @@ pub use migration::{migration_preserves_target, plan_migration, MigrationFlow, M
 pub use online::{run_online, OnlineConfig, OnlineOutcome, OnlineStrategy};
 pub use swap::{PlanSwap, SwapPhase};
 
-use crate::cluster::Cluster;
+use crate::cluster::{uplink_bound, Cluster, Topology};
 use crate::planner::{Planner, ReplicationConfig};
 use crate::replication::{estimate_bottleneck_replicated, ReplicatedDeployment, SplitPlan};
 use crate::sim::MoeLayerStats;
@@ -81,6 +81,12 @@ pub struct CoordinatorConfig {
     pub drain_ms: f64,
     /// Budgets for the candidate plans ([`Planner::plan_replicated`]).
     pub replication: ReplicationConfig,
+    /// Network topology the cost model charges migrations on: weight
+    /// transfers crossing a group boundary ride the same oversubscribed
+    /// uplinks tokens do ([`MigrationPlan::migration_ms_on`]), and candidate
+    /// plans come from the topology-aware planner entry point. The default
+    /// [`Topology::BigSwitch`] reproduces the historical behavior exactly.
+    pub topology: Topology,
 }
 
 impl Default for CoordinatorConfig {
@@ -94,6 +100,7 @@ impl Default for CoordinatorConfig {
             ewma_alpha: 0.5,
             drain_ms: 0.0,
             replication: ReplicationConfig::default(),
+            topology: Topology::BigSwitch,
         }
     }
 }
@@ -177,6 +184,28 @@ pub struct Coordinator {
     rejections: u64,
     /// Counters (public for reporting).
     pub stats: CoordinatorStats,
+}
+
+/// Serving-time estimate of a plan on live statistics, on the configured
+/// topology: the split-aware completion bottleneck joined with the
+/// cross-uplink drain of the split-projected traffic — both sides of the
+/// replan gate must see the fabric, or a candidate that relieves a
+/// saturated uplink (the dominant term under oversubscription) looks like
+/// no gain at all. Big switch ⇒ exactly
+/// [`estimate_bottleneck_replicated`].
+fn serving_estimate_ms(
+    rep: &ReplicatedDeployment,
+    splits: &SplitPlan,
+    layers: &[&MoeLayerStats],
+    cluster: &Cluster,
+    topo: &Topology,
+) -> f64 {
+    let mut ms = estimate_bottleneck_replicated(rep, layers, cluster, splits);
+    if !matches!(topo, Topology::BigSwitch) {
+        let agg = rep.aggregated_traffic_split(layers, splits);
+        ms = ms.max(uplink_bound(&agg, cluster, topo));
+    }
+    ms
 }
 
 /// After this many consecutive gate-rejected candidates the detector
@@ -280,11 +309,18 @@ impl Coordinator {
     /// Feed one serving window's observed expert-indexed traffic and run the
     /// replan pipeline: estimate → drift gate → candidate plan → hysteresis
     /// and cost gates → stage the migration.
+    ///
+    /// Panics when [`CoordinatorConfig::topology`] does not fit `cluster` —
+    /// a deployment configuration error, reported as such instead of
+    /// surfacing as a planner failure mid-replan.
     pub fn observe_window(
         &mut self,
         observed: &TrafficMatrix,
         cluster: &Cluster,
     ) -> CoordinatorDecision {
+        if let Err(e) = self.cfg.topology.owners(cluster.len()) {
+            panic!("CoordinatorConfig.topology does not fit the cluster: {e}");
+        }
         self.stats.windows += 1;
         self.windows_since_replan += 1;
         self.estimator.observe(observed);
@@ -313,14 +349,21 @@ impl Coordinator {
         let refs = [&live_trace];
         let (cand_rep, cand_splits) = self
             .planner
-            .plan_replicated(&refs, cluster, &self.cfg.replication)
+            .plan_replicated_topology(&refs, cluster, &self.cfg.topology, &self.cfg.replication)
             .expect("one model always plans");
 
-        // Completion estimates of both plans on the *live* statistics.
+        // Completion estimates of both plans on the *live* statistics,
+        // topology-aware on both the gain and the cost side of the gate.
         let layers = [&live_trace.layers[0]];
-        let cur_ms =
-            estimate_bottleneck_replicated(&self.active.0, &layers, cluster, &self.active.1);
-        let new_ms = estimate_bottleneck_replicated(&cand_rep, &layers, cluster, &cand_splits);
+        let cur_ms = serving_estimate_ms(
+            &self.active.0,
+            &self.active.1,
+            &layers,
+            cluster,
+            &self.cfg.topology,
+        );
+        let new_ms =
+            serving_estimate_ms(&cand_rep, &cand_splits, &layers, cluster, &self.cfg.topology);
         if new_ms >= cur_ms * (1.0 - self.cfg.min_gain) {
             self.stats.skipped_gain += 1;
             self.note_rejection(&est);
@@ -331,7 +374,7 @@ impl Coordinator {
         let migration_ms = if migration.is_empty() {
             0.0
         } else {
-            migration.migration_ms(cluster)
+            migration.migration_ms_on(cluster, &self.cfg.topology)
         };
         // The staging window carries the weight volume on both collectives
         // of the serving model ([`crate::sim::simulate_window`]'s

@@ -20,12 +20,12 @@
 //!   migration cost: the (unrealizable) lower bound.
 
 use super::{plan_migration, Coordinator, CoordinatorConfig, PlanSwap, SwapPhase};
-use crate::cluster::Cluster;
+use crate::cluster::{Cluster, Topology};
 use crate::config::EvalConfig;
 use crate::planner::Planner;
 use crate::replication::{ReplicatedDeployment, SplitPlan};
 use crate::serve::metrics::p50_p95_p99;
-use crate::sim::{simulate_window, MoeLayerStats};
+use crate::sim::{simulate_window_topology, MoeLayerStats};
 use crate::trace::ModelTrace;
 use crate::traffic::{drifting_zipf_traffic, sampled_zipf_traffic, TrafficMatrix};
 
@@ -208,16 +208,19 @@ fn trace_of(stats: MoeLayerStats) -> ModelTrace {
 }
 
 /// Serve one window under `(rep, splits)` with optional staged weight
-/// traffic sharing the links; returns the window's inference time (ms).
+/// traffic sharing the links (both priced on `topo`); returns the window's
+/// inference time (ms).
 fn serve_window(
     rep: &ReplicatedDeployment,
     splits: &SplitPlan,
     stats: &MoeLayerStats,
     background: Option<&TrafficMatrix>,
     cluster: &Cluster,
+    topo: &Topology,
 ) -> f64 {
     let gpu_stats = rep.project_layer_split(0, stats, splits);
-    simulate_window(&[&gpu_stats], background, cluster, rep.base.policy).inference_ms
+    simulate_window_topology(&[&gpu_stats], background, cluster, topo, rep.base.policy)
+        .inference_ms
 }
 
 /// Run the drifting-Zipf serving simulation for one strategy. Every
@@ -230,6 +233,9 @@ pub fn run_online(
 ) -> OnlineOutcome {
     assert_eq!(cluster.len(), cfg.n_gpus, "cluster size mismatch");
     assert!(cfg.windows > 0, "simulate at least one window");
+    if let Err(e) = cfg.coordinator.topology.owners(cluster.len()) {
+        panic!("OnlineConfig.coordinator.topology does not fit the cluster: {e}");
+    }
 
     let planner = Planner::default();
     let plan_layer = layer(drifting_zipf_traffic(
@@ -241,7 +247,12 @@ pub fn run_online(
     ));
     let plan_trace = trace_of(plan_layer.clone());
     let (rep0, splits0) = planner
-        .plan_replicated(&[&plan_trace], cluster, &cfg.coordinator.replication)
+        .plan_replicated_topology(
+            &[&plan_trace],
+            cluster,
+            &cfg.coordinator.topology,
+            &cfg.coordinator.replication,
+        )
         .expect("one model always plans");
 
     match strategy {
@@ -249,7 +260,14 @@ pub fn run_online(
             let mut per_window = Vec::with_capacity(cfg.windows);
             for w in 0..cfg.windows {
                 let stats = layer(window_traffic(cfg, w));
-                per_window.push(serve_window(&rep0, &splits0, &stats, None, cluster));
+                per_window.push(serve_window(
+                    &rep0,
+                    &splits0,
+                    &stats,
+                    None,
+                    cluster,
+                    &cfg.coordinator.topology,
+                ));
             }
             outcome(strategy, per_window, 0, 0, 0.0)
         }
@@ -262,7 +280,14 @@ pub fn run_online(
                 let stats = layer(observed.clone());
                 let background = coord.staging_traffic().cloned();
                 let (rep, splits) = coord.active();
-                let ms = serve_window(rep, splits, &stats, background.as_ref(), cluster);
+                let ms = serve_window(
+                    rep,
+                    splits,
+                    &stats,
+                    background.as_ref(),
+                    cluster,
+                    &cfg.coordinator.topology,
+                );
                 per_window.push(ms);
                 coord.advance(ms);
                 coord.observe_window(&observed, cluster);
@@ -290,7 +315,14 @@ pub fn run_online(
                 } else {
                     None
                 };
-                let ms = serve_window(&active.0, &active.1, &stats, background.as_ref(), cluster);
+                let ms = serve_window(
+                    &active.0,
+                    &active.1,
+                    &stats,
+                    background.as_ref(),
+                    cluster,
+                    &cfg.coordinator.topology,
+                );
                 per_window.push(ms);
                 if let Some(new_plan) = swap.advance(ms) {
                     active = new_plan;
@@ -301,7 +333,12 @@ pub fn run_online(
                     // smoothing, no gain or cost gate
                     let trace = trace_of(stats);
                     let (cand_rep, cand_splits) = Planner::default()
-                        .plan_replicated(&[&trace], cluster, &cfg.coordinator.replication)
+                        .plan_replicated_topology(
+                            &[&trace],
+                            cluster,
+                            &cfg.coordinator.topology,
+                            &cfg.coordinator.replication,
+                        )
                         .expect("one model always plans");
                     let migration = plan_migration(
                         &active.0,
@@ -314,7 +351,8 @@ pub fn run_online(
                         active = (cand_rep, cand_splits);
                         replans += 1;
                     } else {
-                        let mig_ms = migration.migration_ms(cluster);
+                        let mig_ms =
+                            migration.migration_ms_on(cluster, &cfg.coordinator.topology);
                         let began = swap.begin(cand_rep, cand_splits, mig_ms);
                         debug_assert!(began, "swap was checked idle above");
                         staging = Some(migration.traffic.clone());
@@ -337,13 +375,25 @@ pub fn run_online(
                 // this exact window before serving it
                 let trace = trace_of(stats.clone());
                 let (cand_rep, cand_splits) = Planner::default()
-                    .plan_replicated(&[&trace], cluster, &cfg.coordinator.replication)
+                    .plan_replicated_topology(
+                        &[&trace],
+                        cluster,
+                        &cfg.coordinator.topology,
+                        &cfg.coordinator.replication,
+                    )
                     .expect("one model always plans");
                 if cand_rep != active.0 {
                     replans += 1;
                 }
                 active = (cand_rep, cand_splits);
-                per_window.push(serve_window(&active.0, &active.1, &stats, None, cluster));
+                per_window.push(serve_window(
+                    &active.0,
+                    &active.1,
+                    &stats,
+                    None,
+                    cluster,
+                    &cfg.coordinator.topology,
+                ));
             }
             // the oracle's plan changes are free and instantaneous — it
             // never stages, so it never swaps

@@ -16,6 +16,7 @@
 //! | multi | beyond-paper | generalized M-model placement vs random |
 //! | replication | beyond-paper | replicated vs placed vs random under Zipf skew |
 //! | online | beyond-paper | drifting routing: static vs periodic vs coordinator vs oracle |
+//! | topology | beyond-paper | two-tier fabric: hierarchical vs flat Aurora vs SJF across oversubscription |
 
 mod ablation;
 mod fig11;
@@ -27,6 +28,7 @@ mod multi;
 mod online;
 mod replication;
 mod report;
+mod topology;
 mod workloads;
 
 pub use ablation::{ablation_schedulers, ablation_top2};
@@ -39,6 +41,7 @@ pub use multi::{multi_model_comparison, multi_workload, random_deployment};
 pub use online::online_comparison;
 pub use replication::{replication_comparison, skewed_workload};
 pub use report::{MissingColumn, Report};
+pub use topology::topology_comparison;
 pub use workloads::Workloads;
 
 use crate::config::EvalConfig;
@@ -75,6 +78,10 @@ pub fn run_figure(name: &str, cfg: &EvalConfig) -> Result<Vec<Report>, String> {
         // Beyond-paper extension: online serving under drifting routing —
         // static vs periodic vs coordinator vs oracle.
         "online" => vec![online_comparison(cfg, 1.2, 24, 8)],
+        // Beyond-paper extension: two-tier topologies — hierarchical
+        // two-phase scheduling + placement vs flat Aurora vs SJF across
+        // uplink oversubscription factors.
+        "topology" => vec![topology_comparison(cfg, &[1.0, 2.0, 4.0])],
         "all" => {
             let mut r = vec![
                 fig11a(cfg, &w),
@@ -92,11 +99,12 @@ pub fn run_figure(name: &str, cfg: &EvalConfig) -> Result<Vec<Report>, String> {
             r.push(multi_model_comparison(cfg, 3, cfg.n_experts * 2));
             r.push(replication_comparison(cfg, &[0.0, 0.6, 1.2]));
             r.push(online_comparison(cfg, 1.2, 24, 8));
+            r.push(topology_comparison(cfg, &[1.0, 2.0, 4.0]));
             r
         }
         other => {
             return Err(format!(
-                "unknown figure '{other}' (try 11a/11b/11c/11d/12/13/14/a1/a2/ablation/multi/replication/online/all)"
+                "unknown figure '{other}' (try 11a/11b/11c/11d/12/13/14/a1/a2/ablation/multi/replication/online/topology/all)"
             ))
         }
     };

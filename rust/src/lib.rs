@@ -36,7 +36,18 @@
 //!    ([`replication::optimize_splits`]) apportions each sender's load
 //!    across the copies; with no replicas the path is bit-for-bit the plain
 //!    placement pipeline.
-//! 6. **Online coordination** ([`coordinator`]) — the paper plans for one
+//! 6. **Hierarchical scheduling** ([`schedule::hierarchical_schedule`]) —
+//!    beyond the paper's big switch: on a two-tier leaf/spine fabric
+//!    ([`cluster::Topology::TwoTier`]) with oversubscribed uplinks, the flat
+//!    order loses contention-freedom at the uplinks. The two-phase schedule
+//!    runs Aurora within each group at port rate, slot-schedules the
+//!    residual cross-group traffic via a group-level BvN decomposition with
+//!    designated gateway senders, and stitches the phases with a pipelined
+//!    makespan estimate ([`schedule::comm_time_on`]).
+//!    [`planner::Planner::plan_topology`] places experts to keep token flow
+//!    inside the fast domain first (falling back bit-for-bit to the flat
+//!    planner on [`cluster::Topology::BigSwitch`]).
+//! 7. **Online coordination** ([`coordinator`]) — the paper plans for one
 //!    traffic matrix; production routing drifts. The [`coordinator::Coordinator`]
 //!    tracks the live distribution (EWMA + total-variation drift scoring),
 //!    replans on the live estimate only when the predicted inference-time
@@ -55,7 +66,9 @@
 //! figure of the paper plus the multi-model extension ([`eval`]).
 //!
 //! See `docs/architecture.md` for the layer map, the Scenario decision tree,
-//! and which code paths are exact versus heuristic.
+//! the "Hierarchical scheduling" section (two-tier topologies, the two-phase
+//! decomposition, and the uplink bounds), and which code paths are exact
+//! versus heuristic.
 
 pub mod assignment;
 pub mod cluster;
@@ -75,7 +88,7 @@ pub mod trace;
 pub mod traffic;
 pub mod util;
 
-pub use cluster::{Cluster, GpuSpec};
+pub use cluster::{Cluster, GpuSpec, Topology, TopologyError};
 pub use coordinator::{Coordinator, CoordinatorConfig};
 pub use placement::{Deployment, PlacementError};
 pub use planner::{DeploymentPlan, Planner, ReplicationConfig, Scenario};

@@ -1,17 +1,20 @@
 //! `aurora` — CLI for the Aurora MoE inference optimizer.
 //!
 //! Subcommands:
-//! * `eval --figure <11a|...|multi|replication|all>` — regenerate a paper
-//!   figure (or a beyond-paper extension) on synthetic traces.
+//! * `eval --figure <11a|...|multi|replication|online|topology|all>` —
+//!   regenerate a paper figure (or a beyond-paper extension) on synthetic
+//!   traces.
 //! * `plan --cluster <homo|hetero> --models <N> [--experts-per-gpu <K>]
 //!   [--replicas <R>] [--skew <ALPHA>]` — print a deployment plan as JSON.
 //!   N ≤ 2 with one expert per GPU uses the paper's exact paths; `--replicas`
 //!   ≥ 2 runs the replication pass (optionally on a Zipf(`--skew`) workload).
 //! * `simulate --cluster <homo|hetero> --models <N> [--experts-per-gpu <K>]
-//!   [--replicas <R>] [--skew <ALPHA>]` — per-layer inference times and
-//!   utilization for the planned deployment.
-//! * `bench [--out <file>] [--budget-ms <N>]` — time the planner/schedule/sim
-//!   hot paths on fixed seeds and write a JSON perf snapshot.
+//!   [--replicas <R>] [--skew <ALPHA>] [--groups <G> --oversub <F>]` —
+//!   per-layer inference times and utilization for the planned deployment;
+//!   `--groups`/`--oversub` plan and price it on a two-tier topology.
+//! * `bench [--out <file>] [--budget-ms <N>] [--check [--max-regress R]]` —
+//!   time the planner/schedule/sim hot paths on fixed seeds, append a JSON
+//!   perf snapshot, and optionally gate on regressions vs the last snapshot.
 //! * `trace --out <file>` — dump the generated traces to JSON.
 //! * `serve` — run the end-to-end serving demo on the AOT-compiled MoE model
 //!   (requires `make artifacts`).
@@ -57,20 +60,24 @@ fn usage() {
         "aurora — MoE inference optimization (paper reproduction)
 
 USAGE:
-  aurora eval     --figure <11a|11b|11c|11d|12|13|14|a1|a2|ablation|multi|replication|all> [--config f.json] [--json out.json]
-  aurora plan     --cluster <homo|hetero> --models <N> [--experts-per-gpu <K>] [--replicas <R>] [--skew <ALPHA>] [--config f.json]
-  aurora simulate --cluster <homo|hetero> --models <N> [--experts-per-gpu <K>] [--replicas <R>] [--skew <ALPHA>] [--policy aurora|sjf|ljf|pairwise|rcs]
-  aurora bench    [--out BENCH_planner.json] [--budget-ms N]
+  aurora eval     --figure <11a|11b|11c|11d|12|13|14|a1|a2|ablation|multi|replication|online|topology|all> [--config f.json] [--json out.json]
+  aurora plan     --cluster <homo|hetero> --models <N> [--experts-per-gpu <K>] [--replicas <R>] [--skew <ALPHA>] [--groups <G> --oversub <F>] [--config f.json]
+  aurora simulate --cluster <homo|hetero> --models <N> [--experts-per-gpu <K>] [--replicas <R>] [--skew <ALPHA>] [--groups <G> --oversub <F>] [--policy aurora|sjf|ljf|pairwise|rcs]
+  aurora bench    [--out BENCH_planner.json] [--budget-ms N] [--groups <G> --oversub <F>] [--check [--max-regress R]]
   aurora trace    --out <file.json> [--config f.json]
   aurora serve    [--artifacts DIR] [--requests N] [--batch N] [--policy aurora|rcs]
-  aurora serve-sim [--drift ALPHA] [--windows N] [--rotate-every N] [--strategy static|periodic|coordinator|oracle|all] [--noise] [--config f.json]
+  aurora serve-sim [--drift ALPHA] [--windows N] [--rotate-every N] [--strategy static|periodic|coordinator|oracle|all] [--noise] [--groups <G> --oversub <F>] [--config f.json]
 
   --models N           colocate N models (N >= 3 uses the generalized placement core)
   --experts-per-gpu K  give every model K*n_gpus experts (K >= 2 packs multiple experts per GPU)
   --replicas R         allow up to R copies of each expert (R >= 2 enables replication)
   --skew ALPHA         drive planning with a Zipf(ALPHA)-skewed workload (0 = uniform)
+  --groups G           two-tier topology with G even GPU groups (1 = big switch)
+  --oversub F          uplink oversubscription factor >= 1 (needs --groups >= 2)
   --drift ALPHA        serve-sim: Zipf skew of the rotating hot expert (0 = stationary uniform)
   --noise              serve-sim: sample each window multinomially (live-batch fluctuation)
+  --check              bench: fail when a hot path regresses past --max-regress (default 1.25x)
+                       vs the last snapshot in the history file
 "
     );
 }
@@ -181,6 +188,51 @@ fn parse_shape(opts: &Opts) -> Result<(usize, Option<usize>), String> {
     Ok((models, per_gpu))
 }
 
+/// Parse `--groups` / `--oversub` into a [`aurora::cluster::Topology`].
+/// `--groups 1` (the default) is the big switch; `--groups N ≥ 2` builds an
+/// even two-tier fabric with `--oversub` (default 1.0) uplink
+/// oversubscription.
+fn parse_topology(opts: &Opts, n_gpus: usize) -> Result<aurora::cluster::Topology, String> {
+    use aurora::cluster::Topology;
+    let groups: usize = opts
+        .get("groups")
+        .unwrap_or("1")
+        .parse()
+        .map_err(|_| "bad --groups")?;
+    let oversub: f64 = opts
+        .get("oversub")
+        .unwrap_or("1")
+        .parse()
+        .map_err(|_| "bad --oversub")?;
+    if groups == 0 {
+        return Err("--groups must be >= 1".into());
+    }
+    if groups == 1 {
+        if oversub != 1.0 {
+            return Err("--oversub needs --groups >= 2 (one group is a big switch)".into());
+        }
+        return Ok(Topology::BigSwitch);
+    }
+    Topology::even_two_tier(n_gpus, groups, oversub).map_err(|e| e.to_string())
+}
+
+/// JSON rendering of a two-tier topology (`None` for the big switch, which
+/// keeps the classic plan output byte-identical when no topology flags are
+/// given).
+fn topology_json(topo: &aurora::cluster::Topology) -> Option<aurora::util::Json> {
+    use aurora::cluster::Topology;
+    match topo {
+        Topology::BigSwitch => None,
+        Topology::TwoTier {
+            groups,
+            oversubscription,
+        } => Some(Json::obj(vec![
+            ("groups", Json::from(groups.len())),
+            ("oversubscription", Json::Num(*oversubscription)),
+        ])),
+    }
+}
+
 /// Parse `--replicas` / `--skew`. Replication engages at R ≥ 2; a positive
 /// skew swaps the LIMoE workload for a Zipf(α) one.
 fn parse_replication(opts: &Opts) -> Result<(usize, f64), String> {
@@ -229,13 +281,16 @@ fn generalized_workload(
 }
 
 fn cmd_plan(opts: &Opts) -> Result<(), String> {
+    use aurora::cluster::Topology;
     let cfg = opts.config()?;
     let cluster = cluster_for(opts, &cfg)?;
     let planner = Planner::default();
     let (models, per_gpu) = parse_shape(opts)?;
     let (replicas, skew) = parse_replication(opts)?;
+    let topo = parse_topology(opts, cluster.len())?;
+    let big_switch = matches!(topo, Topology::BigSwitch);
     // The paper's shapes print the classic two-model plan JSON for parity.
-    if per_gpu.is_none() && models <= 2 && replicas == 1 && skew == 0.0 {
+    if per_gpu.is_none() && models <= 2 && replicas == 1 && skew == 0.0 && big_switch {
         let w = Workloads::generate(&cfg);
         let plan = match models {
             1 => planner.plan_exclusive(&w.b16_coco, &cluster),
@@ -247,25 +302,34 @@ fn cmd_plan(opts: &Opts) -> Result<(), String> {
     let n_experts = per_gpu.unwrap_or(1) * cluster.len();
     let traces = generalized_workload(&cfg, models, n_experts, skew);
     let refs: Vec<&ModelTrace> = traces.iter().collect();
-    if replicas >= 2 {
+    let plan_json = if replicas >= 2 {
         let rep_cfg = ReplicationConfig {
             max_replicas: replicas,
             ..ReplicationConfig::default()
         };
         let (rep, _) = planner
-            .plan_replicated(&refs, &cluster, &rep_cfg)
+            .plan_replicated_topology(&refs, &cluster, &topo, &rep_cfg)
             .map_err(|e| e.to_string())?;
-        println!("{}", rep.to_json().to_string_compact());
+        rep.to_json()
     } else {
         let dep = planner
-            .plan_multi(&refs, &cluster)
+            .plan_topology(&refs, &cluster, &topo)
             .map_err(|e| e.to_string())?;
-        println!("{}", dep.to_json().to_string_compact());
+        dep.to_json()
+    };
+    match topology_json(&topo) {
+        // no topology flags: the classic plan JSON, byte for byte
+        None => println!("{}", plan_json.to_string_compact()),
+        Some(t) => {
+            let wrapped = Json::obj(vec![("topology", t), ("plan", plan_json)]);
+            println!("{}", wrapped.to_string_compact());
+        }
     }
     Ok(())
 }
 
 fn cmd_simulate(opts: &Opts) -> Result<(), String> {
+    use aurora::cluster::Topology;
     let cfg = opts.config()?;
     let cluster = cluster_for(opts, &cfg)?;
     let policy = opts.policy()?;
@@ -275,6 +339,7 @@ fn cmd_simulate(opts: &Opts) -> Result<(), String> {
     };
     let (models, per_gpu) = parse_shape(opts)?;
     let (replicas, skew) = parse_replication(opts)?;
+    let topo = parse_topology(opts, cluster.len())?;
     println!(
         "scenario: {} model(s), {} cluster, policy {}",
         models,
@@ -285,6 +350,17 @@ fn cmd_simulate(opts: &Opts) -> Result<(), String> {
         },
         policy.name()
     );
+    if let Topology::TwoTier {
+        groups,
+        oversubscription,
+    } = &topo
+    {
+        println!(
+            "topology: two-tier, {} groups, {:.1}x oversubscribed uplinks",
+            groups.len(),
+            oversubscription
+        );
+    }
     if replicas >= 2 || skew > 0.0 {
         // Replication / skewed-workload path: plan with replicas allowed and
         // simulate with the water-filled token splits applied.
@@ -296,7 +372,7 @@ fn cmd_simulate(opts: &Opts) -> Result<(), String> {
             ..ReplicationConfig::default()
         };
         let (rep, splits) = planner
-            .plan_replicated(&refs, &cluster, &rep_cfg)
+            .plan_replicated_topology(&refs, &cluster, &topo, &rep_cfg)
             .map_err(|e| e.to_string())?;
         println!(
             "deployment: {} models x {} experts, skew {:.2}, {} added replica(s), max slots {}",
@@ -306,7 +382,8 @@ fn cmd_simulate(opts: &Opts) -> Result<(), String> {
             rep.added_replicas(),
             rep.slots_per_gpu().into_iter().max().unwrap_or(0)
         );
-        for (k, res) in rep.simulate(&refs, &cluster, &splits).iter().enumerate() {
+        let sims = rep.simulate_topology(&refs, &cluster, &topo, &splits);
+        for (k, res) in sims.iter().enumerate() {
             println!(
                 "layer {}: inference {:.3} ms, util {:.1}%, agg comm {:.3} ms",
                 k + 1,
@@ -317,8 +394,8 @@ fn cmd_simulate(opts: &Opts) -> Result<(), String> {
         }
         return Ok(());
     }
-    match (models, per_gpu) {
-        (1, None) => {
+    match (models, per_gpu, &topo) {
+        (1, None, Topology::BigSwitch) => {
             let w = Workloads::generate(&cfg);
             let plan = planner.plan_exclusive(&w.b16_coco, &cluster);
             for (k, layer) in plan.place_a(&w.b16_coco).iter().enumerate() {
@@ -332,7 +409,7 @@ fn cmd_simulate(opts: &Opts) -> Result<(), String> {
                 );
             }
         }
-        (2, None) => {
+        (2, None, Topology::BigSwitch) => {
             let w = Workloads::generate(&cfg);
             let plan = planner.plan_colocated(&w.b16_coco, &w.b32_coco, &cluster);
             let pa = plan.place_a(&w.b16_coco);
@@ -349,12 +426,14 @@ fn cmd_simulate(opts: &Opts) -> Result<(), String> {
             }
         }
         _ => {
-            // Generalized path: N models, K experts per GPU slot.
+            // Generalized path: N models, K experts per GPU slot, any
+            // topology (plan_topology/simulate_topology are bit-for-bit the
+            // flat pipeline on the big switch).
             let k = per_gpu.unwrap_or(1);
             let traces = multi_workload(&cfg, models, k * cluster.len());
             let refs: Vec<&ModelTrace> = traces.iter().collect();
             let dep = planner
-                .plan_multi(&refs, &cluster)
+                .plan_topology(&refs, &cluster, &topo)
                 .map_err(|e| e.to_string())?;
             println!(
                 "deployment: {} models x {} experts ({} per GPU slot), max group {}",
@@ -363,7 +442,7 @@ fn cmd_simulate(opts: &Opts) -> Result<(), String> {
                 k,
                 dep.max_group_size()
             );
-            for (k, res) in dep.simulate(&refs, &cluster).iter().enumerate() {
+            for (k, res) in dep.simulate_topology(&refs, &cluster, &topo).iter().enumerate() {
                 println!(
                     "layer {}: inference {:.3} ms, util {:.1}%, agg comm {:.3} ms",
                     k + 1,
@@ -377,10 +456,12 @@ fn cmd_simulate(opts: &Opts) -> Result<(), String> {
     Ok(())
 }
 
-/// Time the planner / schedule / sim hot paths on fixed seeds and write a
-/// JSON perf snapshot (`BENCH_planner.json` by default) — the artifact CI
-/// archives to build a perf trajectory over time. Non-gating: numbers are
-/// recorded, not asserted.
+/// Time the planner / schedule / sim hot paths on fixed seeds and append a
+/// JSON perf snapshot to the history file (`BENCH_planner.json` by default)
+/// — the artifact CI archives to build a perf trajectory over time. With
+/// `--check`, additionally fail when any case's median regressed past
+/// `--max-regress` (default 1.25x) vs the last snapshot already in the file
+/// — the committed baseline, in CI.
 fn cmd_bench(opts: &Opts) -> Result<(), String> {
     use aurora::cluster::Cluster;
     use aurora::schedule::{aurora_schedule, comm_time};
@@ -437,6 +518,41 @@ fn cmd_bench(opts: &Opts) -> Result<(), String> {
         dep.simulate_layer(&layers, &cluster).inference_ms
     });
 
+    // Hierarchical scheduling hot paths on a 16-GPU two-tier fabric.
+    // `--groups/--oversub` reshape it; non-default shapes get distinct case
+    // names, so they never gate against the default history.
+    let groups: usize = opts
+        .get("groups")
+        .unwrap_or("4")
+        .parse()
+        .map_err(|_| "bad --groups")?;
+    let oversub: f64 = opts
+        .get("oversub")
+        .unwrap_or("4")
+        .parse()
+        .map_err(|_| "bad --oversub")?;
+    let topo = aurora::cluster::Topology::even_two_tier(16, groups, oversub)
+        .map_err(|e| e.to_string())?;
+    let cluster16 = Cluster::homogeneous(16, 800.0);
+    let d16 = &skewed.layers[0].traffic;
+    b.run(
+        &format!("schedule: hierarchical two-phase 16x16 {groups}g x{oversub}"),
+        || {
+            aurora::schedule::hierarchical_schedule(d16, &cluster16, &topo)
+                .unwrap()
+                .pipelined_ms
+        },
+    );
+    b.run(
+        &format!("planner: plan_topology zipf(1.2) 16 on 16 GPUs {groups}g x{oversub}"),
+        || {
+            planner
+                .plan_topology(&skewed_refs, &cluster16, &topo)
+                .unwrap()
+                .max_group_size()
+        },
+    );
+
     let benchmarks: Vec<Json> = b
         .samples()
         .iter()
@@ -480,6 +596,49 @@ fn cmd_bench(opts: &Opts) -> Result<(), String> {
             }
         }
     };
+    // Gate BEFORE appending: a failed run must not become the next
+    // baseline, or re-running the check would silently pass against the
+    // regressed numbers it just rejected.
+    if opts.get("check").is_some() {
+        use aurora::util::bench::compare_entries;
+        let max_regress: f64 = opts
+            .get("max-regress")
+            .unwrap_or("1.25")
+            .parse()
+            .map_err(|_| "bad --max-regress")?;
+        if max_regress < 1.0 {
+            return Err("--max-regress must be >= 1".into());
+        }
+        match history.last() {
+            None => println!("bench check: no prior snapshot; nothing to gate against"),
+            Some(prev) => {
+                let regressions = compare_entries(prev, &entry, max_regress);
+                if regressions.is_empty() {
+                    println!(
+                        "bench check: all hot paths within {max_regress}x of the last snapshot"
+                    );
+                } else {
+                    for r in &regressions {
+                        eprintln!("regression: {}", r.report());
+                    }
+                    // Keep the measured numbers recoverable even though the
+                    // baseline is left unchanged — CI uploads this file
+                    // alongside the history, so a legitimate slowdown can be
+                    // accepted by committing it as the new baseline.
+                    let rejected = format!("{out}.rejected.json");
+                    let doc = Json::obj(vec![("rejected", entry.clone())]);
+                    std::fs::write(&rejected, doc.to_string_compact())
+                        .map_err(|e| format!("{rejected}: {e}"))?;
+                    return Err(format!(
+                        "{} hot-path timing(s) regressed past {max_regress}x vs the last \
+                         snapshot in {out}; baseline left unchanged, measured snapshot \
+                         written to {rejected}",
+                        regressions.len()
+                    ));
+                }
+            }
+        }
+    }
     history.push(entry);
     let n_snapshots = history.len();
     let doc = Json::obj(vec![("history", Json::Arr(history))]);
@@ -522,7 +681,10 @@ fn cmd_serve_sim(opts: &Opts) -> Result<(), String> {
     }
     let sampled = opts.get("noise").is_some_and(|v| v != "false");
     let cluster: Cluster = cfg.homogeneous_cluster();
-    let ocfg = OnlineConfig::from_eval(&cfg, alpha, windows, rotate_every, sampled);
+    let mut ocfg = OnlineConfig::from_eval(&cfg, alpha, windows, rotate_every, sampled);
+    // Two-tier serving: candidate plans localize, and migrations are charged
+    // for the uplinks their weight transfers cross.
+    ocfg.coordinator.topology = parse_topology(opts, cluster.len())?;
 
     let strategies: Vec<OnlineStrategy> = match opts.get("strategy").unwrap_or("all") {
         "static" => vec![OnlineStrategy::Static],

@@ -21,9 +21,9 @@
 //! [`Scenario::MultiColocated`] leaf — also lives here, so an N > 2 request
 //! is a planned path rather than a crash.
 
-use crate::cluster::Cluster;
+use crate::cluster::{Cluster, Topology};
 use crate::schedule::SchedulePolicy;
-use crate::sim::{simulate_group, MoeLayerStats, SimResult};
+use crate::sim::{simulate_group, simulate_group_topology, MoeLayerStats, SimResult};
 use crate::trace::ModelTrace;
 use crate::traffic::TrafficMatrix;
 use crate::util::Json;
@@ -50,6 +50,12 @@ pub enum PlacementError {
         /// Cluster size.
         n_gpus: usize,
     },
+    /// A network topology's grouping does not fit the cluster it was planned
+    /// against (overlapping, non-covering, or out-of-range groups).
+    InvalidTopology {
+        /// The underlying [`crate::cluster::TopologyError`], rendered.
+        message: String,
+    },
 }
 
 impl fmt::Display for PlacementError {
@@ -68,6 +74,9 @@ impl fmt::Display for PlacementError {
                 f,
                 "model {model} expert {expert} placed on GPU {gpu}, but the cluster has {n_gpus}"
             ),
+            PlacementError::InvalidTopology { message } => {
+                write!(f, "topology does not fit the cluster: {message}")
+            }
         }
     }
 }
@@ -314,6 +323,62 @@ impl Deployment {
     /// Total simulated inference time across all layers (ms).
     pub fn total_inference_ms(&self, traces: &[&ModelTrace], cluster: &Cluster) -> f64 {
         self.simulate(traces, cluster)
+            .iter()
+            .map(|r| r.inference_ms)
+            .sum()
+    }
+
+    /// [`Deployment::simulate_layer`] on a network topology: collectives are
+    /// priced by [`crate::schedule::comm_time_on`]. Big switch ⇒ identical
+    /// to [`Deployment::simulate_layer`]. Panics when a two-tier grouping
+    /// does not fit `cluster` (the planner surface,
+    /// [`crate::planner::Planner::plan_topology`], validates that pairing
+    /// and returns a typed error instead).
+    pub fn simulate_layer_topology(
+        &self,
+        layers: &[&MoeLayerStats],
+        cluster: &Cluster,
+        topo: &Topology,
+    ) -> SimResult {
+        assert_eq!(layers.len(), self.n_models());
+        assert_eq!(cluster.len(), self.n_gpus);
+        let projected: Vec<MoeLayerStats> = layers
+            .iter()
+            .enumerate()
+            .map(|(m, l)| self.project_layer(m, l))
+            .collect();
+        let refs: Vec<&MoeLayerStats> = projected.iter().collect();
+        simulate_group_topology(&refs, cluster, topo, self.policy).0
+    }
+
+    /// [`Deployment::simulate`] on a network topology, layer by layer.
+    pub fn simulate_topology(
+        &self,
+        traces: &[&ModelTrace],
+        cluster: &Cluster,
+        topo: &Topology,
+    ) -> Vec<SimResult> {
+        assert_eq!(traces.len(), self.n_models());
+        let n_layers = traces[0].layers.len();
+        for t in traces {
+            assert_eq!(t.layers.len(), n_layers, "traces must have equal layer counts");
+        }
+        (0..n_layers)
+            .map(|k| {
+                let layers: Vec<&MoeLayerStats> = traces.iter().map(|t| &t.layers[k]).collect();
+                self.simulate_layer_topology(&layers, cluster, topo)
+            })
+            .collect()
+    }
+
+    /// Total simulated inference time across all layers on a topology (ms).
+    pub fn total_inference_ms_topology(
+        &self,
+        traces: &[&ModelTrace],
+        cluster: &Cluster,
+        topo: &Topology,
+    ) -> f64 {
+        self.simulate_topology(traces, cluster, topo)
             .iter()
             .map(|r| r.inference_ms)
             .sum()

@@ -20,7 +20,7 @@
 //!   completion estimate of §7.2.
 
 use crate::assignment::sorted_assignment;
-use crate::cluster::Cluster;
+use crate::cluster::{uplink_bound, Cluster, Topology};
 use crate::colocation::hetero::decoupled_solution;
 use crate::colocation::{case2_pairing, send_recv_volumes};
 use crate::placement::{estimate_one_gpu, estimate_per_gpu, Deployment};
@@ -290,7 +290,42 @@ impl Planner {
         };
 
         let mut dep = Deployment::new(n_gpus, assignments, self.policy, scenario)?;
-        refine_deployment(&mut dep, &layers, cluster);
+        refine_deployment(&mut dep, &layers, cluster, &Topology::BigSwitch);
+        Ok(dep)
+    }
+
+    /// Topology-aware placement: [`Planner::plan_multi`] followed by a
+    /// **group-local refinement pass** that swaps/moves experts to minimize
+    /// the projected cross-uplink token drain, then hands off to the
+    /// existing swap/move refinement with an uplink guard (a port-balancing
+    /// move is rejected if it would push traffic back across a saturated
+    /// uplink).
+    ///
+    /// **Fallback guarantee:** on [`Topology::BigSwitch`] this *is*
+    /// [`Planner::plan_multi`], bit for bit — both refinement passes engage
+    /// only for [`Topology::TwoTier`].
+    pub fn plan_topology(
+        &self,
+        traces: &[&ModelTrace],
+        cluster: &Cluster,
+        topo: &Topology,
+    ) -> Result<Deployment, PlacementError> {
+        // Typed validation up front: a grouping that does not cover this
+        // cluster is a caller error surfaced here, not a panic several
+        // frames deep in the refinement or the scheduler.
+        let _ = topo
+            .owners(cluster.len())
+            .map_err(|e| PlacementError::InvalidTopology {
+                message: e.to_string(),
+            })?;
+        let mut dep = self.plan_multi(traces, cluster)?;
+        if matches!(topo, Topology::BigSwitch) {
+            return Ok(dep);
+        }
+        let totals = aggregate_totals(traces);
+        let layers: Vec<&MoeLayerStats> = totals.iter().collect();
+        refine_uplink(&mut dep, &layers, cluster, topo);
+        refine_deployment(&mut dep, &layers, cluster, topo);
         Ok(dep)
     }
 
@@ -319,7 +354,35 @@ impl Planner {
         cluster: &Cluster,
         cfg: &ReplicationConfig,
     ) -> Result<(ReplicatedDeployment, SplitPlan), PlacementError> {
-        let base = self.plan_multi(traces, cluster)?;
+        self.plan_replicated_on(traces, cluster, &Topology::BigSwitch, cfg)
+    }
+
+    /// Topology-aware [`Planner::plan_replicated`]: the base placement comes
+    /// from [`Planner::plan_topology`], and every replication decision is
+    /// judged on the split-aware completion estimate **joined with the
+    /// cross-uplink drain** of the split-projected aggregate traffic —
+    /// replicating a hot expert into the groups that route to it is how a
+    /// two-tier fabric escapes its down-link bound. On
+    /// [`Topology::BigSwitch`] this is [`Planner::plan_replicated`], bit for
+    /// bit.
+    pub fn plan_replicated_topology(
+        &self,
+        traces: &[&ModelTrace],
+        cluster: &Cluster,
+        topo: &Topology,
+        cfg: &ReplicationConfig,
+    ) -> Result<(ReplicatedDeployment, SplitPlan), PlacementError> {
+        self.plan_replicated_on(traces, cluster, topo, cfg)
+    }
+
+    fn plan_replicated_on(
+        &self,
+        traces: &[&ModelTrace],
+        cluster: &Cluster,
+        topo: &Topology,
+        cfg: &ReplicationConfig,
+    ) -> Result<(ReplicatedDeployment, SplitPlan), PlacementError> {
+        let base = self.plan_topology(traces, cluster, topo)?;
         let mut rep = ReplicatedDeployment::from_deployment(base);
         if cfg.max_replicas <= 1 {
             let splits = SplitPlan::trivial(&rep);
@@ -333,7 +396,11 @@ impl Planner {
         let eval = |rep: &ReplicatedDeployment| -> (f64, Vec<f64>) {
             let plan = optimize_splits(rep, &layers, cluster);
             let costs = estimate_per_gpu_replicated(rep, &layers, cluster, &plan);
-            let mx = costs.iter().cloned().fold(0.0, f64::max);
+            let mut mx = costs.iter().cloned().fold(0.0, f64::max);
+            if !matches!(topo, Topology::BigSwitch) {
+                let agg = rep.aggregated_traffic_split(&layers, &plan);
+                mx = mx.max(uplink_bound(&agg, cluster, topo));
+            }
             (mx, costs)
         };
 
@@ -387,7 +454,23 @@ impl Planner {
         }
 
         if rep.is_replicated() {
-            refine_replicated(&mut rep, &layers, cluster, cfg.slots_per_gpu);
+            match topo {
+                Topology::BigSwitch => {
+                    refine_replicated(&mut rep, &layers, cluster, cfg.slots_per_gpu)
+                }
+                Topology::TwoTier { .. } => {
+                    // The split-aware refinement optimizes the port estimate
+                    // only; on a two-tier fabric keep its result just when it
+                    // does not worsen the combined (port ∨ uplink) objective.
+                    let before = rep.clone();
+                    let (mx_before, _) = eval(&rep);
+                    refine_replicated(&mut rep, &layers, cluster, cfg.slots_per_gpu);
+                    let (mx_after, _) = eval(&rep);
+                    if mx_after > mx_before + 1e-12 {
+                        rep = before;
+                    }
+                }
+            }
         }
         let splits = optimize_splits(&rep, &layers, cluster);
         Ok((rep, splits))
@@ -493,6 +576,186 @@ fn greedy_lpt_assignments(traces: &[&ModelTrace], cluster: &Cluster) -> Vec<Vec<
     assignments
 }
 
+/// Score an (already-mutated) deployment given only GPUs `a`/`b` changed:
+/// fresh endpoint costs ([`estimate_one_gpu`]) joined with the cached rest.
+fn endpoint_costs(
+    dep: &Deployment,
+    layers: &[&MoeLayerStats],
+    cluster: &Cluster,
+    expert_loads: &[Vec<u64>],
+    costs: &[f64],
+    a: usize,
+    b: usize,
+) -> (f64, f64, f64) {
+    let ca = estimate_one_gpu(dep, layers, cluster, expert_loads, a);
+    let cb = estimate_one_gpu(dep, layers, cluster, expert_loads, b);
+    let mut mx = ca.max(cb);
+    for (g, &c) in costs.iter().enumerate() {
+        if g != a && g != b {
+            mx = mx.max(c);
+        }
+    }
+    (mx, ca, cb)
+}
+
+/// Per-group cross-uplink `(up, down)` token totals of a deployment,
+/// computed directly from the expert-level matrices (no projection
+/// materialized): a flow crosses when its endpoint experts sit on GPUs of
+/// different groups.
+fn cross_uplink_updown(
+    dep: &Deployment,
+    layers: &[&MoeLayerStats],
+    owner: &[usize],
+    n_groups: usize,
+) -> (Vec<u64>, Vec<u64>) {
+    let mut up = vec![0u64; n_groups];
+    let mut down = vec![0u64; n_groups];
+    for (m, layer) in layers.iter().enumerate() {
+        let a = &dep.assignments[m];
+        for (e1, &gpu1) in a.iter().enumerate() {
+            let g1 = owner[gpu1];
+            for (e2, &gpu2) in a.iter().enumerate() {
+                if e1 == e2 {
+                    continue;
+                }
+                let g2 = owner[gpu2];
+                if g1 != g2 {
+                    let t = layer.traffic.get(e1, e2);
+                    if t > 0 {
+                        up[g1] += t;
+                        down[g2] += t;
+                    }
+                }
+            }
+        }
+    }
+    (up, down)
+}
+
+/// Cross-uplink drain time (ms) of a deployment: the slowest group uplink's
+/// worst-direction token volume over its rate — exactly
+/// [`crate::cluster::uplink_bound`] of the projected aggregate traffic.
+fn uplink_drain_ms(
+    dep: &Deployment,
+    layers: &[&MoeLayerStats],
+    owner: &[usize],
+    rates: &[f64],
+) -> f64 {
+    let (up, down) = cross_uplink_updown(dep, layers, owner, rates.len());
+    up.iter()
+        .zip(&down)
+        .zip(rates)
+        .map(|((&u, &d), &r)| u.max(d) as f64 / r)
+        .fold(0.0, f64::max)
+}
+
+/// The group-local pass of [`Planner::plan_topology`]: single-expert moves
+/// and pairwise swaps accepted when they shrink the **combined** objective
+/// `max(per-GPU completion estimate, cross-uplink drain)` — the fluid form
+/// of the hierarchical schedule's pipelined makespan — with a strictly
+/// smaller drain as the tiebreak at an unchanged combined value (localizing
+/// below the port ceiling still shortens the uplink phase). Minimizing the
+/// drain alone would happily collapse every expert into one group (zero
+/// uplink traffic, hopeless ports); the combined form cannot. Bounded
+/// rounds keep it polynomial.
+fn refine_uplink(
+    dep: &mut Deployment,
+    layers: &[&MoeLayerStats],
+    cluster: &Cluster,
+    topo: &Topology,
+) {
+    let Some(owner) = topo.group_of(dep.n_gpus) else {
+        return;
+    };
+    let rates = topo.uplink_rates(cluster);
+    let n = dep.n_gpus;
+    let units: Vec<(usize, usize)> = (0..dep.n_models())
+        .flat_map(|m| (0..dep.n_experts(m)).map(move |e| (m, e)))
+        .collect();
+    let expert_loads: Vec<Vec<u64>> = layers.iter().map(|l| l.expert_loads()).collect();
+
+    let mut costs = estimate_per_gpu(dep, layers, cluster);
+    let mut best_port = costs.iter().cloned().fold(0.0, f64::max);
+    let mut best_drain = uplink_drain_ms(dep, layers, &owner, &rates);
+    let accepts = |mx: f64, nd: f64, best_port: f64, best_drain: f64| -> bool {
+        let cand = mx.max(nd);
+        let best = best_port.max(best_drain);
+        cand + 1e-12 < best || (cand <= best + 1e-9 && nd + 1e-9 < best_drain)
+    };
+
+    for _ in 0..8 {
+        let mut improved = false;
+        for &(m, e) in &units {
+            let cur = dep.assignments[m][e];
+            for g in 0..n {
+                if g == cur {
+                    continue;
+                }
+                dep.assignments[m][e] = g;
+                let (mx, c_cur, c_g) =
+                    endpoint_costs(dep, layers, cluster, &expert_loads, &costs, cur, g);
+                // Both accept clauses need the candidate's combined value at
+                // or below the current best, so a port max already past it
+                // makes the O(E²) drain recompute pointless; and a move
+                // inside one group cannot change what crosses an uplink.
+                if mx > best_port.max(best_drain) + 1e-9 {
+                    dep.assignments[m][e] = cur;
+                    continue;
+                }
+                let nd = if owner[cur] == owner[g] {
+                    best_drain
+                } else {
+                    uplink_drain_ms(dep, layers, &owner, &rates)
+                };
+                if accepts(mx, nd, best_port, best_drain) {
+                    costs[cur] = c_cur;
+                    costs[g] = c_g;
+                    best_port = mx;
+                    best_drain = nd;
+                    improved = true;
+                    break; // unit committed; on to the next one
+                }
+                dep.assignments[m][e] = cur;
+            }
+        }
+        for i in 0..units.len() {
+            for j in (i + 1)..units.len() {
+                let (m1, e1) = units[i];
+                let (m2, e2) = units[j];
+                let g1 = dep.assignments[m1][e1];
+                let g2 = dep.assignments[m2][e2];
+                if g1 == g2 || owner[g1] == owner[g2] {
+                    // a same-group swap never changes what crosses an uplink
+                    continue;
+                }
+                dep.assignments[m1][e1] = g2;
+                dep.assignments[m2][e2] = g1;
+                let (mx, c1, c2) =
+                    endpoint_costs(dep, layers, cluster, &expert_loads, &costs, g1, g2);
+                if mx > best_port.max(best_drain) + 1e-9 {
+                    dep.assignments[m1][e1] = g1;
+                    dep.assignments[m2][e2] = g2;
+                    continue;
+                }
+                let nd = uplink_drain_ms(dep, layers, &owner, &rates);
+                if accepts(mx, nd, best_port, best_drain) {
+                    costs[g1] = c1;
+                    costs[g2] = c2;
+                    best_port = mx;
+                    best_drain = nd;
+                    improved = true;
+                } else {
+                    dep.assignments[m1][e1] = g1;
+                    dep.assignments[m2][e2] = g2;
+                }
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+}
+
 /// Local-search refinement: single-expert moves and cross-GPU pairwise swaps
 /// accepted whenever they shrink the max per-GPU completion estimate.
 /// Bounded rounds keep planning polynomial (§7.2 spirit: decouple, then
@@ -504,7 +767,18 @@ fn greedy_lpt_assignments(traces: &[&ModelTrace], cluster: &Cluster) -> Vec<Vec<
 /// skipped, and (b) each candidate is scored by recomputing just its two
 /// endpoint costs ([`estimate_one_gpu`]) against a cached per-GPU cost
 /// vector instead of re-projecting every model's full traffic matrix.
-fn refine_deployment(dep: &mut Deployment, layers: &[&MoeLayerStats], cluster: &Cluster) {
+///
+/// On a [`Topology::TwoTier`] fabric the search additionally **guards the
+/// uplinks**: a port-balancing candidate that would increase the projected
+/// cross-uplink drain is rejected, so this pass never undoes
+/// [`refine_uplink`]'s localization. With [`Topology::BigSwitch`] the guard
+/// is inert and the behavior is the historical one, bit for bit.
+fn refine_deployment(
+    dep: &mut Deployment,
+    layers: &[&MoeLayerStats],
+    cluster: &Cluster,
+    topo: &Topology,
+) {
     let n = dep.n_gpus;
     let units: Vec<(usize, usize)> = (0..dep.n_models())
         .flat_map(|m| (0..dep.n_experts(m)).map(move |e| (m, e)))
@@ -514,20 +788,23 @@ fn refine_deployment(dep: &mut Deployment, layers: &[&MoeLayerStats], cluster: &
     let mut costs = estimate_per_gpu(dep, layers, cluster);
     let mut best = costs.iter().cloned().fold(0.0, f64::max);
 
-    // Score the (already-mutated) deployment given only GPUs `a`/`b`
-    // changed: fresh endpoint costs + cached rest.
-    let eval_endpoints =
-        |dep: &Deployment, costs: &[f64], a: usize, b: usize| -> (f64, f64, f64) {
-            let ca = estimate_one_gpu(dep, layers, cluster, &expert_loads, a);
-            let cb = estimate_one_gpu(dep, layers, cluster, &expert_loads, b);
-            let mut mx = ca.max(cb);
-            for (g, &c) in costs.iter().enumerate() {
-                if g != a && g != b {
-                    mx = mx.max(c);
-                }
-            }
-            (mx, ca, cb)
-        };
+    let owner = topo.group_of(n);
+    let rates = topo.uplink_rates(cluster);
+    // Drain of the (already-mutated) deployment given only GPUs `a`/`b`
+    // changed — `cur_drain` is reused when both sit in one group, since a
+    // group-internal rearrangement cannot change what crosses an uplink.
+    let drain_after = |dep: &Deployment, a: usize, b: usize, cur_drain: f64| -> f64 {
+        match &owner {
+            None => 0.0,
+            Some(owner) if owner[a] == owner[b] => cur_drain,
+            Some(owner) => uplink_drain_ms(dep, layers, owner, &rates),
+        }
+    };
+    let mut cur_drain = match &owner {
+        None => 0.0,
+        Some(owner) => uplink_drain_ms(dep, layers, owner, &rates),
+    };
+
     let is_hot = |costs: &[f64], best: f64, g: usize| costs[g] >= best - 1e-9;
 
     for _ in 0..8 {
@@ -539,13 +816,18 @@ fn refine_deployment(dep: &mut Deployment, layers: &[&MoeLayerStats], cluster: &
                     continue;
                 }
                 dep.assignments[m][e] = g;
-                let (mx, c_cur, c_g) = eval_endpoints(dep, &costs, cur, g);
+                let (mx, c_cur, c_g) =
+                    endpoint_costs(dep, layers, cluster, &expert_loads, &costs, cur, g);
                 if mx + 1e-12 < best {
-                    costs[cur] = c_cur;
-                    costs[g] = c_g;
-                    best = mx;
-                    improved = true;
-                    break; // unit committed; on to the next one
+                    let nd = drain_after(dep, cur, g, cur_drain);
+                    if nd <= cur_drain + 1e-9 {
+                        costs[cur] = c_cur;
+                        costs[g] = c_g;
+                        best = mx;
+                        cur_drain = cur_drain.min(nd);
+                        improved = true;
+                        break; // unit committed; on to the next one
+                    }
                 }
                 dep.assignments[m][e] = cur;
             }
@@ -561,8 +843,18 @@ fn refine_deployment(dep: &mut Deployment, layers: &[&MoeLayerStats], cluster: &
                 }
                 dep.assignments[m1][e1] = g2;
                 dep.assignments[m2][e2] = g1;
-                let (mx, c1, c2) = eval_endpoints(dep, &costs, g1, g2);
-                if mx + 1e-12 < best {
+                let (mx, c1, c2) =
+                    endpoint_costs(dep, layers, cluster, &expert_loads, &costs, g1, g2);
+                let accept = mx + 1e-12 < best && {
+                    let nd = drain_after(dep, g1, g2, cur_drain);
+                    if nd <= cur_drain + 1e-9 {
+                        cur_drain = cur_drain.min(nd);
+                        true
+                    } else {
+                        false
+                    }
+                };
+                if accept {
                     costs[g1] = c1;
                     costs[g2] = c2;
                     best = mx;
@@ -909,6 +1201,133 @@ mod tests {
         for e in 0..16 {
             assert!(rep.replica_count(0, e) <= 8);
         }
+    }
+
+    #[test]
+    fn plan_topology_big_switch_is_bit_for_bit() {
+        let (a, b) = traces();
+        let c = limoe_trace(LimoeVariant::B16, Dataset::Imagenet, 16, 4, 64, 9);
+        for cluster in [
+            Cluster::homogeneous(8, 10.0),
+            Cluster::paper_heterogeneous(8, 10.0),
+        ] {
+            let planner = Planner::default();
+            let flat = planner.plan_multi(&[&a, &b], &cluster).unwrap();
+            let topo = planner
+                .plan_topology(&[&a, &b], &cluster, &Topology::BigSwitch)
+                .unwrap();
+            assert_eq!(flat, topo, "BigSwitch fallback must be bit-for-bit");
+            // generalized shape too (16 experts on 8 GPUs)
+            let flat = planner.plan_multi(&[&c], &cluster).unwrap();
+            let topo = planner
+                .plan_topology(&[&c], &cluster, &Topology::BigSwitch)
+                .unwrap();
+            assert_eq!(flat, topo);
+        }
+    }
+
+    #[test]
+    fn plan_replicated_topology_big_switch_is_bit_for_bit() {
+        let t = zipf_trace(16, 2, 1.2, 41);
+        let cluster = Cluster::homogeneous(8, 800.0);
+        let planner = Planner::default();
+        let cfg = ReplicationConfig::default();
+        let (rep_a, splits_a) = planner.plan_replicated(&[&t], &cluster, &cfg).unwrap();
+        let (rep_b, splits_b) = planner
+            .plan_replicated_topology(&[&t], &cluster, &Topology::BigSwitch, &cfg)
+            .unwrap();
+        assert_eq!(rep_a, rep_b);
+        assert_eq!(splits_a, splits_b);
+    }
+
+    #[test]
+    fn plan_topology_localizes_chatty_pairs() {
+        // Heavy 0↔2 and 1↔3 flows; identity placement on contiguous groups
+        // {0,1} / {2,3} sends all of it across the uplinks. The group-local
+        // pass must colocate each chatty pair inside one group.
+        let mut d = crate::traffic::TrafficMatrix::zeros(4);
+        for (i, j) in [(0, 2), (2, 0), (1, 3), (3, 1)] {
+            d.set(i, j, 100);
+        }
+        for (i, j) in [(0, 1), (1, 0), (2, 3), (3, 2), (0, 3), (3, 0), (1, 2), (2, 1)] {
+            d.add(i, j, 1);
+        }
+        let trace = ModelTrace {
+            name: "chatty-pairs".to_string(),
+            layers: vec![MoeLayerStats {
+                traffic: d,
+                gate_ms: 0.1,
+                ffn_ms_per_token: 0.01,
+                agg_ms: 0.05,
+            }],
+        };
+        let cluster = Cluster::homogeneous(4, 10.0);
+        let topo = Topology::even_two_tier(4, 2, 4.0).unwrap();
+        let planner = Planner::default();
+        let flat = planner.plan_multi(&[&trace], &cluster).unwrap();
+        let placed = planner.plan_topology(&[&trace], &cluster, &topo).unwrap();
+        let layer = &trace.layers[0];
+        let drain_flat =
+            uplink_bound(&flat.aggregated_traffic(&[layer]), &cluster, &topo);
+        let drain_placed =
+            uplink_bound(&placed.aggregated_traffic(&[layer]), &cluster, &topo);
+        assert!(
+            drain_placed < drain_flat,
+            "placed drain {drain_placed} vs flat {drain_flat}"
+        );
+        // the chatty pairs ended up group-local
+        let owner = topo.group_of(4).unwrap();
+        assert_eq!(
+            owner[placed.gpu_of(0, 0)],
+            owner[placed.gpu_of(0, 2)],
+            "experts 0 and 2 should share a group: {:?}",
+            placed.assignments
+        );
+        assert_eq!(owner[placed.gpu_of(0, 1)], owner[placed.gpu_of(0, 3)]);
+    }
+
+    #[test]
+    fn plan_topology_rejects_mismatched_topologies_without_panicking() {
+        let (a, _) = traces();
+        let cluster = Cluster::homogeneous(8, 10.0);
+        // valid 16-GPU topology, 8-GPU cluster: a typed error, not a panic
+        let topo = Topology::even_two_tier(16, 4, 2.0).unwrap();
+        let err = Planner::default()
+            .plan_topology(&[&a], &cluster, &topo)
+            .unwrap_err();
+        assert!(
+            matches!(err, PlacementError::InvalidTopology { .. }),
+            "{err:?}"
+        );
+        assert!(err.to_string().contains("topology"), "{err}");
+        // the replication surface routes through the same validation
+        let err = Planner::default()
+            .plan_replicated_topology(&[&a], &cluster, &topo, &ReplicationConfig::default())
+            .unwrap_err();
+        assert!(matches!(err, PlacementError::InvalidTopology { .. }));
+    }
+
+    #[test]
+    fn plan_topology_never_worsens_the_combined_objective() {
+        use crate::placement::estimate_bottleneck;
+        let (a, b) = traces();
+        let cluster = Cluster::homogeneous(8, 10.0);
+        let topo = Topology::even_two_tier(8, 4, 4.0).unwrap();
+        let planner = Planner::default();
+        let flat = planner.plan_multi(&[&a, &b], &cluster).unwrap();
+        let placed = planner.plan_topology(&[&a, &b], &cluster, &topo).unwrap();
+        let totals = aggregate_totals(&[&a, &b]);
+        let layers: Vec<&MoeLayerStats> = totals.iter().collect();
+        let combined = |dep: &Deployment| -> f64 {
+            estimate_bottleneck(dep, &layers, &cluster)
+                .max(uplink_bound(&dep.aggregated_traffic(&layers), &cluster, &topo))
+        };
+        let c_flat = combined(&flat);
+        let c_placed = combined(&placed);
+        assert!(
+            c_placed <= c_flat + 1e-6,
+            "placed {c_placed} vs flat {c_flat}"
+        );
     }
 
     #[test]

@@ -35,9 +35,9 @@ mod split;
 
 pub use split::{optimize_splits, SplitPlan};
 
-use crate::cluster::Cluster;
+use crate::cluster::{Cluster, Topology};
 use crate::placement::Deployment;
-use crate::sim::{simulate_group, MoeLayerStats, SimResult};
+use crate::sim::{simulate_group, simulate_group_topology, MoeLayerStats, SimResult};
 use crate::trace::{aggregate_totals, ModelTrace};
 use crate::traffic::{split_tokens, TrafficMatrix};
 use crate::util::Json;
@@ -360,6 +360,50 @@ impl ReplicatedDeployment {
             .collect();
         let refs: Vec<&MoeLayerStats> = projected.iter().collect();
         simulate_group(&refs, cluster, self.base.policy).0
+    }
+
+    /// [`ReplicatedDeployment::simulate_layer`] on a network topology —
+    /// collectives priced by [`crate::schedule::comm_time_on`]. Big switch ⇒
+    /// identical to [`ReplicatedDeployment::simulate_layer`]. Panics when a
+    /// two-tier grouping does not fit `cluster`.
+    pub fn simulate_layer_topology(
+        &self,
+        layers: &[&MoeLayerStats],
+        cluster: &Cluster,
+        topo: &Topology,
+        plan: &SplitPlan,
+    ) -> SimResult {
+        assert_eq!(layers.len(), self.n_models());
+        assert_eq!(cluster.len(), self.n_gpus());
+        let projected: Vec<MoeLayerStats> = layers
+            .iter()
+            .enumerate()
+            .map(|(m, l)| self.project_layer_split(m, l, plan))
+            .collect();
+        let refs: Vec<&MoeLayerStats> = projected.iter().collect();
+        simulate_group_topology(&refs, cluster, topo, self.base.policy).0
+    }
+
+    /// [`ReplicatedDeployment::simulate`] on a network topology, layer by
+    /// layer.
+    pub fn simulate_topology(
+        &self,
+        traces: &[&ModelTrace],
+        cluster: &Cluster,
+        topo: &Topology,
+        plan: &SplitPlan,
+    ) -> Vec<SimResult> {
+        assert_eq!(traces.len(), self.n_models());
+        let n_layers = traces[0].layers.len();
+        for t in traces {
+            assert_eq!(t.layers.len(), n_layers, "traces must have equal layer counts");
+        }
+        (0..n_layers)
+            .map(|k| {
+                let layers: Vec<&MoeLayerStats> = traces.iter().map(|t| &t.layers[k]).collect();
+                self.simulate_layer_topology(&layers, cluster, topo, plan)
+            })
+            .collect()
     }
 
     /// Simulate full traces layer by layer under one split plan.

@@ -1,0 +1,623 @@
+//! Two-phase hierarchical all-to-all scheduling for two-tier topologies.
+//!
+//! On a [`Topology::TwoTier`] fabric the flat Aurora order is no longer
+//! contention-free: its rounds pair arbitrary GPUs, so a single round can
+//! push several concurrent transfers through one oversubscribed uplink and
+//! the round stretches by the uplink's congestion factor. The hierarchical
+//! schedule ([`hierarchical_schedule`]) decomposes the traffic instead:
+//!
+//! 1. **Intra phase** — the traffic between members of one group never
+//!    touches an uplink. Each group's submatrix gets its own Aurora slot
+//!    schedule ([`super::aurora_schedule`]) running at full port rate:
+//!    contention-free, makespan exactly the group's `b_max`.
+//! 2. **Inter phase** — the residual cross-group traffic collapses to a
+//!    group-level matrix `G[a][b] = Σ tokens a→b`. A **group-level BvN
+//!    decomposition** (the same Alg. 1 machinery one level up) yields
+//!    rounds in which every group sends to at most one group and receives
+//!    from at most one — so each uplink carries exactly one group-flow per
+//!    round and drains at its full rate. Within a round the group-flow is
+//!    realized by **designated gateway senders**: the member flows of the
+//!    (src group, dst group) pair, budget-balanced across senders so no
+//!    single port serializes the whole round.
+//! 3. **Stitch** — gateways use GPU ports the intra phase also wants, but
+//!    the two phases occupy *different switches* otherwise. The pipelined
+//!    makespan estimate interleaves them in the fluid limit:
+//!    `max(intra, inter, per-GPU port drain)`; the sequential estimate
+//!    (`intra + inter`) is the no-overlap upper bound. Both are reported.
+//!
+//! The inter phase's round budgets sum to exactly `b_max(G)` (Theorem 4.2
+//! applied to the group graph), so with homogeneous uplinks the uplink
+//! phase meets the uplink drain bound of
+//! [`crate::cluster::topology::uplink_bound`] — the hierarchical schedule
+//! achieves `max(port bound, uplink bound)` in the fluid limit, while flat
+//! Aurora pays the per-round congestion [`flat_schedule_on_topology`]
+//! makes visible.
+
+use super::bvn::aurora_schedule;
+use super::slot::{SlotRound, SlotSchedule};
+use super::{comm_time, CommResult, SchedulePolicy};
+use crate::cluster::topology::{comm_time_topology, uplink_bound, Topology, TopologyError};
+use crate::cluster::Cluster;
+use crate::traffic::TrafficMatrix;
+
+/// One inter-group round: a partial permutation of *group* pairs, realized
+/// by concrete gateway transfers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InterRound {
+    /// Group-level round budget in tokens (per-uplink budget of the round).
+    pub budget: u64,
+    /// Active `(src_group, dst_group, tokens)` pairs — each group appears at
+    /// most once as sender and once as receiver.
+    pub pairs: Vec<(usize, usize, u64)>,
+    /// Realized gateway flows `(src_gpu, dst_gpu, tokens)`. Unlike a
+    /// [`SlotRound`], one GPU may carry several flows (the group's uplink is
+    /// faster than one port precisely when oversubscription < group size).
+    pub transfers: Vec<(usize, usize, u64)>,
+}
+
+/// The stitched two-phase schedule for one all-to-all on a two-tier fabric.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HierarchicalSchedule {
+    /// Number of GPUs.
+    pub n: usize,
+    /// Per-group intra-group Aurora schedules (global GPU ids).
+    pub intra: Vec<SlotSchedule>,
+    /// Group-level inter rounds with gateway realizations.
+    pub inter: Vec<InterRound>,
+    /// Intra-phase duration (ms): the slowest group's local `b_max` drain.
+    pub intra_ms: f64,
+    /// Inter-phase duration (ms): summed group-round times on the uplinks
+    /// (gateway port occupancy included).
+    pub inter_ms: f64,
+    /// Fluid pipelined makespan estimate (ms):
+    /// `max(intra, inter, per-GPU port drain)` — phases interleave on ports.
+    pub pipelined_ms: f64,
+    /// No-overlap upper bound (ms): `intra_ms + inter_ms`.
+    pub sequential_ms: f64,
+    /// Per-GPU finish estimate (ms): each GPU's own port drain joined with
+    /// its group's intra and uplink phases.
+    pub per_gpu_ms: Vec<f64>,
+}
+
+impl HierarchicalSchedule {
+    /// Total real tokens moved per `(src, dst)` pair across both phases —
+    /// for conservation checks against the original matrix.
+    pub fn delivered(&self) -> TrafficMatrix {
+        let mut m = TrafficMatrix::zeros(self.n);
+        for s in &self.intra {
+            for round in &s.rounds {
+                for &(src, dst, real) in &round.transfers {
+                    m.add(src, dst, real);
+                }
+            }
+        }
+        for round in &self.inter {
+            for &(src, dst, tokens) in &round.transfers {
+                m.add(src, dst, tokens);
+            }
+        }
+        m
+    }
+
+    /// Sum of group-level round budgets (tokens). Equals `b_max` of the
+    /// group-level matrix — the Theorem 4.2 bound one level up.
+    pub fn inter_budget_tokens(&self) -> u64 {
+        self.inter.iter().map(|r| r.budget).sum()
+    }
+}
+
+/// Build the two-phase hierarchical schedule for `d` on `cluster` under a
+/// two-tier `topo`. Errors on a big-switch topology (use
+/// [`super::aurora_schedule`] there) or an invalid grouping.
+pub fn hierarchical_schedule(
+    d: &TrafficMatrix,
+    cluster: &Cluster,
+    topo: &Topology,
+) -> Result<HierarchicalSchedule, TopologyError> {
+    hierarchical_core(d, cluster, topo, true)
+}
+
+/// The shared construction. With `build_intra` the per-group Aurora slot
+/// schedules are materialized (the executable schedule); without it `intra`
+/// stays empty and only the timing estimate is computed — every duration
+/// field is **identical** either way, because the intra phase is priced by
+/// each group's `b_max` (which the group schedule achieves by Theorem 4.2),
+/// never by walking its rounds. The estimate-only path is what the
+/// simulator's hot loop takes ([`comm_time_on`] is called once per
+/// collective), skipping one BvN decomposition per group per call.
+fn hierarchical_core(
+    d: &TrafficMatrix,
+    cluster: &Cluster,
+    topo: &Topology,
+    build_intra: bool,
+) -> Result<HierarchicalSchedule, TopologyError> {
+    let n = d.n();
+    assert_eq!(cluster.len(), n, "cluster and matrix sizes must match");
+    // BigSwitch: no hierarchy to schedule.
+    let owner = topo.owners(n)?.ok_or(TopologyError::NoGroups)?;
+    let Topology::TwoTier { groups, .. } = topo else {
+        unreachable!("owners returned Some for a non-two-tier topology")
+    };
+    let uplinks = topo.uplink_rates(cluster);
+    let bw = cluster.bandwidths();
+    let n_groups = groups.len();
+
+    // ---- Phase 1: per-group Aurora on the intra submatrices. ----
+    let mut intra = Vec::new();
+    let mut intra_time = Vec::with_capacity(n_groups);
+    let mut intra_ms = 0.0f64;
+    for members in groups.iter() {
+        let k = members.len();
+        let mut local = TrafficMatrix::zeros(k);
+        for (li, &i) in members.iter().enumerate() {
+            for (lj, &j) in members.iter().enumerate() {
+                if li != lj {
+                    local.set(li, lj, d.get(i, j));
+                }
+            }
+        }
+        let member_bw: Vec<f64> = members.iter().map(|&i| bw[i]).collect();
+        let group_ms = local.b_max_hetero(&member_bw);
+        intra_time.push(group_ms);
+        intra_ms = intra_ms.max(group_ms);
+        if !build_intra {
+            continue;
+        }
+        // Remap the local schedule to global GPU ids.
+        let local_sched = aurora_schedule(&local);
+        let rounds = local_sched
+            .rounds
+            .into_iter()
+            .map(|r| SlotRound {
+                duration: r.duration,
+                transfers: r
+                    .transfers
+                    .into_iter()
+                    .map(|(li, lj, t)| (members[li], members[lj], t))
+                    .collect(),
+            })
+            .collect();
+        intra.push(SlotSchedule { n, rounds });
+    }
+
+    // ---- Phase 2: group-level BvN over the cross traffic. ----
+    let mut group_matrix = TrafficMatrix::zeros(n_groups);
+    // Remaining cross flows per (src group, dst group), deterministic order.
+    let mut cross: Vec<Vec<Vec<(usize, usize, u64)>>> = vec![vec![Vec::new(); n_groups]; n_groups];
+    for i in 0..n {
+        for j in 0..n {
+            let t = d.get(i, j);
+            if t == 0 || i == j || owner[i] == owner[j] {
+                continue;
+            }
+            group_matrix.add(owner[i], owner[j], t);
+            cross[owner[i]][owner[j]].push((i, j, t));
+        }
+    }
+
+    let group_sched = aurora_schedule(&group_matrix);
+    let mut inter = Vec::with_capacity(group_sched.rounds.len());
+    let mut inter_ms = 0.0f64;
+    for ground in &group_sched.rounds {
+        let mut pairs = Vec::new();
+        let mut transfers = Vec::new();
+        let mut round_ms = 0.0f64;
+        let mut tx = vec![0u64; n];
+        let mut rx = vec![0u64; n];
+        for &(ga, gb, tokens) in &ground.transfers {
+            pairs.push((ga, gb, tokens));
+            // Designated gateways: balance the round's budget across the
+            // pair's member flows so no single sender port serializes it.
+            let flows = &mut cross[ga][gb];
+            let mut left = tokens;
+            while left > 0 {
+                let live = flows.iter().filter(|&&(_, _, rem)| rem > 0).count() as u64;
+                debug_assert!(live > 0, "group matrix tracks remaining cross tokens");
+                let fair = left.div_ceil(live);
+                for (src, dst, rem) in flows.iter_mut() {
+                    if *rem == 0 || left == 0 {
+                        continue;
+                    }
+                    let take = fair.min(*rem).min(left);
+                    if take == 0 {
+                        continue;
+                    }
+                    *rem -= take;
+                    left -= take;
+                    tx[*src] += take;
+                    rx[*dst] += take;
+                    transfers.push((*src, *dst, take));
+                }
+            }
+            // Pair drain: the slower of the two uplinks caps the flow.
+            round_ms = round_ms.max(tokens as f64 / uplinks[ga].min(uplinks[gb]));
+        }
+        // Gateway port occupancy can exceed the uplink term when one sender
+        // carries most of the pair budget; charge it honestly.
+        for i in 0..n {
+            if tx[i] > 0 || rx[i] > 0 {
+                round_ms = round_ms.max(tx[i].max(rx[i]) as f64 / bw[i]);
+            }
+        }
+        inter_ms += round_ms;
+        inter.push(InterRound {
+            budget: ground.duration,
+            pairs,
+            transfers,
+        });
+    }
+
+    // ---- Stitch. ----
+    let port_ms = (0..n)
+        .map(|i| d.row_sum(i).max(d.col_sum(i)) as f64 / bw[i])
+        .fold(0.0, f64::max);
+    let pipelined_ms = intra_ms.max(inter_ms).max(port_ms);
+    let sequential_ms = intra_ms + inter_ms;
+    // Per-GPU finish: own port drain ∨ own group's intra phase ∨ own
+    // group's uplink drain. Each term is ≤ the corresponding component of
+    // `pipelined_ms`, so `max(per_gpu_ms) ≤ makespan` holds by
+    // construction (on any cluster, heterogeneous included).
+    let per_gpu_ms: Vec<f64> = (0..n)
+        .map(|i| {
+            let g = owner[i];
+            let up: u64 = (0..n_groups).map(|h| group_matrix.get(g, h)).sum();
+            let down: u64 = (0..n_groups).map(|h| group_matrix.get(h, g)).sum();
+            (d.row_sum(i).max(d.col_sum(i)) as f64 / bw[i])
+                .max(intra_time[g])
+                .max(up.max(down) as f64 / uplinks[g])
+        })
+        .collect();
+
+    Ok(HierarchicalSchedule {
+        n,
+        intra,
+        inter,
+        intra_ms,
+        inter_ms,
+        pipelined_ms,
+        sequential_ms,
+        per_gpu_ms,
+    })
+}
+
+/// Price an arbitrary flat slot schedule on a two-tier topology: each round
+/// lasts as long as its slowest transfer *or* its most congested uplink.
+/// This is what a topology-oblivious Aurora order actually costs — its
+/// partial permutations coordinate ports, not uplinks, so a round may push
+/// several concurrent transfers through one oversubscribed uplink.
+/// On the big switch this reduces to the flat per-round port model.
+pub fn flat_schedule_on_topology(sched: &SlotSchedule, cluster: &Cluster, topo: &Topology) -> f64 {
+    let n = sched.n;
+    assert_eq!(cluster.len(), n, "cluster and schedule sizes must match");
+    let bw = cluster.bandwidths();
+    let owner = topo.group_of(n);
+    let uplinks = topo.uplink_rates(cluster);
+    let n_groups = uplinks.len();
+    let mut total = 0.0f64;
+    for round in &sched.rounds {
+        let mut round_ms = 0.0f64;
+        let mut up = vec![0u64; n_groups];
+        let mut down = vec![0u64; n_groups];
+        for &(src, dst, real) in &round.transfers {
+            if real == 0 {
+                continue;
+            }
+            round_ms = round_ms.max(real as f64 / bw[src].min(bw[dst]));
+            if let Some(owner) = &owner {
+                if owner[src] != owner[dst] {
+                    up[owner[src]] += real;
+                    down[owner[dst]] += real;
+                }
+            }
+        }
+        for g in 0..n_groups {
+            if up[g] > 0 || down[g] > 0 {
+                round_ms = round_ms.max(up[g].max(down[g]) as f64 / uplinks[g]);
+            }
+        }
+        total += round_ms;
+    }
+    total
+}
+
+/// Communication time of one all-to-all under `topo` and `policy` — the
+/// topology-aware counterpart of [`super::comm_time`]:
+///
+/// * big switch → [`super::comm_time`] unchanged, bit for bit;
+/// * two-tier + Aurora → the hierarchical two-phase schedule's pipelined
+///   makespan estimate ([`hierarchical_schedule`]);
+/// * two-tier + ordered baselines → the fluid combination
+///   `max(flat simulated makespan, uplink bound)`
+///   ([`comm_time_topology`]) — a baseline's order is fixed, so the
+///   saturated uplink simply serializes it.
+///
+/// Panics when a two-tier grouping does not match the cluster size; the
+/// planner surface ([`crate::planner::Planner::plan_topology`]) validates
+/// that combination up front and returns a typed error instead.
+pub fn comm_time_on(
+    d: &TrafficMatrix,
+    cluster: &Cluster,
+    topo: &Topology,
+    policy: SchedulePolicy,
+) -> CommResult {
+    match (topo, policy) {
+        (Topology::BigSwitch, _) => comm_time(d, &cluster.bandwidths(), policy),
+        (Topology::TwoTier { .. }, SchedulePolicy::Aurora) => {
+            // Estimate-only build: identical durations, no materialized
+            // per-group slot schedules (this runs once per collective in
+            // the simulator's hot loop).
+            let h = hierarchical_core(d, cluster, topo, false)
+                .expect("two-tier topology was validated by the caller");
+            CommResult {
+                makespan: h.pipelined_ms,
+                per_gpu_finish: h.per_gpu_ms,
+            }
+        }
+        (Topology::TwoTier { .. }, _) => comm_time_topology(d, cluster, topo, policy),
+    }
+}
+
+/// Makespan (ms) of the **flat** Aurora order priced on `topo` — the
+/// "schedule ignores the topology" baseline the hierarchical schedule is
+/// measured against: same optimal big-switch rounds, each stretched by its
+/// uplink congestion.
+pub fn flat_aurora_on_topology(d: &TrafficMatrix, cluster: &Cluster, topo: &Topology) -> f64 {
+    let sched = aurora_schedule(d);
+    // A slot round's budget may exceed its real tokens (Appendix A filler);
+    // price real transfers only, which favors the flat baseline.
+    flat_schedule_on_topology(&sched, cluster, topo).max(uplink_bound(d, cluster, topo))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::validate_slot_schedule;
+    use crate::util::Rng;
+
+    fn rand_matrix(n: usize, seed: u64, max: u64) -> TrafficMatrix {
+        let mut rng = Rng::new(seed);
+        let mut d = TrafficMatrix::zeros(n);
+        for i in 0..n {
+            for j in 0..n {
+                if i != j {
+                    d.set(i, j, rng.gen_range(max));
+                }
+            }
+        }
+        d
+    }
+
+    #[test]
+    fn conserves_every_pair_and_splits_phases_cleanly() {
+        let d = rand_matrix(8, 11, 40);
+        let c = Cluster::homogeneous(8, 1.0);
+        let topo = Topology::even_two_tier(8, 2, 4.0).unwrap();
+        let h = hierarchical_schedule(&d, &c, &topo).unwrap();
+        let delivered = h.delivered();
+        let owner = topo.group_of(8).unwrap();
+        for i in 0..8 {
+            for j in 0..8 {
+                if i != j {
+                    assert_eq!(delivered.get(i, j), d.get(i, j), "({i},{j})");
+                }
+            }
+        }
+        // intra schedules carry only in-group flows; inter only cross flows
+        for s in &h.intra {
+            for r in &s.rounds {
+                for &(src, dst, _) in &r.transfers {
+                    assert_eq!(owner[src], owner[dst]);
+                }
+            }
+        }
+        for r in &h.inter {
+            for &(src, dst, _) in &r.transfers {
+                assert_ne!(owner[src], owner[dst]);
+            }
+        }
+    }
+
+    #[test]
+    fn intra_schedules_are_valid_aurora_schedules() {
+        let d = rand_matrix(8, 5, 30);
+        let c = Cluster::homogeneous(8, 1.0);
+        let topo = Topology::even_two_tier(8, 2, 2.0).unwrap();
+        let owner = topo.group_of(8).unwrap();
+        let h = hierarchical_schedule(&d, &c, &topo).unwrap();
+        for (g, s) in h.intra.iter().enumerate() {
+            // the group's intra submatrix (global indices)
+            let mut local = TrafficMatrix::zeros(8);
+            for i in 0..8 {
+                for j in 0..8 {
+                    if i != j && owner[i] == g && owner[j] == g {
+                        local.set(i, j, d.get(i, j));
+                    }
+                }
+            }
+            validate_slot_schedule(&local, s).unwrap();
+        }
+    }
+
+    #[test]
+    fn inter_rounds_are_group_level_partial_permutations() {
+        let d = rand_matrix(12, 7, 25);
+        let c = Cluster::homogeneous(12, 1.0);
+        let topo = Topology::even_two_tier(12, 3, 4.0).unwrap();
+        let h = hierarchical_schedule(&d, &c, &topo).unwrap();
+        for round in &h.inter {
+            let mut send = vec![false; 3];
+            let mut recv = vec![false; 3];
+            let mut pair_tokens = vec![vec![0u64; 3]; 3];
+            for &(ga, gb, t) in &round.pairs {
+                assert!(!send[ga], "group {ga} sends twice in one round");
+                assert!(!recv[gb], "group {gb} receives twice in one round");
+                send[ga] = true;
+                recv[gb] = true;
+                assert!(t <= round.budget);
+                pair_tokens[ga][gb] = t;
+            }
+            // realized gateway flows match the pair budgets exactly
+            let owner = topo.group_of(12).unwrap();
+            let mut realized = vec![vec![0u64; 3]; 3];
+            for &(src, dst, t) in &round.transfers {
+                realized[owner[src]][owner[dst]] += t;
+            }
+            assert_eq!(realized, pair_tokens);
+        }
+    }
+
+    #[test]
+    fn inter_budget_is_the_group_level_b_max() {
+        let d = rand_matrix(8, 21, 50);
+        let topo = Topology::even_two_tier(8, 4, 4.0).unwrap();
+        let owner = topo.group_of(8).unwrap();
+        let mut g = TrafficMatrix::zeros(4);
+        for i in 0..8 {
+            for j in 0..8 {
+                if i != j && owner[i] != owner[j] {
+                    g.add(owner[i], owner[j], d.get(i, j));
+                }
+            }
+        }
+        let c = Cluster::homogeneous(8, 1.0);
+        let h = hierarchical_schedule(&d, &c, &topo).unwrap();
+        assert_eq!(h.inter_budget_tokens(), g.b_max_tokens());
+    }
+
+    #[test]
+    fn purely_local_traffic_needs_no_inter_phase() {
+        let mut d = TrafficMatrix::zeros(8);
+        d.set(0, 1, 100);
+        d.set(5, 6, 80);
+        let c = Cluster::homogeneous(8, 1.0);
+        let topo = Topology::even_two_tier(8, 2, 4.0).unwrap();
+        let h = hierarchical_schedule(&d, &c, &topo).unwrap();
+        assert!(h.inter.is_empty());
+        assert_eq!(h.inter_ms, 0.0);
+        // pipelined estimate = the heavier group's local drain
+        assert_eq!(h.pipelined_ms, 100.0);
+    }
+
+    #[test]
+    fn hierarchical_beats_flat_aurora_under_oversubscription() {
+        let d = rand_matrix(16, 3, 60);
+        let c = Cluster::homogeneous(16, 1.0);
+        let topo = Topology::even_two_tier(16, 4, 4.0).unwrap();
+        let h = hierarchical_schedule(&d, &c, &topo).unwrap();
+        let flat = flat_aurora_on_topology(&d, &c, &topo);
+        assert!(
+            h.pipelined_ms < flat,
+            "hierarchical {} vs flat {}",
+            h.pipelined_ms,
+            flat
+        );
+        // and it never reports better than the fluid lower bounds
+        let lb = uplink_bound(&d, &c, &topo)
+            .max(comm_time(&d, &c.bandwidths(), SchedulePolicy::Aurora).makespan);
+        assert!(h.pipelined_ms >= lb - 1e-9);
+        assert!(h.sequential_ms >= h.pipelined_ms);
+    }
+
+    #[test]
+    fn no_oversubscription_keeps_flat_aurora_unstretched() {
+        // at 1:1, a round's uplink load can never exceed its port budget for
+        // even groups, so the flat schedule's price matches the big switch
+        let d = rand_matrix(8, 9, 30);
+        let c = Cluster::homogeneous(8, 1.0);
+        let topo = Topology::even_two_tier(8, 2, 1.0).unwrap();
+        let sched = aurora_schedule(&d);
+        let topo_ms = flat_schedule_on_topology(&sched, &c, &topo);
+        let flat_ms = flat_schedule_on_topology(&sched, &c, &Topology::BigSwitch);
+        assert!((topo_ms - flat_ms).abs() < 1e-9, "{topo_ms} vs {flat_ms}");
+    }
+
+    #[test]
+    fn comm_time_on_dispatches_per_topology_and_policy() {
+        let d = rand_matrix(8, 13, 30);
+        let c = Cluster::homogeneous(8, 1.0);
+        // big switch: bit-for-bit the flat result for every policy
+        for policy in [
+            SchedulePolicy::Aurora,
+            SchedulePolicy::Sjf,
+            SchedulePolicy::Rcs { seed: 4 },
+        ] {
+            let a = comm_time(&d, &c.bandwidths(), policy);
+            let b = comm_time_on(&d, &c, &Topology::BigSwitch, policy);
+            assert_eq!(a.makespan, b.makespan);
+            assert_eq!(a.per_gpu_finish, b.per_gpu_finish);
+        }
+        // two-tier Aurora: the hierarchical estimate
+        let topo = Topology::even_two_tier(8, 2, 4.0).unwrap();
+        let h = hierarchical_schedule(&d, &c, &topo).unwrap();
+        let r = comm_time_on(&d, &c, &topo, SchedulePolicy::Aurora);
+        assert_eq!(r.makespan, h.pipelined_ms);
+        // two-tier baseline: flat sim joined with the uplink bound
+        let s = comm_time_on(&d, &c, &topo, SchedulePolicy::Sjf);
+        assert!(s.makespan >= uplink_bound(&d, &c, &topo));
+    }
+
+    #[test]
+    fn big_switch_topology_is_rejected() {
+        let d = TrafficMatrix::zeros(4);
+        let c = Cluster::homogeneous(4, 1.0);
+        assert!(hierarchical_schedule(&d, &c, &Topology::BigSwitch).is_err());
+    }
+
+    #[test]
+    fn heterogeneous_ports_slow_their_group() {
+        let mut gpus = Cluster::homogeneous(8, 2.0).gpus().to_vec();
+        for g in gpus.iter_mut().take(4) {
+            g.bandwidth = 1.0; // group 0 has slow ports
+        }
+        let c = Cluster::new(gpus);
+        let d = rand_matrix(8, 17, 30);
+        let topo = Topology::even_two_tier(8, 2, 2.0).unwrap();
+        let h = hierarchical_schedule(&d, &c, &topo).unwrap();
+        // group 0's local drain is priced at its own (slower) ports
+        let owner = topo.group_of(8).unwrap();
+        let mut local = TrafficMatrix::zeros(4);
+        for i in 0..4 {
+            for j in 0..4 {
+                if i != j && owner[i] == 0 && owner[j] == 0 {
+                    local.set(i, j, d.get(i, j));
+                }
+            }
+        }
+        assert!(h.intra_ms >= local.b_max_hetero(&[1.0, 1.0, 1.0, 1.0]) - 1e-9);
+    }
+
+    #[test]
+    fn per_gpu_finish_never_exceeds_the_makespan() {
+        // Mixed-bandwidth group where only the fast members talk: the slow
+        // member's port must not be charged for traffic it never carries.
+        let mut gpus = Cluster::homogeneous(6, 10.0).gpus().to_vec();
+        gpus[0].bandwidth = 1.0; // slow GPU inside group 0
+        let c = Cluster::new(gpus);
+        let mut d = TrafficMatrix::zeros(6);
+        d.set(1, 2, 100); // fast members of group 0 exchange tokens
+        d.set(4, 5, 100); // group 1 keeps busy too
+        d.set(1, 4, 10); // a little cross traffic
+        let topo = Topology::even_two_tier(6, 2, 2.0).unwrap();
+        let h = hierarchical_schedule(&d, &c, &topo).unwrap();
+        for (i, &t) in h.per_gpu_ms.iter().enumerate() {
+            assert!(
+                t <= h.pipelined_ms + 1e-9,
+                "GPU {i}: finish {t} exceeds makespan {}",
+                h.pipelined_ms
+            );
+        }
+        // and the same through the CommResult surface
+        let r = comm_time_on(&d, &c, &topo, SchedulePolicy::Aurora);
+        for &t in &r.per_gpu_finish {
+            assert!(t <= r.makespan + 1e-9);
+        }
+        // random hetero shapes too
+        for seed in 0..10u64 {
+            let d = rand_matrix(6, seed, 30);
+            let h = hierarchical_schedule(&d, &c, &topo).unwrap();
+            for &t in &h.per_gpu_ms {
+                assert!(t <= h.pipelined_ms + 1e-9, "seed {seed}");
+            }
+        }
+    }
+}

@@ -19,14 +19,26 @@
 //! Heterogeneous clusters (Theorem 5.2): the same Aurora order stays optimal;
 //! the makespan becomes `max_i max(tx_i, rx_i) / B_i` and baseline flows
 //! transfer at `min(B_src, B_dst)`.
+//!
+//! Two-tier topologies ([`crate::cluster::Topology::TwoTier`]): the flat
+//! order is no longer contention-free at the oversubscribed group uplinks.
+//! [`hierarchical_schedule`] decomposes the all-to-all into per-group Aurora
+//! phases plus a group-level BvN uplink phase with designated gateway
+//! senders; [`comm_time_on`] is the topology-aware entry point dispatching
+//! between the flat and hierarchical paths.
 
 mod bvn;
 mod greedy;
+mod hierarchy;
 mod slot;
 mod validate;
 
 pub use bvn::aurora_schedule;
 pub use greedy::{simulate_priority_order, CommResult};
+pub use hierarchy::{
+    comm_time_on, flat_aurora_on_topology, flat_schedule_on_topology, hierarchical_schedule,
+    HierarchicalSchedule, InterRound,
+};
 pub use slot::{SlotRound, SlotSchedule};
 pub use validate::{validate_slot_schedule, ValidationError};
 

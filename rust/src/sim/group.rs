@@ -31,8 +31,9 @@
 
 use super::stats::MoeLayerStats;
 use super::SimResult;
-use crate::cluster::Cluster;
-use crate::schedule::{comm_time, SchedulePolicy};
+use crate::cluster::{Cluster, Topology};
+use crate::schedule::{comm_time, comm_time_on, SchedulePolicy};
+use crate::traffic::TrafficMatrix;
 
 /// Per-model phase end times (ms from layer start) of a group simulation.
 #[derive(Debug, Clone, PartialEq)]
@@ -105,15 +106,62 @@ pub fn simulate_group(
     }
 }
 
-/// The M ≥ 3 staggered pipeline.
+/// Topology-aware group simulation: like [`simulate_group`], but collectives
+/// are priced on `topo` via [`crate::schedule::comm_time_on`] — Aurora takes
+/// the hierarchical two-phase estimate, ordered baselines the fluid
+/// `max(flat, uplink bound)` combination.
+///
+/// On [`Topology::BigSwitch`] this **is** [`simulate_group`], bit for bit
+/// (including the exact M ≤ 2 paper paths). On a two-tier topology every
+/// model count goes through the staggered pipeline with the topology-aware
+/// communication times; the M ≤ 2 closed forms assume a non-blocking switch
+/// and do not apply there.
+pub fn simulate_group_topology(
+    models: &[&MoeLayerStats],
+    cluster: &Cluster,
+    topo: &Topology,
+    policy: SchedulePolicy,
+) -> (SimResult, GroupBreakdown) {
+    match topo {
+        Topology::BigSwitch => simulate_group(models, cluster, policy),
+        Topology::TwoTier { .. } => {
+            assert!(!models.is_empty(), "group needs at least one model");
+            let n = cluster.len();
+            for s in models {
+                assert_eq!(
+                    s.n_experts(),
+                    n,
+                    "group stats must be GPU-indexed (project the deployment first)"
+                );
+            }
+            simulate_many_with(models, cluster, &|d: &TrafficMatrix| {
+                comm_time_on(d, cluster, topo, policy).makespan
+            })
+        }
+    }
+}
+
+/// The M ≥ 3 staggered pipeline on the big switch.
 fn simulate_many(
     models: &[&MoeLayerStats],
     cluster: &Cluster,
     policy: SchedulePolicy,
 ) -> (SimResult, GroupBreakdown) {
+    let bw = cluster.bandwidths();
+    simulate_many_with(models, cluster, &|d: &TrafficMatrix| {
+        comm_time(d, &bw, policy).makespan
+    })
+}
+
+/// The staggered pipeline over an arbitrary collective cost model `comm`
+/// (flat big-switch or topology-aware).
+fn simulate_many_with(
+    models: &[&MoeLayerStats],
+    cluster: &Cluster,
+    comm: &dyn Fn(&TrafficMatrix) -> f64,
+) -> (SimResult, GroupBreakdown) {
     let m = models.len();
     let n = cluster.len();
-    let bw = cluster.bandwidths();
     let scale = |t: f64, g: usize| t / cluster.gpu(g).flops_scale;
     let max = |v: &[f64]| v.iter().copied().fold(0.0, f64::max);
 
@@ -140,17 +188,14 @@ fn simulate_many(
 
     // N phase: staggered dispatches over the shared switch with cumulative
     // aggregated-makespan floors.
-    let n_single: Vec<f64> = models
-        .iter()
-        .map(|s| comm_time(&s.traffic, &bw, policy).makespan)
-        .collect();
+    let n_single: Vec<f64> = models.iter().map(|s| comm(&s.traffic)).collect();
     let mut e_n = vec![0.0f64; m];
     e_n[0] = n_single[0];
     let mut agg = models[0].traffic.clone();
     let mut agg_n = e_n[0];
     for k in 1..m {
         agg = agg.sum(&models[k].traffic);
-        agg_n = comm_time(&agg, &bw, policy).makespan;
+        agg_n = comm(&agg);
         e_n[k] = agg_n.max(e_gate[k] + n_single[k]).max(e_n[k - 1]);
     }
 
@@ -176,7 +221,7 @@ fn simulate_many(
     // cumulative aggregation floors (Table 2 rows E_{C^a}/E_{C^b} generalized).
     let c_single: Vec<f64> = models
         .iter()
-        .map(|s| comm_time(&s.traffic.transpose(), &bw, policy).makespan)
+        .map(|s| comm(&s.traffic.transpose()))
         .collect();
     let c_start = e_f[0].max(e_n[m - 1]);
     let mut e_c = vec![0.0f64; m];
@@ -185,7 +230,7 @@ fn simulate_many(
     let mut agg_c = c_single[0];
     for k in 1..m {
         agg_rev = agg_rev.sum(&models[k].traffic.transpose());
-        agg_c = comm_time(&agg_rev, &bw, policy).makespan;
+        agg_c = comm(&agg_rev);
         e_c[k] = (e_f[k] + c_single[k])
             .max(c_start + agg_c)
             .max(e_c[k - 1]);
@@ -402,6 +447,40 @@ mod tests {
             t_split.inference_ms,
             t_plain.inference_ms
         );
+    }
+
+    #[test]
+    fn big_switch_topology_is_bit_for_bit_simulate_group() {
+        let a = toy(6, 41, 0.04);
+        let b = toy(6, 42, 0.04);
+        let c = toy(6, 43, 0.04);
+        let cluster = Cluster::homogeneous(6, 1.0);
+        for models in [vec![&a], vec![&a, &b], vec![&a, &b, &c]] {
+            let flat = simulate_group(&models, &cluster, SchedulePolicy::Aurora);
+            let topo = simulate_group_topology(
+                &models,
+                &cluster,
+                &Topology::BigSwitch,
+                SchedulePolicy::Aurora,
+            );
+            assert_eq!(flat.0, topo.0);
+            assert_eq!(flat.1, topo.1);
+        }
+    }
+
+    #[test]
+    fn oversubscription_slows_the_simulated_layer() {
+        let a = toy(8, 51, 0.01);
+        let b = toy(8, 52, 0.01);
+        let cluster = Cluster::homogeneous(8, 1.0);
+        let mut last = 0.0f64;
+        for os in [1.0, 2.0, 4.0] {
+            let topo = Topology::even_two_tier(8, 2, os).unwrap();
+            let (r, _) =
+                simulate_group_topology(&[&a, &b], &cluster, &topo, SchedulePolicy::Aurora);
+            assert!(r.inference_ms >= last - 1e-9, "os={os}");
+            last = r.inference_ms;
+        }
     }
 
     #[test]

@@ -37,8 +37,8 @@ mod stats;
 pub use colocated::{simulate_colocated, ColocatedBreakdown};
 pub use event::{event_sim_colocated, event_sim_exclusive, EventSimResult};
 pub use exclusive::{simulate_exclusive, ExclusiveBreakdown};
-pub use group::{simulate_group, GroupBreakdown};
-pub use online::simulate_window;
+pub use group::{simulate_group, simulate_group_topology, GroupBreakdown};
+pub use online::{simulate_window, simulate_window_topology};
 pub use stats::MoeLayerStats;
 
 /// Result of simulating one MoE layer (one model or a colocated pair).

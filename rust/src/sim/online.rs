@@ -10,8 +10,8 @@
 //! migration cost the coordinator pays, never hide it). With no background
 //! traffic the result is bit-for-bit [`simulate_group`].
 
-use super::{simulate_group, MoeLayerStats, SimResult};
-use crate::cluster::Cluster;
+use super::{simulate_group_topology, MoeLayerStats, SimResult};
+use crate::cluster::{Cluster, Topology};
 use crate::schedule::SchedulePolicy;
 use crate::traffic::TrafficMatrix;
 
@@ -25,9 +25,24 @@ pub fn simulate_window(
     cluster: &Cluster,
     policy: SchedulePolicy,
 ) -> SimResult {
+    simulate_window_topology(models, background, cluster, &Topology::BigSwitch, policy)
+}
+
+/// [`simulate_window`] on a network topology: serving *and* staged-weight
+/// traffic are priced by [`crate::schedule::comm_time_on`], so on a two-tier
+/// fabric a migration crossing an oversubscribed uplink congests the windows
+/// it stages under. Big switch ⇒ identical to [`simulate_window`]. Panics
+/// when a two-tier grouping does not fit `cluster`.
+pub fn simulate_window_topology(
+    models: &[&MoeLayerStats],
+    background: Option<&TrafficMatrix>,
+    cluster: &Cluster,
+    topo: &Topology,
+    policy: SchedulePolicy,
+) -> SimResult {
     match background {
-        None => simulate_group(models, cluster, policy).0,
-        Some(bg) if bg.total() == 0 => simulate_group(models, cluster, policy).0,
+        None => simulate_group_topology(models, cluster, topo, policy).0,
+        Some(bg) if bg.total() == 0 => simulate_group_topology(models, cluster, topo, policy).0,
         Some(bg) => {
             assert_eq!(bg.n(), cluster.len(), "background traffic must be GPU-indexed");
             let bg_layer = MoeLayerStats {
@@ -38,7 +53,7 @@ pub fn simulate_window(
             };
             let mut all: Vec<&MoeLayerStats> = models.to_vec();
             all.push(&bg_layer);
-            simulate_group(&all, cluster, policy).0
+            simulate_group_topology(&all, cluster, topo, policy).0
         }
     }
 }
@@ -46,6 +61,7 @@ pub fn simulate_window(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sim::simulate_group;
     use crate::traffic::zipf_traffic;
 
     fn stats(seed: u64) -> MoeLayerStats {

@@ -5,6 +5,7 @@
 //! wall-clock `Instant` timing around a closure that returns a value (kept
 //! alive via `std::hint::black_box` to defeat dead-code elimination).
 
+use super::Json;
 use std::time::{Duration, Instant};
 
 /// Timing statistics of one benchmark case.
@@ -140,6 +141,78 @@ impl Bench {
     }
 }
 
+/// One hot-path timing regression found by [`compare_entries`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchRegression {
+    /// Benchmark name.
+    pub name: String,
+    /// Baseline median (ns).
+    pub baseline_ns: f64,
+    /// Current median (ns).
+    pub current_ns: f64,
+    /// `current / baseline`.
+    pub ratio: f64,
+}
+
+impl BenchRegression {
+    /// Render as a gate-failure line.
+    pub fn report(&self) -> String {
+        format!(
+            "{}: median {:.0} ns -> {:.0} ns ({:.2}x slower)",
+            self.name, self.baseline_ns, self.current_ns, self.ratio
+        )
+    }
+}
+
+/// Diff two bench-history entries (objects carrying a `benchmarks` array of
+/// `{name, median_ns, ...}` cases): returns every case present in **both**
+/// whose median regressed by a factor above `max_regress` (1.25 = fail past
+/// +25%), worst first. Cases unique to either side are ignored, so a commit
+/// introducing a new benchmark cannot fail its own gate, and a removed case
+/// stops gating. This is what `aurora bench --check` runs against the last
+/// committed snapshot.
+pub fn compare_entries(
+    baseline: &Json,
+    current: &Json,
+    max_regress: f64,
+) -> Vec<BenchRegression> {
+    assert!(max_regress >= 1.0, "max_regress is a slowdown ratio >= 1");
+    let cases = |v: &Json| -> Vec<(String, f64)> {
+        v.get("benchmarks")
+            .and_then(|b| b.as_arr())
+            .map(|arr| {
+                arr.iter()
+                    .filter_map(|c| {
+                        let name = c.get("name")?.as_str()?.to_string();
+                        let median = c.get("median_ns")?.as_f64()?;
+                        Some((name, median))
+                    })
+                    .collect()
+            })
+            .unwrap_or_default()
+    };
+    let base = cases(baseline);
+    let mut out = Vec::new();
+    for (name, current_ns) in cases(current) {
+        let Some(&(_, baseline_ns)) = base.iter().find(|(n, _)| *n == name) else {
+            continue;
+        };
+        if baseline_ns > 0.0 {
+            let ratio = current_ns / baseline_ns;
+            if ratio > max_regress {
+                out.push(BenchRegression {
+                    name,
+                    baseline_ns,
+                    current_ns,
+                    ratio,
+                });
+            }
+        }
+    }
+    out.sort_by(|a, b| b.ratio.partial_cmp(&a.ratio).unwrap());
+    out
+}
+
 /// Short git SHA of the working tree's HEAD, if `git` is available and the
 /// process runs inside a repository — stamps perf snapshots so the bench
 /// history maps back to commits.
@@ -223,6 +296,49 @@ mod tests {
         assert!(s.ends_with('Z'));
         assert_eq!(&s[4..5], "-");
         assert_eq!(&s[10..11], "T");
+    }
+
+    fn entry(cases: &[(&str, f64)]) -> Json {
+        Json::obj(vec![(
+            "benchmarks",
+            Json::Arr(
+                cases
+                    .iter()
+                    .map(|(n, m)| {
+                        Json::obj(vec![("name", Json::from(*n)), ("median_ns", Json::Num(*m))])
+                    })
+                    .collect(),
+            ),
+        )])
+    }
+
+    #[test]
+    fn compare_entries_flags_only_real_regressions() {
+        let base = entry(&[("a", 100.0), ("b", 200.0), ("gone", 50.0)]);
+        let cur = entry(&[("a", 110.0), ("b", 300.0), ("new", 9999.0)]);
+        // a: 1.10x (inside the 1.25 band); b: 1.50x (regressed);
+        // "gone"/"new" appear on one side only and never gate.
+        let regs = compare_entries(&base, &cur, 1.25);
+        assert_eq!(regs.len(), 1);
+        assert_eq!(regs[0].name, "b");
+        assert!((regs[0].ratio - 1.5).abs() < 1e-12);
+        assert!(regs[0].report().contains("1.50x"));
+        // a speedup never trips the gate
+        let faster = entry(&[("a", 10.0), ("b", 20.0)]);
+        assert!(compare_entries(&base, &faster, 1.25).is_empty());
+    }
+
+    #[test]
+    fn compare_entries_sorts_worst_first_and_survives_junk() {
+        let base = entry(&[("a", 100.0), ("b", 100.0)]);
+        let cur = entry(&[("a", 200.0), ("b", 400.0)]);
+        let regs = compare_entries(&base, &cur, 1.25);
+        assert_eq!(regs.len(), 2);
+        assert_eq!(regs[0].name, "b");
+        assert!(regs[0].ratio > regs[1].ratio);
+        // malformed entries compare as empty, not as a crash
+        assert!(compare_entries(&Json::Null, &cur, 1.25).is_empty());
+        assert!(compare_entries(&base, &Json::obj(vec![]), 1.25).is_empty());
     }
 
     #[test]

@@ -27,6 +27,7 @@ fn all_fast_figures_run_and_are_well_formed() {
         "a2",
         "multi",
         "replication",
+        "topology",
     ] {
         let reports = run_figure(fig, &cfg).unwrap();
         assert!(!reports.is_empty(), "{fig}: no reports");

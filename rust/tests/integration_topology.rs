@@ -1,0 +1,192 @@
+//! Integration: hierarchical two-phase scheduling + topology-aware placement.
+//!
+//! Three contracts anchor the subsystem:
+//!
+//! 1. **Rack-scale win** — on the canonical 16-GPU / 4-group / 4x-oversubscribed
+//!    fabric serving a Zipf(1.2)-skewed 32-expert model, the hierarchical
+//!    plan+schedule is ≥ 1.3x faster than topology-blind placement with the
+//!    flat Aurora order priced honestly on the uplinks. Deterministic: fixed
+//!    seeds, analytic schedules, no sampling.
+//! 2. **Big-switch fallback** — `plan_topology` / `plan_replicated_topology`
+//!    on `Topology::BigSwitch` are `plan_multi` / `plan_replicated`, bit for
+//!    bit, and the topology-aware simulator collapses to the flat one.
+//! 3. **Schedule validity** — the two-phase schedule conserves every
+//!    (src, dst) token count and its uplink phase meets the group-level
+//!    Theorem-4.2 budget exactly.
+
+use aurora::cluster::{uplink_bound, Cluster, Topology};
+use aurora::config::EvalConfig;
+use aurora::eval::{run_figure, skewed_workload};
+use aurora::planner::{Planner, ReplicationConfig};
+use aurora::schedule::{
+    comm_time_on, flat_aurora_on_topology, hierarchical_schedule, SchedulePolicy,
+};
+use aurora::trace::ModelTrace;
+
+const N_GPUS: usize = 16;
+const N_GROUPS: usize = 4;
+const OVERSUB: f64 = 4.0;
+
+fn rack() -> (Cluster, Topology, ModelTrace) {
+    let cluster = Cluster::homogeneous(N_GPUS, 814.0);
+    let topo = Topology::even_two_tier(N_GPUS, N_GROUPS, OVERSUB).unwrap();
+    // 32 experts (two per GPU slot), Zipf(1.2) routing, fixed seed.
+    let trace = skewed_workload(N_GPUS * 2, 4, 1024, 1.2, 2024);
+    (cluster, topo, trace)
+}
+
+/// The acceptance pin: hierarchical plan+schedule ≥ 1.3x faster than flat
+/// Aurora on the rack-scale Zipf workload.
+#[test]
+fn hierarchical_beats_flat_aurora_by_1_3x_at_rack_scale() {
+    let (cluster, topo, trace) = rack();
+    let refs: Vec<&ModelTrace> = vec![&trace];
+    let planner = Planner::default();
+    let layer = &trace.layers[0];
+
+    // Topology-blind stack: plan_multi placement, flat Aurora rounds priced
+    // with uplink contention.
+    let flat_dep = planner.plan_multi(&refs, &cluster).unwrap();
+    let flat_agg = flat_dep.aggregated_traffic(&[layer]);
+    let flat_ms = flat_aurora_on_topology(&flat_agg, &cluster, &topo);
+
+    // Hierarchical stack: topology-aware placement, two-phase schedule.
+    let placed_dep = planner.plan_topology(&refs, &cluster, &topo).unwrap();
+    let placed_agg = placed_dep.aggregated_traffic(&[layer]);
+    let hier_ms = comm_time_on(&placed_agg, &cluster, &topo, SchedulePolicy::Aurora).makespan;
+
+    assert!(hier_ms > 0.0 && flat_ms > 0.0);
+    assert!(
+        flat_ms >= hier_ms * 1.3,
+        "hierarchical {hier_ms:.3} ms vs flat aurora {flat_ms:.3} ms \
+         ({:.2}x < 1.3x)",
+        flat_ms / hier_ms
+    );
+
+    // Determinism: the whole pipeline replays identically.
+    let again = planner.plan_topology(&refs, &cluster, &topo).unwrap();
+    assert_eq!(placed_dep, again);
+    let hier_again =
+        comm_time_on(&again.aggregated_traffic(&[layer]), &cluster, &topo, SchedulePolicy::Aurora)
+            .makespan;
+    assert_eq!(hier_ms, hier_again);
+}
+
+/// The hierarchical estimate never beats physics: it is at least the flat
+/// port bound and at least the uplink drain bound.
+#[test]
+fn hierarchical_estimate_respects_lower_bounds() {
+    let (cluster, topo, trace) = rack();
+    let refs: Vec<&ModelTrace> = vec![&trace];
+    let placed = Planner::default().plan_topology(&refs, &cluster, &topo).unwrap();
+    let agg = placed.aggregated_traffic(&[&trace.layers[0]]);
+    let hier = comm_time_on(&agg, &cluster, &topo, SchedulePolicy::Aurora).makespan;
+    let port = agg.b_max_hetero(&cluster.bandwidths());
+    let uplink = uplink_bound(&agg, &cluster, &topo);
+    assert!(hier >= port - 1e-9, "hier {hier} vs port bound {port}");
+    assert!(hier >= uplink - 1e-9, "hier {hier} vs uplink bound {uplink}");
+}
+
+/// Big-switch fallbacks are bit-for-bit, end to end.
+#[test]
+fn big_switch_fallback_is_bit_for_bit() {
+    let (cluster, _, trace) = rack();
+    let refs: Vec<&ModelTrace> = vec![&trace];
+    let planner = Planner::default();
+
+    let flat = planner.plan_multi(&refs, &cluster).unwrap();
+    let topo = planner
+        .plan_topology(&refs, &cluster, &Topology::BigSwitch)
+        .unwrap();
+    assert_eq!(flat, topo);
+
+    let cfg = ReplicationConfig::default();
+    let (rep_flat, splits_flat) = planner.plan_replicated(&refs, &cluster, &cfg).unwrap();
+    let (rep_topo, splits_topo) = planner
+        .plan_replicated_topology(&refs, &cluster, &Topology::BigSwitch, &cfg)
+        .unwrap();
+    assert_eq!(rep_flat, rep_topo);
+    assert_eq!(splits_flat, splits_topo);
+
+    // simulation collapses too
+    let sims_flat = flat.simulate(&refs, &cluster);
+    let sims_topo = topo.simulate_topology(&refs, &cluster, &Topology::BigSwitch);
+    assert_eq!(sims_flat, sims_topo);
+}
+
+/// End-to-end simulated inference slows monotonically with oversubscription
+/// for a fixed placement, and the topology-aware plan never loses materially
+/// to the blind plan on the fabric it was placed for.
+#[test]
+fn simulated_inference_monotone_in_oversubscription() {
+    let (cluster, _, trace) = rack();
+    let refs: Vec<&ModelTrace> = vec![&trace];
+    let planner = Planner::default();
+    let blind = planner.plan_multi(&refs, &cluster).unwrap();
+    let mut last = 0.0f64;
+    for os in [1.0, 2.0, 4.0] {
+        let topo = Topology::even_two_tier(N_GPUS, N_GROUPS, os).unwrap();
+        let blind_total = blind.total_inference_ms_topology(&refs, &cluster, &topo);
+        assert!(blind_total > 0.0);
+        assert!(
+            blind_total >= last - 1e-6,
+            "os={os}: {blind_total} vs previous {last}"
+        );
+        last = blind_total;
+
+        let placed = planner.plan_topology(&refs, &cluster, &topo).unwrap();
+        let placed_total = placed.total_inference_ms_topology(&refs, &cluster, &topo);
+        assert!(
+            placed_total <= blind_total * 1.10 + 1e-6,
+            "os={os}: placed {placed_total} vs blind {blind_total}"
+        );
+    }
+}
+
+/// Schedule validity on the rack shape: conservation per (src, dst) pair and
+/// the group-level Theorem-4.2 budget.
+#[test]
+fn rack_scale_schedule_conserves_and_meets_the_budget() {
+    let (cluster, topo, trace) = rack();
+    let refs: Vec<&ModelTrace> = vec![&trace];
+    let placed = Planner::default().plan_topology(&refs, &cluster, &topo).unwrap();
+    let agg = placed.aggregated_traffic(&[&trace.layers[0]]);
+    let sched = hierarchical_schedule(&agg, &cluster, &topo).unwrap();
+    let delivered = sched.delivered();
+    for i in 0..N_GPUS {
+        for j in 0..N_GPUS {
+            if i != j {
+                assert_eq!(delivered.get(i, j), agg.get(i, j), "({i},{j})");
+            }
+        }
+    }
+    // uplink phase budget = b_max of the group-level matrix
+    let owner = topo.group_of(N_GPUS).unwrap();
+    let mut group = aurora::traffic::TrafficMatrix::zeros(N_GROUPS);
+    for i in 0..N_GPUS {
+        for j in 0..N_GPUS {
+            if i != j && owner[i] != owner[j] {
+                group.add(owner[i], owner[j], agg.get(i, j));
+            }
+        }
+    }
+    assert_eq!(sched.inter_budget_tokens(), group.b_max_tokens());
+}
+
+/// The `topology` eval figure runs and reports a hierarchical win at 4x.
+#[test]
+fn topology_figure_reports_the_win() {
+    let cfg = EvalConfig {
+        n_layers: 2,
+        batch_images: 32,
+        ..EvalConfig::default()
+    };
+    let reports = run_figure("topology", &cfg).unwrap();
+    assert_eq!(reports.len(), 1);
+    let speedups = reports[0].column("speedup").unwrap();
+    assert_eq!(speedups.len(), 3);
+    assert!(
+        speedups[2] > 1.0,
+        "no hierarchical win at 4x: {speedups:?}"
+    );
+}

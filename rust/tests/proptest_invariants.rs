@@ -308,3 +308,93 @@ fn prop_matrix_algebra_invariants() {
         assert!(merged.b_max_tokens() <= d.b_max_tokens() * 2, "seed {seed}");
     }
 }
+
+/// PROPERTY: the hierarchical two-phase schedule conserves tokens per
+/// (src, dst) pair, splits flows cleanly into intra- and inter-group phases,
+/// and its uplink phase never exceeds the Theorem-4.2-style budget: the
+/// group-level round durations sum to exactly `b_max` of the group matrix,
+/// so the uplink phase's fluid drain time equals the uplink drain bound on
+/// homogeneous fabrics.
+#[test]
+fn prop_hierarchical_schedule_conserves_and_meets_uplink_budget() {
+    use aurora::cluster::{uplink_bound, Topology};
+    use aurora::schedule::hierarchical_schedule;
+
+    for seed in 0..40u64 {
+        let mut rng = Rng::new(seed ^ 0x70B0);
+        // 2..4 groups of 2..4 GPUs each
+        let n_groups = 2 + rng.gen_range(3) as usize;
+        let per = 2 + rng.gen_range(3) as usize;
+        let n = n_groups * per;
+        let oversub = 1.0 + rng.gen_range(4) as f64;
+        let d = rand_matrix(&mut rng, n, 40);
+        let cluster = Cluster::homogeneous(n, 1.0);
+        let topo = Topology::even_two_tier(n, n_groups, oversub).unwrap();
+        let owner = topo.group_of(n).unwrap();
+
+        let sched = hierarchical_schedule(&d, &cluster, &topo).unwrap();
+
+        // conservation per (src, dst)
+        let delivered = sched.delivered();
+        for i in 0..n {
+            for j in 0..n {
+                if i != j {
+                    assert_eq!(delivered.get(i, j), d.get(i, j), "seed {seed} ({i},{j})");
+                }
+            }
+        }
+        // phase separation
+        for s in &sched.intra {
+            for r in &s.rounds {
+                for &(src, dst, _) in &r.transfers {
+                    assert_eq!(owner[src], owner[dst], "seed {seed}: cross flow in intra");
+                }
+            }
+        }
+        for r in &sched.inter {
+            for &(src, dst, _) in &r.transfers {
+                assert_ne!(owner[src], owner[dst], "seed {seed}: local flow in inter");
+            }
+        }
+        // group-level rounds are partial permutations whose budgets sum to
+        // the group matrix's b_max — the uplink drain bound, exactly
+        let mut group = TrafficMatrix::zeros(n_groups);
+        for i in 0..n {
+            for j in 0..n {
+                if i != j && owner[i] != owner[j] {
+                    group.add(owner[i], owner[j], d.get(i, j));
+                }
+            }
+        }
+        for r in &sched.inter {
+            let mut send = vec![false; n_groups];
+            let mut recv = vec![false; n_groups];
+            for &(ga, gb, t) in &r.pairs {
+                assert!(!send[ga] && !recv[gb], "seed {seed}: group round contention");
+                send[ga] = true;
+                recv[gb] = true;
+                assert!(t <= r.budget, "seed {seed}: pair overruns round budget");
+            }
+        }
+        assert_eq!(
+            sched.inter_budget_tokens(),
+            group.b_max_tokens(),
+            "seed {seed}: uplink budget must equal the group-level b_max"
+        );
+        // fluid drain of the budget at the uplink rate equals the bound
+        let rates = topo.uplink_rates(&cluster);
+        let budget_drain = sched.inter_budget_tokens() as f64 / rates[0];
+        let bound = uplink_bound(&d, &cluster, &topo);
+        assert!(
+            (budget_drain - bound).abs() < 1e-9,
+            "seed {seed}: budget drain {budget_drain} vs bound {bound}"
+        );
+        // and the reported pipelined estimate respects both lower bounds
+        assert!(sched.pipelined_ms >= bound - 1e-9, "seed {seed}");
+        assert!(
+            sched.pipelined_ms >= d.b_max_hetero(&cluster.bandwidths()) - 1e-9,
+            "seed {seed}"
+        );
+        assert!(sched.sequential_ms >= sched.pipelined_ms - 1e-9, "seed {seed}");
+    }
+}
