@@ -48,9 +48,9 @@ pub use migration::{migration_preserves_target, plan_migration, MigrationFlow, M
 pub use online::{run_online, OnlineConfig, OnlineOutcome, OnlineStrategy};
 pub use swap::{PlanSwap, SwapPhase};
 
-use crate::cluster::{uplink_bound, Cluster, Topology};
+use crate::cluster::{Cluster, Topology};
 use crate::planner::{Planner, ReplicationConfig};
-use crate::replication::{estimate_bottleneck_replicated, ReplicatedDeployment, SplitPlan};
+use crate::replication::{estimate_objective_on, ReplicatedDeployment, SplitPlan};
 use crate::sim::MoeLayerStats;
 use crate::trace::ModelTrace;
 use crate::traffic::TrafficMatrix;
@@ -192,7 +192,12 @@ pub struct Coordinator {
 /// replan gate must see the fabric, or a candidate that relieves a
 /// saturated uplink (the dominant term under oversubscription) looks like
 /// no gain at all. Big switch ⇒ exactly
-/// [`estimate_bottleneck_replicated`].
+/// [`crate::replication::estimate_bottleneck_replicated`]. Computed through
+/// the planner's single-pass evaluator ([`estimate_objective_on`]) so the
+/// replan gate projects each model once instead of twice — same values, and
+/// the candidate plan itself now comes out of the incremental
+/// ([`crate::replication::ReplicaDeltaEstimator`]-driven) planner, which is
+/// what makes consulting it every drifted window affordable.
 fn serving_estimate_ms(
     rep: &ReplicatedDeployment,
     splits: &SplitPlan,
@@ -200,12 +205,7 @@ fn serving_estimate_ms(
     cluster: &Cluster,
     topo: &Topology,
 ) -> f64 {
-    let mut ms = estimate_bottleneck_replicated(rep, layers, cluster, splits);
-    if !matches!(topo, Topology::BigSwitch) {
-        let agg = rep.aggregated_traffic_split(layers, splits);
-        ms = ms.max(uplink_bound(&agg, cluster, topo));
-    }
-    ms
+    estimate_objective_on(rep, layers, cluster, topo, splits)
 }
 
 /// After this many consecutive gate-rejected candidates the detector

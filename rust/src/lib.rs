@@ -65,10 +65,20 @@
 //! ([`serve`], [`runtime`]); and an evaluation harness regenerating every
 //! figure of the paper plus the multi-model extension ([`eval`]).
 //!
+//! Planning scales to hundred-GPU clusters through the **incremental
+//! planning engine**: [`placement::DeltaEstimator`] and
+//! [`replication::ReplicaDeltaEstimator`] maintain the planner's objectives
+//! as exact integer token counters under moves, swaps, and replica
+//! additions, and [`planner::Planner::plan_replicated`] runs a lazy-greedy
+//! (CELF-style) candidate queue on top — with a `rayon` cargo feature for
+//! the parallel (deterministically reduced) exact first sweep
+//! ([`util::par::par_map`]).
+//!
 //! See `docs/architecture.md` for the layer map, the Scenario decision tree,
 //! the "Hierarchical scheduling" section (two-tier topologies, the two-phase
-//! decomposition, and the uplink bounds), and which code paths are exact
-//! versus heuristic.
+//! decomposition, and the uplink bounds), the "Performance & incremental
+//! planning" section (complexity table, lazy-greedy invariants, rebuild
+//! points), and which code paths are exact versus heuristic.
 
 pub mod assignment;
 pub mod cluster;

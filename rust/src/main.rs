@@ -553,6 +553,45 @@ fn cmd_bench(opts: &Opts) -> Result<(), String> {
         },
     );
 
+    // Large-scale entries: the incremental planning engine's target shapes
+    // (one expert per GPU, Zipf(1.2) routing), where the lazy-greedy
+    // replication loop and the delta-estimated refinements dominate. At
+    // these sizes a single plan may exceed the per-case budget; the harness
+    // still takes one warm iteration and at least one sample.
+    for &n in &[64usize, 128, 256] {
+        let big_cluster = Cluster::homogeneous(n, 800.0);
+        let big_trace = skewed_workload(n, 2, 512, 1.2, cfg.seed);
+        let big_refs = [&big_trace];
+        b.run(
+            &format!("planner: plan_replicated zipf(1.2) {n} on {n} GPUs"),
+            || {
+                planner
+                    .plan_replicated(&big_refs, &big_cluster, &rep_cfg)
+                    .unwrap()
+                    .0
+                    .added_replicas()
+            },
+        );
+        let big_topo = aurora::cluster::Topology::even_two_tier(n, 8, 4.0)
+            .map_err(|e| e.to_string())?;
+        b.run(
+            &format!("planner: plan_topology zipf(1.2) {n} on {n} GPUs 8g x4"),
+            || {
+                planner
+                    .plan_topology(&big_refs, &big_cluster, &big_topo)
+                    .unwrap()
+                    .max_group_size()
+            },
+        );
+    }
+    for &n in &[64usize, 128] {
+        let big_trace = skewed_workload(n, 1, 512, 1.2, cfg.seed);
+        let d_big = &big_trace.layers[0].traffic;
+        b.run(&format!("schedule: bvn slot schedule {n}x{n}"), || {
+            aurora_schedule(d_big).makespan_tokens()
+        });
+    }
+
     let benchmarks: Vec<Json> = b
         .samples()
         .iter()

@@ -1,0 +1,393 @@
+//! Incremental (delta) maintenance of the planner's objectives.
+//!
+//! The local-search refinements of [`crate::planner::Planner::plan_multi`] /
+//! [`crate::planner::Planner::plan_topology`] score thousands of candidate
+//! moves and swaps. Recomputing the per-GPU completion estimates
+//! ([`super::estimate_per_gpu`]) or the cross-uplink drain from scratch for
+//! every candidate costs O(models · experts²) each time; at 64–256 GPUs that
+//! dominates planning. [`DeltaEstimator`] maintains the same quantities
+//! under single-expert moves in **O(expert degree + group degree)** per
+//! update.
+//!
+//! Exactness, not approximation: every maintained quantity is an integer
+//! token counter (`u64`), so incremental updates are exact — no
+//! floating-point drift ever accumulates. The `f64` estimates are derived
+//! from the counters with the *same operation order* as the from-scratch
+//! code ([`super::estimate_per_gpu`], [`crate::cluster::uplink_bound`] of
+//! the projected aggregate), so a refinement pass driven by the estimator
+//! makes bit-for-bit the same accept/reject decisions as one driven by full
+//! rescans. The `prop_delta_estimator_matches_full_rescan` property test
+//! (in `rust/tests/proptest_invariants.rs`) pins this after randomized
+//! move/swap sequences.
+//!
+//! Counters maintained per committed move of `(model m, expert e)` from GPU
+//! `a` to GPU `b`:
+//!
+//! * per-model per-GPU FFN token load (`e`'s static load relocates);
+//! * per-GPU cross-GPU send/receive token totals — only `a`'s and `b`'s
+//!   totals change (a flow `e ↔ e2` with `e2` elsewhere merely relabels one
+//!   endpoint), updated by walking `e`'s traffic row and column once;
+//! * on a two-tier fabric, per-group uplink up/down token totals — flows of
+//!   `e` change crossing status only relative to their partner's group.
+//!
+//! Estimates are rebuilt from scratch exactly once per refinement pass (at
+//! [`DeltaEstimator::new`]); everything after that is deltas.
+
+use super::Deployment;
+use crate::cluster::{Cluster, Topology};
+use crate::sim::MoeLayerStats;
+
+/// Incrementally-maintained per-GPU completion estimates and per-uplink
+/// token counters for a (mutating) [`Deployment`].
+///
+/// The estimator keeps its own copy of the expert→GPU assignment;
+/// [`DeltaEstimator::apply_move`] advances it. Callers that mutate a
+/// `Deployment` alongside (the planner's refinement loops) commit the same
+/// move to both. A rejected candidate is undone by applying the inverse
+/// move — integer counters make that exact.
+#[derive(Debug, Clone)]
+pub struct DeltaEstimator<'a> {
+    layers: &'a [&'a MoeLayerStats],
+    cluster: &'a Cluster,
+    /// The estimator's view of `assignments[m][e]` = GPU of model `m`'s
+    /// expert `e` (kept in sync by `apply_move`).
+    assignments: Vec<Vec<usize>>,
+    /// Static per-expert token loads per model.
+    loads: Vec<Vec<u64>>,
+    /// `gpu_load[m][g]` = model `m`'s token load hosted on GPU `g`.
+    gpu_load: Vec<Vec<u64>>,
+    /// Cross-GPU tokens sent from / received at each GPU (diagonal excluded,
+    /// exactly the projected aggregate's off-diagonal row/col sums).
+    out: Vec<u64>,
+    inn: Vec<u64>,
+    /// Group of each GPU (`None` on the big switch).
+    owner: Option<Vec<usize>>,
+    /// Per-group uplink rates (tokens/ms).
+    rates: Vec<f64>,
+    /// Cross-group tokens leaving / entering each group.
+    up: Vec<u64>,
+    down: Vec<u64>,
+    /// Per-GPU completion estimates, always current.
+    costs: Vec<f64>,
+}
+
+impl<'a> DeltaEstimator<'a> {
+    /// Build the counters from scratch for `dep` — the one O(models ·
+    /// experts²) pass per refinement; every later update is a delta.
+    ///
+    /// Panics when `topo` does not fit the cluster (the planner surface
+    /// validates topologies before refinement runs).
+    pub fn new(
+        dep: &Deployment,
+        layers: &'a [&'a MoeLayerStats],
+        cluster: &'a Cluster,
+        topo: &Topology,
+    ) -> DeltaEstimator<'a> {
+        assert_eq!(layers.len(), dep.n_models(), "one layer per model");
+        assert_eq!(cluster.len(), dep.n_gpus, "cluster must match the deployment");
+        let n = dep.n_gpus;
+        let owner = topo.group_of(n);
+        let rates = topo.uplink_rates(cluster);
+        let n_groups = rates.len();
+        let loads: Vec<Vec<u64>> = layers.iter().map(|l| l.expert_loads()).collect();
+
+        let mut gpu_load = vec![vec![0u64; n]; layers.len()];
+        let mut out = vec![0u64; n];
+        let mut inn = vec![0u64; n];
+        let mut up = vec![0u64; n_groups];
+        let mut down = vec![0u64; n_groups];
+        for (m, layer) in layers.iter().enumerate() {
+            let a = &dep.assignments[m];
+            for (e, &g) in a.iter().enumerate() {
+                gpu_load[m][g] += loads[m][e];
+                for (e2, &g2) in a.iter().enumerate() {
+                    if e == e2 {
+                        continue;
+                    }
+                    let t = layer.traffic.get(e, e2);
+                    if t == 0 {
+                        continue;
+                    }
+                    if g != g2 {
+                        out[g] += t;
+                        inn[g2] += t;
+                    }
+                    if let Some(ow) = &owner {
+                        if ow[g] != ow[g2] {
+                            up[ow[g]] += t;
+                            down[ow[g2]] += t;
+                        }
+                    }
+                }
+            }
+        }
+
+        let mut est = DeltaEstimator {
+            layers,
+            cluster,
+            assignments: dep.assignments.clone(),
+            loads,
+            gpu_load,
+            out,
+            inn,
+            owner,
+            rates,
+            up,
+            down,
+            costs: vec![0.0; n],
+        };
+        for g in 0..n {
+            est.costs[g] = est.recompute_cost(g);
+        }
+        est
+    }
+
+    /// The per-GPU completion estimate of GPU `g`, derived from the counters
+    /// with [`super::estimate_per_gpu`]'s exact operation order.
+    fn recompute_cost(&self, g: usize) -> f64 {
+        let mut compute = 0.0f64;
+        for (m, layer) in self.layers.iter().enumerate() {
+            compute +=
+                layer.gate_ms + layer.agg_ms + self.gpu_load[m][g] as f64 * layer.ffn_ms_per_token;
+        }
+        let gpu = self.cluster.gpu(g);
+        let wire = self.out[g].max(self.inn[g]) as f64 / gpu.bandwidth;
+        compute / gpu.flops_scale + wire
+    }
+
+    /// Move model `m`'s expert `e` to GPU `to`, updating every counter in
+    /// O(expert degree). A no-op when the expert already lives there.
+    pub fn apply_move(&mut self, m: usize, e: usize, to: usize) {
+        let from = self.assignments[m][e];
+        if from == to {
+            return;
+        }
+        let layer: &MoeLayerStats = self.layers[m];
+        let load = self.loads[m][e];
+        self.gpu_load[m][from] -= load;
+        self.gpu_load[m][to] += load;
+        let (hf, ht) = match &self.owner {
+            Some(ow) => (ow[from], ow[to]),
+            None => (0, 0),
+        };
+        for e2 in 0..layer.n_experts() {
+            if e2 == e {
+                continue;
+            }
+            let g2 = self.assignments[m][e2];
+            let t_out = layer.traffic.get(e, e2);
+            let t_in = layer.traffic.get(e2, e);
+            if t_out > 0 {
+                if g2 != from {
+                    self.out[from] -= t_out;
+                    self.inn[g2] -= t_out;
+                }
+                if g2 != to {
+                    self.out[to] += t_out;
+                    self.inn[g2] += t_out;
+                }
+            }
+            if t_in > 0 {
+                if g2 != from {
+                    self.inn[from] -= t_in;
+                    self.out[g2] -= t_in;
+                }
+                if g2 != to {
+                    self.inn[to] += t_in;
+                    self.out[g2] += t_in;
+                }
+            }
+            if let Some(ow) = &self.owner {
+                let h2 = ow[g2];
+                if t_out > 0 {
+                    if hf != h2 {
+                        self.up[hf] -= t_out;
+                        self.down[h2] -= t_out;
+                    }
+                    if ht != h2 {
+                        self.up[ht] += t_out;
+                        self.down[h2] += t_out;
+                    }
+                }
+                if t_in > 0 {
+                    if h2 != hf {
+                        self.up[h2] -= t_in;
+                        self.down[hf] -= t_in;
+                    }
+                    if h2 != ht {
+                        self.up[h2] += t_in;
+                        self.down[ht] += t_in;
+                    }
+                }
+            }
+        }
+        self.assignments[m][e] = to;
+        self.costs[from] = self.recompute_cost(from);
+        self.costs[to] = self.recompute_cost(to);
+    }
+
+    /// Exchange the GPUs of two experts (two moves; exact under the integer
+    /// counters, so applying the same swap again is the exact inverse).
+    pub fn apply_swap(&mut self, m1: usize, e1: usize, m2: usize, e2: usize) {
+        let g1 = self.assignments[m1][e1];
+        let g2 = self.assignments[m2][e2];
+        self.apply_move(m1, e1, g2);
+        self.apply_move(m2, e2, g1);
+    }
+
+    /// GPU currently hosting model `m`'s expert `e` (the estimator's view).
+    pub fn gpu_of(&self, m: usize, e: usize) -> usize {
+        self.assignments[m][e]
+    }
+
+    /// Per-GPU completion estimates — always current; equal to
+    /// [`super::estimate_per_gpu`] of the tracked deployment.
+    pub fn costs(&self) -> &[f64] {
+        &self.costs
+    }
+
+    /// Completion estimate of one GPU.
+    pub fn cost(&self, g: usize) -> f64 {
+        self.costs[g]
+    }
+
+    /// Max per-GPU completion estimate (the refinement objective's port
+    /// half).
+    pub fn bottleneck(&self) -> f64 {
+        self.costs.iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// Cross-uplink drain (ms) of the tracked deployment — equal to
+    /// [`crate::cluster::uplink_bound`] of the projected aggregate traffic;
+    /// `0.0` on the big switch.
+    pub fn uplink_drain_ms(&self) -> f64 {
+        if self.owner.is_none() {
+            return 0.0;
+        }
+        self.up
+            .iter()
+            .zip(&self.down)
+            .zip(&self.rates)
+            .map(|((&u, &d), &r)| u.max(d) as f64 / r)
+            .fold(0.0, f64::max)
+    }
+
+    /// Group of GPU `g` (`None` on the big switch).
+    pub fn group_of_gpu(&self, g: usize) -> Option<usize> {
+        self.owner.as_ref().map(|ow| ow[g])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::uplink_bound;
+    use crate::placement::{estimate_per_gpu, Scenario};
+    use crate::schedule::SchedulePolicy;
+    use crate::traffic::TrafficMatrix;
+    use crate::util::Rng;
+
+    fn layer(n: usize, seed: u64) -> MoeLayerStats {
+        let mut rng = Rng::new(seed);
+        let mut d = TrafficMatrix::zeros(n);
+        for i in 0..n {
+            for j in 0..n {
+                if i != j {
+                    d.set(i, j, rng.gen_range(20));
+                }
+            }
+        }
+        MoeLayerStats {
+            traffic: d,
+            gate_ms: 0.1,
+            ffn_ms_per_token: 0.01,
+            agg_ms: 0.05,
+        }
+    }
+
+    #[test]
+    fn matches_full_estimates_after_random_moves() {
+        let la = layer(10, 5);
+        let lb = layer(6, 6);
+        let layers = [&la, &lb];
+        let cluster = Cluster::paper_heterogeneous(4, 80.0);
+        let topo = Topology::even_two_tier(4, 2, 4.0).unwrap();
+        let mut dep = Deployment::new(
+            4,
+            vec![vec![0, 1, 2, 3, 0, 1, 2, 3, 0, 1], vec![3, 2, 1, 0, 3, 2]],
+            SchedulePolicy::Aurora,
+            Scenario::MultiColocated,
+        )
+        .unwrap();
+        let mut est = DeltaEstimator::new(&dep, &layers, &cluster, &topo);
+        let mut rng = Rng::new(99);
+        let totals: Vec<MoeLayerStats> = vec![la.clone(), lb.clone()];
+        for step in 0..60 {
+            let m = rng.gen_range(2) as usize;
+            let e = rng.gen_range(dep.assignments[m].len() as u64) as usize;
+            let g = rng.gen_range(4) as usize;
+            est.apply_move(m, e, g);
+            dep.assignments[m][e] = g;
+            let refs: Vec<&MoeLayerStats> = totals.iter().collect();
+            let full = estimate_per_gpu(&dep, &refs, &cluster);
+            for (gpu, &c) in full.iter().enumerate() {
+                assert!(
+                    (est.cost(gpu) - c).abs() < 1e-12,
+                    "step {step} gpu {gpu}: {} vs {c}",
+                    est.cost(gpu)
+                );
+            }
+            let agg = dep.aggregated_traffic(&refs);
+            let drain = uplink_bound(&agg, &cluster, &topo);
+            assert!(
+                (est.uplink_drain_ms() - drain).abs() < 1e-12,
+                "step {step}: {} vs {drain}",
+                est.uplink_drain_ms()
+            );
+        }
+    }
+
+    #[test]
+    fn move_then_inverse_restores_counters_exactly() {
+        let la = layer(8, 11);
+        let layers = [&la];
+        let cluster = Cluster::homogeneous(4, 100.0);
+        let dep = Deployment::new(
+            4,
+            vec![vec![0, 1, 2, 3, 0, 1, 2, 3]],
+            SchedulePolicy::Aurora,
+            Scenario::ExclusiveHomogeneous,
+        )
+        .unwrap();
+        let topo = Topology::even_two_tier(4, 2, 2.0).unwrap();
+        let before = DeltaEstimator::new(&dep, &layers, &cluster, &topo);
+        let mut est = before.clone();
+        est.apply_move(0, 3, 0);
+        est.apply_move(0, 3, 3);
+        assert_eq!(est.out, before.out);
+        assert_eq!(est.inn, before.inn);
+        assert_eq!(est.up, before.up);
+        assert_eq!(est.down, before.down);
+        assert_eq!(est.gpu_load, before.gpu_load);
+        for g in 0..4 {
+            assert_eq!(est.cost(g).to_bits(), before.cost(g).to_bits(), "gpu {g}");
+        }
+    }
+
+    #[test]
+    fn big_switch_has_zero_drain_and_no_groups() {
+        let la = layer(4, 3);
+        let layers = [&la];
+        let cluster = Cluster::homogeneous(4, 100.0);
+        let dep = Deployment::new(
+            4,
+            vec![vec![0, 1, 2, 3]],
+            SchedulePolicy::Aurora,
+            Scenario::ExclusiveHomogeneous,
+        )
+        .unwrap();
+        let est = DeltaEstimator::new(&dep, &layers, &cluster, &Topology::BigSwitch);
+        assert_eq!(est.uplink_drain_ms(), 0.0);
+        assert_eq!(est.group_of_gpu(2), None);
+    }
+}

@@ -20,6 +20,16 @@
 //! [`Scenario`] — the Fig. 2 decision tree plus the new
 //! [`Scenario::MultiColocated`] leaf — also lives here, so an N > 2 request
 //! is a planned path rather than a crash.
+//!
+//! [`DeltaEstimator`] (the [`delta`] submodule) maintains the per-GPU
+//! completion estimates and per-uplink token counters *incrementally* under
+//! single-expert moves — the engine that lets the planner's local search
+//! scale to hundreds of GPUs (see "Performance & incremental planning" in
+//! `docs/architecture.md`).
+
+pub mod delta;
+
+pub use delta::DeltaEstimator;
 
 use crate::cluster::{Cluster, Topology};
 use crate::schedule::SchedulePolicy;
@@ -459,8 +469,10 @@ pub fn estimate_bottleneck(
 /// be each model's static per-expert loads
 /// ([`MoeLayerStats::expert_loads`]). Produces exactly the same value as
 /// `estimate_per_gpu(..)[g]` (same floating-point operation order), which
-/// is what makes it usable as a delta evaluator in the planner's local
-/// search: a move or swap only changes its endpoint GPUs' costs.
+/// is what makes it usable as a one-shot endpoint re-evaluator: a move or
+/// swap only changes its endpoint GPUs' costs. (The planner's refinement
+/// loops go further and maintain all per-GPU costs incrementally via
+/// [`DeltaEstimator`].)
 pub fn estimate_one_gpu(
     deployment: &Deployment,
     layers: &[&MoeLayerStats],

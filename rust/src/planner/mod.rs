@@ -20,18 +20,21 @@
 //!   completion estimate of §7.2.
 
 use crate::assignment::sorted_assignment;
-use crate::cluster::{uplink_bound, Cluster, Topology};
+use crate::cluster::{Cluster, Topology};
 use crate::colocation::hetero::decoupled_solution;
 use crate::colocation::{case2_pairing, send_recv_volumes};
-use crate::placement::{estimate_one_gpu, estimate_per_gpu, Deployment};
+use crate::placement::{DeltaEstimator, Deployment};
 use crate::replication::{
-    estimate_per_gpu_replicated, optimize_splits, refine_replicated, ReplicatedDeployment,
-    SplitPlan,
+    estimate_objective_on, optimize_splits, refine_replicated, ReplicaDeltaEstimator,
+    ReplicatedDeployment, SplitPlan,
 };
 use crate::schedule::SchedulePolicy;
 use crate::sim::MoeLayerStats;
 use crate::trace::{aggregate_totals, ModelTrace};
+use crate::util::par::par_map;
 use crate::util::Json;
+use std::cmp::{Ordering, Reverse};
+use std::collections::{BinaryHeap, HashMap};
 
 pub use crate::placement::{PlacementError, Scenario};
 
@@ -375,6 +378,25 @@ impl Planner {
         self.plan_replicated_on(traces, cluster, topo, cfg)
     }
 
+    /// The shared replication pipeline behind [`Planner::plan_replicated`] /
+    /// [`Planner::plan_replicated_topology`].
+    ///
+    /// Candidate pricing is incremental
+    /// ([`ReplicaDeltaEstimator::eval_add`]): the water-filling split plan
+    /// is re-solved with cached expert loads, and only the experts whose
+    /// splits actually changed re-place their traffic onto cloned integer
+    /// counters. At small scale (expert units × GPUs ≤ 1024) every
+    /// candidate is re-priced each iteration — bit-for-bit the historical
+    /// selections, just cheaper. Above that the greedy goes **lazy-greedy
+    /// (CELF-style)**: every candidate for the current bottleneck GPU is
+    /// priced exactly once into a priority queue (the exact first sweep —
+    /// parallel under the `rayon` feature, with an index-ordered reduction
+    /// so results are bit-for-bit the serial ones), and after each commit
+    /// only popped entries are re-priced until the cheapest bound is fresh.
+    /// Re-pricing on pop keeps accepted values exact; the lazy part assumes
+    /// diminishing returns (a commit elsewhere rarely makes a worse-bounded
+    /// candidate better), the standard CELF invariant — see "Performance &
+    /// incremental planning" in `docs/architecture.md`.
     fn plan_replicated_on(
         &self,
         traces: &[&ModelTrace],
@@ -393,61 +415,131 @@ impl Planner {
         let layers: Vec<&MoeLayerStats> = totals.iter().collect();
         let n = cluster.len();
 
-        let eval = |rep: &ReplicatedDeployment| -> (f64, Vec<f64>) {
-            let plan = optimize_splits(rep, &layers, cluster);
-            let costs = estimate_per_gpu_replicated(rep, &layers, cluster, &plan);
-            let mut mx = costs.iter().cloned().fold(0.0, f64::max);
-            if !matches!(topo, Topology::BigSwitch) {
-                let agg = rep.aggregated_traffic_split(&layers, &plan);
-                mx = mx.max(uplink_bound(&agg, cluster, topo));
-            }
-            (mx, costs)
-        };
+        let mut est = ReplicaDeltaEstimator::new(&rep, &layers, cluster, topo);
+        let mut best = est.objective();
 
-        let (mut best, mut costs) = eval(&rep);
+        // Below this (expert units × GPUs) size the greedy re-prices every
+        // candidate each iteration — still fast, since pricing is
+        // incremental, and **bit-for-bit the historical selections**. Above
+        // it the lazy (CELF) queue takes over: re-pricing the whole
+        // candidate set per iteration is what stops scaling first.
+        let units_total: usize = (0..rep.n_models()).map(|m| rep.base.n_experts(m)).sum();
+        let lazy = units_total * n > 1024;
+
+        // Lazy-greedy state: cached candidate bounds (objective after the
+        // addition) in a min-heap, stamped with the commit version they
+        // were priced against.
+        let mut heap: BinaryHeap<Reverse<Cand>> = BinaryHeap::new();
+        let mut cache: HashMap<(usize, usize, usize), (f64, u64)> = HashMap::new();
+        let mut version: u64 = 0;
+        let mut last_hot: Option<usize> = None;
+
         // Hard cap on added replicas keeps the greedy loop polynomial even
         // with an unlimited slot budget.
         let cap = if cfg.slots_per_gpu > 0 { n * cfg.slots_per_gpu } else { n * 4 };
         while rep.added_replicas() < cap {
             // Bottleneck GPU and the experts contributing load to it.
             let hot_gpu = (0..n)
-                .max_by(|&a, &b| costs[a].partial_cmp(&costs[b]).unwrap())
+                .max_by(|&a, &b| est.costs()[a].partial_cmp(&est.costs()[b]).unwrap())
                 .expect("cluster is non-empty");
             let slots = rep.slots_per_gpu();
-            let mut candidate: Option<(usize, usize, usize, f64)> = None;
-            for m in 0..rep.n_models() {
-                for e in 0..rep.base.n_experts(m) {
-                    if !rep.replicas[m][e].contains(&hot_gpu)
-                        || rep.replica_count(m, e) >= cfg.max_replicas
-                    {
-                        continue;
-                    }
-                    for g in 0..n {
-                        if rep.replicas[m][e].contains(&g) {
+            let mut chosen: Option<Cand> = None;
+            if !lazy {
+                // Exhaustive sweep (the historical loop, incrementally
+                // priced): first strict minimum wins ties.
+                for m in 0..rep.n_models() {
+                    for e in 0..rep.base.n_experts(m) {
+                        if !rep.replicas[m][e].contains(&hot_gpu)
+                            || rep.replica_count(m, e) >= cfg.max_replicas
+                        {
                             continue;
                         }
-                        if cfg.slots_per_gpu > 0 && slots[g] >= cfg.slots_per_gpu {
-                            continue;
-                        }
-                        rep.replicas[m][e].push(g);
-                        let (mx, _) = eval(&rep);
-                        rep.replicas[m][e].pop();
-                        let better = match candidate {
-                            None => true,
-                            Some((_, _, _, cur)) => mx < cur,
-                        };
-                        if better {
-                            candidate = Some((m, e, g, mx));
+                        for g in 0..n {
+                            if rep.replicas[m][e].contains(&g) {
+                                continue;
+                            }
+                            if cfg.slots_per_gpu > 0 && slots[g] >= cfg.slots_per_gpu {
+                                continue;
+                            }
+                            let mx = est.eval_add(m, e, g);
+                            let better = match &chosen {
+                                None => true,
+                                Some(c) => mx < c.mx,
+                            };
+                            if better {
+                                chosen = Some(Cand { mx, m, e, g, stamp: version });
+                            }
                         }
                     }
                 }
+            } else {
+                if last_hot != Some(hot_gpu) {
+                    // The bottleneck moved: rebuild the queue for its
+                    // candidate set (in the historical iteration order, so
+                    // heap ties break to the same candidate the exhaustive
+                    // loop chooses). Known candidates re-enter with their
+                    // cached bounds; unseen ones get the exact sweep.
+                    heap.clear();
+                    let mut cands: Vec<(usize, usize, usize)> = Vec::new();
+                    for m in 0..rep.n_models() {
+                        for e in 0..rep.base.n_experts(m) {
+                            if !rep.replicas[m][e].contains(&hot_gpu)
+                                || rep.replica_count(m, e) >= cfg.max_replicas
+                            {
+                                continue;
+                            }
+                            for g in 0..n {
+                                if rep.replicas[m][e].contains(&g) {
+                                    continue;
+                                }
+                                if cfg.slots_per_gpu > 0 && slots[g] >= cfg.slots_per_gpu {
+                                    continue;
+                                }
+                                cands.push((m, e, g));
+                            }
+                        }
+                    }
+                    let unseen: Vec<(usize, usize, usize)> = cands
+                        .iter()
+                        .copied()
+                        .filter(|c| !cache.contains_key(c))
+                        .collect();
+                    let swept = par_map(&unseen, |&(m, e, g)| est.eval_add(m, e, g));
+                    for (&c, &mx) in unseen.iter().zip(&swept) {
+                        cache.insert(c, (mx, version));
+                    }
+                    for &(m, e, g) in &cands {
+                        let &(mx, stamp) = cache.get(&(m, e, g)).expect("swept above");
+                        heap.push(Reverse(Cand { mx, m, e, g, stamp }));
+                    }
+                    last_hot = Some(hot_gpu);
+                }
+
+                // CELF pop loop: re-price stale entries until the cheapest
+                // bound is fresh for the current committed state.
+                while let Some(Reverse(cand)) = heap.pop() {
+                    let Cand { m, e, g, stamp, .. } = cand;
+                    if rep.replicas[m][e].contains(&g)
+                        || rep.replica_count(m, e) >= cfg.max_replicas
+                        || (cfg.slots_per_gpu > 0 && slots[g] >= cfg.slots_per_gpu)
+                    {
+                        continue; // invalidated by an earlier commit
+                    }
+                    if stamp == version {
+                        chosen = Some(cand);
+                        break;
+                    }
+                    let mx = est.eval_add(m, e, g);
+                    cache.insert((m, e, g), (mx, version));
+                    heap.push(Reverse(Cand { mx, m, e, g, stamp: version }));
+                }
             }
-            match candidate {
-                Some((m, e, g, mx)) if mx < best * (1.0 - cfg.min_gain) => {
-                    rep.replicas[m][e].push(g);
-                    let (b, c) = eval(&rep);
-                    best = b;
-                    costs = c;
+            match chosen {
+                Some(c) if c.mx < best * (1.0 - cfg.min_gain) => {
+                    est.commit_add(c.m, c.e, c.g);
+                    rep.replicas[c.m][c.e].push(c.g);
+                    best = est.objective();
+                    version += 1;
                 }
                 _ => break,
             }
@@ -462,10 +554,14 @@ impl Planner {
                     // The split-aware refinement optimizes the port estimate
                     // only; on a two-tier fabric keep its result just when it
                     // does not worsen the combined (port ∨ uplink) objective.
+                    let eval = |rep: &ReplicatedDeployment| -> f64 {
+                        let plan = optimize_splits(rep, &layers, cluster);
+                        estimate_objective_on(rep, &layers, cluster, topo, &plan)
+                    };
                     let before = rep.clone();
-                    let (mx_before, _) = eval(&rep);
+                    let mx_before = eval(&rep);
                     refine_replicated(&mut rep, &layers, cluster, cfg.slots_per_gpu);
-                    let (mx_after, _) = eval(&rep);
+                    let mx_after = eval(&rep);
                     if mx_after > mx_before + 1e-12 {
                         rep = before;
                     }
@@ -474,6 +570,44 @@ impl Planner {
         }
         let splits = optimize_splits(&rep, &layers, cluster);
         Ok((rep, splits))
+    }
+}
+
+/// Lazy-greedy queue entry: a candidate replica addition and its cached
+/// bound on the post-addition objective. Ordered by `(mx, m, e, g)` so heap
+/// ties resolve to the first candidate in the historical sweep order;
+/// `stamp` records the commit version the bound was priced against and does
+/// not participate in the ordering.
+#[derive(Debug, Clone, Copy)]
+struct Cand {
+    mx: f64,
+    m: usize,
+    e: usize,
+    g: usize,
+    stamp: u64,
+}
+
+impl PartialEq for Cand {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for Cand {}
+
+impl PartialOrd for Cand {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Cand {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.mx
+            .total_cmp(&other.mx)
+            .then(self.m.cmp(&other.m))
+            .then(self.e.cmp(&other.e))
+            .then(self.g.cmp(&other.g))
     }
 }
 
@@ -576,79 +710,6 @@ fn greedy_lpt_assignments(traces: &[&ModelTrace], cluster: &Cluster) -> Vec<Vec<
     assignments
 }
 
-/// Score an (already-mutated) deployment given only GPUs `a`/`b` changed:
-/// fresh endpoint costs ([`estimate_one_gpu`]) joined with the cached rest.
-fn endpoint_costs(
-    dep: &Deployment,
-    layers: &[&MoeLayerStats],
-    cluster: &Cluster,
-    expert_loads: &[Vec<u64>],
-    costs: &[f64],
-    a: usize,
-    b: usize,
-) -> (f64, f64, f64) {
-    let ca = estimate_one_gpu(dep, layers, cluster, expert_loads, a);
-    let cb = estimate_one_gpu(dep, layers, cluster, expert_loads, b);
-    let mut mx = ca.max(cb);
-    for (g, &c) in costs.iter().enumerate() {
-        if g != a && g != b {
-            mx = mx.max(c);
-        }
-    }
-    (mx, ca, cb)
-}
-
-/// Per-group cross-uplink `(up, down)` token totals of a deployment,
-/// computed directly from the expert-level matrices (no projection
-/// materialized): a flow crosses when its endpoint experts sit on GPUs of
-/// different groups.
-fn cross_uplink_updown(
-    dep: &Deployment,
-    layers: &[&MoeLayerStats],
-    owner: &[usize],
-    n_groups: usize,
-) -> (Vec<u64>, Vec<u64>) {
-    let mut up = vec![0u64; n_groups];
-    let mut down = vec![0u64; n_groups];
-    for (m, layer) in layers.iter().enumerate() {
-        let a = &dep.assignments[m];
-        for (e1, &gpu1) in a.iter().enumerate() {
-            let g1 = owner[gpu1];
-            for (e2, &gpu2) in a.iter().enumerate() {
-                if e1 == e2 {
-                    continue;
-                }
-                let g2 = owner[gpu2];
-                if g1 != g2 {
-                    let t = layer.traffic.get(e1, e2);
-                    if t > 0 {
-                        up[g1] += t;
-                        down[g2] += t;
-                    }
-                }
-            }
-        }
-    }
-    (up, down)
-}
-
-/// Cross-uplink drain time (ms) of a deployment: the slowest group uplink's
-/// worst-direction token volume over its rate — exactly
-/// [`crate::cluster::uplink_bound`] of the projected aggregate traffic.
-fn uplink_drain_ms(
-    dep: &Deployment,
-    layers: &[&MoeLayerStats],
-    owner: &[usize],
-    rates: &[f64],
-) -> f64 {
-    let (up, down) = cross_uplink_updown(dep, layers, owner, rates.len());
-    up.iter()
-        .zip(&down)
-        .zip(rates)
-        .map(|((&u, &d), &r)| u.max(d) as f64 / r)
-        .fold(0.0, f64::max)
-}
-
 /// The group-local pass of [`Planner::plan_topology`]: single-expert moves
 /// and pairwise swaps accepted when they shrink the **combined** objective
 /// `max(per-GPU completion estimate, cross-uplink drain)` — the fluid form
@@ -658,25 +719,29 @@ fn uplink_drain_ms(
 /// drain alone would happily collapse every expert into one group (zero
 /// uplink traffic, hopeless ports); the combined form cannot. Bounded
 /// rounds keep it polynomial.
+///
+/// Candidates are priced through a [`DeltaEstimator`]: per-GPU estimates
+/// and per-uplink token counters advance in O(expert degree) per trial move
+/// instead of the historical full `uplink_drain_ms` rescan (O(models ·
+/// experts²)) per cross-group candidate. The counters are exact integers,
+/// so the accept/reject decisions are bit-for-bit the rescanning ones.
 fn refine_uplink(
     dep: &mut Deployment,
     layers: &[&MoeLayerStats],
     cluster: &Cluster,
     topo: &Topology,
 ) {
-    let Some(owner) = topo.group_of(dep.n_gpus) else {
+    if matches!(topo, Topology::BigSwitch) {
         return;
-    };
-    let rates = topo.uplink_rates(cluster);
+    }
     let n = dep.n_gpus;
     let units: Vec<(usize, usize)> = (0..dep.n_models())
         .flat_map(|m| (0..dep.n_experts(m)).map(move |e| (m, e)))
         .collect();
-    let expert_loads: Vec<Vec<u64>> = layers.iter().map(|l| l.expert_loads()).collect();
 
-    let mut costs = estimate_per_gpu(dep, layers, cluster);
-    let mut best_port = costs.iter().cloned().fold(0.0, f64::max);
-    let mut best_drain = uplink_drain_ms(dep, layers, &owner, &rates);
+    let mut est = DeltaEstimator::new(dep, layers, cluster, topo);
+    let mut best_port = est.bottleneck();
+    let mut best_drain = est.uplink_drain_ms();
     let accepts = |mx: f64, nd: f64, best_port: f64, best_drain: f64| -> bool {
         let cand = mx.max(nd);
         let best = best_port.max(best_drain);
@@ -691,31 +756,17 @@ fn refine_uplink(
                 if g == cur {
                     continue;
                 }
-                dep.assignments[m][e] = g;
-                let (mx, c_cur, c_g) =
-                    endpoint_costs(dep, layers, cluster, &expert_loads, &costs, cur, g);
-                // Both accept clauses need the candidate's combined value at
-                // or below the current best, so a port max already past it
-                // makes the O(E²) drain recompute pointless; and a move
-                // inside one group cannot change what crosses an uplink.
-                if mx > best_port.max(best_drain) + 1e-9 {
-                    dep.assignments[m][e] = cur;
-                    continue;
-                }
-                let nd = if owner[cur] == owner[g] {
-                    best_drain
-                } else {
-                    uplink_drain_ms(dep, layers, &owner, &rates)
-                };
+                est.apply_move(m, e, g);
+                let mx = est.bottleneck();
+                let nd = est.uplink_drain_ms();
                 if accepts(mx, nd, best_port, best_drain) {
-                    costs[cur] = c_cur;
-                    costs[g] = c_g;
+                    dep.assignments[m][e] = g;
                     best_port = mx;
                     best_drain = nd;
                     improved = true;
                     break; // unit committed; on to the next one
                 }
-                dep.assignments[m][e] = cur;
+                est.apply_move(m, e, cur);
             }
         }
         for i in 0..units.len() {
@@ -724,29 +775,21 @@ fn refine_uplink(
                 let (m2, e2) = units[j];
                 let g1 = dep.assignments[m1][e1];
                 let g2 = dep.assignments[m2][e2];
-                if g1 == g2 || owner[g1] == owner[g2] {
+                if g1 == g2 || est.group_of_gpu(g1) == est.group_of_gpu(g2) {
                     // a same-group swap never changes what crosses an uplink
                     continue;
                 }
-                dep.assignments[m1][e1] = g2;
-                dep.assignments[m2][e2] = g1;
-                let (mx, c1, c2) =
-                    endpoint_costs(dep, layers, cluster, &expert_loads, &costs, g1, g2);
-                if mx > best_port.max(best_drain) + 1e-9 {
-                    dep.assignments[m1][e1] = g1;
-                    dep.assignments[m2][e2] = g2;
-                    continue;
-                }
-                let nd = uplink_drain_ms(dep, layers, &owner, &rates);
+                est.apply_swap(m1, e1, m2, e2);
+                let mx = est.bottleneck();
+                let nd = est.uplink_drain_ms();
                 if accepts(mx, nd, best_port, best_drain) {
-                    costs[g1] = c1;
-                    costs[g2] = c2;
+                    dep.assignments[m1][e1] = g2;
+                    dep.assignments[m2][e2] = g1;
                     best_port = mx;
                     best_drain = nd;
                     improved = true;
                 } else {
-                    dep.assignments[m1][e1] = g1;
-                    dep.assignments[m2][e2] = g2;
+                    est.apply_swap(m1, e1, m2, e2);
                 }
             }
         }
@@ -764,9 +807,12 @@ fn refine_uplink(
 /// Two structural facts keep this cheap. A move or swap only changes the
 /// costs of its (at most two) endpoint GPUs, so (a) candidates not touching
 /// a **current bottleneck GPU** can never shrink the global max and are
-/// skipped, and (b) each candidate is scored by recomputing just its two
-/// endpoint costs ([`estimate_one_gpu`]) against a cached per-GPU cost
-/// vector instead of re-projecting every model's full traffic matrix.
+/// skipped, and (b) candidates are priced through a [`DeltaEstimator`]
+/// whose integer counters advance in O(expert degree) per trial move — no
+/// per-candidate rescans of any kind, and drain values read off the
+/// counters are always the *actual* current ones (the historical code
+/// tracked a cached drain scalar that `cur_drain.min(nd)` could leave
+/// stale-low after a tolerance-window accept).
 ///
 /// On a [`Topology::TwoTier`] fabric the search additionally **guards the
 /// uplinks**: a port-balancing candidate that would increase the projected
@@ -783,53 +829,37 @@ fn refine_deployment(
     let units: Vec<(usize, usize)> = (0..dep.n_models())
         .flat_map(|m| (0..dep.n_experts(m)).map(move |e| (m, e)))
         .collect();
-    let expert_loads: Vec<Vec<u64>> = layers.iter().map(|l| l.expert_loads()).collect();
 
-    let mut costs = estimate_per_gpu(dep, layers, cluster);
-    let mut best = costs.iter().cloned().fold(0.0, f64::max);
+    let mut est = DeltaEstimator::new(dep, layers, cluster, topo);
+    let mut best = est.bottleneck();
+    let mut cur_drain = est.uplink_drain_ms();
 
-    let owner = topo.group_of(n);
-    let rates = topo.uplink_rates(cluster);
-    // Drain of the (already-mutated) deployment given only GPUs `a`/`b`
-    // changed — `cur_drain` is reused when both sit in one group, since a
-    // group-internal rearrangement cannot change what crosses an uplink.
-    let drain_after = |dep: &Deployment, a: usize, b: usize, cur_drain: f64| -> f64 {
-        match &owner {
-            None => 0.0,
-            Some(owner) if owner[a] == owner[b] => cur_drain,
-            Some(owner) => uplink_drain_ms(dep, layers, owner, &rates),
-        }
-    };
-    let mut cur_drain = match &owner {
-        None => 0.0,
-        Some(owner) => uplink_drain_ms(dep, layers, owner, &rates),
-    };
-
-    let is_hot = |costs: &[f64], best: f64, g: usize| costs[g] >= best - 1e-9;
+    let is_hot = |est: &DeltaEstimator, best: f64, g: usize| est.cost(g) >= best - 1e-9;
 
     for _ in 0..8 {
         let mut improved = false;
         for &(m, e) in &units {
             let cur = dep.assignments[m][e];
             for g in 0..n {
-                if g == cur || !(is_hot(&costs, best, cur) || is_hot(&costs, best, g)) {
+                if g == cur || !(is_hot(&est, best, cur) || is_hot(&est, best, g)) {
                     continue;
                 }
-                dep.assignments[m][e] = g;
-                let (mx, c_cur, c_g) =
-                    endpoint_costs(dep, layers, cluster, &expert_loads, &costs, cur, g);
-                if mx + 1e-12 < best {
-                    let nd = drain_after(dep, cur, g, cur_drain);
-                    if nd <= cur_drain + 1e-9 {
-                        costs[cur] = c_cur;
-                        costs[g] = c_g;
-                        best = mx;
-                        cur_drain = cur_drain.min(nd);
-                        improved = true;
-                        break; // unit committed; on to the next one
-                    }
+                est.apply_move(m, e, g);
+                let mx = est.bottleneck();
+                let nd = est.uplink_drain_ms();
+                if mx + 1e-12 < best && nd <= cur_drain + 1e-9 {
+                    dep.assignments[m][e] = g;
+                    best = mx;
+                    // Track the actual recomputed drain. The historical
+                    // `cur_drain.min(nd)` kept the stale smaller value when
+                    // `nd` landed inside the 1e-9 tolerance, letting later
+                    // accepts compound a drain regression the guard never
+                    // saw.
+                    cur_drain = nd;
+                    improved = true;
+                    break; // unit committed; on to the next one
                 }
-                dep.assignments[m][e] = cur;
+                est.apply_move(m, e, cur);
             }
         }
         for i in 0..units.len() {
@@ -838,30 +868,20 @@ fn refine_deployment(
                 let (m2, e2) = units[j];
                 let g1 = dep.assignments[m1][e1];
                 let g2 = dep.assignments[m2][e2];
-                if g1 == g2 || !(is_hot(&costs, best, g1) || is_hot(&costs, best, g2)) {
+                if g1 == g2 || !(is_hot(&est, best, g1) || is_hot(&est, best, g2)) {
                     continue;
                 }
-                dep.assignments[m1][e1] = g2;
-                dep.assignments[m2][e2] = g1;
-                let (mx, c1, c2) =
-                    endpoint_costs(dep, layers, cluster, &expert_loads, &costs, g1, g2);
-                let accept = mx + 1e-12 < best && {
-                    let nd = drain_after(dep, g1, g2, cur_drain);
-                    if nd <= cur_drain + 1e-9 {
-                        cur_drain = cur_drain.min(nd);
-                        true
-                    } else {
-                        false
-                    }
-                };
-                if accept {
-                    costs[g1] = c1;
-                    costs[g2] = c2;
+                est.apply_swap(m1, e1, m2, e2);
+                let mx = est.bottleneck();
+                let nd = est.uplink_drain_ms();
+                if mx + 1e-12 < best && nd <= cur_drain + 1e-9 {
+                    dep.assignments[m1][e1] = g2;
+                    dep.assignments[m2][e2] = g1;
                     best = mx;
+                    cur_drain = nd;
                     improved = true;
                 } else {
-                    dep.assignments[m1][e1] = g1;
-                    dep.assignments[m2][e2] = g2;
+                    est.apply_swap(m1, e1, m2, e2);
                 }
             }
         }
@@ -900,6 +920,8 @@ pub fn pair_gpu_cost<'s>(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cluster::uplink_bound;
+    use crate::replication::estimate_per_gpu_replicated;
     use crate::sim::{simulate_colocated, simulate_exclusive};
     use crate::trace::{limoe_trace, Dataset, LimoeVariant};
     use crate::util::Rng;
@@ -1328,6 +1350,92 @@ mod tests {
             c_placed <= c_flat + 1e-6,
             "placed {c_placed} vs flat {c_flat}"
         );
+    }
+
+    #[test]
+    fn refinement_never_regresses_the_uplink_drain() {
+        // Regression test for the drain-tracking fix: `refine_deployment`
+        // once tracked `cur_drain.min(nd)`, so an accept whose recomputed
+        // drain landed inside the 1e-9 tolerance left the tracked value
+        // stale-low and later accepts could compound a real regression the
+        // guard never saw. The DeltaEstimator reads the actual counters, so
+        // across a whole refinement the drain can drift only by the
+        // per-accept tolerance — and the port objective never worsens.
+        for seed in 0..12u64 {
+            let mut rng = Rng::new(0xD00D + seed);
+            let n_gpus = 8;
+            let mut d = crate::traffic::TrafficMatrix::zeros(16);
+            for i in 0..16 {
+                for j in 0..16 {
+                    if i != j {
+                        d.set(i, j, rng.gen_range(40));
+                    }
+                }
+            }
+            let trace = ModelTrace {
+                name: format!("drain-{seed}"),
+                layers: vec![MoeLayerStats {
+                    traffic: d,
+                    gate_ms: 0.02,
+                    ffn_ms_per_token: 0.001,
+                    agg_ms: 0.015,
+                }],
+            };
+            let cluster = Cluster::homogeneous(n_gpus, 50.0);
+            let topo = Topology::even_two_tier(n_gpus, 4, 4.0).unwrap();
+            let assignment: Vec<usize> = (0..16)
+                .map(|_| rng.gen_range(n_gpus as u64) as usize)
+                .collect();
+            let mut dep = Deployment::new(
+                n_gpus,
+                vec![assignment],
+                SchedulePolicy::Aurora,
+                Scenario::ExclusiveHomogeneous,
+            )
+            .unwrap();
+            let totals = aggregate_totals(&[&trace]);
+            let layers: Vec<&MoeLayerStats> = totals.iter().collect();
+            let drain_before = uplink_bound(&dep.aggregated_traffic(&layers), &cluster, &topo);
+            let port_before = crate::placement::estimate_bottleneck(&dep, &layers, &cluster);
+            refine_deployment(&mut dep, &layers, &cluster, &topo);
+            let drain_after = uplink_bound(&dep.aggregated_traffic(&layers), &cluster, &topo);
+            let port_after = crate::placement::estimate_bottleneck(&dep, &layers, &cluster);
+            assert!(
+                port_after <= port_before + 1e-9,
+                "seed {seed}: port {port_before} -> {port_after}"
+            );
+            assert!(
+                drain_after <= drain_before + 1e-6,
+                "seed {seed}: drain {drain_before} -> {drain_after}"
+            );
+        }
+    }
+
+    #[test]
+    fn lazy_greedy_never_worsens_the_objective() {
+        // 64 experts on 32 GPUs crosses the lazy (CELF) threshold. The lazy
+        // loop only commits candidates whose exactly re-priced objective
+        // clears the min_gain threshold, so whatever the queue order, the
+        // final plan's objective must not exceed the base (un-replicated)
+        // plan's.
+        for seed in [7u64, 41, 99] {
+            let t = zipf_trace(64, 2, 1.2, seed);
+            let cluster = Cluster::homogeneous(32, 800.0);
+            let planner = Planner::default();
+            let (rep, splits) = planner
+                .plan_replicated(&[&t], &cluster, &ReplicationConfig::default())
+                .unwrap();
+            let totals = aggregate_totals(&[&t]);
+            let layers: Vec<&MoeLayerStats> = totals.iter().collect();
+            let replicated =
+                estimate_objective_on(&rep, &layers, &cluster, &Topology::BigSwitch, &splits);
+            let plain = planner.plan_multi(&[&t], &cluster).unwrap();
+            let base = crate::placement::estimate_bottleneck(&plain, &layers, &cluster);
+            assert!(
+                replicated <= base + 1e-9,
+                "seed {seed}: replicated {replicated} vs base {base}"
+            );
+        }
     }
 
     #[test]

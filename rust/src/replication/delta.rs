@@ -1,0 +1,418 @@
+//! Incremental evaluation of replica-addition candidates.
+//!
+//! [`crate::planner::Planner::plan_replicated`]'s greedy loop prices every
+//! candidate `(model, expert, gpu)` replica by its post-addition bottleneck.
+//! Doing that from scratch costs three O(models · experts²) passes per
+//! candidate (re-deriving expert loads inside [`super::optimize_splits`],
+//! the split projection of [`super::estimate_per_gpu_replicated`], and the
+//! [`super::ReplicatedDeployment::aggregated_traffic_split`] pass feeding
+//! the uplink bound). [`ReplicaDeltaEstimator`] collapses a candidate
+//! evaluation to:
+//!
+//! 1. re-solving the water-filling split plan with the candidate's replica
+//!    set substituted (O(experts + replicated·k log k), expert loads cached
+//!    — the `solve_splits` core shared with [`super::optimize_splits`], so
+//!    the weights are bit-for-bit identical);
+//! 2. diffing the candidate plan against the committed one and re-applying
+//!    only the **changed experts'** traffic contributions to cloned integer
+//!    counters (each O(expert degree · replica count); water-filling makes
+//!    an expert's weights change only when the candidate perturbed the
+//!    levels its fill saw, so most experts are bitwise unchanged and skip);
+//! 3. reading the objective off the counters in O(GPUs · models + groups).
+//!
+//! All maintained state is integer token counters, so committed updates are
+//! exact and the derived estimates equal the from-scratch
+//! [`super::estimate_per_gpu_replicated`] / [`crate::cluster::uplink_bound`]
+//! values bit for bit (pinned by the `prop_replica_delta_matches_full`
+//! property test after randomized replica additions).
+
+use super::split::solve_splits;
+use super::{ReplicatedDeployment, SplitPlan};
+use crate::cluster::{Cluster, Topology};
+use crate::sim::MoeLayerStats;
+use crate::traffic::split_tokens;
+
+/// The integer token counters an evaluation reads its objective from.
+#[derive(Debug, Clone)]
+struct Counters {
+    /// `gpu_load[m][g]` = model `m`'s (split-integerized) token load on `g`.
+    gpu_load: Vec<Vec<u64>>,
+    /// Cross-GPU tokens sent from each GPU (aggregate, diagonal excluded).
+    out: Vec<u64>,
+    /// Cross-GPU tokens received at each GPU.
+    inn: Vec<u64>,
+    /// Cross-group tokens leaving each group (two-tier fabrics only).
+    up: Vec<u64>,
+    /// Cross-group tokens entering each group.
+    down: Vec<u64>,
+}
+
+/// Per-expert traffic placement context shared by the contribution walks.
+struct Contrib<'c> {
+    m: usize,
+    layer: &'c MoeLayerStats,
+    /// Primaries of model `m` (token sources are keyed by the sender
+    /// expert's primary GPU, exactly as in
+    /// [`crate::traffic::TrafficMatrix::project_split`]).
+    assignment: &'c [usize],
+    owner: Option<&'c [usize]>,
+}
+
+impl Counters {
+    /// Add (or subtract) destination expert `j`'s entire inbound traffic —
+    /// every sender's tokens split across `set` by `weights` — exactly as
+    /// `project_split` places it.
+    fn contribute(
+        &mut self,
+        add: bool,
+        ctx: &Contrib<'_>,
+        j: usize,
+        set: &[usize],
+        weights: &[f64],
+    ) {
+        let n_e = ctx.layer.n_experts();
+        for i in 0..n_e {
+            let t = ctx.layer.traffic.get(i, j);
+            if t == 0 {
+                continue;
+            }
+            let src = ctx.assignment[i];
+            if set.len() == 1 {
+                self.place(add, ctx, src, set[0], t);
+            } else {
+                for (r, part) in split_tokens(t, weights).into_iter().enumerate() {
+                    if part > 0 {
+                        self.place(add, ctx, src, set[r], part);
+                    }
+                }
+            }
+        }
+    }
+
+    fn place(&mut self, add: bool, ctx: &Contrib<'_>, src: usize, dst: usize, t: u64) {
+        if add {
+            self.gpu_load[ctx.m][dst] += t;
+        } else {
+            self.gpu_load[ctx.m][dst] -= t;
+        }
+        if src == dst {
+            return;
+        }
+        if add {
+            self.out[src] += t;
+            self.inn[dst] += t;
+        } else {
+            self.out[src] -= t;
+            self.inn[dst] -= t;
+        }
+        if let Some(ow) = ctx.owner {
+            let (hs, hd) = (ow[src], ow[dst]);
+            if hs != hd {
+                if add {
+                    self.up[hs] += t;
+                    self.down[hd] += t;
+                } else {
+                    self.up[hs] -= t;
+                    self.down[hd] -= t;
+                }
+            }
+        }
+    }
+}
+
+/// Incremental evaluator for the replication greedy: committed split plan,
+/// per-GPU completion estimates, and per-uplink counters, with O(changed
+/// experts) candidate pricing ([`ReplicaDeltaEstimator::eval_add`]) and
+/// exact commits ([`ReplicaDeltaEstimator::commit_add`]).
+///
+/// Primaries are fixed for the evaluator's lifetime (the greedy only adds
+/// copies; the primary-moving refinement runs afterwards on its own
+/// machinery).
+#[derive(Debug, Clone)]
+pub struct ReplicaDeltaEstimator<'a> {
+    layers: &'a [&'a MoeLayerStats],
+    cluster: &'a Cluster,
+    owner: Option<Vec<usize>>,
+    rates: Vec<f64>,
+    /// Primaries per model (fixed).
+    assignments: Vec<Vec<usize>>,
+    /// Committed replica sets.
+    sets: Vec<Vec<Vec<usize>>>,
+    /// Cached per-expert token loads per model.
+    loads: Vec<Vec<u64>>,
+    /// Committed split plan — always `optimize_splits` of the committed
+    /// sets, bit for bit.
+    plan: SplitPlan,
+    counters: Counters,
+    /// Committed per-GPU completion estimates.
+    costs: Vec<f64>,
+}
+
+impl<'a> ReplicaDeltaEstimator<'a> {
+    /// Build the committed state from scratch — one O(models · experts²)
+    /// pass, the same cost as a single from-scratch evaluation.
+    ///
+    /// Panics when `topo` does not fit the cluster (the planner validates
+    /// topologies before replication runs).
+    pub fn new(
+        rep: &ReplicatedDeployment,
+        layers: &'a [&'a MoeLayerStats],
+        cluster: &'a Cluster,
+        topo: &Topology,
+    ) -> ReplicaDeltaEstimator<'a> {
+        assert_eq!(layers.len(), rep.n_models(), "one layer per model");
+        assert_eq!(cluster.len(), rep.n_gpus(), "cluster must match the deployment");
+        let n = rep.n_gpus();
+        let owner = topo.group_of(n);
+        let rates = topo.uplink_rates(cluster);
+        let loads: Vec<Vec<u64>> = layers.iter().map(|l| l.expert_loads()).collect();
+        let sets = rep.replicas.clone();
+        let plan = solve_splits(&sets, None, &loads, layers, cluster);
+        let mut counters = Counters {
+            gpu_load: vec![vec![0u64; n]; layers.len()],
+            out: vec![0u64; n],
+            inn: vec![0u64; n],
+            up: vec![0u64; rates.len()],
+            down: vec![0u64; rates.len()],
+        };
+        for (m, layer) in layers.iter().enumerate() {
+            let ctx = Contrib {
+                m,
+                layer: *layer,
+                assignment: &rep.base.assignments[m],
+                owner: owner.as_deref(),
+            };
+            for j in 0..sets[m].len() {
+                counters.contribute(true, &ctx, j, &sets[m][j], &plan.weights[m][j]);
+            }
+        }
+        let mut est = ReplicaDeltaEstimator {
+            layers,
+            cluster,
+            owner,
+            rates,
+            assignments: rep.base.assignments.clone(),
+            sets,
+            loads,
+            plan,
+            counters,
+            costs: vec![0.0; n],
+        };
+        est.costs = (0..n).map(|g| est.cost_of(&est.counters, g)).collect();
+        est
+    }
+
+    /// Completion estimate of GPU `g` from a counter set, in
+    /// [`super::estimate_per_gpu_replicated`]'s exact operation order.
+    fn cost_of(&self, c: &Counters, g: usize) -> f64 {
+        let mut compute = 0.0f64;
+        for (m, layer) in self.layers.iter().enumerate() {
+            compute +=
+                layer.gate_ms + layer.agg_ms + c.gpu_load[m][g] as f64 * layer.ffn_ms_per_token;
+        }
+        let gpu = self.cluster.gpu(g);
+        let wire = c.out[g].max(c.inn[g]) as f64 / gpu.bandwidth;
+        compute / gpu.flops_scale + wire
+    }
+
+    /// Bottleneck objective from a counter set: max per-GPU completion
+    /// estimate, joined with the uplink drain on two-tier fabrics.
+    fn objective_of(&self, c: &Counters) -> f64 {
+        let mut mx = 0.0f64;
+        for g in 0..self.cluster.len() {
+            mx = mx.max(self.cost_of(c, g));
+        }
+        if self.owner.is_some() {
+            let mut bound = 0.0f64;
+            for ((&u, &d), &r) in c.up.iter().zip(&c.down).zip(&self.rates) {
+                bound = bound.max(u as f64 / r).max(d as f64 / r);
+            }
+            mx = mx.max(bound);
+        }
+        mx
+    }
+
+    /// Re-place the contributions of every expert whose split weights (or
+    /// replica set) differ between the committed plan and `cand` onto `c`.
+    fn apply_plan_diff(
+        &self,
+        c: &mut Counters,
+        m: usize,
+        e: usize,
+        new_set: &[usize],
+        cand: &SplitPlan,
+    ) {
+        for (mm, model) in cand.weights.iter().enumerate() {
+            let ctx = Contrib {
+                m: mm,
+                layer: self.layers[mm],
+                assignment: &self.assignments[mm],
+                owner: self.owner.as_deref(),
+            };
+            for (j, w) in model.iter().enumerate() {
+                let is_cand = mm == m && j == e;
+                if !is_cand && *w == self.plan.weights[mm][j] {
+                    continue;
+                }
+                c.contribute(false, &ctx, j, &self.sets[mm][j], &self.plan.weights[mm][j]);
+                let set: &[usize] = if is_cand { new_set } else { &self.sets[mm][j] };
+                c.contribute(true, &ctx, j, set, w);
+            }
+        }
+    }
+
+    /// Price the candidate "add a replica of model `m`'s expert `e` on GPU
+    /// `g`": the bottleneck objective the deployment would have after the
+    /// addition, identical to a from-scratch re-evaluation. Read-only (safe
+    /// to call from parallel sweep workers).
+    pub fn eval_add(&self, m: usize, e: usize, g: usize) -> f64 {
+        let mut new_set = self.sets[m][e].clone();
+        new_set.push(g);
+        let cand = solve_splits(
+            &self.sets,
+            Some((m, e, new_set.as_slice())),
+            &self.loads,
+            self.layers,
+            self.cluster,
+        );
+        let mut scratch = self.counters.clone();
+        self.apply_plan_diff(&mut scratch, m, e, &new_set, &cand);
+        self.objective_of(&scratch)
+    }
+
+    /// Commit the replica addition: counters, split plan, replica sets, and
+    /// per-GPU costs all advance to the post-addition state.
+    pub fn commit_add(&mut self, m: usize, e: usize, g: usize) {
+        let mut new_set = self.sets[m][e].clone();
+        new_set.push(g);
+        let cand = solve_splits(
+            &self.sets,
+            Some((m, e, new_set.as_slice())),
+            &self.loads,
+            self.layers,
+            self.cluster,
+        );
+        let mut c = self.counters.clone();
+        self.apply_plan_diff(&mut c, m, e, &new_set, &cand);
+        self.counters = c;
+        self.plan = cand;
+        self.sets[m][e] = new_set;
+        let n = self.cluster.len();
+        self.costs = (0..n).map(|g| self.cost_of(&self.counters, g)).collect();
+    }
+
+    /// Committed per-GPU completion estimates — equal to
+    /// [`super::estimate_per_gpu_replicated`] under the committed plan.
+    pub fn costs(&self) -> &[f64] {
+        &self.costs
+    }
+
+    /// Committed bottleneck objective (max completion estimate ∨ uplink
+    /// drain) — read off the cached committed costs, no recomputation.
+    pub fn objective(&self) -> f64 {
+        let mx = self.costs.iter().cloned().fold(0.0, f64::max);
+        mx.max(self.uplink_drain_ms())
+    }
+
+    /// Committed uplink drain (ms); `0.0` on the big switch.
+    pub fn uplink_drain_ms(&self) -> f64 {
+        if self.owner.is_none() {
+            return 0.0;
+        }
+        self.counters
+            .up
+            .iter()
+            .zip(&self.counters.down)
+            .zip(&self.rates)
+            .map(|((&u, &d), &r)| u.max(d) as f64 / r)
+            .fold(0.0, f64::max)
+    }
+
+    /// The committed split plan — bit-for-bit [`super::optimize_splits`] of
+    /// the committed replica sets.
+    pub fn plan(&self) -> &SplitPlan {
+        &self.plan
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::uplink_bound;
+    use crate::placement::{Deployment, Scenario};
+    use crate::replication::{estimate_per_gpu_replicated, optimize_splits};
+    use crate::schedule::SchedulePolicy;
+    use crate::traffic::zipf_traffic;
+
+    fn hot_layer(n: usize, alpha: f64, seed: u64) -> MoeLayerStats {
+        MoeLayerStats {
+            traffic: zipf_traffic(n, 512, alpha, seed),
+            gate_ms: 0.02,
+            ffn_ms_per_token: 0.001,
+            agg_ms: 0.015,
+        }
+    }
+
+    fn rep(n_experts: usize, n_gpus: usize) -> ReplicatedDeployment {
+        let base = Deployment::new(
+            n_gpus,
+            vec![(0..n_experts).map(|e| e % n_gpus).collect()],
+            SchedulePolicy::Aurora,
+            Scenario::ExclusiveHomogeneous,
+        )
+        .unwrap();
+        ReplicatedDeployment::from_deployment(base)
+    }
+
+    #[test]
+    fn committed_state_matches_full_rescan_after_adds() {
+        let l = hot_layer(16, 1.2, 7);
+        let layers = [&l];
+        let cluster = Cluster::homogeneous(8, 100.0);
+        let topo = Topology::even_two_tier(8, 2, 4.0).unwrap();
+        let mut r = rep(16, 8);
+        let mut est = ReplicaDeltaEstimator::new(&r, &layers, &cluster, &topo);
+        for (e, g) in [(0usize, 1usize), (0, 5), (8, 3), (1, 7), (0, 2)] {
+            // exactness of the candidate price: push, full rescan, compare
+            let predicted = est.eval_add(0, e, g);
+            r.replicas[0][e].push(g);
+            let full_plan = optimize_splits(&r, &layers, &cluster);
+            let full_costs = estimate_per_gpu_replicated(&r, &layers, &cluster, &full_plan);
+            let agg = r.aggregated_traffic_split(&layers, &full_plan);
+            let full_obj = full_costs
+                .iter()
+                .cloned()
+                .fold(0.0, f64::max)
+                .max(uplink_bound(&agg, &cluster, &topo));
+            assert!(
+                (predicted - full_obj).abs() < 1e-12,
+                "expert {e} -> gpu {g}: predicted {predicted} vs full {full_obj}"
+            );
+            // commit and compare the whole committed state
+            est.commit_add(0, e, g);
+            assert_eq!(est.plan(), &full_plan, "expert {e} -> gpu {g}");
+            for (gpu, &c) in full_costs.iter().enumerate() {
+                assert!(
+                    (est.costs()[gpu] - c).abs() < 1e-12,
+                    "gpu {gpu}: {} vs {c}",
+                    est.costs()[gpu]
+                );
+            }
+            assert!((est.objective() - full_obj).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn big_switch_objective_is_port_only() {
+        let l = hot_layer(8, 1.0, 3);
+        let layers = [&l];
+        let cluster = Cluster::homogeneous(4, 100.0);
+        let r = rep(8, 4);
+        let est = ReplicaDeltaEstimator::new(&r, &layers, &cluster, &Topology::BigSwitch);
+        assert_eq!(est.uplink_drain_ms(), 0.0);
+        let plan = optimize_splits(&r, &layers, &cluster);
+        let full = estimate_per_gpu_replicated(&r, &layers, &cluster, &plan);
+        let mx = full.iter().cloned().fold(0.0, f64::max);
+        assert!((est.objective() - mx).abs() < 1e-12);
+    }
+}

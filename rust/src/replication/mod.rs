@@ -30,12 +30,20 @@
 //! [`crate::planner::Planner::plan_replicated`] drives the whole pipeline:
 //! plan a base deployment, greedily replicate the bottleneck GPU's experts
 //! while the marginal bottleneck reduction clears a threshold, then refine.
+//! The greedy prices its candidates through [`ReplicaDeltaEstimator`]:
+//! integer token counters maintained incrementally under
+//! replica additions, with candidate split plans re-solved only for the
+//! experts whose water-filling actually changed — the engine that scales
+//! replication planning to hundreds of GPUs (see "Performance & incremental
+//! planning" in `docs/architecture.md`).
 
+mod delta;
 mod split;
 
+pub use delta::ReplicaDeltaEstimator;
 pub use split::{optimize_splits, SplitPlan};
 
-use crate::cluster::{Cluster, Topology};
+use crate::cluster::{uplink_bound, Cluster, Topology};
 use crate::placement::Deployment;
 use crate::sim::{simulate_group, simulate_group_topology, MoeLayerStats, SimResult};
 use crate::trace::{aggregate_totals, ModelTrace};
@@ -500,6 +508,49 @@ pub fn estimate_per_gpu_replicated(
             compute[g] / gpu.flops_scale + wire
         })
         .collect()
+}
+
+/// The combined bottleneck objective of a replicated plan on a topology in
+/// **one projection pass**: the split-aware per-GPU completion bottleneck
+/// joined with the cross-uplink drain of the same aggregated split traffic.
+/// Computing both through [`estimate_per_gpu_replicated`] +
+/// [`ReplicatedDeployment::aggregated_traffic_split`] projects every model
+/// twice; this derives both from a single aggregate — same values, half the
+/// work. On [`Topology::BigSwitch`] it equals
+/// [`estimate_bottleneck_replicated`]. The planner's greedy goes further
+/// still ([`ReplicaDeltaEstimator`] prices candidates by delta); this is the
+/// from-scratch form for one-shot callers (the coordinator's replan gate,
+/// the planner's refinement guard).
+pub fn estimate_objective_on(
+    rep: &ReplicatedDeployment,
+    layers: &[&MoeLayerStats],
+    cluster: &Cluster,
+    topo: &Topology,
+    plan: &SplitPlan,
+) -> f64 {
+    assert_eq!(layers.len(), rep.n_models());
+    assert_eq!(cluster.len(), rep.n_gpus());
+    let n = rep.n_gpus();
+    let mut compute = vec![0.0f64; n];
+    let mut agg = TrafficMatrix::zeros(n);
+    for (m, layer) in layers.iter().enumerate() {
+        let proj = rep.project_layer_split(m, layer, plan).traffic;
+        let loads = proj.expert_loads();
+        for (g, c) in compute.iter_mut().enumerate() {
+            *c += layer.gate_ms + layer.agg_ms + loads[g] as f64 * layer.ffn_ms_per_token;
+        }
+        agg = agg.sum(&proj);
+    }
+    let mut mx = 0.0f64;
+    for g in 0..n {
+        let gpu = cluster.gpu(g);
+        let wire = agg.row_sum(g).max(agg.col_sum(g)) as f64 / gpu.bandwidth;
+        mx = mx.max(compute[g] / gpu.flops_scale + wire);
+    }
+    if !matches!(topo, Topology::BigSwitch) {
+        mx = mx.max(uplink_bound(&agg, cluster, topo));
+    }
+    mx
 }
 
 /// Max over [`estimate_per_gpu_replicated`] — the objective the replication

@@ -126,8 +126,35 @@ pub fn optimize_splits(
     cluster: &Cluster,
 ) -> SplitPlan {
     assert_eq!(layers.len(), rep.n_models(), "one layer per model");
-    let n = rep.n_gpus();
-    assert_eq!(cluster.len(), n);
+    assert_eq!(cluster.len(), rep.n_gpus());
+    let loads: Vec<Vec<u64>> = layers.iter().map(|l| l.expert_loads()).collect();
+    solve_splits(&rep.replicas, None, &loads, layers, cluster)
+}
+
+/// The water-filling core behind [`optimize_splits`], operating on raw
+/// replica sets so the incremental planner
+/// ([`super::ReplicaDeltaEstimator`]) can solve candidate plans without
+/// materializing a mutated [`ReplicatedDeployment`] — and without
+/// recomputing `expert_loads` (O(experts²)) on every call.
+///
+/// `override_set` substitutes one `(model, expert)`'s replica set, which is
+/// how a tentative "add replica `g` to `(m, e)`" candidate is priced. With
+/// `None` this is exactly the [`optimize_splits`] computation: same visit
+/// order, same floating-point operations, bit-for-bit identical weights.
+pub(crate) fn solve_splits(
+    sets: &[Vec<Vec<usize>>],
+    override_set: Option<(usize, usize, &[usize])>,
+    loads: &[Vec<u64>],
+    layers: &[&MoeLayerStats],
+    cluster: &Cluster,
+) -> SplitPlan {
+    let n = cluster.len();
+    let set_of = |m: usize, e: usize| -> &[usize] {
+        match override_set {
+            Some((om, oe, s)) if om == m && oe == e => s,
+            _ => sets[m][e].as_slice(),
+        }
+    };
 
     // Per-GPU water level, seeded with the constant per-model compute terms
     // so slower GPUs start higher.
@@ -139,16 +166,28 @@ pub fn optimize_splits(
         }
     }
 
-    let loads: Vec<Vec<u64>> = layers.iter().map(|l| l.expert_loads()).collect();
-    let mut plan = SplitPlan::trivial(rep);
+    // The trivial (primary-only) plan, shaped by the effective sets.
+    let mut plan = SplitPlan {
+        weights: (0..sets.len())
+            .map(|m| {
+                (0..sets[m].len())
+                    .map(|e| {
+                        let mut w = vec![0.0; set_of(m, e).len()];
+                        w[0] = 1.0;
+                        w
+                    })
+                    .collect()
+            })
+            .collect(),
+    };
 
     // Pass 1: singleton (and zero-load) experts are not a decision — charge
     // their full load to their primary's level up front, so every split
     // below sees the fixed load landscape.
     let mut replicated: Vec<(usize, usize)> = Vec::new();
-    for m in 0..rep.n_models() {
-        for e in 0..rep.base.n_experts(m) {
-            let set = &rep.replicas[m][e];
+    for m in 0..sets.len() {
+        for e in 0..sets[m].len() {
+            let set = set_of(m, e);
             if set.len() == 1 || loads[m][e] == 0 {
                 level[set[0]] += loads[m][e] as f64 * token_cost(layers[m], cluster, set[0]);
             } else {
@@ -160,7 +199,7 @@ pub fn optimize_splits(
     // Pass 2: water-fill the replicated experts, heaviest first.
     replicated.sort_by_key(|&(m, e)| (std::cmp::Reverse(loads[m][e]), m, e));
     for (m, e) in replicated {
-        let set = &rep.replicas[m][e];
+        let set = set_of(m, e);
         let load = loads[m][e] as f64;
         let costs: Vec<f64> = set
             .iter()

@@ -2,6 +2,7 @@
 
 pub mod bench;
 pub mod json;
+pub mod par;
 pub mod rng;
 
 pub use json::Json;

@@ -1,0 +1,82 @@
+//! Feature-gated data parallelism for the planner's candidate sweeps.
+//!
+//! The offline build vendors no external crates, so the `rayon` cargo
+//! feature does not pull in the rayon crate itself; it enables an equivalent
+//! scoped-thread fan-out ([`par_map`]) with rayon's semantics for this use
+//! case (pure per-item closures, results in input order). Swapping the body
+//! for `items.par_iter().map(f).collect()` is a one-line change once a real
+//! dependency is allowed.
+//!
+//! Determinism contract: results are returned **in input order** regardless
+//! of thread interleaving (an index-ordered reduction), so a parallel sweep
+//! is bit-for-bit identical to the serial one — the planner's tie-breaking
+//! (first candidate wins) never depends on scheduling.
+
+/// Map `f` over `items`, returning results in input order.
+///
+/// With the `rayon` feature enabled the items are chunked across
+/// `available_parallelism` scoped threads; without it this is a plain serial
+/// map. `f` must be pure for the two modes to agree (every caller in this
+/// crate passes a read-only evaluator closure).
+#[cfg(feature = "rayon")]
+pub fn par_map<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(items.len().max(1));
+    if threads <= 1 || items.len() < 2 {
+        return items.iter().map(&f).collect();
+    }
+    let chunk = items.len().div_ceil(threads);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = items
+            .chunks(chunk)
+            .map(|part| {
+                let f = &f;
+                s.spawn(move || part.iter().map(f).collect::<Vec<R>>())
+            })
+            .collect();
+        // Index-ordered reduction: chunks were cut in input order and are
+        // joined in spawn order, so the concatenation is the serial result.
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("par_map worker panicked"))
+            .collect()
+    })
+}
+
+/// Serial fallback when the `rayon` feature is off: same signature, same
+/// output, one thread.
+#[cfg(not(feature = "rayon"))]
+pub fn par_map<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    items.iter().map(f).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_input_order() {
+        let xs: Vec<usize> = (0..97).collect();
+        let ys = par_map(&xs, |&x| x * 3);
+        assert_eq!(ys, (0..97).map(|x| x * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn handles_tiny_inputs() {
+        let none: Vec<u32> = vec![];
+        assert!(par_map(&none, |&x| x).is_empty());
+        assert_eq!(par_map(&[7u32], |&x| x + 1), vec![8]);
+    }
+}

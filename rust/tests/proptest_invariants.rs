@@ -398,3 +398,161 @@ fn prop_hierarchical_schedule_conserves_and_meets_uplink_budget() {
         assert!(sched.sequential_ms >= sched.pipelined_ms - 1e-9, "seed {seed}");
     }
 }
+
+/// PROPERTY: the placement [`aurora::placement::DeltaEstimator`]'s per-GPU
+/// estimates and uplink counters match the from-scratch
+/// `estimate_per_gpu` / `uplink_bound` rescans after arbitrary randomized
+/// move/swap sequences — the exactness contract that lets the planner's
+/// refinement passes run on deltas without changing a single decision.
+#[test]
+fn prop_delta_estimator_matches_full_rescan() {
+    use aurora::cluster::{uplink_bound, Topology};
+    use aurora::placement::{estimate_per_gpu, DeltaEstimator, Deployment, Scenario};
+
+    for seed in 0..40u64 {
+        let mut rng = Rng::new(seed ^ 0xDE17A);
+        let n_gpus = 2 + rng.gen_range(7) as usize;
+        let n_models = 1 + rng.gen_range(3) as usize;
+        let cluster = if n_gpus % 4 == 0 && rng.gen_range(2) == 0 {
+            Cluster::paper_heterogeneous(n_gpus, 60.0)
+        } else {
+            Cluster::homogeneous(n_gpus, 60.0)
+        };
+        let topo = if n_gpus % 2 == 0 && rng.gen_range(2) == 0 {
+            Topology::even_two_tier(n_gpus, 2, 1.0 + rng.gen_f64() * 4.0).unwrap()
+        } else {
+            Topology::BigSwitch
+        };
+        let mut layers_owned: Vec<MoeLayerStats> = Vec::new();
+        let mut assignments: Vec<Vec<usize>> = Vec::new();
+        for _ in 0..n_models {
+            let n_exp = n_gpus + rng.gen_range(9) as usize;
+            layers_owned.push(MoeLayerStats {
+                traffic: rand_matrix(&mut rng, n_exp, 30),
+                gate_ms: 0.05,
+                ffn_ms_per_token: 0.002,
+                agg_ms: 0.03,
+            });
+            let mut a = Vec::with_capacity(n_exp);
+            for _ in 0..n_exp {
+                a.push(rng.gen_range(n_gpus as u64) as usize);
+            }
+            assignments.push(a);
+        }
+        let mut dep = Deployment::new(
+            n_gpus,
+            assignments,
+            SchedulePolicy::Aurora,
+            Scenario::MultiColocated,
+        )
+        .unwrap();
+        let layers: Vec<&MoeLayerStats> = layers_owned.iter().collect();
+        let mut est = DeltaEstimator::new(&dep, &layers, &cluster, &topo);
+        for step in 0..30 {
+            if rng.gen_range(2) == 0 {
+                let m = rng.gen_range(n_models as u64) as usize;
+                let e = rng.gen_range(dep.assignments[m].len() as u64) as usize;
+                let g = rng.gen_range(n_gpus as u64) as usize;
+                est.apply_move(m, e, g);
+                dep.assignments[m][e] = g;
+            } else {
+                let m1 = rng.gen_range(n_models as u64) as usize;
+                let e1 = rng.gen_range(dep.assignments[m1].len() as u64) as usize;
+                let m2 = rng.gen_range(n_models as u64) as usize;
+                let e2 = rng.gen_range(dep.assignments[m2].len() as u64) as usize;
+                if m1 == m2 && e1 == e2 {
+                    continue;
+                }
+                let (g1, g2) = (dep.assignments[m1][e1], dep.assignments[m2][e2]);
+                est.apply_swap(m1, e1, m2, e2);
+                dep.assignments[m1][e1] = g2;
+                dep.assignments[m2][e2] = g1;
+            }
+            let full = estimate_per_gpu(&dep, &layers, &cluster);
+            for (g, &c) in full.iter().enumerate() {
+                assert!(
+                    (est.cost(g) - c).abs() < 1e-9,
+                    "seed {seed} step {step} gpu {g}: {} vs {c}",
+                    est.cost(g)
+                );
+            }
+            let drain = uplink_bound(&dep.aggregated_traffic(&layers), &cluster, &topo);
+            assert!(
+                (est.uplink_drain_ms() - drain).abs() < 1e-9,
+                "seed {seed} step {step}: {} vs {drain}",
+                est.uplink_drain_ms()
+            );
+        }
+    }
+}
+
+/// PROPERTY: the replication-side [`aurora::replication::ReplicaDeltaEstimator`]'s
+/// committed split plan, per-GPU estimates, and uplink drain match the
+/// from-scratch `optimize_splits` / `estimate_per_gpu_replicated` /
+/// `uplink_bound` pipeline after randomized replica additions — and every
+/// candidate price (`eval_add`) equals a full re-evaluation of the mutated
+/// deployment.
+#[test]
+fn prop_replica_delta_matches_full() {
+    use aurora::cluster::{uplink_bound, Topology};
+    use aurora::placement::{Deployment, Scenario};
+    use aurora::replication::{
+        estimate_per_gpu_replicated, optimize_splits, ReplicaDeltaEstimator, ReplicatedDeployment,
+    };
+
+    for seed in 0..25u64 {
+        let mut rng = Rng::new(seed ^ 0x5137);
+        let n_gpus = 2 + rng.gen_range(7) as usize;
+        let n_exp = n_gpus + rng.gen_range(2 * n_gpus as u64) as usize;
+        let cluster = Cluster::homogeneous(n_gpus, 80.0);
+        let topo = if n_gpus % 2 == 0 && rng.gen_range(2) == 0 {
+            Topology::even_two_tier(n_gpus, 2, 2.0).unwrap()
+        } else {
+            Topology::BigSwitch
+        };
+        let layer = MoeLayerStats {
+            traffic: rand_matrix(&mut rng, n_exp, 40),
+            gate_ms: 0.02,
+            ffn_ms_per_token: 0.001,
+            agg_ms: 0.015,
+        };
+        let layers = [&layer];
+        let base = Deployment::new(
+            n_gpus,
+            vec![(0..n_exp).map(|e| e % n_gpus).collect()],
+            SchedulePolicy::Aurora,
+            Scenario::ExclusiveHomogeneous,
+        )
+        .unwrap();
+        let mut rep = ReplicatedDeployment::from_deployment(base);
+        let mut est = ReplicaDeltaEstimator::new(&rep, &layers, &cluster, &topo);
+        for _step in 0..12 {
+            let e = rng.gen_range(n_exp as u64) as usize;
+            let g = rng.gen_range(n_gpus as u64) as usize;
+            if rep.replicas[0][e].contains(&g) {
+                continue;
+            }
+            let predicted = est.eval_add(0, e, g);
+            est.commit_add(0, e, g);
+            rep.replicas[0][e].push(g);
+            let plan = optimize_splits(&rep, &layers, &cluster);
+            let costs = estimate_per_gpu_replicated(&rep, &layers, &cluster, &plan);
+            let agg = rep.aggregated_traffic_split(&layers, &plan);
+            let mut full = costs.iter().cloned().fold(0.0, f64::max);
+            full = full.max(uplink_bound(&agg, &cluster, &topo));
+            assert!(
+                (predicted - full).abs() < 1e-9,
+                "seed {seed}: predicted {predicted} vs full {full}"
+            );
+            assert_eq!(est.plan(), &plan, "seed {seed}: split plans diverged");
+            for (gpu, &c) in costs.iter().enumerate() {
+                assert!(
+                    (est.costs()[gpu] - c).abs() < 1e-9,
+                    "seed {seed} gpu {gpu}: {} vs {c}",
+                    est.costs()[gpu]
+                );
+            }
+            assert!((est.objective() - full).abs() < 1e-9, "seed {seed}");
+        }
+    }
+}
