@@ -11,4 +11,4 @@ mod gpu;
 pub mod topology;
 
 pub use gpu::{Cluster, GpuSpec};
-pub use topology::{comm_time_topology, uplink_bound, Topology, TopologyError};
+pub use topology::{comm_time_topology, uplink_bound, TierLevel, Topology, TopologyError};

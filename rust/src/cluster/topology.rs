@@ -68,6 +68,26 @@ pub enum TopologyError {
         /// Requested group count.
         n_groups: usize,
     },
+    /// A non-leaf tier of a [`Topology::Tiered`] fabric lists a child unit
+    /// the level below does not have.
+    UnitOutOfRange {
+        /// The out-of-range lower-level group id.
+        unit: usize,
+        /// The level whose group listed it (1 = groups of leaf groups).
+        level: usize,
+        /// Group within that level.
+        group: usize,
+        /// How many units the level below actually has.
+        n_units: usize,
+    },
+    /// A unit of a lower tier belongs to no group of the tier above (every
+    /// aggregation level must cover the level below).
+    UncoveredUnit {
+        /// The unassigned lower-level group id.
+        unit: usize,
+        /// The level that fails to cover it.
+        level: usize,
+    },
 }
 
 impl fmt::Display for TopologyError {
@@ -92,6 +112,19 @@ impl fmt::Display for TopologyError {
                 f,
                 "{n_groups} equal groups cannot tile {n_gpus} GPUs (count must divide evenly)"
             ),
+            TopologyError::UnitOutOfRange {
+                unit,
+                level,
+                group,
+                n_units,
+            } => write!(
+                f,
+                "level {level} group {group} lists unit {unit}, but the level below has {n_units}"
+            ),
+            TopologyError::UncoveredUnit { unit, level } => write!(
+                f,
+                "unit {unit} belongs to no level-{level} group (each tier must cover the one below)"
+            ),
         }
     }
 }
@@ -113,6 +146,27 @@ pub enum Topology {
         /// Uplink oversubscription factor (1.0 = non-blocking).
         oversubscription: f64,
     },
+    /// Recursive multi-tier fabric (pod / leaf / spine and deeper):
+    /// `levels[0]` partitions GPUs into leaf groups (racks), `levels[1]`
+    /// partitions those leaf groups into pods, and so on — each level's
+    /// uplinks oversubscribed by its own factor. Build via
+    /// [`Topology::tiered`] / [`Topology::even_tiered`] so the per-level
+    /// invariants (disjoint non-empty groups, full coverage of the level
+    /// below, sane factors) are checked.
+    Tiered {
+        /// Aggregation levels, innermost first.
+        levels: Vec<TierLevel>,
+    },
+}
+
+/// One aggregation level of a [`Topology::Tiered`] fabric.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TierLevel {
+    /// Disjoint groups of the units one level down: GPU ids at level 0,
+    /// level-`t-1` group ids at level `t`.
+    pub groups: Vec<Vec<usize>>,
+    /// Uplink oversubscription factor at this level (1.0 = non-blocking).
+    pub oversubscription: f64,
 }
 
 impl Topology {
@@ -172,11 +226,113 @@ impl Topology {
         )
     }
 
+    /// Validated recursive tiered topology. Level 0's coverage of the GPUs
+    /// is checked against a cluster size later ([`Topology::owners`]), like
+    /// [`Topology::two_tier`]; every aggregation level above it has a known
+    /// unit count, so its coverage is checked here.
+    pub fn tiered(levels: Vec<TierLevel>) -> Result<Topology, TopologyError> {
+        if levels.is_empty() {
+            return Err(TopologyError::NoGroups);
+        }
+        for (t, level) in levels.iter().enumerate() {
+            if level.groups.is_empty() {
+                return Err(TopologyError::NoGroups);
+            }
+            for (g, members) in level.groups.iter().enumerate() {
+                if members.is_empty() {
+                    return Err(TopologyError::EmptyGroup { group: g });
+                }
+            }
+            if !(level.oversubscription >= 1.0 && level.oversubscription.is_finite()) {
+                return Err(TopologyError::BadOversubscription {
+                    value: level.oversubscription,
+                });
+            }
+            let mut seen = std::collections::BTreeSet::new();
+            for members in &level.groups {
+                for &u in members {
+                    if !seen.insert(u) {
+                        return Err(TopologyError::OverlappingGroups { gpu: u });
+                    }
+                }
+            }
+            if t > 0 {
+                let n_units = levels[t - 1].groups.len();
+                for (g, members) in level.groups.iter().enumerate() {
+                    for &u in members {
+                        if u >= n_units {
+                            return Err(TopologyError::UnitOutOfRange {
+                                unit: u,
+                                level: t,
+                                group: g,
+                                n_units,
+                            });
+                        }
+                    }
+                }
+                for u in 0..n_units {
+                    if !seen.contains(&u) {
+                        return Err(TopologyError::UncoveredUnit { unit: u, level: t });
+                    }
+                }
+            }
+        }
+        Ok(Topology::Tiered { levels })
+    }
+
+    /// Evenly-tiered topology: `group_counts[0]` contiguous leaf groups of
+    /// GPUs, `group_counts[t]` contiguous groups of the level below, each
+    /// count dividing the unit count it partitions. A 1024-GPU pod fabric of
+    /// 16 pods × 8 racks × 8 GPUs is `even_tiered(1024, &[128, 16], ...)`.
+    pub fn even_tiered(
+        n_gpus: usize,
+        group_counts: &[usize],
+        oversubscriptions: &[f64],
+    ) -> Result<Topology, TopologyError> {
+        if group_counts.is_empty() || group_counts.len() != oversubscriptions.len() {
+            return Err(TopologyError::NoGroups);
+        }
+        let mut levels = Vec::with_capacity(group_counts.len());
+        let mut units = n_gpus;
+        for (&count, &os) in group_counts.iter().zip(oversubscriptions) {
+            if count == 0 {
+                return Err(TopologyError::NoGroups);
+            }
+            if units == 0 || units % count != 0 {
+                return Err(TopologyError::UnevenGroups {
+                    n_gpus: units,
+                    n_groups: count,
+                });
+            }
+            let per = units / count;
+            levels.push(TierLevel {
+                groups: (0..count)
+                    .map(|g| (g * per..(g + 1) * per).collect())
+                    .collect(),
+                oversubscription: os,
+            });
+            units = count;
+        }
+        Topology::tiered(levels)
+    }
+
     /// Number of groups (1 for the big switch — one non-blocking domain).
+    /// For tiered fabrics this is the innermost (leaf) group count.
     pub fn n_groups(&self) -> usize {
         match self {
             Topology::BigSwitch => 1,
             Topology::TwoTier { groups, .. } => groups.len(),
+            Topology::Tiered { levels } => levels[0].groups.len(),
+        }
+    }
+
+    /// Number of aggregation levels: 0 for the big switch, 1 for two-tier,
+    /// `levels.len()` for a tiered fabric.
+    pub fn n_levels(&self) -> usize {
+        match self {
+            Topology::BigSwitch => 0,
+            Topology::TwoTier { .. } => 1,
+            Topology::Tiered { levels } => levels.len(),
         }
     }
 
@@ -186,27 +342,40 @@ impl Topology {
     pub fn owners(&self, n_gpus: usize) -> Result<Option<Vec<usize>>, TopologyError> {
         match self {
             Topology::BigSwitch => Ok(None),
-            Topology::TwoTier { groups, .. } => {
-                let mut owner = vec![usize::MAX; n_gpus];
-                for (g, members) in groups.iter().enumerate() {
-                    for &i in members {
-                        if i >= n_gpus {
-                            return Err(TopologyError::GpuOutOfRange {
-                                gpu: i,
-                                group: g,
-                                n_gpus,
-                            });
+            Topology::TwoTier { groups, .. } => leaf_owners_of(groups, n_gpus).map(Some),
+            Topology::Tiered { levels } => leaf_owners_of(&levels[0].groups, n_gpus).map(Some),
+        }
+    }
+
+    /// Level-`level` group id of each GPU — the leaf grouping at level 0,
+    /// composed through the parent tiers above it. Panics when
+    /// `level >= n_levels()` (the big switch has no levels).
+    pub fn owners_at(&self, n_gpus: usize, level: usize) -> Result<Vec<usize>, TopologyError> {
+        assert!(
+            level < self.n_levels(),
+            "level {level} out of range for a {}-level topology",
+            self.n_levels()
+        );
+        match self {
+            Topology::BigSwitch => unreachable!("big switch has no aggregation levels"),
+            Topology::TwoTier { groups, .. } => leaf_owners_of(groups, n_gpus),
+            Topology::Tiered { levels } => {
+                let mut owner = leaf_owners_of(&levels[0].groups, n_gpus)?;
+                for t in 1..=level {
+                    // validated at construction: every unit below has exactly
+                    // one parent group at this level
+                    let n_units = levels[t - 1].groups.len();
+                    let mut parent = vec![usize::MAX; n_units];
+                    for (g, members) in levels[t].groups.iter().enumerate() {
+                        for &u in members {
+                            parent[u] = g;
                         }
-                        if owner[i] != usize::MAX {
-                            return Err(TopologyError::OverlappingGroups { gpu: i });
-                        }
-                        owner[i] = g;
+                    }
+                    for o in owner.iter_mut() {
+                        *o = parent[*o];
                     }
                 }
-                if let Some(gpu) = owner.iter().position(|&o| o == usize::MAX) {
-                    return Err(TopologyError::UncoveredGpu { gpu });
-                }
-                Ok(Some(owner))
+                Ok(owner)
             }
         }
     }
@@ -220,7 +389,8 @@ impl Topology {
     }
 
     /// Per-group uplink rates (tokens/ms): member port sum over the
-    /// oversubscription factor. Empty for the big switch.
+    /// oversubscription factor. Empty for the big switch; the innermost
+    /// (leaf) level for tiered fabrics.
     pub fn uplink_rates(&self, cluster: &Cluster) -> Vec<f64> {
         match self {
             Topology::BigSwitch => vec![],
@@ -234,38 +404,96 @@ impl Topology {
                         / oversubscription
                 })
                 .collect(),
+            Topology::Tiered { .. } => self.uplink_rates_at(cluster, 0),
+        }
+    }
+
+    /// Uplink rates of the level-`level` groups: the transitive member port
+    /// sum over that level's oversubscription factor. Panics when
+    /// `level >= n_levels()`.
+    pub fn uplink_rates_at(&self, cluster: &Cluster, level: usize) -> Vec<f64> {
+        assert!(
+            level < self.n_levels(),
+            "level {level} out of range for a {}-level topology",
+            self.n_levels()
+        );
+        match self {
+            Topology::BigSwitch => unreachable!("big switch has no aggregation levels"),
+            Topology::TwoTier { .. } => self.uplink_rates(cluster),
+            Topology::Tiered { levels } => {
+                // cascade raw port-bandwidth sums up the hierarchy, then
+                // apply the requested level's oversubscription
+                let mut sums: Vec<f64> = levels[0]
+                    .groups
+                    .iter()
+                    .map(|members| members.iter().map(|&i| cluster.gpu(i).bandwidth).sum())
+                    .collect();
+                for lv in &levels[1..=level] {
+                    sums = lv
+                        .groups
+                        .iter()
+                        .map(|members| members.iter().map(|&u| sums[u]).sum())
+                        .collect();
+                }
+                let os = levels[level].oversubscription;
+                sums.iter().map(|s| s / os).collect()
+            }
         }
     }
 }
 
-/// Drain-time lower bound imposed by group uplinks: for each group, the time
-/// to push all its outbound inter-group tokens up (and pull inbound ones
-/// down) through the oversubscribed uplink.
+/// GPU -> group map for one grouping level, validated against the cluster
+/// size (shared by the two-tier and tiered leaf levels).
+fn leaf_owners_of(groups: &[Vec<usize>], n_gpus: usize) -> Result<Vec<usize>, TopologyError> {
+    let mut owner = vec![usize::MAX; n_gpus];
+    for (g, members) in groups.iter().enumerate() {
+        for &i in members {
+            if i >= n_gpus {
+                return Err(TopologyError::GpuOutOfRange {
+                    gpu: i,
+                    group: g,
+                    n_gpus,
+                });
+            }
+            if owner[i] != usize::MAX {
+                return Err(TopologyError::OverlappingGroups { gpu: i });
+            }
+            owner[i] = g;
+        }
+    }
+    if let Some(gpu) = owner.iter().position(|&o| o == usize::MAX) {
+        return Err(TopologyError::UncoveredGpu { gpu });
+    }
+    Ok(owner)
+}
+
+/// Drain-time lower bound imposed by group uplinks: for each group at every
+/// aggregation level, the time to push all its outbound inter-group tokens
+/// up (and pull inbound ones down) through the oversubscribed uplink. Zero
+/// for the big switch; the single leaf level for two-tier; the max across
+/// all levels for tiered fabrics. Walks the nonzero structure only, so a
+/// sparse matrix pays for its traffic, not for `n²`.
 pub fn uplink_bound(d: &TrafficMatrix, cluster: &Cluster, topo: &Topology) -> f64 {
     let n = d.n();
-    let Some(owner) = topo.group_of(n) else {
-        return 0.0;
-    };
-    let rates = topo.uplink_rates(cluster);
     let mut bound = 0.0f64;
-    for (g, &uplink_rate) in rates.iter().enumerate() {
-        let mut up_tokens = 0u64;
-        let mut down_tokens = 0u64;
+    for level in 0..topo.n_levels() {
+        let owner = topo.owners_at(n, level).expect("invalid topology");
+        let rates = topo.uplink_rates_at(cluster, level);
+        let mut up_tokens = vec![0u64; rates.len()];
+        let mut down_tokens = vec![0u64; rates.len()];
         for i in 0..n {
-            for j in 0..n {
-                if i == j || owner[i] != g && owner[j] != g {
-                    continue;
-                }
-                if owner[i] == g && owner[j] != g {
-                    up_tokens += d.get(i, j);
-                } else if owner[i] != g && owner[j] == g {
-                    down_tokens += d.get(i, j);
+            for (j, v) in d.row_iter(i) {
+                if i != j && owner[i] != owner[j] {
+                    up_tokens[owner[i]] += v;
+                    down_tokens[owner[j]] += v;
                 }
             }
         }
-        bound = bound
-            .max(up_tokens as f64 / uplink_rate)
-            .max(down_tokens as f64 / uplink_rate);
+        for (g, &uplink_rate) in rates.iter().enumerate() {
+            bound = bound
+                .max(up_tokens[g] as f64 / uplink_rate)
+                .max(down_tokens[g] as f64 / uplink_rate);
+        }
     }
     bound
 }
@@ -459,6 +687,109 @@ mod tests {
                 n_groups: 2
             })
         );
+    }
+
+    #[test]
+    fn single_level_tiered_matches_two_tier() {
+        // one aggregation level: Tiered must price exactly like TwoTier
+        let d = rand_matrix(8, 9);
+        let c = Cluster::homogeneous(8, 1.0);
+        let two = Topology::even_two_tier(8, 2, 4.0).unwrap();
+        let one = Topology::even_tiered(8, &[2], &[4.0]).unwrap();
+        assert_eq!(one.n_levels(), 1);
+        assert_eq!(one.n_groups(), 2);
+        assert_eq!(one.owners(8).unwrap(), two.owners(8).unwrap());
+        assert_eq!(one.uplink_rates(&c), two.uplink_rates(&c));
+        assert_eq!(uplink_bound(&d, &c, &one), uplink_bound(&d, &c, &two));
+    }
+
+    #[test]
+    fn tiered_owners_compose_through_levels() {
+        // 8 GPUs, 4 racks of 2, 2 pods of 2 racks
+        let topo = Topology::even_tiered(8, &[4, 2], &[2.0, 4.0]).unwrap();
+        assert_eq!(topo.n_levels(), 2);
+        assert_eq!(topo.owners_at(8, 0).unwrap(), vec![0, 0, 1, 1, 2, 2, 3, 3]);
+        assert_eq!(topo.owners_at(8, 1).unwrap(), vec![0, 0, 0, 0, 1, 1, 1, 1]);
+    }
+
+    #[test]
+    fn tiered_uplink_rates_cascade() {
+        let c = Cluster::homogeneous(8, 2.0);
+        let topo = Topology::even_tiered(8, &[4, 2], &[2.0, 4.0]).unwrap();
+        // leaf: 2 members x 2.0 over 2x = 2.0; pod: 4 GPUs x 2.0 over 4x = 2.0
+        assert_eq!(topo.uplink_rates_at(&c, 0), vec![2.0; 4]);
+        assert_eq!(topo.uplink_rates_at(&c, 1), vec![2.0; 2]);
+        assert_eq!(topo.uplink_rates(&c), vec![2.0; 4]);
+    }
+
+    #[test]
+    fn tiered_uplink_bound_takes_the_binding_level() {
+        // cross-pod traffic only: the pod level binds harder than the leaf
+        // level once its oversubscription dominates
+        let mut d = TrafficMatrix::zeros(8);
+        d.set(0, 4, 80); // pod 0 -> pod 1
+        let c = Cluster::homogeneous(8, 1.0);
+        let mild = Topology::even_tiered(8, &[4, 2], &[2.0, 1.0]).unwrap();
+        let harsh = Topology::even_tiered(8, &[4, 2], &[2.0, 8.0]).unwrap();
+        // leaf bound: 80 / (2*1.0/2) = 80; pod bound at 8x: 80 / (4/8) = 160
+        assert_eq!(uplink_bound(&d, &c, &mild), 80.0);
+        assert_eq!(uplink_bound(&d, &c, &harsh), 160.0);
+    }
+
+    #[test]
+    fn intra_leaf_traffic_escapes_every_tier() {
+        let mut d = TrafficMatrix::zeros(8);
+        d.set(0, 1, 500);
+        let c = Cluster::homogeneous(8, 1.0);
+        let topo = Topology::even_tiered(8, &[4, 2], &[4.0, 8.0]).unwrap();
+        assert_eq!(uplink_bound(&d, &c, &topo), 0.0);
+    }
+
+    #[test]
+    fn tiered_construction_rejects_bad_shapes() {
+        // empty levels
+        assert_eq!(Topology::tiered(vec![]), Err(TopologyError::NoGroups));
+        // parent lists a missing child unit
+        let err = Topology::tiered(vec![
+            TierLevel {
+                groups: vec![vec![0, 1], vec![2, 3]],
+                oversubscription: 2.0,
+            },
+            TierLevel {
+                groups: vec![vec![0, 7]],
+                oversubscription: 2.0,
+            },
+        ])
+        .unwrap_err();
+        assert!(matches!(err, TopologyError::UnitOutOfRange { unit: 7, .. }), "{err}");
+        // parent fails to cover a child unit
+        let err = Topology::tiered(vec![
+            TierLevel {
+                groups: vec![vec![0, 1], vec![2, 3]],
+                oversubscription: 2.0,
+            },
+            TierLevel {
+                groups: vec![vec![0]],
+                oversubscription: 2.0,
+            },
+        ])
+        .unwrap_err();
+        assert!(matches!(err, TopologyError::UncoveredUnit { unit: 1, level: 1 }), "{err}");
+        // uneven tiling
+        assert!(matches!(
+            Topology::even_tiered(10, &[4], &[2.0]),
+            Err(TopologyError::UnevenGroups { .. })
+        ));
+        // mismatched factor list
+        assert_eq!(
+            Topology::even_tiered(8, &[4, 2], &[2.0]),
+            Err(TopologyError::NoGroups)
+        );
+        // bad oversubscription at a parent level
+        assert!(matches!(
+            Topology::even_tiered(8, &[4, 2], &[2.0, 0.5]),
+            Err(TopologyError::BadOversubscription { .. })
+        ));
     }
 
     #[test]

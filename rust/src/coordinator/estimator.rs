@@ -47,11 +47,11 @@ impl TrafficEstimator {
     pub fn observe(&mut self, d: &TrafficMatrix) {
         assert_eq!(d.n(), self.n, "observed matrix dimension mismatch");
         if self.windows == 0 {
-            for (w, &v) in self.ewma.iter_mut().zip(d.data()) {
+            for (w, v) in self.ewma.iter_mut().zip(d.dense_vec()) {
                 *w = v as f64;
             }
         } else {
-            for (w, &v) in self.ewma.iter_mut().zip(d.data()) {
+            for (w, v) in self.ewma.iter_mut().zip(d.dense_vec()) {
                 *w = (1.0 - self.alpha) * *w + self.alpha * v as f64;
             }
         }
@@ -62,7 +62,7 @@ impl TrafficEstimator {
     /// observation this is the all-zero matrix.
     pub fn estimate(&self) -> TrafficMatrix {
         let data: Vec<u64> = self.ewma.iter().map(|&v| v.round().max(0.0) as u64).collect();
-        TrafficMatrix::from_rows(self.n, &data)
+        TrafficMatrix::from_rows(self.n, &data).expect("EWMA buffer is square by construction")
     }
 }
 

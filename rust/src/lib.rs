@@ -74,11 +74,26 @@
 //! the parallel (deterministically reduced) exact first sweep
 //! ([`util::par::par_map`]).
 //!
+//! And to **thousand-GPU pods** through three further mechanisms, each
+//! preserving small-scale results bit-for-bit: [`traffic::TrafficMatrix`]
+//! stores sparse (CSR-style) or dense by density behind one API, so hot
+//! paths walk nonzeros ([`traffic::TrafficMatrix::row_iter`]) instead of
+//! `n²` cells; the BvN decomposition parallelizes its matching repair with
+//! a deterministic index-ordered reduction (and
+//! [`schedule::aurora_schedule_approx`] offers an explicit ε-approximate
+//! early-out); and [`cluster::Topology::Tiered`] generalizes the fabric to
+//! recursive rack/pod/core levels, scheduled per tier
+//! ([`schedule::hierarchical_schedule`]) and planned tier-locally
+//! ([`planner::Planner::plan_topology`]). The 1024-GPU plan + schedule is
+//! gated under one second by the committed bench baseline.
+//!
 //! See `docs/architecture.md` for the layer map, the Scenario decision tree,
 //! the "Hierarchical scheduling" section (two-tier topologies, the two-phase
 //! decomposition, and the uplink bounds), the "Performance & incremental
 //! planning" section (complexity table, lazy-greedy invariants, rebuild
-//! points), and which code paths are exact versus heuristic.
+//! points), the "Scaling to 1024 GPUs" section (sparse storage contract,
+//! parallel-BvN determinism, recursive tiers, the tier-local planner), and
+//! which code paths are exact versus heuristic.
 
 pub mod assignment;
 pub mod cluster;

@@ -74,6 +74,8 @@ USAGE:
   --skew ALPHA         drive planning with a Zipf(ALPHA)-skewed workload (0 = uniform)
   --groups G           two-tier topology with G even GPU groups (1 = big switch)
   --oversub F          uplink oversubscription factor >= 1 (needs --groups >= 2)
+  --pods P             stack a third tier: P pods of G/P leaf groups each (needs --groups >= 2)
+  --pod-oversub F      pod-uplink oversubscription (default: same as --oversub)
   --drift ALPHA        serve-sim: Zipf skew of the rotating hot expert (0 = stationary uniform)
   --noise              serve-sim: sample each window multinomially (live-batch fluctuation)
   --check              bench: fail when a hot path regresses past --max-regress (default 1.25x)
@@ -188,10 +190,13 @@ fn parse_shape(opts: &Opts) -> Result<(usize, Option<usize>), String> {
     Ok((models, per_gpu))
 }
 
-/// Parse `--groups` / `--oversub` into a [`aurora::cluster::Topology`].
-/// `--groups 1` (the default) is the big switch; `--groups N ≥ 2` builds an
-/// even two-tier fabric with `--oversub` (default 1.0) uplink
-/// oversubscription.
+/// Parse `--groups` / `--oversub` / `--pods` / `--pod-oversub` into a
+/// [`aurora::cluster::Topology`]. `--groups 1` (the default) is the big
+/// switch; `--groups N ≥ 2` alone builds an even two-tier fabric with
+/// `--oversub` (default 1.0) uplink oversubscription; adding `--pods P ≥ 2`
+/// stacks a third tier that groups the `N` leaf groups into `P` pods, whose
+/// uplinks are oversubscribed by `--pod-oversub` (default: same as
+/// `--oversub`).
 fn parse_topology(opts: &Opts, n_gpus: usize) -> Result<aurora::cluster::Topology, String> {
     use aurora::cluster::Topology;
     let groups: usize = opts
@@ -204,6 +209,11 @@ fn parse_topology(opts: &Opts, n_gpus: usize) -> Result<aurora::cluster::Topolog
         .unwrap_or("1")
         .parse()
         .map_err(|_| "bad --oversub")?;
+    let pods: usize = opts
+        .get("pods")
+        .unwrap_or("1")
+        .parse()
+        .map_err(|_| "bad --pods")?;
     if groups == 0 {
         return Err("--groups must be >= 1".into());
     }
@@ -211,14 +221,27 @@ fn parse_topology(opts: &Opts, n_gpus: usize) -> Result<aurora::cluster::Topolog
         if oversub != 1.0 {
             return Err("--oversub needs --groups >= 2 (one group is a big switch)".into());
         }
+        if pods > 1 {
+            return Err("--pods needs --groups >= 2 (one group is a big switch)".into());
+        }
         return Ok(Topology::BigSwitch);
     }
-    Topology::even_two_tier(n_gpus, groups, oversub).map_err(|e| e.to_string())
+    if pods <= 1 {
+        if opts.get("pod-oversub").is_some() {
+            return Err("--pod-oversub needs --pods >= 2".into());
+        }
+        return Topology::even_two_tier(n_gpus, groups, oversub).map_err(|e| e.to_string());
+    }
+    let pod_oversub: f64 = match opts.get("pod-oversub") {
+        None => oversub,
+        Some(s) => s.parse().map_err(|_| "bad --pod-oversub")?,
+    };
+    Topology::even_tiered(n_gpus, &[groups, pods], &[oversub, pod_oversub])
+        .map_err(|e| e.to_string())
 }
 
-/// JSON rendering of a two-tier topology (`None` for the big switch, which
-/// keeps the classic plan output byte-identical when no topology flags are
-/// given).
+/// JSON rendering of a topology (`None` for the big switch, which keeps the
+/// classic plan output byte-identical when no topology flags are given).
 fn topology_json(topo: &aurora::cluster::Topology) -> Option<aurora::util::Json> {
     use aurora::cluster::Topology;
     match topo {
@@ -230,6 +253,20 @@ fn topology_json(topo: &aurora::cluster::Topology) -> Option<aurora::util::Json>
             ("groups", Json::from(groups.len())),
             ("oversubscription", Json::Num(*oversubscription)),
         ])),
+        Topology::Tiered { levels } => Some(Json::obj(vec![(
+            "levels",
+            Json::Arr(
+                levels
+                    .iter()
+                    .map(|lv| {
+                        Json::obj(vec![
+                            ("groups", Json::from(lv.groups.len())),
+                            ("oversubscription", Json::Num(lv.oversubscription)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        )])),
     }
 }
 
@@ -359,6 +396,17 @@ fn cmd_simulate(opts: &Opts) -> Result<(), String> {
             "topology: two-tier, {} groups, {:.1}x oversubscribed uplinks",
             groups.len(),
             oversubscription
+        );
+    }
+    if let Topology::Tiered { levels } = &topo {
+        let desc: Vec<String> = levels
+            .iter()
+            .map(|lv| format!("{} groups x{:.1}", lv.groups.len(), lv.oversubscription))
+            .collect();
+        println!(
+            "topology: {}-level tiered ({})",
+            levels.len(),
+            desc.join(", ")
         );
     }
     if replicas >= 2 || skew > 0.0 {
@@ -590,6 +638,39 @@ fn cmd_bench(opts: &Opts) -> Result<(), String> {
         b.run(&format!("schedule: bvn slot schedule {n}x{n}"), || {
             aurora_schedule(d_big).makespan_tokens()
         });
+    }
+    {
+        // Sparse-era BvN scale point: Zipf rows at 512 GPUs leave most cells
+        // empty, so the decomposition's cost tracks the nonzero structure
+        // (and, under --features rayon, the parallel matching repair).
+        let big_trace = skewed_workload(512, 1, 512, 1.2, cfg.seed);
+        let d_big = &big_trace.layers[0].traffic;
+        b.run("schedule: bvn slot schedule 512x512", || {
+            aurora_schedule(d_big).makespan_tokens()
+        });
+    }
+
+    // Thousand-GPU tier: recursive three-tier planning (tier-local
+    // localization + hot-gated port refinement) followed by the full
+    // recursive hierarchical schedule of the planned placement — the
+    // end-to-end path the sparse matrices, the parallel BvN, and the
+    // tier-local planner exist to keep under a second at 1024 GPUs.
+    for &(n, racks, pods) in &[(512usize, 64usize, 8usize), (1024, 128, 16)] {
+        let big_cluster = Cluster::homogeneous(n, 800.0);
+        let big_trace = skewed_workload(n, 1, 512, 1.2, cfg.seed);
+        let big_refs = [&big_trace];
+        let topo3 = aurora::cluster::Topology::even_tiered(n, &[racks, pods], &[2.0, 4.0])
+            .map_err(|e| e.to_string())?;
+        b.run(
+            &format!("planner: plan_topology+schedule zipf(1.2) {n} on {n} GPUs 3-tier"),
+            || {
+                let dep = planner.plan_topology(&big_refs, &big_cluster, &topo3).unwrap();
+                let agg = dep.aggregated_traffic(&[&big_trace.layers[0]]);
+                aurora::schedule::hierarchical_schedule(&agg, &big_cluster, &topo3)
+                    .unwrap()
+                    .pipelined_ms
+            },
+        );
     }
 
     let benchmarks: Vec<Json> = b

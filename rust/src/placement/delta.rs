@@ -27,8 +27,14 @@
 //! * per-GPU cross-GPU send/receive token totals — only `a`'s and `b`'s
 //!   totals change (a flow `e ↔ e2` with `e2` elsewhere merely relabels one
 //!   endpoint), updated by walking `e`'s traffic row and column once;
-//! * on a two-tier fabric, per-group uplink up/down token totals — flows of
-//!   `e` change crossing status only relative to their partner's group.
+//! * on a two-tier or recursive tiered fabric, per-group uplink up/down
+//!   token totals at **every aggregation level** — flows of `e` change
+//!   crossing status only relative to their partner's group at each level.
+//!
+//! Traffic walks iterate the nonzero structure
+//! ([`crate::traffic::TrafficMatrix::row_iter`] /
+//! [`crate::traffic::TrafficMatrix::col_iter`]), so sparse matrices pay for
+//! their flows, not for `n²` — same integer sums either way.
 //!
 //! Estimates are rebuilt from scratch exactly once per refinement pass (at
 //! [`DeltaEstimator::new`]); everything after that is deltas.
@@ -60,13 +66,14 @@ pub struct DeltaEstimator<'a> {
     /// exactly the projected aggregate's off-diagonal row/col sums).
     out: Vec<u64>,
     inn: Vec<u64>,
-    /// Group of each GPU (`None` on the big switch).
-    owner: Option<Vec<usize>>,
-    /// Per-group uplink rates (tokens/ms).
-    rates: Vec<f64>,
-    /// Cross-group tokens leaving / entering each group.
-    up: Vec<u64>,
-    down: Vec<u64>,
+    /// Group of each GPU per aggregation level (empty on the big switch;
+    /// one level for two-tier; one entry per tier for tiered fabrics).
+    owners: Vec<Vec<usize>>,
+    /// Per-group uplink rates (tokens/ms) per level.
+    rates: Vec<Vec<f64>>,
+    /// Cross-group tokens leaving / entering each group, per level.
+    up: Vec<Vec<u64>>,
+    down: Vec<Vec<u64>>,
     /// Per-GPU completion estimates, always current.
     costs: Vec<f64>,
 }
@@ -86,36 +93,37 @@ impl<'a> DeltaEstimator<'a> {
         assert_eq!(layers.len(), dep.n_models(), "one layer per model");
         assert_eq!(cluster.len(), dep.n_gpus, "cluster must match the deployment");
         let n = dep.n_gpus;
-        let owner = topo.group_of(n);
-        let rates = topo.uplink_rates(cluster);
-        let n_groups = rates.len();
+        let n_levels = topo.n_levels();
+        let owners: Vec<Vec<usize>> = (0..n_levels)
+            .map(|l| topo.owners_at(n, l).expect("invalid topology"))
+            .collect();
+        let rates: Vec<Vec<f64>> = (0..n_levels)
+            .map(|l| topo.uplink_rates_at(cluster, l))
+            .collect();
         let loads: Vec<Vec<u64>> = layers.iter().map(|l| l.expert_loads()).collect();
 
         let mut gpu_load = vec![vec![0u64; n]; layers.len()];
         let mut out = vec![0u64; n];
         let mut inn = vec![0u64; n];
-        let mut up = vec![0u64; n_groups];
-        let mut down = vec![0u64; n_groups];
+        let mut up: Vec<Vec<u64>> = rates.iter().map(|r| vec![0u64; r.len()]).collect();
+        let mut down: Vec<Vec<u64>> = rates.iter().map(|r| vec![0u64; r.len()]).collect();
         for (m, layer) in layers.iter().enumerate() {
             let a = &dep.assignments[m];
             for (e, &g) in a.iter().enumerate() {
                 gpu_load[m][g] += loads[m][e];
-                for (e2, &g2) in a.iter().enumerate() {
+                for (e2, t) in layer.traffic.row_iter(e) {
                     if e == e2 {
                         continue;
                     }
-                    let t = layer.traffic.get(e, e2);
-                    if t == 0 {
-                        continue;
-                    }
+                    let g2 = a[e2];
                     if g != g2 {
                         out[g] += t;
                         inn[g2] += t;
                     }
-                    if let Some(ow) = &owner {
+                    for (l, ow) in owners.iter().enumerate() {
                         if ow[g] != ow[g2] {
-                            up[ow[g]] += t;
-                            down[ow[g2]] += t;
+                            up[l][ow[g]] += t;
+                            down[l][ow[g2]] += t;
                         }
                     }
                 }
@@ -130,7 +138,7 @@ impl<'a> DeltaEstimator<'a> {
             gpu_load,
             out,
             inn,
-            owner,
+            owners,
             rates,
             up,
             down,
@@ -166,58 +174,53 @@ impl<'a> DeltaEstimator<'a> {
         let load = self.loads[m][e];
         self.gpu_load[m][from] -= load;
         self.gpu_load[m][to] += load;
-        let (hf, ht) = match &self.owner {
-            Some(ow) => (ow[from], ow[to]),
-            None => (0, 0),
-        };
-        for e2 in 0..layer.n_experts() {
+        for (e2, t_out) in layer.traffic.row_iter(e) {
             if e2 == e {
                 continue;
             }
             let g2 = self.assignments[m][e2];
-            let t_out = layer.traffic.get(e, e2);
-            let t_in = layer.traffic.get(e2, e);
-            if t_out > 0 {
-                if g2 != from {
-                    self.out[from] -= t_out;
-                    self.inn[g2] -= t_out;
+            if g2 != from {
+                self.out[from] -= t_out;
+                self.inn[g2] -= t_out;
+            }
+            if g2 != to {
+                self.out[to] += t_out;
+                self.inn[g2] += t_out;
+            }
+            for (l, ow) in self.owners.iter().enumerate() {
+                let (hf, ht, h2) = (ow[from], ow[to], ow[g2]);
+                if hf != h2 {
+                    self.up[l][hf] -= t_out;
+                    self.down[l][h2] -= t_out;
                 }
-                if g2 != to {
-                    self.out[to] += t_out;
-                    self.inn[g2] += t_out;
+                if ht != h2 {
+                    self.up[l][ht] += t_out;
+                    self.down[l][h2] += t_out;
                 }
             }
-            if t_in > 0 {
-                if g2 != from {
-                    self.inn[from] -= t_in;
-                    self.out[g2] -= t_in;
-                }
-                if g2 != to {
-                    self.inn[to] += t_in;
-                    self.out[g2] += t_in;
-                }
+        }
+        for (e2, t_in) in layer.traffic.col_iter(e) {
+            if e2 == e {
+                continue;
             }
-            if let Some(ow) = &self.owner {
-                let h2 = ow[g2];
-                if t_out > 0 {
-                    if hf != h2 {
-                        self.up[hf] -= t_out;
-                        self.down[h2] -= t_out;
-                    }
-                    if ht != h2 {
-                        self.up[ht] += t_out;
-                        self.down[h2] += t_out;
-                    }
+            let g2 = self.assignments[m][e2];
+            if g2 != from {
+                self.inn[from] -= t_in;
+                self.out[g2] -= t_in;
+            }
+            if g2 != to {
+                self.inn[to] += t_in;
+                self.out[g2] += t_in;
+            }
+            for (l, ow) in self.owners.iter().enumerate() {
+                let (hf, ht, h2) = (ow[from], ow[to], ow[g2]);
+                if h2 != hf {
+                    self.up[l][h2] -= t_in;
+                    self.down[l][hf] -= t_in;
                 }
-                if t_in > 0 {
-                    if h2 != hf {
-                        self.up[h2] -= t_in;
-                        self.down[hf] -= t_in;
-                    }
-                    if h2 != ht {
-                        self.up[h2] += t_in;
-                        self.down[ht] += t_in;
-                    }
+                if h2 != ht {
+                    self.up[l][h2] += t_in;
+                    self.down[l][ht] += t_in;
                 }
             }
         }
@@ -258,23 +261,23 @@ impl<'a> DeltaEstimator<'a> {
     }
 
     /// Cross-uplink drain (ms) of the tracked deployment — equal to
-    /// [`crate::cluster::uplink_bound`] of the projected aggregate traffic;
-    /// `0.0` on the big switch.
+    /// [`crate::cluster::uplink_bound`] of the projected aggregate traffic
+    /// (the max across every aggregation level); `0.0` on the big switch.
     pub fn uplink_drain_ms(&self) -> f64 {
-        if self.owner.is_none() {
-            return 0.0;
+        let mut bound = 0.0f64;
+        for l in 0..self.owners.len() {
+            for ((&u, &d), &r) in self.up[l].iter().zip(&self.down[l]).zip(&self.rates[l]) {
+                bound = bound.max(u.max(d) as f64 / r);
+            }
         }
-        self.up
-            .iter()
-            .zip(&self.down)
-            .zip(&self.rates)
-            .map(|((&u, &d), &r)| u.max(d) as f64 / r)
-            .fold(0.0, f64::max)
+        bound
     }
 
-    /// Group of GPU `g` (`None` on the big switch).
+    /// Leaf group of GPU `g` (`None` on the big switch). Two GPUs sharing a
+    /// leaf group share every coarser group above it, so a swap between them
+    /// changes no level's uplink crossings.
     pub fn group_of_gpu(&self, g: usize) -> Option<usize> {
-        self.owner.as_ref().map(|ow| ow[g])
+        self.owners.first().map(|ow| ow[g])
     }
 }
 
@@ -372,6 +375,47 @@ mod tests {
         for g in 0..4 {
             assert_eq!(est.cost(g).to_bits(), before.cost(g).to_bits(), "gpu {g}");
         }
+    }
+
+    #[test]
+    fn tiered_drain_matches_full_rescan_after_random_moves() {
+        // every aggregation level's uplink counters must track the rescanned
+        // uplink_bound of the projected aggregate — including sparse inputs
+        let la = layer(12, 21);
+        let layers = [&la];
+        let cluster = Cluster::homogeneous(8, 80.0);
+        let topo = Topology::even_tiered(8, &[4, 2], &[2.0, 4.0]).unwrap();
+        let mut dep = Deployment::new(
+            8,
+            vec![vec![0, 1, 2, 3, 4, 5, 6, 7, 0, 2, 4, 6]],
+            SchedulePolicy::Aurora,
+            Scenario::ExclusiveHomogeneous,
+        )
+        .unwrap();
+        let mut est = DeltaEstimator::new(&dep, &layers, &cluster, &topo);
+        let sparse_layer = MoeLayerStats {
+            traffic: la.traffic.to_sparse(),
+            ..la.clone()
+        };
+        let est_sparse = DeltaEstimator::new(&dep, &[&sparse_layer], &cluster, &topo);
+        assert_eq!(est.up, est_sparse.up);
+        assert_eq!(est.down, est_sparse.down);
+        let mut rng = Rng::new(77);
+        for step in 0..40 {
+            let e = rng.gen_range(12) as usize;
+            let g = rng.gen_range(8) as usize;
+            est.apply_move(0, e, g);
+            dep.assignments[0][e] = g;
+            let refs: Vec<&MoeLayerStats> = vec![&la];
+            let agg = dep.aggregated_traffic(&refs);
+            let drain = uplink_bound(&agg, &cluster, &topo);
+            assert!(
+                (est.uplink_drain_ms() - drain).abs() < 1e-12,
+                "step {step}: {} vs {drain}",
+                est.uplink_drain_ms()
+            );
+        }
+        assert_eq!(est.group_of_gpu(5), Some(2));
     }
 
     #[test]

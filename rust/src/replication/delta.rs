@@ -41,10 +41,11 @@ struct Counters {
     out: Vec<u64>,
     /// Cross-GPU tokens received at each GPU.
     inn: Vec<u64>,
-    /// Cross-group tokens leaving each group (two-tier fabrics only).
-    up: Vec<u64>,
-    /// Cross-group tokens entering each group.
-    down: Vec<u64>,
+    /// Cross-group tokens leaving each group, one counter set per
+    /// aggregation level (empty on the big switch).
+    up: Vec<Vec<u64>>,
+    /// Cross-group tokens entering each group, per level.
+    down: Vec<Vec<u64>>,
 }
 
 /// Per-expert traffic placement context shared by the contribution walks.
@@ -55,7 +56,8 @@ struct Contrib<'c> {
     /// expert's primary GPU, exactly as in
     /// [`crate::traffic::TrafficMatrix::project_split`]).
     assignment: &'c [usize],
-    owner: Option<&'c [usize]>,
+    /// GPU → group maps, one per aggregation level.
+    owners: &'c [Vec<usize>],
 }
 
 impl Counters {
@@ -70,12 +72,7 @@ impl Counters {
         set: &[usize],
         weights: &[f64],
     ) {
-        let n_e = ctx.layer.n_experts();
-        for i in 0..n_e {
-            let t = ctx.layer.traffic.get(i, j);
-            if t == 0 {
-                continue;
-            }
+        for (i, t) in ctx.layer.traffic.col_iter(j) {
             let src = ctx.assignment[i];
             if set.len() == 1 {
                 self.place(add, ctx, src, set[0], t);
@@ -105,15 +102,15 @@ impl Counters {
             self.out[src] -= t;
             self.inn[dst] -= t;
         }
-        if let Some(ow) = ctx.owner {
+        for (l, ow) in ctx.owners.iter().enumerate() {
             let (hs, hd) = (ow[src], ow[dst]);
             if hs != hd {
                 if add {
-                    self.up[hs] += t;
-                    self.down[hd] += t;
+                    self.up[l][hs] += t;
+                    self.down[l][hd] += t;
                 } else {
-                    self.up[hs] -= t;
-                    self.down[hd] -= t;
+                    self.up[l][hs] -= t;
+                    self.down[l][hd] -= t;
                 }
             }
         }
@@ -132,8 +129,11 @@ impl Counters {
 pub struct ReplicaDeltaEstimator<'a> {
     layers: &'a [&'a MoeLayerStats],
     cluster: &'a Cluster,
-    owner: Option<Vec<usize>>,
-    rates: Vec<f64>,
+    /// GPU → group maps, one per aggregation level (empty on the big
+    /// switch).
+    owners: Vec<Vec<usize>>,
+    /// Per-group uplink rates, per level.
+    rates: Vec<Vec<f64>>,
     /// Primaries per model (fixed).
     assignments: Vec<Vec<usize>>,
     /// Committed replica sets.
@@ -163,8 +163,13 @@ impl<'a> ReplicaDeltaEstimator<'a> {
         assert_eq!(layers.len(), rep.n_models(), "one layer per model");
         assert_eq!(cluster.len(), rep.n_gpus(), "cluster must match the deployment");
         let n = rep.n_gpus();
-        let owner = topo.group_of(n);
-        let rates = topo.uplink_rates(cluster);
+        let n_levels = topo.n_levels();
+        let owners: Vec<Vec<usize>> = (0..n_levels)
+            .map(|l| topo.owners_at(n, l).expect("invalid topology"))
+            .collect();
+        let rates: Vec<Vec<f64>> = (0..n_levels)
+            .map(|l| topo.uplink_rates_at(cluster, l))
+            .collect();
         let loads: Vec<Vec<u64>> = layers.iter().map(|l| l.expert_loads()).collect();
         let sets = rep.replicas.clone();
         let plan = solve_splits(&sets, None, &loads, layers, cluster);
@@ -172,15 +177,15 @@ impl<'a> ReplicaDeltaEstimator<'a> {
             gpu_load: vec![vec![0u64; n]; layers.len()],
             out: vec![0u64; n],
             inn: vec![0u64; n],
-            up: vec![0u64; rates.len()],
-            down: vec![0u64; rates.len()],
+            up: rates.iter().map(|r| vec![0u64; r.len()]).collect(),
+            down: rates.iter().map(|r| vec![0u64; r.len()]).collect(),
         };
         for (m, layer) in layers.iter().enumerate() {
             let ctx = Contrib {
                 m,
                 layer: *layer,
                 assignment: &rep.base.assignments[m],
-                owner: owner.as_deref(),
+                owners: &owners,
             };
             for j in 0..sets[m].len() {
                 counters.contribute(true, &ctx, j, &sets[m][j], &plan.weights[m][j]);
@@ -189,7 +194,7 @@ impl<'a> ReplicaDeltaEstimator<'a> {
         let mut est = ReplicaDeltaEstimator {
             layers,
             cluster,
-            owner,
+            owners,
             rates,
             assignments: rep.base.assignments.clone(),
             sets,
@@ -222,14 +227,13 @@ impl<'a> ReplicaDeltaEstimator<'a> {
         for g in 0..self.cluster.len() {
             mx = mx.max(self.cost_of(c, g));
         }
-        if self.owner.is_some() {
-            let mut bound = 0.0f64;
-            for ((&u, &d), &r) in c.up.iter().zip(&c.down).zip(&self.rates) {
+        let mut bound = 0.0f64;
+        for l in 0..self.owners.len() {
+            for ((&u, &d), &r) in c.up[l].iter().zip(&c.down[l]).zip(&self.rates[l]) {
                 bound = bound.max(u as f64 / r).max(d as f64 / r);
             }
-            mx = mx.max(bound);
         }
-        mx
+        mx.max(bound)
     }
 
     /// Re-place the contributions of every expert whose split weights (or
@@ -247,7 +251,7 @@ impl<'a> ReplicaDeltaEstimator<'a> {
                 m: mm,
                 layer: self.layers[mm],
                 assignment: &self.assignments[mm],
-                owner: self.owner.as_deref(),
+                owners: &self.owners,
             };
             for (j, w) in model.iter().enumerate() {
                 let is_cand = mm == m && j == e;
@@ -314,18 +318,20 @@ impl<'a> ReplicaDeltaEstimator<'a> {
         mx.max(self.uplink_drain_ms())
     }
 
-    /// Committed uplink drain (ms); `0.0` on the big switch.
+    /// Committed uplink drain (ms), the max across every aggregation level;
+    /// `0.0` on the big switch.
     pub fn uplink_drain_ms(&self) -> f64 {
-        if self.owner.is_none() {
-            return 0.0;
+        let mut bound = 0.0f64;
+        for l in 0..self.owners.len() {
+            for ((&u, &d), &r) in self.counters.up[l]
+                .iter()
+                .zip(&self.counters.down[l])
+                .zip(&self.rates[l])
+            {
+                bound = bound.max(u.max(d) as f64 / r);
+            }
         }
-        self.counters
-            .up
-            .iter()
-            .zip(&self.counters.down)
-            .zip(&self.rates)
-            .map(|((&u, &d), &r)| u.max(d) as f64 / r)
-            .fold(0.0, f64::max)
+        bound
     }
 
     /// The committed split plan — bit-for-bit [`super::optimize_splits`] of
@@ -398,6 +404,36 @@ mod tests {
                     est.costs()[gpu]
                 );
             }
+            assert!((est.objective() - full_obj).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn tiered_committed_state_matches_full_rescan() {
+        // candidate prices and committed state must equal the from-scratch
+        // objective on a recursive tiered fabric (all levels' drains join)
+        let l = hot_layer(16, 1.2, 13);
+        let layers = [&l];
+        let cluster = Cluster::homogeneous(8, 100.0);
+        let topo = Topology::even_tiered(8, &[4, 2], &[2.0, 4.0]).unwrap();
+        let mut r = rep(16, 8);
+        let mut est = ReplicaDeltaEstimator::new(&r, &layers, &cluster, &topo);
+        for (e, g) in [(0usize, 1usize), (0, 6), (4, 2)] {
+            let predicted = est.eval_add(0, e, g);
+            r.replicas[0][e].push(g);
+            let full_plan = optimize_splits(&r, &layers, &cluster);
+            let full_costs = estimate_per_gpu_replicated(&r, &layers, &cluster, &full_plan);
+            let agg = r.aggregated_traffic_split(&layers, &full_plan);
+            let full_obj = full_costs
+                .iter()
+                .cloned()
+                .fold(0.0, f64::max)
+                .max(uplink_bound(&agg, &cluster, &topo));
+            assert!(
+                (predicted - full_obj).abs() < 1e-12,
+                "expert {e} -> gpu {g}: predicted {predicted} vs full {full_obj}"
+            );
+            est.commit_add(0, e, g);
             assert!((est.objective() - full_obj).abs() < 1e-12);
         }
     }

@@ -9,8 +9,8 @@
 //!    ([`crate::traffic::augment_to_balanced`]) — every row/col sums to
 //!    `b_max`;
 //! 2. repeatedly extract a perfect matching from the support of `D'`
-//!    (Hopcroft–Karp); Hall's condition always holds for a doubly-balanced
-//!    non-negative matrix, so a matching always exists;
+//!    (Kuhn with incremental repair); Hall's condition always holds for a
+//!    doubly-balanced non-negative matrix, so a matching always exists;
 //! 3. each matching becomes one [`SlotRound`] of duration
 //!    `w = min entry along the matching`; subtract and repeat until `D'` is
 //!    exhausted.
@@ -19,9 +19,43 @@
 //! and receives at most once per round, and the bottleneck GPU carries real
 //! traffic in every round — so dropping artificial filler keeps the makespan
 //! at exactly `b_max`.
+//!
+//! # Scale (1024×1024)
+//!
+//! Three changes make thousand-port matrices practical without altering the
+//! emitted rounds:
+//!
+//! * **Support lists.** The augmenting DFS walks per-row sorted adjacency
+//!   lists of `D'`'s nonzero columns instead of scanning all `n` columns, so
+//!   sparse matrices (the common case after
+//!   [`TrafficMatrix::to_sparse`][crate::traffic::TrafficMatrix]) skip empty
+//!   rows and columns entirely. The lists enumerate the same columns in the
+//!   same ascending order as the dense scan, so the matching — and therefore
+//!   every round — is unchanged.
+//! * **Speculative parallel repair** ([`crate::util::par::par_map`], `rayon`
+//!   feature). When a round breaks many pairs, each broken left vertex
+//!   speculatively runs its augmenting search against a snapshot of the
+//!   matching; speculations are then applied in index order, and any whose
+//!   DFS touched a right vertex re-matched by an earlier application is
+//!   recomputed serially. A speculation is applied only when re-running it
+//!   at apply time would retrace the same search, so the result is
+//!   bit-for-bit the serial matching in both feature modes.
+//! * **ε-approximate tail** ([`aurora_schedule_approx`]). Most rounds of a
+//!   large decomposition move a long tail of tiny residual flows. Once the
+//!   remaining *real* traffic drops below `ε · b_max`, the exact loop stops
+//!   and the residue is flushed as greedy contention-free partial
+//!   permutations, bounding the makespan by `(1 + ε) · b_max` while keeping
+//!   conservation exact. [`aurora_schedule`] is the `ε = 0` exact path and
+//!   is untouched by this mode.
 
 use super::slot::{SlotRound, SlotSchedule};
 use crate::traffic::{augment_to_balanced, TrafficMatrix};
+use crate::util::par::par_map;
+
+/// Below this many broken pairs the speculative parallel repair is pure
+/// overhead (scoped-thread spawn per round); repair them serially. Either
+/// path yields the identical matching, so the cutoff never changes results.
+const PAR_REPAIR_MIN: usize = 32;
 
 /// Build Aurora's contention-free slot schedule for traffic matrix `d`
 /// (homogeneous port speeds; durations are in tokens).
@@ -31,6 +65,28 @@ use crate::traffic::{augment_to_balanced, TrafficMatrix};
 /// * total real tokens delivered equal `d`'s off-diagonal entries;
 /// * `makespan_tokens() == d.b_max_tokens()`.
 pub fn aurora_schedule(d: &TrafficMatrix) -> SlotSchedule {
+    schedule_inner(d, 0.0)
+}
+
+/// [`aurora_schedule`] with early termination: once the remaining real
+/// traffic is at most `epsilon * b_max` tokens, the exact BvN loop stops and
+/// the residue is flushed as greedy contention-free partial permutations.
+///
+/// The result still delivers every off-diagonal token exactly once and keeps
+/// the per-round sender/receiver exclusivity invariants, but its makespan is
+/// only bounded — `makespan_tokens() <= (1 + epsilon) * b_max` — rather than
+/// pinned to `b_max`, so it fails [`super::validate_slot_schedule`]'s
+/// `NotOptimal` check by design. `epsilon = 0` is exactly
+/// [`aurora_schedule`].
+pub fn aurora_schedule_approx(d: &TrafficMatrix, epsilon: f64) -> SlotSchedule {
+    assert!(
+        epsilon >= 0.0 && epsilon.is_finite(),
+        "epsilon must be a finite non-negative fraction of b_max"
+    );
+    schedule_inner(d, epsilon)
+}
+
+fn schedule_inner(d: &TrafficMatrix, epsilon: f64) -> SlotSchedule {
     let n = d.n();
     let b_max = d.b_max_tokens();
     if b_max == 0 {
@@ -42,18 +98,33 @@ pub fn aurora_schedule(d: &TrafficMatrix) -> SlotSchedule {
     // replacing the per-round from-scratch Hopcroft–Karp with incremental
     // matching repair and dropping the per-round adjacency rebuild).
     let (dp_m, _x) = augment_to_balanced(d);
-    let mut dp: Vec<u64> = dp_m.data().to_vec();
+    let mut dp: Vec<u64> = dp_m.dense_vec();
+
+    // Support lists: per-row ascending nonzero columns of D'. The DFS below
+    // walks these instead of scanning 0..n, which is what lets an (almost)
+    // empty row or column cost nothing. Built with an index-ordered parallel
+    // map; the row split is by input order, so the result is the serial one.
+    let row_ids: Vec<usize> = (0..n).collect();
+    let mut adj: Vec<Vec<usize>> = par_map(&row_ids, |&i| {
+        (0..n).filter(|&j| dp[i * n + j] > 0).collect::<Vec<usize>>()
+    });
 
     // Track how much *real* traffic remains per pair, so each round reports
-    // the real share of its transfers (the artificial remainder is idle time).
+    // the real share of its transfers (the artificial remainder is idle
+    // time). Walks the nonzero structure only, so sparse inputs skip empty
+    // rows outright.
     let mut real: Vec<u64> = vec![0; n * n];
+    let mut real_left: u64 = 0;
     for i in 0..n {
-        for j in 0..n {
+        for (j, v) in d.row_iter(i) {
             if i != j {
-                real[i * n + j] = d.get(i, j);
+                real[i * n + j] = v;
+                real_left += v;
             }
         }
     }
+
+    let tail_threshold = epsilon * b_max as f64;
 
     // Incremental matching state: after subtracting a round's duration, only
     // the edges that hit zero leave the support, so the previous round's
@@ -61,48 +132,20 @@ pub fn aurora_schedule(d: &TrafficMatrix) -> SlotSchedule {
     // instead of a full from-scratch matching.
     let mut pair_u: Vec<usize> = vec![usize::MAX; n]; // left i -> right j
     let mut pair_v: Vec<usize> = vec![usize::MAX; n]; // right j -> left i
-    let mut visited: Vec<u32> = vec![0; n];
-    let mut stamp: u32 = 0;
-
-    /// Kuhn's augmenting DFS on the support of `dp`.
-    fn augment(
-        u: usize,
-        n: usize,
-        dp: &[u64],
-        pair_u: &mut [usize],
-        pair_v: &mut [usize],
-        visited: &mut [u32],
-        stamp: u32,
-    ) -> bool {
-        for v in 0..n {
-            if dp[u * n + v] > 0 && visited[v] != stamp {
-                visited[v] = stamp;
-                if pair_v[v] == usize::MAX
-                    || augment(pair_v[v], n, dp, pair_u, pair_v, visited, stamp)
-                {
-                    pair_u[u] = v;
-                    pair_v[v] = u;
-                    return true;
-                }
-            }
-        }
-        false
-    }
 
     let mut rounds = Vec::new();
     let mut remaining = b_max;
     while remaining > 0 {
-        // Step 2: repair the matching for every unmatched left vertex.
-        for u in 0..n {
-            if pair_u[u] == usize::MAX {
-                stamp += 1;
-                let ok = augment(u, n, &dp, &mut pair_u, &mut pair_v, &mut visited, stamp);
-                debug_assert!(
-                    ok,
-                    "doubly-balanced matrix always has a perfect matching on its support"
-                );
-            }
+        // ε mode: the residual real traffic fits in the approximation budget;
+        // flush it greedily instead of finishing the decomposition.
+        if epsilon > 0.0 && (real_left as f64) <= tail_threshold {
+            flush_tail(n, &mut real, real_left, &mut rounds);
+            real_left = 0;
+            break;
         }
+
+        // Step 2: repair the matching for every unmatched left vertex.
+        repair_matching(&adj, &mut pair_u, &mut pair_v);
 
         // Step 3: round duration = min entry along the matching.
         let w = (0..n).map(|i| dp[i * n + pair_u[i]]).min().unwrap();
@@ -117,12 +160,16 @@ pub fn aurora_schedule(d: &TrafficMatrix) -> SlotSchedule {
                 let r = real[cell].min(w);
                 if r > 0 {
                     real[cell] -= r;
+                    real_left -= r;
                     transfers.push((i, j, r));
                 }
             }
             // Edges that hit zero leave the support; break those pairs so the
             // next round's repair re-augments them.
             if dp[cell] == 0 {
+                if let Ok(p) = adj[i].binary_search(&j) {
+                    adj[i].remove(p);
+                }
                 pair_u[i] = usize::MAX;
                 pair_v[j] = usize::MAX;
             }
@@ -133,9 +180,158 @@ pub fn aurora_schedule(d: &TrafficMatrix) -> SlotSchedule {
         });
         remaining -= w;
     }
-    debug_assert!(real.iter().all(|&r| r == 0), "all real traffic scheduled");
+    debug_assert!(
+        real_left == 0 && real.iter().all(|&r| r == 0),
+        "all real traffic scheduled"
+    );
 
     SlotSchedule { n, rounds }
+}
+
+/// Kuhn's augmenting DFS on the support lists. `adj[u]` holds exactly the
+/// columns with `dp[u][v] > 0` in ascending order — the same visit order as
+/// the dense `for v in 0..n` scan, so repair order (and every round) is
+/// unchanged by the sparse walk.
+fn augment(
+    u: usize,
+    adj: &[Vec<usize>],
+    pair_u: &mut [usize],
+    pair_v: &mut [usize],
+    visited: &mut [bool],
+) -> bool {
+    for &v in &adj[u] {
+        if !visited[v] {
+            visited[v] = true;
+            if pair_v[v] == usize::MAX || augment(pair_v[v], adj, pair_u, pair_v, visited) {
+                pair_u[u] = v;
+                pair_v[v] = u;
+                return true;
+            }
+        }
+    }
+    false
+}
+
+/// Re-match every unmatched left vertex. Equivalent to running [`augment`]
+/// serially for unmatched `u` in ascending order; when many pairs broke at
+/// once, the searches run speculatively in parallel against a snapshot and
+/// are applied in index order, falling back to a serial re-run whenever an
+/// earlier application re-matched a right vertex the speculation's DFS
+/// visited. The DFS reads only the (static) support and `pair_v` at visited
+/// rights, so an untouched speculation retraces identically — the final
+/// matching is bit-for-bit the serial one with or without the `rayon`
+/// feature.
+fn repair_matching(adj: &[Vec<usize>], pair_u: &mut [usize], pair_v: &mut [usize]) {
+    let n = pair_u.len();
+    let unmatched: Vec<usize> = (0..n).filter(|&u| pair_u[u] == usize::MAX).collect();
+    if unmatched.is_empty() {
+        return;
+    }
+
+    if unmatched.len() < PAR_REPAIR_MIN {
+        for &u in &unmatched {
+            let mut visited = vec![false; n];
+            let ok = augment(u, adj, pair_u, pair_v, &mut visited);
+            debug_assert!(
+                ok,
+                "doubly-balanced matrix always has a perfect matching on its support"
+            );
+        }
+        return;
+    }
+
+    // Speculate in parallel against a snapshot of the matching. Each
+    // speculation records the rights its DFS visited and the pair
+    // reassignments it would make (augmenting paths only re-match vertices,
+    // never un-match them, so `(left, new right)` diffs capture the change).
+    struct Spec {
+        ok: bool,
+        visited: Vec<usize>,
+        diffs: Vec<(usize, usize)>,
+    }
+    let snap_u: Vec<usize> = pair_u.to_vec();
+    let snap_v: Vec<usize> = pair_v.to_vec();
+    let specs: Vec<Spec> = par_map(&unmatched, |&u| {
+        let mut pu = snap_u.clone();
+        let mut pv = snap_v.clone();
+        let mut vis = vec![false; n];
+        let ok = augment(u, adj, &mut pu, &mut pv, &mut vis);
+        Spec {
+            ok,
+            visited: (0..n).filter(|&v| vis[v]).collect(),
+            diffs: (0..n)
+                .filter(|&i| pu[i] != snap_u[i])
+                .map(|i| (i, pu[i]))
+                .collect(),
+        }
+    });
+
+    // Apply in index order. `modified[v]` marks rights re-matched by an
+    // earlier application this phase; a speculation that never visited a
+    // modified right would retrace its DFS identically if re-run now, so
+    // applying its snapshot diffs equals the serial execution.
+    let mut modified = vec![false; n];
+    for (spec, &u) in specs.iter().zip(&unmatched) {
+        if spec.visited.iter().all(|&v| !modified[v]) {
+            debug_assert!(
+                spec.ok,
+                "doubly-balanced matrix always has a perfect matching on its support"
+            );
+            for &(i, j) in &spec.diffs {
+                pair_u[i] = j;
+                pair_v[j] = i;
+                modified[j] = true;
+            }
+        } else {
+            // Stale speculation: re-run against the live state (this is
+            // exactly what the serial loop would have done at this point).
+            let before: Vec<usize> = pair_u.to_vec();
+            let mut visited = vec![false; n];
+            let ok = augment(u, adj, pair_u, pair_v, &mut visited);
+            debug_assert!(
+                ok,
+                "doubly-balanced matrix always has a perfect matching on its support"
+            );
+            for i in 0..n {
+                if pair_u[i] != before[i] {
+                    modified[pair_u[i]] = true;
+                }
+            }
+        }
+    }
+}
+
+/// Flush the residual real flows as greedy contention-free partial
+/// permutations: each round gives every pending sender at most one flow and
+/// every receiver at most one sender, ships each chosen flow in full, and
+/// lasts as long as its largest transfer. Flows are disjoint across rounds,
+/// so the total tail duration is at most `real_left` tokens — which the
+/// caller guarantees is within the `ε · b_max` approximation budget.
+fn flush_tail(n: usize, real: &mut [u64], mut real_left: u64, rounds: &mut Vec<SlotRound>) {
+    while real_left > 0 {
+        let mut recv_busy = vec![false; n];
+        let mut transfers: Vec<(usize, usize, u64)> = Vec::new();
+        let mut w = 0u64;
+        for i in 0..n {
+            for j in 0..n {
+                let cell = i * n + j;
+                if real[cell] > 0 && !recv_busy[j] {
+                    let r = real[cell];
+                    real[cell] = 0;
+                    recv_busy[j] = true;
+                    real_left -= r;
+                    w = w.max(r);
+                    transfers.push((i, j, r));
+                    break;
+                }
+            }
+        }
+        debug_assert!(!transfers.is_empty(), "tail flush must make progress");
+        rounds.push(SlotRound {
+            duration: w,
+            transfers,
+        });
+    }
 }
 
 #[cfg(test)]
@@ -153,7 +349,8 @@ mod tests {
 
     #[test]
     fn fig4_matrix_schedules_in_two_slots() {
-        let d = TrafficMatrix::from_nested(&[vec![0, 1, 1], vec![1, 0, 1], vec![0, 0, 0]]);
+        let d =
+            TrafficMatrix::from_nested(&[vec![0, 1, 1], vec![1, 0, 1], vec![0, 0, 0]]).unwrap();
         let s = aurora_schedule(&d);
         assert_eq!(s.makespan_tokens(), 2);
         validate_slot_schedule(&d, &s).unwrap();
@@ -239,5 +436,109 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn sparse_input_schedules_identically() {
+        let mut rng = Rng::new(0x5AB5);
+        for n in [4, 8, 16] {
+            let mut d = TrafficMatrix::zeros(n);
+            for i in 0..n {
+                for j in 0..n {
+                    if i != j && rng.gen_range(4) == 0 {
+                        d.set(i, j, rng.gen_range(50) + 1);
+                    }
+                }
+            }
+            let sparse = d.to_sparse();
+            assert_eq!(aurora_schedule(&d), aurora_schedule(&sparse), "n={n}");
+            assert_eq!(
+                aurora_schedule_approx(&d, 0.25),
+                aurora_schedule_approx(&sparse, 0.25),
+                "n={n} approx"
+            );
+        }
+    }
+
+    #[test]
+    fn approx_with_zero_epsilon_is_exact() {
+        let mut rng = Rng::new(0xA117);
+        for n in [3, 6, 9] {
+            let mut d = TrafficMatrix::zeros(n);
+            for i in 0..n {
+                for j in 0..n {
+                    if i != j {
+                        d.set(i, j, rng.gen_range(30));
+                    }
+                }
+            }
+            assert_eq!(aurora_schedule_approx(&d, 0.0), aurora_schedule(&d));
+        }
+    }
+
+    #[test]
+    fn approx_conserves_traffic_within_epsilon_bound() {
+        let mut rng = Rng::new(0xE915);
+        for n in [4, 8, 12] {
+            for eps in [0.05, 0.25, 1.0] {
+                let mut d = TrafficMatrix::zeros(n);
+                for i in 0..n {
+                    for j in 0..n {
+                        if i != j {
+                            d.set(i, j, rng.gen_range(60));
+                        }
+                    }
+                }
+                let b_max = d.b_max_tokens();
+                let s = aurora_schedule_approx(&d, eps);
+                // conservation: every off-diagonal token delivered exactly once
+                let mut got = TrafficMatrix::zeros(n);
+                for round in &s.rounds {
+                    let mut senders = vec![false; n];
+                    let mut receivers = vec![false; n];
+                    for &(src, dst, tok) in &round.transfers {
+                        assert!(src != dst && tok > 0 && tok <= round.duration);
+                        assert!(!senders[src] && !receivers[dst], "contention");
+                        senders[src] = true;
+                        receivers[dst] = true;
+                        got.add(src, dst, tok);
+                    }
+                }
+                for i in 0..n {
+                    for j in 0..n {
+                        let want = if i == j { 0 } else { d.get(i, j) };
+                        assert_eq!(got.get(i, j), want, "n={n} eps={eps} cell ({i},{j})");
+                    }
+                }
+                let bound = b_max + (eps * b_max as f64).ceil() as u64;
+                assert!(
+                    s.makespan_tokens() <= bound,
+                    "n={n} eps={eps}: makespan {} > (1+eps)*b_max {bound}",
+                    s.makespan_tokens()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn approx_terminates_early_on_skewed_traffic() {
+        // One dominant flow plus a dust tail: the ε-mode should flush the
+        // dust instead of grinding out the full decomposition, and a generous
+        // ε must never yield a worse makespan bound than exact + ε slack.
+        let n = 16;
+        let mut d = TrafficMatrix::zeros(n);
+        d.set(0, 1, 10_000);
+        for i in 2..n {
+            d.set(i, (i + 1) % n, 3);
+        }
+        let exact = aurora_schedule(&d);
+        let approx = aurora_schedule_approx(&d, 0.01);
+        assert_eq!(exact.makespan_tokens(), d.b_max_tokens());
+        let bound = d.b_max_tokens() + (0.01 * d.b_max_tokens() as f64).ceil() as u64;
+        assert!(approx.makespan_tokens() <= bound);
+        assert!(
+            approx.rounds.len() <= exact.rounds.len(),
+            "tail flush should not inflate the round count on dust traffic"
+        );
     }
 }

@@ -32,6 +32,21 @@
 //! achieves `max(port bound, uplink bound)` in the fluid limit, while flat
 //! Aurora pays the per-round congestion [`flat_schedule_on_topology`]
 //! makes visible.
+//!
+//! # Recursive tiers ([`Topology::Tiered`])
+//!
+//! Deeper fabrics (GPU / rack / pod) decompose recursively. Every flow has a
+//! *span*: the smallest aggregation level whose groups contain both
+//! endpoints. Span-0 flows are the intra phase; span-`p` flows form phase
+//! `p`, a BvN decomposition **over the level-`p-1` units** — block-diagonal
+//! per enclosing level-`p` domain, so independent pods schedule their
+//! cross-rack traffic concurrently. Each phase's round budgets sum to the
+//! `b_max` of its own span matrix (Theorem 4.2 per tier), its rounds charge
+//! the level-`p-1` uplinks of the active pair, the gateway GPU ports, *and*
+//! every intermediate uplink level the flows descend through. The pipelined
+//! estimate is the fluid max of the intra drain, every phase, the port
+//! drain, and the all-level [`uplink_bound`]; the sequential estimate sums
+//! the phases.
 
 use super::bvn::aurora_schedule;
 use super::slot::{SlotRound, SlotSchedule};
@@ -62,8 +77,14 @@ pub struct HierarchicalSchedule {
     pub n: usize,
     /// Per-group intra-group Aurora schedules (global GPU ids).
     pub intra: Vec<SlotSchedule>,
-    /// Group-level inter rounds with gateway realizations.
+    /// Group-level inter rounds with gateway realizations. For tiered
+    /// fabrics this is the concatenation of every aggregation tier's rounds
+    /// (innermost tier first), so conservation checks see all cross traffic.
     pub inter: Vec<InterRound>,
+    /// Per-aggregation-tier inter rounds for [`Topology::Tiered`] fabrics:
+    /// `tiers[p-1]` holds phase `p`'s rounds, whose `pairs` index the
+    /// level-`p-1` units. Empty for two-tier topologies (use `inter`).
+    pub tiers: Vec<Vec<InterRound>>,
     /// Intra-phase duration (ms): the slowest group's local `b_max` drain.
     pub intra_ms: f64,
     /// Inter-phase duration (ms): summed group-round times on the uplinks
@@ -106,9 +127,10 @@ impl HierarchicalSchedule {
     }
 }
 
-/// Build the two-phase hierarchical schedule for `d` on `cluster` under a
-/// two-tier `topo`. Errors on a big-switch topology (use
-/// [`super::aurora_schedule`] there) or an invalid grouping.
+/// Build the hierarchical schedule for `d` on `cluster` under a two-tier or
+/// tiered `topo` (two phases, or one phase per aggregation tier). Errors on
+/// a big-switch topology (use [`super::aurora_schedule`] there) or an
+/// invalid grouping.
 pub fn hierarchical_schedule(
     d: &TrafficMatrix,
     cluster: &Cluster,
@@ -131,6 +153,9 @@ fn hierarchical_core(
     topo: &Topology,
     build_intra: bool,
 ) -> Result<HierarchicalSchedule, TopologyError> {
+    if matches!(topo, Topology::Tiered { .. }) {
+        return tiered_core(d, cluster, topo, build_intra);
+    }
     let n = d.n();
     assert_eq!(cluster.len(), n, "cluster and matrix sizes must match");
     // BigSwitch: no hierarchy to schedule.
@@ -272,6 +297,223 @@ fn hierarchical_core(
         n,
         intra,
         inter,
+        tiers: Vec::new(),
+        intra_ms,
+        inter_ms,
+        pipelined_ms,
+        sequential_ms,
+        per_gpu_ms,
+    })
+}
+
+/// Recursive decomposition for [`Topology::Tiered`]: per-leaf-group Aurora
+/// for the span-0 traffic, then one BvN phase per aggregation tier over the
+/// span-`p` flows (see the module docs). Walks `d`'s nonzero structure only,
+/// so a sparse thousand-GPU matrix pays for its traffic, not `n²`.
+fn tiered_core(
+    d: &TrafficMatrix,
+    cluster: &Cluster,
+    topo: &Topology,
+    build_intra: bool,
+) -> Result<HierarchicalSchedule, TopologyError> {
+    let Topology::Tiered { levels } = topo else {
+        unreachable!("tiered_core is only dispatched for tiered topologies")
+    };
+    let n = d.n();
+    assert_eq!(cluster.len(), n, "cluster and matrix sizes must match");
+    let l = levels.len();
+    let owners: Vec<Vec<usize>> = (0..l)
+        .map(|t| topo.owners_at(n, t))
+        .collect::<Result<_, _>>()?;
+    let rates: Vec<Vec<f64>> = (0..l).map(|t| topo.uplink_rates_at(cluster, t)).collect();
+    let bw = cluster.bandwidths();
+
+    // ---- Intra: per-leaf-group Aurora, exactly as in the two-tier path. ----
+    let leaf_groups = &levels[0].groups;
+    let mut intra = Vec::new();
+    let mut intra_time = Vec::with_capacity(leaf_groups.len());
+    let mut intra_ms = 0.0f64;
+    for members in leaf_groups.iter() {
+        let k = members.len();
+        let local_of: std::collections::HashMap<usize, usize> =
+            members.iter().enumerate().map(|(li, &i)| (i, li)).collect();
+        let mut local = TrafficMatrix::zeros(k);
+        for (li, &i) in members.iter().enumerate() {
+            for (j, t) in d.row_iter(i) {
+                if j == i {
+                    continue;
+                }
+                if let Some(&lj) = local_of.get(&j) {
+                    local.set(li, lj, t);
+                }
+            }
+        }
+        let member_bw: Vec<f64> = members.iter().map(|&i| bw[i]).collect();
+        let group_ms = local.b_max_hetero(&member_bw);
+        intra_time.push(group_ms);
+        intra_ms = intra_ms.max(group_ms);
+        if !build_intra {
+            continue;
+        }
+        let local_sched = aurora_schedule(&local);
+        let rounds = local_sched
+            .rounds
+            .into_iter()
+            .map(|r| SlotRound {
+                duration: r.duration,
+                transfers: r
+                    .transfers
+                    .into_iter()
+                    .map(|(li, lj, t)| (members[li], members[lj], t))
+                    .collect(),
+            })
+            .collect();
+        intra.push(SlotSchedule { n, rounds });
+    }
+
+    // ---- One BvN phase per aggregation tier over its span's flows. ----
+    let mut tiers: Vec<Vec<InterRound>> = Vec::with_capacity(l);
+    let mut inter: Vec<InterRound> = Vec::new();
+    let mut tier_ms: Vec<f64> = Vec::with_capacity(l);
+    for p in 1..=l {
+        let q = p - 1; // the tier's units live at this level
+        let o_q = &owners[q];
+        let n_units = levels[q].groups.len();
+        let mut group_matrix = TrafficMatrix::zeros(n_units);
+        let mut cross: Vec<Vec<Vec<(usize, usize, u64)>>> =
+            vec![vec![Vec::new(); n_units]; n_units];
+        for i in 0..n {
+            for (j, t) in d.row_iter(i) {
+                if i == j || o_q[i] == o_q[j] {
+                    continue;
+                }
+                // span p: crosses level-q groups but not level-p groups
+                if p < l && owners[p][i] != owners[p][j] {
+                    continue;
+                }
+                group_matrix.add(o_q[i], o_q[j], t);
+                cross[o_q[i]][o_q[j]].push((i, j, t));
+            }
+        }
+        let group_sched = aurora_schedule(&group_matrix);
+        let mut rounds = Vec::with_capacity(group_sched.rounds.len());
+        let mut phase_ms = 0.0f64;
+        for ground in &group_sched.rounds {
+            let mut pairs = Vec::new();
+            let mut transfers = Vec::new();
+            let mut round_ms = 0.0f64;
+            let mut tx = vec![0u64; n];
+            let mut rx = vec![0u64; n];
+            for &(ua, ub, tokens) in &ground.transfers {
+                pairs.push((ua, ub, tokens));
+                // Designated gateways, budget-balanced across the pair's
+                // member flows (same fair share as the two-tier path).
+                let flows = &mut cross[ua][ub];
+                let mut left = tokens;
+                while left > 0 {
+                    let live = flows.iter().filter(|&&(_, _, rem)| rem > 0).count() as u64;
+                    debug_assert!(live > 0, "group matrix tracks remaining cross tokens");
+                    let fair = left.div_ceil(live);
+                    for (src, dst, rem) in flows.iter_mut() {
+                        if *rem == 0 || left == 0 {
+                            continue;
+                        }
+                        let take = fair.min(*rem).min(left);
+                        if take == 0 {
+                            continue;
+                        }
+                        *rem -= take;
+                        left -= take;
+                        tx[*src] += take;
+                        rx[*dst] += take;
+                        transfers.push((*src, *dst, take));
+                    }
+                }
+                round_ms = round_ms.max(tokens as f64 / rates[q][ua].min(rates[q][ub]));
+            }
+            // Gateway port occupancy, as in the two-tier path.
+            for i in 0..n {
+                if tx[i] > 0 || rx[i] > 0 {
+                    round_ms = round_ms.max(tx[i].max(rx[i]) as f64 / bw[i]);
+                }
+            }
+            // Intermediate uplinks the flows descend through (levels below
+            // the tier's own): charge each group's up/down occupancy.
+            for lvl in 0..q {
+                let o = &owners[lvl];
+                let mut up = vec![0u64; rates[lvl].len()];
+                let mut down = vec![0u64; rates[lvl].len()];
+                for &(src, dst, t) in &transfers {
+                    up[o[src]] += t;
+                    down[o[dst]] += t;
+                }
+                for g in 0..up.len() {
+                    if up[g] > 0 || down[g] > 0 {
+                        round_ms = round_ms.max(up[g].max(down[g]) as f64 / rates[lvl][g]);
+                    }
+                }
+            }
+            phase_ms += round_ms;
+            rounds.push(InterRound {
+                budget: ground.duration,
+                pairs,
+                transfers,
+            });
+        }
+        tier_ms.push(phase_ms);
+        inter.extend(rounds.iter().cloned());
+        tiers.push(rounds);
+    }
+    let inter_ms: f64 = tier_ms.iter().sum();
+
+    // ---- Stitch: fluid max over every resource's drain time. ----
+    // Per-level up/down drain totals double as the uplink bound and the
+    // per-GPU finish terms.
+    let mut level_up: Vec<Vec<u64>> = rates.iter().map(|r| vec![0u64; r.len()]).collect();
+    let mut level_down: Vec<Vec<u64>> = rates.iter().map(|r| vec![0u64; r.len()]).collect();
+    for i in 0..n {
+        for (j, t) in d.row_iter(i) {
+            if i == j {
+                continue;
+            }
+            for lvl in 0..l {
+                if owners[lvl][i] != owners[lvl][j] {
+                    level_up[lvl][owners[lvl][i]] += t;
+                    level_down[lvl][owners[lvl][j]] += t;
+                }
+            }
+        }
+    }
+    let mut ub = 0.0f64;
+    for lvl in 0..l {
+        for g in 0..rates[lvl].len() {
+            ub = ub
+                .max(level_up[lvl][g] as f64 / rates[lvl][g])
+                .max(level_down[lvl][g] as f64 / rates[lvl][g]);
+        }
+    }
+    let port_ms = (0..n)
+        .map(|i| d.row_sum(i).max(d.col_sum(i)) as f64 / bw[i])
+        .fold(0.0, f64::max);
+    let busiest_tier = tier_ms.iter().fold(0.0, |a: f64, &b| a.max(b));
+    let pipelined_ms = intra_ms.max(busiest_tier).max(port_ms).max(ub);
+    let sequential_ms = intra_ms + inter_ms;
+    let per_gpu_ms: Vec<f64> = (0..n)
+        .map(|i| {
+            let mut t = (d.row_sum(i).max(d.col_sum(i)) as f64 / bw[i]).max(intra_time[owners[0][i]]);
+            for lvl in 0..l {
+                let g = owners[lvl][i];
+                t = t.max(level_up[lvl][g].max(level_down[lvl][g]) as f64 / rates[lvl][g]);
+            }
+            t
+        })
+        .collect();
+
+    Ok(HierarchicalSchedule {
+        n,
+        intra,
+        inter,
+        tiers,
         intra_ms,
         inter_ms,
         pipelined_ms,
@@ -290,29 +532,38 @@ pub fn flat_schedule_on_topology(sched: &SlotSchedule, cluster: &Cluster, topo: 
     let n = sched.n;
     assert_eq!(cluster.len(), n, "cluster and schedule sizes must match");
     let bw = cluster.bandwidths();
-    let owner = topo.group_of(n);
-    let uplinks = topo.uplink_rates(cluster);
-    let n_groups = uplinks.len();
+    // One owner map + rate vector per aggregation level: none for the big
+    // switch, the single leaf level for two-tier (identical arithmetic to
+    // the one-level special case), every level for tiered fabrics.
+    let n_levels = topo.n_levels();
+    let owners: Vec<Vec<usize>> = (0..n_levels)
+        .map(|t| topo.owners_at(n, t).expect("invalid topology"))
+        .collect();
+    let rates: Vec<Vec<f64>> = (0..n_levels)
+        .map(|t| topo.uplink_rates_at(cluster, t))
+        .collect();
     let mut total = 0.0f64;
     for round in &sched.rounds {
         let mut round_ms = 0.0f64;
-        let mut up = vec![0u64; n_groups];
-        let mut down = vec![0u64; n_groups];
+        let mut up: Vec<Vec<u64>> = rates.iter().map(|r| vec![0u64; r.len()]).collect();
+        let mut down: Vec<Vec<u64>> = rates.iter().map(|r| vec![0u64; r.len()]).collect();
         for &(src, dst, real) in &round.transfers {
             if real == 0 {
                 continue;
             }
             round_ms = round_ms.max(real as f64 / bw[src].min(bw[dst]));
-            if let Some(owner) = &owner {
-                if owner[src] != owner[dst] {
-                    up[owner[src]] += real;
-                    down[owner[dst]] += real;
+            for t in 0..n_levels {
+                if owners[t][src] != owners[t][dst] {
+                    up[t][owners[t][src]] += real;
+                    down[t][owners[t][dst]] += real;
                 }
             }
         }
-        for g in 0..n_groups {
-            if up[g] > 0 || down[g] > 0 {
-                round_ms = round_ms.max(up[g].max(down[g]) as f64 / uplinks[g]);
+        for t in 0..n_levels {
+            for g in 0..rates[t].len() {
+                if up[t][g] > 0 || down[t][g] > 0 {
+                    round_ms = round_ms.max(up[t][g].max(down[t][g]) as f64 / rates[t][g]);
+                }
             }
         }
         total += round_ms;
@@ -329,7 +580,10 @@ pub fn flat_schedule_on_topology(sched: &SlotSchedule, cluster: &Cluster, topo: 
 /// * two-tier + ordered baselines → the fluid combination
 ///   `max(flat simulated makespan, uplink bound)`
 ///   ([`comm_time_topology`]) — a baseline's order is fixed, so the
-///   saturated uplink simply serializes it.
+///   saturated uplink simply serializes it;
+/// * tiered fabrics → the same split, with Aurora priced through the
+///   recursive per-tier decomposition and baselines through the all-level
+///   uplink bound.
 ///
 /// Panics when a two-tier grouping does not match the cluster size; the
 /// planner surface ([`crate::planner::Planner::plan_topology`]) validates
@@ -354,6 +608,17 @@ pub fn comm_time_on(
             }
         }
         (Topology::TwoTier { .. }, _) => comm_time_topology(d, cluster, topo, policy),
+        (Topology::Tiered { .. }, SchedulePolicy::Aurora) => {
+            // Same estimate-only build, through the recursive per-tier
+            // decomposition.
+            let h = hierarchical_core(d, cluster, topo, false)
+                .expect("tiered topology was validated by the caller");
+            CommResult {
+                makespan: h.pipelined_ms,
+                per_gpu_finish: h.per_gpu_ms,
+            }
+        }
+        (Topology::Tiered { .. }, _) => comm_time_topology(d, cluster, topo, policy),
     }
 }
 
@@ -554,6 +819,145 @@ mod tests {
         // two-tier baseline: flat sim joined with the uplink bound
         let s = comm_time_on(&d, &c, &topo, SchedulePolicy::Sjf);
         assert!(s.makespan >= uplink_bound(&d, &c, &topo));
+    }
+
+    #[test]
+    fn single_level_tiered_prices_like_two_tier() {
+        // one aggregation level: the recursive path must agree with the
+        // two-tier path on every duration field, bit for bit
+        let d = rand_matrix(8, 31, 40);
+        let c = Cluster::homogeneous(8, 1.0);
+        let two = Topology::even_two_tier(8, 2, 4.0).unwrap();
+        let one = Topology::even_tiered(8, &[2], &[4.0]).unwrap();
+        let ht = hierarchical_schedule(&d, &c, &two).unwrap();
+        let h1 = hierarchical_schedule(&d, &c, &one).unwrap();
+        assert_eq!(h1.intra_ms, ht.intra_ms);
+        assert_eq!(h1.inter_ms, ht.inter_ms);
+        assert_eq!(h1.pipelined_ms, ht.pipelined_ms);
+        assert_eq!(h1.sequential_ms, ht.sequential_ms);
+        assert_eq!(h1.per_gpu_ms, ht.per_gpu_ms);
+        assert_eq!(h1.inter, ht.inter);
+        assert_eq!(h1.tiers.len(), 1);
+        assert_eq!(h1.tiers[0], ht.inter);
+    }
+
+    #[test]
+    fn tiered_conserves_every_pair() {
+        // 16 GPUs: 4 racks of 4, 2 pods of 2 racks
+        let d = rand_matrix(16, 41, 30);
+        let c = Cluster::homogeneous(16, 1.0);
+        let topo = Topology::even_tiered(16, &[4, 2], &[2.0, 4.0]).unwrap();
+        let h = hierarchical_schedule(&d, &c, &topo).unwrap();
+        let delivered = h.delivered();
+        for i in 0..16 {
+            for j in 0..16 {
+                if i != j {
+                    assert_eq!(delivered.get(i, j), d.get(i, j), "({i},{j})");
+                }
+            }
+        }
+        // and sparse input produces the identical schedule
+        let hs = hierarchical_schedule(&d.to_sparse(), &c, &topo).unwrap();
+        assert_eq!(hs.inter, h.inter);
+        assert_eq!(hs.pipelined_ms, h.pipelined_ms);
+    }
+
+    #[test]
+    fn tiered_phases_separate_flow_spans() {
+        let d = rand_matrix(16, 43, 25);
+        let c = Cluster::homogeneous(16, 1.0);
+        let topo = Topology::even_tiered(16, &[4, 2], &[2.0, 4.0]).unwrap();
+        let rack = topo.owners_at(16, 0).unwrap();
+        let pod = topo.owners_at(16, 1).unwrap();
+        let h = hierarchical_schedule(&d, &c, &topo).unwrap();
+        assert_eq!(h.tiers.len(), 2);
+        // phase 1: cross-rack, intra-pod flows only
+        for round in &h.tiers[0] {
+            for &(src, dst, _) in &round.transfers {
+                assert_ne!(rack[src], rack[dst]);
+                assert_eq!(pod[src], pod[dst]);
+            }
+        }
+        // phase 2: cross-pod flows only
+        for round in &h.tiers[1] {
+            for &(src, dst, _) in &round.transfers {
+                assert_ne!(pod[src], pod[dst]);
+            }
+        }
+        // intra: same-rack flows only
+        for s in &h.intra {
+            for r in &s.rounds {
+                for &(src, dst, _) in &r.transfers {
+                    assert_eq!(rack[src], rack[dst]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tiered_round_budgets_meet_theorem_4_2_per_tier() {
+        // each phase's budgets sum to the b_max of its own span matrix
+        let d = rand_matrix(16, 47, 35);
+        let topo = Topology::even_tiered(16, &[4, 2], &[2.0, 4.0]).unwrap();
+        let rack = topo.owners_at(16, 0).unwrap();
+        let pod = topo.owners_at(16, 1).unwrap();
+        let c = Cluster::homogeneous(16, 1.0);
+        let h = hierarchical_schedule(&d, &c, &topo).unwrap();
+
+        let mut g_rack = TrafficMatrix::zeros(4);
+        let mut g_pod = TrafficMatrix::zeros(2);
+        for i in 0..16 {
+            for j in 0..16 {
+                if i == j || rack[i] == rack[j] {
+                    continue;
+                }
+                if pod[i] == pod[j] {
+                    g_rack.add(rack[i], rack[j], d.get(i, j));
+                } else {
+                    g_pod.add(pod[i], pod[j], d.get(i, j));
+                }
+            }
+        }
+        let budget = |rounds: &[InterRound]| rounds.iter().map(|r| r.budget).sum::<u64>();
+        assert_eq!(budget(&h.tiers[0]), g_rack.b_max_tokens());
+        assert_eq!(budget(&h.tiers[1]), g_pod.b_max_tokens());
+        assert_eq!(h.inter_budget_tokens(), g_rack.b_max_tokens() + g_pod.b_max_tokens());
+
+        // rounds are partial permutations of their tier's units
+        for (rounds, n_units) in [(&h.tiers[0], 4), (&h.tiers[1], 2)] {
+            for round in rounds {
+                let mut send = vec![false; n_units];
+                let mut recv = vec![false; n_units];
+                for &(ua, ub, t) in &round.pairs {
+                    assert!(!send[ua] && !recv[ub], "unit used twice in a round");
+                    send[ua] = true;
+                    recv[ub] = true;
+                    assert!(t <= round.budget);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tiered_estimates_respect_fluid_bounds() {
+        let d = rand_matrix(16, 53, 45);
+        let c = Cluster::homogeneous(16, 1.0);
+        let topo = Topology::even_tiered(16, &[4, 2], &[2.0, 4.0]).unwrap();
+        let h = hierarchical_schedule(&d, &c, &topo).unwrap();
+        let lb = uplink_bound(&d, &c, &topo)
+            .max(comm_time(&d, &c.bandwidths(), SchedulePolicy::Aurora).makespan);
+        assert!(h.pipelined_ms >= lb - 1e-9, "{} < {lb}", h.pipelined_ms);
+        assert!(h.sequential_ms >= h.pipelined_ms - 1e-9);
+        for &t in &h.per_gpu_ms {
+            assert!(t <= h.pipelined_ms + 1e-9);
+        }
+        // the comm_time_on surface agrees with the estimate-only build
+        let r = comm_time_on(&d, &c, &topo, SchedulePolicy::Aurora);
+        assert_eq!(r.makespan, h.pipelined_ms);
+        assert_eq!(r.per_gpu_finish, h.per_gpu_ms);
+        // baselines never beat their own serialization bound
+        let s = comm_time_on(&d, &c, &topo, SchedulePolicy::Sjf);
+        assert!(s.makespan >= uplink_bound(&d, &c, &topo) - 1e-9);
     }
 
     #[test]

@@ -33,7 +33,7 @@ mod hierarchy;
 mod slot;
 mod validate;
 
-pub use bvn::aurora_schedule;
+pub use bvn::{aurora_schedule, aurora_schedule_approx};
 pub use greedy::{simulate_priority_order, CommResult};
 pub use hierarchy::{
     comm_time_on, flat_aurora_on_topology, flat_schedule_on_topology, hierarchical_schedule,
@@ -157,7 +157,7 @@ mod tests {
     /// Fig. 4 of the paper: GPU 0 sends one token each to GPUs 1 and 2;
     /// GPU 1 sends one token each to GPUs 0 and 2.
     fn fig4_matrix() -> TrafficMatrix {
-        TrafficMatrix::from_nested(&[vec![0, 1, 1], vec![1, 0, 1], vec![0, 0, 0]])
+        TrafficMatrix::from_nested(&[vec![0, 1, 1], vec![1, 0, 1], vec![0, 0, 0]]).unwrap()
     }
 
     #[test]
@@ -223,7 +223,8 @@ mod tests {
 
     #[test]
     fn reversed_all_to_all_same_aurora_time() {
-        let d = TrafficMatrix::from_nested(&[vec![0, 9, 1], vec![2, 0, 4], vec![7, 3, 0]]);
+        let d =
+            TrafficMatrix::from_nested(&[vec![0, 9, 1], vec![2, 0, 4], vec![7, 3, 0]]).unwrap();
         let bw = [1.0; 3];
         let fwd = comm_time(&d, &bw, SchedulePolicy::Aurora).makespan;
         let rev = comm_time(&d.transpose(), &bw, SchedulePolicy::Aurora).makespan;

@@ -112,10 +112,10 @@ pub fn simulate_group(
 /// `max(flat, uplink bound)` combination.
 ///
 /// On [`Topology::BigSwitch`] this **is** [`simulate_group`], bit for bit
-/// (including the exact M ≤ 2 paper paths). On a two-tier topology every
-/// model count goes through the staggered pipeline with the topology-aware
-/// communication times; the M ≤ 2 closed forms assume a non-blocking switch
-/// and do not apply there.
+/// (including the exact M ≤ 2 paper paths). On a two-tier or recursive
+/// tiered topology every model count goes through the staggered pipeline
+/// with the topology-aware communication times; the M ≤ 2 closed forms
+/// assume a non-blocking switch and do not apply there.
 pub fn simulate_group_topology(
     models: &[&MoeLayerStats],
     cluster: &Cluster,
@@ -124,7 +124,7 @@ pub fn simulate_group_topology(
 ) -> (SimResult, GroupBreakdown) {
     match topo {
         Topology::BigSwitch => simulate_group(models, cluster, policy),
-        Topology::TwoTier { .. } => {
+        _ => {
             assert!(!models.is_empty(), "group needs at least one model");
             let n = cluster.len();
             for s in models {

@@ -57,7 +57,7 @@ mod tests {
 
     fn stats() -> MoeLayerStats {
         MoeLayerStats {
-            traffic: TrafficMatrix::from_nested(&[vec![1, 2], vec![3, 4]]),
+            traffic: TrafficMatrix::from_nested(&[vec![1, 2], vec![3, 4]]).unwrap(),
             gate_ms: 0.5,
             ffn_ms_per_token: 0.1,
             agg_ms: 0.2,

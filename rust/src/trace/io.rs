@@ -51,21 +51,18 @@ pub fn trace_from_json(v: &Json) -> Result<ModelTrace, String> {
             .get("traffic")
             .and_then(|t| t.as_arr())
             .ok_or(format!("layer {k}: missing traffic"))?;
-        let n = rows.len();
-        let mut traffic = TrafficMatrix::zeros(n);
+        let mut nested: Vec<Vec<u64>> = Vec::with_capacity(rows.len());
         for (i, row) in rows.iter().enumerate() {
             let cells = row.as_arr().ok_or(format!("layer {k}: bad row {i}"))?;
-            if cells.len() != n {
-                return Err(format!("layer {k}: row {i} is not length {n}"));
-            }
+            let mut parsed = Vec::with_capacity(cells.len());
             for (j, c) in cells.iter().enumerate() {
-                traffic.set(
-                    i,
-                    j,
-                    c.as_u64().ok_or(format!("layer {k}: bad cell ({i},{j})"))?,
-                );
+                parsed.push(c.as_u64().ok_or(format!("layer {k}: bad cell ({i},{j})"))?);
             }
+            nested.push(parsed);
         }
+        // Shape checking is the matrix constructor's typed error
+        // ([`crate::traffic::TrafficError`]), surfaced with layer context.
+        let traffic = TrafficMatrix::from_nested(&nested).map_err(|e| format!("layer {k}: {e}"))?;
         let num = |key: &str| -> Result<f64, String> {
             lj.get(key)
                 .and_then(|x| x.as_f64())

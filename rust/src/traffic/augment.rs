@@ -81,7 +81,8 @@ pub fn drifting_zipf_traffic(
             }
         }
     }
-    d
+    // Large low-α matrices stay dense; heavily-skewed large ones compress.
+    d.compact()
 }
 
 /// Sampled (noisy) variant of [`drifting_zipf_traffic`]: each sender's
@@ -108,7 +109,7 @@ pub fn sampled_zipf_traffic(
             d.add(i, j, 1);
         }
     }
-    d
+    d.compact()
 }
 
 /// Augment `d` with artificial traffic so every row and column (diagonal
@@ -152,11 +153,18 @@ pub fn augment_to_balanced(d: &TrafficMatrix) -> (TrafficMatrix, TrafficMatrix) 
     // `d_prime` carries only wire traffic: real off-diagonal tokens plus the
     // artificial filler. The real diagonal of `d` (tokens local to a GPU) is
     // dropped — it never touches the network and must not consume port budget.
+    // Nonzero iteration keeps this pass O(nonzeros) on sparse inputs.
     let mut d_prime = TrafficMatrix::zeros(n);
     for i in 0..n {
-        for j in 0..n {
-            let real = if i == j { 0 } else { d.get(i, j) };
-            d_prime.set(i, j, real + x.get(i, j));
+        for (j, v) in d.row_iter(i) {
+            if i != j {
+                d_prime.set(i, j, v);
+            }
+        }
+    }
+    for i in 0..n {
+        for (j, v) in x.row_iter(i) {
+            d_prime.add(i, j, v);
         }
     }
     (d_prime, x)
@@ -193,12 +201,13 @@ mod tests {
             vec![0, 2, 3],
             vec![4, 0, 1],
             vec![0, 6, 0],
-        ]));
+        ])
+        .unwrap());
     }
 
     #[test]
     fn balances_already_balanced() {
-        let d = TrafficMatrix::from_nested(&[vec![0, 2, 2], vec![2, 0, 2], vec![2, 2, 0]]);
+        let d = TrafficMatrix::from_nested(&[vec![0, 2, 2], vec![2, 0, 2], vec![2, 2, 0]]).unwrap();
         let (_, x) = augment_to_balanced(&d);
         assert_eq!(x.total() + (0..3).map(|i| x.get(i, i)).sum::<u64>(), 0);
         check_balanced(&d);
@@ -216,7 +225,8 @@ mod tests {
             vec![0, 0, 0, 0],
             vec![1, 0, 0, 0],
             vec![0, 2, 0, 0],
-        ]));
+        ])
+        .unwrap());
     }
 
     #[test]

@@ -2,46 +2,247 @@
 
 use std::fmt;
 
+/// Matrices at least this large are eligible for the sparse representation;
+/// below it the dense row-major buffer is always faster.
+const SPARSE_MIN_N: usize = 64;
+
+/// Density cut-off: a constructor picks the sparse representation when fewer
+/// than one cell in `SPARSE_DENSITY_DIV` is nonzero.
+const SPARSE_DENSITY_DIV: usize = 4;
+
+/// Why a traffic matrix could not be constructed.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TrafficError {
+    /// [`TrafficMatrix::from_rows`] got a buffer whose length is not `n * n`.
+    ShapeMismatch {
+        /// Requested dimension.
+        n: usize,
+        /// Actual buffer length.
+        len: usize,
+    },
+    /// [`TrafficMatrix::from_nested`] got a row whose length differs from the
+    /// row count (the matrix must be square).
+    RowLengthMismatch {
+        /// Offending row index.
+        row: usize,
+        /// That row's length.
+        len: usize,
+        /// Expected length (the number of rows).
+        n: usize,
+    },
+}
+
+impl fmt::Display for TrafficError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TrafficError::ShapeMismatch { n, len } => {
+                write!(f, "traffic matrix shape mismatch: {n}x{n} needs {} cells, got {len}", n * n)
+            }
+            TrafficError::RowLengthMismatch { row, len, n } => {
+                write!(f, "traffic matrix must be square: row {row} has {len} cells, expected {n}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for TrafficError {}
+
+/// Internal storage of a [`TrafficMatrix`].
+///
+/// `Dense` is the historical row-major buffer. `Sparse` keeps the nonzero
+/// cells twice — CSR-style by row and CSC-style by column, each list sorted
+/// by index — so row scans, column scans, and transposes are all
+/// O(nonzeros). Every operation produces identical *values* on either
+/// representation (all token arithmetic is exact integer arithmetic), which
+/// is the bit-for-bit contract the property tests pin.
+#[derive(Debug, Clone)]
+enum Repr {
+    /// Row-major `n * n` token counts.
+    Dense(Vec<u64>),
+    /// Nonzero cells only, sorted by the inner index.
+    Sparse {
+        /// `rows[i]` = ascending `(col, tokens)` with `tokens > 0`.
+        rows: Vec<Vec<(usize, u64)>>,
+        /// `cols[j]` = ascending `(row, tokens)` with `tokens > 0`.
+        cols: Vec<Vec<(usize, u64)>>,
+    },
+}
+
 /// An `n × n` all-to-all traffic matrix in integer tokens.
 ///
 /// Entry `(i, j)` is the number of tokens GPU `i` sends to GPU `j`.
 /// Diagonal entries represent tokens whose source and destination expert live
 /// on the same GPU; they never touch the network and are ignored by every
 /// communication-time computation (paper footnote 1, §4.2).
-#[derive(Debug, Clone, PartialEq, Eq)]
+///
+/// Storage is dense row-major or CSR/CSC sparse; constructors pick by
+/// density ([`TrafficMatrix::from_rows`], [`TrafficMatrix::from_nested`],
+/// and the projection/aggregation operators) while [`TrafficMatrix::zeros`]
+/// plus `set`/`add` always stays dense. [`TrafficMatrix::to_sparse`] /
+/// [`TrafficMatrix::to_dense`] force a representation; equality is
+/// *semantic* (same dimension, same cells), never representational.
+#[derive(Debug, Clone)]
 pub struct TrafficMatrix {
     n: usize,
-    /// Row-major `n * n` token counts.
-    data: Vec<u64>,
+    repr: Repr,
+}
+
+impl PartialEq for TrafficMatrix {
+    fn eq(&self, other: &Self) -> bool {
+        if self.n != other.n {
+            return false;
+        }
+        match (&self.repr, &other.repr) {
+            (Repr::Dense(a), Repr::Dense(b)) => a == b,
+            (Repr::Sparse { rows: a, .. }, Repr::Sparse { rows: b, .. }) => a == b,
+            _ => (0..self.n).all(|i| {
+                let a: Vec<(usize, u64)> = self.row_iter(i).collect();
+                let b: Vec<(usize, u64)> = other.row_iter(i).collect();
+                a == b
+            }),
+        }
+    }
+}
+
+impl Eq for TrafficMatrix {}
+
+/// Set `list[key] = v` in a sorted sparse list (removing the entry when
+/// `v == 0`).
+fn sparse_set(list: &mut Vec<(usize, u64)>, key: usize, v: u64) {
+    match list.binary_search_by_key(&key, |&(k, _)| k) {
+        Ok(p) => {
+            if v == 0 {
+                list.remove(p);
+            } else {
+                list[p].1 = v;
+            }
+        }
+        Err(p) => {
+            if v > 0 {
+                list.insert(p, (key, v));
+            }
+        }
+    }
+}
+
+/// Add `v > 0` to `list[key]` in a sorted sparse list.
+fn sparse_add(list: &mut Vec<(usize, u64)>, key: usize, v: u64) {
+    match list.binary_search_by_key(&key, |&(k, _)| k) {
+        Ok(p) => list[p].1 += v,
+        Err(p) => list.insert(p, (key, v)),
+    }
+}
+
+/// Iterator over the nonzero cells of one row or column, ascending by index.
+pub struct NonzeroIter<'a> {
+    inner: NonzeroInner<'a>,
+}
+
+enum NonzeroInner<'a> {
+    /// Strided dense walk: element `k` lives at `cells[k * step]`.
+    Dense {
+        cells: &'a [u64],
+        step: usize,
+        k: usize,
+        count: usize,
+    },
+    Sparse(std::slice::Iter<'a, (usize, u64)>),
+}
+
+impl Iterator for NonzeroIter<'_> {
+    type Item = (usize, u64);
+
+    fn next(&mut self) -> Option<(usize, u64)> {
+        match &mut self.inner {
+            NonzeroInner::Dense {
+                cells,
+                step,
+                k,
+                count,
+            } => {
+                while *k < *count {
+                    let key = *k;
+                    let v = cells[key * *step];
+                    *k += 1;
+                    if v > 0 {
+                        return Some((key, v));
+                    }
+                }
+                None
+            }
+            NonzeroInner::Sparse(it) => it.next().copied(),
+        }
+    }
 }
 
 impl TrafficMatrix {
-    /// All-zero matrix.
+    /// All-zero matrix (always dense, so `set`/`add` loops stay O(1) per
+    /// cell).
     pub fn zeros(n: usize) -> Self {
         Self {
             n,
-            data: vec![0; n * n],
+            repr: Repr::Dense(vec![0; n * n]),
         }
     }
 
-    /// Build from a row-major slice. Panics if `data.len() != n * n`.
-    pub fn from_rows(n: usize, data: &[u64]) -> Self {
-        assert_eq!(data.len(), n * n, "traffic matrix shape mismatch");
+    /// Pick the representation for a finished dense buffer by density.
+    fn from_dense_auto(n: usize, data: Vec<u64>) -> Self {
+        if n >= SPARSE_MIN_N {
+            let nnz = data.iter().filter(|&&v| v > 0).count();
+            if nnz * SPARSE_DENSITY_DIV < n * n {
+                return Self::sparse_from_slice(n, &data);
+            }
+        }
         Self {
             n,
-            data: data.to_vec(),
+            repr: Repr::Dense(data),
         }
     }
 
-    /// Build from a nested vec of rows.
-    pub fn from_nested(rows: &[Vec<u64>]) -> Self {
+    /// Build the sparse representation from a dense row-major slice.
+    fn sparse_from_slice(n: usize, data: &[u64]) -> Self {
+        let mut rows: Vec<Vec<(usize, u64)>> = vec![Vec::new(); n];
+        let mut cols: Vec<Vec<(usize, u64)>> = vec![Vec::new(); n];
+        for i in 0..n {
+            for j in 0..n {
+                let v = data[i * n + j];
+                if v > 0 {
+                    rows[i].push((j, v));
+                    cols[j].push((i, v));
+                }
+            }
+        }
+        Self {
+            n,
+            repr: Repr::Sparse { rows, cols },
+        }
+    }
+
+    /// Build from a row-major slice, choosing the representation by density.
+    /// Errors when `data.len() != n * n`.
+    pub fn from_rows(n: usize, data: &[u64]) -> Result<Self, TrafficError> {
+        if data.len() != n * n {
+            return Err(TrafficError::ShapeMismatch { n, len: data.len() });
+        }
+        Ok(Self::from_dense_auto(n, data.to_vec()))
+    }
+
+    /// Build from a nested vec of rows, choosing the representation by
+    /// density. Errors when any row's length differs from the row count.
+    pub fn from_nested(rows: &[Vec<u64>]) -> Result<Self, TrafficError> {
         let n = rows.len();
         let mut data = Vec::with_capacity(n * n);
-        for r in rows {
-            assert_eq!(r.len(), n, "traffic matrix must be square");
+        for (i, r) in rows.iter().enumerate() {
+            if r.len() != n {
+                return Err(TrafficError::RowLengthMismatch {
+                    row: i,
+                    len: r.len(),
+                    n,
+                });
+            }
             data.extend_from_slice(r);
         }
-        Self { n, data }
+        Ok(Self::from_dense_auto(n, data))
     }
 
     /// Number of GPUs (matrix dimension).
@@ -49,44 +250,151 @@ impl TrafficMatrix {
         self.n
     }
 
+    /// True when the matrix is stored sparsely.
+    pub fn is_sparse(&self) -> bool {
+        matches!(self.repr, Repr::Sparse { .. })
+    }
+
+    /// Number of nonzero cells (diagonal included).
+    pub fn nnz(&self) -> usize {
+        match &self.repr {
+            Repr::Dense(d) => d.iter().filter(|&&v| v > 0).count(),
+            Repr::Sparse { rows, .. } => rows.iter().map(|r| r.len()).sum(),
+        }
+    }
+
+    /// The same matrix in the sparse representation (regardless of density).
+    pub fn to_sparse(&self) -> Self {
+        match &self.repr {
+            Repr::Dense(d) => Self::sparse_from_slice(self.n, d),
+            Repr::Sparse { .. } => self.clone(),
+        }
+    }
+
+    /// The same matrix in the dense representation.
+    pub fn to_dense(&self) -> Self {
+        Self {
+            n: self.n,
+            repr: Repr::Dense(self.dense_vec()),
+        }
+    }
+
+    /// Re-pick the representation by density — use after building a large
+    /// matrix cell-by-cell on top of [`TrafficMatrix::zeros`].
+    pub fn compact(self) -> Self {
+        match self.repr {
+            Repr::Dense(d) => Self::from_dense_auto(self.n, d),
+            Repr::Sparse { .. } => self,
+        }
+    }
+
+    /// Row-major copy of all `n * n` cells.
+    pub fn dense_vec(&self) -> Vec<u64> {
+        match &self.repr {
+            Repr::Dense(d) => d.clone(),
+            Repr::Sparse { rows, .. } => {
+                let mut out = vec![0u64; self.n * self.n];
+                for (i, row) in rows.iter().enumerate() {
+                    for &(j, v) in row {
+                        out[i * self.n + j] = v;
+                    }
+                }
+                out
+            }
+        }
+    }
+
     /// Tokens sent from `i` to `j`.
     #[inline]
     pub fn get(&self, i: usize, j: usize) -> u64 {
-        self.data[i * self.n + j]
+        assert!(i < self.n && j < self.n, "traffic index out of range");
+        match &self.repr {
+            Repr::Dense(d) => d[i * self.n + j],
+            Repr::Sparse { rows, .. } => match rows[i].binary_search_by_key(&j, |&(c, _)| c) {
+                Ok(p) => rows[i][p].1,
+                Err(_) => 0,
+            },
+        }
     }
 
     /// Set the `(i, j)` entry.
     #[inline]
     pub fn set(&mut self, i: usize, j: usize, v: u64) {
-        self.data[i * self.n + j] = v;
+        assert!(i < self.n && j < self.n, "traffic index out of range");
+        match &mut self.repr {
+            Repr::Dense(d) => d[i * self.n + j] = v,
+            Repr::Sparse { rows, cols } => {
+                sparse_set(&mut rows[i], j, v);
+                sparse_set(&mut cols[j], i, v);
+            }
+        }
     }
 
     /// Add `v` tokens to the `(i, j)` entry.
     #[inline]
     pub fn add(&mut self, i: usize, j: usize, v: u64) {
-        self.data[i * self.n + j] += v;
+        assert!(i < self.n && j < self.n, "traffic index out of range");
+        if v == 0 {
+            return;
+        }
+        match &mut self.repr {
+            Repr::Dense(d) => d[i * self.n + j] += v,
+            Repr::Sparse { rows, cols } => {
+                sparse_add(&mut rows[i], j, v);
+                sparse_add(&mut cols[j], i, v);
+            }
+        }
     }
 
-    /// Raw row-major data.
-    pub fn data(&self) -> &[u64] {
-        &self.data
+    /// Nonzero cells of row `i` as ascending `(col, tokens)` — O(row
+    /// nonzeros) on the sparse representation.
+    pub fn row_iter(&self, i: usize) -> NonzeroIter<'_> {
+        assert!(i < self.n, "traffic index out of range");
+        NonzeroIter {
+            inner: match &self.repr {
+                Repr::Dense(d) => NonzeroInner::Dense {
+                    cells: &d[i * self.n..(i + 1) * self.n],
+                    step: 1,
+                    k: 0,
+                    count: self.n,
+                },
+                Repr::Sparse { rows, .. } => NonzeroInner::Sparse(rows[i].iter()),
+            },
+        }
+    }
+
+    /// Nonzero cells of column `j` as ascending `(row, tokens)` — O(column
+    /// nonzeros) on the sparse representation.
+    pub fn col_iter(&self, j: usize) -> NonzeroIter<'_> {
+        assert!(j < self.n, "traffic index out of range");
+        NonzeroIter {
+            inner: match &self.repr {
+                Repr::Dense(d) => NonzeroInner::Dense {
+                    cells: &d[j..],
+                    step: self.n,
+                    k: 0,
+                    count: self.n,
+                },
+                Repr::Sparse { cols, .. } => NonzeroInner::Sparse(cols[j].iter()),
+            },
+        }
     }
 
     /// Sum of row `i` *excluding* the diagonal: total tokens GPU `i` puts on
     /// the wire.
     pub fn row_sum(&self, i: usize) -> u64 {
-        (0..self.n)
-            .filter(|&j| j != i)
-            .map(|j| self.get(i, j))
+        self.row_iter(i)
+            .filter(|&(j, _)| j != i)
+            .map(|(_, v)| v)
             .sum()
     }
 
     /// Sum of column `j` *excluding* the diagonal: total tokens GPU `j`
     /// receives from the wire.
     pub fn col_sum(&self, j: usize) -> u64 {
-        (0..self.n)
-            .filter(|&i| i != j)
-            .map(|i| self.get(i, j))
+        self.col_iter(j)
+            .filter(|&(i, _)| i != j)
+            .map(|(_, v)| v)
             .sum()
     }
 
@@ -121,26 +429,45 @@ impl TrafficMatrix {
     /// `i → j` in the first collective there is an equal-size `j → i` transfer
     /// in the second.
     pub fn transpose(&self) -> Self {
-        let mut t = Self::zeros(self.n);
-        for i in 0..self.n {
-            for j in 0..self.n {
-                t.set(j, i, self.get(i, j));
+        match &self.repr {
+            Repr::Dense(_) => {
+                let mut t = Self::zeros(self.n);
+                for i in 0..self.n {
+                    for (j, v) in self.row_iter(i) {
+                        t.set(j, i, v);
+                    }
+                }
+                t
             }
+            // The CSR/CSC pair is its own transpose with the roles swapped.
+            Repr::Sparse { rows, cols } => Self {
+                n: self.n,
+                repr: Repr::Sparse {
+                    rows: cols.clone(),
+                    cols: rows.clone(),
+                },
+            },
         }
-        t
     }
 
     /// Element-wise sum (aggregated traffic of two colocated models whose
     /// experts already share GPU indices). Panics on shape mismatch.
     pub fn sum(&self, other: &Self) -> Self {
         assert_eq!(self.n, other.n);
-        let data = self
-            .data
-            .iter()
-            .zip(&other.data)
-            .map(|(a, b)| a + b)
-            .collect();
-        Self { n: self.n, data }
+        if let (Repr::Dense(a), Repr::Dense(b)) = (&self.repr, &other.repr) {
+            let data = a.iter().zip(b).map(|(x, y)| x + y).collect();
+            return Self {
+                n: self.n,
+                repr: Repr::Dense(data),
+            };
+        }
+        let mut data = self.dense_vec();
+        for i in 0..self.n {
+            for (j, v) in other.row_iter(i) {
+                data[i * self.n + j] += v;
+            }
+        }
+        Self::from_dense_auto(self.n, data)
     }
 
     /// Relabel GPUs: entry `(i, j)` of the result is `(perm[i], perm[j])` of
@@ -151,13 +478,20 @@ impl TrafficMatrix {
     /// of a model's traffic matrix.
     pub fn permute(&self, perm: &[usize]) -> Self {
         assert_eq!(perm.len(), self.n);
-        let mut out = Self::zeros(self.n);
+        let mut out = vec![0u64; self.n * self.n];
         for i in 0..self.n {
-            for j in 0..self.n {
-                out.set(perm[i], perm[j], self.get(i, j));
+            for (j, v) in self.row_iter(i) {
+                out[perm[i] * self.n + perm[j]] = v;
             }
         }
-        out
+        if self.is_sparse() {
+            Self::from_dense_auto(self.n, out)
+        } else {
+            Self {
+                n: self.n,
+                repr: Repr::Dense(out),
+            }
+        }
     }
 
     /// Per-GPU token load of the experts: column sums *including* the diagonal
@@ -165,7 +499,7 @@ impl TrafficMatrix {
     /// not it crossed the network). Drives FFN compute times and Theorem 5.1.
     pub fn expert_loads(&self) -> Vec<u64> {
         (0..self.n)
-            .map(|j| (0..self.n).map(|i| self.get(i, j)).sum())
+            .map(|j| self.col_iter(j).map(|(_, v)| v).sum())
             .collect()
     }
 
@@ -173,9 +507,9 @@ impl TrafficMatrix {
     pub fn flows(&self) -> Vec<(usize, usize, u64)> {
         let mut out = Vec::new();
         for i in 0..self.n {
-            for j in 0..self.n {
-                if i != j && self.get(i, j) > 0 {
-                    out.push((i, j, self.get(i, j)));
+            for (j, v) in self.row_iter(i) {
+                if i != j {
+                    out.push((i, j, v));
                 }
             }
         }
@@ -198,13 +532,14 @@ impl TrafficMatrix {
             owner.iter().all(|&g| g < m),
             "owner GPU out of range (m = {m})"
         );
-        let mut out = Self::zeros(m);
+        let mut out = vec![0u64; m * m];
         for i in 0..self.n {
-            for j in 0..self.n {
-                out.add(owner[i], owner[j], self.get(i, j));
+            let src = owner[i] * m;
+            for (j, v) in self.row_iter(i) {
+                out[src + owner[j]] += v;
             }
         }
-        out
+        Self::from_dense_auto(m, out)
     }
 
     /// [`TrafficMatrix::project`] generalized to **replicated** destination
@@ -245,27 +580,23 @@ impl TrafficMatrix {
                 "expert {j}: replica GPU out of range (m = {m})"
             );
         }
-        let mut out = Self::zeros(m);
+        let mut out = vec![0u64; m * m];
         for i in 0..self.n {
-            let src = owner[i];
-            for j in 0..self.n {
-                let t = self.get(i, j);
-                if t == 0 {
-                    continue;
-                }
+            let src = owner[i] * m;
+            for (j, t) in self.row_iter(i) {
                 let set = &replicas[j];
                 if set.len() == 1 {
-                    out.add(src, set[0], t);
+                    out[src + set[0]] += t;
                     continue;
                 }
                 for (r, part) in split_tokens(t, &weights[j]).into_iter().enumerate() {
                     if part > 0 {
-                        out.add(src, set[r], part);
+                        out[src + set[r]] += part;
                     }
                 }
             }
         }
-        out
+        Self::from_dense_auto(m, out)
     }
 
     /// Merge pairs of GPUs: `groups[g]` lists the original indices fused onto
@@ -285,13 +616,14 @@ impl TrafficMatrix {
             owner.iter().all(|&o| o != usize::MAX),
             "grouping must cover all GPUs"
         );
-        let mut out = Self::zeros(m);
+        let mut out = vec![0u64; m * m];
         for i in 0..self.n {
-            for j in 0..self.n {
-                out.add(owner[i], owner[j], self.get(i, j));
+            let src = owner[i] * m;
+            for (j, v) in self.row_iter(i) {
+                out[src + owner[j]] += v;
             }
         }
-        out
+        Self::from_dense_auto(m, out)
     }
 }
 
@@ -348,7 +680,7 @@ mod tests {
     use super::*;
 
     fn sample() -> TrafficMatrix {
-        TrafficMatrix::from_nested(&[vec![5, 2, 3], vec![4, 0, 1], vec![0, 6, 7]])
+        TrafficMatrix::from_nested(&[vec![5, 2, 3], vec![4, 0, 1], vec![0, 6, 7]]).unwrap()
     }
 
     #[test]
@@ -431,7 +763,8 @@ mod tests {
             vec![4, 0, 5, 6],
             vec![7, 8, 0, 9],
             vec![1, 1, 1, 0],
-        ]);
+        ])
+        .unwrap();
         // experts 0 and 1 share GPU 0; experts 2 and 3 share GPU 1
         let g = m.project(&[0, 0, 1, 1], 2);
         assert_eq!(g.n(), 2);
@@ -554,7 +887,8 @@ mod tests {
             vec![0, 30, 0],
             vec![0, 0, 0],
             vec![0, 0, 0],
-        ]);
+        ])
+        .unwrap();
         let owner = vec![0usize, 1, 2];
         let replicas = vec![vec![0], vec![1, 2], vec![2]];
         let weights = vec![vec![1.0], vec![0.5, 0.5], vec![1.0]];
@@ -589,7 +923,8 @@ mod tests {
             vec![40, 0, 1, 1],
             vec![40, 1, 0, 1],
             vec![40, 1, 1, 0],
-        ]);
+        ])
+        .unwrap();
         let owner = vec![0usize, 0, 1, 1];
         let replicas = vec![vec![0usize, 1], vec![0], vec![1], vec![1]];
         let weights = vec![vec![0.5, 0.5], vec![1.0], vec![1.0], vec![1.0]];
@@ -625,7 +960,8 @@ mod tests {
             vec![4, 0, 5, 6],
             vec![7, 8, 0, 9],
             vec![1, 1, 1, 0],
-        ]);
+        ])
+        .unwrap();
         let g = m.merge_groups(&[vec![0, 1], vec![2, 3]]);
         assert_eq!(g.n(), 2);
         // inter-group 0->1: (0,2)+(0,3)+(1,2)+(1,3) = 2+3+5+6 = 16
@@ -637,5 +973,173 @@ mod tests {
             g.expert_loads().iter().sum::<u64>(),
             m.expert_loads().iter().sum::<u64>()
         );
+    }
+
+    // ------------------------------------------------------------------
+    // Sparse representation
+    // ------------------------------------------------------------------
+
+    #[test]
+    fn construction_errors_are_typed() {
+        let err = TrafficMatrix::from_rows(3, &[1, 2, 3, 4]).unwrap_err();
+        assert_eq!(err, TrafficError::ShapeMismatch { n: 3, len: 4 });
+        assert!(err.to_string().contains("9 cells"));
+        let err = TrafficMatrix::from_nested(&[vec![0, 1], vec![2]]).unwrap_err();
+        assert_eq!(
+            err,
+            TrafficError::RowLengthMismatch {
+                row: 1,
+                len: 1,
+                n: 2
+            }
+        );
+        assert!(err.to_string().contains("row 1"));
+    }
+
+    #[test]
+    fn constructors_pick_sparse_by_density() {
+        // 64×64 with a single nonzero: sparse
+        let mut data = vec![0u64; 64 * 64];
+        data[64 * 3 + 5] = 7;
+        let m = TrafficMatrix::from_rows(64, &data).unwrap();
+        assert!(m.is_sparse());
+        assert_eq!(m.nnz(), 1);
+        assert_eq!(m.get(3, 5), 7);
+        // fully dense 64×64: dense
+        let full = TrafficMatrix::from_rows(64, &[1u64; 64 * 64]).unwrap();
+        assert!(!full.is_sparse());
+        // small matrices always stay dense, however empty
+        let small = TrafficMatrix::from_rows(4, &[0u64; 16]).unwrap();
+        assert!(!small.is_sparse());
+        // zeros + set stays dense regardless of size
+        let z = TrafficMatrix::zeros(128);
+        assert!(!z.is_sparse());
+        // ... until compacted
+        let mut z = z;
+        z.set(0, 1, 3);
+        let c = z.compact();
+        assert!(c.is_sparse());
+        assert_eq!(c.get(0, 1), 3);
+    }
+
+    fn rand_pair(seed: u64, n: usize, fill_in: u64) -> (TrafficMatrix, TrafficMatrix) {
+        use crate::util::Rng;
+        let mut rng = Rng::new(seed);
+        let mut dense = TrafficMatrix::zeros(n);
+        for i in 0..n {
+            for j in 0..n {
+                if rng.gen_range(4) == 0 {
+                    dense.set(i, j, rng.gen_range(fill_in) + 1);
+                }
+            }
+        }
+        let sparse = dense.to_sparse();
+        assert!(sparse.is_sparse() && !dense.is_sparse());
+        (dense, sparse)
+    }
+
+    #[test]
+    fn sparse_and_dense_agree_cell_by_cell() {
+        let (dense, sparse) = rand_pair(0xC0FFEE, 17, 50);
+        assert_eq!(dense, sparse);
+        assert_eq!(sparse, dense);
+        for i in 0..17 {
+            for j in 0..17 {
+                assert_eq!(dense.get(i, j), sparse.get(i, j));
+            }
+            assert_eq!(dense.row_sum(i), sparse.row_sum(i));
+            assert_eq!(dense.col_sum(i), sparse.col_sum(i));
+            assert_eq!(
+                dense.row_iter(i).collect::<Vec<_>>(),
+                sparse.row_iter(i).collect::<Vec<_>>()
+            );
+            assert_eq!(
+                dense.col_iter(i).collect::<Vec<_>>(),
+                sparse.col_iter(i).collect::<Vec<_>>()
+            );
+        }
+        assert_eq!(dense.nnz(), sparse.nnz());
+        assert_eq!(dense.total(), sparse.total());
+        assert_eq!(dense.b_max_tokens(), sparse.b_max_tokens());
+        assert_eq!(dense.expert_loads(), sparse.expert_loads());
+        assert_eq!(dense.flows(), sparse.flows());
+        assert_eq!(dense.dense_vec(), sparse.dense_vec());
+        assert_eq!(sparse.to_dense(), dense);
+    }
+
+    #[test]
+    fn sparse_mutation_tracks_dense_mirror() {
+        use crate::util::Rng;
+        let (mut dense, mut sparse) = rand_pair(0xBEEF, 9, 20);
+        let mut rng = Rng::new(0xDEAD);
+        for _ in 0..500 {
+            let i = rng.gen_range(9) as usize;
+            let j = rng.gen_range(9) as usize;
+            match rng.gen_range(3) {
+                0 => {
+                    let v = rng.gen_range(10);
+                    dense.set(i, j, v);
+                    sparse.set(i, j, v);
+                }
+                1 => {
+                    let v = rng.gen_range(10);
+                    dense.add(i, j, v);
+                    sparse.add(i, j, v);
+                }
+                _ => {
+                    // explicit zeroing exercises sparse entry removal
+                    dense.set(i, j, 0);
+                    sparse.set(i, j, 0);
+                }
+            }
+        }
+        assert_eq!(dense, sparse);
+        assert_eq!(dense.nnz(), sparse.nnz());
+        assert_eq!(dense.b_max_tokens(), sparse.b_max_tokens());
+    }
+
+    #[test]
+    fn sparse_operators_match_dense_bit_for_bit() {
+        let (dense, sparse) = rand_pair(0xFACE, 13, 40);
+        assert_eq!(dense.transpose(), sparse.transpose());
+        assert_eq!(dense.sum(&dense), sparse.sum(&sparse));
+        assert_eq!(dense.sum(&sparse), sparse.sum(&dense));
+        let perm: Vec<usize> = (0..13).map(|i| (i * 5 + 2) % 13).collect();
+        assert_eq!(dense.permute(&perm), sparse.permute(&perm));
+        let owner: Vec<usize> = (0..13).map(|e| e % 4).collect();
+        assert_eq!(dense.project(&owner, 4), sparse.project(&owner, 4));
+        let groups: Vec<Vec<usize>> = (0..4)
+            .map(|g| (0..13).filter(|e| e % 4 == g).collect())
+            .collect();
+        assert_eq!(dense.merge_groups(&groups), sparse.merge_groups(&groups));
+        let replicas: Vec<Vec<usize>> = (0..13)
+            .map(|e| if e == 0 { vec![0, 1, 2] } else { vec![e % 4] })
+            .collect();
+        let weights: Vec<Vec<f64>> = replicas
+            .iter()
+            .map(|s| {
+                if s.len() == 3 {
+                    vec![0.5, 0.3, 0.2]
+                } else {
+                    vec![1.0]
+                }
+            })
+            .collect();
+        assert_eq!(
+            dense.project_split(&owner, &replicas, &weights, 4),
+            sparse.project_split(&owner, &replicas, &weights, 4)
+        );
+    }
+
+    #[test]
+    fn sparse_transpose_is_o_one_and_correct() {
+        let (dense, sparse) = rand_pair(0xABBA, 21, 30);
+        let t = sparse.transpose();
+        assert!(t.is_sparse());
+        for i in 0..21 {
+            for j in 0..21 {
+                assert_eq!(t.get(j, i), dense.get(i, j));
+            }
+        }
     }
 }

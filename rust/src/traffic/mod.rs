@@ -12,4 +12,4 @@ mod matrix;
 pub use augment::{
     augment_to_balanced, drifting_zipf_traffic, sampled_zipf_traffic, zipf_traffic, zipf_weights,
 };
-pub use matrix::{split_tokens, TrafficMatrix};
+pub use matrix::{split_tokens, NonzeroIter, TrafficError, TrafficMatrix};

@@ -30,6 +30,21 @@ fn rand_matrix(rng: &mut Rng, n: usize, hi: u64) -> TrafficMatrix {
     d
 }
 
+/// Random traffic matrix with controllable density: each off-diagonal cell
+/// is nonzero (in `[1, hi)`) with probability `density` — sparse enough to
+/// exercise the CSR representation's empty rows and columns.
+fn rand_sparse_matrix(rng: &mut Rng, n: usize, hi: u64, density: f64) -> TrafficMatrix {
+    let mut d = TrafficMatrix::zeros(n);
+    for i in 0..n {
+        for j in 0..n {
+            if i != j && rng.gen_f64() < density {
+                d.set(i, j, 1 + rng.gen_range(hi - 1));
+            }
+        }
+    }
+    d
+}
+
 /// MoE-shaped stats (uniform row sums) used where theorems assume them.
 fn moe_stats(rng: &mut Rng, n: usize, per_source: u64) -> MoeLayerStats {
     let pop: Vec<f64> = (0..n).map(|_| rng.gen_f64() + 0.05).collect();
@@ -418,7 +433,15 @@ fn prop_delta_estimator_matches_full_rescan() {
         } else {
             Cluster::homogeneous(n_gpus, 60.0)
         };
-        let topo = if n_gpus % 2 == 0 && rng.gen_range(2) == 0 {
+        let topo = if n_gpus % 4 == 0 && rng.gen_range(2) == 0 {
+            // recursive fabric: n/2 leaf pairs under 2 pods
+            Topology::even_tiered(
+                n_gpus,
+                &[n_gpus / 2, 2],
+                &[1.0 + rng.gen_f64() * 2.0, 1.0 + rng.gen_f64() * 4.0],
+            )
+            .unwrap()
+        } else if n_gpus % 2 == 0 && rng.gen_range(2) == 0 {
             Topology::even_two_tier(n_gpus, 2, 1.0 + rng.gen_f64() * 4.0).unwrap()
         } else {
             Topology::BigSwitch
@@ -505,7 +528,9 @@ fn prop_replica_delta_matches_full() {
         let n_gpus = 2 + rng.gen_range(7) as usize;
         let n_exp = n_gpus + rng.gen_range(2 * n_gpus as u64) as usize;
         let cluster = Cluster::homogeneous(n_gpus, 80.0);
-        let topo = if n_gpus % 2 == 0 && rng.gen_range(2) == 0 {
+        let topo = if n_gpus % 4 == 0 && rng.gen_range(2) == 0 {
+            Topology::even_tiered(n_gpus, &[n_gpus / 2, 2], &[2.0, 4.0]).unwrap()
+        } else if n_gpus % 2 == 0 && rng.gen_range(2) == 0 {
             Topology::even_two_tier(n_gpus, 2, 2.0).unwrap()
         } else {
             Topology::BigSwitch
@@ -554,5 +579,222 @@ fn prop_replica_delta_matches_full() {
             }
             assert!((est.objective() - full).abs() < 1e-9, "seed {seed}");
         }
+    }
+}
+
+/// PROPERTY: the sparse (CSR) and dense traffic representations are
+/// bit-for-bit interchangeable across the whole read surface — scalars,
+/// projections, split projections, topology bounds, and the full Aurora/BvN
+/// slot schedule — on randomized shapes and densities. This is the contract
+/// that lets every hot path pick its representation by density without
+/// changing a single planning or scheduling decision.
+#[test]
+fn prop_sparse_dense_bitwise_agreement() {
+    use aurora::cluster::{uplink_bound, Topology};
+
+    for seed in 0..60u64 {
+        let mut rng = Rng::new(seed ^ 0x5DBB);
+        let n = 2 + rng.gen_range(13) as usize;
+        let density = 0.05 + rng.gen_f64() * 0.9;
+        let d = rand_sparse_matrix(&mut rng, n, 40, density);
+        let sp = d.to_sparse();
+        let dn = sp.to_dense();
+
+        // scalar surface
+        assert_eq!(d.total(), sp.total(), "seed {seed}");
+        assert_eq!(d.nnz(), sp.nnz(), "seed {seed}");
+        assert_eq!(d.b_max_tokens(), sp.b_max_tokens(), "seed {seed}");
+        let bws: Vec<f64> = (0..n).map(|_| 0.5 + rng.gen_f64() * 2.0).collect();
+        assert!(
+            d.b_max_hetero(&bws) == sp.b_max_hetero(&bws),
+            "seed {seed}: hetero b_max diverged"
+        );
+        for i in 0..n {
+            assert_eq!(d.row_sum(i), sp.row_sum(i), "seed {seed} row {i}");
+            assert_eq!(d.col_sum(i), sp.col_sum(i), "seed {seed} col {i}");
+            for j in 0..n {
+                assert_eq!(d.get(i, j), sp.get(i, j), "seed {seed} ({i},{j})");
+            }
+        }
+        assert_eq!(d.dense_vec(), dn.dense_vec(), "seed {seed}: round trip");
+        assert_eq!(d.expert_loads(), sp.expert_loads(), "seed {seed}");
+        assert_eq!(d.flows(), sp.flows(), "seed {seed}");
+        assert_eq!(
+            d.transpose().dense_vec(),
+            sp.transpose().dense_vec(),
+            "seed {seed}"
+        );
+        let p = rng.permutation(n);
+        assert_eq!(d.permute(&p).dense_vec(), sp.permute(&p).dense_vec(), "seed {seed}");
+
+        // projection surface: arbitrary many-to-one owner maps
+        let m = 1 + rng.gen_range(n as u64) as usize;
+        let owner: Vec<usize> = (0..n).map(|_| rng.gen_range(m as u64) as usize).collect();
+        assert_eq!(
+            d.project(&owner, m).dense_vec(),
+            sp.project(&owner, m).dense_vec(),
+            "seed {seed}: project"
+        );
+        // split projection: replicated destinations with fractional weights
+        let mut replicas = Vec::with_capacity(n);
+        let mut weights = Vec::with_capacity(n);
+        for &o in &owner {
+            if m >= 2 && rng.gen_range(2) == 0 {
+                let other = (o + 1 + rng.gen_range(m as u64 - 1) as usize) % m;
+                replicas.push(vec![o, other]);
+                weights.push(vec![0.7, 0.3]);
+            } else {
+                replicas.push(vec![o]);
+                weights.push(vec![1.0]);
+            }
+        }
+        assert_eq!(
+            d.project_split(&owner, &replicas, &weights, m).dense_vec(),
+            sp.project_split(&owner, &replicas, &weights, m).dense_vec(),
+            "seed {seed}: project_split"
+        );
+
+        // the full BvN slot schedule — identical rounds, not just makespan
+        assert_eq!(aurora_schedule(&d), aurora_schedule(&sp), "seed {seed}");
+
+        // topology bounds, two-tier and recursive
+        let cluster = Cluster::homogeneous(n, 1.0 + rng.gen_f64());
+        if n % 2 == 0 {
+            let topo = Topology::even_two_tier(n, 2, 1.0 + rng.gen_f64() * 4.0).unwrap();
+            assert!(
+                uplink_bound(&d, &cluster, &topo) == uplink_bound(&sp, &cluster, &topo),
+                "seed {seed}: two-tier uplink bound diverged"
+            );
+        }
+        if n % 4 == 0 {
+            let topo = Topology::even_tiered(
+                n,
+                &[n / 2, 2],
+                &[1.0 + rng.gen_f64() * 2.0, 1.0 + rng.gen_f64() * 4.0],
+            )
+            .unwrap();
+            assert!(
+                uplink_bound(&d, &cluster, &topo) == uplink_bound(&sp, &cluster, &topo),
+                "seed {seed}: tiered uplink bound diverged"
+            );
+        }
+    }
+}
+
+/// PROPERTY: the recursive tiered schedule conserves tokens per (src, dst)
+/// pair, separates flows by span (intra-rack / cross-rack-intra-pod /
+/// cross-pod), and each phase's round budgets sum to exactly the `b_max` of
+/// its own span matrix (Theorem 4.2 applied per tier) — on randomized pod /
+/// rack / GPU shapes and oversubscriptions, with sparse input producing the
+/// identical schedule.
+#[test]
+fn prop_tiered_schedule_conserves_and_meets_tier_budgets() {
+    use aurora::cluster::{uplink_bound, Topology};
+    use aurora::schedule::hierarchical_schedule;
+
+    for seed in 0..30u64 {
+        let mut rng = Rng::new(seed ^ 0x71E2);
+        let pods = 2 + rng.gen_range(2) as usize; // 2..3 pods
+        let racks_per = 2 + rng.gen_range(2) as usize; // 2..3 racks per pod
+        let per = 2 + rng.gen_range(2) as usize; // 2..3 GPUs per rack
+        let n_racks = pods * racks_per;
+        let n = n_racks * per;
+        let os0 = 1.0 + rng.gen_range(4) as f64;
+        let os1 = 1.0 + rng.gen_range(4) as f64;
+        let topo = Topology::even_tiered(n, &[n_racks, pods], &[os0, os1]).unwrap();
+        let d = rand_sparse_matrix(&mut rng, n, 40, 0.3 + rng.gen_f64() * 0.6);
+        let cluster = Cluster::homogeneous(n, 1.0);
+        let rack = topo.owners_at(n, 0).unwrap();
+        let pod = topo.owners_at(n, 1).unwrap();
+
+        let sched = hierarchical_schedule(&d, &cluster, &topo).unwrap();
+
+        // conservation per (src, dst) across intra + every tier phase
+        let delivered = sched.delivered();
+        for i in 0..n {
+            for j in 0..n {
+                if i != j {
+                    assert_eq!(delivered.get(i, j), d.get(i, j), "seed {seed} ({i},{j})");
+                }
+            }
+        }
+        // span separation
+        for s in &sched.intra {
+            for r in &s.rounds {
+                for &(src, dst, _) in &r.transfers {
+                    assert_eq!(rack[src], rack[dst], "seed {seed}: cross flow in intra");
+                }
+            }
+        }
+        assert_eq!(sched.tiers.len(), 2, "seed {seed}");
+        for round in &sched.tiers[0] {
+            for &(src, dst, _) in &round.transfers {
+                assert_ne!(rack[src], rack[dst], "seed {seed}: intra flow in phase 1");
+                assert_eq!(pod[src], pod[dst], "seed {seed}: cross-pod flow in phase 1");
+            }
+        }
+        for round in &sched.tiers[1] {
+            for &(src, dst, _) in &round.transfers {
+                assert_ne!(pod[src], pod[dst], "seed {seed}: local flow in phase 2");
+            }
+        }
+        // per-tier Theorem 4.2: budgets sum to each span matrix's b_max
+        let mut g_rack = TrafficMatrix::zeros(n_racks);
+        let mut g_pod = TrafficMatrix::zeros(pods);
+        for i in 0..n {
+            for (j, t) in d.row_iter(i) {
+                if i == j || rack[i] == rack[j] {
+                    continue;
+                }
+                if pod[i] == pod[j] {
+                    g_rack.add(rack[i], rack[j], t);
+                } else {
+                    g_pod.add(pod[i], pod[j], t);
+                }
+            }
+        }
+        let budget = |rounds: &[aurora::schedule::InterRound]| {
+            rounds.iter().map(|r| r.budget).sum::<u64>()
+        };
+        assert_eq!(budget(&sched.tiers[0]), g_rack.b_max_tokens(), "seed {seed}");
+        assert_eq!(budget(&sched.tiers[1]), g_pod.b_max_tokens(), "seed {seed}");
+        // rounds are partial permutations of their tier's units, and phase-1
+        // pairs stay inside one pod (block-diagonal concurrency)
+        let Topology::Tiered { levels } = &topo else {
+            unreachable!("even_tiered builds a tiered topology")
+        };
+        let mut rack_pod = vec![0usize; n_racks];
+        for (pg, members) in levels[1].groups.iter().enumerate() {
+            for &r in members {
+                rack_pod[r] = pg;
+            }
+        }
+        for (t, (rounds, n_units)) in
+            [(&sched.tiers[0], n_racks), (&sched.tiers[1], pods)].into_iter().enumerate()
+        {
+            for round in rounds.iter() {
+                let mut send = vec![false; n_units];
+                let mut recv = vec![false; n_units];
+                for &(ua, ub, tok) in &round.pairs {
+                    assert!(!send[ua] && !recv[ub], "seed {seed}: unit reused in a round");
+                    send[ua] = true;
+                    recv[ub] = true;
+                    assert!(tok <= round.budget, "seed {seed}: pair overruns budget");
+                    if t == 0 {
+                        assert_eq!(rack_pod[ua], rack_pod[ub], "seed {seed}: phase-1 pair crosses pods");
+                    }
+                }
+            }
+        }
+        // fluid bounds
+        let lb = uplink_bound(&d, &cluster, &topo)
+            .max(d.b_max_hetero(&cluster.bandwidths()));
+        assert!(sched.pipelined_ms >= lb - 1e-9, "seed {seed}");
+        assert!(sched.sequential_ms >= sched.pipelined_ms - 1e-9, "seed {seed}");
+        // sparse input produces the identical schedule
+        let ss = hierarchical_schedule(&d.to_sparse(), &cluster, &topo).unwrap();
+        assert_eq!(ss.inter, sched.inter, "seed {seed}");
+        assert_eq!(ss.tiers, sched.tiers, "seed {seed}");
+        assert!(ss.pipelined_ms == sched.pipelined_ms, "seed {seed}");
     }
 }
