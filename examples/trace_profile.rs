@@ -1,0 +1,94 @@
+//! Tracing a plan and an online serving run.
+//!
+//! ```bash
+//! cargo run --release --example trace_profile
+//! ```
+//!
+//! Plans a skewed 64-GPU workload under a wall-clock tracer and prints the
+//! five hottest planner phases, then serves a drifting-Zipf stream with the
+//! cost-aware coordinator under a *sim-time* tracer and prints the replan
+//! gate's decision log — every window's drift score, candidate gain, and
+//! verdict. Both traces export to Chrome trace-event JSON; the sim-time one
+//! is byte-identical across runs with the same seed.
+
+use aurora::cluster::{Cluster, Topology};
+use aurora::coordinator::{run_online_traced, OnlineConfig, OnlineStrategy};
+use aurora::eval::skewed_workload;
+use aurora::obs::profile::aggregate_phases;
+use aurora::obs::{MetricsRegistry, Tracer};
+use aurora::planner::{Planner, ReplicationConfig};
+
+fn main() {
+    // 1. Plan under a wall-clock tracer: 64 experts on 64 GPUs in 8 racks,
+    //    Zipf(1.2) routing, up to 2 replicas per hot expert.
+    let n = 64;
+    let cluster = Cluster::homogeneous(n, 814.0);
+    let topo = Topology::even_two_tier(n, 8, 4.0).expect("topology");
+    let trace = skewed_workload(n, 2, 512, 1.2, 7);
+    let tr = Tracer::wall();
+    let planner = Planner::default();
+    let cfg = ReplicationConfig {
+        max_replicas: 2,
+        ..ReplicationConfig::default()
+    };
+    let (rep, _splits) = planner
+        .plan_replicated_topology_traced(&[&trace], &cluster, &topo, &cfg, &tr)
+        .expect("plans");
+    println!(
+        "planned {} experts on {} GPUs ({} replica(s) added)\n",
+        n,
+        cluster.len(),
+        rep.added_replicas()
+    );
+
+    println!("top 5 hottest planner phases:");
+    for p in aggregate_phases(&tr.spans()).iter().take(5) {
+        println!(
+            "  {:<32} {:>4}x  total {:>8} µs  max {:>7} µs",
+            p.name, p.count, p.total_us, p.max_us
+        );
+    }
+    println!(
+        "\nchrome trace: {} spans, {} decision records (open in chrome://tracing)\n",
+        tr.spans().len(),
+        tr.decisions().len()
+    );
+
+    // 2. Serve a drifting-Zipf stream under a sim-time tracer. The tracer's
+    //    clock is the simulator's, so this trace is deterministic: rerunning
+    //    with the same seed produces a byte-identical file.
+    let ocfg = OnlineConfig::default();
+    let serve_cluster = Cluster::homogeneous(ocfg.n_gpus, 814.0);
+    let sim_tr = Tracer::sim();
+    let metrics = MetricsRegistry::new();
+    let out = run_online_traced(
+        &ocfg,
+        &serve_cluster,
+        OnlineStrategy::Coordinator,
+        &sim_tr,
+        &metrics,
+    );
+    println!(
+        "coordinator strategy: total {:.2} ms over {} windows, {} replan(s), {} swap(s)\n",
+        out.total_ms,
+        out.per_window_ms.len(),
+        out.replans,
+        out.swaps
+    );
+
+    println!("replan gate decision log:");
+    for d in sim_tr.decisions() {
+        if d.kind == "coordinator.replan_gate" {
+            println!("  {}", d.render());
+        }
+    }
+
+    if let Some(h) = metrics.histogram("serve.window_ms") {
+        println!(
+            "\nwindow latency: {} windows, mean {:.2} ms, p99 {:.2} ms",
+            h.count(),
+            h.mean(),
+            h.quantile(0.99).unwrap_or(0.0)
+        );
+    }
+}

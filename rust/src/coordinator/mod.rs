@@ -45,15 +45,17 @@ mod swap;
 
 pub use estimator::{DriftDetector, TrafficEstimator};
 pub use migration::{migration_preserves_target, plan_migration, MigrationFlow, MigrationPlan};
-pub use online::{run_online, OnlineConfig, OnlineOutcome, OnlineStrategy};
+pub use online::{run_online, run_online_traced, OnlineConfig, OnlineOutcome, OnlineStrategy};
 pub use swap::{PlanSwap, SwapPhase};
 
 use crate::cluster::{Cluster, Topology};
+use crate::obs::Tracer;
 use crate::planner::{Planner, ReplicationConfig};
 use crate::replication::{estimate_objective_on, ReplicatedDeployment, SplitPlan};
 use crate::sim::MoeLayerStats;
 use crate::trace::ModelTrace;
 use crate::traffic::TrafficMatrix;
+use crate::util::Json;
 
 /// Knobs of the cost-aware replan policy.
 #[derive(Debug, Clone, PartialEq)]
@@ -182,6 +184,10 @@ pub struct Coordinator {
     windows_since_replan: u64,
     /// Consecutive gate-rejected candidates since the last commit/settle.
     rejections: u64,
+    /// Observability sink: one `coordinator.replan_gate` decision record per
+    /// observed window, plus the candidate planner's spans. Disabled (a
+    /// no-op) unless [`Coordinator::set_tracer`] installs a live tracer.
+    tracer: Tracer,
     /// Counters (public for reporting).
     pub stats: CoordinatorStats,
 }
@@ -249,9 +255,38 @@ impl Coordinator {
             staging_traffic: None,
             windows_since_replan: 0,
             rejections: 0,
+            tracer: Tracer::disabled(),
             stats: CoordinatorStats::default(),
             cfg,
         }
+    }
+
+    /// Install a tracer: every subsequent [`Coordinator::observe_window`]
+    /// records a span and emits one structured `coordinator.replan_gate`
+    /// decision (drift, candidate gain, migration cost, and the verdict with
+    /// its reason), and candidate planning runs traced. Tracing is purely
+    /// observational — decisions are identical with it on or off.
+    pub fn set_tracer(&mut self, tracer: Tracer) {
+        self.tracer = tracer;
+    }
+
+    /// The tracer decisions are recorded through (disabled by default).
+    pub fn tracer(&self) -> &Tracer {
+        &self.tracer
+    }
+
+    /// Emit the per-window replan-gate decision record.
+    fn gate_decision(&self, verdict: &str, drift: f64, extra: Vec<(&str, Json)>) {
+        if !self.tracer.is_enabled() {
+            return;
+        }
+        let mut fields = vec![
+            ("window", Json::from(self.stats.windows)),
+            ("verdict", Json::from(verdict)),
+            ("drift", Json::Num(drift)),
+        ];
+        fields.extend(extra);
+        self.tracer.decision("coordinator.replan_gate", fields);
     }
 
     /// A candidate was rejected by the gain/cost gates. After
@@ -323,15 +358,22 @@ impl Coordinator {
         }
         self.stats.windows += 1;
         self.windows_since_replan += 1;
+        let _sp = self.tracer.span("coordinator.observe_window");
         self.estimator.observe(observed);
         let est = self.estimator.estimate();
         let drift = self.detector.score(&est);
 
         if drift <= self.cfg.drift_threshold {
+            self.gate_decision("keep_low_drift", drift, vec![]);
             return CoordinatorDecision::Keep { drift };
         }
         if self.swap.is_busy() || self.windows_since_replan <= self.cfg.cooldown_windows {
             self.stats.skipped_cooldown += 1;
+            self.gate_decision(
+                "skipped_cooldown",
+                drift,
+                vec![("swap_busy", Json::from(self.swap.is_busy()))],
+            );
             return CoordinatorDecision::Keep { drift };
         }
 
@@ -349,7 +391,13 @@ impl Coordinator {
         let refs = [&live_trace];
         let (cand_rep, cand_splits) = self
             .planner
-            .plan_replicated_topology(&refs, cluster, &self.cfg.topology, &self.cfg.replication)
+            .plan_replicated_topology_traced(
+                &refs,
+                cluster,
+                &self.cfg.topology,
+                &self.cfg.replication,
+                &self.tracer,
+            )
             .expect("one model always plans");
 
         // Completion estimates of both plans on the *live* statistics,
@@ -367,6 +415,11 @@ impl Coordinator {
         if new_ms >= cur_ms * (1.0 - self.cfg.min_gain) {
             self.stats.skipped_gain += 1;
             self.note_rejection(&est);
+            self.gate_decision(
+                "skipped_gain",
+                drift,
+                vec![("cur_ms", Json::Num(cur_ms)), ("cand_ms", Json::Num(new_ms))],
+            );
             return CoordinatorDecision::Keep { drift };
         }
 
@@ -385,6 +438,16 @@ impl Coordinator {
         if predicted_gain_ms <= staging_cost_ms {
             self.stats.skipped_cost += 1;
             self.note_rejection(&est);
+            self.gate_decision(
+                "skipped_cost",
+                drift,
+                vec![
+                    ("cur_ms", Json::Num(cur_ms)),
+                    ("cand_ms", Json::Num(new_ms)),
+                    ("predicted_gain_ms", Json::Num(predicted_gain_ms)),
+                    ("staging_cost_ms", Json::Num(staging_cost_ms)),
+                ],
+            );
             return CoordinatorDecision::Keep { drift };
         }
 
@@ -405,6 +468,17 @@ impl Coordinator {
         self.rejections = 0;
         self.stats.replans += 1;
         self.stats.migration_ms_total += migration_ms;
+        self.gate_decision(
+            "commit",
+            drift,
+            vec![
+                ("cur_ms", Json::Num(cur_ms)),
+                ("cand_ms", Json::Num(new_ms)),
+                ("predicted_gain_ms", Json::Num(predicted_gain_ms)),
+                ("migration_ms", Json::Num(migration_ms)),
+                ("in_place", Json::from(migration.is_empty())),
+            ],
+        );
         CoordinatorDecision::Replan(Box::new(ReplanOutcome {
             drift,
             predicted_gain_ms,

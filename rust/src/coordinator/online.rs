@@ -22,6 +22,7 @@
 use super::{plan_migration, Coordinator, CoordinatorConfig, PlanSwap, SwapPhase};
 use crate::cluster::{Cluster, Topology};
 use crate::config::EvalConfig;
+use crate::obs::{MetricsRegistry, Tracer};
 use crate::planner::Planner;
 use crate::replication::{ReplicatedDeployment, SplitPlan};
 use crate::serve::metrics::p50_p95_p99;
@@ -209,7 +210,9 @@ fn trace_of(stats: MoeLayerStats) -> ModelTrace {
 
 /// Serve one window under `(rep, splits)` with optional staged weight
 /// traffic sharing the links (both priced on `topo`); returns the window's
-/// inference time (ms).
+/// inference time (ms). With a live `metrics` registry it records the
+/// window's serving time, mean utilization, queue depth (tokens offered to
+/// the window), and the per-GPU token-load series.
 fn serve_window(
     rep: &ReplicatedDeployment,
     splits: &SplitPlan,
@@ -217,10 +220,25 @@ fn serve_window(
     background: Option<&TrafficMatrix>,
     cluster: &Cluster,
     topo: &Topology,
+    metrics: &MetricsRegistry,
 ) -> f64 {
     let gpu_stats = rep.project_layer_split(0, stats, splits);
-    simulate_window_topology(&[&gpu_stats], background, cluster, topo, rep.base.policy)
-        .inference_ms
+    let res =
+        simulate_window_topology(&[&gpu_stats], background, cluster, topo, rep.base.policy);
+    if metrics.is_enabled() {
+        metrics.counter_add("serve.windows", 1);
+        metrics.hist_record("serve.window_ms", res.inference_ms);
+        metrics.hist_record("serve.window_util_pct", res.utilization * 100.0);
+        metrics.hist_record("serve.window_queue_tokens", stats.traffic.total() as f64);
+        for i in 0..cluster.len() {
+            metrics.hist_record(
+                "serve.gpu_window_tokens",
+                gpu_stats.traffic.row_sum(i) as f64,
+            );
+        }
+        metrics.gauge_set("serve.last_window_ms", res.inference_ms);
+    }
+    res.inference_ms
 }
 
 /// Run the drifting-Zipf serving simulation for one strategy. Every
@@ -230,6 +248,33 @@ pub fn run_online(
     cfg: &OnlineConfig,
     cluster: &Cluster,
     strategy: OnlineStrategy,
+) -> OnlineOutcome {
+    run_online_traced(
+        cfg,
+        cluster,
+        strategy,
+        &Tracer::disabled(),
+        &MetricsRegistry::disabled(),
+    )
+}
+
+/// [`run_online`] under a tracer and a metrics registry.
+///
+/// The tracer should be a **sim-time** tracer ([`Tracer::sim`]): the
+/// simulation advances the tracer clock by each window's simulated serving
+/// time, so every span and decision record is stamped in simulated
+/// milliseconds — two runs of the same config produce byte-identical
+/// exports, making traces diffable across code changes. Each window is one
+/// `serve.window` span; under the coordinator strategy the replan gate's
+/// `coordinator.replan_gate` decisions and the candidate planner's spans
+/// nest within it. Instrumentation is purely observational: outcomes are
+/// bit-for-bit identical with tracing on or off.
+pub fn run_online_traced(
+    cfg: &OnlineConfig,
+    cluster: &Cluster,
+    strategy: OnlineStrategy,
+    tr: &Tracer,
+    metrics: &MetricsRegistry,
 ) -> OnlineOutcome {
     assert_eq!(cluster.len(), cfg.n_gpus, "cluster size mismatch");
     assert!(cfg.windows > 0, "simulate at least one window");
@@ -255,27 +300,43 @@ pub fn run_online(
         )
         .expect("one model always plans");
 
+    // Simulated serving clock: cumulative window serving time, driven into
+    // the tracer so spans carry sim-time (deterministic, diffable) stamps.
+    let mut elapsed_ms = 0.0f64;
+
     match strategy {
         OnlineStrategy::Static => {
             let mut per_window = Vec::with_capacity(cfg.windows);
             for w in 0..cfg.windows {
+                tr.set_sim_time_us((elapsed_ms * 1e3).round() as u64);
+                let sp = tr.begin("serve.window");
+                tr.counter(sp, "window", w as i64);
                 let stats = layer(window_traffic(cfg, w));
-                per_window.push(serve_window(
+                let ms = serve_window(
                     &rep0,
                     &splits0,
                     &stats,
                     None,
                     cluster,
                     &cfg.coordinator.topology,
-                ));
+                    metrics,
+                );
+                per_window.push(ms);
+                elapsed_ms += ms;
+                tr.set_sim_time_us((elapsed_ms * 1e3).round() as u64);
+                tr.end(sp);
             }
             outcome(strategy, per_window, 0, 0, 0.0)
         }
         OnlineStrategy::Coordinator => {
             let mut coord =
                 Coordinator::new(planner, rep0, splits0, &plan_layer, cfg.coordinator.clone());
+            coord.set_tracer(tr.clone());
             let mut per_window = Vec::with_capacity(cfg.windows);
             for w in 0..cfg.windows {
+                tr.set_sim_time_us((elapsed_ms * 1e3).round() as u64);
+                let sp = tr.begin("serve.window");
+                tr.counter(sp, "window", w as i64);
                 let observed = window_traffic(cfg, w);
                 let stats = layer(observed.clone());
                 let background = coord.staging_traffic().cloned();
@@ -287,10 +348,16 @@ pub fn run_online(
                     background.as_ref(),
                     cluster,
                     &cfg.coordinator.topology,
+                    metrics,
                 );
                 per_window.push(ms);
+                elapsed_ms += ms;
+                // Advance the tracer clock before the replan gate runs so
+                // its decision records are stamped at the window's end.
+                tr.set_sim_time_us((elapsed_ms * 1e3).round() as u64);
                 coord.advance(ms);
                 coord.observe_window(&observed, cluster);
+                tr.end(sp);
             }
             outcome(
                 strategy,
@@ -308,6 +375,9 @@ pub fn run_online(
             let mut replans = 0u64;
             let mut migration_total = 0.0f64;
             for w in 0..cfg.windows {
+                tr.set_sim_time_us((elapsed_ms * 1e3).round() as u64);
+                let sp = tr.begin("serve.window");
+                tr.counter(sp, "window", w as i64);
                 let observed = window_traffic(cfg, w);
                 let stats = layer(observed.clone());
                 let background = if swap.phase() == SwapPhase::Staging {
@@ -322,8 +392,11 @@ pub fn run_online(
                     background.as_ref(),
                     cluster,
                     &cfg.coordinator.topology,
+                    metrics,
                 );
                 per_window.push(ms);
+                elapsed_ms += ms;
+                tr.set_sim_time_us((elapsed_ms * 1e3).round() as u64);
                 if let Some(new_plan) = swap.advance(ms) {
                     active = new_plan;
                     staging = None;
@@ -333,11 +406,12 @@ pub fn run_online(
                     // smoothing, no gain or cost gate
                     let trace = trace_of(stats);
                     let (cand_rep, cand_splits) = Planner::default()
-                        .plan_replicated_topology(
+                        .plan_replicated_topology_traced(
                             &[&trace],
                             cluster,
                             &cfg.coordinator.topology,
                             &cfg.coordinator.replication,
+                            tr,
                         )
                         .expect("one model always plans");
                     let migration = plan_migration(
@@ -360,6 +434,7 @@ pub fn run_online(
                         replans += 1;
                     }
                 }
+                tr.end(sp);
             }
             let swaps = swap.swaps();
             outcome(strategy, per_window, replans, swaps, migration_total)
@@ -369,31 +444,40 @@ pub fn run_online(
             let mut per_window = Vec::with_capacity(cfg.windows);
             let mut replans = 0u64;
             for w in 0..cfg.windows {
+                tr.set_sim_time_us((elapsed_ms * 1e3).round() as u64);
+                let sp = tr.begin("serve.window");
+                tr.counter(sp, "window", w as i64);
                 let observed = window_traffic(cfg, w);
                 let stats = layer(observed.clone());
                 // perfect knowledge, free migration: adopt the best plan for
                 // this exact window before serving it
                 let trace = trace_of(stats.clone());
                 let (cand_rep, cand_splits) = Planner::default()
-                    .plan_replicated_topology(
+                    .plan_replicated_topology_traced(
                         &[&trace],
                         cluster,
                         &cfg.coordinator.topology,
                         &cfg.coordinator.replication,
+                        tr,
                     )
                     .expect("one model always plans");
                 if cand_rep != active.0 {
                     replans += 1;
                 }
                 active = (cand_rep, cand_splits);
-                per_window.push(serve_window(
+                let ms = serve_window(
                     &active.0,
                     &active.1,
                     &stats,
                     None,
                     cluster,
                     &cfg.coordinator.topology,
-                ));
+                    metrics,
+                );
+                per_window.push(ms);
+                elapsed_ms += ms;
+                tr.set_sim_time_us((elapsed_ms * 1e3).round() as u64);
+                tr.end(sp);
             }
             // the oracle's plan changes are free and instantaneous — it
             // never stages, so it never swaps

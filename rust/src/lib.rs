@@ -87,6 +87,19 @@
 //! ([`planner::Planner::plan_topology`]). The 1024-GPU plan + schedule is
 //! gated under one second by the committed bench baseline.
 //!
+//! Everything above is observable from the inside: the [`obs`] subsystem
+//! provides span tracing ([`obs::Tracer`], wall-clock for the planner,
+//! sim-time for the discrete-event simulators, exported as Chrome
+//! trace-event JSON or JSONL), a metrics registry
+//! ([`obs::MetricsRegistry`]: counters, gauges, log-bucketed histograms),
+//! and structured decision logs explaining every planner phase and every
+//! coordinator replan verdict. Instrumentation is permanently wired through
+//! the `*_traced` planner/scheduler entry points; the `disabled()` handles
+//! are total no-ops and tracing never changes results (pinned bit-for-bit
+//! by an integration property test). The CLI `profile` subcommand
+//! ([`obs::run_profile`]) renders the per-phase time breakdown of a full
+//! plan + schedule run.
+//!
 //! See `docs/architecture.md` for the layer map, the Scenario decision tree,
 //! the "Hierarchical scheduling" section (two-tier topologies, the two-phase
 //! decomposition, and the uplink bounds), the "Performance & incremental
@@ -102,6 +115,7 @@ pub mod config;
 pub mod coordinator;
 pub mod eval;
 pub mod matching;
+pub mod obs;
 pub mod placement;
 pub mod planner;
 pub mod replication;
@@ -115,6 +129,7 @@ pub mod util;
 
 pub use cluster::{Cluster, GpuSpec, Topology, TopologyError};
 pub use coordinator::{Coordinator, CoordinatorConfig};
+pub use obs::{MetricsRegistry, Tracer};
 pub use placement::{Deployment, PlacementError};
 pub use planner::{DeploymentPlan, Planner, ReplicationConfig, Scenario};
 pub use replication::{ReplicatedDeployment, SplitPlan};

@@ -43,6 +43,7 @@ fn main() {
         "trace" => cmd_trace(&opts),
         "serve" => cmd_serve(&opts),
         "serve-sim" => cmd_serve_sim(&opts),
+        "profile" => cmd_profile(&opts),
         "help" | "--help" | "-h" => {
             usage();
             Ok(())
@@ -67,6 +68,7 @@ USAGE:
   aurora trace    --out <file.json> [--config f.json]
   aurora serve    [--artifacts DIR] [--requests N] [--batch N] [--policy aurora|rcs]
   aurora serve-sim [--drift ALPHA] [--windows N] [--rotate-every N] [--strategy static|periodic|coordinator|oracle|all] [--noise] [--groups <G> --oversub <F>] [--config f.json]
+  aurora profile  [--gpus N] [--skew ALPHA] [--replicas R] [--seed S] [--trace-out f.json] [--jsonl-out f.jsonl]
 
   --models N           colocate N models (N >= 3 uses the generalized placement core)
   --experts-per-gpu K  give every model K*n_gpus experts (K >= 2 packs multiple experts per GPU)
@@ -80,6 +82,9 @@ USAGE:
   --noise              serve-sim: sample each window multinomially (live-batch fluctuation)
   --check              bench: fail when a hot path regresses past --max-regress (default 1.25x)
                        vs the last snapshot in the history file
+  --trace-out F        plan/simulate/serve-sim/profile: write the run's span trace as Chrome
+                       trace-event JSON (open in chrome://tracing or Perfetto)
+  --metrics-out F      plan/simulate/serve-sim: write a metrics-registry JSON snapshot
 "
     );
 }
@@ -133,6 +138,58 @@ impl Opts {
             other => Err(format!("unknown policy '{other}'")),
         }
     }
+}
+
+/// Wall-clock tracer when `--trace-out` was given, disabled (no-op)
+/// otherwise — so the planning paths below can pass it unconditionally.
+fn tracer_for(opts: &Opts) -> aurora::Tracer {
+    if opts.get("trace-out").is_some() {
+        aurora::Tracer::wall()
+    } else {
+        aurora::Tracer::disabled()
+    }
+}
+
+/// Live metrics registry when `--metrics-out` was given, disabled otherwise.
+fn metrics_for(opts: &Opts) -> aurora::MetricsRegistry {
+    if opts.get("metrics-out").is_some() {
+        aurora::MetricsRegistry::new()
+    } else {
+        aurora::MetricsRegistry::disabled()
+    }
+}
+
+/// Fold per-span durations into the registry (one histogram per span name),
+/// so `--metrics-out` on plan/simulate reports phase timing distributions.
+fn span_metrics(tr: &aurora::Tracer, metrics: &aurora::MetricsRegistry) {
+    if !metrics.is_enabled() {
+        return;
+    }
+    for s in tr.spans() {
+        metrics.hist_record(&format!("phase.{}_us", s.name), s.dur_us as f64);
+    }
+}
+
+/// Write the `--trace-out` / `--metrics-out` artifacts, if requested.
+fn write_obs_outputs(
+    opts: &Opts,
+    tr: &aurora::Tracer,
+    metrics: &aurora::MetricsRegistry,
+) -> Result<(), String> {
+    if let Some(path) = opts.get("trace-out") {
+        std::fs::write(path, tr.to_chrome_string()).map_err(|e| format!("{path}: {e}"))?;
+        eprintln!("wrote {path}");
+    }
+    if let Some(path) = opts.get("jsonl-out") {
+        std::fs::write(path, tr.to_jsonl()).map_err(|e| format!("{path}: {e}"))?;
+        eprintln!("wrote {path}");
+    }
+    if let Some(path) = opts.get("metrics-out") {
+        std::fs::write(path, metrics.snapshot().to_string_compact())
+            .map_err(|e| format!("{path}: {e}"))?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
 }
 
 fn cmd_eval(opts: &Opts) -> Result<(), String> {
@@ -326,13 +383,19 @@ fn cmd_plan(opts: &Opts) -> Result<(), String> {
     let (replicas, skew) = parse_replication(opts)?;
     let topo = parse_topology(opts, cluster.len())?;
     let big_switch = matches!(topo, Topology::BigSwitch);
+    let tr = tracer_for(opts);
+    let metrics = metrics_for(opts);
     // The paper's shapes print the classic two-model plan JSON for parity.
     if per_gpu.is_none() && models <= 2 && replicas == 1 && skew == 0.0 && big_switch {
         let w = Workloads::generate(&cfg);
+        let sp = tr.begin("planner.plan_classic");
         let plan = match models {
             1 => planner.plan_exclusive(&w.b16_coco, &cluster),
             _ => planner.plan_colocated(&w.b16_coco, &w.b32_coco, &cluster),
         };
+        tr.end(sp);
+        span_metrics(&tr, &metrics);
+        write_obs_outputs(opts, &tr, &metrics)?;
         println!("{}", plan.to_json().to_string_compact());
         return Ok(());
     }
@@ -345,15 +408,17 @@ fn cmd_plan(opts: &Opts) -> Result<(), String> {
             ..ReplicationConfig::default()
         };
         let (rep, _) = planner
-            .plan_replicated_topology(&refs, &cluster, &topo, &rep_cfg)
+            .plan_replicated_topology_traced(&refs, &cluster, &topo, &rep_cfg, &tr)
             .map_err(|e| e.to_string())?;
         rep.to_json()
     } else {
         let dep = planner
-            .plan_topology(&refs, &cluster, &topo)
+            .plan_topology_traced(&refs, &cluster, &topo, &tr)
             .map_err(|e| e.to_string())?;
         dep.to_json()
     };
+    span_metrics(&tr, &metrics);
+    write_obs_outputs(opts, &tr, &metrics)?;
     match topology_json(&topo) {
         // no topology flags: the classic plan JSON, byte for byte
         None => println!("{}", plan_json.to_string_compact()),
@@ -377,6 +442,8 @@ fn cmd_simulate(opts: &Opts) -> Result<(), String> {
     let (models, per_gpu) = parse_shape(opts)?;
     let (replicas, skew) = parse_replication(opts)?;
     let topo = parse_topology(opts, cluster.len())?;
+    let tr = tracer_for(opts);
+    let metrics = metrics_for(opts);
     println!(
         "scenario: {} model(s), {} cluster, policy {}",
         models,
@@ -420,7 +487,7 @@ fn cmd_simulate(opts: &Opts) -> Result<(), String> {
             ..ReplicationConfig::default()
         };
         let (rep, splits) = planner
-            .plan_replicated_topology(&refs, &cluster, &topo, &rep_cfg)
+            .plan_replicated_topology_traced(&refs, &cluster, &topo, &rep_cfg, &tr)
             .map_err(|e| e.to_string())?;
         println!(
             "deployment: {} models x {} experts, skew {:.2}, {} added replica(s), max slots {}",
@@ -440,12 +507,16 @@ fn cmd_simulate(opts: &Opts) -> Result<(), String> {
                 res.comm_ms
             );
         }
+        span_metrics(&tr, &metrics);
+        write_obs_outputs(opts, &tr, &metrics)?;
         return Ok(());
     }
     match (models, per_gpu, &topo) {
         (1, None, Topology::BigSwitch) => {
             let w = Workloads::generate(&cfg);
+            let sp = tr.begin("planner.plan_classic");
             let plan = planner.plan_exclusive(&w.b16_coco, &cluster);
+            tr.end(sp);
             for (k, layer) in plan.place_a(&w.b16_coco).iter().enumerate() {
                 let (res, _) = simulate_exclusive(layer, &cluster, policy);
                 println!(
@@ -459,7 +530,9 @@ fn cmd_simulate(opts: &Opts) -> Result<(), String> {
         }
         (2, None, Topology::BigSwitch) => {
             let w = Workloads::generate(&cfg);
+            let sp = tr.begin("planner.plan_classic");
             let plan = planner.plan_colocated(&w.b16_coco, &w.b32_coco, &cluster);
+            tr.end(sp);
             let pa = plan.place_a(&w.b16_coco);
             let pb = plan.place_b(&w.b32_coco);
             for (k, (la, lb)) in pa.iter().zip(&pb).enumerate() {
@@ -481,7 +554,7 @@ fn cmd_simulate(opts: &Opts) -> Result<(), String> {
             let traces = multi_workload(&cfg, models, k * cluster.len());
             let refs: Vec<&ModelTrace> = traces.iter().collect();
             let dep = planner
-                .plan_topology(&refs, &cluster, &topo)
+                .plan_topology_traced(&refs, &cluster, &topo, &tr)
                 .map_err(|e| e.to_string())?;
             println!(
                 "deployment: {} models x {} experts ({} per GPU slot), max group {}",
@@ -501,6 +574,8 @@ fn cmd_simulate(opts: &Opts) -> Result<(), String> {
             }
         }
     }
+    span_metrics(&tr, &metrics);
+    write_obs_outputs(opts, &tr, &metrics)?;
     Ok(())
 }
 
@@ -683,6 +758,12 @@ fn cmd_bench(opts: &Opts) -> Result<(), String> {
                 ("median_ns", Json::Num(s.median.as_nanos() as f64)),
                 ("mean_ns", Json::Num(s.mean.as_nanos() as f64)),
                 ("min_ns", Json::Num(s.min.as_nanos() as f64)),
+                // full per-iteration distribution (log-bucketed), not just
+                // the point stats — the regression gate still reads only
+                // median_ns, so these ride along without affecting it
+                ("p90_ns", Json::Num(s.p90_ns())),
+                ("p99_ns", Json::Num(s.p99_ns())),
+                ("hist", s.hist.to_json()),
             ])
         })
         .collect();
@@ -772,7 +853,7 @@ fn cmd_bench(opts: &Opts) -> Result<(), String> {
 /// per-window p50/p95/p99 serving-time percentiles.
 fn cmd_serve_sim(opts: &Opts) -> Result<(), String> {
     use aurora::cluster::Cluster;
-    use aurora::coordinator::{run_online, OnlineConfig, OnlineStrategy};
+    use aurora::coordinator::{run_online_traced, OnlineConfig, OnlineStrategy};
 
     let cfg = opts.config()?;
     let alpha: f64 = opts
@@ -826,8 +907,17 @@ fn cmd_serve_sim(opts: &Opts) -> Result<(), String> {
         cluster.len(),
         if sampled { ", sampled windows" } else { "" }
     );
-    for strategy in strategies {
-        let out = run_online(&ocfg, &cluster, strategy);
+    // Serve-sim traces use the simulator's clock, not the wall clock: two runs
+    // with the same seed produce byte-identical trace files.
+    let tr = if opts.get("trace-out").is_some() || opts.get("jsonl-out").is_some() {
+        aurora::Tracer::sim()
+    } else {
+        aurora::Tracer::disabled()
+    };
+    let metrics = metrics_for(opts);
+    for (idx, strategy) in strategies.into_iter().enumerate() {
+        tr.set_track(idx as u32); // one Chrome-trace lane per strategy
+        let out = run_online_traced(&ocfg, &cluster, strategy, &tr, &metrics);
         println!(
             "{:<12} total {:>9.3} ms | windows p50 {:.3} / p95 {:.3} / p99 {:.3} ms | {} replan(s), {} swap(s), migration {:.3} ms",
             out.strategy,
@@ -839,6 +929,46 @@ fn cmd_serve_sim(opts: &Opts) -> Result<(), String> {
             out.swaps,
             out.migration_ms
         );
+    }
+    write_obs_outputs(opts, &tr, &metrics)?;
+    Ok(())
+}
+
+fn cmd_profile(opts: &Opts) -> Result<(), String> {
+    use aurora::obs::{run_profile, ProfileConfig};
+
+    let mut cfg = ProfileConfig::default();
+    if let Some(v) = opts.get("gpus") {
+        cfg.gpus = v.parse().map_err(|_| "bad --gpus")?;
+    }
+    if let Some(v) = opts.get("skew") {
+        cfg.skew = v.parse().map_err(|_| "bad --skew")?;
+    }
+    if let Some(v) = opts.get("replicas") {
+        cfg.replicas = v.parse().map_err(|_| "bad --replicas")?;
+    }
+    if let Some(v) = opts.get("seed") {
+        cfg.seed = v.parse().map_err(|_| "bad --seed")?;
+    }
+    if cfg.gpus == 0 {
+        return Err("--gpus must be >= 1".into());
+    }
+    let report = run_profile(&cfg)?;
+    println!(
+        "profiled plan+schedule: {} GPUs ({}), Zipf({:.2}), max {} replica(s)",
+        cfg.gpus, report.topology, cfg.skew, cfg.replicas
+    );
+    println!("schedule estimate: {:.3} ms", report.schedule_ms);
+    println!();
+    println!("{}", report.render_table());
+    if let Some(path) = opts.get("trace-out") {
+        std::fs::write(path, report.tracer.to_chrome_string())
+            .map_err(|e| format!("{path}: {e}"))?;
+        eprintln!("wrote {path}");
+    }
+    if let Some(path) = opts.get("jsonl-out") {
+        std::fs::write(path, report.tracer.to_jsonl()).map_err(|e| format!("{path}: {e}"))?;
+        eprintln!("wrote {path}");
     }
     Ok(())
 }

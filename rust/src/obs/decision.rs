@@ -1,0 +1,105 @@
+//! Structured decision logs — the "why" pillar of the observability layer.
+//!
+//! A [`DecisionRecord`] is a timestamped, typed key→value record of one
+//! decision a subsystem made: the coordinator's replan gate emits one per
+//! observed window (drift value, candidate gain, migration cost, verdict
+//! with reason), and the planner emits one per phase event (LPT placement,
+//! refinement rounds, lazy-greedy commits, delta/queue rebuilds, per-tier
+//! BvN phases). Records are collected by the [`super::Tracer`] they were
+//! emitted through, so spans and decisions share one clock and one export.
+//!
+//! Field values are [`Json`] so records stay schema-free: a consumer greps
+//! on `kind` and reads the fields it knows. Ordering of fields is preserved
+//! (they serialize as `[key, value]` pairs, not as a key-sorted object).
+
+use crate::util::Json;
+
+/// One structured decision: what was decided, when, and on which evidence.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DecisionRecord {
+    /// Time of the decision in the emitting tracer's clock (µs).
+    pub t_us: u64,
+    /// Record type, dot-namespaced by subsystem (e.g.
+    /// `"coordinator.replan_gate"`, `"planner.refine_round"`).
+    pub kind: String,
+    /// Ordered evidence fields.
+    pub fields: Vec<(String, Json)>,
+}
+
+impl DecisionRecord {
+    /// Field lookup by key (first match).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        self.fields.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+    }
+
+    /// JSON form: `{"type":"decision","ts_us":..,"kind":..,"fields":[[k,v],..]}`.
+    /// Fields serialize as an array of pairs so their order survives the
+    /// round trip (a JSON object would re-sort them).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("type", Json::from("decision")),
+            ("ts_us", Json::from(self.t_us)),
+            ("kind", Json::from(self.kind.as_str())),
+            (
+                "fields",
+                Json::Arr(
+                    self.fields
+                        .iter()
+                        .map(|(k, v)| Json::Arr(vec![Json::from(k.as_str()), v.clone()]))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// One-line human rendering: `[      123 µs] kind key=value ...`.
+    pub fn render(&self) -> String {
+        let mut out = format!("[{:>10} µs] {}", self.t_us, self.kind);
+        for (k, v) in &self.fields {
+            let val = match v {
+                Json::Str(s) => s.clone(),
+                other => other.to_string_compact(),
+            };
+            out.push_str(&format!(" {k}={val}"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record() -> DecisionRecord {
+        DecisionRecord {
+            t_us: 42,
+            kind: "coordinator.replan_gate".to_string(),
+            fields: vec![
+                ("verdict".to_string(), Json::from("keep")),
+                ("drift".to_string(), Json::Num(0.25)),
+            ],
+        }
+    }
+
+    #[test]
+    fn field_lookup_and_render() {
+        let r = record();
+        assert_eq!(r.get("verdict"), Some(&Json::from("keep")));
+        assert_eq!(r.get("missing"), None);
+        let line = r.render();
+        assert!(line.contains("coordinator.replan_gate"), "{line}");
+        assert!(line.contains("verdict=keep"), "{line}");
+        assert!(line.contains("drift=0.25"), "{line}");
+    }
+
+    #[test]
+    fn json_preserves_field_order() {
+        let r = record();
+        let j = r.to_json();
+        let fields = j.get("fields").and_then(|f| f.as_arr()).unwrap();
+        assert_eq!(fields.len(), 2);
+        // verdict was inserted first and must serialize first
+        assert_eq!(fields[0].as_arr().unwrap()[0], Json::from("verdict"));
+        assert_eq!(fields[1].as_arr().unwrap()[0], Json::from("drift"));
+    }
+}

@@ -1,0 +1,471 @@
+//! Metrics registry: counters, gauges, and log-bucketed histograms.
+//!
+//! The [`MetricsRegistry`] is the single sink every subsystem reports
+//! through — the serving simulator records per-window latency, per-GPU
+//! utilization, and queue depth; `bench` records per-iteration timings; the
+//! CLI snapshots the whole registry to JSON via
+//! [`MetricsRegistry::snapshot`]. Like [`super::Tracer`], the registry is a
+//! cheap-to-clone handle and [`MetricsRegistry::disabled`] is a total no-op,
+//! so instrumentation can stay in place on hot paths.
+//!
+//! [`Histogram`] uses 64 power-of-two buckets (values `< 1` land in bucket
+//! 0, value `v` in bucket `1 + floor(log2 v)`, capped at 63), giving
+//! ≤ 2× relative quantile error over the full `f64` range with a fixed
+//! 64-slot footprint. Non-finite samples are **counted and dropped**, never
+//! stored — the registry cannot be poisoned by a NaN.
+//!
+//! This module also owns the exact-percentile helpers ([`percentile`],
+//! [`p50_p95_p99`]) that `serve::metrics` re-exports: they return typed
+//! [`MetricsError`]s instead of panicking, and filter non-finite samples
+//! with a count rather than asserting them away.
+
+use crate::util::Json;
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::fmt;
+use std::rc::Rc;
+
+/// Typed errors for percentile/summary queries.
+#[derive(Debug, Clone, PartialEq)]
+pub enum MetricsError {
+    /// `p` was outside `[0, 1]` (or not finite).
+    InvalidPercentile { p: f64 },
+    /// Every sample was NaN/±∞ (or the slice was empty); `dropped` counts
+    /// the non-finite samples that were filtered out.
+    NoFiniteSamples { dropped: usize },
+}
+
+impl fmt::Display for MetricsError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            MetricsError::InvalidPercentile { p } => {
+                write!(f, "percentile p={p} is outside [0, 1]")
+            }
+            MetricsError::NoFiniteSamples { dropped } => {
+                write!(f, "no finite samples ({dropped} non-finite dropped)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for MetricsError {}
+
+/// Exact percentile (nearest-rank) over the finite samples of `xs`.
+///
+/// Non-finite samples are filtered (their count is reported through
+/// [`MetricsError::NoFiniteSamples`] when nothing survives); out-of-range
+/// `p` is a typed error, not a panic. `p = 0` is the minimum, `p = 1` the
+/// maximum.
+pub fn percentile(xs: &[f64], p: f64) -> Result<f64, MetricsError> {
+    if !(0.0..=1.0).contains(&p) {
+        return Err(MetricsError::InvalidPercentile { p });
+    }
+    let mut finite: Vec<f64> = xs.iter().copied().filter(|x| x.is_finite()).collect();
+    if finite.is_empty() {
+        return Err(MetricsError::NoFiniteSamples {
+            dropped: xs.len() - finite.len(),
+        });
+    }
+    finite.sort_by(f64::total_cmp);
+    let idx = ((finite.len() as f64 - 1.0) * p).round() as usize;
+    Ok(finite[idx.min(finite.len() - 1)])
+}
+
+/// `(p50, p95, p99)` of the finite samples of `xs` in one pass.
+pub fn p50_p95_p99(xs: &[f64]) -> Result<(f64, f64, f64), MetricsError> {
+    let mut finite: Vec<f64> = xs.iter().copied().filter(|x| x.is_finite()).collect();
+    if finite.is_empty() {
+        return Err(MetricsError::NoFiniteSamples {
+            dropped: xs.len() - finite.len(),
+        });
+    }
+    finite.sort_by(f64::total_cmp);
+    let pick = |p: f64| {
+        let idx = ((finite.len() as f64 - 1.0) * p).round() as usize;
+        finite[idx.min(finite.len() - 1)]
+    };
+    Ok((pick(0.50), pick(0.95), pick(0.99)))
+}
+
+const BUCKETS: usize = 64;
+
+/// Log-bucketed histogram over non-negative `f64` samples.
+///
+/// Fixed 64-bucket footprint, ≤ 2× relative quantile error; exact
+/// count/sum/min/max are tracked alongside the buckets. Non-finite (or
+/// negative) samples are dropped and counted in [`Histogram::dropped`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct Histogram {
+    buckets: [u64; BUCKETS],
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+    dropped: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: [0; BUCKETS],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            dropped: 0,
+        }
+    }
+
+    fn bucket_of(v: f64) -> usize {
+        if v < 1.0 {
+            0
+        } else {
+            (1 + v.log2().floor() as usize).min(BUCKETS - 1)
+        }
+    }
+
+    /// Upper edge of bucket `i` (the quantile estimate reported for it).
+    fn bucket_upper(i: usize) -> f64 {
+        if i == 0 {
+            1.0
+        } else {
+            (2u64 << (i - 1).min(62)) as f64 // 2^i
+        }
+    }
+
+    /// Record one sample. NaN, ±∞, and negative values are dropped (and
+    /// counted), keeping the histogram well-defined under adversarial input.
+    pub fn record(&mut self, v: f64) {
+        if !v.is_finite() || v < 0.0 {
+            self.dropped += 1;
+            return;
+        }
+        self.buckets[Self::bucket_of(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Number of non-finite/negative samples rejected by [`Histogram::record`].
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Approximate quantile: walks the cumulative bucket counts and reports
+    /// the matched bucket's upper edge, clamped to the exact observed
+    /// min/max (so `q(0)` and `q(1)` are exact).
+    pub fn quantile(&self, q: f64) -> Result<f64, MetricsError> {
+        if !(0.0..=1.0).contains(&q) {
+            return Err(MetricsError::InvalidPercentile { p: q });
+        }
+        if self.count == 0 {
+            return Err(MetricsError::NoFiniteSamples {
+                dropped: self.dropped as usize,
+            });
+        }
+        let rank = (q * (self.count as f64 - 1.0)).round() as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if c > 0 && seen > rank {
+                return Ok(Self::bucket_upper(i).clamp(self.min, self.max));
+            }
+        }
+        Ok(self.max)
+    }
+
+    /// JSON form: exact aggregates plus the sparse nonzero buckets as
+    /// `[index, count]` pairs.
+    pub fn to_json(&self) -> Json {
+        let nonzero: Vec<Json> = self
+            .buckets
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| Json::Arr(vec![Json::from(i), Json::from(c)]))
+            .collect();
+        Json::obj(vec![
+            ("count", Json::from(self.count)),
+            ("dropped", Json::from(self.dropped)),
+            ("sum", Json::from(self.sum)),
+            ("mean", Json::from(self.mean())),
+            ("min", Json::from(self.min())),
+            ("max", Json::from(self.max())),
+            ("p50", Json::from(self.quantile(0.50).unwrap_or(0.0))),
+            ("p90", Json::from(self.quantile(0.90).unwrap_or(0.0))),
+            ("p99", Json::from(self.quantile(0.99).unwrap_or(0.0))),
+            ("buckets", Json::Arr(nonzero)),
+        ])
+    }
+}
+
+#[derive(Debug, Default)]
+struct RegInner {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    histograms: BTreeMap<String, Histogram>,
+}
+
+/// Cheap-to-clone metrics handle (clones share the underlying store);
+/// [`MetricsRegistry::disabled`] records nothing.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsRegistry(Option<Rc<RefCell<RegInner>>>);
+
+impl MetricsRegistry {
+    /// The no-op registry.
+    pub fn disabled() -> MetricsRegistry {
+        MetricsRegistry(None)
+    }
+
+    /// A live, empty registry.
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry(Some(Rc::new(RefCell::new(RegInner::default()))))
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.0.is_some()
+    }
+
+    /// Add `delta` to a monotonic counter (created at 0 on first touch).
+    pub fn counter_add(&self, name: &str, delta: u64) {
+        if let Some(inner) = &self.0 {
+            *inner.borrow_mut().counters.entry(name.to_string()).or_insert(0) += delta;
+        }
+    }
+
+    /// Set a gauge to its latest value.
+    pub fn gauge_set(&self, name: &str, value: f64) {
+        if let Some(inner) = &self.0 {
+            inner.borrow_mut().gauges.insert(name.to_string(), value);
+        }
+    }
+
+    /// Record one sample into a named histogram (created empty on first
+    /// touch; non-finite samples are dropped-and-counted, see
+    /// [`Histogram::record`]).
+    pub fn hist_record(&self, name: &str, value: f64) {
+        if let Some(inner) = &self.0 {
+            inner
+                .borrow_mut()
+                .histograms
+                .entry(name.to_string())
+                .or_default()
+                .record(value);
+        }
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        match &self.0 {
+            Some(inner) => inner.borrow().counters.get(name).copied().unwrap_or(0),
+            None => 0,
+        }
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.0.as_ref().and_then(|inner| inner.borrow().gauges.get(name).copied())
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<Histogram> {
+        self.0.as_ref().and_then(|inner| inner.borrow().histograms.get(name).cloned())
+    }
+
+    /// Full JSON snapshot:
+    /// `{"counters":{..},"gauges":{..},"histograms":{name:{count,..,buckets}}}`.
+    /// Deterministic (names are sorted) so snapshots diff cleanly.
+    pub fn snapshot(&self) -> Json {
+        let Some(inner) = &self.0 else {
+            return Json::obj(vec![
+                ("counters", Json::obj(vec![])),
+                ("gauges", Json::obj(vec![])),
+                ("histograms", Json::obj(vec![])),
+            ]);
+        };
+        let inner = inner.borrow();
+        let counters = inner
+            .counters
+            .iter()
+            .map(|(k, &v)| (k.clone(), Json::from(v)))
+            .collect::<BTreeMap<_, _>>();
+        let gauges = inner
+            .gauges
+            .iter()
+            .map(|(k, &v)| (k.clone(), Json::from(v)))
+            .collect::<BTreeMap<_, _>>();
+        let hists = inner
+            .histograms
+            .iter()
+            .map(|(k, h)| (k.clone(), h.to_json()))
+            .collect::<BTreeMap<_, _>>();
+        Json::obj(vec![
+            ("counters", Json::Obj(counters)),
+            ("gauges", Json::Obj(gauges)),
+            ("histograms", Json::Obj(hists)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_typed_errors() {
+        assert_eq!(
+            percentile(&[1.0], 1.5),
+            Err(MetricsError::InvalidPercentile { p: 1.5 })
+        );
+        assert_eq!(
+            percentile(&[1.0], -0.1),
+            Err(MetricsError::InvalidPercentile { p: -0.1 })
+        );
+        assert_eq!(percentile(&[], 0.5), Err(MetricsError::NoFiniteSamples { dropped: 0 }));
+    }
+
+    #[test]
+    fn percentile_filters_non_finite() {
+        let xs = [f64::NAN, 3.0, f64::INFINITY, 1.0, f64::NEG_INFINITY, 2.0];
+        assert_eq!(percentile(&xs, 0.0), Ok(1.0));
+        assert_eq!(percentile(&xs, 0.5), Ok(2.0));
+        assert_eq!(percentile(&xs, 1.0), Ok(3.0));
+    }
+
+    #[test]
+    fn percentile_all_non_finite_reports_drop_count() {
+        let xs = [f64::NAN, f64::INFINITY, f64::NAN];
+        assert_eq!(
+            percentile(&xs, 0.5),
+            Err(MetricsError::NoFiniteSamples { dropped: 3 })
+        );
+        assert_eq!(
+            p50_p95_p99(&xs),
+            Err(MetricsError::NoFiniteSamples { dropped: 3 })
+        );
+    }
+
+    #[test]
+    fn p50_p95_p99_on_known_data() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let (p50, p95, p99) = p50_p95_p99(&xs).unwrap();
+        assert_eq!(p50, 50.0);
+        assert_eq!(p95, 95.0);
+        assert_eq!(p99, 99.0);
+    }
+
+    #[test]
+    fn histogram_buckets_and_quantiles() {
+        let mut h = Histogram::new();
+        for v in [0.5, 1.0, 2.0, 3.0, 100.0] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.min(), 0.5);
+        assert_eq!(h.max(), 100.0);
+        assert_eq!(h.quantile(0.0).unwrap(), 0.5);
+        assert_eq!(h.quantile(1.0).unwrap(), 100.0);
+        let p50 = h.quantile(0.5).unwrap();
+        // exact median is 2.0; log buckets may report up to its bucket edge (4)
+        assert!((2.0..=4.0).contains(&p50), "p50 = {p50}");
+    }
+
+    #[test]
+    fn histogram_drops_adversarial_samples() {
+        let mut h = Histogram::new();
+        h.record(f64::NAN);
+        h.record(f64::INFINITY);
+        h.record(f64::NEG_INFINITY);
+        h.record(-1.0);
+        h.record(2.0);
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.dropped(), 4);
+        assert_eq!(h.quantile(0.5), Ok(2.0));
+        let empty = Histogram::new();
+        assert_eq!(empty.quantile(0.5), Err(MetricsError::NoFiniteSamples { dropped: 0 }));
+    }
+
+    #[test]
+    fn histogram_huge_values_stay_in_range() {
+        let mut h = Histogram::new();
+        h.record(1e300);
+        h.record(f64::MAX);
+        assert_eq!(h.count(), 2);
+        assert!(h.quantile(0.5).unwrap().is_finite());
+    }
+
+    #[test]
+    fn registry_counters_gauges_hists() {
+        let m = MetricsRegistry::new();
+        m.counter_add("windows", 2);
+        m.counter_add("windows", 3);
+        m.gauge_set("util", 0.75);
+        m.hist_record("latency", 10.0);
+        m.hist_record("latency", 20.0);
+        assert_eq!(m.counter("windows"), 5);
+        assert_eq!(m.gauge("util"), Some(0.75));
+        assert_eq!(m.histogram("latency").unwrap().count(), 2);
+        let snap = m.snapshot();
+        assert_eq!(
+            snap.get("counters").and_then(|c| c.get("windows")).and_then(|v| v.as_u64()),
+            Some(5)
+        );
+        assert!(snap.get("histograms").and_then(|h| h.get("latency")).is_some());
+    }
+
+    #[test]
+    fn disabled_registry_is_inert() {
+        let m = MetricsRegistry::disabled();
+        m.counter_add("x", 1);
+        m.gauge_set("g", 1.0);
+        m.hist_record("h", 1.0);
+        assert_eq!(m.counter("x"), 0);
+        assert_eq!(m.gauge("g"), None);
+        assert!(m.histogram("h").is_none());
+        assert!(!m.is_enabled());
+    }
+
+    #[test]
+    fn clones_share_the_store() {
+        let m = MetricsRegistry::new();
+        let c = m.clone();
+        c.counter_add("n", 7);
+        assert_eq!(m.counter("n"), 7);
+    }
+}

@@ -1,0 +1,43 @@
+//! Observability: span tracing, metrics, and decision logs.
+//!
+//! Three pillars, one shared design:
+//!
+//! * **Span tracing** ([`tracer`]) — a [`Tracer`] records begin/end spans
+//!   with labels and integer counters under an injectable clock (wall clock
+//!   for the planner, sim time for the discrete-event simulators), and
+//!   exports Chrome trace-event-format JSON ([`Tracer::to_chrome_string`],
+//!   openable in `chrome://tracing` / Perfetto) and JSONL
+//!   ([`Tracer::to_jsonl`]).
+//! * **Metrics** ([`metrics`]) — a [`MetricsRegistry`] of counters, gauges,
+//!   and log-bucketed [`Histogram`]s with a deterministic JSON snapshot;
+//!   also home of the typed-error percentile helpers that `serve::metrics`
+//!   re-exports.
+//! * **Decision logs** ([`decision`]) — [`DecisionRecord`]s explain *why*:
+//!   the coordinator's replan gate emits one per window (drift, candidate
+//!   gain, migration cost, verdict), the planner one per phase event.
+//!
+//! Every handle ([`Tracer`], [`MetricsRegistry`]) is cheap to clone and has
+//! a `disabled()` constructor that is a total no-op, so instrumentation
+//! lives permanently on the planner/scheduler/coordinator paths at zero
+//! cost when off — and, critically, **tracing never influences results**:
+//! an integration property test pins that planning with tracing on versus
+//! off yields bit-for-bit identical deployments and schedules.
+//!
+//! Handles are intentionally **not** `Send`/`Sync` (`Rc<RefCell<..>>`):
+//! they must never be captured by `util::par::par_map` closures. Parallel
+//! sweeps stay untraced internally; their enclosing phase span records the
+//! aggregate.
+//!
+//! The [`profile`] module drives a full plan + schedule run under a
+//! wall-clock tracer and renders the per-phase time breakdown table behind
+//! the CLI `profile` subcommand.
+
+pub mod decision;
+pub mod metrics;
+pub mod profile;
+pub mod tracer;
+
+pub use decision::DecisionRecord;
+pub use metrics::{p50_p95_p99, percentile, Histogram, MetricsError, MetricsRegistry};
+pub use profile::{run_profile, ProfileConfig, ProfileReport};
+pub use tracer::{parse_chrome_trace, Span, SpanId, SpanScope, Tracer};

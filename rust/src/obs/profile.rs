@@ -1,0 +1,317 @@
+//! Self-contained plan + schedule profiling run (the CLI `profile`
+//! subcommand).
+//!
+//! [`run_profile`] builds a synthetic Zipf-skewed single-model workload on a
+//! homogeneous cluster whose topology is derived from the GPU count the same
+//! way the bench harness shapes its large cases (8 GPUs per rack, 8 racks
+//! per pod once the fabric is big enough to have pods), runs the planner and
+//! the hierarchical scheduler under a wall-clock [`Tracer`], and returns a
+//! [`ProfileReport`]: the per-phase time breakdown table plus the raw tracer
+//! for Chrome-trace / JSONL export.
+
+use crate::cluster::{Cluster, Topology};
+use crate::eval::skewed_workload;
+use crate::planner::{Planner, ReplicationConfig};
+use crate::schedule::{aurora_schedule_traced, hierarchical_schedule_traced};
+use crate::trace::ModelTrace;
+
+use super::tracer::{Span, Tracer};
+
+/// Per-GPU bandwidth (tokens/ms) of the synthetic profiling cluster — the
+/// same figure the bench harness uses.
+const PROFILE_BW: f64 = 800.0;
+
+/// Shape of the synthetic profiling workload.
+#[derive(Debug, Clone)]
+pub struct ProfileConfig {
+    /// Cluster size (one expert per GPU). Default 128.
+    pub gpus: usize,
+    /// Zipf skew of the routing traffic.
+    pub skew: f64,
+    /// Max copies per expert; ≥ 2 additionally profiles the lazy-greedy
+    /// replication pass, 1 profiles placement + refinement only.
+    pub replicas: usize,
+    /// Workload RNG seed.
+    pub seed: u64,
+}
+
+impl Default for ProfileConfig {
+    fn default() -> Self {
+        Self {
+            gpus: 128,
+            skew: 1.2,
+            replicas: 2,
+            seed: 42,
+        }
+    }
+}
+
+impl ProfileConfig {
+    /// Topology derived from the GPU count: a big switch below 16 GPUs, a
+    /// two-tier fabric of 8-GPU racks (x4 oversubscribed uplinks) up to 127
+    /// racks, and a three-tier fabric stacking 8-rack pods (x2 rack, x4 pod
+    /// uplinks — the bench harness's 1024-GPU shape) from 128 racks up.
+    pub fn topology(&self) -> Result<Topology, String> {
+        let n = self.gpus;
+        if n < 16 {
+            return Ok(Topology::BigSwitch);
+        }
+        let racks = n / 8;
+        if racks < 16 {
+            return Topology::even_two_tier(n, racks, 4.0).map_err(|e| e.to_string());
+        }
+        let pods = racks / 8;
+        Topology::even_tiered(n, &[racks, pods], &[2.0, 4.0]).map_err(|e| e.to_string())
+    }
+}
+
+/// Aggregate timing of every span sharing one name.
+#[derive(Debug, Clone)]
+pub struct PhaseStat {
+    /// Span name (e.g. `planner.replicate`).
+    pub name: String,
+    /// Number of spans recorded under this name.
+    pub count: u64,
+    /// Summed duration (µs).
+    pub total_us: u64,
+    /// Longest single span (µs).
+    pub max_us: u64,
+}
+
+/// Result of one [`run_profile`] run.
+#[derive(Debug, Clone)]
+pub struct ProfileReport {
+    /// The config that was profiled.
+    pub config: ProfileConfig,
+    /// Human-readable topology description.
+    pub topology: String,
+    /// Per-phase aggregates, hottest (largest `total_us`) first.
+    pub phases: Vec<PhaseStat>,
+    /// Scheduled all-to-all time of the planned deployment (ms).
+    pub schedule_ms: f64,
+    /// The tracer that recorded the run — export via
+    /// [`Tracer::to_chrome_string`] / [`Tracer::to_jsonl`].
+    pub tracer: Tracer,
+}
+
+/// Group `spans` by name into [`PhaseStat`]s, hottest first (ties broken by
+/// name so the order is deterministic).
+pub fn aggregate_phases(spans: &[Span]) -> Vec<PhaseStat> {
+    let mut stats: Vec<PhaseStat> = Vec::new();
+    for s in spans {
+        match stats.iter_mut().find(|p| p.name == s.name) {
+            Some(p) => {
+                p.count += 1;
+                p.total_us += s.dur_us;
+                p.max_us = p.max_us.max(s.dur_us);
+            }
+            None => stats.push(PhaseStat {
+                name: s.name.clone(),
+                count: 1,
+                total_us: s.dur_us,
+                max_us: s.dur_us,
+            }),
+        }
+    }
+    stats.sort_by(|a, b| b.total_us.cmp(&a.total_us).then(a.name.cmp(&b.name)));
+    stats
+}
+
+fn fmt_us(us: u64) -> String {
+    if us < 1_000 {
+        format!("{us} µs")
+    } else if us < 1_000_000 {
+        format!("{:.2} ms", us as f64 / 1e3)
+    } else {
+        format!("{:.3} s", us as f64 / 1e6)
+    }
+}
+
+impl ProfileReport {
+    /// Render the per-phase breakdown as an aligned table. The `%` column is
+    /// relative to the summed root spans (nested phases overlap their
+    /// parents, so percentages do not add to 100).
+    pub fn render_table(&self) -> String {
+        let root_us: u64 = self
+            .tracer
+            .spans()
+            .iter()
+            .filter(|s| s.parent.is_none())
+            .map(|s| s.dur_us)
+            .sum();
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<32} {:>7} {:>12} {:>12} {:>7}\n",
+            "phase", "calls", "total", "max", "%"
+        ));
+        out.push_str(&"-".repeat(75));
+        out.push('\n');
+        for p in &self.phases {
+            let pct = if root_us > 0 {
+                100.0 * p.total_us as f64 / root_us as f64
+            } else {
+                0.0
+            };
+            out.push_str(&format!(
+                "{:<32} {:>7} {:>12} {:>12} {:>6.1}%\n",
+                p.name,
+                p.count,
+                fmt_us(p.total_us),
+                fmt_us(p.max_us),
+                pct
+            ));
+        }
+        out
+    }
+}
+
+/// Plan (and, with `replicas ≥ 2`, replicate) a synthetic Zipf workload on
+/// the derived topology, schedule the planned deployment's all-to-all, and
+/// aggregate the recorded spans into a [`ProfileReport`].
+pub fn run_profile(config: &ProfileConfig) -> Result<ProfileReport, String> {
+    if config.gpus < 2 {
+        return Err("profile needs at least 2 GPUs".into());
+    }
+    let tr = Tracer::wall();
+    let cluster = Cluster::homogeneous(config.gpus, PROFILE_BW);
+    let topo = config.topology()?;
+    let trace: ModelTrace = skewed_workload(config.gpus, 2, 512, config.skew, config.seed);
+    let refs = [&trace];
+    let planner = Planner::default();
+
+    // Plan — the replicated path re-plans the base deployment internally, so
+    // one call traces placement, refinement, and (if enabled) replication.
+    let agg = if config.replicas >= 2 {
+        let rep_cfg = ReplicationConfig {
+            max_replicas: config.replicas,
+            ..ReplicationConfig::default()
+        };
+        let (rep, splits) = planner
+            .plan_replicated_topology_traced(&refs, &cluster, &topo, &rep_cfg, &tr)
+            .map_err(|e| e.to_string())?;
+        rep.aggregated_traffic_split(&[&trace.layers[0]], &splits)
+    } else {
+        let dep = planner
+            .plan_topology_traced(&refs, &cluster, &topo, &tr)
+            .map_err(|e| e.to_string())?;
+        dep.aggregated_traffic(&[&trace.layers[0]])
+    };
+
+    // Schedule the planned placement's all-to-all.
+    let schedule_ms = match &topo {
+        Topology::BigSwitch => {
+            let sched = aurora_schedule_traced(&agg, &tr);
+            sched.makespan_tokens() as f64 / PROFILE_BW
+        }
+        _ => {
+            hierarchical_schedule_traced(&agg, &cluster, &topo, &tr)
+                .map_err(|e| e.to_string())?
+                .pipelined_ms
+        }
+    };
+
+    let topology = match &topo {
+        Topology::BigSwitch => "big switch".to_string(),
+        Topology::TwoTier {
+            groups,
+            oversubscription,
+        } => format!(
+            "two-tier, {} groups, x{:.1} uplinks",
+            groups.len(),
+            oversubscription
+        ),
+        Topology::Tiered { levels } => {
+            let desc: Vec<String> = levels
+                .iter()
+                .map(|lv| format!("{} groups x{:.1}", lv.groups.len(), lv.oversubscription))
+                .collect();
+            format!("{}-level tiered ({})", levels.len(), desc.join(", "))
+        }
+    };
+    let phases = aggregate_phases(&tr.spans());
+    Ok(ProfileReport {
+        config: config.clone(),
+        topology,
+        phases,
+        schedule_ms,
+        tracer: tr,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::tracer::parse_chrome_trace;
+
+    #[test]
+    fn topology_derivation_tracks_the_gpu_count() {
+        let shape = |gpus: usize| ProfileConfig {
+            gpus,
+            ..ProfileConfig::default()
+        };
+        assert!(matches!(shape(8).topology().unwrap(), Topology::BigSwitch));
+        assert!(matches!(
+            shape(64).topology().unwrap(),
+            Topology::TwoTier { .. }
+        ));
+        assert!(matches!(
+            shape(128).topology().unwrap(),
+            Topology::Tiered { .. }
+        ));
+    }
+
+    #[test]
+    fn small_profile_run_produces_phases_and_a_parsable_trace() {
+        let cfg = ProfileConfig {
+            gpus: 16,
+            ..ProfileConfig::default()
+        };
+        let report = run_profile(&cfg).unwrap();
+        assert!(report.schedule_ms > 0.0);
+        assert!(!report.phases.is_empty());
+        // replication was on, so its phase must appear
+        assert!(report.phases.iter().any(|p| p.name == "planner.replicate"));
+        let table = report.render_table();
+        assert!(table.contains("planner.replicate"), "{table}");
+        // the recorded trace round-trips through the Chrome export
+        let parsed = parse_chrome_trace(&report.tracer.to_chrome_string()).unwrap();
+        assert_eq!(parsed.len(), report.tracer.spans().len());
+    }
+
+    #[test]
+    fn replicas_1_skips_the_replication_pass() {
+        let cfg = ProfileConfig {
+            gpus: 16,
+            replicas: 1,
+            ..ProfileConfig::default()
+        };
+        let report = run_profile(&cfg).unwrap();
+        assert!(report.phases.iter().all(|p| p.name != "planner.replicate"));
+        assert!(report
+            .phases
+            .iter()
+            .any(|p| p.name == "planner.plan_topology"));
+    }
+
+    #[test]
+    fn aggregation_sums_counts_and_keeps_the_hottest_first() {
+        let tr = Tracer::sim();
+        let a = tr.begin("a");
+        tr.set_sim_time_us(10);
+        tr.end(a);
+        let b = tr.begin("b");
+        tr.set_sim_time_us(40);
+        tr.end(b);
+        let a2 = tr.begin("a");
+        tr.set_sim_time_us(45);
+        tr.end(a2);
+        let phases = aggregate_phases(&tr.spans());
+        assert_eq!(phases.len(), 2);
+        assert_eq!(phases[0].name, "b");
+        assert_eq!(phases[0].total_us, 30);
+        assert_eq!(phases[1].name, "a");
+        assert_eq!(phases[1].count, 2);
+        assert_eq!(phases[1].total_us, 15);
+        assert_eq!(phases[1].max_us, 10);
+    }
+}

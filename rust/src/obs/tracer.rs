@@ -1,0 +1,586 @@
+//! Span tracing with an injectable clock.
+//!
+//! A [`Tracer`] records a tree of begin/end **spans** — named, timestamped
+//! intervals carrying string labels and integer counters — plus the
+//! [`DecisionRecord`]s emitted through it. Two clocks are supported:
+//!
+//! * **wall clock** ([`Tracer::wall`]) — spans are timed with
+//!   [`std::time::Instant`] relative to the tracer's creation; this is what
+//!   the planner and the `profile` subcommand use.
+//! * **sim time** ([`Tracer::sim`]) — the discrete-event simulators *drive*
+//!   the clock ([`Tracer::set_sim_time_us`]), so two runs of the same seeded
+//!   simulation produce **byte-identical** traces: diffable, committable,
+//!   assertable.
+//!
+//! A **disabled** tracer ([`Tracer::disabled`], also [`Default`]) is a
+//! no-op: every call returns immediately, so instrumented hot paths cost one
+//! `Option` check when tracing is off. Tracing is strictly observational —
+//! no planner or scheduler decision ever reads tracer state — which is what
+//! the tracing-on/off bit-for-bit property test pins.
+//!
+//! Export targets:
+//! * [`Tracer::to_chrome_string`] — Chrome trace-event-format JSON
+//!   (`chrome://tracing`, <https://ui.perfetto.dev>): spans as complete
+//!   (`"ph":"X"`) events, decisions as instant (`"ph":"i"`) events;
+//! * [`Tracer::to_jsonl`] — one JSON record per line for `grep`/`jq`;
+//! * [`parse_chrome_trace`] — the inverse of the Chrome export for spans,
+//!   used by the round-trip test (emit → serialize → parse → identical).
+
+use super::decision::DecisionRecord;
+use crate::util::Json;
+use std::cell::RefCell;
+use std::rc::Rc;
+use std::time::Instant;
+
+/// One completed (or still-open) span.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Span {
+    /// Span name, dot-namespaced by subsystem (e.g. `"planner.refine"`).
+    pub name: String,
+    /// Start time (µs, tracer clock).
+    pub start_us: u64,
+    /// Duration (µs); `0` until the span ends.
+    pub dur_us: u64,
+    /// Index of the enclosing span in the tracer's span list.
+    pub parent: Option<usize>,
+    /// Nesting depth (root = 0). Derived from `parent`.
+    pub depth: u32,
+    /// Track (Chrome `tid`) the span renders on; lets one trace carry
+    /// several side-by-side timelines (e.g. one per serving strategy).
+    pub track: u32,
+    /// String labels, in insertion order.
+    pub labels: Vec<(String, String)>,
+    /// Integer counters, in insertion order.
+    pub counters: Vec<(String, i64)>,
+}
+
+#[derive(Debug)]
+enum ClockSource {
+    /// Wall clock anchored at tracer creation.
+    Wall(Instant),
+    /// Simulation time, advanced explicitly (µs).
+    Sim(u64),
+}
+
+#[derive(Debug)]
+struct TracerInner {
+    clock: ClockSource,
+    spans: Vec<Span>,
+    /// Stack of open span indices (the top is the current parent).
+    open: Vec<usize>,
+    decisions: Vec<DecisionRecord>,
+    track: u32,
+}
+
+impl TracerInner {
+    fn now_us(&self) -> u64 {
+        match &self.clock {
+            ClockSource::Wall(anchor) => anchor.elapsed().as_micros() as u64,
+            ClockSource::Sim(t) => *t,
+        }
+    }
+}
+
+/// Identifier of a span within its tracer. The disabled tracer hands out an
+/// inert sentinel, so ids can be passed around without enablement checks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpanId(usize);
+
+const NO_SPAN: usize = usize::MAX;
+
+/// Cheap-to-clone tracing handle (clones share the underlying buffer).
+/// See the module docs for the span model and the clock contract.
+#[derive(Debug, Clone, Default)]
+pub struct Tracer(Option<Rc<RefCell<TracerInner>>>);
+
+impl Tracer {
+    /// The no-op tracer: records nothing, costs one `Option` check per call.
+    pub fn disabled() -> Tracer {
+        Tracer(None)
+    }
+
+    /// Wall-clock tracer (timestamps relative to this call).
+    pub fn wall() -> Tracer {
+        Tracer::with_clock(ClockSource::Wall(Instant::now()))
+    }
+
+    /// Sim-time tracer starting at t = 0 µs; advance it with
+    /// [`Tracer::set_sim_time_us`].
+    pub fn sim() -> Tracer {
+        Tracer::with_clock(ClockSource::Sim(0))
+    }
+
+    fn with_clock(clock: ClockSource) -> Tracer {
+        Tracer(Some(Rc::new(RefCell::new(TracerInner {
+            clock,
+            spans: Vec::new(),
+            open: Vec::new(),
+            decisions: Vec::new(),
+            track: 1,
+        }))))
+    }
+
+    /// Whether this tracer records anything.
+    pub fn is_enabled(&self) -> bool {
+        self.0.is_some()
+    }
+
+    /// Advance a sim-time tracer's clock to `t_us`. No-op on wall-clock and
+    /// disabled tracers (the wall clock cannot be steered).
+    pub fn set_sim_time_us(&self, t_us: u64) {
+        if let Some(inner) = &self.0 {
+            let mut inner = inner.borrow_mut();
+            if let ClockSource::Sim(t) = &mut inner.clock {
+                *t = t_us;
+            }
+        }
+    }
+
+    /// Set the track (Chrome `tid`) newly begun spans render on.
+    pub fn set_track(&self, track: u32) {
+        if let Some(inner) = &self.0 {
+            inner.borrow_mut().track = track;
+        }
+    }
+
+    /// Current time on the tracer's clock (µs); 0 when disabled.
+    pub fn now_us(&self) -> u64 {
+        match &self.0 {
+            Some(inner) => inner.borrow().now_us(),
+            None => 0,
+        }
+    }
+
+    /// Open a span. Pair with [`Tracer::end`], or prefer [`Tracer::span`]
+    /// for scope-shaped regions.
+    pub fn begin(&self, name: &str) -> SpanId {
+        let Some(inner) = &self.0 else {
+            return SpanId(NO_SPAN);
+        };
+        let mut inner = inner.borrow_mut();
+        let now = inner.now_us();
+        let parent = inner.open.last().copied();
+        let depth = inner.open.len() as u32;
+        let track = inner.track;
+        let idx = inner.spans.len();
+        inner.spans.push(Span {
+            name: name.to_string(),
+            start_us: now,
+            dur_us: 0,
+            parent,
+            depth,
+            track,
+            labels: Vec::new(),
+            counters: Vec::new(),
+        });
+        inner.open.push(idx);
+        SpanId(idx)
+    }
+
+    /// Close a span (its duration becomes now − start).
+    pub fn end(&self, id: SpanId) {
+        let Some(inner) = &self.0 else {
+            return;
+        };
+        if id.0 == NO_SPAN {
+            return;
+        }
+        let mut inner = inner.borrow_mut();
+        let now = inner.now_us();
+        if let Some(pos) = inner.open.iter().rposition(|&i| i == id.0) {
+            inner.open.remove(pos);
+        }
+        let span = &mut inner.spans[id.0];
+        span.dur_us = now.saturating_sub(span.start_us);
+    }
+
+    /// RAII span: opens now, ends when the returned scope drops.
+    pub fn span(&self, name: &str) -> SpanScope {
+        SpanScope {
+            tracer: self.clone(),
+            id: self.begin(name),
+        }
+    }
+
+    /// Attach a string label to an open or closed span.
+    pub fn label(&self, id: SpanId, key: &str, value: &str) {
+        let Some(inner) = &self.0 else {
+            return;
+        };
+        if id.0 == NO_SPAN {
+            return;
+        }
+        inner.borrow_mut().spans[id.0]
+            .labels
+            .push((key.to_string(), value.to_string()));
+    }
+
+    /// Add `delta` to an integer counter on a span (created at 0 on first
+    /// touch; insertion order is preserved).
+    pub fn counter(&self, id: SpanId, key: &str, delta: i64) {
+        let Some(inner) = &self.0 else {
+            return;
+        };
+        if id.0 == NO_SPAN {
+            return;
+        }
+        let mut inner = inner.borrow_mut();
+        let counters = &mut inner.spans[id.0].counters;
+        match counters.iter_mut().find(|(k, _)| k == key) {
+            Some((_, v)) => *v += delta,
+            None => counters.push((key.to_string(), delta)),
+        }
+    }
+
+    /// Record a structured decision at the current clock time.
+    pub fn decision(&self, kind: &str, fields: Vec<(&str, Json)>) {
+        let Some(inner) = &self.0 else {
+            return;
+        };
+        let mut inner = inner.borrow_mut();
+        let t_us = inner.now_us();
+        inner.decisions.push(DecisionRecord {
+            t_us,
+            kind: kind.to_string(),
+            fields: fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect(),
+        });
+    }
+
+    /// Snapshot of all spans recorded so far (creation order).
+    pub fn spans(&self) -> Vec<Span> {
+        match &self.0 {
+            Some(inner) => inner.borrow().spans.clone(),
+            None => Vec::new(),
+        }
+    }
+
+    /// Snapshot of all decision records (emission order).
+    pub fn decisions(&self) -> Vec<DecisionRecord> {
+        match &self.0 {
+            Some(inner) => inner.borrow().decisions.clone(),
+            None => Vec::new(),
+        }
+    }
+
+    /// Chrome trace-event-format document. Spans become complete events
+    /// (`"ph":"X"`, timestamps in µs); each carries `args.seq`/`args.parent`
+    /// so [`parse_chrome_trace`] reconstructs the exact span tree. Decisions
+    /// become instant events (`"ph":"i"`).
+    pub fn to_chrome_trace(&self) -> Json {
+        let mut events: Vec<Json> = Vec::new();
+        for (i, s) in self.spans().iter().enumerate() {
+            let parent = match s.parent {
+                Some(p) => Json::Num(p as f64),
+                None => Json::Num(-1.0),
+            };
+            let args = Json::obj(vec![
+                ("seq", Json::from(i)),
+                ("parent", parent),
+                ("labels", pairs_str(&s.labels)),
+                ("counters", pairs_i64(&s.counters)),
+            ]);
+            events.push(Json::obj(vec![
+                ("name", Json::from(s.name.as_str())),
+                ("cat", Json::from("aurora")),
+                ("ph", Json::from("X")),
+                ("ts", Json::from(s.start_us)),
+                ("dur", Json::from(s.dur_us)),
+                ("pid", Json::from(1u64)),
+                ("tid", Json::from(s.track as u64)),
+                ("args", args),
+            ]));
+        }
+        for d in self.decisions() {
+            let fields = Json::Arr(
+                d.fields
+                    .iter()
+                    .map(|(k, v)| Json::Arr(vec![Json::from(k.as_str()), v.clone()]))
+                    .collect(),
+            );
+            events.push(Json::obj(vec![
+                ("name", Json::from(d.kind.as_str())),
+                ("cat", Json::from("decision")),
+                ("ph", Json::from("i")),
+                ("s", Json::from("g")),
+                ("ts", Json::from(d.t_us)),
+                ("pid", Json::from(1u64)),
+                ("tid", Json::from(1u64)),
+                ("args", Json::obj(vec![("fields", fields)])),
+            ]));
+        }
+        Json::obj(vec![
+            ("displayTimeUnit", Json::from("ms")),
+            ("traceEvents", Json::Arr(events)),
+        ])
+    }
+
+    /// [`Tracer::to_chrome_trace`] serialized compactly. Deterministic for a
+    /// sim-time tracer (object keys are ordered, numbers format stably).
+    pub fn to_chrome_string(&self) -> String {
+        self.to_chrome_trace().to_string_compact()
+    }
+
+    /// JSONL export: one record per line — spans (creation order) then
+    /// decisions (emission order), each self-describing via `"type"`.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for (i, s) in self.spans().iter().enumerate() {
+            let parent = match s.parent {
+                Some(p) => Json::Num(p as f64),
+                None => Json::Null,
+            };
+            let line = Json::obj(vec![
+                ("type", Json::from("span")),
+                ("seq", Json::from(i)),
+                ("name", Json::from(s.name.as_str())),
+                ("ts_us", Json::from(s.start_us)),
+                ("dur_us", Json::from(s.dur_us)),
+                ("parent", parent),
+                ("track", Json::from(s.track as u64)),
+                ("labels", pairs_str(&s.labels)),
+                ("counters", pairs_i64(&s.counters)),
+            ]);
+            out.push_str(&line.to_string_compact());
+            out.push('\n');
+        }
+        for d in self.decisions() {
+            out.push_str(&d.to_json().to_string_compact());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// RAII guard returned by [`Tracer::span`]; ends the span on drop.
+#[derive(Debug)]
+pub struct SpanScope {
+    tracer: Tracer,
+    id: SpanId,
+}
+
+impl SpanScope {
+    /// The guarded span's id, for attaching labels and counters.
+    pub fn id(&self) -> SpanId {
+        self.id
+    }
+}
+
+impl Drop for SpanScope {
+    fn drop(&mut self) {
+        self.tracer.end(self.id);
+    }
+}
+
+fn pairs_str(pairs: &[(String, String)]) -> Json {
+    Json::Arr(
+        pairs
+            .iter()
+            .map(|(k, v)| Json::Arr(vec![Json::from(k.as_str()), Json::from(v.as_str())]))
+            .collect(),
+    )
+}
+
+fn pairs_i64(pairs: &[(String, i64)]) -> Json {
+    Json::Arr(
+        pairs
+            .iter()
+            .map(|(k, v)| Json::Arr(vec![Json::from(k.as_str()), Json::Num(*v as f64)]))
+            .collect(),
+    )
+}
+
+fn parse_pairs_str(v: Option<&Json>) -> Result<Vec<(String, String)>, String> {
+    let arr = v
+        .and_then(|j| j.as_arr())
+        .ok_or_else(|| "missing label array".to_string())?;
+    arr.iter()
+        .map(|pair| {
+            let kv = pair.as_arr().ok_or("label pair is not an array")?;
+            match (kv.first().and_then(|k| k.as_str()), kv.get(1).and_then(|x| x.as_str())) {
+                (Some(k), Some(x)) => Ok((k.to_string(), x.to_string())),
+                _ => Err("label pair is not [string, string]".to_string()),
+            }
+        })
+        .collect()
+}
+
+fn parse_pairs_i64(v: Option<&Json>) -> Result<Vec<(String, i64)>, String> {
+    let arr = v
+        .and_then(|j| j.as_arr())
+        .ok_or_else(|| "missing counter array".to_string())?;
+    arr.iter()
+        .map(|pair| {
+            let kv = pair.as_arr().ok_or("counter pair is not an array")?;
+            match (kv.first().and_then(|k| k.as_str()), kv.get(1).and_then(|x| x.as_f64())) {
+                (Some(k), Some(x)) => Ok((k.to_string(), x as i64)),
+                _ => Err("counter pair is not [string, number]".to_string()),
+            }
+        })
+        .collect()
+}
+
+/// Parse a Chrome trace-event document produced by
+/// [`Tracer::to_chrome_trace`] back into its span list — the inverse used by
+/// the export round-trip test. Instant (decision) events are skipped; spans
+/// are returned in their original creation (`args.seq`) order with the
+/// parent/depth tree reconstructed.
+pub fn parse_chrome_trace(text: &str) -> Result<Vec<Span>, String> {
+    let doc = Json::parse(text).map_err(|e| e.to_string())?;
+    let events = doc
+        .get("traceEvents")
+        .and_then(|e| e.as_arr())
+        .ok_or("no traceEvents array")?;
+    let mut spans: Vec<(usize, Span)> = Vec::new();
+    for ev in events {
+        if ev.get("ph").and_then(|p| p.as_str()) != Some("X") {
+            continue;
+        }
+        let name = ev
+            .get("name")
+            .and_then(|n| n.as_str())
+            .ok_or("span event without a name")?
+            .to_string();
+        let start_us = ev.get("ts").and_then(|t| t.as_u64()).ok_or("span without ts")?;
+        let dur_us = ev.get("dur").and_then(|d| d.as_u64()).ok_or("span without dur")?;
+        let track = ev.get("tid").and_then(|t| t.as_u64()).unwrap_or(1) as u32;
+        let args = ev.get("args").ok_or("span without args")?;
+        let seq = args
+            .get("seq")
+            .and_then(|s| s.as_u64())
+            .ok_or("span without args.seq")? as usize;
+        let parent = match args.get("parent").and_then(|p| p.as_f64()) {
+            Some(p) if p >= 0.0 => Some(p as usize),
+            Some(_) => None,
+            None => return Err("span without args.parent".to_string()),
+        };
+        let labels = parse_pairs_str(args.get("labels"))?;
+        let counters = parse_pairs_i64(args.get("counters"))?;
+        spans.push((
+            seq,
+            Span {
+                name,
+                start_us,
+                dur_us,
+                parent,
+                depth: 0,
+                track,
+                labels,
+                counters,
+            },
+        ));
+    }
+    spans.sort_by_key(|(seq, _)| *seq);
+    for (pos, (seq, _)) in spans.iter().enumerate() {
+        if *seq != pos {
+            return Err(format!("span seq {seq} out of order (expected {pos})"));
+        }
+    }
+    let mut out: Vec<Span> = spans.into_iter().map(|(_, s)| s).collect();
+    // Depth is derived: parents always precede children in seq order.
+    for i in 0..out.len() {
+        let depth = match out[i].parent {
+            Some(p) if p < i => out[p].depth + 1,
+            Some(p) => return Err(format!("span {i} references later parent {p}")),
+            None => 0,
+        };
+        out[i].depth = depth;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_tracer_is_inert() {
+        let tr = Tracer::disabled();
+        assert!(!tr.is_enabled());
+        let id = tr.begin("x");
+        tr.counter(id, "n", 3);
+        tr.label(id, "k", "v");
+        tr.end(id);
+        tr.decision("d", vec![("a", Json::from(1u64))]);
+        assert!(tr.spans().is_empty());
+        assert!(tr.decisions().is_empty());
+        assert_eq!(tr.to_jsonl(), "");
+    }
+
+    #[test]
+    fn sim_clock_drives_span_times() {
+        let tr = Tracer::sim();
+        tr.set_sim_time_us(100);
+        let outer = tr.begin("outer");
+        tr.set_sim_time_us(150);
+        let inner = tr.begin("inner");
+        tr.counter(inner, "tokens", 7);
+        tr.counter(inner, "tokens", 5);
+        tr.set_sim_time_us(200);
+        tr.end(inner);
+        tr.set_sim_time_us(300);
+        tr.end(outer);
+        let spans = tr.spans();
+        assert_eq!(spans.len(), 2);
+        assert_eq!(spans[0].start_us, 100);
+        assert_eq!(spans[0].dur_us, 200);
+        assert_eq!(spans[0].parent, None);
+        assert_eq!(spans[1].start_us, 150);
+        assert_eq!(spans[1].dur_us, 50);
+        assert_eq!(spans[1].parent, Some(0));
+        assert_eq!(spans[1].depth, 1);
+        assert_eq!(spans[1].counters, vec![("tokens".to_string(), 12)]);
+    }
+
+    #[test]
+    fn span_scope_ends_on_drop() {
+        let tr = Tracer::sim();
+        {
+            let sp = tr.span("scoped");
+            tr.label(sp.id(), "phase", "one");
+            tr.set_sim_time_us(40);
+        }
+        let spans = tr.spans();
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].dur_us, 40);
+        assert_eq!(spans[0].labels, vec![("phase".to_string(), "one".to_string())]);
+    }
+
+    #[test]
+    fn chrome_round_trip_preserves_the_span_tree() {
+        let tr = Tracer::sim();
+        let a = tr.begin("a");
+        tr.set_sim_time_us(10);
+        let b = tr.begin("b");
+        tr.label(b, "z_last", "1");
+        tr.label(b, "a_first", "2"); // order ≠ sorted order: must survive
+        tr.counter(b, "count", 5);
+        tr.set_sim_time_us(20);
+        tr.end(b);
+        tr.end(a);
+        tr.decision("gate", vec![("verdict", Json::from("keep"))]);
+        let text = tr.to_chrome_string();
+        let parsed = parse_chrome_trace(&text).unwrap();
+        assert_eq!(parsed, tr.spans());
+    }
+
+    #[test]
+    fn wall_clock_spans_have_monotone_times() {
+        let tr = Tracer::wall();
+        let id = tr.begin("w");
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        tr.end(id);
+        let spans = tr.spans();
+        assert!(spans[0].dur_us >= 1_000, "slept 2 ms, span {} µs", spans[0].dur_us);
+        // steering the sim clock is a no-op on a wall tracer
+        tr.set_sim_time_us(0);
+    }
+
+    #[test]
+    fn clones_share_the_buffer() {
+        let tr = Tracer::sim();
+        let clone = tr.clone();
+        let id = clone.begin("shared");
+        clone.end(id);
+        assert_eq!(tr.spans().len(), 1);
+    }
+}

@@ -23,6 +23,7 @@ use crate::assignment::sorted_assignment;
 use crate::cluster::{Cluster, Topology};
 use crate::colocation::hetero::decoupled_solution;
 use crate::colocation::{case2_pairing, send_recv_volumes};
+use crate::obs::Tracer;
 use crate::placement::{DeltaEstimator, Deployment};
 use crate::replication::{
     estimate_objective_on, optimize_splits, refine_replicated, ReplicaDeltaEstimator,
@@ -266,15 +267,34 @@ impl Planner {
         traces: &[&ModelTrace],
         cluster: &Cluster,
     ) -> Result<Deployment, PlacementError> {
+        self.plan_multi_traced(traces, cluster, &Tracer::disabled())
+    }
+
+    /// [`Planner::plan_multi`] with span tracing and per-phase decision
+    /// records emitted through `tr`. Tracing is purely observational: with
+    /// `tr` disabled this *is* `plan_multi`, and with it enabled the result
+    /// is bit-for-bit identical (pinned by the tracing-on/off property
+    /// test).
+    pub fn plan_multi_traced(
+        &self,
+        traces: &[&ModelTrace],
+        cluster: &Cluster,
+        tr: &Tracer,
+    ) -> Result<Deployment, PlacementError> {
+        let sp = tr.span("planner.plan_multi");
+        tr.counter(sp.id(), "models", traces.len() as i64);
+        tr.counter(sp.id(), "gpus", cluster.len() as i64);
         let m = traces.len();
         let scenario = Scenario::detect(m, cluster)?;
         let n_gpus = cluster.len();
 
         // Exact paper paths for the paper's shapes.
         if m == 1 && traces[0].n_experts() == n_gpus {
+            tr.label(sp.id(), "path", "exclusive");
             return Ok(self.plan_exclusive(traces[0], cluster).to_deployment());
         }
         if m == 2 && traces[0].n_experts() == n_gpus && traces[1].n_experts() == n_gpus {
+            tr.label(sp.id(), "path", "colocated");
             return Ok(self
                 .plan_colocated(traces[0], traces[1], cluster)
                 .to_deployment());
@@ -287,13 +307,15 @@ impl Planner {
         let layers: Vec<&MoeLayerStats> = totals.iter().collect();
 
         let assignments = if traces.iter().all(|t| t.n_experts() == n_gpus) {
-            stacked_pairing_assignments(&layers, cluster)
+            tr.label(sp.id(), "path", "stacked_pairing");
+            stacked_pairing_assignments(&layers, cluster, tr)
         } else {
-            greedy_lpt_assignments(traces, cluster)
+            tr.label(sp.id(), "path", "greedy_lpt");
+            greedy_lpt_assignments(traces, cluster, tr)
         };
 
         let mut dep = Deployment::new(n_gpus, assignments, self.policy, scenario)?;
-        refine_deployment(&mut dep, &layers, cluster, &Topology::BigSwitch);
+        refine_deployment(&mut dep, &layers, cluster, &Topology::BigSwitch, tr);
         Ok(dep)
     }
 
@@ -322,6 +344,25 @@ impl Planner {
         cluster: &Cluster,
         topo: &Topology,
     ) -> Result<Deployment, PlacementError> {
+        self.plan_topology_traced(traces, cluster, topo, &Tracer::disabled())
+    }
+
+    /// [`Planner::plan_topology`] with tracing through `tr` (observational
+    /// only — results are bit-for-bit those of `plan_topology`).
+    pub fn plan_topology_traced(
+        &self,
+        traces: &[&ModelTrace],
+        cluster: &Cluster,
+        topo: &Topology,
+        tr: &Tracer,
+    ) -> Result<Deployment, PlacementError> {
+        let sp = tr.span("planner.plan_topology");
+        let topo_name = match topo {
+            Topology::BigSwitch => "big_switch",
+            Topology::TwoTier { .. } => "two_tier",
+            Topology::Tiered { .. } => "tiered",
+        };
+        tr.label(sp.id(), "topology", topo_name);
         // Typed validation up front: a grouping that does not cover this
         // cluster is a caller error surfaced here, not a panic several
         // frames deep in the refinement or the scheduler.
@@ -330,18 +371,18 @@ impl Planner {
             .map_err(|e| PlacementError::InvalidTopology {
                 message: e.to_string(),
             })?;
-        let mut dep = self.plan_multi(traces, cluster)?;
+        let mut dep = self.plan_multi_traced(traces, cluster, tr)?;
         if matches!(topo, Topology::BigSwitch) {
             return Ok(dep);
         }
         let totals = aggregate_totals(traces);
         let layers: Vec<&MoeLayerStats> = totals.iter().collect();
         if matches!(topo, Topology::Tiered { .. }) {
-            refine_uplink_tiered(&mut dep, &layers, cluster, topo);
+            refine_uplink_tiered(&mut dep, &layers, cluster, topo, tr);
         } else {
-            refine_uplink(&mut dep, &layers, cluster, topo);
+            refine_uplink(&mut dep, &layers, cluster, topo, tr);
         }
-        refine_deployment(&mut dep, &layers, cluster, topo);
+        refine_deployment(&mut dep, &layers, cluster, topo, tr);
         Ok(dep)
     }
 
@@ -370,7 +411,19 @@ impl Planner {
         cluster: &Cluster,
         cfg: &ReplicationConfig,
     ) -> Result<(ReplicatedDeployment, SplitPlan), PlacementError> {
-        self.plan_replicated_on(traces, cluster, &Topology::BigSwitch, cfg)
+        self.plan_replicated_on(traces, cluster, &Topology::BigSwitch, cfg, &Tracer::disabled())
+    }
+
+    /// [`Planner::plan_replicated`] with tracing through `tr` (observational
+    /// only — results are bit-for-bit those of `plan_replicated`).
+    pub fn plan_replicated_traced(
+        &self,
+        traces: &[&ModelTrace],
+        cluster: &Cluster,
+        cfg: &ReplicationConfig,
+        tr: &Tracer,
+    ) -> Result<(ReplicatedDeployment, SplitPlan), PlacementError> {
+        self.plan_replicated_on(traces, cluster, &Topology::BigSwitch, cfg, tr)
     }
 
     /// Topology-aware [`Planner::plan_replicated`]: the base placement comes
@@ -388,7 +441,20 @@ impl Planner {
         topo: &Topology,
         cfg: &ReplicationConfig,
     ) -> Result<(ReplicatedDeployment, SplitPlan), PlacementError> {
-        self.plan_replicated_on(traces, cluster, topo, cfg)
+        self.plan_replicated_on(traces, cluster, topo, cfg, &Tracer::disabled())
+    }
+
+    /// [`Planner::plan_replicated_topology`] with tracing through `tr`
+    /// (observational only — results are bit-for-bit identical).
+    pub fn plan_replicated_topology_traced(
+        &self,
+        traces: &[&ModelTrace],
+        cluster: &Cluster,
+        topo: &Topology,
+        cfg: &ReplicationConfig,
+        tr: &Tracer,
+    ) -> Result<(ReplicatedDeployment, SplitPlan), PlacementError> {
+        self.plan_replicated_on(traces, cluster, topo, cfg, tr)
     }
 
     /// The shared replication pipeline behind [`Planner::plan_replicated`] /
@@ -416,8 +482,10 @@ impl Planner {
         cluster: &Cluster,
         topo: &Topology,
         cfg: &ReplicationConfig,
+        tr: &Tracer,
     ) -> Result<(ReplicatedDeployment, SplitPlan), PlacementError> {
-        let base = self.plan_topology(traces, cluster, topo)?;
+        let base = self.plan_topology_traced(traces, cluster, topo, tr)?;
+        let sp = tr.span("planner.replicate");
         let mut rep = ReplicatedDeployment::from_deployment(base);
         if cfg.max_replicas <= 1 {
             let splits = SplitPlan::trivial(&rep);
@@ -438,6 +506,7 @@ impl Planner {
         // candidate set per iteration is what stops scaling first.
         let units_total: usize = (0..rep.n_models()).map(|m| rep.base.n_experts(m)).sum();
         let lazy = units_total * n > 1024;
+        tr.label(sp.id(), "mode", if lazy { "lazy_greedy" } else { "exhaustive" });
 
         // Lazy-greedy state: cached candidate bounds (objective after the
         // addition) in a min-heap, stamped with the commit version they
@@ -525,12 +594,22 @@ impl Planner {
                         let &(mx, stamp) = cache.get(&(m, e, g)).expect("swept above");
                         heap.push(Reverse(Cand { mx, m, e, g, stamp }));
                     }
+                    tr.decision(
+                        "planner.queue_rebuild",
+                        vec![
+                            ("hot_gpu", Json::from(hot_gpu)),
+                            ("candidates", Json::from(cands.len())),
+                            ("swept", Json::from(unseen.len())),
+                        ],
+                    );
+                    tr.counter(sp.id(), "queue_rebuilds", 1);
                     last_hot = Some(hot_gpu);
                 }
 
                 // CELF pop loop: re-price stale entries until the cheapest
                 // bound is fresh for the current committed state.
                 while let Some(Reverse(cand)) = heap.pop() {
+                    tr.counter(sp.id(), "queue_pops", 1);
                     let Cand { m, e, g, stamp, .. } = cand;
                     if rep.replicas[m][e].contains(&g)
                         || rep.replica_count(m, e) >= cfg.max_replicas
@@ -551,6 +630,17 @@ impl Planner {
                 Some(c) if c.mx < best * (1.0 - cfg.min_gain) => {
                     est.commit_add(c.m, c.e, c.g);
                     rep.replicas[c.m][c.e].push(c.g);
+                    tr.decision(
+                        "planner.replica_commit",
+                        vec![
+                            ("model", Json::from(c.m)),
+                            ("expert", Json::from(c.e)),
+                            ("gpu", Json::from(c.g)),
+                            ("objective_before", Json::from(best)),
+                            ("objective_after", Json::from(c.mx)),
+                        ],
+                    );
+                    tr.counter(sp.id(), "commits", 1);
                     best = est.objective();
                     version += 1;
                 }
@@ -655,7 +745,17 @@ impl Default for ReplicationConfig {
 fn stacked_pairing_assignments(
     layers: &[&MoeLayerStats],
     cluster: &Cluster,
+    tr: &Tracer,
 ) -> Vec<Vec<usize>> {
+    let sp = tr.span("planner.stacked_pairing");
+    tr.counter(sp.id(), "models", layers.len() as i64);
+    tr.decision(
+        "planner.phase",
+        vec![
+            ("phase", Json::from("stacked_pairing")),
+            ("models", Json::from(layers.len())),
+        ],
+    );
     let n = cluster.len();
     let a0: Vec<usize> = if cluster.is_homogeneous() {
         (0..n).collect()
@@ -682,7 +782,12 @@ fn stacked_pairing_assignments(
 /// `(model, expert)` units sorted heaviest-first, each placed on the GPU
 /// whose completion estimate after accepting it is smallest (faster GPUs
 /// absorb more load; ties prefer higher bandwidth, then lower GPU id).
-fn greedy_lpt_assignments(traces: &[&ModelTrace], cluster: &Cluster) -> Vec<Vec<usize>> {
+fn greedy_lpt_assignments(
+    traces: &[&ModelTrace],
+    cluster: &Cluster,
+    tr: &Tracer,
+) -> Vec<Vec<usize>> {
+    let sp = tr.span("planner.greedy_lpt");
     let n = cluster.len();
     let mut units: Vec<(usize, usize, u64)> = traces
         .iter()
@@ -695,6 +800,14 @@ fn greedy_lpt_assignments(traces: &[&ModelTrace], cluster: &Cluster) -> Vec<Vec<
         })
         .collect();
     units.sort_by_key(|&(m, e, l)| (std::cmp::Reverse(l), m, e));
+    tr.counter(sp.id(), "units", units.len() as i64);
+    tr.decision(
+        "planner.phase",
+        vec![
+            ("phase", Json::from("greedy_lpt")),
+            ("units", Json::from(units.len())),
+        ],
+    );
 
     let mut acc = vec![0.0f64; n];
     let mut assignments: Vec<Vec<usize>> = traces
@@ -744,10 +857,12 @@ fn refine_uplink(
     layers: &[&MoeLayerStats],
     cluster: &Cluster,
     topo: &Topology,
+    tr: &Tracer,
 ) {
     if matches!(topo, Topology::BigSwitch) {
         return;
     }
+    let sp = tr.span("planner.refine_uplink");
     let n = dep.n_gpus;
     let units: Vec<(usize, usize)> = (0..dep.n_models())
         .flat_map(|m| (0..dep.n_experts(m)).map(move |e| (m, e)))
@@ -762,7 +877,7 @@ fn refine_uplink(
         cand + 1e-12 < best || (cand <= best + 1e-9 && nd + 1e-9 < best_drain)
     };
 
-    for _ in 0..8 {
+    for round in 0..8usize {
         let mut improved = false;
         for &(m, e) in &units {
             let cur = dep.assignments[m][e];
@@ -807,6 +922,16 @@ fn refine_uplink(
                 }
             }
         }
+        tr.counter(sp.id(), "rounds", 1);
+        tr.decision(
+            "planner.uplink_round",
+            vec![
+                ("round", Json::from(round)),
+                ("port_ms", Json::from(best_port)),
+                ("drain_ms", Json::from(best_drain)),
+                ("improved", Json::from(improved)),
+            ],
+        );
         if !improved {
             break;
         }
@@ -839,12 +964,15 @@ fn refine_uplink_tiered(
     layers: &[&MoeLayerStats],
     cluster: &Cluster,
     topo: &Topology,
+    tr: &Tracer,
 ) {
     let n = dep.n_gpus;
     let l = topo.n_levels();
     if l == 0 {
         return;
     }
+    let sp = tr.span("planner.refine_uplink_tiered");
+    tr.counter(sp.id(), "levels", l as i64);
     let owners: Vec<Vec<usize>> = (0..l)
         .map(|t| topo.owners_at(n, t).expect("validated by plan_topology"))
         .collect();
@@ -883,7 +1011,7 @@ fn refine_uplink_tiered(
         cand + 1e-12 < best || (cand <= best + 1e-9 && nd + 1e-9 < best_drain)
     };
 
-    for _ in 0..8 {
+    for round in 0..8usize {
         let mut improved = false;
         for t in (0..l).rev() {
             for &(m, e) in &units {
@@ -917,6 +1045,17 @@ fn refine_uplink_tiered(
                 }
             }
         }
+        tr.counter(sp.id(), "rounds", 1);
+        tr.decision(
+            "planner.uplink_round",
+            vec![
+                ("round", Json::from(round)),
+                ("tiered", Json::from(true)),
+                ("port_ms", Json::from(best_port)),
+                ("drain_ms", Json::from(best_drain)),
+                ("improved", Json::from(improved)),
+            ],
+        );
         if !improved {
             break;
         }
@@ -948,7 +1087,9 @@ fn refine_deployment(
     layers: &[&MoeLayerStats],
     cluster: &Cluster,
     topo: &Topology,
+    tr: &Tracer,
 ) {
+    let sp = tr.span("planner.refine");
     let n = dep.n_gpus;
     let units: Vec<(usize, usize)> = (0..dep.n_models())
         .flat_map(|m| (0..dep.n_experts(m)).map(move |e| (m, e)))
@@ -960,7 +1101,7 @@ fn refine_deployment(
 
     let is_hot = |est: &DeltaEstimator, best: f64, g: usize| est.cost(g) >= best - 1e-9;
 
-    for _ in 0..8 {
+    for round in 0..8usize {
         let mut improved = false;
         for &(m, e) in &units {
             let cur = dep.assignments[m][e];
@@ -1009,6 +1150,16 @@ fn refine_deployment(
                 }
             }
         }
+        tr.counter(sp.id(), "rounds", 1);
+        tr.decision(
+            "planner.refine_round",
+            vec![
+                ("round", Json::from(round)),
+                ("bottleneck_ms", Json::from(best)),
+                ("drain_ms", Json::from(cur_drain)),
+                ("improved", Json::from(improved)),
+            ],
+        );
         if !improved {
             break;
         }
@@ -1600,7 +1751,7 @@ mod tests {
             let layers: Vec<&MoeLayerStats> = totals.iter().collect();
             let drain_before = uplink_bound(&dep.aggregated_traffic(&layers), &cluster, &topo);
             let port_before = crate::placement::estimate_bottleneck(&dep, &layers, &cluster);
-            refine_deployment(&mut dep, &layers, &cluster, &topo);
+            refine_deployment(&mut dep, &layers, &cluster, &topo, &Tracer::disabled());
             let drain_after = uplink_bound(&dep.aggregated_traffic(&layers), &cluster, &topo);
             let port_after = crate::placement::estimate_bottleneck(&dep, &layers, &cluster);
             assert!(

@@ -49,6 +49,7 @@
 //!   is untouched by this mode.
 
 use super::slot::{SlotRound, SlotSchedule};
+use crate::obs::Tracer;
 use crate::traffic::{augment_to_balanced, TrafficMatrix};
 use crate::util::par::par_map;
 
@@ -65,7 +66,13 @@ const PAR_REPAIR_MIN: usize = 32;
 /// * total real tokens delivered equal `d`'s off-diagonal entries;
 /// * `makespan_tokens() == d.b_max_tokens()`.
 pub fn aurora_schedule(d: &TrafficMatrix) -> SlotSchedule {
-    schedule_inner(d, 0.0)
+    schedule_inner(d, 0.0, &Tracer::disabled())
+}
+
+/// [`aurora_schedule`] with span tracing through `tr` (observational only —
+/// the schedule is bit-for-bit that of `aurora_schedule`).
+pub fn aurora_schedule_traced(d: &TrafficMatrix, tr: &Tracer) -> SlotSchedule {
+    schedule_inner(d, 0.0, tr)
 }
 
 /// [`aurora_schedule`] with early termination: once the remaining real
@@ -79,19 +86,33 @@ pub fn aurora_schedule(d: &TrafficMatrix) -> SlotSchedule {
 /// `NotOptimal` check by design. `epsilon = 0` is exactly
 /// [`aurora_schedule`].
 pub fn aurora_schedule_approx(d: &TrafficMatrix, epsilon: f64) -> SlotSchedule {
+    aurora_schedule_approx_traced(d, epsilon, &Tracer::disabled())
+}
+
+/// [`aurora_schedule_approx`] with span tracing through `tr` (observational
+/// only — the schedule is bit-for-bit that of `aurora_schedule_approx`).
+pub fn aurora_schedule_approx_traced(
+    d: &TrafficMatrix,
+    epsilon: f64,
+    tr: &Tracer,
+) -> SlotSchedule {
     assert!(
         epsilon >= 0.0 && epsilon.is_finite(),
         "epsilon must be a finite non-negative fraction of b_max"
     );
-    schedule_inner(d, epsilon)
+    schedule_inner(d, epsilon, tr)
 }
 
-fn schedule_inner(d: &TrafficMatrix, epsilon: f64) -> SlotSchedule {
+fn schedule_inner(d: &TrafficMatrix, epsilon: f64, tr: &Tracer) -> SlotSchedule {
     let n = d.n();
     let b_max = d.b_max_tokens();
     if b_max == 0 {
         return SlotSchedule { n, rounds: vec![] };
     }
+    let sp = tr.span("schedule.bvn");
+    tr.counter(sp.id(), "n", n as i64);
+    tr.counter(sp.id(), "b_max_tokens", b_max as i64);
+    tr.label(sp.id(), "mode", if epsilon > 0.0 { "approx" } else { "exact" });
 
     // Step 1: balance. Work on flat arrays from here on — this loop is the
     // planner's hottest path (§Perf: 64x64 BvN went 74 ms → ~4 ms by
@@ -185,6 +206,7 @@ fn schedule_inner(d: &TrafficMatrix, epsilon: f64) -> SlotSchedule {
         "all real traffic scheduled"
     );
 
+    tr.counter(sp.id(), "rounds", rounds.len() as i64);
     SlotSchedule { n, rounds }
 }
 

@@ -48,12 +48,14 @@
 //! drain, and the all-level [`uplink_bound`]; the sequential estimate sums
 //! the phases.
 
-use super::bvn::aurora_schedule;
+use super::bvn::{aurora_schedule, aurora_schedule_traced};
 use super::slot::{SlotRound, SlotSchedule};
 use super::{comm_time, CommResult, SchedulePolicy};
 use crate::cluster::topology::{comm_time_topology, uplink_bound, Topology, TopologyError};
 use crate::cluster::Cluster;
+use crate::obs::Tracer;
 use crate::traffic::TrafficMatrix;
+use crate::util::Json;
 
 /// One inter-group round: a partial permutation of *group* pairs, realized
 /// by concrete gateway transfers.
@@ -136,7 +138,19 @@ pub fn hierarchical_schedule(
     cluster: &Cluster,
     topo: &Topology,
 ) -> Result<HierarchicalSchedule, TopologyError> {
-    hierarchical_core(d, cluster, topo, true)
+    hierarchical_core(d, cluster, topo, true, &Tracer::disabled())
+}
+
+/// [`hierarchical_schedule`] with span tracing and per-phase decision
+/// records through `tr` (observational only — the schedule is bit-for-bit
+/// that of `hierarchical_schedule`).
+pub fn hierarchical_schedule_traced(
+    d: &TrafficMatrix,
+    cluster: &Cluster,
+    topo: &Topology,
+    tr: &Tracer,
+) -> Result<HierarchicalSchedule, TopologyError> {
+    hierarchical_core(d, cluster, topo, true, tr)
 }
 
 /// The shared construction. With `build_intra` the per-group Aurora slot
@@ -152,9 +166,10 @@ fn hierarchical_core(
     cluster: &Cluster,
     topo: &Topology,
     build_intra: bool,
+    tr: &Tracer,
 ) -> Result<HierarchicalSchedule, TopologyError> {
     if matches!(topo, Topology::Tiered { .. }) {
-        return tiered_core(d, cluster, topo, build_intra);
+        return tiered_core(d, cluster, topo, build_intra, tr);
     }
     let n = d.n();
     assert_eq!(cluster.len(), n, "cluster and matrix sizes must match");
@@ -168,6 +183,8 @@ fn hierarchical_core(
     let n_groups = groups.len();
 
     // ---- Phase 1: per-group Aurora on the intra submatrices. ----
+    let sp_intra = tr.begin("schedule.intra");
+    tr.counter(sp_intra, "groups", n_groups as i64);
     let mut intra = Vec::new();
     let mut intra_time = Vec::with_capacity(n_groups);
     let mut intra_ms = 0.0f64;
@@ -204,8 +221,18 @@ fn hierarchical_core(
             .collect();
         intra.push(SlotSchedule { n, rounds });
     }
+    tr.end(sp_intra);
+    tr.decision(
+        "schedule.phase",
+        vec![
+            ("phase", Json::from("intra")),
+            ("groups", Json::from(n_groups)),
+            ("ms", Json::from(intra_ms)),
+        ],
+    );
 
     // ---- Phase 2: group-level BvN over the cross traffic. ----
+    let sp_inter = tr.begin("schedule.inter");
     let mut group_matrix = TrafficMatrix::zeros(n_groups);
     // Remaining cross flows per (src group, dst group), deterministic order.
     let mut cross: Vec<Vec<Vec<(usize, usize, u64)>>> = vec![vec![Vec::new(); n_groups]; n_groups];
@@ -220,7 +247,7 @@ fn hierarchical_core(
         }
     }
 
-    let group_sched = aurora_schedule(&group_matrix);
+    let group_sched = aurora_schedule_traced(&group_matrix, tr);
     let mut inter = Vec::with_capacity(group_sched.rounds.len());
     let mut inter_ms = 0.0f64;
     for ground in &group_sched.rounds {
@@ -271,6 +298,16 @@ fn hierarchical_core(
             transfers,
         });
     }
+    tr.counter(sp_inter, "rounds", inter.len() as i64);
+    tr.end(sp_inter);
+    tr.decision(
+        "schedule.phase",
+        vec![
+            ("phase", Json::from("inter")),
+            ("rounds", Json::from(inter.len())),
+            ("ms", Json::from(inter_ms)),
+        ],
+    );
 
     // ---- Stitch. ----
     let port_ms = (0..n)
@@ -315,6 +352,7 @@ fn tiered_core(
     cluster: &Cluster,
     topo: &Topology,
     build_intra: bool,
+    tr: &Tracer,
 ) -> Result<HierarchicalSchedule, TopologyError> {
     let Topology::Tiered { levels } = topo else {
         unreachable!("tiered_core is only dispatched for tiered topologies")
@@ -330,6 +368,8 @@ fn tiered_core(
 
     // ---- Intra: per-leaf-group Aurora, exactly as in the two-tier path. ----
     let leaf_groups = &levels[0].groups;
+    let sp_intra = tr.begin("schedule.intra");
+    tr.counter(sp_intra, "groups", leaf_groups.len() as i64);
     let mut intra = Vec::new();
     let mut intra_time = Vec::with_capacity(leaf_groups.len());
     let mut intra_ms = 0.0f64;
@@ -370,12 +410,23 @@ fn tiered_core(
             .collect();
         intra.push(SlotSchedule { n, rounds });
     }
+    tr.end(sp_intra);
+    tr.decision(
+        "schedule.phase",
+        vec![
+            ("phase", Json::from("intra")),
+            ("groups", Json::from(leaf_groups.len())),
+            ("ms", Json::from(intra_ms)),
+        ],
+    );
 
     // ---- One BvN phase per aggregation tier over its span's flows. ----
     let mut tiers: Vec<Vec<InterRound>> = Vec::with_capacity(l);
     let mut inter: Vec<InterRound> = Vec::new();
     let mut tier_ms: Vec<f64> = Vec::with_capacity(l);
     for p in 1..=l {
+        let sp_tier = tr.begin("schedule.tier");
+        tr.counter(sp_tier, "tier", p as i64);
         let q = p - 1; // the tier's units live at this level
         let o_q = &owners[q];
         let n_units = levels[q].groups.len();
@@ -395,7 +446,7 @@ fn tiered_core(
                 cross[o_q[i]][o_q[j]].push((i, j, t));
             }
         }
-        let group_sched = aurora_schedule(&group_matrix);
+        let group_sched = aurora_schedule_traced(&group_matrix, tr);
         let mut rounds = Vec::with_capacity(group_sched.rounds.len());
         let mut phase_ms = 0.0f64;
         for ground in &group_sched.rounds {
@@ -461,6 +512,18 @@ fn tiered_core(
             });
         }
         tier_ms.push(phase_ms);
+        tr.counter(sp_tier, "units", n_units as i64);
+        tr.counter(sp_tier, "rounds", rounds.len() as i64);
+        tr.end(sp_tier);
+        tr.decision(
+            "schedule.tier",
+            vec![
+                ("tier", Json::from(p)),
+                ("units", Json::from(n_units)),
+                ("rounds", Json::from(rounds.len())),
+                ("ms", Json::from(phase_ms)),
+            ],
+        );
         inter.extend(rounds.iter().cloned());
         tiers.push(rounds);
     }
@@ -600,7 +663,7 @@ pub fn comm_time_on(
             // Estimate-only build: identical durations, no materialized
             // per-group slot schedules (this runs once per collective in
             // the simulator's hot loop).
-            let h = hierarchical_core(d, cluster, topo, false)
+            let h = hierarchical_core(d, cluster, topo, false, &Tracer::disabled())
                 .expect("two-tier topology was validated by the caller");
             CommResult {
                 makespan: h.pipelined_ms,
@@ -611,7 +674,7 @@ pub fn comm_time_on(
         (Topology::Tiered { .. }, SchedulePolicy::Aurora) => {
             // Same estimate-only build, through the recursive per-tier
             // decomposition.
-            let h = hierarchical_core(d, cluster, topo, false)
+            let h = hierarchical_core(d, cluster, topo, false, &Tracer::disabled())
                 .expect("tiered topology was validated by the caller");
             CommResult {
                 makespan: h.pipelined_ms,

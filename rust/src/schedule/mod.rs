@@ -33,11 +33,13 @@ mod hierarchy;
 mod slot;
 mod validate;
 
-pub use bvn::{aurora_schedule, aurora_schedule_approx};
+pub use bvn::{
+    aurora_schedule, aurora_schedule_approx, aurora_schedule_approx_traced, aurora_schedule_traced,
+};
 pub use greedy::{simulate_priority_order, CommResult};
 pub use hierarchy::{
     comm_time_on, flat_aurora_on_topology, flat_schedule_on_topology, hierarchical_schedule,
-    HierarchicalSchedule, InterRound,
+    hierarchical_schedule_traced, HierarchicalSchedule, InterRound,
 };
 pub use slot::{SlotRound, SlotSchedule};
 pub use validate::{validate_slot_schedule, ValidationError};

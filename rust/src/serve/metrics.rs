@@ -1,49 +1,18 @@
 //! Serving metrics: latency percentiles and throughput.
 //!
 //! [`Metrics`] accumulates wall-clock request latencies in the live serving
-//! path; the free functions [`percentile`] / [`p50_p95_p99`] work on plain
-//! `f64` samples (simulated milliseconds), so the discrete-event serving
-//! simulation ([`crate::coordinator::online`]) reports the same tail
-//! statistics the demo prints.
+//! path; the free functions [`percentile`] / [`p50_p95_p99`] (re-exported
+//! from [`crate::obs::metrics`]) work on plain `f64` samples (simulated
+//! milliseconds), so the discrete-event serving simulation
+//! ([`crate::coordinator::online`]) reports the same tail statistics the
+//! demo prints. They return typed [`MetricsError`]s — an out-of-range `p`
+//! or an all-non-finite sample set is a recoverable condition in a serving
+//! report, never a panic (a single NaN latency must not take down the
+//! metrics endpoint).
 
 use std::time::{Duration, Instant};
 
-/// Nearest-rank pick from an already-sorted non-empty sample slice — the
-/// one rank convention every percentile in this module uses.
-fn pick_sorted(sorted: &[f64], p: f64) -> f64 {
-    assert!((0.0..=1.0).contains(&p), "percentile must be in [0, 1]");
-    sorted[((sorted.len() as f64 - 1.0) * p).round() as usize]
-}
-
-fn sorted_copy(samples: &[f64]) -> Vec<f64> {
-    let mut xs = samples.to_vec();
-    xs.sort_by(|a, b| a.partial_cmp(b).expect("samples must be finite"));
-    xs
-}
-
-/// Nearest-rank percentile of `samples` (any unit; must be finite), `p` in
-/// `[0, 1]`. Sorts a copy; returns `None` on empty input.
-pub fn percentile(samples: &[f64], p: f64) -> Option<f64> {
-    assert!((0.0..=1.0).contains(&p), "percentile must be in [0, 1]");
-    if samples.is_empty() {
-        return None;
-    }
-    Some(pick_sorted(&sorted_copy(samples), p))
-}
-
-/// The (p50, p95, p99) summary of `samples` — sorted once, the trio every
-/// serving report leads with. `None` on empty input.
-pub fn p50_p95_p99(samples: &[f64]) -> Option<(f64, f64, f64)> {
-    if samples.is_empty() {
-        return None;
-    }
-    let xs = sorted_copy(samples);
-    Some((
-        pick_sorted(&xs, 0.50),
-        pick_sorted(&xs, 0.95),
-        pick_sorted(&xs, 0.99),
-    ))
-}
+pub use crate::obs::metrics::{p50_p95_p99, percentile, MetricsError};
 
 /// Percentile summary of recorded latencies.
 #[derive(Debug, Clone, PartialEq)]
@@ -196,10 +165,10 @@ mod tests {
     #[test]
     fn percentile_helpers_match_by_hand_values() {
         let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
-        assert_eq!(percentile(&xs, 0.0), Some(1.0));
-        assert_eq!(percentile(&xs, 1.0), Some(100.0));
+        assert_eq!(percentile(&xs, 0.0), Ok(1.0));
+        assert_eq!(percentile(&xs, 1.0), Ok(100.0));
         // nearest-rank on 100 samples: (99 * 0.5).round() = 50 -> 51.0
-        assert_eq!(percentile(&xs, 0.5), Some(51.0));
+        assert_eq!(percentile(&xs, 0.5), Ok(51.0));
         let (p50, p95, p99) = p50_p95_p99(&xs).unwrap();
         assert_eq!(p50, 51.0);
         assert_eq!(p95, 95.0);
@@ -207,20 +176,44 @@ mod tests {
         assert!(p50 <= p95 && p95 <= p99);
         // order-independent: helpers sort internally
         let shuffled = [3.0, 1.0, 2.0];
-        assert_eq!(percentile(&shuffled, 0.5), Some(2.0));
+        assert_eq!(percentile(&shuffled, 0.5), Ok(2.0));
     }
 
     #[test]
     fn percentile_helpers_handle_empty_and_singleton() {
-        assert_eq!(percentile(&[], 0.5), None);
-        assert_eq!(p50_p95_p99(&[]), None);
-        assert_eq!(p50_p95_p99(&[7.0]), Some((7.0, 7.0, 7.0)));
+        assert_eq!(
+            percentile(&[], 0.5),
+            Err(MetricsError::NoFiniteSamples { dropped: 0 })
+        );
+        assert!(p50_p95_p99(&[]).is_err());
+        assert_eq!(p50_p95_p99(&[7.0]), Ok((7.0, 7.0, 7.0)));
     }
 
     #[test]
-    #[should_panic]
-    fn percentile_rejects_out_of_range_p() {
-        percentile(&[1.0], 1.5);
+    fn percentile_rejects_out_of_range_p_without_panicking() {
+        assert_eq!(
+            percentile(&[1.0], 1.5),
+            Err(MetricsError::InvalidPercentile { p: 1.5 })
+        );
+        assert_eq!(
+            percentile(&[1.0], -0.01),
+            Err(MetricsError::InvalidPercentile { p: -0.01 })
+        );
+    }
+
+    #[test]
+    fn nan_and_infinite_latencies_never_panic_the_report() {
+        // A poisoned sample set (a NaN latency from a clock glitch, an ∞
+        // from a division) used to abort the whole report via the sort
+        // comparator; now the non-finite samples are dropped and counted.
+        let xs = [5.0, f64::NAN, 1.0, f64::INFINITY, 3.0, f64::NEG_INFINITY];
+        assert_eq!(percentile(&xs, 0.5), Ok(3.0));
+        assert_eq!(p50_p95_p99(&xs), Ok((3.0, 5.0, 5.0)));
+        let all_bad = [f64::NAN, f64::INFINITY];
+        assert_eq!(
+            percentile(&all_bad, 0.5),
+            Err(MetricsError::NoFiniteSamples { dropped: 2 })
+        );
     }
 
     #[test]

@@ -28,7 +28,7 @@ pub mod router;
 pub use adaptive::{AdaptiveReplanner, ReplanDecision};
 pub use batcher::{Batch, BatcherConfig, Clock, DynamicBatcher, ManualClock, SystemClock};
 pub use engine::{expert_execution_order, grouped_execution_order, MoeEngine};
-pub use metrics::{p50_p95_p99, percentile, LatencySummary, Metrics};
+pub use metrics::{p50_p95_p99, percentile, LatencySummary, Metrics, MetricsError};
 pub use replica::ReplicaRouter;
 pub use router::Router;
 

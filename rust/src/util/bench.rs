@@ -6,6 +6,7 @@
 //! alive via `std::hint::black_box` to defeat dead-code elimination).
 
 use super::Json;
+use crate::obs::Histogram;
 use std::time::{Duration, Instant};
 
 /// Timing statistics of one benchmark case.
@@ -21,6 +22,10 @@ pub struct Sample {
     pub mean: Duration,
     /// Fastest per-iteration time.
     pub min: Duration,
+    /// Log-bucketed distribution of the per-iteration times (ns) across the
+    /// sample batches — the full shape, not just the median, so a perf
+    /// snapshot can show tail behavior (and a bimodal case is visible).
+    pub hist: Histogram,
 }
 
 impl Sample {
@@ -34,6 +39,16 @@ impl Sample {
             fmt_duration(self.min),
             self.iters
         )
+    }
+
+    /// Approximate 90th-percentile per-iteration time (ns).
+    pub fn p90_ns(&self) -> f64 {
+        self.hist.quantile(0.90).unwrap_or(0.0)
+    }
+
+    /// Approximate 99th-percentile per-iteration time (ns).
+    pub fn p99_ns(&self) -> f64 {
+        self.hist.quantile(0.99).unwrap_or(0.0)
     }
 }
 
@@ -106,6 +121,7 @@ impl Bench {
             .max(1))
         .min(1_000_000);
         let mut times: Vec<Duration> = Vec::new();
+        let mut hist = Histogram::new();
         let start = Instant::now();
         let mut iters = 0u64;
         while start.elapsed() < self.budget || times.is_empty() {
@@ -113,7 +129,9 @@ impl Bench {
             for _ in 0..batch {
                 std::hint::black_box(f());
             }
-            times.push(t0.elapsed() / batch as u32);
+            let per_iter = t0.elapsed() / batch as u32;
+            hist.record(per_iter.as_nanos() as f64);
+            times.push(per_iter);
             iters += batch;
             if times.len() >= 200 {
                 break;
@@ -129,6 +147,7 @@ impl Bench {
             median,
             mean,
             min,
+            hist,
         };
         println!("{}", sample.report());
         self.samples.push(sample);
@@ -275,6 +294,10 @@ mod tests {
         assert!(s.iters > 0);
         assert!(s.min <= s.median);
         assert_eq!(b.samples().len(), 1);
+        // the per-batch distribution rides along with the point stats
+        assert!(s.hist.count() > 0);
+        assert!(s.p90_ns() <= s.p99_ns());
+        assert!(s.p99_ns() >= s.min.as_nanos() as f64);
     }
 
     #[test]

@@ -1,0 +1,139 @@
+//! Observability integration tests: export round-trips, sim-time trace
+//! determinism, and the tracing-on/off bit-for-bit property.
+
+use aurora::cluster::{Cluster, Topology};
+use aurora::coordinator::{run_online_traced, OnlineConfig, OnlineStrategy};
+use aurora::eval::skewed_workload;
+use aurora::obs::{parse_chrome_trace, run_profile, MetricsRegistry, ProfileConfig, Tracer};
+use aurora::planner::{Planner, ReplicationConfig};
+use aurora::schedule::{
+    aurora_schedule, aurora_schedule_traced, hierarchical_schedule, hierarchical_schedule_traced,
+};
+
+const BW: f64 = 800.0;
+
+/// A real planner run's trace survives the Chrome export → parse round trip
+/// with the span tree, labels, and counters intact.
+#[test]
+fn chrome_export_round_trips_a_planner_trace() {
+    let n = 32;
+    let cluster = Cluster::homogeneous(n, BW);
+    let topo = Topology::even_two_tier(n, 4, 4.0).expect("topology");
+    let trace = skewed_workload(n, 2, 256, 1.2, 3);
+    let tr = Tracer::wall();
+    let planner = Planner::default();
+    planner
+        .plan_replicated_topology_traced(
+            &[&trace],
+            &cluster,
+            &topo,
+            &ReplicationConfig::default(),
+            &tr,
+        )
+        .expect("plans");
+    let spans = tr.spans();
+    assert!(!spans.is_empty(), "planner run recorded no spans");
+    assert!(
+        spans.iter().any(|s| s.parent.is_some()),
+        "expected nested phase spans"
+    );
+    let parsed = parse_chrome_trace(&tr.to_chrome_string()).expect("parses");
+    assert_eq!(parsed, spans);
+    // The JSONL export carries one record per span + decision.
+    let lines = tr.to_jsonl().lines().count();
+    assert_eq!(lines, spans.len() + tr.decisions().len());
+}
+
+/// Two seeded serve-sim runs under fresh sim-time tracers export
+/// byte-identical trace files — the clock is the simulator's, not the wall's.
+#[test]
+fn seeded_serve_sim_traces_are_byte_identical() {
+    let cfg = OnlineConfig::default();
+    let cluster = Cluster::homogeneous(cfg.n_gpus, BW);
+    let run = || {
+        let tr = Tracer::sim();
+        let metrics = MetricsRegistry::new();
+        run_online_traced(&cfg, &cluster, OnlineStrategy::Coordinator, &tr, &metrics);
+        (tr.to_chrome_string(), tr.to_jsonl(), metrics.snapshot().to_string_compact())
+    };
+    let (chrome_a, jsonl_a, metrics_a) = run();
+    let (chrome_b, jsonl_b, metrics_b) = run();
+    assert_eq!(chrome_a, chrome_b, "chrome traces differ between seeded runs");
+    assert_eq!(jsonl_a, jsonl_b, "jsonl traces differ between seeded runs");
+    assert_eq!(metrics_a, metrics_b, "metrics snapshots differ between seeded runs");
+    // And the trace actually recorded the replan gate's reasoning.
+    let parsed = parse_chrome_trace(&chrome_a).expect("parses");
+    assert!(parsed.iter().any(|s| s.name == "serve.window"));
+    let tr = Tracer::sim();
+    let metrics = MetricsRegistry::new();
+    run_online_traced(&cfg, &cluster, OnlineStrategy::Coordinator, &tr, &metrics);
+    assert!(
+        tr.decisions().iter().any(|d| d.kind == "coordinator.replan_gate"),
+        "coordinator run emitted no replan-gate decisions"
+    );
+}
+
+/// Tracing is purely observational: planning and scheduling with a live
+/// tracer produce bit-for-bit the same outputs as with tracing off.
+#[test]
+fn tracing_on_or_off_is_bit_for_bit_identical() {
+    let n = 64;
+    let cluster = Cluster::homogeneous(n, BW);
+    let topo = Topology::even_two_tier(n, 8, 4.0).expect("topology");
+    let trace = skewed_workload(n, 2, 512, 1.2, 11);
+    let planner = Planner::default();
+
+    let plain = planner
+        .plan_topology(&[&trace], &cluster, &topo)
+        .expect("plans");
+    let tr = Tracer::wall();
+    let traced = planner
+        .plan_topology_traced(&[&trace], &cluster, &topo, &tr)
+        .expect("plans");
+    assert_eq!(plain, traced);
+    assert!(tr.is_enabled() && !tr.spans().is_empty());
+
+    let cfg = ReplicationConfig::default();
+    let (rep_plain, splits_plain) = planner
+        .plan_replicated_topology(&[&trace], &cluster, &topo, &cfg)
+        .expect("plans");
+    let tr = Tracer::wall();
+    let (rep_traced, splits_traced) = planner
+        .plan_replicated_topology_traced(&[&trace], &cluster, &topo, &cfg, &tr)
+        .expect("plans");
+    assert_eq!(rep_plain, rep_traced);
+    assert_eq!(splits_plain, splits_traced);
+
+    let agg = rep_plain.aggregated_traffic_split(&[&trace.layers[0]], &splits_plain);
+    let tr = Tracer::wall();
+    assert_eq!(aurora_schedule(&agg), aurora_schedule_traced(&agg, &tr));
+    let tr = Tracer::wall();
+    assert_eq!(
+        hierarchical_schedule(&agg, &cluster, &topo).expect("schedules"),
+        hierarchical_schedule_traced(&agg, &cluster, &topo, &tr).expect("schedules")
+    );
+}
+
+/// The profile driver emits a parsable Chrome trace and a non-empty phase
+/// table for a plan + schedule run.
+#[test]
+fn profile_run_emits_a_valid_chrome_trace() {
+    let cfg = ProfileConfig {
+        gpus: 32,
+        skew: 1.2,
+        replicas: 2,
+        seed: 42,
+    };
+    let report = run_profile(&cfg).expect("profiles");
+    assert!(!report.phases.is_empty());
+    assert!(report.schedule_ms > 0.0);
+    assert!(
+        report.phases.iter().any(|p| p.name.starts_with("planner.")),
+        "no planner phases in {:?}",
+        report.phases.iter().map(|p| &p.name).collect::<Vec<_>>()
+    );
+    let parsed = parse_chrome_trace(&report.tracer.to_chrome_string()).expect("parses");
+    assert_eq!(parsed, report.tracer.spans());
+    let table = report.render_table();
+    assert!(table.contains("total"), "table header missing: {table}");
+}
