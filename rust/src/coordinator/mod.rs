@@ -33,6 +33,20 @@
 //! stationary workload replan-free: under uniform routing the coordinator
 //! never touches the plan, bit for bit.
 //!
+//! **SLO watchdog** ([`CoordinatorConfig::slo_p99_ms`]): alongside the
+//! drift trigger, an optional [`SloMonitor`] watches per-window serving
+//! latencies ([`Coordinator::record_window_latency`]). The drift trigger is
+//! *proactive* — it fires on distribution movement before latency decays —
+//! and is fully gated; the SLO trigger is *reactive* — the promise to the
+//! user is already broken, so a rolling-p99 violation **bypasses** the
+//! drift, gain, and cost gates and commits the freshest candidate plan
+//! (decision verdict `slo_triggered`, the monitor's window resetting at the
+//! commit so the new plan is judged on its own samples). Only an in-flight
+//! swap or the cooldown suppresses it (`slo_suppressed_cooldown`) — an
+//! atomic swap cannot be preempted mid-stage, and the cooldown keeps a
+//! latency storm from thrashing migrations. With no SLO configured every
+//! decision is bit-for-bit the historical gate sequence.
+//!
 //! [`online`] ships the drifting-Zipf discrete-event serving simulation that
 //! pins the coordinator against a static plan, naive replan-every-window,
 //! and a zero-cost oracle (the `online` eval figure and the `serve-sim` CLI
@@ -49,7 +63,7 @@ pub use online::{run_online, run_online_traced, OnlineConfig, OnlineOutcome, Onl
 pub use swap::{PlanSwap, SwapPhase};
 
 use crate::cluster::{Cluster, Topology};
-use crate::obs::Tracer;
+use crate::obs::{SloMonitor, Tracer};
 use crate::planner::{Planner, ReplicationConfig};
 use crate::replication::{estimate_objective_on, ReplicatedDeployment, SplitPlan};
 use crate::sim::MoeLayerStats;
@@ -89,6 +103,17 @@ pub struct CoordinatorConfig {
     /// plans come from the topology-aware planner entry point. The default
     /// [`Topology::BigSwitch`] reproduces the historical behavior exactly.
     pub topology: Topology,
+    /// Latency SLO: when set, an [`SloMonitor`] watches per-window serving
+    /// latencies (fed via [`Coordinator::record_window_latency`]) and a
+    /// rolling-p99 violation becomes an **emergency** replan trigger that
+    /// bypasses the drift, gain, and cost gates — only an in-flight swap or
+    /// the cooldown can suppress it (verdict `slo_suppressed_cooldown`).
+    /// `None` (the default) disables the watchdog; every decision is then
+    /// bit-for-bit the historical gate sequence.
+    pub slo_p99_ms: Option<f64>,
+    /// Rolling window (in serving windows) the SLO quantiles are computed
+    /// over. Ignored unless [`CoordinatorConfig::slo_p99_ms`] is set.
+    pub slo_window: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -103,6 +128,8 @@ impl Default for CoordinatorConfig {
             drain_ms: 0.0,
             replication: ReplicationConfig::default(),
             topology: Topology::BigSwitch,
+            slo_p99_ms: None,
+            slo_window: 8,
         }
     }
 }
@@ -129,6 +156,12 @@ pub struct CoordinatorStats {
     pub settles: u64,
     /// Total staged-migration makespan (ms).
     pub migration_ms_total: f64,
+    /// Emergency replans committed because the rolling p99 broke the SLO
+    /// (gain/cost gates bypassed).
+    pub slo_triggered: u64,
+    /// SLO violations that could not replan because a swap was in flight or
+    /// the cooldown held.
+    pub slo_suppressed: u64,
 }
 
 /// What a committed replan looked like.
@@ -181,6 +214,8 @@ pub struct Coordinator {
     active: (ReplicatedDeployment, SplitPlan),
     swap: PlanSwap,
     staging_traffic: Option<TrafficMatrix>,
+    /// SLO watchdog, present iff [`CoordinatorConfig::slo_p99_ms`] is set.
+    slo: Option<SloMonitor>,
     windows_since_replan: u64,
     /// Consecutive gate-rejected candidates since the last commit/settle.
     rejections: u64,
@@ -243,6 +278,9 @@ impl Coordinator {
         estimator.observe(&plan_layer.traffic);
         let detector = DriftDetector::new(&plan_layer.traffic);
         let swap = PlanSwap::new(cfg.drain_ms);
+        let slo = cfg
+            .slo_p99_ms
+            .map(|target| SloMonitor::new(target, cfg.slo_window.max(1)));
         Coordinator {
             planner,
             gate_ms: plan_layer.gate_ms,
@@ -253,6 +291,7 @@ impl Coordinator {
             active: (rep, splits),
             swap,
             staging_traffic: None,
+            slo,
             windows_since_replan: 0,
             rejections: 0,
             tracer: Tracer::disabled(),
@@ -301,6 +340,21 @@ impl Coordinator {
             self.rejections = 0;
             self.stats.settles += 1;
         }
+    }
+
+    /// Feed one serving window's observed latency into the SLO watchdog
+    /// (no-op unless [`CoordinatorConfig::slo_p99_ms`] is set). Call it
+    /// *before* [`Coordinator::observe_window`] so the window's decision
+    /// sees the freshest rolling quantiles.
+    pub fn record_window_latency(&mut self, latency_ms: f64) {
+        if let Some(m) = self.slo.as_mut() {
+            m.observe(latency_ms);
+        }
+    }
+
+    /// The SLO watchdog, if one is configured.
+    pub fn slo(&self) -> Option<&SloMonitor> {
+        self.slo.as_ref()
     }
 
     /// The plan currently serving.
@@ -363,17 +417,39 @@ impl Coordinator {
         let est = self.estimator.estimate();
         let drift = self.detector.score(&est);
 
-        if drift <= self.cfg.drift_threshold {
+        // SLO watchdog: a rolling-p99 violation is an emergency trigger that
+        // bypasses the drift, gain, and cost gates — only an in-flight swap
+        // or the cooldown can suppress it.
+        let slo_status = self.slo.as_ref().map(|m| (m.status(), m.target_p99_ms()));
+        let slo_violating = slo_status.map(|(st, _)| st.violating).unwrap_or(false);
+        let slo_fields = |extra: &mut Vec<(&str, Json)>| {
+            if let Some((st, target)) = slo_status {
+                extra.push(("slo_p50_ms", Json::Num(st.p50_ms)));
+                extra.push(("slo_p95_ms", Json::Num(st.p95_ms)));
+                extra.push(("slo_p99_ms", Json::Num(st.p99_ms)));
+                extra.push(("slo_target_ms", Json::Num(target)));
+                extra.push(("slo_burn_rate", Json::Num(st.burn_rate)));
+            }
+        };
+
+        if drift <= self.cfg.drift_threshold && !slo_violating {
             self.gate_decision("keep_low_drift", drift, vec![]);
             return CoordinatorDecision::Keep { drift };
         }
         if self.swap.is_busy() || self.windows_since_replan <= self.cfg.cooldown_windows {
-            self.stats.skipped_cooldown += 1;
-            self.gate_decision(
-                "skipped_cooldown",
-                drift,
-                vec![("swap_busy", Json::from(self.swap.is_busy()))],
-            );
+            if slo_violating {
+                self.stats.slo_suppressed += 1;
+                let mut fields = vec![("swap_busy", Json::from(self.swap.is_busy()))];
+                slo_fields(&mut fields);
+                self.gate_decision("slo_suppressed_cooldown", drift, fields);
+            } else {
+                self.stats.skipped_cooldown += 1;
+                self.gate_decision(
+                    "skipped_cooldown",
+                    drift,
+                    vec![("swap_busy", Json::from(self.swap.is_busy()))],
+                );
+            }
             return CoordinatorDecision::Keep { drift };
         }
 
@@ -412,7 +488,7 @@ impl Coordinator {
         );
         let new_ms =
             serving_estimate_ms(&cand_rep, &cand_splits, &layers, cluster, &self.cfg.topology);
-        if new_ms >= cur_ms * (1.0 - self.cfg.min_gain) {
+        if !slo_violating && new_ms >= cur_ms * (1.0 - self.cfg.min_gain) {
             self.stats.skipped_gain += 1;
             self.note_rejection(&est);
             self.gate_decision(
@@ -435,7 +511,7 @@ impl Coordinator {
         // one-way makespan.
         let staging_cost_ms = 2.0 * migration_ms;
         let predicted_gain_ms = (cur_ms - new_ms) * self.cfg.horizon_windows;
-        if predicted_gain_ms <= staging_cost_ms {
+        if !slo_violating && predicted_gain_ms <= staging_cost_ms {
             self.stats.skipped_cost += 1;
             self.note_rejection(&est);
             self.gate_decision(
@@ -468,17 +544,29 @@ impl Coordinator {
         self.rejections = 0;
         self.stats.replans += 1;
         self.stats.migration_ms_total += migration_ms;
-        self.gate_decision(
-            "commit",
-            drift,
-            vec![
-                ("cur_ms", Json::Num(cur_ms)),
-                ("cand_ms", Json::Num(new_ms)),
-                ("predicted_gain_ms", Json::Num(predicted_gain_ms)),
-                ("migration_ms", Json::Num(migration_ms)),
-                ("in_place", Json::from(migration.is_empty())),
-            ],
-        );
+        let verdict = if slo_violating {
+            // The replan answers a latency emergency: count it, and forget
+            // the violating window so the fresh plan gets a clean reading
+            // instead of re-triggering on stale samples.
+            self.stats.slo_triggered += 1;
+            if let Some(m) = self.slo.as_mut() {
+                m.reset_window();
+            }
+            "slo_triggered"
+        } else {
+            "commit"
+        };
+        let mut fields = vec![
+            ("cur_ms", Json::Num(cur_ms)),
+            ("cand_ms", Json::Num(new_ms)),
+            ("predicted_gain_ms", Json::Num(predicted_gain_ms)),
+            ("migration_ms", Json::Num(migration_ms)),
+            ("in_place", Json::from(migration.is_empty())),
+        ];
+        if slo_violating {
+            slo_fields(&mut fields);
+        }
+        self.gate_decision(verdict, drift, fields);
         CoordinatorDecision::Replan(Box::new(ReplanOutcome {
             drift,
             predicted_gain_ms,
@@ -570,6 +658,88 @@ mod tests {
         }
         assert!(coord.current_drift() < 0.1);
         assert_eq!(coord.stats.replans, 1, "no churn once adapted");
+    }
+
+    #[test]
+    fn slo_violation_triggers_emergency_replan_even_at_zero_drift() {
+        let cluster = Cluster::homogeneous(8, 814.0);
+        let uniform = zipf_traffic(16, 512, 0.0, 3);
+        let stats = layer(uniform.clone());
+        let trace = ModelTrace {
+            name: "plan".to_string(),
+            layers: vec![stats.clone()],
+        };
+        let planner = Planner::default();
+        let (rep, splits) = planner
+            .plan_replicated(&[&trace], &cluster, &ReplicationConfig::default())
+            .unwrap();
+        let cfg = CoordinatorConfig {
+            slo_p99_ms: Some(0.001),
+            slo_window: 4,
+            cooldown_windows: 0,
+            ..CoordinatorConfig::default()
+        };
+        let mut coord = Coordinator::new(planner, rep, splits, &stats, cfg);
+        let tracer = Tracer::sim();
+        coord.set_tracer(tracer.clone());
+        // stationary traffic: drift is ~0, so only the SLO can replan
+        coord.record_window_latency(5.0);
+        let d = coord.observe_window(&uniform, &cluster);
+        assert!(matches!(d, CoordinatorDecision::Replan(_)));
+        assert_eq!(coord.stats.slo_triggered, 1);
+        let ds = tracer.decisions();
+        let triggered = ds
+            .iter()
+            .find(|r| r.get("verdict").and_then(Json::as_str) == Some("slo_triggered"))
+            .expect("slo_triggered decision recorded");
+        assert!(triggered.get("slo_p99_ms").is_some());
+        // the monitor window reset at the commit
+        assert!(!coord.slo().unwrap().is_violating());
+    }
+
+    #[test]
+    fn slo_violation_suppressed_inside_cooldown() {
+        let cluster = Cluster::homogeneous(8, 814.0);
+        let uniform = zipf_traffic(16, 512, 0.0, 3);
+        let stats = layer(uniform.clone());
+        let trace = ModelTrace {
+            name: "plan".to_string(),
+            layers: vec![stats.clone()],
+        };
+        let planner = Planner::default();
+        let (rep, splits) = planner
+            .plan_replicated(&[&trace], &cluster, &ReplicationConfig::default())
+            .unwrap();
+        let cfg = CoordinatorConfig {
+            slo_p99_ms: Some(0.001),
+            slo_window: 4,
+            cooldown_windows: 100,
+            ..CoordinatorConfig::default()
+        };
+        let mut coord = Coordinator::new(planner, rep, splits, &stats, cfg);
+        let tracer = Tracer::sim();
+        coord.set_tracer(tracer.clone());
+        coord.record_window_latency(5.0);
+        let d = coord.observe_window(&uniform, &cluster);
+        assert!(matches!(d, CoordinatorDecision::Keep { .. }));
+        assert_eq!(coord.stats.slo_suppressed, 1);
+        assert_eq!(coord.stats.replans, 0);
+        assert!(tracer.decisions().iter().any(|r| {
+            r.get("verdict").and_then(Json::as_str) == Some("slo_suppressed_cooldown")
+        }));
+    }
+
+    #[test]
+    fn no_slo_config_means_no_watchdog() {
+        let cluster = Cluster::homogeneous(8, 814.0);
+        let uniform = zipf_traffic(16, 512, 0.0, 3);
+        let mut coord = coordinator_for(uniform.clone(), &cluster);
+        assert!(coord.slo().is_none());
+        coord.record_window_latency(1e9); // swallowed: no monitor
+        let d = coord.observe_window(&uniform, &cluster);
+        assert!(matches!(d, CoordinatorDecision::Keep { .. }));
+        assert_eq!(coord.stats.slo_triggered, 0);
+        assert_eq!(coord.stats.slo_suppressed, 0);
     }
 
     #[test]

@@ -356,8 +356,16 @@ pub fn run_online_traced(
                 // its decision records are stamped at the window's end.
                 tr.set_sim_time_us((elapsed_ms * 1e3).round() as u64);
                 coord.advance(ms);
+                // The window's serving latency feeds the SLO watchdog (a
+                // no-op unless the config sets a target) before the gate
+                // runs, so a p99 break replans on this very window.
+                coord.record_window_latency(ms);
                 coord.observe_window(&observed, cluster);
                 tr.end(sp);
+            }
+            if metrics.is_enabled() {
+                metrics.counter_add("serve.slo_triggered", coord.stats.slo_triggered);
+                metrics.counter_add("serve.slo_suppressed", coord.stats.slo_suppressed);
             }
             outcome(
                 strategy,
@@ -570,6 +578,30 @@ mod tests {
             oracle.total_ms,
             stat.total_ms
         );
+    }
+
+    #[test]
+    fn slo_watchdog_forces_replans_under_uniform_traffic() {
+        // Uniform traffic keeps drift at ~0, so without the watchdog the
+        // coordinator never replans (pinned above); an absurdly low p99
+        // target makes every window a violation and forces emergency
+        // replans through the drift gate.
+        let mut cfg = small(0.0, false);
+        cfg.coordinator.slo_p99_ms = Some(0.001);
+        cfg.coordinator.cooldown_windows = 0;
+        let cluster = Cluster::homogeneous(4, 814.0);
+        let tr = Tracer::sim();
+        let out = run_online_traced(
+            &cfg,
+            &cluster,
+            OnlineStrategy::Coordinator,
+            &tr,
+            &MetricsRegistry::disabled(),
+        );
+        assert!(out.replans >= 1, "SLO violations must force a replan");
+        assert!(tr.decisions().iter().any(|r| {
+            r.get("verdict").and_then(crate::util::Json::as_str) == Some("slo_triggered")
+        }));
     }
 
     #[test]

@@ -17,6 +17,7 @@
 //! | replication | beyond-paper | replicated vs placed vs random under Zipf skew |
 //! | online | beyond-paper | drifting routing: static vs periodic vs coordinator vs oracle |
 //! | topology | beyond-paper | two-tier fabric: hierarchical vs flat Aurora vs SJF across oversubscription |
+//! | utilization | §7 reproduction | exclusive vs colocated vs colocated+Aurora, idle time attributed per segment kind |
 
 mod ablation;
 mod fig11;
@@ -29,6 +30,7 @@ mod online;
 mod replication;
 mod report;
 mod topology;
+mod utilization;
 mod workloads;
 
 pub use ablation::{ablation_schedulers, ablation_top2};
@@ -42,6 +44,7 @@ pub use online::online_comparison;
 pub use replication::{replication_comparison, skewed_workload};
 pub use report::{MissingColumn, Report};
 pub use topology::topology_comparison;
+pub use utilization::utilization_figure;
 pub use workloads::Workloads;
 
 use crate::config::EvalConfig;
@@ -82,6 +85,9 @@ pub fn run_figure(name: &str, cfg: &EvalConfig) -> Result<Vec<Report>, String> {
         // two-phase scheduling + placement vs flat Aurora vs SJF across
         // uplink oversubscription factors.
         "topology" => vec![topology_comparison(cfg, &[1.0, 2.0, 4.0])],
+        // §7 reproduction on the recorded timelines: exclusive vs colocated
+        // vs colocated+Aurora utilization with the idle time attributed.
+        "utilization" => vec![utilization_figure(cfg, &[0.0, 0.6, 1.2])],
         "all" => {
             let mut r = vec![
                 fig11a(cfg, &w),
@@ -100,11 +106,12 @@ pub fn run_figure(name: &str, cfg: &EvalConfig) -> Result<Vec<Report>, String> {
             r.push(replication_comparison(cfg, &[0.0, 0.6, 1.2]));
             r.push(online_comparison(cfg, 1.2, 24, 8));
             r.push(topology_comparison(cfg, &[1.0, 2.0, 4.0]));
+            r.push(utilization_figure(cfg, &[0.0, 0.6, 1.2]));
             r
         }
         other => {
             return Err(format!(
-                "unknown figure '{other}' (try 11a/11b/11c/11d/12/13/14/a1/a2/ablation/multi/replication/online/topology/all)"
+                "unknown figure '{other}' (try 11a/11b/11c/11d/12/13/14/a1/a2/ablation/multi/replication/online/topology/utilization/all)"
             ))
         }
     };

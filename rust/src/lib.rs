@@ -100,13 +100,29 @@
 //! ([`obs::run_profile`]) renders the per-phase time breakdown of a full
 //! plan + schedule run.
 //!
+//! The same discipline extends to the simulators: every one has a
+//! `*_recorded` twin threading an [`obs::timeline::TimelineRecorder`] that
+//! attributes **every GPU-millisecond** of a simulated layer to a typed
+//! segment — compute, comm-send/-recv, sync-wait on a collective barrier,
+//! swap-drain of staged migration weights, trailing idle — per GPU engine
+//! and per access link ([`obs::timeline::Timelines`]: utilization,
+//! per-kind breakdown, Chrome-trace export). On top of it sit the
+//! `eval utilization` figure (exclusive vs colocated vs colocated+Aurora
+//! with the idle time itemized, §7) and the coordinator's **SLO watchdog**
+//! ([`obs::SloMonitor`]): rolling p50/p95/p99 over window latencies whose
+//! p99 violations override the drift/gain/cost gates and force a replan
+//! (verdicts `slo_triggered` / `slo_suppressed_cooldown` in the decision
+//! log).
+//!
 //! See `docs/architecture.md` for the layer map, the Scenario decision tree,
 //! the "Hierarchical scheduling" section (two-tier topologies, the two-phase
 //! decomposition, and the uplink bounds), the "Performance & incremental
 //! planning" section (complexity table, lazy-greedy invariants, rebuild
 //! points), the "Scaling to 1024 GPUs" section (sparse storage contract,
-//! parallel-BvN determinism, recursive tiers, the tier-local planner), and
-//! which code paths are exact versus heuristic.
+//! parallel-BvN determinism, recursive tiers, the tier-local planner), the
+//! "Utilization accounting & SLO watchdog" section (segment taxonomy,
+//! recorder contract, SLO-vs-drift trigger semantics), and which code paths
+//! are exact versus heuristic.
 
 pub mod assignment;
 pub mod cluster;

@@ -15,6 +15,8 @@
 //! * `bench [--out <file>] [--budget-ms <N>] [--check [--max-regress R]]` —
 //!   time the planner/schedule/sim hot paths on fixed seeds, append a JSON
 //!   perf snapshot, and optionally gate on regressions vs the last snapshot.
+//!   `bench --merge-measured <artifact.json>` skips the run and instead
+//!   folds a CI-measured snapshot into the history file.
 //! * `trace --out <file>` — dump the generated traces to JSON.
 //! * `serve` — run the end-to-end serving demo on the AOT-compiled MoE model
 //!   (requires `make artifacts`).
@@ -23,7 +25,11 @@ use aurora::config::EvalConfig;
 use aurora::eval::{multi_workload, run_figure, skewed_workload, Workloads};
 use aurora::planner::{Planner, ReplicationConfig};
 use aurora::schedule::SchedulePolicy;
-use aurora::sim::{simulate_colocated, simulate_exclusive};
+use aurora::obs::timeline::TimelineRecorder;
+use aurora::sim::{
+    simulate_colocated, simulate_colocated_recorded, simulate_exclusive,
+    simulate_exclusive_recorded, simulate_group_topology_recorded,
+};
 use aurora::trace::{trace_to_json, ModelTrace};
 use aurora::util::Json;
 
@@ -61,10 +67,11 @@ fn usage() {
         "aurora — MoE inference optimization (paper reproduction)
 
 USAGE:
-  aurora eval     --figure <11a|11b|11c|11d|12|13|14|a1|a2|ablation|multi|replication|online|topology|all> [--config f.json] [--json out.json]
+  aurora eval     --figure <11a|11b|11c|11d|12|13|14|a1|a2|ablation|multi|replication|online|topology|utilization|all> [--config f.json] [--json out.json]
   aurora plan     --cluster <homo|hetero> --models <N> [--experts-per-gpu <K>] [--replicas <R>] [--skew <ALPHA>] [--groups <G> --oversub <F>] [--config f.json]
   aurora simulate --cluster <homo|hetero> --models <N> [--experts-per-gpu <K>] [--replicas <R>] [--skew <ALPHA>] [--groups <G> --oversub <F>] [--policy aurora|sjf|ljf|pairwise|rcs]
   aurora bench    [--out BENCH_planner.json] [--budget-ms N] [--groups <G> --oversub <F>] [--check [--max-regress R]]
+  aurora bench    --merge-measured <artifact.json> [--out BENCH_planner.json]
   aurora trace    --out <file.json> [--config f.json]
   aurora serve    [--artifacts DIR] [--requests N] [--batch N] [--policy aurora|rcs]
   aurora serve-sim [--drift ALPHA] [--windows N] [--rotate-every N] [--strategy static|periodic|coordinator|oracle|all] [--noise] [--groups <G> --oversub <F>] [--config f.json]
@@ -85,6 +92,14 @@ USAGE:
   --trace-out F        plan/simulate/serve-sim/profile: write the run's span trace as Chrome
                        trace-event JSON (open in chrome://tracing or Perfetto)
   --metrics-out F      plan/simulate/serve-sim: write a metrics-registry JSON snapshot
+  --timeline-out F     simulate: record the first layer's GPU/link timeline, print the
+                       per-GPU utilization breakdown, and write it as Chrome trace JSON
+  --slo-p99-ms T       serve-sim: arm the coordinator's SLO watchdog — replan when the
+                       rolling p99 window latency exceeds T ms (emergency override of
+                       the drift/gain/cost gates; cooldown still applies)
+  --merge-measured F   bench: append the snapshot measured in F (a bench history, legacy
+                       single-snapshot, or .rejected.json artifact) to --out instead of
+                       running benchmarks; prints the measured-vs-committed diff
 "
     );
 }
@@ -189,6 +204,33 @@ fn write_obs_outputs(
             .map_err(|e| format!("{path}: {e}"))?;
         eprintln!("wrote {path}");
     }
+    Ok(())
+}
+
+/// GPU/link timeline recorder when `--timeline-out` was given, disabled
+/// (no-op) otherwise. The simulate paths record their *first* layer only:
+/// every layer restarts the clock at t = 0, so one layer is one timeline.
+fn timeline_recorder_for(opts: &Opts, n_gpus: usize) -> TimelineRecorder {
+    if opts.get("timeline-out").is_some() {
+        TimelineRecorder::new(n_gpus)
+    } else {
+        TimelineRecorder::disabled()
+    }
+}
+
+/// Write the `--timeline-out` artifact and print the utilization breakdown
+/// table, if a timeline was recorded.
+fn write_timeline(opts: &Opts, rec: &mut TimelineRecorder) -> Result<(), String> {
+    let Some(path) = opts.get("timeline-out") else {
+        return Ok(());
+    };
+    let tl = rec
+        .take()
+        .ok_or("--timeline-out: no timeline was recorded for this scenario")?;
+    std::fs::write(path, tl.to_chrome_string()).map_err(|e| format!("{path}: {e}"))?;
+    eprintln!("wrote {path}");
+    println!();
+    println!("{}", tl.render_table());
     Ok(())
 }
 
@@ -507,6 +549,19 @@ fn cmd_simulate(opts: &Opts) -> Result<(), String> {
                 res.comm_ms
             );
         }
+        // Timeline: re-run the first layer with the recorder on (recording
+        // is observational, so this reproduces layer 1's numbers exactly).
+        let mut rec = timeline_recorder_for(opts, cluster.len());
+        if rec.is_enabled() {
+            let projected: Vec<aurora::sim::MoeLayerStats> = refs
+                .iter()
+                .enumerate()
+                .map(|(m, t)| rep.project_layer_split(m, &t.layers[0], &splits))
+                .collect();
+            let prefs: Vec<&aurora::sim::MoeLayerStats> = projected.iter().collect();
+            simulate_group_topology_recorded(&prefs, &cluster, &topo, policy, &mut rec);
+        }
+        write_timeline(opts, &mut rec)?;
         span_metrics(&tr, &metrics);
         write_obs_outputs(opts, &tr, &metrics)?;
         return Ok(());
@@ -517,8 +572,13 @@ fn cmd_simulate(opts: &Opts) -> Result<(), String> {
             let sp = tr.begin("planner.plan_classic");
             let plan = planner.plan_exclusive(&w.b16_coco, &cluster);
             tr.end(sp);
+            let mut rec = timeline_recorder_for(opts, cluster.len());
             for (k, layer) in plan.place_a(&w.b16_coco).iter().enumerate() {
-                let (res, _) = simulate_exclusive(layer, &cluster, policy);
+                let (res, _) = if k == 0 {
+                    simulate_exclusive_recorded(layer, &cluster, policy, &mut rec)
+                } else {
+                    simulate_exclusive(layer, &cluster, policy)
+                };
                 println!(
                     "layer {}: inference {:.3} ms, util {:.1}%, comm {:.3} ms",
                     k + 1,
@@ -527,6 +587,7 @@ fn cmd_simulate(opts: &Opts) -> Result<(), String> {
                     res.comm_ms
                 );
             }
+            write_timeline(opts, &mut rec)?;
         }
         (2, None, Topology::BigSwitch) => {
             let w = Workloads::generate(&cfg);
@@ -535,8 +596,13 @@ fn cmd_simulate(opts: &Opts) -> Result<(), String> {
             tr.end(sp);
             let pa = plan.place_a(&w.b16_coco);
             let pb = plan.place_b(&w.b32_coco);
+            let mut rec = timeline_recorder_for(opts, cluster.len());
             for (k, (la, lb)) in pa.iter().zip(&pb).enumerate() {
-                let (res, _) = simulate_colocated(la, lb, &cluster, policy);
+                let (res, _) = if k == 0 {
+                    simulate_colocated_recorded(la, lb, &cluster, policy, &mut rec)
+                } else {
+                    simulate_colocated(la, lb, &cluster, policy)
+                };
                 println!(
                     "layer {}: inference {:.3} ms, util {:.1}%, agg comm {:.3} ms",
                     k + 1,
@@ -545,6 +611,7 @@ fn cmd_simulate(opts: &Opts) -> Result<(), String> {
                     res.comm_ms
                 );
             }
+            write_timeline(opts, &mut rec)?;
         }
         _ => {
             // Generalized path: N models, K experts per GPU slot, any
@@ -572,6 +639,19 @@ fn cmd_simulate(opts: &Opts) -> Result<(), String> {
                     res.comm_ms
                 );
             }
+            // Timeline: re-run the first layer with the recorder on
+            // (observational — reproduces layer 1's numbers exactly).
+            let mut rec = timeline_recorder_for(opts, cluster.len());
+            if rec.is_enabled() {
+                let projected: Vec<aurora::sim::MoeLayerStats> = refs
+                    .iter()
+                    .enumerate()
+                    .map(|(m, t)| dep.project_layer(m, &t.layers[0]))
+                    .collect();
+                let prefs: Vec<&aurora::sim::MoeLayerStats> = projected.iter().collect();
+                simulate_group_topology_recorded(&prefs, &cluster, &topo, policy, &mut rec);
+            }
+            write_timeline(opts, &mut rec)?;
         }
     }
     span_metrics(&tr, &metrics);
@@ -592,6 +672,9 @@ fn cmd_bench(opts: &Opts) -> Result<(), String> {
     use std::time::Duration;
 
     let out = opts.get("out").unwrap_or("BENCH_planner.json");
+    if let Some(artifact) = opts.get("merge-measured") {
+        return merge_measured(artifact, out);
+    }
     let budget_ms: u64 = opts
         .get("budget-ms")
         .unwrap_or("200")
@@ -776,27 +859,7 @@ fn cmd_bench(opts: &Opts) -> Result<(), String> {
         ("budget_ms", Json::from(budget_ms)),
         ("benchmarks", Json::Arr(benchmarks)),
     ]);
-    let mut history: Vec<Json> = match std::fs::read_to_string(out) {
-        // no existing file: start a fresh history
-        Err(_) => Vec::new(),
-        // never silently discard an existing trajectory: a file we cannot
-        // understand is an error, not an empty history
-        Ok(text) => {
-            let v = Json::parse(&text).map_err(|e| {
-                format!("{out}: existing bench file is not valid JSON ({e}); move it aside to start a new history")
-            })?;
-            match v.get("history").and_then(|h| h.as_arr()) {
-                Some(arr) => arr.to_vec(),
-                // legacy single-snapshot file: keep it as the first entry
-                None if v.get("benchmarks").is_some() => vec![v.clone()],
-                None => {
-                    return Err(format!(
-                        "{out}: unrecognized bench file format; move it aside to start a new history"
-                    ))
-                }
-            }
-        }
-    };
+    let mut history: Vec<Json> = read_bench_history(out)?;
     // Gate BEFORE appending: a failed run must not become the next
     // baseline, or re-running the check would silently pass against the
     // regressed numbers it just rejected.
@@ -848,6 +911,84 @@ fn cmd_bench(opts: &Opts) -> Result<(), String> {
     Ok(())
 }
 
+/// Read a bench history file into its list of snapshots. A missing file is
+/// an empty history; an unparseable one is an error — never silently discard
+/// an existing trajectory. Accepts the `{"history": [...]}` format and the
+/// legacy single-snapshot format (kept as the first entry).
+fn read_bench_history(path: &str) -> Result<Vec<Json>, String> {
+    match std::fs::read_to_string(path) {
+        Err(_) => Ok(Vec::new()),
+        Ok(text) => {
+            let v = Json::parse(&text).map_err(|e| {
+                format!("{path}: existing bench file is not valid JSON ({e}); move it aside to start a new history")
+            })?;
+            match v.get("history").and_then(|h| h.as_arr()) {
+                Some(arr) => Ok(arr.to_vec()),
+                None if v.get("benchmarks").is_some() => Ok(vec![v.clone()]),
+                None => Err(format!(
+                    "{path}: unrecognized bench file format; move it aside to start a new history"
+                )),
+            }
+        }
+    }
+}
+
+/// `bench --merge-measured`: fold a CI-measured snapshot into the committed
+/// history file without running any benchmark. The artifact may be a bench
+/// history (its last snapshot is taken), a legacy single snapshot, or the
+/// `.rejected.json` file a failed `--check` leaves behind. Prints the
+/// measured-vs-committed diff — every case slower than the committed
+/// baseline, via [`aurora::util::bench::compare_entries`] at ratio 1.0 —
+/// then appends. Prior history entries (including the provenance note on
+/// the first, hand-estimated one) are carried over verbatim.
+fn merge_measured(artifact: &str, out: &str) -> Result<(), String> {
+    use aurora::util::bench::compare_entries;
+
+    let text = std::fs::read_to_string(artifact).map_err(|e| format!("{artifact}: {e}"))?;
+    let v = Json::parse(&text).map_err(|e| format!("{artifact}: not valid JSON ({e})"))?;
+    let measured = if let Some(arr) = v.get("history").and_then(|h| h.as_arr()) {
+        arr.last()
+            .cloned()
+            .ok_or_else(|| format!("{artifact}: empty history"))?
+    } else if let Some(rejected) = v.get("rejected") {
+        rejected.clone()
+    } else if v.get("benchmarks").is_some() {
+        v.clone()
+    } else {
+        return Err(format!(
+            "{artifact}: unrecognized bench artifact (expected a history, a single \
+             snapshot, or a rejected-snapshot file)"
+        ));
+    };
+    if measured.get("benchmarks").is_none() {
+        return Err(format!("{artifact}: snapshot has no 'benchmarks' array"));
+    }
+    let mut history = read_bench_history(out)?;
+    match history.last() {
+        None => println!("merge-measured: no committed snapshot in {out}; nothing to diff"),
+        Some(prev) => {
+            let slower = compare_entries(prev, &measured, 1.0);
+            if slower.is_empty() {
+                println!("merge-measured: no case slower than the committed baseline");
+            } else {
+                println!(
+                    "merge-measured: {} case(s) slower than the committed baseline:",
+                    slower.len()
+                );
+                for r in &slower {
+                    println!("  {}", r.report());
+                }
+            }
+        }
+    }
+    history.push(measured);
+    let n_snapshots = history.len();
+    let doc = Json::obj(vec![("history", Json::Arr(history))]);
+    std::fs::write(out, doc.to_string_compact()).map_err(|e| format!("{out}: {e}"))?;
+    println!("wrote {out} ({n_snapshots} snapshot(s))");
+    Ok(())
+}
+
 /// Drifting-Zipf online-serving simulation: static plan vs periodic
 /// replanning vs the cost-aware coordinator vs a zero-cost oracle, with
 /// per-window p50/p95/p99 serving-time percentiles.
@@ -886,6 +1027,15 @@ fn cmd_serve_sim(opts: &Opts) -> Result<(), String> {
     // Two-tier serving: candidate plans localize, and migrations are charged
     // for the uplinks their weight transfers cross.
     ocfg.coordinator.topology = parse_topology(opts, cluster.len())?;
+    // SLO watchdog: a rolling-p99 violation overrides the drift/gain/cost
+    // gates and forces a replan (cooldown still applies).
+    if let Some(s) = opts.get("slo-p99-ms") {
+        let target: f64 = s.parse().map_err(|_| "bad --slo-p99-ms")?;
+        if !(target > 0.0) || !target.is_finite() {
+            return Err("--slo-p99-ms must be a positive number".into());
+        }
+        ocfg.coordinator.slo_p99_ms = Some(target);
+    }
 
     let strategies: Vec<OnlineStrategy> = match opts.get("strategy").unwrap_or("all") {
         "static" => vec![OnlineStrategy::Static],

@@ -31,13 +31,33 @@
 //! The [`profile`] module drives a full plan + schedule run under a
 //! wall-clock tracer and renders the per-phase time breakdown table behind
 //! the CLI `profile` subcommand.
+//!
+//! On top of the substrate sit two analysis layers:
+//!
+//! * **Timelines** ([`timeline`]) — a [`TimelineRecorder`] threaded through
+//!   every simulator attributes each GPU-millisecond to a typed segment
+//!   (compute / comm send / comm recv / sync-wait / swap-drain / idle) per
+//!   GPU engine and per access link, derives utilization and per-kind
+//!   breakdowns, and exports multi-track Chrome traces. Same no-op
+//!   contract as the tracer: recording never changes simulator results.
+//! * **SLO watchdog** ([`slo`]) — a [`SloMonitor`] tracks rolling-window
+//!   p50/p95/p99 of serving latencies and flags p99 violations, which the
+//!   coordinator turns into emergency replans (decision verdicts
+//!   `slo_triggered` / `slo_suppressed_cooldown`).
 
 pub mod decision;
 pub mod metrics;
 pub mod profile;
+pub mod slo;
+pub mod timeline;
 pub mod tracer;
 
 pub use decision::DecisionRecord;
 pub use metrics::{p50_p95_p99, percentile, Histogram, MetricsError, MetricsRegistry};
 pub use profile::{run_profile, ProfileConfig, ProfileReport};
+pub use slo::{SloMonitor, SloStatus};
+pub use timeline::{
+    mean_busy_fraction, schedule_round_occupancy, Breakdown, GpuTimeline, KindShare, LinkTimeline,
+    RoundOccupancy, Segment, SegmentKind, TimelineRecorder, Timelines,
+};
 pub use tracer::{parse_chrome_trace, Span, SpanId, SpanScope, Tracer};

@@ -1,0 +1,232 @@
+//! SLO watchdog: rolling tail-latency quantiles + violation detection.
+//!
+//! [`SloMonitor`] watches per-window serving latencies and answers one
+//! question: *is the rolling p99 above the target?* It keeps
+//!
+//! * a bounded rolling window of the most recent finite samples, over which
+//!   [`SloMonitor::status`] computes exact nearest-rank p50/p95/p99 (via
+//!   [`crate::obs::metrics::p50_p95_p99`]), and
+//! * a cumulative [`Histogram`] of the full stream for cheap long-run
+//!   quantiles, reusing the metrics substrate.
+//!
+//! **Trigger semantics** (pinned by a property test): the monitor is
+//! violating iff the rolling p99 strictly exceeds the target — no
+//! hysteresis, no smoothing. The burn rate is reported alongside as a
+//! diagnostic: the fraction of window samples over target divided by the
+//! 1% error budget, in the style of burn-rate SLO alerting (≥ 1 means the
+//! budget is being consumed faster than sustainable). Non-finite or
+//! negative samples are dropped and counted, mirroring [`Histogram`]'s
+//! discipline, so NaN/∞-laced streams cannot poison the quantiles.
+//!
+//! The coordinator owns one monitor when configured with a latency SLO
+//! (`CoordinatorConfig::slo_p99_ms`) and uses a violation as an *emergency*
+//! replan trigger — see `coordinator` module docs for how it interacts
+//! with the drift trigger and the cooldown gate.
+
+use crate::obs::metrics::{p50_p95_p99, Histogram};
+use std::collections::VecDeque;
+
+/// Quantiles and violation verdict over the current rolling window.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloStatus {
+    /// Rolling-window median latency (ms); 0 when the window is empty.
+    pub p50_ms: f64,
+    /// Rolling-window p95 (ms).
+    pub p95_ms: f64,
+    /// Rolling-window p99 (ms).
+    pub p99_ms: f64,
+    /// `p99_ms > target` — the replan trigger.
+    pub violating: bool,
+    /// Fraction of window samples over target divided by the 1% budget.
+    pub burn_rate: f64,
+}
+
+/// Rolling-window p50/p95/p99 tracker with a p99 violation trigger.
+#[derive(Debug, Clone)]
+pub struct SloMonitor {
+    target_p99_ms: f64,
+    window: usize,
+    samples: VecDeque<f64>,
+    hist: Histogram,
+    dropped: u64,
+    violations: u64,
+}
+
+impl SloMonitor {
+    /// Monitor targeting `target_p99_ms` over a rolling window of `window`
+    /// samples. `target_p99_ms` must be positive and finite; `window ≥ 1`.
+    pub fn new(target_p99_ms: f64, window: usize) -> Self {
+        assert!(
+            target_p99_ms.is_finite() && target_p99_ms > 0.0,
+            "SLO target must be positive and finite"
+        );
+        assert!(window >= 1, "rolling window must hold at least one sample");
+        Self {
+            target_p99_ms,
+            window,
+            samples: VecDeque::with_capacity(window),
+            hist: Histogram::new(),
+            dropped: 0,
+            violations: 0,
+        }
+    }
+
+    /// Record one window latency and return the updated status. Non-finite
+    /// or negative samples are dropped (counted) and leave the window
+    /// unchanged.
+    pub fn observe(&mut self, latency_ms: f64) -> SloStatus {
+        if latency_ms.is_finite() && latency_ms >= 0.0 {
+            self.hist.record(latency_ms);
+            if self.samples.len() == self.window {
+                self.samples.pop_front();
+            }
+            self.samples.push_back(latency_ms);
+        } else {
+            self.dropped += 1;
+        }
+        let st = self.status();
+        if st.violating {
+            self.violations += 1;
+        }
+        st
+    }
+
+    /// Current rolling-window status without recording anything.
+    pub fn status(&self) -> SloStatus {
+        if self.samples.is_empty() {
+            return SloStatus {
+                p50_ms: 0.0,
+                p95_ms: 0.0,
+                p99_ms: 0.0,
+                violating: false,
+                burn_rate: 0.0,
+            };
+        }
+        let xs: Vec<f64> = self.samples.iter().copied().collect();
+        let (p50, p95, p99) = p50_p95_p99(&xs).expect("window holds only finite samples");
+        let over = xs.iter().filter(|&&x| x > self.target_p99_ms).count();
+        SloStatus {
+            p50_ms: p50,
+            p95_ms: p95,
+            p99_ms: p99,
+            violating: p99 > self.target_p99_ms,
+            burn_rate: over as f64 / xs.len() as f64 / 0.01,
+        }
+    }
+
+    /// Whether the rolling p99 currently exceeds the target.
+    pub fn is_violating(&self) -> bool {
+        self.status().violating
+    }
+
+    /// Forget the rolling window (e.g. after a replan installs a new
+    /// deployment) — the cumulative histogram and counters are kept.
+    pub fn reset_window(&mut self) {
+        self.samples.clear();
+    }
+
+    /// Configured p99 target (ms).
+    pub fn target_p99_ms(&self) -> f64 {
+        self.target_p99_ms
+    }
+
+    /// Rolling window capacity in samples.
+    pub fn window(&self) -> usize {
+        self.window
+    }
+
+    /// Samples currently in the rolling window.
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// True when no finite sample has been observed since the last reset.
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Non-finite/negative samples dropped so far.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Observations whose updated status was violating.
+    pub fn violations(&self) -> u64 {
+        self.violations
+    }
+
+    /// Cumulative full-stream latency histogram.
+    pub fn histogram(&self) -> &Histogram {
+        &self.hist
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_monitor_not_violating() {
+        let m = SloMonitor::new(10.0, 8);
+        assert!(!m.is_violating());
+        assert_eq!(m.status().p99_ms, 0.0);
+        assert!(m.is_empty());
+    }
+
+    #[test]
+    fn fires_iff_rolling_p99_exceeds_target() {
+        let mut m = SloMonitor::new(10.0, 4);
+        for _ in 0..4 {
+            assert!(!m.observe(5.0).violating);
+        }
+        // one spike: p99 (nearest-rank max of 4 samples) jumps above target
+        let st = m.observe(50.0);
+        assert!(st.violating && st.p99_ms == 50.0);
+        // spike rolls out of the window after 4 more good samples
+        for _ in 0..3 {
+            assert!(m.observe(5.0).violating);
+        }
+        assert!(!m.observe(5.0).violating);
+    }
+
+    #[test]
+    fn adversarial_samples_dropped_not_counted() {
+        let mut m = SloMonitor::new(10.0, 4);
+        m.observe(2.0);
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY, -1.0] {
+            let st = m.observe(bad);
+            assert!(!st.violating, "{bad} must not trip the SLO");
+        }
+        assert_eq!(m.dropped(), 4);
+        assert_eq!(m.len(), 1);
+    }
+
+    #[test]
+    fn exactly_at_target_is_not_a_violation() {
+        let mut m = SloMonitor::new(10.0, 4);
+        assert!(!m.observe(10.0).violating);
+        assert!(m.observe(10.0 + 1e-9).violating);
+    }
+
+    #[test]
+    fn reset_window_keeps_history() {
+        let mut m = SloMonitor::new(1.0, 4);
+        m.observe(5.0);
+        assert!(m.is_violating());
+        m.reset_window();
+        assert!(!m.is_violating());
+        assert_eq!(m.histogram().count(), 1);
+        assert!(m.violations() >= 1);
+    }
+
+    #[test]
+    fn burn_rate_scales_with_violation_fraction() {
+        let mut m = SloMonitor::new(10.0, 4);
+        m.observe(5.0);
+        m.observe(5.0);
+        m.observe(50.0);
+        let st = m.observe(50.0);
+        // half the window over target against a 1% budget
+        assert!((st.burn_rate - 50.0).abs() < 1e-9);
+    }
+}

@@ -13,6 +13,10 @@
 use std::time::{Duration, Instant};
 
 pub use crate::obs::metrics::{p50_p95_p99, percentile, MetricsError};
+// The SLO layer consumes these same tail statistics: a serving loop that
+// already tracks latencies here can feed an [`SloMonitor`] directly and get
+// the coordinator's emergency-replan trigger for free.
+pub use crate::obs::slo::{SloMonitor, SloStatus};
 
 /// Percentile summary of recorded latencies.
 #[derive(Debug, Clone, PartialEq)]

@@ -18,7 +18,8 @@
 use super::stats::MoeLayerStats;
 use super::SimResult;
 use crate::cluster::Cluster;
-use crate::schedule::{comm_time, SchedulePolicy};
+use crate::obs::timeline::{mean_busy_fraction, TimelineRecorder};
+use crate::schedule::{aurora_schedule, comm_time, SchedulePolicy};
 
 /// The Table 2 component end times (ms), all measured from the layer start.
 #[derive(Debug, Clone, PartialEq)]
@@ -56,6 +57,19 @@ pub fn simulate_colocated(
     b: &MoeLayerStats,
     cluster: &Cluster,
     policy: SchedulePolicy,
+) -> (SimResult, ColocatedBreakdown) {
+    simulate_colocated_recorded(a, b, cluster, policy, &mut TimelineRecorder::disabled())
+}
+
+/// [`simulate_colocated`] with timeline recording through `rec`
+/// (observational only — the result is bit-for-bit that of
+/// [`simulate_colocated`]). Model `a` records as model 0, `b` as model 1.
+pub fn simulate_colocated_recorded(
+    a: &MoeLayerStats,
+    b: &MoeLayerStats,
+    cluster: &Cluster,
+    policy: SchedulePolicy,
+    rec: &mut TimelineRecorder,
 ) -> (SimResult, ColocatedBreakdown) {
     let n = a.n_experts();
     assert_eq!(n, b.n_experts(), "colocated models span the same GPUs");
@@ -117,11 +131,56 @@ pub fn simulate_colocated(
     let per_gpu_compute: Vec<f64> = (0..n)
         .map(|g| gate_a[g] + ffn_a[g] + agg_a[g] + gate_b[g] + ffn_b[g] + agg_b[g])
         .collect();
-    let utilization = if end > 0.0 {
-        per_gpu_compute.iter().sum::<f64>() / n as f64 / end
-    } else {
-        0.0
-    };
+    let utilization = mean_busy_fraction(&per_gpu_compute, end);
+
+    if rec.is_enabled() {
+        // Engine timeline: replay the Fig. 7 interleaving per GPU with the
+        // event-sim start rule (engine free AND phase data ready), which the
+        // Table 2 phase-end maxima bound from above.
+        fn run(
+            free_at: &mut [f64],
+            rec: &mut TimelineRecorder,
+            model: usize,
+            g: usize,
+            ready: f64,
+            dur: f64,
+        ) {
+            let start = free_at[g].max(ready);
+            rec.record_compute(g, model, start, start + dur);
+            free_at[g] = start + dur;
+        }
+        let mut free_at = vec![0.0f64; n];
+        for g in 0..n {
+            run(&mut free_at, rec, 1, g, 0.0, gate_b[g]);
+        }
+        for g in 0..n {
+            run(&mut free_at, rec, 0, g, e_n_a, ffn_a[g]);
+        }
+        for g in 0..n {
+            run(&mut free_at, rec, 1, g, e_n_b, ffn_b[g]);
+        }
+        for g in 0..n {
+            run(&mut free_at, rec, 0, g, e_c_a, agg_a[g]);
+        }
+        for g in 0..n {
+            run(&mut free_at, rec, 1, g, e_c_b, agg_b[g]);
+        }
+        for g in 0..n {
+            run(&mut free_at, rec, 0, g, e_a_b, gate_a[g]);
+        }
+        // Link timeline: the four collectives in chronological window order.
+        let rev_a = a.traffic.transpose();
+        let rev_b = b.traffic.transpose();
+        rec.record_comm(0, 0.0, e_n_a, &a.traffic, &bw);
+        rec.record_comm(1, e_gate_b, e_n_b, &b.traffic, &bw);
+        rec.record_comm(0, e_f_a.max(e_n_b), e_c_a, &rev_a, &bw);
+        rec.record_comm(1, e_f_b, e_c_b, &rev_b, &bw);
+        if matches!(policy, SchedulePolicy::Aurora) {
+            rec.record_rounds("N", &aurora_schedule(&a.traffic.sum(&b.traffic)));
+            rec.record_rounds("C", &aurora_schedule(&rev_a.sum(&rev_b)));
+        }
+        rec.set_makespan(end);
+    }
 
     let breakdown = ColocatedBreakdown {
         e_gate_b,

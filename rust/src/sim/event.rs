@@ -18,7 +18,8 @@
 //!   non-overlap constraint within a model).
 
 use crate::cluster::Cluster;
-use crate::schedule::{comm_time, SchedulePolicy};
+use crate::obs::timeline::TimelineRecorder;
+use crate::schedule::{aurora_schedule, comm_time, SchedulePolicy};
 use crate::sim::MoeLayerStats;
 
 /// One simulated task's execution record.
@@ -66,6 +67,21 @@ impl Engines {
         self.busy[g] += dur;
         end
     }
+
+    /// [`Engines::run`] mirrored into the timeline recorder.
+    fn run_rec(
+        &mut self,
+        rec: &mut TimelineRecorder,
+        model: usize,
+        g: usize,
+        ready: f64,
+        dur: f64,
+    ) -> f64 {
+        let start = self.free_at[g].max(ready);
+        let end = self.run(g, ready, dur);
+        rec.record_compute(g, model, start, end);
+        end
+    }
 }
 
 /// Event-driven execution of one **exclusive** MoE layer (stats GPU-indexed).
@@ -73,6 +89,17 @@ pub fn event_sim_exclusive(
     stats: &MoeLayerStats,
     cluster: &Cluster,
     policy: SchedulePolicy,
+) -> EventSimResult {
+    event_sim_exclusive_recorded(stats, cluster, policy, &mut TimelineRecorder::disabled())
+}
+
+/// [`event_sim_exclusive`] with timeline recording through `rec`
+/// (observational only).
+pub fn event_sim_exclusive_recorded(
+    stats: &MoeLayerStats,
+    cluster: &Cluster,
+    policy: SchedulePolicy,
+    rec: &mut TimelineRecorder,
 ) -> EventSimResult {
     let n = stats.n_experts();
     assert_eq!(n, cluster.len());
@@ -83,7 +110,7 @@ pub fn event_sim_exclusive(
     let loads = stats.expert_loads();
     let gate_end: Vec<f64> = (0..n)
         .map(|g| {
-            let end = engines.run(g, 0.0, stats.gate_ms / cluster.gpu(g).flops_scale);
+            let end = engines.run_rec(rec, 0, g, 0.0, stats.gate_ms / cluster.gpu(g).flops_scale);
             tasks.push(TaskTrace {
                 label: format!("G@{g}"),
                 start: end - stats.gate_ms / cluster.gpu(g).flops_scale,
@@ -107,7 +134,7 @@ pub fn event_sim_exclusive(
     let ffn_end: Vec<f64> = (0..n)
         .map(|g| {
             let dur = loads[g] as f64 * stats.ffn_ms_per_token / cluster.gpu(g).flops_scale;
-            let end = engines.run(g, n_end, dur);
+            let end = engines.run_rec(rec, 0, g, n_end, dur);
             tasks.push(TaskTrace {
                 label: format!("F@{g}"),
                 start: end - dur,
@@ -130,7 +157,7 @@ pub fn event_sim_exclusive(
     let agg_end: Vec<f64> = (0..n)
         .map(|g| {
             let dur = stats.agg_ms / cluster.gpu(g).flops_scale;
-            let end = engines.run(g, c_end, dur);
+            let end = engines.run_rec(rec, 0, g, c_end, dur);
             tasks.push(TaskTrace {
                 label: format!("A@{g}"),
                 start: end - dur,
@@ -140,8 +167,19 @@ pub fn event_sim_exclusive(
         })
         .collect();
 
+    let makespan = agg_end.iter().cloned().fold(0.0, f64::max);
+    if rec.is_enabled() {
+        let reversed = stats.traffic.transpose();
+        rec.record_comm(0, n_ready, n_end, &stats.traffic, &bw);
+        rec.record_comm(0, c_ready, c_end, &reversed, &bw);
+        if matches!(policy, SchedulePolicy::Aurora) {
+            rec.record_rounds("N", &aurora_schedule(&stats.traffic));
+            rec.record_rounds("C", &aurora_schedule(&reversed));
+        }
+        rec.set_makespan(makespan);
+    }
     EventSimResult {
-        makespan: agg_end.iter().cloned().fold(0.0, f64::max),
+        makespan,
         compute_busy: engines.busy,
         tasks,
     }
@@ -155,6 +193,18 @@ pub fn event_sim_colocated(
     b: &MoeLayerStats,
     cluster: &Cluster,
     policy: SchedulePolicy,
+) -> EventSimResult {
+    event_sim_colocated_recorded(a, b, cluster, policy, &mut TimelineRecorder::disabled())
+}
+
+/// [`event_sim_colocated`] with timeline recording through `rec`
+/// (observational only; model 0 = `a`, model 1 = `b`).
+pub fn event_sim_colocated_recorded(
+    a: &MoeLayerStats,
+    b: &MoeLayerStats,
+    cluster: &Cluster,
+    policy: SchedulePolicy,
+    rec: &mut TimelineRecorder,
 ) -> EventSimResult {
     let n = a.n_experts();
     assert_eq!(n, b.n_experts());
@@ -170,7 +220,7 @@ pub fn event_sim_colocated(
 
     // G^b on every GPU at t=0; N^a occupies the switch from t=0.
     let gate_b_end: Vec<f64> = (0..n)
-        .map(|g| engines.run(g, 0.0, scale(b.gate_ms, g)))
+        .map(|g| engines.run_rec(rec, 1, g, 0.0, scale(b.gate_ms, g)))
         .collect();
     let e_gate_b = max(&gate_b_end);
     tasks.push(TaskTrace {
@@ -190,7 +240,9 @@ pub fn event_sim_colocated(
     // F^a: needs N^a done and the GPU free (G^b holds it).
     let f_a_end: Vec<f64> = (0..n)
         .map(|g| {
-            engines.run(
+            engines.run_rec(
+                rec,
+                0,
                 g,
                 e_n_a,
                 scale(loads_a[g] as f64 * a.ffn_ms_per_token, g),
@@ -218,7 +270,9 @@ pub fn event_sim_colocated(
     // F^b: data at E_{N^b}; engine busy with F^a.
     let f_b_end: Vec<f64> = (0..n)
         .map(|g| {
-            engines.run(
+            engines.run_rec(
+                rec,
+                1,
                 g,
                 e_n_b,
                 scale(loads_b[g] as f64 * b.ffn_ms_per_token, g),
@@ -243,7 +297,7 @@ pub fn event_sim_colocated(
 
     // A^a after C^a, competing with F^b for the engine.
     let a_a_end: Vec<f64> = (0..n)
-        .map(|g| engines.run(g, e_c_a, scale(a.agg_ms, g)))
+        .map(|g| engines.run_rec(rec, 0, g, e_c_a, scale(a.agg_ms, g)))
         .collect();
     let e_a_a = max(&a_a_end);
     tasks.push(TaskTrace {
@@ -270,7 +324,7 @@ pub fn event_sim_colocated(
 
     // A^b after C^b and A^a.
     let a_b_end: Vec<f64> = (0..n)
-        .map(|g| engines.run(g, e_c_b, scale(b.agg_ms, g)))
+        .map(|g| engines.run_rec(rec, 1, g, e_c_b, scale(b.agg_ms, g)))
         .collect();
     let e_a_b = max(&a_b_end);
     tasks.push(TaskTrace {
@@ -281,7 +335,7 @@ pub fn event_sim_colocated(
 
     // Next layer's G^a closes the round (Eqn. 4).
     let g_a_end: Vec<f64> = (0..n)
-        .map(|g| engines.run(g, e_a_b, scale(a.gate_ms, g)))
+        .map(|g| engines.run_rec(rec, 0, g, e_a_b, scale(a.gate_ms, g)))
         .collect();
     let makespan = max(&g_a_end);
     tasks.push(TaskTrace {
@@ -289,6 +343,22 @@ pub fn event_sim_colocated(
         start: e_a_b,
         end: makespan,
     });
+
+    if rec.is_enabled() {
+        // Comm windows in chronological start order (N^a, N^b, C^a, C^b —
+        // the C^a floor max(E_{F^a}, E_{N^b}) never exceeds E_{F^b}).
+        let rev_a = a.traffic.transpose();
+        let rev_b = b.traffic.transpose();
+        rec.record_comm(0, 0.0, e_n_a, &a.traffic, &bw);
+        rec.record_comm(1, e_gate_b, e_n_b, &b.traffic, &bw);
+        rec.record_comm(0, e_f_a.max(e_n_b), e_c_a, &rev_a, &bw);
+        rec.record_comm(1, e_f_b, e_c_b, &rev_b, &bw);
+        if matches!(policy, SchedulePolicy::Aurora) {
+            rec.record_rounds("N", &aurora_schedule(&a.traffic.sum(&b.traffic)));
+            rec.record_rounds("C", &aurora_schedule(&rev_a.sum(&rev_b)));
+        }
+        rec.set_makespan(makespan);
+    }
 
     EventSimResult {
         makespan,

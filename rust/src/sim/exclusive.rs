@@ -3,7 +3,8 @@
 use super::stats::MoeLayerStats;
 use super::SimResult;
 use crate::cluster::Cluster;
-use crate::schedule::{comm_time, SchedulePolicy};
+use crate::obs::timeline::{mean_busy_fraction, TimelineRecorder};
+use crate::schedule::{aurora_schedule, comm_time, SchedulePolicy};
 
 /// Per-phase breakdown of one exclusive MoE layer (Eqn. 3 terms).
 #[derive(Debug, Clone, PartialEq)]
@@ -42,6 +43,18 @@ pub fn simulate_exclusive(
     cluster: &Cluster,
     policy: SchedulePolicy,
 ) -> (SimResult, ExclusiveBreakdown) {
+    simulate_exclusive_recorded(stats, cluster, policy, &mut TimelineRecorder::disabled())
+}
+
+/// [`simulate_exclusive`] with timeline recording through `rec`
+/// (observational only — the result is bit-for-bit that of
+/// [`simulate_exclusive`]).
+pub fn simulate_exclusive_recorded(
+    stats: &MoeLayerStats,
+    cluster: &Cluster,
+    policy: SchedulePolicy,
+    rec: &mut TimelineRecorder,
+) -> (SimResult, ExclusiveBreakdown) {
     let n = stats.n_experts();
     assert_eq!(
         n,
@@ -75,11 +88,28 @@ pub fn simulate_exclusive(
     };
 
     let t = breakdown.total_ms();
-    let utilization = if t > 0.0 {
-        breakdown.per_gpu_compute_ms.iter().sum::<f64>() / (n as f64) / t
-    } else {
-        0.0
-    };
+    let utilization = mean_busy_fraction(&breakdown.per_gpu_compute_ms, t);
+
+    if rec.is_enabled() {
+        // Phase windows per Eqn. 3 (barrier-separated): gate [0, max G],
+        // comm1, FFN from a common start, comm2, aggregation.
+        let ffn_start = breakdown.gate_ms + breakdown.comm1_ms;
+        let agg_start = ffn_start + breakdown.ffn_ms + breakdown.comm2_ms;
+        for g in 0..n {
+            rec.record_compute(g, 0, 0.0, gate[g]);
+            rec.record_compute(g, 0, ffn_start, ffn_start + ffn[g]);
+            rec.record_compute(g, 0, agg_start, agg_start + agg[g]);
+        }
+        let reversed = stats.traffic.transpose();
+        rec.record_comm(0, breakdown.gate_ms, ffn_start, &stats.traffic, &bw);
+        rec.record_comm(0, ffn_start + breakdown.ffn_ms, agg_start, &reversed, &bw);
+        if matches!(policy, SchedulePolicy::Aurora) {
+            rec.record_rounds("N", &aurora_schedule(&stats.traffic));
+            rec.record_rounds("C", &aurora_schedule(&reversed));
+        }
+        rec.set_makespan(t);
+    }
+
     (
         SimResult {
             inference_ms: t,

@@ -32,7 +32,8 @@
 use super::stats::MoeLayerStats;
 use super::SimResult;
 use crate::cluster::{Cluster, Topology};
-use crate::schedule::{comm_time, comm_time_on, SchedulePolicy};
+use crate::obs::timeline::{mean_busy_fraction, TimelineRecorder};
+use crate::schedule::{aurora_schedule, comm_time, comm_time_on, SchedulePolicy};
 use crate::traffic::TrafficMatrix;
 
 /// Per-model phase end times (ms from layer start) of a group simulation.
@@ -61,6 +62,17 @@ pub fn simulate_group(
     cluster: &Cluster,
     policy: SchedulePolicy,
 ) -> (SimResult, GroupBreakdown) {
+    simulate_group_recorded(models, cluster, policy, &mut TimelineRecorder::disabled())
+}
+
+/// [`simulate_group`] with timeline recording through `rec` (observational
+/// only — results are bit-for-bit those of [`simulate_group`]).
+pub fn simulate_group_recorded(
+    models: &[&MoeLayerStats],
+    cluster: &Cluster,
+    policy: SchedulePolicy,
+    rec: &mut TimelineRecorder,
+) -> (SimResult, GroupBreakdown) {
     assert!(!models.is_empty(), "group needs at least one model");
     let n = cluster.len();
     for s in models {
@@ -73,7 +85,7 @@ pub fn simulate_group(
 
     match models.len() {
         1 => {
-            let (res, b) = super::simulate_exclusive(models[0], cluster, policy);
+            let (res, b) = super::simulate_exclusive_recorded(models[0], cluster, policy, rec);
             let e_n = b.gate_ms + b.comm1_ms;
             let e_f = e_n + b.ffn_ms;
             let e_c = e_f + b.comm2_ms;
@@ -90,7 +102,8 @@ pub fn simulate_group(
             (res, breakdown)
         }
         2 => {
-            let (res, b) = super::simulate_colocated(models[0], models[1], cluster, policy);
+            let (res, b) =
+                super::simulate_colocated_recorded(models[0], models[1], cluster, policy, rec);
             let breakdown = GroupBreakdown {
                 e_n: vec![b.e_n_a, b.e_n_b],
                 e_f: vec![b.e_f_a, b.e_f_b],
@@ -102,7 +115,7 @@ pub fn simulate_group(
             };
             (res, breakdown)
         }
-        _ => simulate_many(models, cluster, policy),
+        _ => simulate_many(models, cluster, policy, rec),
     }
 }
 
@@ -122,8 +135,29 @@ pub fn simulate_group_topology(
     topo: &Topology,
     policy: SchedulePolicy,
 ) -> (SimResult, GroupBreakdown) {
+    simulate_group_topology_recorded(
+        models,
+        cluster,
+        topo,
+        policy,
+        &mut TimelineRecorder::disabled(),
+    )
+}
+
+/// [`simulate_group_topology`] with timeline recording through `rec`
+/// (observational only). On non-big-switch topologies the per-link comm
+/// segments price each GPU's access link only (the documented lower bound);
+/// per-round occupancy is recorded on the big-switch path only, where the
+/// flat slot schedule is the one actually executed.
+pub fn simulate_group_topology_recorded(
+    models: &[&MoeLayerStats],
+    cluster: &Cluster,
+    topo: &Topology,
+    policy: SchedulePolicy,
+    rec: &mut TimelineRecorder,
+) -> (SimResult, GroupBreakdown) {
     match topo {
-        Topology::BigSwitch => simulate_group(models, cluster, policy),
+        Topology::BigSwitch => simulate_group_recorded(models, cluster, policy, rec),
         _ => {
             assert!(!models.is_empty(), "group needs at least one model");
             let n = cluster.len();
@@ -134,9 +168,12 @@ pub fn simulate_group_topology(
                     "group stats must be GPU-indexed (project the deployment first)"
                 );
             }
-            simulate_many_with(models, cluster, &|d: &TrafficMatrix| {
-                comm_time_on(d, cluster, topo, policy).makespan
-            })
+            simulate_many_with(
+                models,
+                cluster,
+                &|d: &TrafficMatrix| comm_time_on(d, cluster, topo, policy).makespan,
+                rec,
+            )
         }
     }
 }
@@ -146,11 +183,27 @@ fn simulate_many(
     models: &[&MoeLayerStats],
     cluster: &Cluster,
     policy: SchedulePolicy,
+    rec: &mut TimelineRecorder,
 ) -> (SimResult, GroupBreakdown) {
     let bw = cluster.bandwidths();
-    simulate_many_with(models, cluster, &|d: &TrafficMatrix| {
-        comm_time(d, &bw, policy).makespan
-    })
+    let out = simulate_many_with(
+        models,
+        cluster,
+        &|d: &TrafficMatrix| comm_time(d, &bw, policy).makespan,
+        rec,
+    );
+    if rec.is_enabled() && matches!(policy, SchedulePolicy::Aurora) {
+        // Per-round occupancy of the executed slot schedules on the
+        // aggregated matrices (Theorem 6.1: the shared switch drains the
+        // models' summed traffic).
+        let mut agg = models[0].traffic.clone();
+        for s in &models[1..] {
+            agg = agg.sum(&s.traffic);
+        }
+        rec.record_rounds("N", &aurora_schedule(&agg));
+        rec.record_rounds("C", &aurora_schedule(&agg.transpose()));
+    }
+    out
 }
 
 /// The staggered pipeline over an arbitrary collective cost model `comm`
@@ -159,20 +212,31 @@ fn simulate_many_with(
     models: &[&MoeLayerStats],
     cluster: &Cluster,
     comm: &dyn Fn(&TrafficMatrix) -> f64,
+    rec: &mut TimelineRecorder,
 ) -> (SimResult, GroupBreakdown) {
     let m = models.len();
     let n = cluster.len();
     let scale = |t: f64, g: usize| t / cluster.gpu(g).flops_scale;
     let max = |v: &[f64]| v.iter().copied().fold(0.0, f64::max);
 
-    // Per-GPU compute engine (serialization in call order).
+    // Per-GPU compute engine (serialization in call order). Each completed
+    // task is mirrored into the timeline recorder (no-op when disabled).
     let mut free_at = vec![0.0f64; n];
     let mut busy = vec![0.0f64; n];
-    fn run(free_at: &mut [f64], busy: &mut [f64], g: usize, ready: f64, dur: f64) -> f64 {
+    fn run(
+        free_at: &mut [f64],
+        busy: &mut [f64],
+        rec: &mut TimelineRecorder,
+        model: usize,
+        g: usize,
+        ready: f64,
+        dur: f64,
+    ) -> f64 {
         let start = free_at[g].max(ready);
         let end = start + dur;
         free_at[g] = end;
         busy[g] += dur;
+        rec.record_compute(g, model, start, end);
         end
     }
 
@@ -181,7 +245,17 @@ fn simulate_many_with(
     let mut e_gate = vec![0.0f64; m];
     for k in 1..m {
         let ends: Vec<f64> = (0..n)
-            .map(|g| run(&mut free_at, &mut busy, g, 0.0, scale(models[k].gate_ms, g)))
+            .map(|g| {
+                run(
+                    &mut free_at,
+                    &mut busy,
+                    rec,
+                    k,
+                    g,
+                    0.0,
+                    scale(models[k].gate_ms, g),
+                )
+            })
             .collect();
         e_gate[k] = max(&ends);
     }
@@ -208,6 +282,8 @@ fn simulate_many_with(
                 run(
                     &mut free_at,
                     &mut busy,
+                    rec,
+                    k,
                     g,
                     e_n[k],
                     scale(loads[g] as f64 * models[k].ffn_ms_per_token, g),
@@ -240,22 +316,56 @@ fn simulate_many_with(
     let mut e_a = vec![0.0f64; m];
     for k in 0..m {
         let ends: Vec<f64> = (0..n)
-            .map(|g| run(&mut free_at, &mut busy, g, e_c[k], scale(models[k].agg_ms, g)))
+            .map(|g| {
+                run(
+                    &mut free_at,
+                    &mut busy,
+                    rec,
+                    k,
+                    g,
+                    e_c[k],
+                    scale(models[k].agg_ms, g),
+                )
+            })
             .collect();
         e_a[k] = max(&ends);
     }
 
     // Model 0's next-round gate closes the pipeline (Eqn. 4).
     let ends: Vec<f64> = (0..n)
-        .map(|g| run(&mut free_at, &mut busy, g, e_a[m - 1], scale(models[0].gate_ms, g)))
+        .map(|g| {
+            run(
+                &mut free_at,
+                &mut busy,
+                rec,
+                0,
+                g,
+                e_a[m - 1],
+                scale(models[0].gate_ms, g),
+            )
+        })
         .collect();
     let end = max(&ends);
 
-    let utilization = if end > 0.0 {
-        busy.iter().sum::<f64>() / n as f64 / end
-    } else {
-        0.0
-    };
+    let utilization = mean_busy_fraction(&busy, end);
+
+    if rec.is_enabled() {
+        // Per-link comm attribution: each model's dispatch occupies its
+        // window [gate end, E_{N^k}] (combine mirrors it with reversed
+        // matrices from the C-phase start floor). Windows are visited in
+        // model order, which is chronological per phase (gates serialize,
+        // the E_{N^k}/E_{C^k} floors are monotone).
+        let bw = cluster.bandwidths();
+        for k in 0..m {
+            let start = if k == 0 { 0.0 } else { e_gate[k] };
+            rec.record_comm(k, start, e_n[k], &models[k].traffic, &bw);
+        }
+        for k in 0..m {
+            let start = if k == 0 { c_start } else { e_f[k].max(c_start) };
+            rec.record_comm(k, start, e_c[k], &models[k].traffic.transpose(), &bw);
+        }
+        rec.set_makespan(end);
+    }
     let breakdown = GroupBreakdown {
         e_n,
         e_f,

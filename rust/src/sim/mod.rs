@@ -26,6 +26,15 @@
 //! Components scale with GPU performance: a component that takes `t` ms on
 //! the reference GPU takes `t / flops_scale` on GPU `g`; the FFN time is
 //! proportional to the expert's token load (observation 3, §4.1).
+//!
+//! Every simulator (including the discrete-event cross-checks in [`event`])
+//! has a `*_recorded` twin taking a
+//! [`TimelineRecorder`](crate::obs::timeline::TimelineRecorder) that
+//! attributes each GPU-millisecond to a typed segment — compute, comm,
+//! sync-wait, swap-drain, idle — per GPU engine and per access link.
+//! Recording is observational only: the plain entry points delegate to their
+//! twins with a disabled recorder and results are bit-for-bit identical
+//! either way (pinned by property tests).
 
 mod colocated;
 pub mod event;
@@ -34,11 +43,20 @@ mod group;
 mod online;
 mod stats;
 
-pub use colocated::{simulate_colocated, ColocatedBreakdown};
-pub use event::{event_sim_colocated, event_sim_exclusive, EventSimResult};
-pub use exclusive::{simulate_exclusive, ExclusiveBreakdown};
-pub use group::{simulate_group, simulate_group_topology, GroupBreakdown};
-pub use online::{simulate_window, simulate_window_topology};
+pub use colocated::{simulate_colocated, simulate_colocated_recorded, ColocatedBreakdown};
+pub use event::{
+    event_sim_colocated, event_sim_colocated_recorded, event_sim_exclusive,
+    event_sim_exclusive_recorded, EventSimResult,
+};
+pub use exclusive::{simulate_exclusive, simulate_exclusive_recorded, ExclusiveBreakdown};
+pub use group::{
+    simulate_group, simulate_group_recorded, simulate_group_topology,
+    simulate_group_topology_recorded, GroupBreakdown,
+};
+pub use online::{
+    simulate_window, simulate_window_recorded, simulate_window_topology,
+    simulate_window_topology_recorded,
+};
 pub use stats::MoeLayerStats;
 
 /// Result of simulating one MoE layer (one model or a colocated pair).

@@ -10,8 +10,9 @@
 //! migration cost the coordinator pays, never hide it). With no background
 //! traffic the result is bit-for-bit [`simulate_group`].
 
-use super::{simulate_group_topology, MoeLayerStats, SimResult};
+use super::{simulate_group_topology_recorded, MoeLayerStats, SimResult};
 use crate::cluster::{Cluster, Topology};
+use crate::obs::timeline::TimelineRecorder;
 use crate::schedule::SchedulePolicy;
 use crate::traffic::TrafficMatrix;
 
@@ -28,6 +29,25 @@ pub fn simulate_window(
     simulate_window_topology(models, background, cluster, &Topology::BigSwitch, policy)
 }
 
+/// [`simulate_window`] with timeline recording through `rec` (observational
+/// only). Background staging traffic shows up as `SwapDrain` link segments.
+pub fn simulate_window_recorded(
+    models: &[&MoeLayerStats],
+    background: Option<&TrafficMatrix>,
+    cluster: &Cluster,
+    policy: SchedulePolicy,
+    rec: &mut TimelineRecorder,
+) -> SimResult {
+    simulate_window_topology_recorded(
+        models,
+        background,
+        cluster,
+        &Topology::BigSwitch,
+        policy,
+        rec,
+    )
+}
+
 /// [`simulate_window`] on a network topology: serving *and* staged-weight
 /// traffic are priced by [`crate::schedule::comm_time_on`], so on a two-tier
 /// fabric a migration crossing an oversubscribed uplink congests the windows
@@ -40,9 +60,32 @@ pub fn simulate_window_topology(
     topo: &Topology,
     policy: SchedulePolicy,
 ) -> SimResult {
+    simulate_window_topology_recorded(
+        models,
+        background,
+        cluster,
+        topo,
+        policy,
+        &mut TimelineRecorder::disabled(),
+    )
+}
+
+/// [`simulate_window_topology`] with timeline recording through `rec`
+/// (observational only). The zero-compute background "model" is marked so
+/// its link traffic is attributed to `SwapDrain` instead of comm.
+pub fn simulate_window_topology_recorded(
+    models: &[&MoeLayerStats],
+    background: Option<&TrafficMatrix>,
+    cluster: &Cluster,
+    topo: &Topology,
+    policy: SchedulePolicy,
+    rec: &mut TimelineRecorder,
+) -> SimResult {
     match background {
-        None => simulate_group_topology(models, cluster, topo, policy).0,
-        Some(bg) if bg.total() == 0 => simulate_group_topology(models, cluster, topo, policy).0,
+        None => simulate_group_topology_recorded(models, cluster, topo, policy, rec).0,
+        Some(bg) if bg.total() == 0 => {
+            simulate_group_topology_recorded(models, cluster, topo, policy, rec).0
+        }
         Some(bg) => {
             assert_eq!(bg.n(), cluster.len(), "background traffic must be GPU-indexed");
             let bg_layer = MoeLayerStats {
@@ -53,7 +96,8 @@ pub fn simulate_window_topology(
             };
             let mut all: Vec<&MoeLayerStats> = models.to_vec();
             all.push(&bg_layer);
-            simulate_group_topology(&all, cluster, topo, policy).0
+            rec.set_swap_drain_model(models.len());
+            simulate_group_topology_recorded(&all, cluster, topo, policy, rec).0
         }
     }
 }

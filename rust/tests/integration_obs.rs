@@ -137,3 +137,131 @@ fn profile_run_emits_a_valid_chrome_trace() {
     let table = report.render_table();
     assert!(table.contains("total"), "table header missing: {table}");
 }
+
+/// An injected p99 violation drives the full SLO-watchdog path end to end:
+/// serve-sim feeds window latencies into the coordinator's monitor, the
+/// emergency override forces a replan, the decision log pins the verdict
+/// with its SLO evidence, and the metrics registry counts the trigger.
+#[test]
+fn slo_violation_forces_replan_with_decision_evidence() {
+    let mut cfg = OnlineConfig::default();
+    // Unreachable target: every window latency violates the rolling p99.
+    cfg.coordinator.slo_p99_ms = Some(1e-6);
+    cfg.coordinator.cooldown_windows = 0;
+    let cluster = Cluster::homogeneous(cfg.n_gpus, BW);
+    let tr = Tracer::sim();
+    let metrics = MetricsRegistry::new();
+    let out = run_online_traced(&cfg, &cluster, OnlineStrategy::Coordinator, &tr, &metrics);
+    assert!(out.replans >= 1, "SLO watchdog never forced a replan");
+    let triggered: Vec<_> = tr
+        .decisions()
+        .iter()
+        .filter(|d| {
+            d.kind == "coordinator.replan_gate"
+                && d.get("verdict").and_then(aurora::util::Json::as_str) == Some("slo_triggered")
+        })
+        .cloned()
+        .collect();
+    assert!(!triggered.is_empty(), "no slo_triggered decision was recorded");
+    for d in &triggered {
+        for field in ["slo_p99_ms", "slo_target_ms", "slo_burn_rate"] {
+            assert!(
+                d.get(field).is_some(),
+                "slo_triggered decision lacks evidence field {field}"
+            );
+        }
+        let p99 = d.get("slo_p99_ms").and_then(aurora::util::Json::as_f64).unwrap();
+        let target = d.get("slo_target_ms").and_then(aurora::util::Json::as_f64).unwrap();
+        assert!(p99 > target, "recorded p99 {p99} does not exceed target {target}");
+    }
+    let snapshot = metrics.snapshot().to_string_compact();
+    assert!(
+        snapshot.contains("serve.slo_triggered"),
+        "metrics snapshot lacks the slo counter: {snapshot}"
+    );
+}
+
+/// The same violating stream under an uncleared cooldown is suppressed, not
+/// acted on: zero replans, and the log says why on every window.
+#[test]
+fn slo_violation_inside_cooldown_is_suppressed_not_replanned() {
+    let mut cfg = OnlineConfig::default();
+    cfg.coordinator.slo_p99_ms = Some(1e-6);
+    cfg.coordinator.cooldown_windows = 10_000;
+    let cluster = Cluster::homogeneous(cfg.n_gpus, BW);
+    let tr = Tracer::sim();
+    let out = run_online_traced(
+        &cfg,
+        &cluster,
+        OnlineStrategy::Coordinator,
+        &tr,
+        &MetricsRegistry::disabled(),
+    );
+    assert_eq!(out.replans, 0, "cooldown must hold even under SLO pressure");
+    assert!(
+        tr.decisions().iter().any(|d| {
+            d.get("verdict").and_then(aurora::util::Json::as_str)
+                == Some("slo_suppressed_cooldown")
+        }),
+        "suppression left no slo_suppressed_cooldown decision"
+    );
+}
+
+/// Timeline Chrome export round-trips through the trace parser with one
+/// span per visible segment, and every track's spans are non-overlapping
+/// and time-ordered (engines, uplinks, and downlinks each get a lane).
+#[test]
+fn timeline_chrome_export_round_trips_with_disjoint_tracks() {
+    use aurora::obs::timeline::TimelineRecorder;
+    use aurora::sim::simulate_colocated_recorded;
+    use aurora::sim::MoeLayerStats;
+    use aurora::traffic::zipf_traffic;
+
+    let n = 8;
+    let cluster = Cluster::homogeneous(n, BW);
+    let layer = |seed| MoeLayerStats {
+        traffic: zipf_traffic(n, 1024, 1.2, seed),
+        gate_ms: 0.02,
+        ffn_ms_per_token: 0.002,
+        agg_ms: 0.015,
+    };
+    let mut rec = TimelineRecorder::new(n);
+    simulate_colocated_recorded(
+        &layer(1),
+        &layer(2),
+        &cluster,
+        aurora::schedule::SchedulePolicy::Aurora,
+        &mut rec,
+    );
+    let tl = rec.take().expect("recorder was enabled");
+
+    let spans = tl.to_tracer().spans();
+    assert!(!spans.is_empty(), "timeline export produced no spans");
+    let parsed = parse_chrome_trace(&tl.to_chrome_string()).expect("parses");
+    assert_eq!(parsed, spans, "chrome round trip changed the spans");
+
+    // per-track ordering: spans on one lane never overlap
+    let mut by_track: std::collections::BTreeMap<u32, Vec<(u64, u64)>> =
+        std::collections::BTreeMap::new();
+    for s in &spans {
+        assert!(s.name.starts_with("timeline."), "unexpected span {}", s.name);
+        by_track.entry(s.track).or_default().push((s.start_us, s.start_us + s.dur_us));
+    }
+    // 3 lanes per GPU: engine, uplink, downlink (links may be empty lanes)
+    assert!(by_track.keys().all(|&t| (t as usize) < 3 * n));
+    assert!(by_track.keys().any(|&t| (t as usize) < n), "no engine lane");
+    assert!(by_track.keys().any(|&t| (t as usize) >= n), "no link lane");
+    for (track, mut spans) in by_track {
+        spans.sort();
+        for w in spans.windows(2) {
+            assert!(
+                w[1].0 >= w[0].1,
+                "track {track}: spans [{}, {}] and [{}, {}] overlap",
+                w[0].0,
+                w[0].1,
+                w[1].0,
+                w[1].1
+            );
+        }
+    }
+}

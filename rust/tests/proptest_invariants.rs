@@ -798,3 +798,237 @@ fn prop_tiered_schedule_conserves_and_meets_tier_budgets() {
         assert!(ss.pipelined_ms == sched.pipelined_ms, "seed {seed}");
     }
 }
+
+/// PROPERTY: every recorded engine timeline is sorted, non-overlapping, and
+/// exactly partitions `[0, makespan]`; link timelines are sorted busy
+/// intervals inside the makespan; the timeline-derived utilization equals
+/// the simulator's scalar; and recording is observational — results with
+/// the recorder on are bit-for-bit the results with it off — across random
+/// 1..=3-model groups, both policies, two-tier fabrics, and background
+/// (swap-drain) windows.
+#[test]
+fn prop_timeline_partitions_makespan_and_recording_is_observational() {
+    use aurora::cluster::Topology;
+    use aurora::obs::timeline::{SegmentKind, TimelineRecorder};
+    use aurora::sim::{
+        simulate_group, simulate_group_recorded, simulate_group_topology,
+        simulate_group_topology_recorded, simulate_window, simulate_window_recorded,
+    };
+
+    let check_engine_partition = |tl: &aurora::obs::timeline::Timelines, seed: u64| {
+        for g in &tl.gpus {
+            assert!(!g.segments.is_empty(), "seed {seed} gpu {}: empty timeline", g.gpu);
+            assert!(
+                g.segments[0].start_ms.abs() < 1e-9,
+                "seed {seed} gpu {}: first segment starts at {}",
+                g.gpu,
+                g.segments[0].start_ms
+            );
+            for w in g.segments.windows(2) {
+                assert!(
+                    (w[1].start_ms - w[0].end_ms).abs() < 1e-9,
+                    "seed {seed} gpu {}: gap/overlap at {} -> {}",
+                    g.gpu,
+                    w[0].end_ms,
+                    w[1].start_ms
+                );
+            }
+            let last = g.segments.last().unwrap();
+            assert!(
+                (last.end_ms - tl.makespan_ms).abs() < 1e-9,
+                "seed {seed} gpu {}: ends at {} of {}",
+                g.gpu,
+                last.end_ms,
+                tl.makespan_ms
+            );
+            let total: f64 = g.segments.iter().map(|s| s.dur_ms()).sum();
+            assert!(
+                (total - tl.makespan_ms).abs() < 1e-6,
+                "seed {seed} gpu {}: durations sum to {total} of {}",
+                g.gpu,
+                tl.makespan_ms
+            );
+        }
+        for link in tl.uplinks.iter().chain(&tl.downlinks) {
+            for w in link.segments.windows(2) {
+                assert!(
+                    w[1].start_ms >= w[0].end_ms - 1e-9,
+                    "seed {seed} link {}: overlapping busy intervals",
+                    link.gpu
+                );
+            }
+            for s in &link.segments {
+                assert!(s.end_ms > s.start_ms, "seed {seed}: empty link segment");
+                assert!(
+                    s.start_ms >= -1e-9 && s.end_ms <= tl.makespan_ms + 1e-9,
+                    "seed {seed} link {}: segment [{}, {}] outside [0, {}]",
+                    link.gpu,
+                    s.start_ms,
+                    s.end_ms,
+                    tl.makespan_ms
+                );
+            }
+        }
+    };
+
+    for seed in 0..40u64 {
+        let mut rng = Rng::new(seed ^ 0x717E);
+        let n = 4 + (rng.gen_range(5) as usize);
+        let m = 1 + (rng.gen_range(3) as usize);
+        let models: Vec<MoeLayerStats> = (0..m).map(|_| moe_stats(&mut rng, n, 40)).collect();
+        let refs: Vec<&MoeLayerStats> = models.iter().collect();
+        let cluster = Cluster::homogeneous(n, 1.0 + rng.gen_f64() * 3.0);
+        let policy = if seed % 2 == 0 {
+            SchedulePolicy::Aurora
+        } else {
+            SchedulePolicy::Sjf
+        };
+
+        // recorder off vs on: bit-for-bit
+        let (plain, _) = simulate_group(&refs, &cluster, policy);
+        let mut rec = TimelineRecorder::new(n);
+        let (recorded, _) = simulate_group_recorded(&refs, &cluster, policy, &mut rec);
+        assert_eq!(plain, recorded, "seed {seed}: recording changed the result");
+        let tl = rec.take().unwrap();
+        assert!(
+            tl.makespan_ms == plain.inference_ms,
+            "seed {seed}: makespan {} vs inference {}",
+            tl.makespan_ms,
+            plain.inference_ms
+        );
+        check_engine_partition(&tl, seed);
+        assert!(
+            (tl.utilization() - plain.utilization).abs() < 1e-9,
+            "seed {seed}: timeline util {} vs scalar {}",
+            tl.utilization(),
+            plain.utilization
+        );
+
+        // two-tier topology path
+        if n % 2 == 0 {
+            let topo = Topology::even_two_tier(n, 2, 1.0 + rng.gen_f64() * 3.0).unwrap();
+            let (tp, _) = simulate_group_topology(&refs, &cluster, &topo, policy);
+            let mut rec = TimelineRecorder::new(n);
+            let (tr, _) =
+                simulate_group_topology_recorded(&refs, &cluster, &topo, policy, &mut rec);
+            assert_eq!(tp, tr, "seed {seed}: topology recording changed the result");
+            check_engine_partition(&rec.take().unwrap(), seed);
+        }
+
+        // serving window with background staging traffic -> SwapDrain
+        let bg = rand_matrix(&mut rng, n, 20);
+        let wp = simulate_window(&refs, Some(&bg), &cluster, policy);
+        let mut rec = TimelineRecorder::new(n);
+        let wr = simulate_window_recorded(&refs, Some(&bg), &cluster, policy, &mut rec);
+        assert_eq!(wp, wr, "seed {seed}: window recording changed the result");
+        let tl = rec.take().unwrap();
+        check_engine_partition(&tl, seed);
+        if bg.total() > 0 {
+            let has_swap = tl
+                .uplinks
+                .iter()
+                .chain(&tl.downlinks)
+                .flat_map(|l| &l.segments)
+                .any(|s| matches!(s.kind, SegmentKind::SwapDrain));
+            assert!(has_swap, "seed {seed}: background traffic left no SwapDrain segment");
+        }
+    }
+}
+
+/// PROPERTY: cluster utilization derived from the recorded timelines equals
+/// the simulators' legacy scalar formula across all entry points (exclusive,
+/// colocated, group) — the one shared `mean_busy_fraction` helper really is
+/// the single source of truth.
+#[test]
+fn prop_timeline_utilization_matches_legacy_scalar() {
+    use aurora::obs::timeline::TimelineRecorder;
+    use aurora::sim::{simulate_colocated_recorded, simulate_exclusive_recorded};
+
+    for seed in 0..30u64 {
+        let mut rng = Rng::new(seed ^ 0x07B5);
+        let n = 3 + (rng.gen_range(6) as usize);
+        let a = moe_stats(&mut rng, n, 50);
+        let b = moe_stats(&mut rng, n, 50);
+        let cluster = Cluster::homogeneous(n, 1.0 + rng.gen_f64() * 2.0);
+
+        let mut rec = TimelineRecorder::new(n);
+        let (res, _) = simulate_exclusive_recorded(&a, &cluster, SchedulePolicy::Aurora, &mut rec);
+        let tl = rec.take().unwrap();
+        assert!(
+            (tl.utilization() - res.utilization).abs() < 1e-9,
+            "seed {seed}: exclusive {} vs {}",
+            tl.utilization(),
+            res.utilization
+        );
+
+        let mut rec = TimelineRecorder::new(n);
+        let (res, _) =
+            simulate_colocated_recorded(&a, &b, &cluster, SchedulePolicy::Aurora, &mut rec);
+        let tl = rec.take().unwrap();
+        assert!(
+            (tl.utilization() - res.utilization).abs() < 1e-9,
+            "seed {seed}: colocated {} vs {}",
+            tl.utilization(),
+            res.utilization
+        );
+    }
+}
+
+/// PROPERTY: [`aurora::obs::SloMonitor`] fires exactly when the nearest-rank
+/// p99 of its rolling window exceeds the target — verified against an
+/// independently maintained reference window on adversarial streams mixing
+/// bursts, calm stretches, NaN, and infinities (non-finite and negative
+/// samples are dropped, never poisoning the window).
+#[test]
+fn prop_slo_monitor_fires_iff_rolling_p99_exceeds_target() {
+    use aurora::obs::SloMonitor;
+    use std::collections::VecDeque;
+
+    for seed in 0..30u64 {
+        let mut rng = Rng::new(seed ^ 0x5105);
+        let window = 1 + rng.gen_range(16) as usize;
+        let target = 0.5 + rng.gen_f64() * 2.0;
+        let mut mon = SloMonitor::new(target, window);
+        let mut reference: VecDeque<f64> = VecDeque::new();
+
+        for step in 0..200 {
+            let x = match rng.gen_range(10) {
+                0 => f64::NAN,
+                1 => f64::INFINITY,
+                2 => f64::NEG_INFINITY,
+                3 => -rng.gen_f64(),
+                // bursty tail: occasionally far past the target
+                4 => target * (2.0 + rng.gen_f64() * 8.0),
+                _ => rng.gen_f64() * target,
+            };
+            let st = mon.observe(x);
+            if x.is_finite() && x >= 0.0 {
+                if reference.len() == window {
+                    reference.pop_front();
+                }
+                reference.push_back(x);
+            }
+            if reference.is_empty() {
+                assert!(!st.violating, "seed {seed} step {step}: fired on empty window");
+                continue;
+            }
+            // nearest-rank p99 of the reference window (matches obs::metrics)
+            let mut xs: Vec<f64> = reference.iter().copied().collect();
+            xs.sort_by(f64::total_cmp);
+            let idx = ((xs.len() as f64 - 1.0) * 0.99).round() as usize;
+            let p99 = xs[idx.min(xs.len() - 1)];
+            assert!(
+                (st.p99_ms - p99).abs() < 1e-12,
+                "seed {seed} step {step}: p99 {} vs reference {p99}",
+                st.p99_ms
+            );
+            assert_eq!(
+                st.violating,
+                p99 > target,
+                "seed {seed} step {step}: violating={} but p99={p99} target={target}",
+                st.violating
+            );
+            assert_eq!(mon.is_violating(), st.violating, "seed {seed} step {step}");
+        }
+    }
+}
