@@ -1,0 +1,234 @@
+//! Cluster-membership events and the liveness mask the fault-tolerant
+//! coordinator keeps — the vocabulary of GPUs failing, draining, and
+//! (re)joining while serving continues.
+//!
+//! Semantics of the three states a GPU can be in:
+//!
+//! * **alive + placeable** — the healthy default: serves tokens, hosts
+//!   copies, sources and receives migrations.
+//! * **draining** (alive, not placeable) — a graceful leave or a
+//!   consolidation target: keeps serving its current copies and may *source*
+//!   weight migrations, but no new copy is placed on it. The repair replan
+//!   moves its copies off over the normal staged-migration path.
+//! * **dead** (not alive) — a hard failure: its copies are gone. Survivor
+//!   replicas are promoted immediately ([`ClusterEvent::GpuFailed`] →
+//!   [`crate::replication::ReplicatedDeployment::evacuate_gpu`]), it is
+//!   banned as a migration *source* ([`super::plan_migration_avoiding`]) and
+//!   as a placement target, and the serving loop asserts it receives zero
+//!   tokens ([`crate::sim::dead_gpu_tokens`]).
+//!
+//! [`failure_schedule`] generates randomized but always-survivable event
+//! sequences for property tests and the `eval resilience` figure.
+
+use crate::util::Rng;
+
+/// One cluster-membership change, applied at the start of a serving window.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClusterEvent {
+    /// Hard failure: the GPU and every expert copy on it are gone.
+    GpuFailed(usize),
+    /// The GPU is (back) in service and placeable.
+    GpuJoined(usize),
+    /// Graceful leave: stop placing on the GPU and migrate its copies off;
+    /// it keeps serving (and may source migrations) until vacated.
+    GpuDrained(usize),
+}
+
+impl ClusterEvent {
+    /// The GPU the event concerns.
+    pub fn gpu(&self) -> usize {
+        match *self {
+            ClusterEvent::GpuFailed(g)
+            | ClusterEvent::GpuJoined(g)
+            | ClusterEvent::GpuDrained(g) => g,
+        }
+    }
+
+    /// Event name (decision-log / CLI vocabulary).
+    pub fn name(&self) -> &'static str {
+        match self {
+            ClusterEvent::GpuFailed(_) => "gpu_failed",
+            ClusterEvent::GpuJoined(_) => "gpu_joined",
+            ClusterEvent::GpuDrained(_) => "gpu_drained",
+        }
+    }
+}
+
+/// Liveness/placeability mask over the cluster's GPU ids, updated by
+/// [`ClusterHealth::apply`]. Starts all-healthy.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ClusterHealth {
+    alive: Vec<bool>,
+    draining: Vec<bool>,
+}
+
+impl ClusterHealth {
+    /// All `n_gpus` GPUs alive and placeable.
+    pub fn new(n_gpus: usize) -> ClusterHealth {
+        assert!(n_gpus > 0, "a cluster has at least one GPU");
+        ClusterHealth {
+            alive: vec![true; n_gpus],
+            draining: vec![false; n_gpus],
+        }
+    }
+
+    /// Cluster size the mask covers.
+    pub fn n_gpus(&self) -> usize {
+        self.alive.len()
+    }
+
+    /// True unless GPU `g` has failed.
+    pub fn is_alive(&self, g: usize) -> bool {
+        self.alive[g]
+    }
+
+    /// True when GPU `g` is alive but being vacated.
+    pub fn is_draining(&self, g: usize) -> bool {
+        self.draining[g]
+    }
+
+    /// True when new expert copies may be placed on GPU `g`.
+    pub fn is_placeable(&self, g: usize) -> bool {
+        self.alive[g] && !self.draining[g]
+    }
+
+    /// True when every GPU is placeable (the healthy fast path: planning
+    /// needs no sub-cluster compaction).
+    pub fn all_placeable(&self) -> bool {
+        (0..self.n_gpus()).all(|g| self.is_placeable(g))
+    }
+
+    /// Per-GPU liveness, indexable by GPU id.
+    pub fn alive(&self) -> &[bool] {
+        &self.alive
+    }
+
+    /// Per-GPU placeability, indexable by GPU id.
+    pub fn placeable(&self) -> Vec<bool> {
+        (0..self.n_gpus()).map(|g| self.is_placeable(g)).collect()
+    }
+
+    /// Ids of the placeable GPUs, ascending.
+    pub fn placeable_gpus(&self) -> Vec<usize> {
+        (0..self.n_gpus()).filter(|&g| self.is_placeable(g)).collect()
+    }
+
+    /// Number of placeable GPUs.
+    pub fn n_placeable(&self) -> usize {
+        self.placeable_gpus().len()
+    }
+
+    /// Per-GPU mask of GPUs that must never *source* a migration (the dead
+    /// ones — a draining GPU still holds its weights and may send them).
+    pub fn banned_sources(&self) -> Vec<bool> {
+        self.alive.iter().map(|&a| !a).collect()
+    }
+
+    /// Apply one membership event. Idempotent: re-failing a dead GPU or
+    /// re-joining a placeable one is a no-op.
+    pub fn apply(&mut self, ev: &ClusterEvent) {
+        let g = ev.gpu();
+        assert!(g < self.n_gpus(), "event names GPU {g} of {}", self.n_gpus());
+        match ev {
+            ClusterEvent::GpuFailed(_) => {
+                self.alive[g] = false;
+                self.draining[g] = false;
+            }
+            ClusterEvent::GpuJoined(_) => {
+                self.alive[g] = true;
+                self.draining[g] = false;
+            }
+            ClusterEvent::GpuDrained(_) => {
+                self.draining[g] = true;
+            }
+        }
+    }
+}
+
+/// A randomized, always-survivable membership-event schedule: `n_events`
+/// fail/drain/join events at ascending windows in `0..windows`, constrained
+/// (against a health mask replayed in order) so at least two GPUs stay
+/// placeable at every point and every event is meaningful — only placeable
+/// GPUs fail or drain, only non-placeable ones join. Deterministic in
+/// `seed`; the property suite drives the coordinator with these.
+pub fn failure_schedule(
+    n_gpus: usize,
+    windows: usize,
+    n_events: usize,
+    seed: u64,
+) -> Vec<(usize, ClusterEvent)> {
+    assert!(n_gpus >= 3, "need headroom to fail a GPU and keep two placeable");
+    assert!(windows > 0);
+    let mut rng = Rng::new(seed ^ 0xFA11_5AFE);
+    let mut ws: Vec<usize> = (0..n_events)
+        .map(|_| rng.gen_range(windows as u64) as usize)
+        .collect();
+    ws.sort_unstable();
+    let mut health = ClusterHealth::new(n_gpus);
+    let mut out = Vec::with_capacity(n_events);
+    for w in ws {
+        let mut cands: Vec<ClusterEvent> = Vec::new();
+        for g in 0..n_gpus {
+            if health.is_placeable(g) {
+                if health.n_placeable() > 2 {
+                    cands.push(ClusterEvent::GpuFailed(g));
+                    cands.push(ClusterEvent::GpuDrained(g));
+                }
+            } else {
+                cands.push(ClusterEvent::GpuJoined(g));
+            }
+        }
+        if cands.is_empty() {
+            continue;
+        }
+        let ev = cands[rng.gen_range(cands.len() as u64) as usize];
+        health.apply(&ev);
+        out.push((w, ev));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn health_state_machine() {
+        let mut h = ClusterHealth::new(4);
+        assert!(h.all_placeable());
+        h.apply(&ClusterEvent::GpuDrained(1));
+        assert!(h.is_alive(1) && !h.is_placeable(1));
+        assert!(!h.banned_sources()[1], "draining GPUs still source");
+        h.apply(&ClusterEvent::GpuFailed(2));
+        assert!(!h.is_alive(2) && h.banned_sources()[2]);
+        assert_eq!(h.placeable_gpus(), vec![0, 3]);
+        h.apply(&ClusterEvent::GpuJoined(1));
+        h.apply(&ClusterEvent::GpuJoined(2));
+        assert!(h.all_placeable());
+        // idempotence
+        h.apply(&ClusterEvent::GpuJoined(2));
+        assert!(h.all_placeable());
+    }
+
+    #[test]
+    fn failure_schedule_is_survivable_and_deterministic() {
+        for seed in 0..20 {
+            let evs = failure_schedule(5, 12, 8, seed);
+            assert_eq!(evs, failure_schedule(5, 12, 8, seed));
+            let mut h = ClusterHealth::new(5);
+            let mut last_w = 0;
+            for (w, ev) in &evs {
+                assert!(*w >= last_w, "windows ascend");
+                last_w = *w;
+                match ev {
+                    ClusterEvent::GpuFailed(g) | ClusterEvent::GpuDrained(g) => {
+                        assert!(h.is_placeable(*g))
+                    }
+                    ClusterEvent::GpuJoined(g) => assert!(!h.is_placeable(*g)),
+                }
+                h.apply(ev);
+                assert!(h.n_placeable() >= 2, "never below two placeable GPUs");
+            }
+        }
+    }
+}

@@ -90,6 +90,26 @@ pub fn plan_migration(
     target: &ReplicatedDeployment,
     expert_weight_tokens: u64,
 ) -> MigrationPlan {
+    plan_migration_avoiding(cur, target, expert_weight_tokens, &[])
+}
+
+/// [`plan_migration`] with a per-GPU source ban: flows never read from a GPU
+/// whose `banned_src` flag is true — the repair path after a hard failure,
+/// where the dead GPU's copies are unreadable
+/// ([`crate::coordinator::ClusterHealth::banned_sources`]). An empty (or
+/// all-false) mask is bit-for-bit [`plan_migration`]. Draining GPUs are
+/// *not* banned: they still hold their weights and sending them off is
+/// exactly what the repair replan wants.
+///
+/// Panics when every holder of a needed copy is banned — the caller must
+/// evacuate failed GPUs ([`ReplicatedDeployment::evacuate_gpu`]) before
+/// planning repair, which guarantees a live holder for every expert.
+pub fn plan_migration_avoiding(
+    cur: &ReplicatedDeployment,
+    target: &ReplicatedDeployment,
+    expert_weight_tokens: u64,
+    banned_src: &[bool],
+) -> MigrationPlan {
     assert!(expert_weight_tokens > 0, "expert weights occupy wire tokens");
     assert_eq!(cur.n_models(), target.n_models(), "model count mismatch");
     assert_eq!(cur.n_gpus(), target.n_gpus(), "cluster size mismatch");
@@ -115,8 +135,9 @@ pub fn plan_migration(
                 }
                 let src = *have
                     .iter()
+                    .filter(|&&s| !banned_src.get(s).copied().unwrap_or(false))
                     .min_by_key(|&&s| (send_load[s], s))
-                    .expect("replica sets are never empty");
+                    .expect("no live source holds a copy — evacuate failed GPUs before planning repair");
                 flows.push(MigrationFlow {
                     model: m,
                     expert: e,
@@ -296,6 +317,37 @@ mod tests {
         let topo = Topology::even_two_tier(4, 2, 4.0).unwrap();
         let two_tier = plan.migration_ms_on(&cluster, &topo);
         assert!((two_tier - 4.0).abs() < 1e-12, "uplink-bound staging: {two_tier}");
+    }
+
+    #[test]
+    fn banned_sources_are_never_read() {
+        // expert 0 holds copies on GPUs 0 and 1; GPU 0 (the least-loaded,
+        // lowest-id pick) is banned, so both new copies stream from GPU 1.
+        let mut cur = rep(4, vec![0, 1, 2, 3]);
+        cur.add_replica(0, 0, 1).unwrap();
+        let mut tgt = rep(4, vec![0, 1, 2, 3]);
+        tgt.add_replica(0, 0, 1).unwrap();
+        tgt.add_replica(0, 0, 2).unwrap();
+        tgt.add_replica(0, 0, 3).unwrap();
+        let banned = vec![true, false, false, false];
+        let plan = plan_migration_avoiding(&cur, &tgt, 100, &banned);
+        assert_eq!(plan.flows.len(), 2);
+        assert!(plan.flows.iter().all(|f| f.src == 1), "{:?}", plan.flows);
+        assert!(migration_preserves_target(&cur, &tgt, &plan));
+        // an all-false mask is bit-for-bit the unbanned plan
+        let free = plan_migration_avoiding(&cur, &tgt, 100, &[false; 4]);
+        let plain = plan_migration(&cur, &tgt, 100);
+        assert_eq!(free.flows, plain.flows);
+        assert_eq!(free.dropped, plain.dropped);
+    }
+
+    #[test]
+    #[should_panic(expected = "no live source")]
+    fn fully_banned_holders_panic() {
+        let cur = rep(2, vec![0, 1]);
+        let mut tgt = rep(2, vec![0, 1]);
+        tgt.add_replica(0, 0, 1).unwrap();
+        plan_migration_avoiding(&cur, &tgt, 10, &[true, false]);
     }
 
     #[test]

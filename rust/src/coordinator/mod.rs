@@ -47,25 +47,57 @@
 //! latency storm from thrashing migrations. With no SLO configured every
 //! decision is bit-for-bit the historical gate sequence.
 //!
+//! **Fault tolerance & elasticity** ([`ClusterEvent`] /
+//! [`Coordinator::inject_event`]): cluster membership is dynamic — GPUs
+//! fail, drain, and (re)join mid-serving. A failure runs a **two-phase
+//! promote-then-repair contract**. Phase 1 is synchronous and planner-free:
+//! any in-flight swap is aborted, the dead GPU's copies are evacuated onto
+//! surviving replicas (sole copies cold-restored,
+//! [`crate::replication::ReplicatedDeployment::evacuate_gpu`]) and split
+//! weights re-solved on the live estimate — the very next window serves with
+//! zero tokens routed to the dead GPU (verdict `repair_promoted`). Phase 2
+//! is the cost-aware repair: a queued replan that plans on the placeable
+//! sub-cluster ([`plan_candidate_masked`]), bans dead GPUs as migration
+//! sources ([`plan_migration_avoiding`]), bypasses the drift, gain, and
+//! amortized cost gates (redundancy is not an optional optimization) but
+//! still honors swap-busy and the cooldown, and always commits (verdict
+//! `repair_replanned`) — the masked candidate is the best deployment for
+//! the new membership. Drains queue the same repair while the GPU keeps
+//! serving; joins queue a rebalance that commits only if spreading back out
+//! helps. With
+//! [`CoordinatorConfig::elastic`] set, sustained SLO burn grows the replica
+//! budget or reclaims a coordinator-drained GPU (`scaled_up`) and sustained
+//! low utilization ([`Coordinator::record_window_utilization`]) drains the
+//! least-loaded GPU behind a bounded-slowdown gate (`consolidated`).
+//!
 //! [`online`] ships the drifting-Zipf discrete-event serving simulation that
 //! pins the coordinator against a static plan, naive replan-every-window,
 //! and a zero-cost oracle (the `online` eval figure and the `serve-sim` CLI
-//! subcommand drive it).
+//! subcommand drive it), plus failure/join/leave injection
+//! ([`OnlineConfig`]`::events`) for the `resilience` figure.
 
 mod estimator;
+mod event;
 mod migration;
 pub mod online;
 mod swap;
 
 pub use estimator::{DriftDetector, TrafficEstimator};
-pub use migration::{migration_preserves_target, plan_migration, MigrationFlow, MigrationPlan};
+pub use event::{failure_schedule, ClusterEvent, ClusterHealth};
+pub use migration::{
+    migration_preserves_target, plan_migration, plan_migration_avoiding, MigrationFlow,
+    MigrationPlan,
+};
 pub use online::{run_online, run_online_traced, OnlineConfig, OnlineOutcome, OnlineStrategy};
 pub use swap::{PlanSwap, SwapPhase};
 
 use crate::cluster::{Cluster, Topology};
 use crate::obs::{SloMonitor, Tracer};
+use crate::placement::Deployment;
 use crate::planner::{Planner, ReplicationConfig};
-use crate::replication::{estimate_objective_on, ReplicatedDeployment, SplitPlan};
+use crate::replication::{
+    estimate_objective_on, optimize_splits, ReplicatedDeployment, SplitPlan,
+};
 use crate::sim::MoeLayerStats;
 use crate::trace::ModelTrace;
 use crate::traffic::TrafficMatrix;
@@ -114,6 +146,28 @@ pub struct CoordinatorConfig {
     /// Rolling window (in serving windows) the SLO quantiles are computed
     /// over. Ignored unless [`CoordinatorConfig::slo_p99_ms`] is set.
     pub slo_window: usize,
+    /// Enable the elasticity policy: sustained SLO burn grows the replica
+    /// budget (or reclaims a coordinator-drained GPU), sustained low
+    /// utilization consolidates the deployment onto fewer GPUs. Off by
+    /// default — every decision is then bit-for-bit the historical gate
+    /// sequence. Scale-up needs [`CoordinatorConfig::slo_p99_ms`] set (the
+    /// burn signal) and consolidation needs
+    /// [`Coordinator::record_window_utilization`] fed.
+    pub elastic: bool,
+    /// Consecutive windows a burn/idle signal must persist before an
+    /// elastic action triggers (hysteresis against one-window noise).
+    pub elastic_patience: u64,
+    /// SLO burn rate (rolling p99 ÷ target) at or above which a window
+    /// counts toward scale-up.
+    pub scale_up_burn: f64,
+    /// EWMA utilization below which a window counts toward consolidation.
+    pub consolidate_util: f64,
+    /// Slack a consolidation may cost: the shrunk plan commits only while
+    /// its estimate stays within `(1 + consolidate_slack) ×` the current
+    /// plan's.
+    pub consolidate_slack: f64,
+    /// Consolidation never shrinks the placeable set below this many GPUs.
+    pub min_gpus: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -130,6 +184,12 @@ impl Default for CoordinatorConfig {
             topology: Topology::BigSwitch,
             slo_p99_ms: None,
             slo_window: 8,
+            elastic: false,
+            elastic_patience: 3,
+            scale_up_burn: 1.0,
+            consolidate_util: 0.35,
+            consolidate_slack: 0.10,
+            min_gpus: 2,
         }
     }
 }
@@ -162,6 +222,20 @@ pub struct CoordinatorStats {
     /// SLO violations that could not replan because a swap was in flight or
     /// the cooldown held.
     pub slo_suppressed: u64,
+    /// Hard GPU failures injected ([`ClusterEvent::GpuFailed`]).
+    pub failures: u64,
+    /// Survivor replicas promoted to primary during evacuations.
+    pub promotions: u64,
+    /// Sole-copy experts cold-restored during evacuations.
+    pub restores: u64,
+    /// Membership-driven replans committed (verdict `repair_replanned`).
+    pub repairs: u64,
+    /// Elastic scale-ups committed (verdict `scaled_up`).
+    pub scale_ups: u64,
+    /// Elastic consolidations committed (verdict `consolidated`).
+    pub consolidations: u64,
+    /// In-flight swaps abandoned because a failure invalidated them.
+    pub swaps_aborted: u64,
 }
 
 /// What a committed replan looked like.
@@ -219,6 +293,21 @@ pub struct Coordinator {
     windows_since_replan: u64,
     /// Consecutive gate-rejected candidates since the last commit/settle.
     rejections: u64,
+    /// Liveness/placeability of every GPU ([`Coordinator::inject_event`]).
+    health: ClusterHealth,
+    /// A membership- or elasticity-driven replan waiting to run (it bypasses
+    /// the drift gate; only swap-busy/cooldown defers it).
+    pending: Option<ReplanReason>,
+    /// GPUs the *coordinator* drained for consolidation — the only ones a
+    /// scale-up may silently reclaim (operator drains are not ours to undo).
+    drained_by_coordinator: Vec<bool>,
+    /// EWMA of observed window utilization
+    /// ([`Coordinator::record_window_utilization`]).
+    util_ewma: Option<f64>,
+    /// Consecutive windows at or above the scale-up burn rate.
+    burn_streak: u64,
+    /// Consecutive windows below the consolidation utilization floor.
+    idle_streak: u64,
     /// Observability sink: one `coordinator.replan_gate` decision record per
     /// observed window, plus the candidate planner's spans. Disabled (a
     /// no-op) unless [`Coordinator::set_tracer`] installs a live tracer.
@@ -255,6 +344,96 @@ fn serving_estimate_ms(
 /// not consulted again until the distribution moves materially *further*.
 const MAX_CONSECUTIVE_REJECTIONS: u64 = 3;
 
+/// Why a membership/elasticity replan is pending (drift gate bypassed).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ReplanReason {
+    /// A failure or drain left the deployment degraded: restore redundancy
+    /// and vacate un-placeable GPUs.
+    Repair,
+    /// A GPU (re)joined: spread the deployment back over the grown cluster
+    /// if that actually helps.
+    Rebalance,
+    /// Sustained SLO burn: replan with a grown replica budget / reclaimed
+    /// GPU.
+    ScaleUp,
+    /// Sustained low utilization: try to vacate `gpu` and serve on fewer
+    /// GPUs within the configured slack.
+    Consolidate {
+        /// The GPU the coordinator drained for this consolidation.
+        gpu: usize,
+    },
+}
+
+impl ReplanReason {
+    fn name(&self) -> &'static str {
+        match self {
+            ReplanReason::Repair => "repair",
+            ReplanReason::Rebalance => "rebalance",
+            ReplanReason::ScaleUp => "scale_up",
+            ReplanReason::Consolidate { .. } => "consolidate",
+        }
+    }
+}
+
+/// The candidate planner under a health mask. All GPUs placeable ⇒ the
+/// ordinary topology-aware entry point, bit for bit. Otherwise the placeable
+/// GPUs are compacted into a sub-cluster, planned flat
+/// ([`Topology::BigSwitch`] — a partial cluster has no well-defined fabric
+/// mapping; migration *pricing* stays fabric-aware on the full cluster), and
+/// the result is remapped back to full-cluster GPU ids. Split weights carry
+/// over verbatim: the remap preserves every replica vector's order.
+pub fn plan_candidate_masked(
+    planner: &Planner,
+    trace: &ModelTrace,
+    cluster: &Cluster,
+    topo: &Topology,
+    rcfg: &ReplicationConfig,
+    health: &ClusterHealth,
+    tracer: &Tracer,
+) -> (ReplicatedDeployment, SplitPlan) {
+    let refs = [trace];
+    if health.all_placeable() {
+        return planner
+            .plan_replicated_topology_traced(&refs, cluster, topo, rcfg, tracer)
+            .expect("one model always plans");
+    }
+    let map = health.placeable_gpus();
+    assert!(!map.is_empty(), "degraded planning needs a placeable GPU");
+    let sub = Cluster::new(map.iter().map(|&g| cluster.gpu(g)).collect());
+    let (sub_rep, sub_splits) = planner
+        .plan_replicated_topology_traced(&refs, &sub, &Topology::BigSwitch, rcfg, tracer)
+        .expect("one model always plans");
+    (remap_deployment(&sub_rep, &map, cluster.len()), sub_splits)
+}
+
+/// Re-index a sub-cluster deployment onto the full cluster: GPU `i` of the
+/// sub-cluster is `map[i]`.
+fn remap_deployment(
+    sub: &ReplicatedDeployment,
+    map: &[usize],
+    n_gpus: usize,
+) -> ReplicatedDeployment {
+    let assignments = sub
+        .base
+        .assignments
+        .iter()
+        .map(|a| a.iter().map(|&g| map[g]).collect())
+        .collect();
+    let base = Deployment::new(n_gpus, assignments, sub.base.policy, sub.base.scenario)
+        .expect("remapped assignments stay in range");
+    let replicas = sub
+        .replicas
+        .iter()
+        .map(|model| {
+            model
+                .iter()
+                .map(|set| set.iter().map(|&g| map[g]).collect())
+                .collect()
+        })
+        .collect();
+    ReplicatedDeployment::new(base, replicas).expect("remap preserves replica-set validity")
+}
+
 impl Coordinator {
     /// Start coordinating: `rep`/`splits` is the deployed plan, `plan_layer`
     /// the statistics it was optimized for (traffic seeds the estimator and
@@ -281,6 +460,7 @@ impl Coordinator {
         let slo = cfg
             .slo_p99_ms
             .map(|target| SloMonitor::new(target, cfg.slo_window.max(1)));
+        let n_gpus = rep.n_gpus();
         Coordinator {
             planner,
             gate_ms: plan_layer.gate_ms,
@@ -294,6 +474,12 @@ impl Coordinator {
             slo,
             windows_since_replan: 0,
             rejections: 0,
+            health: ClusterHealth::new(n_gpus),
+            pending: None,
+            drained_by_coordinator: vec![false; n_gpus],
+            util_ewma: None,
+            burn_streak: 0,
+            idle_streak: 0,
             tracer: Tracer::disabled(),
             stats: CoordinatorStats::default(),
             cfg,
@@ -355,6 +541,337 @@ impl Coordinator {
     /// The SLO watchdog, if one is configured.
     pub fn slo(&self) -> Option<&SloMonitor> {
         self.slo.as_ref()
+    }
+
+    /// Liveness/placeability of every GPU, as updated by
+    /// [`Coordinator::inject_event`] and the elasticity policy.
+    pub fn health(&self) -> &ClusterHealth {
+        &self.health
+    }
+
+    /// Feed one serving window's mean GPU utilization (0..1) into the
+    /// consolidation signal's EWMA (same α as the traffic estimator). Only
+    /// consulted when [`CoordinatorConfig::elastic`] is set.
+    pub fn record_window_utilization(&mut self, utilization: f64) {
+        let a = self.cfg.ewma_alpha;
+        self.util_ewma = Some(match self.util_ewma {
+            None => utilization,
+            Some(prev) => a * utilization + (1.0 - a) * prev,
+        });
+    }
+
+    /// Apply one cluster-membership event, *before* serving the window it
+    /// lands on.
+    ///
+    /// [`ClusterEvent::GpuFailed`] runs the zero-downtime half of the
+    /// promote-then-repair contract synchronously: any in-flight swap is
+    /// aborted (its staged plan may involve the dead GPU), the dead GPU's
+    /// copies are evacuated onto surviving replicas — sole copies
+    /// cold-restored — via [`ReplicatedDeployment::evacuate_gpu`], split
+    /// weights are re-solved on the live estimate ([`optimize_splits`] — no
+    /// planner call), and the result serves immediately, so no token is
+    /// ever routed to the dead GPU. A cost-aware repair replan is queued
+    /// for the next [`Coordinator::observe_window`] (verdict
+    /// `repair_replanned` when it commits, with dead GPUs banned as
+    /// migration sources).
+    ///
+    /// [`ClusterEvent::GpuDrained`] queues the same repair (the GPU keeps
+    /// serving and may source migrations until vacated);
+    /// [`ClusterEvent::GpuJoined`] queues a rebalance that commits only if
+    /// spreading back out actually helps. Each effective event emits one
+    /// `coordinator.replan_gate` decision (verdicts `repair_promoted`,
+    /// `gpu_drained`, `gpu_joined`); events that change nothing (re-failing
+    /// a dead GPU) are no-ops.
+    ///
+    /// Panics when the failure leaves no placeable GPU to evacuate onto.
+    pub fn inject_event(&mut self, ev: &ClusterEvent, cluster: &Cluster) {
+        assert_eq!(cluster.len(), self.health.n_gpus(), "cluster size mismatch");
+        let g = ev.gpu();
+        match ev {
+            ClusterEvent::GpuFailed(_) => {
+                if !self.health.is_alive(g) {
+                    return;
+                }
+                self.health.apply(ev);
+                self.drained_by_coordinator[g] = false;
+                self.stats.failures += 1;
+                if self.swap.abort() {
+                    self.staging_traffic = None;
+                    self.stats.swaps_aborted += 1;
+                }
+                let est = self.estimator.estimate();
+                let drift = self.detector.score(&est);
+                let placeable = self.health.placeable();
+                let (rep, promoted, restored) = self.active.0.evacuate_gpu(g, &placeable);
+                let live_layer = MoeLayerStats {
+                    traffic: est,
+                    gate_ms: self.gate_ms,
+                    ffn_ms_per_token: self.ffn_ms_per_token,
+                    agg_ms: self.agg_ms,
+                };
+                let splits = optimize_splits(&rep, &[&live_layer], cluster);
+                self.active = (rep, splits);
+                self.stats.promotions += promoted.len() as u64;
+                self.stats.restores += restored.len() as u64;
+                self.pending = Some(ReplanReason::Repair);
+                self.gate_decision(
+                    "repair_promoted",
+                    drift,
+                    vec![
+                        ("gpu", Json::from(g)),
+                        ("promoted", Json::from(promoted.len())),
+                        ("restored", Json::from(restored.len())),
+                    ],
+                );
+            }
+            ClusterEvent::GpuJoined(_) => {
+                if self.health.is_placeable(g) {
+                    return;
+                }
+                self.health.apply(ev);
+                self.drained_by_coordinator[g] = false;
+                if self.pending.is_none() {
+                    self.pending = Some(ReplanReason::Rebalance);
+                }
+                self.gate_decision("gpu_joined", self.current_drift(), vec![("gpu", Json::from(g))]);
+            }
+            ClusterEvent::GpuDrained(_) => {
+                if !self.health.is_alive(g) || self.health.is_draining(g) {
+                    return;
+                }
+                self.health.apply(ev);
+                // an operator's drain, not ours to reclaim on scale-up
+                self.drained_by_coordinator[g] = false;
+                self.pending = Some(ReplanReason::Repair);
+                self.gate_decision(
+                    "gpu_drained",
+                    self.current_drift(),
+                    vec![("gpu", Json::from(g))],
+                );
+            }
+        }
+    }
+
+    /// The live-estimate model trace candidate plans are computed on.
+    fn live_trace(&self, est: TrafficMatrix) -> ModelTrace {
+        ModelTrace {
+            name: "live-estimate".to_string(),
+            layers: vec![MoeLayerStats {
+                traffic: est,
+                gate_ms: self.gate_ms,
+                ffn_ms_per_token: self.ffn_ms_per_token,
+                agg_ms: self.agg_ms,
+            }],
+        }
+    }
+
+    /// Candidate plan under the current health mask
+    /// ([`plan_candidate_masked`]); all GPUs placeable ⇒ the historical
+    /// planner call, bit for bit.
+    fn plan_candidate(
+        &self,
+        trace: &ModelTrace,
+        cluster: &Cluster,
+    ) -> (ReplicatedDeployment, SplitPlan) {
+        plan_candidate_masked(
+            &self.planner,
+            trace,
+            cluster,
+            &self.cfg.topology,
+            &self.cfg.replication,
+            &self.health,
+            &self.tracer,
+        )
+    }
+
+    /// One window of elasticity bookkeeping: track the burn and idle
+    /// streaks and, at the configured patience, queue a scale-up or a
+    /// consolidation replan.
+    fn elastic_tick(&mut self, burn_rate: Option<f64>) {
+        if let Some(burn) = burn_rate {
+            if burn >= self.cfg.scale_up_burn {
+                self.burn_streak += 1;
+            } else {
+                self.burn_streak = 0;
+            }
+        }
+        match self.util_ewma {
+            Some(u) if u < self.cfg.consolidate_util => self.idle_streak += 1,
+            Some(_) => self.idle_streak = 0,
+            None => {}
+        }
+        if self.pending.is_some() {
+            return;
+        }
+        if self.burn_streak >= self.cfg.elastic_patience {
+            self.burn_streak = 0;
+            self.idle_streak = 0;
+            // Grow capacity: reclaim a coordinator-drained GPU if one
+            // exists, otherwise raise the replica budget (bounded by the
+            // placeable GPU count — replicas live on distinct GPUs).
+            if let Some(g) = (0..self.health.n_gpus()).find(|&g| self.drained_by_coordinator[g]) {
+                self.health.apply(&ClusterEvent::GpuJoined(g));
+                self.drained_by_coordinator[g] = false;
+            } else {
+                let cap = self.health.n_placeable().max(1);
+                self.cfg.replication.max_replicas =
+                    (self.cfg.replication.max_replicas + 1).min(cap);
+            }
+            self.pending = Some(ReplanReason::ScaleUp);
+        } else if self.idle_streak >= self.cfg.elastic_patience {
+            self.idle_streak = 0;
+            if self.health.n_placeable() <= self.cfg.min_gpus.max(1) {
+                return;
+            }
+            // Drain the placeable GPU carrying the least projected load.
+            let loads = self.active.0.gpu_loads_split(
+                0,
+                &self.estimator.estimate().expert_loads(),
+                &self.active.1,
+            );
+            let g = self
+                .health
+                .placeable_gpus()
+                .into_iter()
+                .min_by_key(|&g| (loads[g], g))
+                .expect("placeable set checked non-empty above");
+            self.health.apply(&ClusterEvent::GpuDrained(g));
+            self.drained_by_coordinator[g] = true;
+            self.pending = Some(ReplanReason::Consolidate { gpu: g });
+        }
+    }
+
+    /// Run a pending membership/elasticity replan: plan a candidate under
+    /// the health mask, gate it by reason, and commit over the normal
+    /// migration/swap path with dead GPUs banned as sources. The drift gate
+    /// is bypassed; swap-busy and the cooldown still defer (verdict
+    /// `skipped_cooldown` with the pending reason attached — the replan
+    /// retries next window).
+    fn pending_replan(
+        &mut self,
+        reason: ReplanReason,
+        est: &TrafficMatrix,
+        drift: f64,
+        cluster: &Cluster,
+    ) -> CoordinatorDecision {
+        if self.swap.is_busy() || self.windows_since_replan <= self.cfg.cooldown_windows {
+            self.stats.skipped_cooldown += 1;
+            self.gate_decision(
+                "skipped_cooldown",
+                drift,
+                vec![
+                    ("swap_busy", Json::from(self.swap.is_busy())),
+                    ("pending", Json::from(reason.name())),
+                ],
+            );
+            return CoordinatorDecision::Keep { drift };
+        }
+        let live_trace = self.live_trace(est.clone());
+        let (cand_rep, cand_splits) = self.plan_candidate(&live_trace, cluster);
+        let layers = [&live_trace.layers[0]];
+        let cur_ms = serving_estimate_ms(
+            &self.active.0,
+            &self.active.1,
+            &layers,
+            cluster,
+            &self.cfg.topology,
+        );
+        let new_ms =
+            serving_estimate_ms(&cand_rep, &cand_splits, &layers, cluster, &self.cfg.topology);
+        let accept = match reason {
+            // Repairs always commit: the current plan references (or is a
+            // promoted stopgap around) a lost GPU, and the masked candidate
+            // is the best deployment for the new membership — a gain gate
+            // here would leave drains never vacated and failures
+            // under-replicated.
+            ReplanReason::Repair => true,
+            // Growth must actually help (same hysteresis as the drift path).
+            ReplanReason::Rebalance | ReplanReason::ScaleUp => {
+                new_ms < cur_ms * (1.0 - self.cfg.min_gain)
+            }
+            // Consolidation trades a bounded slowdown for a freed GPU.
+            ReplanReason::Consolidate { .. } => {
+                new_ms <= cur_ms * (1.0 + self.cfg.consolidate_slack)
+            }
+        };
+        self.pending = None;
+        if !accept {
+            if let ReplanReason::Consolidate { gpu } = reason {
+                // Too expensive to shrink: cancel the drain, keep serving.
+                self.health.apply(&ClusterEvent::GpuJoined(gpu));
+                self.drained_by_coordinator[gpu] = false;
+            }
+            self.stats.skipped_gain += 1;
+            self.gate_decision(
+                "skipped_gain",
+                drift,
+                vec![
+                    ("cur_ms", Json::Num(cur_ms)),
+                    ("cand_ms", Json::Num(new_ms)),
+                    ("pending", Json::from(reason.name())),
+                ],
+            );
+            return CoordinatorDecision::Keep { drift };
+        }
+        let migration = plan_migration_avoiding(
+            &self.active.0,
+            &cand_rep,
+            self.cfg.expert_weight_tokens,
+            &self.health.banned_sources(),
+        );
+        let migration_ms = if migration.is_empty() {
+            0.0
+        } else {
+            migration.migration_ms_on(cluster, &self.cfg.topology)
+        };
+        let predicted_gain_ms = (cur_ms - new_ms) * self.cfg.horizon_windows;
+        // No amortized cost gate here: redundancy and capacity changes are
+        // not optional optimizations. The migration is still priced and
+        // reported — it just does not veto.
+        if migration.is_empty() {
+            self.active = (cand_rep, cand_splits);
+        } else {
+            let began = self.swap.begin(cand_rep, cand_splits, migration_ms);
+            debug_assert!(began, "swap was checked idle above");
+            self.staging_traffic = Some(migration.traffic.clone());
+        }
+        self.detector.rebase(est);
+        self.windows_since_replan = 0;
+        self.rejections = 0;
+        self.stats.replans += 1;
+        self.stats.migration_ms_total += migration_ms;
+        let verdict = match reason {
+            ReplanReason::Repair | ReplanReason::Rebalance => {
+                self.stats.repairs += 1;
+                "repair_replanned"
+            }
+            ReplanReason::ScaleUp => {
+                self.stats.scale_ups += 1;
+                "scaled_up"
+            }
+            ReplanReason::Consolidate { .. } => {
+                self.stats.consolidations += 1;
+                "consolidated"
+            }
+        };
+        self.gate_decision(
+            verdict,
+            drift,
+            vec![
+                ("reason", Json::from(reason.name())),
+                ("cur_ms", Json::Num(cur_ms)),
+                ("cand_ms", Json::Num(new_ms)),
+                ("predicted_gain_ms", Json::Num(predicted_gain_ms)),
+                ("migration_ms", Json::Num(migration_ms)),
+                ("in_place", Json::from(migration.is_empty())),
+            ],
+        );
+        CoordinatorDecision::Replan(Box::new(ReplanOutcome {
+            drift,
+            predicted_gain_ms,
+            migration_ms,
+            migration,
+        }))
     }
 
     /// The plan currently serving.
@@ -432,6 +949,17 @@ impl Coordinator {
             }
         };
 
+        // Elasticity bookkeeping may queue a scale-up or consolidation;
+        // membership events ([`Coordinator::inject_event`]) may already have
+        // queued a repair or rebalance. Any pending membership replan takes
+        // the dedicated path — it bypasses the drift gate entirely.
+        if self.cfg.elastic {
+            self.elastic_tick(slo_status.map(|(st, _)| st.burn_rate));
+        }
+        if let Some(reason) = self.pending {
+            return self.pending_replan(reason, &est, drift, cluster);
+        }
+
         if drift <= self.cfg.drift_threshold && !slo_violating {
             self.gate_decision("keep_low_drift", drift, vec![]);
             return CoordinatorDecision::Keep { drift };
@@ -453,28 +981,11 @@ impl Coordinator {
             return CoordinatorDecision::Keep { drift };
         }
 
-        // Candidate plan on the live estimate.
-        let live_layer = MoeLayerStats {
-            traffic: est.clone(),
-            gate_ms: self.gate_ms,
-            ffn_ms_per_token: self.ffn_ms_per_token,
-            agg_ms: self.agg_ms,
-        };
-        let live_trace = ModelTrace {
-            name: "live-estimate".to_string(),
-            layers: vec![live_layer],
-        };
-        let refs = [&live_trace];
-        let (cand_rep, cand_splits) = self
-            .planner
-            .plan_replicated_topology_traced(
-                &refs,
-                cluster,
-                &self.cfg.topology,
-                &self.cfg.replication,
-                &self.tracer,
-            )
-            .expect("one model always plans");
+        // Candidate plan on the live estimate, under the health mask (after
+        // a drain whose repair was rejected, drift/SLO replans must still
+        // avoid placing on non-placeable GPUs).
+        let live_trace = self.live_trace(est.clone());
+        let (cand_rep, cand_splits) = self.plan_candidate(&live_trace, cluster);
 
         // Completion estimates of both plans on the *live* statistics,
         // topology-aware on both the gain and the cost side of the gate.
@@ -499,7 +1010,12 @@ impl Coordinator {
             return CoordinatorDecision::Keep { drift };
         }
 
-        let migration = plan_migration(&self.active.0, &cand_rep, self.cfg.expert_weight_tokens);
+        let migration = plan_migration_avoiding(
+            &self.active.0,
+            &cand_rep,
+            self.cfg.expert_weight_tokens,
+            &self.health.banned_sources(),
+        );
         let migration_ms = if migration.is_empty() {
             0.0
         } else {
@@ -770,5 +1286,183 @@ mod tests {
         }
         assert!(coord.stats.skipped_cooldown > skipped_before);
         assert_eq!(coord.stats.replans, 1);
+    }
+
+    fn coordinator_with(
+        traffic: TrafficMatrix,
+        cluster: &Cluster,
+        cfg: CoordinatorConfig,
+    ) -> Coordinator {
+        let stats = layer(traffic);
+        let trace = ModelTrace {
+            name: "plan".to_string(),
+            layers: vec![stats.clone()],
+        };
+        let planner = Planner::default();
+        let (rep, splits) = planner
+            .plan_replicated(&[&trace], cluster, &ReplicationConfig::default())
+            .unwrap();
+        Coordinator::new(planner, rep, splits, &stats, cfg)
+    }
+
+    #[test]
+    fn gpu_failure_promotes_survivors_then_repairs() {
+        let cluster = Cluster::homogeneous(8, 814.0);
+        let skew = zipf_traffic(16, 512, 1.2, 3);
+        let cfg = CoordinatorConfig {
+            cooldown_windows: 0,
+            ..CoordinatorConfig::default()
+        };
+        let mut coord = coordinator_with(skew.clone(), &cluster, cfg);
+        let tracer = Tracer::sim();
+        coord.set_tracer(tracer.clone());
+
+        coord.inject_event(&ClusterEvent::GpuFailed(2), &cluster);
+        // phase 1, same call: the active plan no longer references GPU 2
+        let (rep, _) = coord.active();
+        for (e, set) in rep.replicas[0].iter().enumerate() {
+            assert!(!set.contains(&2), "expert {e} still on the dead GPU");
+        }
+        for &g in &rep.base.assignments[0] {
+            assert_ne!(g, 2);
+        }
+        assert_eq!(coord.stats.failures, 1);
+        assert!(!coord.health().is_alive(2));
+        // idempotent: re-failing a dead GPU changes nothing
+        coord.inject_event(&ClusterEvent::GpuFailed(2), &cluster);
+        assert_eq!(coord.stats.failures, 1);
+
+        // phase 2: the queued repair replans on the next window, bypassing
+        // the drift gate (traffic is stationary, drift ≈ 0)
+        let d = coord.observe_window(&skew, &cluster);
+        let CoordinatorDecision::Replan(out) = d else {
+            panic!("repair must replan");
+        };
+        for f in &out.migration.flows {
+            assert_ne!(f.src, 2, "dead GPUs never source repairs");
+        }
+        assert_eq!(coord.stats.repairs, 1);
+        let verdicts: Vec<String> = tracer
+            .decisions()
+            .iter()
+            .filter_map(|r| r.get("verdict").and_then(Json::as_str).map(str::to_string))
+            .collect();
+        let p = verdicts.iter().position(|v| v == "repair_promoted").unwrap();
+        let r = verdicts.iter().position(|v| v == "repair_replanned").unwrap();
+        assert!(p < r, "promotion precedes the repair replan");
+    }
+
+    #[test]
+    fn drain_vacates_the_gpu_over_the_migration_path() {
+        let cluster = Cluster::homogeneous(8, 814.0);
+        let skew = zipf_traffic(16, 512, 1.2, 3);
+        let cfg = CoordinatorConfig {
+            cooldown_windows: 0,
+            ..CoordinatorConfig::default()
+        };
+        let mut coord = coordinator_with(skew.clone(), &cluster, cfg);
+        coord.inject_event(&ClusterEvent::GpuDrained(3), &cluster);
+        assert!(coord.health().is_alive(3) && !coord.health().is_placeable(3));
+        let d = coord.observe_window(&skew, &cluster);
+        assert!(matches!(d, CoordinatorDecision::Replan(_)), "drain repair always commits");
+        coord.advance(1e6); // staging completes, the swap lands
+        let (rep, _) = coord.active();
+        for set in &rep.replicas[0] {
+            assert!(!set.contains(&3), "the drained GPU was vacated");
+        }
+        assert!(coord.health().is_alive(3), "draining is graceful — the GPU never died");
+    }
+
+    #[test]
+    fn sustained_slo_burn_grows_the_replica_budget() {
+        let cluster = Cluster::homogeneous(8, 814.0);
+        let uniform = zipf_traffic(16, 512, 0.0, 3);
+        let cfg = CoordinatorConfig {
+            elastic: true,
+            elastic_patience: 2,
+            slo_p99_ms: Some(0.001),
+            slo_window: 4,
+            cooldown_windows: 0,
+            ..CoordinatorConfig::default()
+        };
+        let mut coord = coordinator_with(uniform.clone(), &cluster, cfg);
+        let tracer = Tracer::sim();
+        coord.set_tracer(tracer.clone());
+        let budget0 = coord.cfg.replication.max_replicas;
+        for _ in 0..6 {
+            coord.record_window_latency(5.0); // hopelessly over the target
+            coord.observe_window(&uniform, &cluster);
+            coord.advance(1e6);
+        }
+        assert!(
+            coord.cfg.replication.max_replicas > budget0,
+            "sustained burn grows the replica budget"
+        );
+        let considered = tracer.decisions().iter().any(|r| {
+            r.get("verdict").and_then(Json::as_str) == Some("scaled_up")
+                || r.get("pending").and_then(Json::as_str) == Some("scale_up")
+                || r.get("reason").and_then(Json::as_str) == Some("scale_up")
+        });
+        assert!(considered, "a scale-up replan was at least considered");
+    }
+
+    #[test]
+    fn sustained_idle_considers_consolidation_and_rolls_back_on_reject() {
+        let cluster = Cluster::homogeneous(8, 814.0);
+        let uniform = zipf_traffic(16, 512, 0.0, 3);
+        let cfg = CoordinatorConfig {
+            elastic: true,
+            elastic_patience: 2,
+            cooldown_windows: 0,
+            ..CoordinatorConfig::default()
+        };
+        let mut coord = coordinator_with(uniform.clone(), &cluster, cfg);
+        let tracer = Tracer::sim();
+        coord.set_tracer(tracer.clone());
+        for _ in 0..4 {
+            coord.record_window_utilization(0.05);
+            coord.observe_window(&uniform, &cluster);
+            coord.advance(1e6);
+        }
+        let considered = tracer.decisions().iter().any(|r| {
+            r.get("verdict").and_then(Json::as_str) == Some("consolidated")
+                || r.get("pending").and_then(Json::as_str) == Some("consolidate")
+        });
+        assert!(considered, "low utilization must at least consider shrinking");
+        if coord.stats.consolidations > 0 {
+            assert!(coord.health().n_placeable() < 8);
+            let (rep, _) = coord.active();
+            for set in &rep.replicas[0] {
+                for &g in set {
+                    assert!(coord.health().is_placeable(g), "copies only on placeable GPUs");
+                }
+            }
+        } else {
+            // every attempt was too expensive: the drains rolled back
+            assert!(coord.health().all_placeable());
+        }
+    }
+
+    #[test]
+    fn join_of_a_placeable_gpu_is_a_no_op_and_rejoin_queues_rebalance() {
+        let cluster = Cluster::homogeneous(8, 814.0);
+        let skew = zipf_traffic(16, 512, 1.2, 3);
+        let cfg = CoordinatorConfig {
+            cooldown_windows: 0,
+            ..CoordinatorConfig::default()
+        };
+        let mut coord = coordinator_with(skew.clone(), &cluster, cfg);
+        coord.inject_event(&ClusterEvent::GpuJoined(1), &cluster);
+        assert_eq!(coord.pending, None, "joining a healthy GPU changes nothing");
+
+        coord.inject_event(&ClusterEvent::GpuFailed(5), &cluster);
+        assert_eq!(coord.pending, Some(ReplanReason::Repair));
+        let d = coord.observe_window(&skew, &cluster);
+        assert!(matches!(d, CoordinatorDecision::Replan(_)));
+        coord.advance(1e6);
+
+        coord.inject_event(&ClusterEvent::GpuJoined(5), &cluster);
+        assert_eq!(coord.pending, Some(ReplanReason::Rebalance));
+        assert!(coord.health().all_placeable());
     }
 }

@@ -18,15 +18,27 @@
 //! * **coordinator** — the full [`super::Coordinator`] pipeline;
 //! * **oracle** — replans each window on that window's true traffic at zero
 //!   migration cost: the (unrealizable) lower bound.
+//!
+//! [`OnlineConfig::events`] injects cluster-membership changes
+//! ([`ClusterEvent`]) at window starts. Every strategy promotes around
+//! failures before serving (no token ever routes to a dead GPU —
+//! [`crate::sim::dead_gpu_tokens`] is asserted zero on every served
+//! window); the coordinator additionally runs its cost-aware
+//! promote-then-repair pipeline, and the masked oracle becomes the
+//! fresh-plan-after-failure baseline the `eval resilience` figure measures
+//! recovery against.
 
-use super::{plan_migration, Coordinator, CoordinatorConfig, PlanSwap, SwapPhase};
+use super::{
+    plan_candidate_masked, plan_migration_avoiding, ClusterEvent, ClusterHealth, Coordinator,
+    CoordinatorConfig, PlanSwap, SwapPhase,
+};
 use crate::cluster::{Cluster, Topology};
 use crate::config::EvalConfig;
 use crate::obs::{MetricsRegistry, Tracer};
 use crate::planner::Planner;
-use crate::replication::{ReplicatedDeployment, SplitPlan};
+use crate::replication::{optimize_splits, ReplicatedDeployment, SplitPlan};
 use crate::serve::metrics::p50_p95_p99;
-use crate::sim::{simulate_window_topology, MoeLayerStats};
+use crate::sim::{dead_gpu_tokens, simulate_window_topology, MoeLayerStats, SimResult};
 use crate::trace::ModelTrace;
 use crate::traffic::{drifting_zipf_traffic, sampled_zipf_traffic, TrafficMatrix};
 
@@ -80,6 +92,17 @@ pub struct OnlineConfig {
     pub seed: u64,
     /// Sample each window multinomially instead of the exact shape.
     pub sampled: bool,
+    /// Cluster-membership events, injected at the **start** of the named
+    /// window (before it is served). Every strategy honors them: failures
+    /// are promoted immediately (no window ever routes a token to a dead
+    /// GPU — [`crate::sim::dead_gpu_tokens`] is asserted zero); the
+    /// coordinator additionally runs its promote-then-repair pipeline,
+    /// while static only promotes and periodic/oracle fold the mask into
+    /// their per-window replans.
+    pub events: Vec<(usize, ClusterEvent)>,
+    /// Enable the coordinator's elasticity policy
+    /// ([`CoordinatorConfig::elastic`]) and feed it per-window utilization.
+    pub elastic: bool,
     /// Coordinator policy knobs (also supplies the replication budgets and
     /// the expert weight volume every strategy's migrations use).
     pub coordinator: CoordinatorConfig,
@@ -98,6 +121,8 @@ impl Default for OnlineConfig {
             rotate_every: 8,
             seed: 2024,
             sampled: false,
+            events: Vec::new(),
+            elastic: false,
             coordinator: CoordinatorConfig::default(),
         }
     }
@@ -125,6 +150,8 @@ impl OnlineConfig {
             rotate_every,
             seed: cfg.seed,
             sampled,
+            events: Vec::new(),
+            elastic: false,
             coordinator: CoordinatorConfig::default(),
         }
     }
@@ -208,11 +235,43 @@ fn trace_of(stats: MoeLayerStats) -> ModelTrace {
     }
 }
 
+/// The events of `cfg` landing at window `w`, in declaration order.
+fn events_at<'a>(cfg: &'a OnlineConfig, w: usize) -> impl Iterator<Item = &'a ClusterEvent> {
+    cfg.events.iter().filter(move |(ew, _)| *ew == w).map(|(_, ev)| ev)
+}
+
+/// Apply one membership event to a non-coordinator strategy's state:
+/// failures are promoted immediately (evacuate the dead GPU's copies and
+/// re-solve split weights on `split_layer` — the zero-downtime minimum
+/// every strategy owes the workload); joins and drains only update the
+/// mask, which the strategy's next replan (if any) folds in.
+fn apply_event(
+    ev: &ClusterEvent,
+    health: &mut ClusterHealth,
+    active: &mut (ReplicatedDeployment, SplitPlan),
+    split_layer: &MoeLayerStats,
+    cluster: &Cluster,
+) {
+    match ev {
+        ClusterEvent::GpuFailed(g) => {
+            if !health.is_alive(*g) {
+                return;
+            }
+            health.apply(ev);
+            let (rep, _, _) = active.0.evacuate_gpu(*g, &health.placeable());
+            let splits = optimize_splits(&rep, &[split_layer], cluster);
+            *active = (rep, splits);
+        }
+        ClusterEvent::GpuJoined(_) | ClusterEvent::GpuDrained(_) => health.apply(ev),
+    }
+}
+
 /// Serve one window under `(rep, splits)` with optional staged weight
-/// traffic sharing the links (both priced on `topo`); returns the window's
-/// inference time (ms). With a live `metrics` registry it records the
-/// window's serving time, mean utilization, queue depth (tokens offered to
-/// the window), and the per-GPU token-load series.
+/// traffic sharing the links (both priced on `topo`). Asserts the projected
+/// GPU traffic routes **zero** tokens through dead GPUs — the fault path's
+/// safety contract. With a live `metrics` registry it records the window's
+/// serving time, mean utilization, queue depth (tokens offered to the
+/// window), and the per-GPU token-load series.
 fn serve_window(
     rep: &ReplicatedDeployment,
     splits: &SplitPlan,
@@ -220,9 +279,15 @@ fn serve_window(
     background: Option<&TrafficMatrix>,
     cluster: &Cluster,
     topo: &Topology,
+    health: &ClusterHealth,
     metrics: &MetricsRegistry,
-) -> f64 {
+) -> SimResult {
     let gpu_stats = rep.project_layer_split(0, stats, splits);
+    assert_eq!(
+        dead_gpu_tokens(&gpu_stats.traffic, health.alive()),
+        0,
+        "window routed tokens through a dead GPU"
+    );
     let res =
         simulate_window_topology(&[&gpu_stats], background, cluster, topo, rep.base.policy);
     if metrics.is_enabled() {
@@ -238,7 +303,7 @@ fn serve_window(
         }
         metrics.gauge_set("serve.last_window_ms", res.inference_ms);
     }
-    res.inference_ms
+    res
 }
 
 /// Run the drifting-Zipf serving simulation for one strategy. Every
@@ -281,6 +346,15 @@ pub fn run_online_traced(
     if let Err(e) = cfg.coordinator.topology.owners(cluster.len()) {
         panic!("OnlineConfig.coordinator.topology does not fit the cluster: {e}");
     }
+    for (w, ev) in &cfg.events {
+        assert!(*w < cfg.windows, "event at window {w} is beyond the horizon");
+        assert!(
+            ev.gpu() < cfg.n_gpus,
+            "event names GPU {} of {}",
+            ev.gpu(),
+            cfg.n_gpus
+        );
+    }
 
     let planner = Planner::default();
     let plan_layer = layer(drifting_zipf_traffic(
@@ -306,50 +380,70 @@ pub fn run_online_traced(
 
     match strategy {
         OnlineStrategy::Static => {
+            let mut health = ClusterHealth::new(cfg.n_gpus);
+            let mut active = (rep0, splits0);
             let mut per_window = Vec::with_capacity(cfg.windows);
             for w in 0..cfg.windows {
                 tr.set_sim_time_us((elapsed_ms * 1e3).round() as u64);
                 let sp = tr.begin("serve.window");
                 tr.counter(sp, "window", w as i64);
+                // "never replans" still owes the workload survival: promote
+                // around failures (splits re-solved on the plan-time stats,
+                // the only traffic a static strategy knows)
+                for ev in events_at(cfg, w) {
+                    apply_event(ev, &mut health, &mut active, &plan_layer, cluster);
+                }
                 let stats = layer(window_traffic(cfg, w));
-                let ms = serve_window(
-                    &rep0,
-                    &splits0,
+                let res = serve_window(
+                    &active.0,
+                    &active.1,
                     &stats,
                     None,
                     cluster,
                     &cfg.coordinator.topology,
+                    &health,
                     metrics,
                 );
-                per_window.push(ms);
-                elapsed_ms += ms;
+                per_window.push(res.inference_ms);
+                elapsed_ms += res.inference_ms;
                 tr.set_sim_time_us((elapsed_ms * 1e3).round() as u64);
                 tr.end(sp);
             }
             outcome(strategy, per_window, 0, 0, 0.0)
         }
         OnlineStrategy::Coordinator => {
-            let mut coord =
-                Coordinator::new(planner, rep0, splits0, &plan_layer, cfg.coordinator.clone());
+            let mut ccfg = cfg.coordinator.clone();
+            if cfg.elastic {
+                ccfg.elastic = true;
+            }
+            let mut coord = Coordinator::new(planner, rep0, splits0, &plan_layer, ccfg);
             coord.set_tracer(tr.clone());
             let mut per_window = Vec::with_capacity(cfg.windows);
             for w in 0..cfg.windows {
                 tr.set_sim_time_us((elapsed_ms * 1e3).round() as u64);
                 let sp = tr.begin("serve.window");
                 tr.counter(sp, "window", w as i64);
+                // Membership events land before the window serves: a failed
+                // GPU is promoted around in this very window (verdict
+                // `repair_promoted`), the repair replan queues behind it.
+                for ev in events_at(cfg, w) {
+                    coord.inject_event(ev, cluster);
+                }
                 let observed = window_traffic(cfg, w);
                 let stats = layer(observed.clone());
                 let background = coord.staging_traffic().cloned();
                 let (rep, splits) = coord.active();
-                let ms = serve_window(
+                let res = serve_window(
                     rep,
                     splits,
                     &stats,
                     background.as_ref(),
                     cluster,
                     &cfg.coordinator.topology,
+                    coord.health(),
                     metrics,
                 );
+                let ms = res.inference_ms;
                 per_window.push(ms);
                 elapsed_ms += ms;
                 // Advance the tracer clock before the replan gate runs so
@@ -358,14 +452,21 @@ pub fn run_online_traced(
                 coord.advance(ms);
                 // The window's serving latency feeds the SLO watchdog (a
                 // no-op unless the config sets a target) before the gate
-                // runs, so a p99 break replans on this very window.
+                // runs, so a p99 break replans on this very window; the
+                // utilization feeds the consolidation signal.
                 coord.record_window_latency(ms);
+                coord.record_window_utilization(res.utilization);
                 coord.observe_window(&observed, cluster);
                 tr.end(sp);
             }
             if metrics.is_enabled() {
                 metrics.counter_add("serve.slo_triggered", coord.stats.slo_triggered);
                 metrics.counter_add("serve.slo_suppressed", coord.stats.slo_suppressed);
+                metrics.counter_add("serve.failures", coord.stats.failures);
+                metrics.counter_add("serve.promotions", coord.stats.promotions);
+                metrics.counter_add("serve.repairs", coord.stats.repairs);
+                metrics.counter_add("serve.scale_ups", coord.stats.scale_ups);
+                metrics.counter_add("serve.consolidations", coord.stats.consolidations);
             }
             outcome(
                 strategy,
@@ -376,6 +477,7 @@ pub fn run_online_traced(
             )
         }
         OnlineStrategy::EveryWindow => {
+            let mut health = ClusterHealth::new(cfg.n_gpus);
             let mut active = (rep0, splits0);
             let mut swap = PlanSwap::new(cfg.coordinator.drain_ms);
             let mut staging: Option<TrafficMatrix> = None;
@@ -388,20 +490,33 @@ pub fn run_online_traced(
                 tr.counter(sp, "window", w as i64);
                 let observed = window_traffic(cfg, w);
                 let stats = layer(observed.clone());
+                // A failure invalidates whatever was staging (the dead GPU
+                // may be in it) and is promoted around immediately, on this
+                // window's own observation.
+                for ev in events_at(cfg, w) {
+                    if matches!(ev, ClusterEvent::GpuFailed(g) if health.is_alive(*g))
+                        && swap.abort()
+                    {
+                        staging = None;
+                    }
+                    apply_event(ev, &mut health, &mut active, &stats, cluster);
+                }
                 let background = if swap.phase() == SwapPhase::Staging {
                     staging.clone()
                 } else {
                     None
                 };
-                let ms = serve_window(
+                let res = serve_window(
                     &active.0,
                     &active.1,
                     &stats,
                     background.as_ref(),
                     cluster,
                     &cfg.coordinator.topology,
+                    &health,
                     metrics,
                 );
+                let ms = res.inference_ms;
                 per_window.push(ms);
                 elapsed_ms += ms;
                 tr.set_sim_time_us((elapsed_ms * 1e3).round() as u64);
@@ -411,21 +526,23 @@ pub fn run_online_traced(
                 }
                 if !swap.is_busy() {
                     // naive: replan on this window's raw observation, no
-                    // smoothing, no gain or cost gate
+                    // smoothing, no gain or cost gate (but health-masked —
+                    // the naive baseline does not place on lost GPUs either)
                     let trace = trace_of(stats);
-                    let (cand_rep, cand_splits) = Planner::default()
-                        .plan_replicated_topology_traced(
-                            &[&trace],
-                            cluster,
-                            &cfg.coordinator.topology,
-                            &cfg.coordinator.replication,
-                            tr,
-                        )
-                        .expect("one model always plans");
-                    let migration = plan_migration(
+                    let (cand_rep, cand_splits) = plan_candidate_masked(
+                        &Planner::default(),
+                        &trace,
+                        cluster,
+                        &cfg.coordinator.topology,
+                        &cfg.coordinator.replication,
+                        &health,
+                        tr,
+                    );
+                    let migration = plan_migration_avoiding(
                         &active.0,
                         &cand_rep,
                         cfg.coordinator.expert_weight_tokens,
+                        &health.banned_sources(),
                     );
                     if migration.is_empty() {
                         // in-place plan change: no weights move, but it is
@@ -448,6 +565,7 @@ pub fn run_online_traced(
             outcome(strategy, per_window, replans, swaps, migration_total)
         }
         OnlineStrategy::Oracle => {
+            let mut health = ClusterHealth::new(cfg.n_gpus);
             let mut active = (rep0, splits0);
             let mut per_window = Vec::with_capacity(cfg.windows);
             let mut replans = 0u64;
@@ -455,35 +573,42 @@ pub fn run_online_traced(
                 tr.set_sim_time_us((elapsed_ms * 1e3).round() as u64);
                 let sp = tr.begin("serve.window");
                 tr.counter(sp, "window", w as i64);
+                // The oracle replans fresh below, so events only move the
+                // mask: the masked plan is the fresh-plan-after-failure
+                // baseline the recovery win condition measures against.
+                for ev in events_at(cfg, w) {
+                    health.apply(ev);
+                }
                 let observed = window_traffic(cfg, w);
                 let stats = layer(observed.clone());
                 // perfect knowledge, free migration: adopt the best plan for
-                // this exact window before serving it
+                // this exact window (and membership) before serving it
                 let trace = trace_of(stats.clone());
-                let (cand_rep, cand_splits) = Planner::default()
-                    .plan_replicated_topology_traced(
-                        &[&trace],
-                        cluster,
-                        &cfg.coordinator.topology,
-                        &cfg.coordinator.replication,
-                        tr,
-                    )
-                    .expect("one model always plans");
+                let (cand_rep, cand_splits) = plan_candidate_masked(
+                    &Planner::default(),
+                    &trace,
+                    cluster,
+                    &cfg.coordinator.topology,
+                    &cfg.coordinator.replication,
+                    &health,
+                    tr,
+                );
                 if cand_rep != active.0 {
                     replans += 1;
                 }
                 active = (cand_rep, cand_splits);
-                let ms = serve_window(
+                let res = serve_window(
                     &active.0,
                     &active.1,
                     &stats,
                     None,
                     cluster,
                     &cfg.coordinator.topology,
+                    &health,
                     metrics,
                 );
-                per_window.push(ms);
-                elapsed_ms += ms;
+                per_window.push(res.inference_ms);
+                elapsed_ms += res.inference_ms;
                 tr.set_sim_time_us((elapsed_ms * 1e3).round() as u64);
                 tr.end(sp);
             }
@@ -609,5 +734,102 @@ mod tests {
     fn mismatched_cluster_size_panics() {
         let cfg = small(0.5, false);
         run_online(&cfg, &Cluster::homogeneous(8, 814.0), OnlineStrategy::Static);
+    }
+
+    #[test]
+    fn mid_run_failure_is_survived_by_every_strategy() {
+        // the dead-GPU-tokens assertion inside serve_window is the real
+        // check here: completing the run proves no post-failure window ever
+        // routed a token through GPU 2
+        let mut cfg = small(1.2, false);
+        cfg.events = vec![(5, ClusterEvent::GpuFailed(2))];
+        cfg.coordinator.cooldown_windows = 0;
+        let cluster = Cluster::homogeneous(4, 814.0);
+        for strategy in [
+            OnlineStrategy::Static,
+            OnlineStrategy::EveryWindow,
+            OnlineStrategy::Coordinator,
+            OnlineStrategy::Oracle,
+        ] {
+            let out = run_online(&cfg, &cluster, strategy);
+            assert_eq!(out.per_window_ms.len(), cfg.windows);
+            assert!(out.per_window_ms.iter().all(|ms| ms.is_finite() && *ms > 0.0));
+            // determinism holds with events injected
+            let again = run_online(&cfg, &cluster, strategy);
+            assert_eq!(out.per_window_ms, again.per_window_ms);
+        }
+        let tr = Tracer::sim();
+        let out = run_online_traced(
+            &cfg,
+            &cluster,
+            OnlineStrategy::Coordinator,
+            &tr,
+            &MetricsRegistry::disabled(),
+        );
+        assert!(out.replans >= 1, "the repair replan commits");
+        let verdicts: Vec<String> = tr
+            .decisions()
+            .iter()
+            .filter_map(|r| {
+                r.get("verdict")
+                    .and_then(crate::util::Json::as_str)
+                    .map(str::to_string)
+            })
+            .collect();
+        let p = verdicts.iter().position(|v| v == "repair_promoted");
+        let r = verdicts.iter().position(|v| v == "repair_replanned");
+        assert!(p.is_some(), "promotion decision recorded");
+        assert!(r.is_some(), "repair decision recorded");
+        assert!(p < r, "promotion precedes the repair");
+    }
+
+    #[test]
+    fn drain_and_rejoin_round_trip() {
+        let mut cfg = small(1.2, false);
+        cfg.events = vec![
+            (3, ClusterEvent::GpuDrained(1)),
+            (9, ClusterEvent::GpuJoined(1)),
+        ];
+        cfg.coordinator.cooldown_windows = 0;
+        let cluster = Cluster::homogeneous(4, 814.0);
+        for strategy in [
+            OnlineStrategy::Static,
+            OnlineStrategy::EveryWindow,
+            OnlineStrategy::Coordinator,
+            OnlineStrategy::Oracle,
+        ] {
+            let out = run_online(&cfg, &cluster, strategy);
+            assert_eq!(out.per_window_ms.len(), cfg.windows);
+            assert!(out.total_ms.is_finite());
+        }
+    }
+
+    #[test]
+    fn stationary_failure_recovers_to_the_masked_oracle() {
+        // Stationary workload (one phase): after the failure the estimator's
+        // EWMA equals the observed traffic exactly, so the committed repair
+        // plan is the masked planner's — the same plan the oracle serves.
+        // Recovery is therefore exact within promotion + staging windows.
+        let mut cfg = small(1.2, false);
+        cfg.rotate_every = cfg.windows; // never rotates: failure is the only disturbance
+        cfg.events = vec![(5, ClusterEvent::GpuFailed(2))];
+        cfg.coordinator.cooldown_windows = 0;
+        let cluster = Cluster::homogeneous(4, 814.0);
+        let coord = run_online(&cfg, &cluster, OnlineStrategy::Coordinator);
+        let oracle = run_online(&cfg, &cluster, OnlineStrategy::Oracle);
+        let last = cfg.windows - 1;
+        let ratio = coord.per_window_ms[last] / oracle.per_window_ms[last];
+        assert!(
+            ratio <= 1.15,
+            "steady-state after repair {ratio} must sit within 1.15× of the fresh-plan oracle"
+        );
+    }
+
+    #[test]
+    #[should_panic]
+    fn event_beyond_the_horizon_panics() {
+        let mut cfg = small(0.5, false);
+        cfg.events = vec![(100, ClusterEvent::GpuFailed(0))];
+        run_online(&cfg, &Cluster::homogeneous(4, 814.0), OnlineStrategy::Static);
     }
 }

@@ -93,6 +93,24 @@ impl PlanSwap {
         true
     }
 
+    /// Abandon an in-flight swap and return to [`SwapPhase::Serving`]
+    /// immediately. During [`SwapPhase::Staging`] the pending plan is
+    /// dropped un-installed (half-staged weights are discarded); during
+    /// [`SwapPhase::Draining`] the atomic swap already happened, so aborting
+    /// only cuts the drain window short. The fault path uses this: a GPU
+    /// failure invalidates whatever was staging, and the repair replan
+    /// supersedes it. Returns `true` when there was a swap to abort.
+    pub fn abort(&mut self) -> bool {
+        if !self.is_busy() {
+            return false;
+        }
+        self.pending = None;
+        self.stage_remaining_ms = 0.0;
+        self.drain_remaining_ms = 0.0;
+        self.phase = SwapPhase::Serving;
+        true
+    }
+
     /// Advance the machine by `dt_ms` of serving time. Returns the newly
     /// active plan **exactly once** — at the staging→draining transition,
     /// the atomic swap point; the caller installs it between batches.
@@ -198,6 +216,27 @@ mod tests {
         assert!(s.begin(rep, splits, 3.0));
         // 10 ms covers staging (3) and drain (2) in one call
         assert!(s.advance(10.0).is_some());
+        assert_eq!(s.phase(), SwapPhase::Serving);
+        assert_eq!(s.swaps(), 1);
+    }
+
+    #[test]
+    fn abort_discards_a_staging_plan_and_frees_the_machine() {
+        let mut s = PlanSwap::new(1.0);
+        let (rep, splits) = plan(3);
+        assert!(!s.abort(), "idle machine has nothing to abort");
+        assert!(s.begin(rep.clone(), splits.clone(), 5.0));
+        assert!(s.advance(2.0).is_none());
+        assert!(s.abort());
+        assert_eq!(s.phase(), SwapPhase::Serving);
+        assert_eq!(s.swaps(), 0, "aborted staging never swapped");
+        // the machine is immediately reusable, and the aborted plan is gone
+        assert!(s.begin(rep.clone(), splits.clone(), 0.0));
+        let swapped = s.advance(0.0).expect("fresh swap fires");
+        assert_eq!(swapped.0, rep);
+        // aborting mid-drain only cuts the drain short
+        assert_eq!(s.phase(), SwapPhase::Draining);
+        assert!(s.abort());
         assert_eq!(s.phase(), SwapPhase::Serving);
         assert_eq!(s.swaps(), 1);
     }

@@ -16,6 +16,7 @@
 //! | multi | beyond-paper | generalized M-model placement vs random |
 //! | replication | beyond-paper | replicated vs placed vs random under Zipf skew |
 //! | online | beyond-paper | drifting routing: static vs periodic vs coordinator vs oracle |
+//! | resilience | beyond-paper | mid-trace GPU failure: promote-only vs promote-then-repair vs fresh-plan oracle |
 //! | topology | beyond-paper | two-tier fabric: hierarchical vs flat Aurora vs SJF across oversubscription |
 //! | utilization | §7 reproduction | exclusive vs colocated vs colocated+Aurora, idle time attributed per segment kind |
 
@@ -29,6 +30,7 @@ mod multi;
 mod online;
 mod replication;
 mod report;
+mod resilience;
 mod topology;
 mod utilization;
 mod workloads;
@@ -43,6 +45,7 @@ pub use multi::{multi_model_comparison, multi_workload, random_deployment};
 pub use online::online_comparison;
 pub use replication::{replication_comparison, skewed_workload};
 pub use report::{MissingColumn, Report};
+pub use resilience::resilience_comparison;
 pub use topology::topology_comparison;
 pub use utilization::utilization_figure;
 pub use workloads::Workloads;
@@ -81,6 +84,10 @@ pub fn run_figure(name: &str, cfg: &EvalConfig) -> Result<Vec<Report>, String> {
         // Beyond-paper extension: online serving under drifting routing —
         // static vs periodic vs coordinator vs oracle.
         "online" => vec![online_comparison(cfg, 1.2, 24, 8)],
+        // Beyond-paper extension: fault tolerance — a mid-trace GPU failure
+        // under a stationary workload: static (promote-only) vs the
+        // coordinator's promote-then-repair vs the fresh-plan oracle.
+        "resilience" => vec![resilience_comparison(cfg, 1.2, 24, 8)],
         // Beyond-paper extension: two-tier topologies — hierarchical
         // two-phase scheduling + placement vs flat Aurora vs SJF across
         // uplink oversubscription factors.
@@ -105,13 +112,14 @@ pub fn run_figure(name: &str, cfg: &EvalConfig) -> Result<Vec<Report>, String> {
             r.push(multi_model_comparison(cfg, 3, cfg.n_experts * 2));
             r.push(replication_comparison(cfg, &[0.0, 0.6, 1.2]));
             r.push(online_comparison(cfg, 1.2, 24, 8));
+            r.push(resilience_comparison(cfg, 1.2, 24, 8));
             r.push(topology_comparison(cfg, &[1.0, 2.0, 4.0]));
             r.push(utilization_figure(cfg, &[0.0, 0.6, 1.2]));
             r
         }
         other => {
             return Err(format!(
-                "unknown figure '{other}' (try 11a/11b/11c/11d/12/13/14/a1/a2/ablation/multi/replication/online/topology/utilization/all)"
+                "unknown figure '{other}' (try 11a/11b/11c/11d/12/13/14/a1/a2/ablation/multi/replication/online/resilience/topology/utilization/all)"
             ))
         }
     };

@@ -1,0 +1,137 @@
+//! Resilience extension figure: serving through a mid-trace GPU failure.
+//!
+//! The workload is **stationary** Zipf(α) — the hot expert never rotates, so
+//! the injected [`crate::coordinator::ClusterEvent::GpuFailed`] is the only
+//! disturbance and every latency excursion in the figure is attributable to
+//! the failure and its repair. Three strategies serve the identical stream:
+//!
+//! * **static** — promotes around the failure (the survival minimum every
+//!   strategy owes the workload) but never repairs: the degraded stopgap
+//!   serves forever;
+//! * **coordinator** — the full promote-then-repair pipeline of
+//!   [`crate::coordinator::Coordinator::inject_event`]: survivors promoted in
+//!   the failure window, a cost-aware repair replan staged right behind it;
+//! * **oracle** — a fresh masked plan every window at zero migration cost:
+//!   the fresh-plan-after-failure baseline the recovery win condition is
+//!   measured against.
+//!
+//! The pinned contract (also enforced in
+//! `rust/tests/integration_coordinator.rs`): no window ever routes a token to
+//! the dead GPU, and the coordinator's serving latency recovers to within
+//! **1.15×** of the oracle within **5 windows** of the failure.
+
+use super::report::Report;
+use crate::config::EvalConfig;
+use crate::coordinator::online::{run_online, OnlineConfig, OnlineStrategy};
+use crate::coordinator::ClusterEvent;
+
+/// Windows after the failure within which recovery must land.
+const RECOVERY_WINDOWS: usize = 5;
+/// Recovered steady-state latency bound, relative to the fresh-plan oracle.
+const RECOVERY_RATIO: f64 = 1.15;
+
+/// Serving a stationary Zipf(`alpha`) workload for `windows` windows with
+/// GPU 2 failing at the start of window `fail_window`, on the config's
+/// homogeneous cluster. Reports total/p99/post-failure latencies per
+/// strategy and each strategy's best post-failure ratio to the oracle.
+pub fn resilience_comparison(
+    cfg: &EvalConfig,
+    alpha: f64,
+    windows: usize,
+    fail_window: usize,
+) -> Report {
+    assert!(fail_window < windows, "the failure must land inside the run");
+    let cluster = cfg.homogeneous_cluster();
+    let mut ocfg = OnlineConfig::from_eval(cfg, alpha, windows, windows, false);
+    ocfg.events = vec![(fail_window, ClusterEvent::GpuFailed(2))];
+    ocfg.coordinator.cooldown_windows = 0;
+
+    let mut report = Report::new(
+        &format!(
+            "Resilience, stationary Zipf({alpha:.1}): {} experts on {} GPUs, GPU 2 fails at window {fail_window}/{windows}",
+            ocfg.n_experts,
+            cluster.len()
+        ),
+        &[
+            "total (ms)",
+            "p99 window (ms)",
+            "post-failure mean (ms)",
+            "recovery vs oracle",
+            "replans",
+        ],
+    );
+
+    let outcomes: Vec<_> = [
+        OnlineStrategy::Static,
+        OnlineStrategy::Coordinator,
+        OnlineStrategy::Oracle,
+    ]
+    .into_iter()
+    .map(|strategy| run_online(&ocfg, &cluster, strategy))
+    .collect();
+    let oracle = &outcomes[2];
+    for out in &outcomes {
+        let post: Vec<f64> = out.per_window_ms[fail_window..].to_vec();
+        let post_mean = post.iter().sum::<f64>() / post.len() as f64;
+        // best per-window ratio to the oracle inside the recovery horizon:
+        // "how close did this strategy get to a fresh plan, and how fast"
+        let horizon = (fail_window + RECOVERY_WINDOWS).min(windows);
+        let recovery = (fail_window..horizon)
+            .map(|w| out.per_window_ms[w] / oracle.per_window_ms[w])
+            .fold(f64::INFINITY, f64::min);
+        report.row(
+            out.strategy,
+            vec![
+                out.total_ms,
+                out.p99_ms,
+                post_mean,
+                recovery,
+                out.replans as f64,
+            ],
+        );
+    }
+
+    let recovery = report
+        .column("recovery vs oracle")
+        .expect("column was just added");
+    // rows: static, coordinator, oracle
+    report.note(format!(
+        "coordinator recovers to {:.3}x of the fresh-plan oracle within {RECOVERY_WINDOWS} windows (win condition: <= {RECOVERY_RATIO}x; static stopgap sits at {:.3}x)",
+        recovery[1], recovery[0]
+    ));
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> EvalConfig {
+        EvalConfig {
+            n_experts: 4,
+            batch_images: 256,
+            ..EvalConfig::default()
+        }
+    }
+
+    #[test]
+    fn resilience_figure_pins_the_recovery_win_condition() {
+        let cfg = small_cfg();
+        let r = resilience_comparison(&cfg, 1.2, 16, 5);
+        assert_eq!(r.rows.len(), 3);
+        let labels: Vec<&str> = r.rows.iter().map(|(l, _)| l.as_str()).collect();
+        assert_eq!(labels, vec!["static", "coordinator", "oracle"]);
+        let recovery = r.column("recovery vs oracle").unwrap();
+        assert!(
+            recovery[1] <= RECOVERY_RATIO,
+            "coordinator recovery {} must sit within {RECOVERY_RATIO}x of the oracle",
+            recovery[1]
+        );
+        // the oracle's ratio to itself is exactly 1
+        assert!((recovery[2] - 1.0).abs() < 1e-12);
+        // the coordinator repaired at least once; static never replans
+        let replans = r.column("replans").unwrap();
+        assert_eq!(replans[0], 0.0);
+        assert!(replans[1] >= 1.0, "{replans:?}");
+    }
+}

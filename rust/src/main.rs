@@ -67,14 +67,14 @@ fn usage() {
         "aurora — MoE inference optimization (paper reproduction)
 
 USAGE:
-  aurora eval     --figure <11a|11b|11c|11d|12|13|14|a1|a2|ablation|multi|replication|online|topology|utilization|all> [--config f.json] [--json out.json]
+  aurora eval     --figure <11a|11b|11c|11d|12|13|14|a1|a2|ablation|multi|replication|online|topology|utilization|resilience|all> [--config f.json] [--json out.json]
   aurora plan     --cluster <homo|hetero> --models <N> [--experts-per-gpu <K>] [--replicas <R>] [--skew <ALPHA>] [--groups <G> --oversub <F>] [--config f.json]
   aurora simulate --cluster <homo|hetero> --models <N> [--experts-per-gpu <K>] [--replicas <R>] [--skew <ALPHA>] [--groups <G> --oversub <F>] [--policy aurora|sjf|ljf|pairwise|rcs]
   aurora bench    [--out BENCH_planner.json] [--budget-ms N] [--groups <G> --oversub <F>] [--check [--max-regress R]]
   aurora bench    --merge-measured <artifact.json> [--out BENCH_planner.json]
   aurora trace    --out <file.json> [--config f.json]
   aurora serve    [--artifacts DIR] [--requests N] [--batch N] [--policy aurora|rcs]
-  aurora serve-sim [--drift ALPHA] [--windows N] [--rotate-every N] [--strategy static|periodic|coordinator|oracle|all] [--noise] [--groups <G> --oversub <F>] [--config f.json]
+  aurora serve-sim [--drift ALPHA] [--windows N] [--rotate-every N] [--strategy static|periodic|coordinator|oracle|all] [--noise] [--fail-gpu G@W[,G@W...]] [--drain-gpu G@W] [--join-gpu G@W] [--elastic] [--groups <G> --oversub <F>] [--config f.json]
   aurora profile  [--gpus N] [--skew ALPHA] [--replicas R] [--seed S] [--trace-out f.json] [--jsonl-out f.jsonl]
 
   --models N           colocate N models (N >= 3 uses the generalized placement core)
@@ -97,6 +97,14 @@ USAGE:
   --slo-p99-ms T       serve-sim: arm the coordinator's SLO watchdog — replan when the
                        rolling p99 window latency exceeds T ms (emergency override of
                        the drift/gain/cost gates; cooldown still applies)
+  --fail-gpu G@W       serve-sim: fail GPU G at the start of window W (comma-separate
+                       for multiple events); survivors are promoted in-window and a
+                       repair replan follows
+  --drain-gpu G@W      serve-sim: gracefully drain GPU G at window W (migrates away,
+                       stays alive)
+  --join-gpu G@W       serve-sim: (re)join GPU G to the placeable set at window W
+  --elastic            serve-sim: let the coordinator grow replica budgets under SLO
+                       burn and consolidate onto fewer GPUs when utilization is low
   --merge-measured F   bench: append the snapshot measured in F (a bench history, legacy
                        single-snapshot, or .rejected.json artifact) to --out instead of
                        running benchmarks; prints the measured-vs-committed diff
@@ -701,23 +709,33 @@ fn cmd_bench(opts: &Opts) -> Result<(), String> {
         comm_time(d, &bw, SchedulePolicy::Sjf).makespan
     });
 
-    // Planner hot paths.
+    // Planner hot paths. Each fallible planning call is validated once
+    // up front so a setup error reports one line and exits nonzero instead
+    // of panicking inside the timing loop.
+    let dep = planner
+        .plan_multi(&refs, &cluster)
+        .map_err(|e| format!("bench setup: plan_multi 3x16 on 8 GPUs: {e}"))?;
     b.run("planner: plan_multi 3x16 on 8 GPUs", || {
-        planner.plan_multi(&refs, &cluster).unwrap().max_group_size()
+        planner
+            .plan_multi(&refs, &cluster)
+            .expect("validated above")
+            .max_group_size()
     });
     let skewed = skewed_workload(16, cfg.n_layers, cfg.batch_images * 16, 1.2, cfg.seed);
     let skewed_refs = [&skewed];
     let rep_cfg = ReplicationConfig::default();
+    planner
+        .plan_replicated(&skewed_refs, &cluster, &rep_cfg)
+        .map_err(|e| format!("bench setup: plan_replicated 16 on 8 GPUs: {e}"))?;
     b.run("planner: plan_replicated zipf(1.2) 16 on 8 GPUs", || {
         planner
             .plan_replicated(&skewed_refs, &cluster, &rep_cfg)
-            .unwrap()
+            .expect("validated above")
             .0
             .added_replicas()
     });
 
     // Simulator hot path: the 3-way grouped pipeline on planned placements.
-    let dep = planner.plan_multi(&refs, &cluster).unwrap();
     let layers: Vec<&aurora::sim::MoeLayerStats> =
         traces.iter().map(|t| &t.layers[0]).collect();
     b.run("sim: simulate_layer 3-way on 8 GPUs", || {
@@ -741,20 +759,25 @@ fn cmd_bench(opts: &Opts) -> Result<(), String> {
         .map_err(|e| e.to_string())?;
     let cluster16 = Cluster::homogeneous(16, 800.0);
     let d16 = &skewed.layers[0].traffic;
+    aurora::schedule::hierarchical_schedule(d16, &cluster16, &topo)
+        .map_err(|e| format!("bench setup: hierarchical_schedule 16x16: {e}"))?;
     b.run(
         &format!("schedule: hierarchical two-phase 16x16 {groups}g x{oversub}"),
         || {
             aurora::schedule::hierarchical_schedule(d16, &cluster16, &topo)
-                .unwrap()
+                .expect("validated above")
                 .pipelined_ms
         },
     );
+    planner
+        .plan_topology(&skewed_refs, &cluster16, &topo)
+        .map_err(|e| format!("bench setup: plan_topology 16 on 16 GPUs: {e}"))?;
     b.run(
         &format!("planner: plan_topology zipf(1.2) 16 on 16 GPUs {groups}g x{oversub}"),
         || {
             planner
                 .plan_topology(&skewed_refs, &cluster16, &topo)
-                .unwrap()
+                .expect("validated above")
                 .max_group_size()
         },
     );
@@ -768,24 +791,30 @@ fn cmd_bench(opts: &Opts) -> Result<(), String> {
         let big_cluster = Cluster::homogeneous(n, 800.0);
         let big_trace = skewed_workload(n, 2, 512, 1.2, cfg.seed);
         let big_refs = [&big_trace];
+        planner
+            .plan_replicated(&big_refs, &big_cluster, &rep_cfg)
+            .map_err(|e| format!("bench setup: plan_replicated {n} on {n} GPUs: {e}"))?;
         b.run(
             &format!("planner: plan_replicated zipf(1.2) {n} on {n} GPUs"),
             || {
                 planner
                     .plan_replicated(&big_refs, &big_cluster, &rep_cfg)
-                    .unwrap()
+                    .expect("validated above")
                     .0
                     .added_replicas()
             },
         );
         let big_topo = aurora::cluster::Topology::even_two_tier(n, 8, 4.0)
             .map_err(|e| e.to_string())?;
+        planner
+            .plan_topology(&big_refs, &big_cluster, &big_topo)
+            .map_err(|e| format!("bench setup: plan_topology {n} on {n} GPUs: {e}"))?;
         b.run(
             &format!("planner: plan_topology zipf(1.2) {n} on {n} GPUs 8g x4"),
             || {
                 planner
                     .plan_topology(&big_refs, &big_cluster, &big_topo)
-                    .unwrap()
+                    .expect("validated above")
                     .max_group_size()
             },
         );
@@ -819,13 +848,21 @@ fn cmd_bench(opts: &Opts) -> Result<(), String> {
         let big_refs = [&big_trace];
         let topo3 = aurora::cluster::Topology::even_tiered(n, &[racks, pods], &[2.0, 4.0])
             .map_err(|e| e.to_string())?;
+        let big_dep = planner
+            .plan_topology(&big_refs, &big_cluster, &topo3)
+            .map_err(|e| format!("bench setup: plan_topology {n} on {n} GPUs 3-tier: {e}"))?;
+        let big_agg = big_dep.aggregated_traffic(&[&big_trace.layers[0]]);
+        aurora::schedule::hierarchical_schedule(&big_agg, &big_cluster, &topo3)
+            .map_err(|e| format!("bench setup: hierarchical_schedule {n} 3-tier: {e}"))?;
         b.run(
             &format!("planner: plan_topology+schedule zipf(1.2) {n} on {n} GPUs 3-tier"),
             || {
-                let dep = planner.plan_topology(&big_refs, &big_cluster, &topo3).unwrap();
+                let dep = planner
+                    .plan_topology(&big_refs, &big_cluster, &topo3)
+                    .expect("validated above");
                 let agg = dep.aggregated_traffic(&[&big_trace.layers[0]]);
                 aurora::schedule::hierarchical_schedule(&agg, &big_cluster, &topo3)
-                    .unwrap()
+                    .expect("validated above")
                     .pipelined_ms
             },
         );
@@ -992,9 +1029,45 @@ fn merge_measured(artifact: &str, out: &str) -> Result<(), String> {
 /// Drifting-Zipf online-serving simulation: static plan vs periodic
 /// replanning vs the cost-aware coordinator vs a zero-cost oracle, with
 /// per-window p50/p95/p99 serving-time percentiles.
+/// Parse one fault-injection flag: comma-separated `GPU@WINDOW` specs,
+/// validated against the cluster and the window horizon.
+fn parse_events(
+    opts: &Opts,
+    flag: &str,
+    windows: usize,
+    n_gpus: usize,
+    mk: fn(usize) -> aurora::coordinator::ClusterEvent,
+) -> Result<Vec<(usize, aurora::coordinator::ClusterEvent)>, String> {
+    let Some(spec) = opts.get(flag) else {
+        return Ok(Vec::new());
+    };
+    let mut out = Vec::new();
+    for part in spec.split(',').filter(|p| !p.trim().is_empty()) {
+        let (gpu, window) = part
+            .split_once('@')
+            .ok_or_else(|| format!("bad --{flag} '{part}': expected GPU@WINDOW"))?;
+        let g: usize = gpu
+            .trim()
+            .parse()
+            .map_err(|_| format!("bad --{flag} GPU '{gpu}'"))?;
+        let w: usize = window
+            .trim()
+            .parse()
+            .map_err(|_| format!("bad --{flag} window '{window}'"))?;
+        if g >= n_gpus {
+            return Err(format!("--{flag}: GPU {g} out of range (cluster has {n_gpus} GPUs)"));
+        }
+        if w >= windows {
+            return Err(format!("--{flag}: window {w} out of range (run has {windows} windows)"));
+        }
+        out.push((w, mk(g)));
+    }
+    Ok(out)
+}
+
 fn cmd_serve_sim(opts: &Opts) -> Result<(), String> {
     use aurora::cluster::Cluster;
-    use aurora::coordinator::{run_online_traced, OnlineConfig, OnlineStrategy};
+    use aurora::coordinator::{run_online_traced, ClusterEvent, OnlineConfig, OnlineStrategy};
 
     let cfg = opts.config()?;
     let alpha: f64 = opts
@@ -1036,6 +1109,21 @@ fn cmd_serve_sim(opts: &Opts) -> Result<(), String> {
         }
         ocfg.coordinator.slo_p99_ms = Some(target);
     }
+    // Fault injection: comma-separated GPU@WINDOW specs, landing at the
+    // start of their window (before it serves).
+    let mut events = Vec::new();
+    events.extend(parse_events(opts, "fail-gpu", windows, cluster.len(), ClusterEvent::GpuFailed)?);
+    events.extend(parse_events(
+        opts,
+        "drain-gpu",
+        windows,
+        cluster.len(),
+        ClusterEvent::GpuDrained,
+    )?);
+    events.extend(parse_events(opts, "join-gpu", windows, cluster.len(), ClusterEvent::GpuJoined)?);
+    events.sort_by_key(|(w, _)| *w);
+    ocfg.events = events;
+    ocfg.elastic = opts.get("elastic").is_some_and(|v| v != "false");
 
     let strategies: Vec<OnlineStrategy> = match opts.get("strategy").unwrap_or("all") {
         "static" => vec![OnlineStrategy::Static],
@@ -1057,6 +1145,12 @@ fn cmd_serve_sim(opts: &Opts) -> Result<(), String> {
         cluster.len(),
         if sampled { ", sampled windows" } else { "" }
     );
+    for (w, ev) in &ocfg.events {
+        println!("  event: {} GPU {} at window {w}", ev.name(), ev.gpu());
+    }
+    if ocfg.elastic {
+        println!("  elastic: scale-up on SLO burn, consolidation on low utilization");
+    }
     // Serve-sim traces use the simulator's clock, not the wall clock: two runs
     // with the same seed produce byte-identical trace files.
     let tr = if opts.get("trace-out").is_some() || opts.get("jsonl-out").is_some() {

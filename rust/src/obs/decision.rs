@@ -8,6 +8,15 @@
 //! BvN phases). Records are collected by the [`super::Tracer`] they were
 //! emitted through, so spans and decisions share one clock and one export.
 //!
+//! The replan gate's verdict vocabulary now spans three trigger families:
+//! drift (`keep_low_drift`, `commit`, `skipped_gain`, `skipped_cost`,
+//! `skipped_cooldown`), SLO (`slo_triggered`, `slo_suppressed_cooldown`),
+//! and cluster membership/elasticity (`repair_promoted` at a failure's
+//! in-window promotion, `gpu_drained`/`gpu_joined` at the event,
+//! `repair_replanned` when the repair commits, `scaled_up`, and
+//! `consolidated`) — the CI fault-injection smoke leg greps exactly this
+//! vocabulary out of the exported trace.
+//!
 //! Field values are [`Json`] so records stay schema-free: a consumer greps
 //! on `kind` and reads the fields it knows. Ordering of fields is preserved
 //! (they serialize as `[key, value]` pairs, not as a key-sorted object).

@@ -270,6 +270,75 @@ impl ReplicatedDeployment {
         Ok(())
     }
 
+    /// Degraded-mode promotion: the deployment with every copy hosted on
+    /// `gpu` removed. Where a survivor replica exists it is promoted (the
+    /// first survivor becomes the primary); an expert whose *only* copy
+    /// lived on `gpu` is cold-restored onto the least-occupied placeable
+    /// GPU (fewest slots, lowest id as tiebreak — its weights must be
+    /// re-fetched from the checkpoint, which the repair replan prices).
+    /// Returns the evacuated deployment plus the `(model, expert)` lists of
+    /// promoted survivors and cold restores. This is the zero-downtime half
+    /// of the coordinator's promote-then-repair contract
+    /// ([`crate::coordinator::Coordinator::inject_event`]): no planner call,
+    /// just mask-and-renormalize — split weights are re-solved by the caller
+    /// via [`optimize_splits`].
+    ///
+    /// Panics when `placeable` still allows `gpu` (the failed/drained GPU
+    /// must be masked first) or when no placeable GPU remains.
+    pub fn evacuate_gpu(
+        &self,
+        gpu: usize,
+        placeable: &[bool],
+    ) -> (ReplicatedDeployment, Vec<(usize, usize)>, Vec<(usize, usize)>) {
+        assert!(gpu < self.n_gpus(), "evacuating GPU {gpu} of {}", self.n_gpus());
+        assert_eq!(placeable.len(), self.n_gpus());
+        assert!(!placeable[gpu], "the evacuated GPU must be masked un-placeable");
+        assert!(
+            placeable.iter().any(|&p| p),
+            "no placeable GPU left to evacuate onto"
+        );
+        let mut base = self.base.clone();
+        let mut replicas = self.replicas.clone();
+        let mut promoted = Vec::new();
+        let mut restored = Vec::new();
+        // Slot occupancy for restore-target choice, with the evacuated GPU's
+        // copies already discounted.
+        let mut slots = vec![0usize; self.n_gpus()];
+        for model in &replicas {
+            for set in model {
+                for &g in set {
+                    if g != gpu {
+                        slots[g] += 1;
+                    }
+                }
+            }
+        }
+        for (m, model) in replicas.iter_mut().enumerate() {
+            for (e, set) in model.iter_mut().enumerate() {
+                if !set.contains(&gpu) {
+                    continue;
+                }
+                set.retain(|&g| g != gpu);
+                if set.is_empty() {
+                    let target = (0..placeable.len())
+                        .filter(|&g| placeable[g])
+                        .min_by_key(|&g| (slots[g], g))
+                        .expect("checked above: at least one placeable GPU");
+                    set.push(target);
+                    slots[target] += 1;
+                    restored.push((m, e));
+                } else if base.assignments[m][e] == gpu {
+                    promoted.push((m, e));
+                }
+                // keep the invariant: the primary is the first replica
+                base.assignments[m][e] = set[0];
+            }
+        }
+        let rep = ReplicatedDeployment::new(base, replicas)
+            .expect("evacuation preserves deployment validity");
+        (rep, promoted, restored)
+    }
+
     /// Model `m`'s layer statistics projected onto GPU indices with the
     /// plan's split weights applied: each sender's tokens for a replicated
     /// expert spread across its replica GPUs
@@ -818,6 +887,59 @@ mod tests {
         };
         assert!(after <= before + 1e-9, "refine worsened {before} -> {after}");
         assert!(ReplicatedDeployment::new(rep.base.clone(), rep.replicas.clone()).is_ok());
+    }
+
+    #[test]
+    fn evacuate_promotes_survivors_and_restores_sole_copies() {
+        // 4 experts on 3 GPUs: expert 0 on {0,1}, expert 1 on {1}, expert 2
+        // sole-hosted on GPU 1, expert 3 on {2,1}.
+        let base = Deployment::new(
+            3,
+            vec![vec![1, 1, 1, 2]],
+            SchedulePolicy::Aurora,
+            Scenario::ExclusiveHomogeneous,
+        )
+        .unwrap();
+        let rep = ReplicatedDeployment::new(
+            base,
+            vec![vec![vec![1, 0], vec![1], vec![1], vec![2, 1]]],
+        )
+        .unwrap();
+        let placeable = vec![true, false, true];
+        let (out, promoted, restored) = rep.evacuate_gpu(1, &placeable);
+        // no copy on GPU 1 survives, and every primary is its set's head
+        for (e, set) in out.replicas[0].iter().enumerate() {
+            assert!(!set.contains(&1));
+            assert!(!set.is_empty());
+            assert_eq!(out.base.assignments[0][e], set[0]);
+        }
+        // expert 0: survivor 0 promoted to primary
+        assert_eq!(out.replicas[0][0], vec![0]);
+        assert_eq!(out.base.assignments[0][0], 0);
+        // experts 1 and 2: sole copies cold-restored onto placeable GPUs
+        assert_eq!(restored, vec![(0, 1), (0, 2)]);
+        // expert 3: replica dropped, primary 2 untouched
+        assert_eq!(out.replicas[0][3], vec![2]);
+        assert_eq!(out.base.assignments[0][3], 2);
+        assert!(promoted.contains(&(0, 0)));
+        // re-validation holds by construction
+        assert!(ReplicatedDeployment::new(out.base.clone(), out.replicas.clone()).is_ok());
+        // a second failure (experts 2 and 3 are now sole on GPU 2) restores
+        // both onto the survivors
+        let placeable2 = vec![true, true, false];
+        let (next, p2, r2) = out.evacuate_gpu(2, &placeable2);
+        assert!(p2.is_empty(), "sole copies restore, they do not promote");
+        assert_eq!(r2, vec![(0, 2), (0, 3)]);
+        for set in &next.replicas[0] {
+            assert!(!set.contains(&2));
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn evacuate_requires_the_gpu_to_be_masked() {
+        let rep = ReplicatedDeployment::from_deployment(packed_base(4, 2));
+        rep.evacuate_gpu(0, &[true, true]);
     }
 
     #[test]

@@ -54,7 +54,7 @@ pub use group::{
     simulate_group_topology_recorded, GroupBreakdown,
 };
 pub use online::{
-    simulate_window, simulate_window_recorded, simulate_window_topology,
+    dead_gpu_tokens, simulate_window, simulate_window_recorded, simulate_window_topology,
     simulate_window_topology_recorded,
 };
 pub use stats::MoeLayerStats;

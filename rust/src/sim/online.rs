@@ -102,6 +102,21 @@ pub fn simulate_window_topology_recorded(
     }
 }
 
+/// Tokens a GPU-indexed traffic matrix routes through non-alive GPUs: the
+/// sum of every dead GPU's row (sends) and column (receives). The fault
+/// path's safety assertion — after a [`crate::coordinator::ClusterEvent`]
+/// failure is promoted, the projected serving traffic of every subsequent
+/// window must score **zero** here (a dead GPU neither sends nor receives).
+/// Diagonal (local) tokens of a dead GPU are counted twice; irrelevant for
+/// the `== 0` check this backs.
+pub fn dead_gpu_tokens(traffic: &TrafficMatrix, alive: &[bool]) -> u64 {
+    assert_eq!(traffic.n(), alive.len(), "liveness mask must be GPU-indexed");
+    (0..traffic.n())
+        .filter(|&g| !alive[g])
+        .map(|g| traffic.row_sum(g) + traffic.col_sum(g))
+        .sum()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -128,6 +143,18 @@ mod tests {
         let z = TrafficMatrix::zeros(4);
         let c = simulate_window(&[&s], Some(&z), &cluster, SchedulePolicy::Aurora);
         assert_eq!(a, c);
+    }
+
+    #[test]
+    fn dead_gpu_tokens_counts_rows_and_columns() {
+        let mut t = TrafficMatrix::zeros(3);
+        t.set(0, 1, 10);
+        t.set(1, 2, 7);
+        t.set(2, 0, 5);
+        assert_eq!(dead_gpu_tokens(&t, &[true, true, true]), 0);
+        // GPU 2 dead: receives 7, sends 5
+        assert_eq!(dead_gpu_tokens(&t, &[true, true, false]), 12);
+        assert_eq!(dead_gpu_tokens(&t, &[false, true, true]), 15);
     }
 
     #[test]

@@ -85,6 +85,44 @@ pub fn drifting_zipf_traffic(
     d.compact()
 }
 
+/// Flash-crowd variant of [`drifting_zipf_traffic`]: the phase's hot expert
+/// (popularity rank 0) has its routing share multiplied by `surge` before
+/// the row is renormalized, so a viral prompt suddenly concentrates an even
+/// larger fraction of every sender's (unchanged) `tokens_per_sender` on one
+/// expert — the overload regime that drives the elasticity policy's
+/// scale-up trigger. `surge = 1.0` is bit-for-bit [`drifting_zipf_traffic`];
+/// row sums are exact for any surge, so the flash crowd shifts load, it does
+/// not add tokens.
+pub fn flash_crowd_traffic(
+    n: usize,
+    tokens_per_sender: u64,
+    alpha: f64,
+    seed: u64,
+    phase: usize,
+    surge: f64,
+) -> TrafficMatrix {
+    assert!(surge >= 1.0, "a flash crowd concentrates load, surge >= 1");
+    let mut weights = rotated_zipf_popularity(n, alpha, seed, phase);
+    let hot = (0..n)
+        .max_by(|&a, &b| weights[a].total_cmp(&weights[b]))
+        .expect("popularity is non-empty");
+    weights[hot] *= surge;
+    let total: f64 = weights.iter().sum();
+    for w in &mut weights {
+        *w /= total;
+    }
+    let parts = super::split_tokens(tokens_per_sender, &weights);
+    let mut d = TrafficMatrix::zeros(n);
+    for i in 0..n {
+        for (j, &part) in parts.iter().enumerate() {
+            if part > 0 {
+                d.add(i, j, part);
+            }
+        }
+    }
+    d.compact()
+}
+
 /// Sampled (noisy) variant of [`drifting_zipf_traffic`]: each sender's
 /// `tokens_per_sender` tokens are drawn one by one from the rotated Zipf
 /// popularity with an RNG seeded by `draw_seed`, so repeated windows of one
@@ -307,6 +345,31 @@ mod tests {
         a.sort();
         b.sort();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn flash_crowd_concentrates_load_without_adding_tokens() {
+        let n = 8;
+        let base = drifting_zipf_traffic(n, 400, 1.2, 7, 0);
+        // surge 1 is bit-for-bit the plain generator
+        assert_eq!(flash_crowd_traffic(n, 400, 1.2, 7, 0, 1.0), base);
+        let crowd = flash_crowd_traffic(n, 400, 1.2, 7, 0, 4.0);
+        // rows stay exact: the crowd shifts tokens, it does not add them
+        for i in 0..n {
+            let row: u64 = (0..n).map(|j| crowd.get(i, j)).sum();
+            assert_eq!(row, 400, "row {i}");
+        }
+        assert_eq!(crowd.total(), base.total());
+        // the hot expert got hotter, at everyone else's expense
+        let hot = |m: &TrafficMatrix| {
+            let loads = m.expert_loads();
+            (0..n).max_by_key(|&e| loads[e]).unwrap()
+        };
+        let h = hot(&base);
+        assert_eq!(hot(&crowd), h, "the surge hits the phase's hot expert");
+        assert!(crowd.expert_loads()[h] > base.expert_loads()[h]);
+        // determinism
+        assert_eq!(crowd, flash_crowd_traffic(n, 400, 1.2, 7, 0, 4.0));
     }
 
     #[test]

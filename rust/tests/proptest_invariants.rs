@@ -1032,3 +1032,134 @@ fn prop_slo_monitor_fires_iff_rolling_p99_exceeds_target() {
         }
     }
 }
+
+/// PROPERTY: under randomized cluster-membership churn
+/// ([`aurora::coordinator::failure_schedule`]: fail/drain/join sequences
+/// that always leave ≥ 2 placeable GPUs), the coordinator's fault path
+/// holds its safety contract at every step:
+///
+/// 1. the active plan never routes a token through a dead GPU — checked by
+///    projecting the plan's expert traffic onto GPUs and summing dead rows
+///    and columns ([`aurora::sim::dead_gpu_tokens`]);
+/// 2. dead GPUs host **zero** replicas (promotion evacuates them in the
+///    event window, before the window serves);
+/// 3. every split plan stays conservation-exact: one weight per replica,
+///    each `(model, expert)` vector summing to 1;
+/// 4. every committed migration sources only from live GPUs, lands only on
+///    placeable GPUs, and its weight schedule validates contention-free.
+#[test]
+fn prop_membership_churn_never_touches_dead_gpus() {
+    use aurora::coordinator::{
+        failure_schedule, Coordinator, CoordinatorConfig, CoordinatorDecision,
+    };
+    use aurora::planner::{Planner, ReplicationConfig};
+    use aurora::replication::{ReplicatedDeployment, SplitPlan};
+    use aurora::sim::dead_gpu_tokens;
+    use aurora::trace::ModelTrace;
+    use aurora::traffic::zipf_traffic;
+
+    fn check_active(
+        coord: &Coordinator,
+        layer: &MoeLayerStats,
+        seed: u64,
+        window: usize,
+    ) {
+        let (rep, splits): (&ReplicatedDeployment, &SplitPlan) = coord.active();
+        let health = coord.health();
+        for m in 0..rep.n_models() {
+            for (e, replica_gpus) in rep.replicas[m].iter().enumerate() {
+                let w = &splits.weights[m][e];
+                assert_eq!(
+                    w.len(),
+                    replica_gpus.len(),
+                    "seed {seed} window {window}: one split weight per replica"
+                );
+                let sum: f64 = w.iter().sum();
+                assert!(
+                    (sum - 1.0).abs() < 1e-9,
+                    "seed {seed} window {window}: splits of ({m},{e}) sum to {sum}"
+                );
+                for &g in replica_gpus {
+                    assert!(
+                        health.is_alive(g),
+                        "seed {seed} window {window}: replica of ({m},{e}) on dead GPU {g}"
+                    );
+                }
+            }
+        }
+        let projected = rep.project_layer_split(0, layer, splits);
+        assert_eq!(
+            dead_gpu_tokens(&projected.traffic, health.alive()),
+            0,
+            "seed {seed} window {window}: tokens routed through a dead GPU"
+        );
+    }
+
+    for seed in 0..10u64 {
+        let mut rng = Rng::new(seed ^ 0xFA17);
+        let n_gpus = 6 + rng.gen_range(3) as usize;
+        let n_experts = n_gpus * 2;
+        let windows = 12;
+        let cluster = Cluster::homogeneous(n_gpus, 800.0);
+        let alpha = 0.8 + rng.gen_f64();
+        let traffic = zipf_traffic(n_experts, 512, alpha, seed);
+        let layer = MoeLayerStats {
+            traffic: traffic.clone(),
+            gate_ms: 0.02,
+            ffn_ms_per_token: 0.001,
+            agg_ms: 0.015,
+        };
+        let trace = ModelTrace {
+            name: format!("churn-{seed}"),
+            layers: vec![layer.clone()],
+        };
+        let planner = Planner::default();
+        let (rep, splits) = planner
+            .plan_replicated(&[&trace], &cluster, &ReplicationConfig::default())
+            .unwrap();
+        let cfg = CoordinatorConfig {
+            cooldown_windows: 0,
+            ..CoordinatorConfig::default()
+        };
+        let mut coord = Coordinator::new(planner, rep, splits, &trace.layers[0], cfg);
+        let events = failure_schedule(n_gpus, windows, 1 + rng.gen_range(3) as usize, seed);
+
+        for w in 0..windows {
+            for (_, ev) in events.iter().filter(|(ew, _)| *ew == w) {
+                coord.inject_event(ev, &cluster);
+                // the promoted stopgap must already be safe, pre-observe
+                check_active(&coord, &layer, seed, w);
+            }
+            check_active(&coord, &layer, seed, w);
+            let decision = coord.observe_window(&traffic, &cluster);
+            if let CoordinatorDecision::Replan(out) = decision {
+                let health = coord.health();
+                for f in &out.migration.flows {
+                    assert!(
+                        health.is_alive(f.src),
+                        "seed {seed} window {w}: migration sourced from dead GPU {}",
+                        f.src
+                    );
+                    assert!(
+                        health.is_placeable(f.dst),
+                        "seed {seed} window {w}: migration lands on unplaceable GPU {}",
+                        f.dst
+                    );
+                }
+                if !out.migration.is_empty() {
+                    // dead rows and columns of the weight traffic are empty,
+                    // and the weight schedule is contention-free and exact
+                    assert_eq!(dead_gpu_tokens(&out.migration.traffic, health.alive()), 0);
+                    validate_slot_schedule(&out.migration.traffic, &out.migration.schedule)
+                        .unwrap();
+                }
+            }
+            // let any staging swap land, then the installed plan must be
+            // safe for the *current* membership too
+            coord.advance(1e9);
+            check_active(&coord, &layer, seed, w);
+        }
+        assert_eq!(coord.stats.windows, windows as u64);
+        assert!(coord.health().n_placeable() >= 2, "schedule guarantees survivability");
+    }
+}
