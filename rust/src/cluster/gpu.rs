@@ -1,4 +1,6 @@
-//! [`GpuSpec`] and [`Cluster`].
+//! [`GpuSpec`], [`Cluster`], and [`GpuScales`] (per-GPU effective-rate
+//! multipliers for modeling gray failures: thermal throttling, ECC-retry
+//! slowdowns, flaky NICs).
 
 
 /// One GPU's performance envelope.
@@ -118,6 +120,75 @@ impl Cluster {
     }
 }
 
+/// Per-GPU *effective-rate* multipliers over a nominal [`Cluster`]: a gray
+/// failure (thermal throttling, ECC retries, a flaky NIC) degrades a GPU's
+/// compute or bandwidth without killing it. `compute[g]` scales GPU `g`'s
+/// [`GpuSpec::flops_scale`] and `bandwidth[g]` its port rate; both sit in
+/// `(0, 1]`, with 1.0 = nominal. [`GpuScales::scaled`] materializes the
+/// effective cluster that planners and simulators price degraded serving on.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuScales {
+    /// Per-GPU compute multiplier in `(0, 1]` (1.0 = nominal speed).
+    pub compute: Vec<f64>,
+    /// Per-GPU port-bandwidth multiplier in `(0, 1]` (1.0 = line rate).
+    pub bandwidth: Vec<f64>,
+}
+
+impl GpuScales {
+    /// All-nominal scales over `n` GPUs.
+    pub fn nominal(n: usize) -> GpuScales {
+        GpuScales {
+            compute: vec![1.0; n],
+            bandwidth: vec![1.0; n],
+        }
+    }
+
+    /// Cluster size the scales cover.
+    pub fn n_gpus(&self) -> usize {
+        self.compute.len()
+    }
+
+    /// True when every multiplier is exactly 1.0 — the fast path where
+    /// callers keep the nominal cluster untouched (bit-for-bit behavior).
+    pub fn is_nominal(&self) -> bool {
+        self.compute.iter().all(|&s| s == 1.0) && self.bandwidth.iter().all(|&s| s == 1.0)
+    }
+
+    /// Set GPU `g`'s multipliers (values clamped into `(0, 1]`; a degraded
+    /// GPU is slower, never faster).
+    pub fn set(&mut self, g: usize, compute: f64, bandwidth: f64) {
+        assert!(g < self.n_gpus(), "GPU {g} of {}", self.n_gpus());
+        assert!(compute > 0.0 && bandwidth > 0.0, "scales must be positive");
+        self.compute[g] = compute.min(1.0);
+        self.bandwidth[g] = bandwidth.min(1.0);
+    }
+
+    /// Reset GPU `g` to nominal.
+    pub fn clear(&mut self, g: usize) {
+        self.compute[g] = 1.0;
+        self.bandwidth[g] = 1.0;
+    }
+
+    /// The effective cluster: every [`GpuSpec`]'s `flops_scale` and
+    /// `bandwidth` multiplied by this GPU's scales. Nominal scales return an
+    /// identical clone; callers on hot paths should check
+    /// [`GpuScales::is_nominal`] first and skip the copy.
+    pub fn scaled(&self, cluster: &Cluster) -> Cluster {
+        assert_eq!(cluster.len(), self.n_gpus(), "scales must cover the cluster");
+        Cluster::new(
+            (0..cluster.len())
+                .map(|g| {
+                    let spec = cluster.gpu(g);
+                    GpuSpec {
+                        flops_scale: spec.flops_scale * self.compute[g],
+                        bandwidth: spec.bandwidth * self.bandwidth[g],
+                    }
+                })
+                .collect(),
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -159,5 +230,32 @@ mod tests {
     #[should_panic]
     fn empty_cluster_rejected() {
         Cluster::new(vec![]);
+    }
+
+    #[test]
+    fn nominal_scales_are_identity() {
+        let c = Cluster::paper_heterogeneous(8, 10.0);
+        let s = GpuScales::nominal(8);
+        assert!(s.is_nominal());
+        assert_eq!(s.scaled(&c), c);
+    }
+
+    #[test]
+    fn scaled_cluster_multiplies_compute_and_bandwidth() {
+        let c = Cluster::homogeneous(4, 100.0);
+        let mut s = GpuScales::nominal(4);
+        s.set(2, 0.4, 0.5);
+        assert!(!s.is_nominal());
+        let eff = s.scaled(&c);
+        assert_eq!(eff.gpu(2).flops_scale, 0.4);
+        assert_eq!(eff.gpu(2).bandwidth, 50.0);
+        for g in [0, 1, 3] {
+            assert_eq!(eff.gpu(g), c.gpu(g));
+        }
+        s.clear(2);
+        assert!(s.is_nominal());
+        // scales above 1.0 clamp: degradation never speeds a GPU up
+        s.set(1, 3.0, 2.0);
+        assert_eq!((s.compute[1], s.bandwidth[1]), (1.0, 1.0));
     }
 }

@@ -10,5 +10,5 @@
 mod gpu;
 pub mod topology;
 
-pub use gpu::{Cluster, GpuSpec};
+pub use gpu::{Cluster, GpuScales, GpuSpec};
 pub use topology::{comm_time_topology, uplink_bound, TierLevel, Topology, TopologyError};

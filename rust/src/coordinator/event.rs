@@ -17,13 +17,25 @@
 //!   as a placement target, and the serving loop asserts it receives zero
 //!   tokens ([`crate::sim::dead_gpu_tokens`]).
 //!
-//! [`failure_schedule`] generates randomized but always-survivable event
-//! sequences for property tests and the `eval resilience` figure.
+//! Beyond binary membership, GPUs also fail *gray*: thermal throttling, ECC
+//! retries, and flaky NICs degrade effective compute or bandwidth without
+//! killing anything. [`ClusterEvent::GpuDegraded`], [`ClusterEvent::LinkDegraded`],
+//! and [`ClusterEvent::GpuRecovered`] carry that truth; [`DegradeState`]
+//! replays them into the per-GPU [`GpuScales`] the simulator serves on. The
+//! coordinator is **never** handed these scales — it must infer them from
+//! observed timelines ([`crate::obs::degrade`]).
+//!
+//! [`failure_schedule`] and [`degradation_schedule`] generate randomized,
+//! deterministic event sequences (always-survivable for membership) for
+//! property tests and the `eval resilience` / `eval straggler` figures; both
+//! ride the same seeded [`event_stream`] builder.
 
+use crate::cluster::GpuScales;
 use crate::util::Rng;
 
-/// One cluster-membership change, applied at the start of a serving window.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// One cluster change, applied at the start of a serving window: a binary
+/// membership transition or a gray (effective-rate) degradation.
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub enum ClusterEvent {
     /// Hard failure: the GPU and every expert copy on it are gone.
     GpuFailed(usize),
@@ -32,6 +44,30 @@ pub enum ClusterEvent {
     /// Graceful leave: stop placing on the GPU and migrate its copies off;
     /// it keeps serving (and may source migrations) until vacated.
     GpuDrained(usize),
+    /// Gray failure: the GPU keeps serving but its effective compute and
+    /// port bandwidth drop to the given fractions of nominal (set, not
+    /// multiplied — the event carries the new truth).
+    GpuDegraded {
+        /// The degraded GPU.
+        gpu: usize,
+        /// Effective compute as a fraction of nominal, in `(0, 1]`.
+        compute_scale: f64,
+        /// Effective port bandwidth as a fraction of nominal, in `(0, 1]`.
+        bandwidth_scale: f64,
+    },
+    /// Gray link failure: the GPU's port degrades directionally; compute is
+    /// untouched. [`GpuSpec`](crate::cluster::GpuSpec) models one full-duplex
+    /// port rate, so [`DegradeState`] folds this to the *tighter* direction.
+    LinkDegraded {
+        /// The GPU whose port degrades.
+        gpu: usize,
+        /// Uplink (tx) rate as a fraction of nominal, in `(0, 1]`.
+        up_scale: f64,
+        /// Downlink (rx) rate as a fraction of nominal, in `(0, 1]`.
+        down_scale: f64,
+    },
+    /// The gray failure cleared: the GPU is back at nominal rates.
+    GpuRecovered(usize),
 }
 
 impl ClusterEvent {
@@ -40,7 +76,9 @@ impl ClusterEvent {
         match *self {
             ClusterEvent::GpuFailed(g)
             | ClusterEvent::GpuJoined(g)
-            | ClusterEvent::GpuDrained(g) => g,
+            | ClusterEvent::GpuDrained(g)
+            | ClusterEvent::GpuRecovered(g) => g,
+            ClusterEvent::GpuDegraded { gpu, .. } | ClusterEvent::LinkDegraded { gpu, .. } => gpu,
         }
     }
 
@@ -50,7 +88,22 @@ impl ClusterEvent {
             ClusterEvent::GpuFailed(_) => "gpu_failed",
             ClusterEvent::GpuJoined(_) => "gpu_joined",
             ClusterEvent::GpuDrained(_) => "gpu_drained",
+            ClusterEvent::GpuDegraded { .. } => "gpu_degraded",
+            ClusterEvent::LinkDegraded { .. } => "link_degraded",
+            ClusterEvent::GpuRecovered(_) => "gpu_recovered",
         }
+    }
+
+    /// True for the gray-failure vocabulary (degrade/recover): events that
+    /// change effective rates but never membership. [`ClusterHealth`] ignores
+    /// them; [`DegradeState`] is their state machine.
+    pub fn is_degradation(&self) -> bool {
+        matches!(
+            self,
+            ClusterEvent::GpuDegraded { .. }
+                | ClusterEvent::LinkDegraded { .. }
+                | ClusterEvent::GpuRecovered(_)
+        )
     }
 }
 
@@ -125,7 +178,9 @@ impl ClusterHealth {
     }
 
     /// Apply one membership event. Idempotent: re-failing a dead GPU or
-    /// re-joining a placeable one is a no-op.
+    /// re-joining a placeable one is a no-op. Gray-failure events
+    /// ([`ClusterEvent::is_degradation`]) never change membership and are
+    /// no-ops here — [`DegradeState`] tracks those.
     pub fn apply(&mut self, ev: &ClusterEvent) {
         let g = ev.gpu();
         assert!(g < self.n_gpus(), "event names GPU {g} of {}", self.n_gpus());
@@ -141,8 +196,133 @@ impl ClusterHealth {
             ClusterEvent::GpuDrained(_) => {
                 self.draining[g] = true;
             }
+            ClusterEvent::GpuDegraded { .. }
+            | ClusterEvent::LinkDegraded { .. }
+            | ClusterEvent::GpuRecovered(_) => {}
         }
     }
+}
+
+/// Ground-truth tracker for gray failures: replays [`ClusterEvent`]s into
+/// the per-GPU [`GpuScales`] the *simulator* serves windows on. Events carry
+/// set semantics — a second [`ClusterEvent::GpuDegraded`] on the same GPU
+/// replaces its scales rather than compounding them. Membership transitions
+/// ([`ClusterEvent::GpuFailed`] / [`ClusterEvent::GpuJoined`]) reset the GPU
+/// to nominal: a replaced GPU comes back clean.
+///
+/// This struct is the injection harness's truth, **not** the coordinator's
+/// input — the coordinator only sees what the
+/// [`crate::obs::degrade::DegradationDetector`] infers from timelines.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DegradeState {
+    scales: GpuScales,
+}
+
+impl DegradeState {
+    /// All `n_gpus` GPUs at nominal rates.
+    pub fn new(n_gpus: usize) -> DegradeState {
+        DegradeState {
+            scales: GpuScales::nominal(n_gpus),
+        }
+    }
+
+    /// Cluster size the state covers.
+    pub fn n_gpus(&self) -> usize {
+        self.scales.n_gpus()
+    }
+
+    /// The current true effective-rate scales.
+    pub fn scales(&self) -> &GpuScales {
+        &self.scales
+    }
+
+    /// True when every GPU is at nominal rates.
+    pub fn is_nominal(&self) -> bool {
+        self.scales.is_nominal()
+    }
+
+    /// True when GPU `g` is currently degraded (compute or bandwidth below
+    /// nominal).
+    pub fn is_degraded(&self, g: usize) -> bool {
+        self.scales.compute[g] < 1.0 || self.scales.bandwidth[g] < 1.0
+    }
+
+    /// Replay one event into the truth.
+    pub fn apply(&mut self, ev: &ClusterEvent) {
+        match *ev {
+            ClusterEvent::GpuDegraded {
+                gpu,
+                compute_scale,
+                bandwidth_scale,
+            } => self.scales.set(gpu, compute_scale, bandwidth_scale),
+            ClusterEvent::LinkDegraded {
+                gpu,
+                up_scale,
+                down_scale,
+            } => {
+                // One full-duplex port rate per GPU, so a directional event
+                // folds to the tighter direction; compute stays as-is.
+                let compute = self.scales.compute[gpu];
+                self.scales.set(gpu, compute, up_scale.min(down_scale));
+            }
+            ClusterEvent::GpuRecovered(g)
+            | ClusterEvent::GpuFailed(g)
+            | ClusterEvent::GpuJoined(g) => self.scales.clear(g),
+            ClusterEvent::GpuDrained(_) => {}
+        }
+    }
+}
+
+/// Shared seeded builder behind [`failure_schedule`] and
+/// [`degradation_schedule`]: draw `n_events` event windows, sort them
+/// ascending, then at each window ask `candidates` what the replayed `state`
+/// allows, pick one uniformly (skipping windows with an empty candidate
+/// set), and `apply` the pick before the next window. Exactly one
+/// `gen_range` per placed event keeps schedules deterministic in the
+/// caller-salted `rng`.
+fn event_stream<S>(
+    windows: usize,
+    n_events: usize,
+    rng: &mut Rng,
+    state: &mut S,
+    mut candidates: impl FnMut(&S, &mut Rng) -> Vec<ClusterEvent>,
+    mut apply: impl FnMut(&mut S, &ClusterEvent),
+) -> Vec<(usize, ClusterEvent)> {
+    assert!(windows > 0);
+    let mut ws: Vec<usize> = (0..n_events)
+        .map(|_| rng.gen_range(windows as u64) as usize)
+        .collect();
+    ws.sort_unstable();
+    let mut out = Vec::with_capacity(n_events);
+    for w in ws {
+        let cands = candidates(state, rng);
+        if cands.is_empty() {
+            continue;
+        }
+        let ev = cands[rng.gen_range(cands.len() as u64) as usize];
+        apply(state, &ev);
+        out.push((w, ev));
+    }
+    out
+}
+
+/// The ≥2-placeable-survivors guarantee, shared by every membership
+/// schedule: fail/drain candidates only for placeable GPUs and only while
+/// **more than two** are placeable (so at least two survive any pick); join
+/// candidates only for non-placeable GPUs.
+fn survivable_membership_candidates(health: &ClusterHealth) -> Vec<ClusterEvent> {
+    let mut cands: Vec<ClusterEvent> = Vec::new();
+    for g in 0..health.n_gpus() {
+        if health.is_placeable(g) {
+            if health.n_placeable() > 2 {
+                cands.push(ClusterEvent::GpuFailed(g));
+                cands.push(ClusterEvent::GpuDrained(g));
+            }
+        } else {
+            cands.push(ClusterEvent::GpuJoined(g));
+        }
+    }
+    cands
 }
 
 /// A randomized, always-survivable membership-event schedule: `n_events`
@@ -158,34 +338,64 @@ pub fn failure_schedule(
     seed: u64,
 ) -> Vec<(usize, ClusterEvent)> {
     assert!(n_gpus >= 3, "need headroom to fail a GPU and keep two placeable");
-    assert!(windows > 0);
     let mut rng = Rng::new(seed ^ 0xFA11_5AFE);
-    let mut ws: Vec<usize> = (0..n_events)
-        .map(|_| rng.gen_range(windows as u64) as usize)
-        .collect();
-    ws.sort_unstable();
     let mut health = ClusterHealth::new(n_gpus);
-    let mut out = Vec::with_capacity(n_events);
-    for w in ws {
-        let mut cands: Vec<ClusterEvent> = Vec::new();
-        for g in 0..n_gpus {
-            if health.is_placeable(g) {
-                if health.n_placeable() > 2 {
-                    cands.push(ClusterEvent::GpuFailed(g));
-                    cands.push(ClusterEvent::GpuDrained(g));
+    event_stream(
+        windows,
+        n_events,
+        &mut rng,
+        &mut health,
+        |h, _| survivable_membership_candidates(h),
+        |h, ev| h.apply(ev),
+    )
+}
+
+/// A randomized gray-failure schedule alongside [`failure_schedule`]:
+/// `n_events` degrade/recover events at ascending windows in `0..windows`,
+/// constrained (against a [`DegradeState`] replayed in order) so only
+/// nominal GPUs degrade and only degraded ones recover. Compute stragglers
+/// ([`ClusterEvent::GpuDegraded`]) and slow ports
+/// ([`ClusterEvent::LinkDegraded`]) are offered equally, with a severity
+/// drawn uniformly from `[0.35, 0.9)` per event window. Deterministic in
+/// `seed`; never touches membership, so it interleaves safely with
+/// [`failure_schedule`] output.
+pub fn degradation_schedule(
+    n_gpus: usize,
+    windows: usize,
+    n_events: usize,
+    seed: u64,
+) -> Vec<(usize, ClusterEvent)> {
+    assert!(n_gpus >= 1);
+    let mut rng = Rng::new(seed ^ 0xDE64_4ADE);
+    let mut state = DegradeState::new(n_gpus);
+    event_stream(
+        windows,
+        n_events,
+        &mut rng,
+        &mut state,
+        |st, rng| {
+            let severity = 0.35 + rng.gen_f64() * 0.55;
+            let mut cands: Vec<ClusterEvent> = Vec::new();
+            for g in 0..st.n_gpus() {
+                if st.is_degraded(g) {
+                    cands.push(ClusterEvent::GpuRecovered(g));
+                } else {
+                    cands.push(ClusterEvent::GpuDegraded {
+                        gpu: g,
+                        compute_scale: severity,
+                        bandwidth_scale: 1.0,
+                    });
+                    cands.push(ClusterEvent::LinkDegraded {
+                        gpu: g,
+                        up_scale: severity,
+                        down_scale: 1.0,
+                    });
                 }
-            } else {
-                cands.push(ClusterEvent::GpuJoined(g));
             }
-        }
-        if cands.is_empty() {
-            continue;
-        }
-        let ev = cands[rng.gen_range(cands.len() as u64) as usize];
-        health.apply(&ev);
-        out.push((w, ev));
-    }
-    out
+            cands
+        },
+        |st, ev| st.apply(ev),
+    )
 }
 
 #[cfg(test)]
@@ -208,6 +418,102 @@ mod tests {
         // idempotence
         h.apply(&ClusterEvent::GpuJoined(2));
         assert!(h.all_placeable());
+    }
+
+    #[test]
+    fn health_ignores_gray_failures() {
+        let mut h = ClusterHealth::new(3);
+        h.apply(&ClusterEvent::GpuDegraded {
+            gpu: 1,
+            compute_scale: 0.4,
+            bandwidth_scale: 0.7,
+        });
+        h.apply(&ClusterEvent::LinkDegraded {
+            gpu: 2,
+            up_scale: 0.5,
+            down_scale: 1.0,
+        });
+        h.apply(&ClusterEvent::GpuRecovered(1));
+        assert!(h.all_placeable(), "degradation never changes membership");
+    }
+
+    #[test]
+    fn degrade_state_tracks_truth_with_set_semantics() {
+        let mut d = DegradeState::new(4);
+        assert!(d.is_nominal());
+        d.apply(&ClusterEvent::GpuDegraded {
+            gpu: 2,
+            compute_scale: 0.4,
+            bandwidth_scale: 0.8,
+        });
+        assert!(d.is_degraded(2) && !d.is_degraded(1));
+        assert_eq!((d.scales().compute[2], d.scales().bandwidth[2]), (0.4, 0.8));
+        // set, not multiply: a second event replaces the truth
+        d.apply(&ClusterEvent::GpuDegraded {
+            gpu: 2,
+            compute_scale: 0.6,
+            bandwidth_scale: 1.0,
+        });
+        assert_eq!((d.scales().compute[2], d.scales().bandwidth[2]), (0.6, 1.0));
+        // link degradation folds to the tighter direction, keeps compute
+        d.apply(&ClusterEvent::LinkDegraded {
+            gpu: 2,
+            up_scale: 0.9,
+            down_scale: 0.5,
+        });
+        assert_eq!((d.scales().compute[2], d.scales().bandwidth[2]), (0.6, 0.5));
+        // recovery and membership transitions reset to nominal
+        d.apply(&ClusterEvent::GpuRecovered(2));
+        assert!(d.is_nominal());
+        d.apply(&ClusterEvent::LinkDegraded {
+            gpu: 0,
+            up_scale: 0.3,
+            down_scale: 1.0,
+        });
+        d.apply(&ClusterEvent::GpuFailed(0));
+        assert!(d.is_nominal(), "a replaced GPU comes back clean");
+    }
+
+    #[test]
+    fn degradation_schedule_is_valid_and_deterministic() {
+        for seed in 0..20 {
+            let evs = degradation_schedule(5, 12, 8, seed);
+            assert_eq!(evs, degradation_schedule(5, 12, 8, seed));
+            let mut d = DegradeState::new(5);
+            let mut last_w = 0;
+            for (w, ev) in &evs {
+                assert!(*w >= last_w, "windows ascend");
+                last_w = *w;
+                assert!(ev.is_degradation(), "only gray-failure events");
+                match *ev {
+                    ClusterEvent::GpuDegraded {
+                        gpu,
+                        compute_scale,
+                        bandwidth_scale,
+                    } => {
+                        assert!(!d.is_degraded(gpu));
+                        assert!(compute_scale > 0.0 && compute_scale <= 1.0);
+                        assert!(bandwidth_scale > 0.0 && bandwidth_scale <= 1.0);
+                    }
+                    ClusterEvent::LinkDegraded {
+                        gpu,
+                        up_scale,
+                        down_scale,
+                    } => {
+                        assert!(!d.is_degraded(gpu));
+                        assert!(up_scale > 0.0 && up_scale <= 1.0);
+                        assert!(down_scale > 0.0 && down_scale <= 1.0);
+                    }
+                    ClusterEvent::GpuRecovered(g) => assert!(d.is_degraded(g)),
+                    _ => unreachable!(),
+                }
+                d.apply(ev);
+                for g in 0..5 {
+                    assert!(d.scales().compute[g] > 0.0 && d.scales().compute[g] <= 1.0);
+                    assert!(d.scales().bandwidth[g] > 0.0 && d.scales().bandwidth[g] <= 1.0);
+                }
+            }
+        }
     }
 
     #[test]

@@ -13,6 +13,13 @@
 //! is machine-checkable with
 //! [`crate::schedule::validate_slot_schedule`]. Copies the target drops need
 //! no transfer (freeing memory is local) and are listed separately.
+//!
+//! Pricing is cluster-relative: [`MigrationPlan::migration_ms`] /
+//! [`MigrationPlan::migration_ms_on`] read port rates from whatever
+//! [`Cluster`] they are handed, so the coordinator's gray-failure path needs
+//! no special casing here — passing the *effective* cluster
+//! ([`crate::cluster::GpuScales::scaled`]) automatically charges a repair
+//! migration at a straggler's degraded link rates.
 
 use crate::cluster::{uplink_bound, Cluster, Topology};
 use crate::replication::ReplicatedDeployment;

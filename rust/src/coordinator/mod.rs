@@ -70,11 +70,29 @@
 //! low utilization ([`Coordinator::record_window_utilization`]) drains the
 //! least-loaded GPU behind a bounded-slowdown gate (`consolidated`).
 //!
+//! **Gray failures** ([`Coordinator::observe_degradation`]): a GPU that
+//! *slows* instead of dying — thermal throttling, ECC retries, a flaky NIC —
+//! re-serializes every synchronous all-to-all behind the straggler. The
+//! coordinator is never told the truth ([`DegradeState`] lives in the
+//! injection harness); it only sees what the
+//! [`crate::obs::degrade::DegradationDetector`] confirms from observed
+//! timelines. Confirmed scales become the coordinator's *effective* cluster:
+//! candidate plans, serving estimates, and migration prices are all computed
+//! on [`GpuScales::scaled`] clones, so the existing heterogeneous planner
+//! shifts load off the straggler and migrations are charged at degraded
+//! link rates. A confirmed transition emits `degrade_detected` /
+//! `degrade_recovered` and queues an always-commit replan (verdict
+//! `degrade_replanned`) behind its own flap-damping cooldown
+//! ([`CoordinatorConfig::degrade_cooldown_windows`]); degradation below
+//! [`CoordinatorConfig::degrade_floor`] escalates to the
+//! promote-then-repair path as if the GPU had failed.
+//!
 //! [`online`] ships the drifting-Zipf discrete-event serving simulation that
 //! pins the coordinator against a static plan, naive replan-every-window,
 //! and a zero-cost oracle (the `online` eval figure and the `serve-sim` CLI
-//! subcommand drive it), plus failure/join/leave injection
-//! ([`OnlineConfig`]`::events`) for the `resilience` figure.
+//! subcommand drive it), plus failure/join/leave and degradation injection
+//! ([`OnlineConfig`]`::events`) for the `resilience` and `straggler`
+//! figures.
 
 mod estimator;
 mod event;
@@ -83,7 +101,9 @@ pub mod online;
 mod swap;
 
 pub use estimator::{DriftDetector, TrafficEstimator};
-pub use event::{failure_schedule, ClusterEvent, ClusterHealth};
+pub use event::{
+    degradation_schedule, failure_schedule, ClusterEvent, ClusterHealth, DegradeState,
+};
 pub use migration::{
     migration_preserves_target, plan_migration, plan_migration_avoiding, MigrationFlow,
     MigrationPlan,
@@ -91,7 +111,10 @@ pub use migration::{
 pub use online::{run_online, run_online_traced, OnlineConfig, OnlineOutcome, OnlineStrategy};
 pub use swap::{PlanSwap, SwapPhase};
 
-use crate::cluster::{Cluster, Topology};
+use std::borrow::Cow;
+
+use crate::cluster::{Cluster, GpuScales, Topology};
+use crate::obs::degrade::DetectorEvent;
 use crate::obs::{SloMonitor, Tracer};
 use crate::placement::Deployment;
 use crate::planner::{Planner, ReplicationConfig};
@@ -168,6 +191,16 @@ pub struct CoordinatorConfig {
     pub consolidate_slack: f64,
     /// Consolidation never shrinks the placeable set below this many GPUs.
     pub min_gpus: usize,
+    /// Gray-failure escalation floor: a confirmed degradation whose inferred
+    /// compute *or* bandwidth scale drops below this fraction of nominal is
+    /// treated as a failure (promote-then-repair) instead of a replan — a
+    /// GPU that slow drags every synchronous barrier more than it serves.
+    pub degrade_floor: f64,
+    /// Flap damping for degradation replans: windows that must pass after a
+    /// `degrade_replanned` commit before the next degradation transition may
+    /// trigger another (transitions observed inside the cooldown stay queued
+    /// and run once it clears).
+    pub degrade_cooldown_windows: u64,
 }
 
 impl Default for CoordinatorConfig {
@@ -190,6 +223,8 @@ impl Default for CoordinatorConfig {
             consolidate_util: 0.35,
             consolidate_slack: 0.10,
             min_gpus: 2,
+            degrade_floor: 0.25,
+            degrade_cooldown_windows: 4,
         }
     }
 }
@@ -236,6 +271,15 @@ pub struct CoordinatorStats {
     pub consolidations: u64,
     /// In-flight swaps abandoned because a failure invalidated them.
     pub swaps_aborted: u64,
+    /// Confirmed degradation detections adopted (verdict `degrade_detected`).
+    pub degrade_detected: u64,
+    /// Degradation-driven replans committed (verdict `degrade_replanned`).
+    pub degrade_replans: u64,
+    /// Confirmed recoveries adopted (verdict `degrade_recovered`).
+    pub degrade_recovered: u64,
+    /// Degradations below [`CoordinatorConfig::degrade_floor`] escalated to
+    /// the promote-then-repair failure path.
+    pub escalations: u64,
 }
 
 /// What a committed replan looked like.
@@ -298,6 +342,15 @@ pub struct Coordinator {
     /// A membership- or elasticity-driven replan waiting to run (it bypasses
     /// the drift gate; only swap-busy/cooldown defers it).
     pending: Option<ReplanReason>,
+    /// The detector-inferred effective-rate scales the coordinator prices
+    /// on ([`Coordinator::observe_degradation`]); nominal = the historical
+    /// bit-for-bit path.
+    eff_scales: GpuScales,
+    /// A confirmed degradation transition awaits a replan (set while the
+    /// degrade cooldown holds it back).
+    degrade_dirty: bool,
+    /// Windows since the last `degrade_replanned` commit (flap damping).
+    windows_since_degrade_replan: u64,
     /// GPUs the *coordinator* drained for consolidation — the only ones a
     /// scale-up may silently reclaim (operator drains are not ours to undo).
     drained_by_coordinator: Vec<bool>,
@@ -362,6 +415,9 @@ enum ReplanReason {
         /// The GPU the coordinator drained for this consolidation.
         gpu: usize,
     },
+    /// The degradation detector confirmed a transition (a straggler appeared
+    /// or recovered): re-price the deployment on the effective cluster.
+    Degrade,
 }
 
 impl ReplanReason {
@@ -371,6 +427,7 @@ impl ReplanReason {
             ReplanReason::Rebalance => "rebalance",
             ReplanReason::ScaleUp => "scale_up",
             ReplanReason::Consolidate { .. } => "consolidate",
+            ReplanReason::Degrade => "degrade",
         }
     }
 }
@@ -476,6 +533,9 @@ impl Coordinator {
             rejections: 0,
             health: ClusterHealth::new(n_gpus),
             pending: None,
+            eff_scales: GpuScales::nominal(n_gpus),
+            degrade_dirty: false,
+            windows_since_degrade_replan: u64::MAX / 2,
             drained_by_coordinator: vec![false; n_gpus],
             util_ewma: None,
             burn_streak: 0,
@@ -549,6 +609,102 @@ impl Coordinator {
         &self.health
     }
 
+    /// The detector-inferred effective-rate scales the coordinator currently
+    /// prices candidates on (nominal unless
+    /// [`Coordinator::observe_degradation`] adopted a confirmed detection).
+    pub fn effective_scales(&self) -> &GpuScales {
+        &self.eff_scales
+    }
+
+    /// The cluster the replan pipeline prices on: the nominal `cluster`
+    /// while the inferred scales are nominal (bit-for-bit the historical
+    /// path), else a [`GpuScales::scaled`] clone — candidate plans shift
+    /// load off stragglers via ordinary heterogeneous planning, and
+    /// migrations are charged at degraded link rates.
+    fn effective<'a>(&self, cluster: &'a Cluster) -> Cow<'a, Cluster> {
+        if self.eff_scales.is_nominal() {
+            Cow::Borrowed(cluster)
+        } else {
+            Cow::Owned(self.eff_scales.scaled(cluster))
+        }
+    }
+
+    /// Adopt the degradation detector's verdicts for this window: `scales`
+    /// is [`crate::obs::degrade::DegradationDetector::scales`] (the inferred
+    /// truth, 1.0 on unconfirmed GPUs) and `events` its confirmed
+    /// transitions. The scales become the coordinator's effective pricing
+    /// cluster immediately; each transition emits a decision record
+    /// (`degrade_detected` / `degrade_recovered`) and queues an
+    /// always-commit replan behind the degrade cooldown. A detection whose
+    /// compute or bandwidth scale sits below
+    /// [`CoordinatorConfig::degrade_floor`] instead escalates through
+    /// [`Coordinator::inject_event`] as a [`ClusterEvent::GpuFailed`] —
+    /// promote-then-repair, as if the GPU had died.
+    ///
+    /// Call it after serving each window, alongside
+    /// [`Coordinator::observe_window`]. Never hand it the injection truth:
+    /// the contract of the gray-failure path is that the coordinator only
+    /// acts on what the detector inferred from observed timelines.
+    pub fn observe_degradation(
+        &mut self,
+        events: &[DetectorEvent],
+        scales: &GpuScales,
+        cluster: &Cluster,
+    ) {
+        assert_eq!(scales.n_gpus(), self.health.n_gpus(), "scales must cover the cluster");
+        self.eff_scales = scales.clone();
+        // Dead GPUs are priced out by the health mask, not by scales.
+        for g in 0..self.health.n_gpus() {
+            if !self.health.is_alive(g) {
+                self.eff_scales.clear(g);
+            }
+        }
+        for ev in events {
+            match *ev {
+                DetectorEvent::Degraded {
+                    gpu,
+                    compute_scale,
+                    bandwidth_scale,
+                } => {
+                    if !self.health.is_alive(gpu) {
+                        continue;
+                    }
+                    self.stats.degrade_detected += 1;
+                    let escalate = compute_scale < self.cfg.degrade_floor
+                        || bandwidth_scale < self.cfg.degrade_floor;
+                    self.gate_decision(
+                        "degrade_detected",
+                        self.current_drift(),
+                        vec![
+                            ("gpu", Json::from(gpu)),
+                            ("compute_scale", Json::Num(compute_scale)),
+                            ("bandwidth_scale", Json::Num(bandwidth_scale)),
+                            ("escalated", Json::from(escalate)),
+                        ],
+                    );
+                    if escalate {
+                        // Too slow to keep: below the floor the straggler
+                        // drags every barrier more than it serves.
+                        self.stats.escalations += 1;
+                        self.eff_scales.clear(gpu);
+                        self.inject_event(&ClusterEvent::GpuFailed(gpu), cluster);
+                    } else {
+                        self.degrade_dirty = true;
+                    }
+                }
+                DetectorEvent::Recovered { gpu } => {
+                    self.stats.degrade_recovered += 1;
+                    self.gate_decision(
+                        "degrade_recovered",
+                        self.current_drift(),
+                        vec![("gpu", Json::from(gpu))],
+                    );
+                    self.degrade_dirty = true;
+                }
+            }
+        }
+    }
+
     /// Feed one serving window's mean GPU utilization (0..1) into the
     /// consolidation signal's EWMA (same α as the traffic estimator). Only
     /// consulted when [`CoordinatorConfig::elastic`] is set.
@@ -594,6 +750,9 @@ impl Coordinator {
                 }
                 self.health.apply(ev);
                 self.drained_by_coordinator[g] = false;
+                // A dead GPU's gray-failure scales are moot (its replacement
+                // comes back clean); the health mask prices it out instead.
+                self.eff_scales.clear(g);
                 self.stats.failures += 1;
                 if self.swap.abort() {
                     self.staging_traffic = None;
@@ -609,7 +768,7 @@ impl Coordinator {
                     ffn_ms_per_token: self.ffn_ms_per_token,
                     agg_ms: self.agg_ms,
                 };
-                let splits = optimize_splits(&rep, &[&live_layer], cluster);
+                let splits = optimize_splits(&rep, &[&live_layer], self.effective(cluster).as_ref());
                 self.active = (rep, splits);
                 self.stats.promotions += promoted.len() as u64;
                 self.stats.restores += restored.len() as u64;
@@ -766,6 +925,13 @@ impl Coordinator {
             );
             return CoordinatorDecision::Keep { drift };
         }
+        // Every price in this path is computed on the *effective* cluster:
+        // with a confirmed straggler the candidate planner sees a weaker
+        // GPU (ordinary heterogeneous planning shifts load off it) and the
+        // migration is charged at degraded link rates. Nominal scales ⇒
+        // borrowed nominal cluster, bit for bit.
+        let eff = self.effective(cluster);
+        let cluster = eff.as_ref();
         let live_trace = self.live_trace(est.clone());
         let (cand_rep, cand_splits) = self.plan_candidate(&live_trace, cluster);
         let layers = [&live_trace.layers[0]];
@@ -783,8 +949,11 @@ impl Coordinator {
             // promoted stopgap around) a lost GPU, and the masked candidate
             // is the best deployment for the new membership — a gain gate
             // here would leave drains never vacated and failures
-            // under-replicated.
-            ReplanReason::Repair => true,
+            // under-replicated. Degradation replans commit for the same
+            // reason: the active plan was priced for rates that no longer
+            // exist, and the effective-cluster candidate is the best
+            // deployment for the rates that do.
+            ReplanReason::Repair | ReplanReason::Degrade => true,
             // Growth must actually help (same hysteresis as the drift path).
             ReplanReason::Rebalance | ReplanReason::ScaleUp => {
                 new_ms < cur_ms * (1.0 - self.cfg.min_gain)
@@ -852,6 +1021,11 @@ impl Coordinator {
             ReplanReason::Consolidate { .. } => {
                 self.stats.consolidations += 1;
                 "consolidated"
+            }
+            ReplanReason::Degrade => {
+                self.stats.degrade_replans += 1;
+                self.windows_since_degrade_replan = 0;
+                "degrade_replanned"
             }
         };
         self.gate_decision(
@@ -929,6 +1103,7 @@ impl Coordinator {
         }
         self.stats.windows += 1;
         self.windows_since_replan += 1;
+        self.windows_since_degrade_replan = self.windows_since_degrade_replan.saturating_add(1);
         let _sp = self.tracer.span("coordinator.observe_window");
         self.estimator.observe(observed);
         let est = self.estimator.estimate();
@@ -955,6 +1130,16 @@ impl Coordinator {
         // the dedicated path — it bypasses the drift gate entirely.
         if self.cfg.elastic {
             self.elastic_tick(slo_status.map(|(st, _)| st.burn_rate));
+        }
+        // A confirmed degradation transition queues its replan here, behind
+        // the flap-damping cooldown: transitions inside the cooldown stay
+        // dirty and run once it clears (membership replans take precedence).
+        if self.degrade_dirty
+            && self.pending.is_none()
+            && self.windows_since_degrade_replan > self.cfg.degrade_cooldown_windows
+        {
+            self.degrade_dirty = false;
+            self.pending = Some(ReplanReason::Degrade);
         }
         if let Some(reason) = self.pending {
             return self.pending_replan(reason, &est, drift, cluster);
@@ -983,7 +1168,11 @@ impl Coordinator {
 
         // Candidate plan on the live estimate, under the health mask (after
         // a drain whose repair was rejected, drift/SLO replans must still
-        // avoid placing on non-placeable GPUs).
+        // avoid placing on non-placeable GPUs) and on the effective cluster
+        // (a drift replan while a straggler is confirmed must not hand the
+        // hot experts back to the slow GPU).
+        let eff = self.effective(cluster);
+        let cluster = eff.as_ref();
         let live_trace = self.live_trace(est.clone());
         let (cand_rep, cand_splits) = self.plan_candidate(&live_trace, cluster);
 
@@ -1441,6 +1630,154 @@ mod tests {
             // every attempt was too expensive: the drains rolled back
             assert!(coord.health().all_placeable());
         }
+    }
+
+    #[test]
+    fn confirmed_degradation_replans_on_the_effective_cluster() {
+        let cluster = Cluster::homogeneous(8, 814.0);
+        let skew = zipf_traffic(16, 512, 1.2, 3);
+        let cfg = CoordinatorConfig {
+            cooldown_windows: 0,
+            degrade_cooldown_windows: 0,
+            ..CoordinatorConfig::default()
+        };
+        let mut coord = coordinator_with(skew.clone(), &cluster, cfg);
+        let tracer = Tracer::sim();
+        coord.set_tracer(tracer.clone());
+
+        let mut scales = GpuScales::nominal(8);
+        scales.set(2, 0.4, 1.0);
+        coord.observe_degradation(
+            &[DetectorEvent::Degraded {
+                gpu: 2,
+                compute_scale: 0.4,
+                bandwidth_scale: 1.0,
+            }],
+            &scales,
+            &cluster,
+        );
+        assert_eq!(coord.stats.degrade_detected, 1);
+        assert_eq!(coord.effective_scales().compute[2], 0.4);
+
+        let d = coord.observe_window(&skew, &cluster);
+        assert!(matches!(d, CoordinatorDecision::Replan(_)), "degrade replans always commit");
+        assert_eq!(coord.stats.degrade_replans, 1);
+        let verdicts: Vec<String> = tracer
+            .decisions()
+            .iter()
+            .filter_map(|r| r.get("verdict").and_then(Json::as_str).map(str::to_string))
+            .collect();
+        let det = verdicts.iter().position(|v| v == "degrade_detected").unwrap();
+        let rep = verdicts.iter().position(|v| v == "degrade_replanned").unwrap();
+        assert!(det < rep, "detection strictly precedes the replan");
+        // the straggler stays alive — degradation is gray, not a failure
+        assert!(coord.health().all_placeable());
+
+        // recovery: scales return to nominal, one more always-commit replan
+        coord.advance(1e6);
+        coord.observe_degradation(&[DetectorEvent::Recovered { gpu: 2 }], &GpuScales::nominal(8), &cluster);
+        assert_eq!(coord.stats.degrade_recovered, 1);
+        assert!(coord.effective_scales().is_nominal());
+        let d = coord.observe_window(&skew, &cluster);
+        assert!(matches!(d, CoordinatorDecision::Replan(_)));
+        assert_eq!(coord.stats.degrade_replans, 2);
+        assert!(tracer
+            .decisions()
+            .iter()
+            .any(|r| r.get("verdict").and_then(Json::as_str) == Some("degrade_recovered")));
+    }
+
+    #[test]
+    fn degradation_below_the_floor_escalates_to_failure() {
+        let cluster = Cluster::homogeneous(8, 814.0);
+        let skew = zipf_traffic(16, 512, 1.2, 3);
+        let cfg = CoordinatorConfig {
+            cooldown_windows: 0,
+            ..CoordinatorConfig::default()
+        };
+        let mut coord = coordinator_with(skew.clone(), &cluster, cfg);
+        let tracer = Tracer::sim();
+        coord.set_tracer(tracer.clone());
+        let mut scales = GpuScales::nominal(8);
+        scales.set(5, 0.1, 1.0); // below the 0.25 default floor
+        coord.observe_degradation(
+            &[DetectorEvent::Degraded {
+                gpu: 5,
+                compute_scale: 0.1,
+                bandwidth_scale: 1.0,
+            }],
+            &scales,
+            &cluster,
+        );
+        assert_eq!(coord.stats.escalations, 1);
+        assert_eq!(coord.stats.failures, 1, "escalation runs the failure path");
+        assert!(!coord.health().is_alive(5));
+        // the dead GPU's scales are moot — the health mask prices it out
+        assert_eq!(coord.effective_scales().compute[5], 1.0);
+        let (rep, _) = coord.active();
+        for set in &rep.replicas[0] {
+            assert!(!set.contains(&5), "escalated GPU already evacuated");
+        }
+        let verdicts: Vec<String> = tracer
+            .decisions()
+            .iter()
+            .filter_map(|r| r.get("verdict").and_then(Json::as_str).map(str::to_string))
+            .collect();
+        assert!(verdicts.contains(&"degrade_detected".to_string()));
+        assert!(verdicts.contains(&"repair_promoted".to_string()));
+        // the queued repair commits as usual
+        let d = coord.observe_window(&skew, &cluster);
+        assert!(matches!(d, CoordinatorDecision::Replan(_)));
+        assert_eq!(coord.stats.repairs, 1);
+    }
+
+    #[test]
+    fn degrade_cooldown_damps_flapping() {
+        let cluster = Cluster::homogeneous(8, 814.0);
+        let skew = zipf_traffic(16, 512, 1.2, 3);
+        let cfg = CoordinatorConfig {
+            cooldown_windows: 0,
+            degrade_cooldown_windows: 10,
+            ..CoordinatorConfig::default()
+        };
+        let mut coord = coordinator_with(skew.clone(), &cluster, cfg);
+        let mut scales = GpuScales::nominal(8);
+        scales.set(1, 0.5, 1.0);
+        coord.observe_degradation(
+            &[DetectorEvent::Degraded {
+                gpu: 1,
+                compute_scale: 0.5,
+                bandwidth_scale: 1.0,
+            }],
+            &scales,
+            &cluster,
+        );
+        let d = coord.observe_window(&skew, &cluster);
+        assert!(matches!(d, CoordinatorDecision::Replan(_)));
+        assert_eq!(coord.stats.degrade_replans, 1);
+        coord.advance(1e6);
+        // a flapping detector inside the cooldown queues but never commits
+        for w in 0..5 {
+            let (evs, s) = if w % 2 == 0 {
+                (vec![DetectorEvent::Recovered { gpu: 1 }], GpuScales::nominal(8))
+            } else {
+                (
+                    vec![DetectorEvent::Degraded {
+                        gpu: 1,
+                        compute_scale: 0.5,
+                        bandwidth_scale: 1.0,
+                    }],
+                    scales.clone(),
+                )
+            };
+            coord.observe_degradation(&evs, &s, &cluster);
+            coord.observe_window(&skew, &cluster);
+            coord.advance(1e6);
+        }
+        assert_eq!(
+            coord.stats.degrade_replans, 1,
+            "flapping inside the cooldown must not storm replans"
+        );
     }
 
     #[test]

@@ -27,20 +27,37 @@
 //! promote-then-repair pipeline, and the masked oracle becomes the
 //! fresh-plan-after-failure baseline the `eval resilience` figure measures
 //! recovery against.
+//!
+//! **Gray failures**: degradation events ([`ClusterEvent::GpuDegraded`] /
+//! `LinkDegraded` / `GpuRecovered`) update a [`DegradeState`] *truth* the
+//! simulator serves every window on — every strategy's windows actually
+//! slow down behind the straggler. The truth is **never** handed to the
+//! coordinator: with [`OnlineConfig::degrade_detection`] set it must infer
+//! the scales through a [`DegradationDetector`] fed observed-vs-predicted
+//! window timelines (optionally jittered by [`OnlineConfig::obs_noise`]).
+//! The oracle is *oracle-informed* — it replans each window on the true
+//! effective cluster — so `eval straggler` can measure the detection lag as
+//! detector-driven vs oracle-informed recovery.
 
 use super::{
     plan_candidate_masked, plan_migration_avoiding, ClusterEvent, ClusterHealth, Coordinator,
-    CoordinatorConfig, PlanSwap, SwapPhase,
+    CoordinatorConfig, DegradeState, PlanSwap, SwapPhase,
 };
-use crate::cluster::{Cluster, Topology};
+use crate::cluster::{Cluster, GpuScales, Topology};
 use crate::config::EvalConfig;
+use crate::obs::degrade::{DegradationDetector, DegradeConfig, WindowObservation};
+use crate::obs::timeline::TimelineRecorder;
 use crate::obs::{MetricsRegistry, Tracer};
 use crate::planner::Planner;
 use crate::replication::{optimize_splits, ReplicatedDeployment, SplitPlan};
 use crate::serve::metrics::p50_p95_p99;
-use crate::sim::{dead_gpu_tokens, simulate_window_topology, MoeLayerStats, SimResult};
+use crate::sim::{
+    dead_gpu_tokens, simulate_window_topology_recorded, MoeLayerStats, SimResult,
+};
 use crate::trace::ModelTrace;
-use crate::traffic::{drifting_zipf_traffic, sampled_zipf_traffic, TrafficMatrix};
+use crate::traffic::{
+    drifting_zipf_traffic, multiplicative_noise, sampled_zipf_traffic, TrafficMatrix,
+};
 
 /// Compute constants of the simulated model (the LIMoE reference-GPU
 /// profile, as in `eval::replication`).
@@ -103,6 +120,17 @@ pub struct OnlineConfig {
     /// Enable the coordinator's elasticity policy
     /// ([`CoordinatorConfig::elastic`]) and feed it per-window utilization.
     pub elastic: bool,
+    /// Run the coordinator's gray-failure loop: record each served window's
+    /// timeline, ratio it against a nominal re-simulation, and feed the
+    /// [`DegradationDetector`] — the coordinator learns about stragglers only
+    /// through what it can measure, never from the injected truth.
+    pub degrade_detection: bool,
+    /// Relative amplitude of deterministic multiplicative jitter applied to
+    /// every detector ratio (`0.05` = ±5%), exercising the hysteresis bands.
+    /// Zero (the default) feeds the detector exact ratios.
+    pub obs_noise: f64,
+    /// Detector tuning (smoothing, hysteresis bands, confirmation count).
+    pub degrade: DegradeConfig,
     /// Coordinator policy knobs (also supplies the replication budgets and
     /// the expert weight volume every strategy's migrations use).
     pub coordinator: CoordinatorConfig,
@@ -123,6 +151,9 @@ impl Default for OnlineConfig {
             sampled: false,
             events: Vec::new(),
             elastic: false,
+            degrade_detection: false,
+            obs_noise: 0.0,
+            degrade: DegradeConfig::default(),
             coordinator: CoordinatorConfig::default(),
         }
     }
@@ -152,6 +183,9 @@ impl OnlineConfig {
             sampled,
             events: Vec::new(),
             elastic: false,
+            degrade_detection: false,
+            obs_noise: 0.0,
+            degrade: DegradeConfig::default(),
             coordinator: CoordinatorConfig::default(),
         }
     }
@@ -263,24 +297,45 @@ fn apply_event(
             *active = (rep, splits);
         }
         ClusterEvent::GpuJoined(_) | ClusterEvent::GpuDrained(_) => health.apply(ev),
+        // Gray failures never change membership; the caller tracks them in
+        // its truth `DegradeState` and the strategies stay scale-blind.
+        ClusterEvent::GpuDegraded { .. }
+        | ClusterEvent::LinkDegraded { .. }
+        | ClusterEvent::GpuRecovered(_) => {}
+    }
+}
+
+/// The simulator-facing view of the truth: `None` while the cluster runs at
+/// nominal rates (bit-for-bit the pre-degradation fast path).
+fn truth_scales(truth: &DegradeState) -> Option<&GpuScales> {
+    if truth.is_nominal() {
+        None
+    } else {
+        Some(truth.scales())
     }
 }
 
 /// Serve one window under `(rep, splits)` with optional staged weight
-/// traffic sharing the links (both priced on `topo`). Asserts the projected
-/// GPU traffic routes **zero** tokens through dead GPUs — the fault path's
-/// safety contract. With a live `metrics` registry it records the window's
-/// serving time, mean utilization, queue depth (tokens offered to the
-/// window), and the per-GPU token-load series.
+/// traffic sharing the links (both priced on `topo`) and the ground-truth
+/// degradation `scales` throttling the affected GPUs' engines and ports.
+/// Asserts the projected GPU traffic routes **zero** tokens through dead
+/// GPUs — the fault path's safety contract. With a live `metrics` registry
+/// it records the window's serving time, mean utilization, queue depth
+/// (tokens offered to the window), and the per-GPU token-load series; with
+/// an enabled `rec` it captures the window's observed timeline for the
+/// degradation detector.
+#[allow(clippy::too_many_arguments)]
 fn serve_window(
     rep: &ReplicatedDeployment,
     splits: &SplitPlan,
     stats: &MoeLayerStats,
     background: Option<&TrafficMatrix>,
     cluster: &Cluster,
+    scales: Option<&GpuScales>,
     topo: &Topology,
     health: &ClusterHealth,
     metrics: &MetricsRegistry,
+    rec: &mut TimelineRecorder,
 ) -> SimResult {
     let gpu_stats = rep.project_layer_split(0, stats, splits);
     assert_eq!(
@@ -288,8 +343,15 @@ fn serve_window(
         0,
         "window routed tokens through a dead GPU"
     );
-    let res =
-        simulate_window_topology(&[&gpu_stats], background, cluster, topo, rep.base.policy);
+    let res = simulate_window_topology_recorded(
+        &[&gpu_stats],
+        background,
+        cluster,
+        scales,
+        topo,
+        rep.base.policy,
+        rec,
+    );
     if metrics.is_enabled() {
         metrics.counter_add("serve.windows", 1);
         metrics.hist_record("serve.window_ms", res.inference_ms);
@@ -381,6 +443,7 @@ pub fn run_online_traced(
     match strategy {
         OnlineStrategy::Static => {
             let mut health = ClusterHealth::new(cfg.n_gpus);
+            let mut truth = DegradeState::new(cfg.n_gpus);
             let mut active = (rep0, splits0);
             let mut per_window = Vec::with_capacity(cfg.windows);
             for w in 0..cfg.windows {
@@ -391,6 +454,7 @@ pub fn run_online_traced(
                 // around failures (splits re-solved on the plan-time stats,
                 // the only traffic a static strategy knows)
                 for ev in events_at(cfg, w) {
+                    truth.apply(ev);
                     apply_event(ev, &mut health, &mut active, &plan_layer, cluster);
                 }
                 let stats = layer(window_traffic(cfg, w));
@@ -400,9 +464,11 @@ pub fn run_online_traced(
                     &stats,
                     None,
                     cluster,
+                    truth_scales(&truth),
                     &cfg.coordinator.topology,
                     &health,
                     metrics,
+                    &mut TimelineRecorder::disabled(),
                 );
                 per_window.push(res.inference_ms);
                 elapsed_ms += res.inference_ms;
@@ -418,6 +484,8 @@ pub fn run_online_traced(
             }
             let mut coord = Coordinator::new(planner, rep0, splits0, &plan_layer, ccfg);
             coord.set_tracer(tr.clone());
+            let mut truth = DegradeState::new(cfg.n_gpus);
+            let mut detector = DegradationDetector::new(cfg.n_gpus, cfg.degrade.clone());
             let mut per_window = Vec::with_capacity(cfg.windows);
             for w in 0..cfg.windows {
                 tr.set_sim_time_us((elapsed_ms * 1e3).round() as u64);
@@ -426,12 +494,22 @@ pub fn run_online_traced(
                 // Membership events land before the window serves: a failed
                 // GPU is promoted around in this very window (verdict
                 // `repair_promoted`), the repair replan queues behind it.
+                // Gray failures only move the truth — the coordinator is
+                // never told, it has to *infer* them from window timelines.
                 for ev in events_at(cfg, w) {
-                    coord.inject_event(ev, cluster);
+                    truth.apply(ev);
+                    if !ev.is_degradation() {
+                        coord.inject_event(ev, cluster);
+                    }
                 }
                 let observed = window_traffic(cfg, w);
                 let stats = layer(observed.clone());
                 let background = coord.staging_traffic().cloned();
+                let mut rec = if cfg.degrade_detection {
+                    TimelineRecorder::new(cfg.n_gpus)
+                } else {
+                    TimelineRecorder::disabled()
+                };
                 let (rep, splits) = coord.active();
                 let res = serve_window(
                     rep,
@@ -439,10 +517,52 @@ pub fn run_online_traced(
                     &stats,
                     background.as_ref(),
                     cluster,
+                    truth_scales(&truth),
                     &cfg.coordinator.topology,
                     coord.health(),
                     metrics,
+                    &mut rec,
                 );
+                // Detection input must be built against the plan that served
+                // this window, before `advance` can swap it: re-simulate the
+                // identical projected traffic (staging included) at nominal
+                // rates and ratio observed vs predicted busy time per GPU.
+                let degrade_obs = if cfg.degrade_detection {
+                    let observed_tl = rec.take().expect("recorder was enabled");
+                    let (rep, splits) = coord.active();
+                    let gpu_stats = rep.project_layer_split(0, &stats, splits);
+                    let mut pred = TimelineRecorder::new(cfg.n_gpus);
+                    simulate_window_topology_recorded(
+                        &[&gpu_stats],
+                        background.as_ref(),
+                        cluster,
+                        None,
+                        &cfg.coordinator.topology,
+                        rep.base.policy,
+                        &mut pred,
+                    );
+                    let predicted_tl = pred.take().expect("recorder was enabled");
+                    let mut obs = WindowObservation::from_timelines(
+                        &observed_tl,
+                        &predicted_tl,
+                        cfg.degrade.min_ms,
+                    );
+                    if cfg.obs_noise > 0.0 {
+                        for g in 0..cfg.n_gpus {
+                            obs.compute_ratio[g] *=
+                                multiplicative_noise(cfg.seed, w, g, cfg.obs_noise);
+                            obs.link_ratio[g] *= multiplicative_noise(
+                                cfg.seed,
+                                w,
+                                cfg.n_gpus + g,
+                                cfg.obs_noise,
+                            );
+                        }
+                    }
+                    Some(obs)
+                } else {
+                    None
+                };
                 let ms = res.inference_ms;
                 per_window.push(ms);
                 elapsed_ms += ms;
@@ -450,6 +570,13 @@ pub fn run_online_traced(
                 // its decision records are stamped at the window's end.
                 tr.set_sim_time_us((elapsed_ms * 1e3).round() as u64);
                 coord.advance(ms);
+                // Detector transitions land before the gate: a confirmed
+                // straggler queues its effective-rate replan (or escalates)
+                // in the same `observe_window` call that follows.
+                if let Some(obs) = degrade_obs {
+                    let events = detector.observe(&obs);
+                    coord.observe_degradation(&events, &detector.scales(), cluster);
+                }
                 // The window's serving latency feeds the SLO watchdog (a
                 // no-op unless the config sets a target) before the gate
                 // runs, so a p99 break replans on this very window; the
@@ -467,6 +594,10 @@ pub fn run_online_traced(
                 metrics.counter_add("serve.repairs", coord.stats.repairs);
                 metrics.counter_add("serve.scale_ups", coord.stats.scale_ups);
                 metrics.counter_add("serve.consolidations", coord.stats.consolidations);
+                metrics.counter_add("serve.degrade_detected", coord.stats.degrade_detected);
+                metrics.counter_add("serve.degrade_replans", coord.stats.degrade_replans);
+                metrics.counter_add("serve.degrade_recovered", coord.stats.degrade_recovered);
+                metrics.counter_add("serve.escalations", coord.stats.escalations);
             }
             outcome(
                 strategy,
@@ -478,6 +609,7 @@ pub fn run_online_traced(
         }
         OnlineStrategy::EveryWindow => {
             let mut health = ClusterHealth::new(cfg.n_gpus);
+            let mut truth = DegradeState::new(cfg.n_gpus);
             let mut active = (rep0, splits0);
             let mut swap = PlanSwap::new(cfg.coordinator.drain_ms);
             let mut staging: Option<TrafficMatrix> = None;
@@ -494,6 +626,7 @@ pub fn run_online_traced(
                 // may be in it) and is promoted around immediately, on this
                 // window's own observation.
                 for ev in events_at(cfg, w) {
+                    truth.apply(ev);
                     if matches!(ev, ClusterEvent::GpuFailed(g) if health.is_alive(*g))
                         && swap.abort()
                     {
@@ -512,9 +645,11 @@ pub fn run_online_traced(
                     &stats,
                     background.as_ref(),
                     cluster,
+                    truth_scales(&truth),
                     &cfg.coordinator.topology,
                     &health,
                     metrics,
+                    &mut TimelineRecorder::disabled(),
                 );
                 let ms = res.inference_ms;
                 per_window.push(ms);
@@ -566,6 +701,7 @@ pub fn run_online_traced(
         }
         OnlineStrategy::Oracle => {
             let mut health = ClusterHealth::new(cfg.n_gpus);
+            let mut truth = DegradeState::new(cfg.n_gpus);
             let mut active = (rep0, splits0);
             let mut per_window = Vec::with_capacity(cfg.windows);
             let mut replans = 0u64;
@@ -574,20 +710,31 @@ pub fn run_online_traced(
                 let sp = tr.begin("serve.window");
                 tr.counter(sp, "window", w as i64);
                 // The oracle replans fresh below, so events only move the
-                // mask: the masked plan is the fresh-plan-after-failure
-                // baseline the recovery win condition measures against.
+                // mask (and, for gray failures, the truth it is privileged
+                // to read): the oracle-informed plan is the baseline the
+                // detector-driven recovery win condition measures against.
                 for ev in events_at(cfg, w) {
+                    truth.apply(ev);
                     health.apply(ev);
                 }
                 let observed = window_traffic(cfg, w);
                 let stats = layer(observed.clone());
                 // perfect knowledge, free migration: adopt the best plan for
-                // this exact window (and membership) before serving it
+                // this exact window, membership, *and* true effective rates
+                // (the one privilege the detector-driven coordinator lacks)
+                // before serving it
+                let eff_storage;
+                let plan_cluster: &Cluster = if truth.is_nominal() {
+                    cluster
+                } else {
+                    eff_storage = truth.scales().scaled(cluster);
+                    &eff_storage
+                };
                 let trace = trace_of(stats.clone());
                 let (cand_rep, cand_splits) = plan_candidate_masked(
                     &Planner::default(),
                     &trace,
-                    cluster,
+                    plan_cluster,
                     &cfg.coordinator.topology,
                     &cfg.coordinator.replication,
                     &health,
@@ -603,9 +750,11 @@ pub fn run_online_traced(
                     &stats,
                     None,
                     cluster,
+                    truth_scales(&truth),
                     &cfg.coordinator.topology,
                     &health,
                     metrics,
+                    &mut TimelineRecorder::disabled(),
                 );
                 per_window.push(res.inference_ms);
                 elapsed_ms += res.inference_ms;
@@ -831,5 +980,239 @@ mod tests {
         let mut cfg = small(0.5, false);
         cfg.events = vec![(100, ClusterEvent::GpuFailed(0))];
         run_online(&cfg, &Cluster::homogeneous(4, 814.0), OnlineStrategy::Static);
+    }
+
+    fn verdicts_of(tr: &Tracer) -> Vec<String> {
+        tr.decisions()
+            .iter()
+            .filter_map(|r| {
+                r.get("verdict")
+                    .and_then(crate::util::Json::as_str)
+                    .map(str::to_string)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn a_straggler_slows_the_blind_static_plan() {
+        // The injected truth must actually bite: pre-onset windows are
+        // bit-for-bit the clean run, the onset window is strictly slower.
+        let clean_cfg = small(1.2, false);
+        let mut cfg = small(1.2, false);
+        cfg.events = vec![(
+            8,
+            ClusterEvent::GpuDegraded { gpu: 2, compute_scale: 0.4, bandwidth_scale: 1.0 },
+        )];
+        let cluster = Cluster::homogeneous(4, 814.0);
+        let clean = run_online(&clean_cfg, &cluster, OnlineStrategy::Static);
+        let slow = run_online(&cfg, &cluster, OnlineStrategy::Static);
+        assert_eq!(clean.per_window_ms[..8], slow.per_window_ms[..8]);
+        assert!(
+            slow.per_window_ms[8] > clean.per_window_ms[8] + 1e-9,
+            "a 0.4× compute straggler must slow the blind static plan"
+        );
+        // determinism holds with degradation injected
+        let again = run_online(&cfg, &cluster, OnlineStrategy::Static);
+        assert_eq!(slow.per_window_ms, again.per_window_ms);
+    }
+
+    #[test]
+    fn detector_driven_recovery_tracks_the_informed_oracle() {
+        // The issue's acceptance pin: a 0.4× compute straggler lands at
+        // window 8 of the drifting-Zipf trace; the coordinator — told
+        // nothing, inferring through the detector — must come within 1.25×
+        // of the oracle-informed per-window time inside 6 windows of onset.
+        let mut cfg = small(1.2, false);
+        cfg.events = vec![(
+            8,
+            ClusterEvent::GpuDegraded { gpu: 2, compute_scale: 0.4, bandwidth_scale: 1.0 },
+        )];
+        cfg.degrade_detection = true;
+        cfg.coordinator.cooldown_windows = 0;
+        cfg.coordinator.degrade_cooldown_windows = 0;
+        let cluster = Cluster::homogeneous(4, 814.0);
+        let coord = run_online(&cfg, &cluster, OnlineStrategy::Coordinator);
+        let oracle = run_online(&cfg, &cluster, OnlineStrategy::Oracle);
+        let best = (8..14)
+            .map(|w| coord.per_window_ms[w] / oracle.per_window_ms[w])
+            .fold(f64::INFINITY, f64::min);
+        assert!(
+            best <= 1.25,
+            "detector-driven recovery (best ratio {best}) must reach within \
+             1.25× of the oracle-informed plan within 6 windows of onset"
+        );
+        // determinism of the full detection loop
+        let again = run_online(&cfg, &cluster, OnlineStrategy::Coordinator);
+        assert_eq!(coord.per_window_ms, again.per_window_ms);
+    }
+
+    #[test]
+    fn degrade_verdicts_are_ordered_detect_then_replan() {
+        let mut cfg = small(1.2, false);
+        cfg.events = vec![(
+            8,
+            ClusterEvent::GpuDegraded { gpu: 2, compute_scale: 0.4, bandwidth_scale: 1.0 },
+        )];
+        cfg.degrade_detection = true;
+        cfg.coordinator.cooldown_windows = 0;
+        cfg.coordinator.degrade_cooldown_windows = 0;
+        let cluster = Cluster::homogeneous(4, 814.0);
+        let tr = Tracer::sim();
+        let out = run_online_traced(
+            &cfg,
+            &cluster,
+            OnlineStrategy::Coordinator,
+            &tr,
+            &MetricsRegistry::disabled(),
+        );
+        assert!(out.replans >= 1);
+        let verdicts = verdicts_of(&tr);
+        let d = verdicts.iter().position(|v| v == "degrade_detected");
+        let r = verdicts.iter().position(|v| v == "degrade_replanned");
+        assert!(d.is_some(), "detection decision recorded");
+        assert!(r.is_some(), "degrade replan decision recorded");
+        assert!(d < r, "detection strictly precedes the replan");
+    }
+
+    #[test]
+    fn noise_only_never_triggers_a_degrade_replan() {
+        // ±5% observation jitter sits entirely above the 0.9 detect band:
+        // the hysteresis must eat it — zero detections, zero degrade replans.
+        let mut cfg = small(1.2, true);
+        cfg.degrade_detection = true;
+        cfg.obs_noise = 0.05;
+        cfg.coordinator.cooldown_windows = 0;
+        cfg.coordinator.degrade_cooldown_windows = 0;
+        let cluster = Cluster::homogeneous(4, 814.0);
+        let tr = Tracer::sim();
+        let out = run_online_traced(
+            &cfg,
+            &cluster,
+            OnlineStrategy::Coordinator,
+            &tr,
+            &MetricsRegistry::disabled(),
+        );
+        assert!(out.total_ms.is_finite());
+        let verdicts = verdicts_of(&tr);
+        assert!(
+            !verdicts.iter().any(|v| v == "degrade_detected" || v == "degrade_replanned"),
+            "noise alone must never flap the detector: {verdicts:?}"
+        );
+    }
+
+    #[test]
+    fn detection_is_purely_observational_without_degradation() {
+        // With nothing to detect, running the whole detection loop (record,
+        // re-simulate, ratio, detector) changes no serving outcome.
+        let off = small(1.2, false);
+        let mut on = small(1.2, false);
+        on.degrade_detection = true;
+        on.obs_noise = 0.02;
+        let cluster = Cluster::homogeneous(4, 814.0);
+        let a = run_online(&off, &cluster, OnlineStrategy::Coordinator);
+        let b = run_online(&on, &cluster, OnlineStrategy::Coordinator);
+        assert_eq!(a.per_window_ms, b.per_window_ms);
+        assert_eq!(a.replans, b.replans);
+        assert_eq!(a.swaps, b.swaps);
+    }
+
+    #[test]
+    fn degrade_and_recover_round_trip_emits_all_three_verdicts() {
+        let mut cfg = small(1.2, false);
+        cfg.events = vec![
+            (
+                3,
+                ClusterEvent::GpuDegraded { gpu: 1, compute_scale: 0.5, bandwidth_scale: 0.6 },
+            ),
+            (8, ClusterEvent::GpuRecovered(1)),
+        ];
+        cfg.degrade_detection = true;
+        cfg.coordinator.cooldown_windows = 0;
+        cfg.coordinator.degrade_cooldown_windows = 0;
+        let cluster = Cluster::homogeneous(4, 814.0);
+        // every strategy survives the round trip (blind ones just slow down)
+        for strategy in [
+            OnlineStrategy::Static,
+            OnlineStrategy::EveryWindow,
+            OnlineStrategy::Coordinator,
+            OnlineStrategy::Oracle,
+        ] {
+            let out = run_online(&cfg, &cluster, strategy);
+            assert_eq!(out.per_window_ms.len(), cfg.windows);
+            assert!(out.per_window_ms.iter().all(|ms| ms.is_finite() && *ms > 0.0));
+        }
+        let tr = Tracer::sim();
+        run_online_traced(
+            &cfg,
+            &cluster,
+            OnlineStrategy::Coordinator,
+            &tr,
+            &MetricsRegistry::disabled(),
+        );
+        let verdicts = verdicts_of(&tr);
+        let d = verdicts.iter().position(|v| v == "degrade_detected");
+        let r = verdicts.iter().position(|v| v == "degrade_replanned");
+        let rec = verdicts.iter().position(|v| v == "degrade_recovered");
+        assert!(d.is_some() && r.is_some() && rec.is_some(), "verdicts: {verdicts:?}");
+        assert!(d < r && r < rec, "detect → replan → recover in order: {verdicts:?}");
+    }
+
+    #[test]
+    fn severe_degradation_escalates_to_promote_then_repair() {
+        // 0.1× is below the 0.25 escalation floor: the coordinator treats
+        // the GPU as failed — completing the run proves no post-escalation
+        // window routed a token through it (serve_window's dead-GPU assert).
+        let mut cfg = small(1.2, false);
+        cfg.events = vec![(
+            5,
+            ClusterEvent::GpuDegraded { gpu: 2, compute_scale: 0.1, bandwidth_scale: 1.0 },
+        )];
+        cfg.degrade_detection = true;
+        cfg.coordinator.cooldown_windows = 0;
+        cfg.coordinator.degrade_cooldown_windows = 0;
+        let cluster = Cluster::homogeneous(4, 814.0);
+        let tr = Tracer::sim();
+        let out = run_online_traced(
+            &cfg,
+            &cluster,
+            OnlineStrategy::Coordinator,
+            &tr,
+            &MetricsRegistry::disabled(),
+        );
+        assert_eq!(out.per_window_ms.len(), cfg.windows);
+        let verdicts = verdicts_of(&tr);
+        assert!(verdicts.iter().any(|v| v == "degrade_detected"));
+        assert!(
+            verdicts.iter().any(|v| v == "repair_promoted"),
+            "escalation reuses promote-then-repair: {verdicts:?}"
+        );
+    }
+
+    #[test]
+    fn degradation_interleaved_with_failure_is_survived() {
+        let mut cfg = small(1.2, false);
+        cfg.events = vec![
+            (
+                3,
+                ClusterEvent::GpuDegraded { gpu: 1, compute_scale: 0.6, bandwidth_scale: 0.8 },
+            ),
+            (6, ClusterEvent::GpuFailed(2)),
+            (10, ClusterEvent::GpuRecovered(1)),
+        ];
+        cfg.degrade_detection = true;
+        cfg.coordinator.cooldown_windows = 0;
+        cfg.coordinator.degrade_cooldown_windows = 0;
+        let cluster = Cluster::homogeneous(4, 814.0);
+        for strategy in [
+            OnlineStrategy::Static,
+            OnlineStrategy::EveryWindow,
+            OnlineStrategy::Coordinator,
+            OnlineStrategy::Oracle,
+        ] {
+            let out = run_online(&cfg, &cluster, strategy);
+            assert_eq!(out.per_window_ms.len(), cfg.windows);
+            let again = run_online(&cfg, &cluster, strategy);
+            assert_eq!(out.per_window_ms, again.per_window_ms);
+        }
     }
 }

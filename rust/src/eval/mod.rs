@@ -17,6 +17,7 @@
 //! | replication | beyond-paper | replicated vs placed vs random under Zipf skew |
 //! | online | beyond-paper | drifting routing: static vs periodic vs coordinator vs oracle |
 //! | resilience | beyond-paper | mid-trace GPU failure: promote-only vs promote-then-repair vs fresh-plan oracle |
+//! | straggler | beyond-paper | gray failure: blind static vs detector-driven coordinator vs oracle-informed plan across severities |
 //! | topology | beyond-paper | two-tier fabric: hierarchical vs flat Aurora vs SJF across oversubscription |
 //! | utilization | §7 reproduction | exclusive vs colocated vs colocated+Aurora, idle time attributed per segment kind |
 
@@ -31,6 +32,7 @@ mod online;
 mod replication;
 mod report;
 mod resilience;
+mod straggler;
 mod topology;
 mod utilization;
 mod workloads;
@@ -46,6 +48,7 @@ pub use online::online_comparison;
 pub use replication::{replication_comparison, skewed_workload};
 pub use report::{MissingColumn, Report};
 pub use resilience::resilience_comparison;
+pub use straggler::straggler_comparison;
 pub use topology::topology_comparison;
 pub use utilization::utilization_figure;
 pub use workloads::Workloads;
@@ -88,6 +91,11 @@ pub fn run_figure(name: &str, cfg: &EvalConfig) -> Result<Vec<Report>, String> {
         // under a stationary workload: static (promote-only) vs the
         // coordinator's promote-then-repair vs the fresh-plan oracle.
         "resilience" => vec![resilience_comparison(cfg, 1.2, 24, 8)],
+        // Beyond-paper extension: gray failures — a mid-trace compute
+        // straggler under drifting routing: blind static vs the
+        // detector-driven coordinator vs the oracle-informed plan, across
+        // degradation severities.
+        "straggler" => vec![straggler_comparison(cfg, 1.2, 16, 8, &[0.8, 0.6, 0.4])],
         // Beyond-paper extension: two-tier topologies — hierarchical
         // two-phase scheduling + placement vs flat Aurora vs SJF across
         // uplink oversubscription factors.
@@ -113,13 +121,14 @@ pub fn run_figure(name: &str, cfg: &EvalConfig) -> Result<Vec<Report>, String> {
             r.push(replication_comparison(cfg, &[0.0, 0.6, 1.2]));
             r.push(online_comparison(cfg, 1.2, 24, 8));
             r.push(resilience_comparison(cfg, 1.2, 24, 8));
+            r.push(straggler_comparison(cfg, 1.2, 16, 8, &[0.8, 0.6, 0.4]));
             r.push(topology_comparison(cfg, &[1.0, 2.0, 4.0]));
             r.push(utilization_figure(cfg, &[0.0, 0.6, 1.2]));
             r
         }
         other => {
             return Err(format!(
-                "unknown figure '{other}' (try 11a/11b/11c/11d/12/13/14/a1/a2/ablation/multi/replication/online/resilience/topology/utilization/all)"
+                "unknown figure '{other}' (try 11a/11b/11c/11d/12/13/14/a1/a2/ablation/multi/replication/online/resilience/straggler/topology/utilization/all)"
             ))
         }
     };

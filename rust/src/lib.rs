@@ -66,6 +66,19 @@
 //!    sustained SLO burn and the fleet consolidates onto fewer GPUs when
 //!    utilization stays low. The `eval resilience` figure pins recovery to
 //!    within 1.15× of a fresh-plan oracle within 5 windows of a failure.
+//! 9. **Gray-failure robustness** ([`obs::degrade`]) — stragglers and
+//!    degraded links don't trip membership events; they only stretch
+//!    barriers. The [`obs::degrade::DegradationDetector`] infers per-GPU
+//!    effective compute/bandwidth scales by ratioing each served window's
+//!    recorded timeline against a nominal-rate re-simulation of the same
+//!    traffic (EWMA-smoothed, 0.9/0.97 hysteresis bands, multi-window
+//!    confirmation — the coordinator is never told the injected truth), and
+//!    [`Coordinator::observe_degradation`] replans on the effective cluster
+//!    with migrations priced at the degraded link rates; scales below the
+//!    severity floor escalate into the promote-then-repair failure path.
+//!    The `eval straggler` figure pins detector-driven recovery to within
+//!    1.25× of an oracle-informed plan within 6 windows of a 0.4× compute
+//!    straggler, and a noise-only trace provably never replans.
 //!
 //! The crate also ships the substrates the evaluation depends on: a
 //! big-switch cluster simulator ([`sim`], [`cluster`]) whose generalized
@@ -134,8 +147,9 @@
 //! "Utilization accounting & SLO watchdog" section (segment taxonomy,
 //! recorder contract, SLO-vs-drift trigger semantics), the "Fault tolerance
 //! & elasticity" section (event model, the promote-then-repair two-phase
-//! contract, elasticity triggers), and which code paths are exact versus
-//! heuristic.
+//! contract, elasticity triggers), the "Gray failures & stragglers" section
+//! (truth model, detection math, effective-rate replanning, escalation
+//! floor), and which code paths are exact versus heuristic.
 
 pub mod assignment;
 pub mod cluster;

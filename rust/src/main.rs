@@ -67,14 +67,14 @@ fn usage() {
         "aurora — MoE inference optimization (paper reproduction)
 
 USAGE:
-  aurora eval     --figure <11a|11b|11c|11d|12|13|14|a1|a2|ablation|multi|replication|online|topology|utilization|resilience|all> [--config f.json] [--json out.json]
+  aurora eval     --figure <11a|11b|11c|11d|12|13|14|a1|a2|ablation|multi|replication|online|topology|utilization|resilience|straggler|all> [--config f.json] [--json out.json]
   aurora plan     --cluster <homo|hetero> --models <N> [--experts-per-gpu <K>] [--replicas <R>] [--skew <ALPHA>] [--groups <G> --oversub <F>] [--config f.json]
   aurora simulate --cluster <homo|hetero> --models <N> [--experts-per-gpu <K>] [--replicas <R>] [--skew <ALPHA>] [--groups <G> --oversub <F>] [--policy aurora|sjf|ljf|pairwise|rcs]
   aurora bench    [--out BENCH_planner.json] [--budget-ms N] [--groups <G> --oversub <F>] [--check [--max-regress R]]
   aurora bench    --merge-measured <artifact.json> [--out BENCH_planner.json]
   aurora trace    --out <file.json> [--config f.json]
   aurora serve    [--artifacts DIR] [--requests N] [--batch N] [--policy aurora|rcs]
-  aurora serve-sim [--drift ALPHA] [--windows N] [--rotate-every N] [--strategy static|periodic|coordinator|oracle|all] [--noise] [--fail-gpu G@W[,G@W...]] [--drain-gpu G@W] [--join-gpu G@W] [--elastic] [--groups <G> --oversub <F>] [--config f.json]
+  aurora serve-sim [--drift ALPHA] [--windows N] [--rotate-every N] [--strategy static|periodic|coordinator|oracle|all] [--noise] [--fail-gpu G@W[,G@W...]] [--drain-gpu G@W] [--join-gpu G@W] [--degrade-gpu G@W:S] [--degrade-link G@W:S] [--recover-gpu G@W] [--obs-noise A] [--elastic] [--groups <G> --oversub <F>] [--config f.json]
   aurora profile  [--gpus N] [--skew ALPHA] [--replicas R] [--seed S] [--trace-out f.json] [--jsonl-out f.jsonl]
 
   --models N           colocate N models (N >= 3 uses the generalized placement core)
@@ -103,6 +103,15 @@ USAGE:
   --drain-gpu G@W      serve-sim: gracefully drain GPU G at window W (migrates away,
                        stays alive)
   --join-gpu G@W       serve-sim: (re)join GPU G to the placeable set at window W
+  --degrade-gpu G@W:S  serve-sim: silently throttle GPU G's compute to S x nominal
+                       (0 < S < 1) at window W — a gray failure the coordinator must
+                       *detect* from window timelines, never a membership change
+                       (comma-separate for multiple events; enables detection)
+  --degrade-link G@W:S serve-sim: silently throttle GPU G's access link to S x nominal
+                       at window W (same detection contract as --degrade-gpu)
+  --recover-gpu G@W    serve-sim: restore GPU G to nominal rates at window W
+  --obs-noise A        serve-sim: multiply every detector ratio by a deterministic
+                       factor in [1-A, 1+A] (measurement jitter; default 0)
   --elastic            serve-sim: let the coordinator grow replica budgets under SLO
                        burn and consolidate onto fewer GPUs when utilization is low
   --merge-measured F   bench: append the snapshot measured in F (a bench history, legacy
@@ -1065,6 +1074,54 @@ fn parse_events(
     Ok(out)
 }
 
+/// Parse one gray-failure flag: comma-separated `GPU@WINDOW:SCALE` specs
+/// (`0 < SCALE < 1`), validated like [`parse_events`].
+fn parse_scaled_events(
+    opts: &Opts,
+    flag: &str,
+    windows: usize,
+    n_gpus: usize,
+    mk: fn(usize, f64) -> aurora::coordinator::ClusterEvent,
+) -> Result<Vec<(usize, aurora::coordinator::ClusterEvent)>, String> {
+    let Some(spec) = opts.get(flag) else {
+        return Ok(Vec::new());
+    };
+    let mut out = Vec::new();
+    for part in spec.split(',').filter(|p| !p.trim().is_empty()) {
+        let (gpu, rest) = part
+            .split_once('@')
+            .ok_or_else(|| format!("bad --{flag} '{part}': expected GPU@WINDOW:SCALE"))?;
+        let (window, scale) = rest
+            .split_once(':')
+            .ok_or_else(|| format!("bad --{flag} '{part}': expected GPU@WINDOW:SCALE"))?;
+        let g: usize = gpu
+            .trim()
+            .parse()
+            .map_err(|_| format!("bad --{flag} GPU '{gpu}'"))?;
+        let w: usize = window
+            .trim()
+            .parse()
+            .map_err(|_| format!("bad --{flag} window '{window}'"))?;
+        let s: f64 = scale
+            .trim()
+            .parse()
+            .map_err(|_| format!("bad --{flag} scale '{scale}'"))?;
+        if g >= n_gpus {
+            return Err(format!("--{flag}: GPU {g} out of range (cluster has {n_gpus} GPUs)"));
+        }
+        if w >= windows {
+            return Err(format!("--{flag}: window {w} out of range (run has {windows} windows)"));
+        }
+        if !(s > 0.0 && s < 1.0) {
+            return Err(format!(
+                "--{flag}: scale {s} out of range (a gray failure runs at 0 < scale < 1)"
+            ));
+        }
+        out.push((w, mk(g, s)));
+    }
+    Ok(out)
+}
+
 fn cmd_serve_sim(opts: &Opts) -> Result<(), String> {
     use aurora::cluster::Cluster;
     use aurora::coordinator::{run_online_traced, ClusterEvent, OnlineConfig, OnlineStrategy};
@@ -1121,6 +1178,46 @@ fn cmd_serve_sim(opts: &Opts) -> Result<(), String> {
         ClusterEvent::GpuDrained,
     )?);
     events.extend(parse_events(opts, "join-gpu", windows, cluster.len(), ClusterEvent::GpuJoined)?);
+    // Gray-failure injection: GPU@WINDOW:SCALE specs. Any degradation flag
+    // arms the coordinator's detector — the injected truth only throttles
+    // the simulator; the coordinator has to notice on its own.
+    let gray = {
+        let mut gray = Vec::new();
+        gray.extend(parse_scaled_events(
+            opts,
+            "degrade-gpu",
+            windows,
+            cluster.len(),
+            |gpu, s| ClusterEvent::GpuDegraded { gpu, compute_scale: s, bandwidth_scale: 1.0 },
+        )?);
+        gray.extend(parse_scaled_events(
+            opts,
+            "degrade-link",
+            windows,
+            cluster.len(),
+            |gpu, s| ClusterEvent::LinkDegraded { gpu, up_scale: s, down_scale: s },
+        )?);
+        gray.extend(parse_events(
+            opts,
+            "recover-gpu",
+            windows,
+            cluster.len(),
+            ClusterEvent::GpuRecovered,
+        )?);
+        gray
+    };
+    if !gray.is_empty() {
+        ocfg.degrade_detection = true;
+        events.extend(gray);
+    }
+    if let Some(s) = opts.get("obs-noise") {
+        let amplitude: f64 = s.parse().map_err(|_| "bad --obs-noise")?;
+        if !(0.0..1.0).contains(&amplitude) {
+            return Err("--obs-noise must sit in [0, 1)".into());
+        }
+        ocfg.obs_noise = amplitude;
+        ocfg.degrade_detection = true;
+    }
     events.sort_by_key(|(w, _)| *w);
     ocfg.events = events;
     ocfg.elastic = opts.get("elastic").is_some_and(|v| v != "false");
@@ -1150,6 +1247,12 @@ fn cmd_serve_sim(opts: &Opts) -> Result<(), String> {
     }
     if ocfg.elastic {
         println!("  elastic: scale-up on SLO burn, consolidation on low utilization");
+    }
+    if ocfg.degrade_detection {
+        println!(
+            "  degradation detection: on (observation jitter +/-{:.0}%)",
+            ocfg.obs_noise * 100.0
+        );
     }
     // Serve-sim traces use the simulator's clock, not the wall clock: two runs
     // with the same seed produce byte-identical trace files.

@@ -8,14 +8,20 @@
 //! BvN phases). Records are collected by the [`super::Tracer`] they were
 //! emitted through, so spans and decisions share one clock and one export.
 //!
-//! The replan gate's verdict vocabulary now spans three trigger families:
+//! The replan gate's verdict vocabulary now spans four trigger families:
 //! drift (`keep_low_drift`, `commit`, `skipped_gain`, `skipped_cost`,
 //! `skipped_cooldown`), SLO (`slo_triggered`, `slo_suppressed_cooldown`),
-//! and cluster membership/elasticity (`repair_promoted` at a failure's
+//! cluster membership/elasticity (`repair_promoted` at a failure's
 //! in-window promotion, `gpu_drained`/`gpu_joined` at the event,
 //! `repair_replanned` when the repair commits, `scaled_up`, and
-//! `consolidated`) — the CI fault-injection smoke leg greps exactly this
-//! vocabulary out of the exported trace.
+//! `consolidated`), and gray failures (`degrade_detected` when the
+//! [`super::degrade::DegradationDetector`]'s confirmation is adopted — with
+//! the inferred `compute_scale`/`bandwidth_scale` and whether it
+//! `escalated` past the severity floor into the failure path —
+//! `degrade_replanned` when the effective-rate replan commits, and
+//! `degrade_recovered` when a straggler returns to nominal) — the CI
+//! fault-injection and straggler smoke legs grep exactly this vocabulary
+//! out of the exported trace.
 //!
 //! Field values are [`Json`] so records stay schema-free: a consumer greps
 //! on `kind` and reads the fields it knows. Ordering of fields is preserved

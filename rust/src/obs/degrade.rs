@@ -1,0 +1,398 @@
+//! Gray-failure detection from observed timelines.
+//!
+//! A straggling GPU never announces itself: thermal throttling, ECC retries,
+//! and flaky NICs just stretch its compute and link segments, and every
+//! *peer* pays for it as `SyncWait` growth at the synchronous all-to-all
+//! barriers. The [`DegradationDetector`] closes the loop without being told
+//! the truth, by comparing what the timeline recorder *observed* against
+//! what the plan-time cost model *predicted* for the same window:
+//!
+//! ```text
+//! ratio[g] = predicted_busy_ms[g] / observed_busy_ms[g]
+//! ```
+//!
+//! Busy totals (compute time on the engine track, uplink+downlink occupancy
+//! on the port track) are barrier-independent — a GPU slowed to 0.4× shows
+//! `ratio ≈ 0.4` on its own track while its peers stay at exactly 1.0, no
+//! matter how the waits shuffle. The ratio is therefore a direct estimate of
+//! the GPU's effective-rate scale ([`crate::cluster::GpuScales`]).
+//!
+//! Raw ratios are noisy (measurement jitter, model error), so the detector
+//! is deliberately sluggish:
+//!
+//! * **EWMA smoothing** per GPU per channel (`ewma_alpha`);
+//! * **hysteresis bands**: a GPU is suspected only while its smoothed ratio
+//!   sits below `detect_below`, and considered healthy again only above
+//!   `recover_above` (`detect_below < recover_above`, so the bands cannot
+//!   chatter);
+//! * **K-consecutive-window confirmation** (`confirm_windows`): a state flip
+//!   needs K windows in a row inside the new band. Small-amplitude noise
+//!   (within the hysteresis gap) therefore *never* flaps the detector.
+//!
+//! Confirmed scales feed [`crate::coordinator::Coordinator::observe_degradation`],
+//! which re-prices deployment candidates on the effective cluster.
+
+use super::timeline::Timelines;
+
+/// Inferred scales never drop below this floor — a ratio near zero means
+/// the measurement broke, not that the GPU runs at 0×.
+const MIN_SCALE: f64 = 0.05;
+
+/// Tuning for the [`DegradationDetector`]'s smoothing and hysteresis.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DegradeConfig {
+    /// EWMA weight of the newest window's ratio (1.0 = no smoothing).
+    pub ewma_alpha: f64,
+    /// Suspect threshold: smoothed ratio below this counts toward a
+    /// degradation confirmation.
+    pub detect_below: f64,
+    /// Healthy threshold: smoothed ratio above this counts toward a
+    /// recovery confirmation. Must exceed `detect_below`.
+    pub recover_above: f64,
+    /// Consecutive windows inside a band required to flip state.
+    pub confirm_windows: usize,
+    /// Segment-duration floor (ms): busy totals below this on either side
+    /// are too small to measure and report ratio 1.0.
+    pub min_ms: f64,
+}
+
+impl Default for DegradeConfig {
+    fn default() -> DegradeConfig {
+        DegradeConfig {
+            ewma_alpha: 0.5,
+            detect_below: 0.9,
+            recover_above: 0.97,
+            confirm_windows: 2,
+            min_ms: 1e-3,
+        }
+    }
+}
+
+impl DegradeConfig {
+    fn validate(&self) {
+        assert!(self.ewma_alpha > 0.0 && self.ewma_alpha <= 1.0);
+        assert!(self.detect_below > 0.0 && self.detect_below < self.recover_above);
+        assert!(self.recover_above <= 1.0);
+        assert!(self.confirm_windows >= 1);
+        assert!(self.min_ms >= 0.0);
+    }
+}
+
+/// One window's observed-vs-predicted ratios, per GPU: the detector's input.
+/// Values near 1.0 mean the GPU ran at the modeled rate; a compute straggler
+/// at 0.4× shows `compute_ratio ≈ 0.4` on its own row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WindowObservation {
+    /// Per-GPU predicted/observed engine compute-time ratio.
+    pub compute_ratio: Vec<f64>,
+    /// Per-GPU predicted/observed port busy-time (uplink+downlink) ratio.
+    pub link_ratio: Vec<f64>,
+}
+
+impl WindowObservation {
+    /// Build from a recorded (observed) and a re-simulated nominal
+    /// (predicted) timeline of the *same* window. Busy totals below `min_ms`
+    /// on either side report 1.0 — too small to measure.
+    pub fn from_timelines(observed: &Timelines, predicted: &Timelines, min_ms: f64) -> Self {
+        assert_eq!(
+            observed.gpus.len(),
+            predicted.gpus.len(),
+            "timelines must cover the same cluster"
+        );
+        let ratio = |p: f64, o: f64| if p < min_ms || o < min_ms { 1.0 } else { p / o };
+        let oc = observed.per_gpu_compute_ms();
+        let pc = predicted.per_gpu_compute_ms();
+        let ol = observed.per_gpu_link_busy_ms();
+        let pl = predicted.per_gpu_link_busy_ms();
+        WindowObservation {
+            compute_ratio: (0..oc.len()).map(|g| ratio(pc[g], oc[g])).collect(),
+            link_ratio: (0..ol.len()).map(|g| ratio(pl[g], ol[g])).collect(),
+        }
+    }
+
+    /// Cluster size the observation covers.
+    pub fn n_gpus(&self) -> usize {
+        self.compute_ratio.len()
+    }
+}
+
+/// A confirmed detector state transition, surfaced to the coordinator.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum DetectorEvent {
+    /// The GPU crossed into confirmed degradation; scales are the current
+    /// smoothed estimates (1.0 on a channel that is not itself degraded).
+    Degraded {
+        /// The degraded GPU.
+        gpu: usize,
+        /// Inferred effective compute scale, in `[MIN_SCALE, 1]`.
+        compute_scale: f64,
+        /// Inferred effective bandwidth scale, in `[MIN_SCALE, 1]`.
+        bandwidth_scale: f64,
+    },
+    /// The GPU crossed back into confirmed health.
+    Recovered {
+        /// The recovered GPU.
+        gpu: usize,
+    },
+}
+
+/// One EWMA + hysteresis state machine (per GPU, per channel).
+#[derive(Debug, Clone, PartialEq, Default)]
+struct Channel {
+    ewma: Option<f64>,
+    below_streak: usize,
+    above_streak: usize,
+    confirmed: bool,
+}
+
+impl Channel {
+    fn observe(&mut self, ratio: f64, cfg: &DegradeConfig) {
+        let e = match self.ewma {
+            None => ratio,
+            Some(prev) => cfg.ewma_alpha * ratio + (1.0 - cfg.ewma_alpha) * prev,
+        };
+        self.ewma = Some(e);
+        if e < cfg.detect_below {
+            self.below_streak += 1;
+        } else {
+            self.below_streak = 0;
+        }
+        if e > cfg.recover_above {
+            self.above_streak += 1;
+        } else {
+            self.above_streak = 0;
+        }
+        if !self.confirmed && self.below_streak >= cfg.confirm_windows {
+            self.confirmed = true;
+        } else if self.confirmed && self.above_streak >= cfg.confirm_windows {
+            self.confirmed = false;
+        }
+    }
+
+    /// The inferred scale: 1.0 unless confirmed degraded, else the smoothed
+    /// ratio clamped into `[MIN_SCALE, 1]`.
+    fn scale(&self) -> f64 {
+        if self.confirmed {
+            self.ewma.unwrap_or(1.0).clamp(MIN_SCALE, 1.0)
+        } else {
+            1.0
+        }
+    }
+}
+
+/// Per-GPU gray-failure detector: feed one [`WindowObservation`] per served
+/// window ([`DegradationDetector::observe`]), read confirmed transitions
+/// from the returned [`DetectorEvent`]s and the current inferred
+/// [`GpuScales`](crate::cluster::GpuScales) from
+/// [`DegradationDetector::scales`]. A GPU is degraded when *either* its
+/// compute or its link channel confirms; it recovers when *both* are
+/// confirmed healthy again.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DegradationDetector {
+    cfg: DegradeConfig,
+    compute: Vec<Channel>,
+    link: Vec<Channel>,
+    flagged: Vec<bool>,
+}
+
+impl DegradationDetector {
+    /// A fresh detector over `n_gpus` GPUs.
+    pub fn new(n_gpus: usize, cfg: DegradeConfig) -> DegradationDetector {
+        assert!(n_gpus > 0);
+        cfg.validate();
+        DegradationDetector {
+            cfg,
+            compute: vec![Channel::default(); n_gpus],
+            link: vec![Channel::default(); n_gpus],
+            flagged: vec![false; n_gpus],
+        }
+    }
+
+    /// Cluster size the detector covers.
+    pub fn n_gpus(&self) -> usize {
+        self.compute.len()
+    }
+
+    /// True when GPU `g` is in confirmed degradation.
+    pub fn is_degraded(&self, g: usize) -> bool {
+        self.flagged[g]
+    }
+
+    /// The currently inferred effective-rate scales: 1.0 everywhere except
+    /// confirmed-degraded channels, which report their smoothed ratio
+    /// (always in `(0, 1]`).
+    pub fn scales(&self) -> crate::cluster::GpuScales {
+        crate::cluster::GpuScales {
+            compute: self.compute.iter().map(Channel::scale).collect(),
+            bandwidth: self.link.iter().map(Channel::scale).collect(),
+        }
+    }
+
+    /// Ingest one window's ratios; returns the confirmed state transitions
+    /// (empty for the vast majority of windows).
+    pub fn observe(&mut self, obs: &WindowObservation) -> Vec<DetectorEvent> {
+        assert_eq!(obs.n_gpus(), self.n_gpus(), "observation must cover the cluster");
+        let mut events = Vec::new();
+        for g in 0..self.n_gpus() {
+            self.compute[g].observe(obs.compute_ratio[g], &self.cfg);
+            self.link[g].observe(obs.link_ratio[g], &self.cfg);
+            let now = self.compute[g].confirmed || self.link[g].confirmed;
+            if now && !self.flagged[g] {
+                events.push(DetectorEvent::Degraded {
+                    gpu: g,
+                    compute_scale: self.compute[g].scale(),
+                    bandwidth_scale: self.link[g].scale(),
+                });
+            } else if !now && self.flagged[g] {
+                events.push(DetectorEvent::Recovered { gpu: g });
+            }
+            self.flagged[g] = now;
+        }
+        events
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Cluster, GpuScales};
+    use crate::obs::timeline::TimelineRecorder;
+    use crate::schedule::SchedulePolicy;
+    use crate::sim::{simulate_window_recorded, MoeLayerStats};
+    use crate::traffic::zipf_traffic;
+
+    fn obs(n: usize, compute: &[(usize, f64)]) -> WindowObservation {
+        let mut o = WindowObservation {
+            compute_ratio: vec![1.0; n],
+            link_ratio: vec![1.0; n],
+        };
+        for &(g, r) in compute {
+            o.compute_ratio[g] = r;
+        }
+        o
+    }
+
+    #[test]
+    fn detector_confirms_after_k_windows_and_recovers() {
+        let mut d = DegradationDetector::new(4, DegradeConfig::default());
+        // window 1: suspected, not confirmed (K = 2)
+        assert!(d.observe(&obs(4, &[(1, 0.4)])).is_empty());
+        assert!(!d.is_degraded(1));
+        assert!(d.scales().is_nominal(), "no confirmation, no inferred scales");
+        // window 2: confirmed, scales reported
+        let evs = d.observe(&obs(4, &[(1, 0.4)]));
+        assert_eq!(evs.len(), 1);
+        match evs[0] {
+            DetectorEvent::Degraded {
+                gpu,
+                compute_scale,
+                bandwidth_scale,
+            } => {
+                assert_eq!(gpu, 1);
+                assert!((compute_scale - 0.4).abs() < 1e-9);
+                assert_eq!(bandwidth_scale, 1.0);
+            }
+            _ => panic!("expected Degraded"),
+        }
+        assert!(d.is_degraded(1));
+        let s = d.scales();
+        assert!((s.compute[1] - 0.4).abs() < 1e-9);
+        for g in [0, 2, 3] {
+            assert_eq!(s.compute[g], 1.0);
+        }
+        // truth recovers: the EWMA climbs back, recovery confirms after it
+        // holds above recover_above for K windows
+        let mut recovered_at = None;
+        for w in 0..12 {
+            let evs = d.observe(&obs(4, &[]));
+            if evs.iter().any(|e| matches!(e, DetectorEvent::Recovered { gpu: 1 })) {
+                recovered_at = Some(w);
+                break;
+            }
+        }
+        assert!(recovered_at.is_some(), "detector must eventually recover");
+        assert!(!d.is_degraded(1));
+        assert!(d.scales().is_nominal());
+    }
+
+    #[test]
+    fn small_noise_never_flaps() {
+        let mut d = DegradationDetector::new(3, DegradeConfig::default());
+        // ±5% jitter stays inside the hysteresis gap's reach of 1.0
+        for w in 0..50 {
+            let jitter = if w % 2 == 0 { 0.95 } else { 1.05 };
+            let o = WindowObservation {
+                compute_ratio: vec![jitter; 3],
+                link_ratio: vec![2.0 - jitter; 3],
+            };
+            assert!(d.observe(&o).is_empty(), "noise-only input must emit nothing");
+        }
+        assert!(d.scales().is_nominal());
+    }
+
+    #[test]
+    fn single_mild_dip_does_not_confirm() {
+        let mut d = DegradationDetector::new(2, DegradeConfig::default());
+        assert!(d.observe(&obs(2, &[(0, 0.85)])).is_empty());
+        for _ in 0..10 {
+            assert!(d.observe(&obs(2, &[])).is_empty());
+        }
+        assert!(!d.is_degraded(0));
+    }
+
+    #[test]
+    fn link_channel_confirms_independently() {
+        let mut d = DegradationDetector::new(2, DegradeConfig::default());
+        let o = WindowObservation {
+            compute_ratio: vec![1.0, 1.0],
+            link_ratio: vec![1.0, 0.5],
+        };
+        assert!(d.observe(&o).is_empty());
+        let evs = d.observe(&o);
+        assert!(matches!(
+            evs[0],
+            DetectorEvent::Degraded {
+                gpu: 1,
+                compute_scale,
+                ..
+            } if compute_scale == 1.0
+        ));
+        assert!((d.scales().bandwidth[1] - 0.5).abs() < 1e-9);
+        assert_eq!(d.scales().compute[1], 1.0);
+    }
+
+    #[test]
+    fn observation_from_timelines_recovers_injected_scales() {
+        let stats = MoeLayerStats {
+            traffic: zipf_traffic(4, 512, 0.8, 3),
+            gate_ms: 0.02,
+            ffn_ms_per_token: 0.001,
+            agg_ms: 0.015,
+        };
+        let cluster = Cluster::homogeneous(4, 100.0);
+        let mut rec = TimelineRecorder::new(4);
+        simulate_window_recorded(&[&stats], None, &cluster, None, SchedulePolicy::Aurora, &mut rec);
+        let predicted = rec.take().unwrap();
+
+        let mut truth = GpuScales::nominal(4);
+        truth.set(2, 0.4, 0.5);
+        let mut rec = TimelineRecorder::new(4);
+        simulate_window_recorded(
+            &[&stats],
+            None,
+            &cluster,
+            Some(&truth),
+            SchedulePolicy::Aurora,
+            &mut rec,
+        );
+        let observed = rec.take().unwrap();
+
+        let o = WindowObservation::from_timelines(&observed, &predicted, 1e-3);
+        assert!((o.compute_ratio[2] - 0.4).abs() < 1e-9);
+        assert!((o.link_ratio[2] - 0.5).abs() < 1e-9);
+        for g in [0, 1, 3] {
+            assert!((o.compute_ratio[g] - 1.0).abs() < 1e-9);
+            assert!((o.link_ratio[g] - 1.0).abs() < 1e-9);
+        }
+    }
+}

@@ -44,8 +44,16 @@
 //!   p50/p95/p99 of serving latencies and flags p99 violations, which the
 //!   coordinator turns into emergency replans (decision verdicts
 //!   `slo_triggered` / `slo_suppressed_cooldown`).
+//! * **Degradation detector** ([`degrade`]) — a [`DegradationDetector`]
+//!   infers per-GPU effective compute/bandwidth scales by ratioing observed
+//!   timeline segment durations against the plan-time cost model's
+//!   prediction (EWMA-smoothed, hysteresis bands, K-consecutive-window
+//!   confirmation), feeding the coordinator's gray-failure repair path
+//!   (verdicts `degrade_detected` / `degrade_replanned` /
+//!   `degrade_recovered`).
 
 pub mod decision;
+pub mod degrade;
 pub mod metrics;
 pub mod profile;
 pub mod slo;
@@ -53,6 +61,7 @@ pub mod timeline;
 pub mod tracer;
 
 pub use decision::DecisionRecord;
+pub use degrade::{DegradationDetector, DegradeConfig, DetectorEvent, WindowObservation};
 pub use metrics::{p50_p95_p99, percentile, Histogram, MetricsError, MetricsRegistry};
 pub use profile::{run_profile, ProfileConfig, ProfileReport};
 pub use slo::{SloMonitor, SloStatus};

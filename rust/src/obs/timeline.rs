@@ -229,6 +229,17 @@ impl Timelines {
         self.gpus.iter().map(GpuTimeline::compute_ms).collect()
     }
 
+    /// Per-GPU total link busy time (ms): uplink + downlink occupancy of the
+    /// GPU's full-duplex port. Busy time is volume / port rate, independent
+    /// of scheduling order — the bandwidth-side signal
+    /// [`crate::obs::degrade::DegradationDetector`] ratios against the
+    /// plan-time prediction.
+    pub fn per_gpu_link_busy_ms(&self) -> Vec<f64> {
+        (0..self.gpus.len())
+            .map(|g| self.uplinks[g].busy_ms() + self.downlinks[g].busy_ms())
+            .collect()
+    }
+
     /// Cluster utilization derived from the timeline; matches the legacy
     /// simulator scalar (pinned by a property test).
     pub fn utilization(&self) -> f64 {

@@ -9,9 +9,18 @@
 //! the wire during the whole window, which can only *overstate* the
 //! migration cost the coordinator pays, never hide it). With no background
 //! traffic the result is bit-for-bit [`simulate_group`].
+//!
+//! **Gray failures**: every window entry point takes optional per-GPU
+//! effective-rate scales ([`GpuScales`]) — the truth of any injected
+//! degradation ([`crate::coordinator::ClusterEvent::GpuDegraded`]). With
+//! scales present the window is simulated on the *effective* cluster
+//! ([`GpuScales::scaled`]), so a throttled GPU's compute segments stretch
+//! and a flaky link's transfers slow down in the recorded timeline — which
+//! is exactly what an observing detector must see. `None` (or all-nominal
+//! scales) is bit-for-bit the nominal path.
 
 use super::{simulate_group_topology_recorded, MoeLayerStats, SimResult};
-use crate::cluster::{Cluster, Topology};
+use crate::cluster::{Cluster, GpuScales, Topology};
 use crate::obs::timeline::TimelineRecorder;
 use crate::schedule::SchedulePolicy;
 use crate::traffic::TrafficMatrix;
@@ -19,14 +28,15 @@ use crate::traffic::TrafficMatrix;
 /// Simulate one serving window: `models` are GPU-indexed layer stats (one
 /// per served model, already projected through the deployment), `background`
 /// an optional GPU-indexed traffic matrix sharing the links (e.g. staged
-/// expert weights).
+/// expert weights), `scales` optional per-GPU effective-rate degradation.
 pub fn simulate_window(
     models: &[&MoeLayerStats],
     background: Option<&TrafficMatrix>,
     cluster: &Cluster,
+    scales: Option<&GpuScales>,
     policy: SchedulePolicy,
 ) -> SimResult {
-    simulate_window_topology(models, background, cluster, &Topology::BigSwitch, policy)
+    simulate_window_topology(models, background, cluster, scales, &Topology::BigSwitch, policy)
 }
 
 /// [`simulate_window`] with timeline recording through `rec` (observational
@@ -35,6 +45,7 @@ pub fn simulate_window_recorded(
     models: &[&MoeLayerStats],
     background: Option<&TrafficMatrix>,
     cluster: &Cluster,
+    scales: Option<&GpuScales>,
     policy: SchedulePolicy,
     rec: &mut TimelineRecorder,
 ) -> SimResult {
@@ -42,6 +53,7 @@ pub fn simulate_window_recorded(
         models,
         background,
         cluster,
+        scales,
         &Topology::BigSwitch,
         policy,
         rec,
@@ -57,6 +69,7 @@ pub fn simulate_window_topology(
     models: &[&MoeLayerStats],
     background: Option<&TrafficMatrix>,
     cluster: &Cluster,
+    scales: Option<&GpuScales>,
     topo: &Topology,
     policy: SchedulePolicy,
 ) -> SimResult {
@@ -64,6 +77,7 @@ pub fn simulate_window_topology(
         models,
         background,
         cluster,
+        scales,
         topo,
         policy,
         &mut TimelineRecorder::disabled(),
@@ -77,10 +91,22 @@ pub fn simulate_window_topology_recorded(
     models: &[&MoeLayerStats],
     background: Option<&TrafficMatrix>,
     cluster: &Cluster,
+    scales: Option<&GpuScales>,
     topo: &Topology,
     policy: SchedulePolicy,
     rec: &mut TimelineRecorder,
 ) -> SimResult {
+    // Degradation rescales the cluster the whole window prices on: compute
+    // divides by the effective flops_scale, serving *and* background traffic
+    // drain at the effective port rates.
+    let effective;
+    let cluster = match scales {
+        Some(s) if !s.is_nominal() => {
+            effective = s.scaled(cluster);
+            &effective
+        }
+        _ => cluster,
+    };
     match background {
         None => simulate_group_topology_recorded(models, cluster, topo, policy, rec).0,
         Some(bg) if bg.total() == 0 => {
@@ -136,12 +162,12 @@ mod tests {
     fn no_background_is_bit_for_bit_simulate_group() {
         let s = stats(5);
         let cluster = Cluster::homogeneous(4, 100.0);
-        let a = simulate_window(&[&s], None, &cluster, SchedulePolicy::Aurora);
+        let a = simulate_window(&[&s], None, &cluster, None, SchedulePolicy::Aurora);
         let b = simulate_group(&[&s], &cluster, SchedulePolicy::Aurora).0;
         assert_eq!(a, b);
         // an all-zero background takes the same path
         let z = TrafficMatrix::zeros(4);
-        let c = simulate_window(&[&s], Some(&z), &cluster, SchedulePolicy::Aurora);
+        let c = simulate_window(&[&s], Some(&z), &cluster, None, SchedulePolicy::Aurora);
         assert_eq!(a, c);
     }
 
@@ -158,14 +184,57 @@ mod tests {
     }
 
     #[test]
+    fn degraded_scales_slow_compute_and_links_in_the_recorded_timeline() {
+        let s = stats(11);
+        let cluster = Cluster::homogeneous(4, 100.0);
+        let mut rec = TimelineRecorder::new(4);
+        let clean = simulate_window_recorded(&[&s], None, &cluster, None, SchedulePolicy::Aurora, &mut rec);
+        let clean_tl = rec.take().unwrap();
+
+        // nominal scales are bit-for-bit the no-scales path
+        let nominal = GpuScales::nominal(4);
+        let same = simulate_window(&[&s], None, &cluster, Some(&nominal), SchedulePolicy::Aurora);
+        assert_eq!(clean, same);
+
+        // throttle GPU 1's compute to 0.4× and its port to 0.5×
+        let mut scales = GpuScales::nominal(4);
+        scales.set(1, 0.4, 0.5);
+        let mut rec = TimelineRecorder::new(4);
+        let slow = simulate_window_recorded(
+            &[&s],
+            None,
+            &cluster,
+            Some(&scales),
+            SchedulePolicy::Aurora,
+            &mut rec,
+        );
+        let slow_tl = rec.take().unwrap();
+        assert!(slow.inference_ms > clean.inference_ms);
+
+        // the straggler's compute segments stretch by exactly 1/0.4
+        let clean_c = clean_tl.per_gpu_compute_ms();
+        let slow_c = slow_tl.per_gpu_compute_ms();
+        assert!((slow_c[1] - clean_c[1] / 0.4).abs() < 1e-9, "{} vs {}", slow_c[1], clean_c[1] / 0.4);
+        // unaffected GPUs' compute totals are untouched (waits differ, busy doesn't)
+        for g in [0, 2, 3] {
+            assert!((slow_c[g] - clean_c[g]).abs() < 1e-9);
+        }
+        // the straggler's link busy time stretches by exactly 1/0.5
+        let clean_l = clean_tl.uplinks[1].busy_ms() + clean_tl.downlinks[1].busy_ms();
+        let slow_l = slow_tl.uplinks[1].busy_ms() + slow_tl.downlinks[1].busy_ms();
+        assert!(clean_l > 0.0);
+        assert!((slow_l - clean_l / 0.5).abs() < 1e-9, "{} vs {}", slow_l, clean_l / 0.5);
+    }
+
+    #[test]
     fn background_traffic_never_shortens_the_window() {
         let s = stats(9);
         let cluster = Cluster::homogeneous(4, 100.0);
-        let clean = simulate_window(&[&s], None, &cluster, SchedulePolicy::Aurora);
+        let clean = simulate_window(&[&s], None, &cluster, None, SchedulePolicy::Aurora);
         let mut bg = TrafficMatrix::zeros(4);
         bg.set(0, 1, 500);
         bg.set(2, 3, 500);
-        let loaded = simulate_window(&[&s], Some(&bg), &cluster, SchedulePolicy::Aurora);
+        let loaded = simulate_window(&[&s], Some(&bg), &cluster, None, SchedulePolicy::Aurora);
         assert!(
             loaded.inference_ms >= clean.inference_ms,
             "background {} vs clean {}",
@@ -175,7 +244,7 @@ mod tests {
         // a big enough transfer dominates the window
         let mut heavy = TrafficMatrix::zeros(4);
         heavy.set(0, 1, 50_000);
-        let slow = simulate_window(&[&s], Some(&heavy), &cluster, SchedulePolicy::Aurora);
+        let slow = simulate_window(&[&s], Some(&heavy), &cluster, None, SchedulePolicy::Aurora);
         assert!(slow.inference_ms > clean.inference_ms * 2.0);
     }
 }

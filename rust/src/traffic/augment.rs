@@ -150,6 +150,26 @@ pub fn sampled_zipf_traffic(
     d.compact()
 }
 
+/// Deterministic multiplicative observation jitter in `[1 − amplitude,
+/// 1 + amplitude]`, keyed by `(seed, window, lane)` — the same triple always
+/// yields the same factor, so noisy-detector runs replay bit-for-bit. The
+/// online harness multiplies each degradation-detector ratio by one draw
+/// (`lane` distinguishes a GPU's compute channel from its link channel), so
+/// the hysteresis bands are exercised under measurement noise without any
+/// global RNG state threading through the serving loop.
+pub fn multiplicative_noise(seed: u64, window: usize, lane: usize, amplitude: f64) -> f64 {
+    assert!((0.0..1.0).contains(&amplitude), "amplitude must sit in [0, 1)");
+    if amplitude == 0.0 {
+        return 1.0;
+    }
+    let mut rng = Rng::new(
+        seed ^ 0x0B5E_7F01
+            ^ (window as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            ^ (lane as u64 + 1).wrapping_mul(0xC2B2_AE3D_27D4_EB4F),
+    );
+    1.0 + amplitude * (2.0 * rng.gen_f64() - 1.0)
+}
+
 /// Augment `d` with artificial traffic so every row and column (diagonal
 /// included — artificial self-traffic is free since it never crosses the
 /// network) sums to `b_max`. Returns `(d_prime, x)` with `d_prime = d + x`,
@@ -390,6 +410,25 @@ mod tests {
             (0..n).max_by_key(|&e| loads[e]).unwrap()
         };
         assert_eq!(hot(&d), hot(&exact));
+    }
+
+    #[test]
+    fn multiplicative_noise_is_bounded_and_deterministic() {
+        let a = 0.05;
+        for w in 0..40 {
+            for lane in 0..8 {
+                let f = multiplicative_noise(7, w, lane, a);
+                assert!((1.0 - a..=1.0 + a).contains(&f), "factor {f}");
+                assert_eq!(f, multiplicative_noise(7, w, lane, a));
+            }
+        }
+        // zero amplitude is exactly the identity
+        assert_eq!(multiplicative_noise(7, 3, 1, 0.0), 1.0);
+        // different lanes of the same window draw independently
+        assert_ne!(
+            multiplicative_noise(7, 3, 0, a),
+            multiplicative_noise(7, 3, 1, a)
+        );
     }
 
     #[test]

@@ -10,7 +10,7 @@ mod augment;
 mod matrix;
 
 pub use augment::{
-    augment_to_balanced, drifting_zipf_traffic, flash_crowd_traffic, sampled_zipf_traffic,
-    zipf_traffic, zipf_weights,
+    augment_to_balanced, drifting_zipf_traffic, flash_crowd_traffic, multiplicative_noise,
+    sampled_zipf_traffic, zipf_traffic, zipf_weights,
 };
 pub use matrix::{split_tokens, NonzeroIter, TrafficError, TrafficMatrix};

@@ -917,9 +917,9 @@ fn prop_timeline_partitions_makespan_and_recording_is_observational() {
 
         // serving window with background staging traffic -> SwapDrain
         let bg = rand_matrix(&mut rng, n, 20);
-        let wp = simulate_window(&refs, Some(&bg), &cluster, policy);
+        let wp = simulate_window(&refs, Some(&bg), &cluster, None, policy);
         let mut rec = TimelineRecorder::new(n);
-        let wr = simulate_window_recorded(&refs, Some(&bg), &cluster, policy, &mut rec);
+        let wr = simulate_window_recorded(&refs, Some(&bg), &cluster, None, policy, &mut rec);
         assert_eq!(wp, wr, "seed {seed}: window recording changed the result");
         let tl = rec.take().unwrap();
         check_engine_partition(&tl, seed);
@@ -1161,5 +1161,198 @@ fn prop_membership_churn_never_touches_dead_gpus() {
         }
         assert_eq!(coord.stats.windows, windows as u64);
         assert!(coord.health().n_placeable() >= 2, "schedule guarantees survivability");
+    }
+}
+
+/// Randomized gray-failure churn: seeded interleavings of degradations,
+/// recoveries, and hard failures drive the coordinator through its detector
+/// loop with ±5% synthetic observation noise. Invariants, every window:
+///
+/// 1. the detector's inferred scales always sit in `(0, 1]`;
+/// 2. the active plan stays conservation-exact (one split weight per
+///    replica, each `(model, expert)` vector summing to 1) and routes zero
+///    tokens through dead GPUs — which covers escalated stragglers, since
+///    escalation runs the failure path;
+/// 3. flap damping holds: committed degrade replans are spaced at least
+///    `degrade_cooldown_windows + 1` windows apart, so their total is
+///    bounded by the horizon.
+#[test]
+fn prop_gray_failure_churn_invariants() {
+    use aurora::coordinator::{
+        degradation_schedule, failure_schedule, ClusterEvent, Coordinator, CoordinatorConfig,
+        DegradeState,
+    };
+    use aurora::obs::degrade::{DegradationDetector, DegradeConfig, WindowObservation};
+    use aurora::planner::{Planner, ReplicationConfig};
+    use aurora::sim::dead_gpu_tokens;
+    use aurora::trace::ModelTrace;
+    use aurora::traffic::{multiplicative_noise, zipf_traffic};
+
+    for seed in 0..8u64 {
+        let mut rng = Rng::new(seed ^ 0x6EA7);
+        let n_gpus = 6 + rng.gen_range(3) as usize;
+        let n_experts = n_gpus * 2;
+        let windows = 16usize;
+        let cluster = Cluster::homogeneous(n_gpus, 800.0);
+        let alpha = 0.8 + rng.gen_f64();
+        let traffic = zipf_traffic(n_experts, 512, alpha, seed);
+        let layer = MoeLayerStats {
+            traffic: traffic.clone(),
+            gate_ms: 0.02,
+            ffn_ms_per_token: 0.001,
+            agg_ms: 0.015,
+        };
+        let trace = ModelTrace {
+            name: format!("gray-{seed}"),
+            layers: vec![layer.clone()],
+        };
+        let planner = Planner::default();
+        let (rep, splits) = planner
+            .plan_replicated(&[&trace], &cluster, &ReplicationConfig::default())
+            .unwrap();
+        let cooldown = rng.gen_range(4);
+        let cfg = CoordinatorConfig {
+            cooldown_windows: 0,
+            degrade_cooldown_windows: cooldown,
+            ..CoordinatorConfig::default()
+        };
+        let mut coord = Coordinator::new(planner, rep, splits, &trace.layers[0], cfg);
+
+        // Merged event stream: a couple of hard failures, a handful of gray
+        // transitions, and one guaranteed-severe straggler to exercise the
+        // escalation floor.
+        let mut events = failure_schedule(n_gpus, windows, 1 + rng.gen_range(2) as usize, seed);
+        events.extend(degradation_schedule(
+            n_gpus,
+            windows,
+            2 + rng.gen_range(3) as usize,
+            seed,
+        ));
+        events.push((
+            2,
+            ClusterEvent::GpuDegraded {
+                gpu: n_gpus - 1,
+                compute_scale: 0.1,
+                bandwidth_scale: 1.0,
+            },
+        ));
+        events.sort_by_key(|(w, _)| *w);
+
+        let mut truth = DegradeState::new(n_gpus);
+        let mut detector = DegradationDetector::new(n_gpus, DegradeConfig::default());
+        let mut last_degrade_replans = 0u64;
+        let mut last_commit_window: Option<usize> = None;
+
+        for w in 0..windows {
+            for (_, ev) in events.iter().filter(|(ew, _)| *ew == w) {
+                truth.apply(ev);
+                if ev.is_degradation() {
+                    continue; // the coordinator must infer these
+                }
+                if matches!(ev, ClusterEvent::GpuFailed(g) if !coord.health().is_alive(*g)) {
+                    continue; // escalation may have beaten the schedule to it
+                }
+                coord.inject_event(ev, &cluster);
+            }
+
+            // Synthetic detector input: truth × ±5% multiplicative noise.
+            // Dead GPUs produce no timeline, so their ratios read 1.0 — the
+            // same contract as WindowObservation::from_timelines' min_ms rule.
+            let ts = truth.scales();
+            let obs = WindowObservation {
+                compute_ratio: (0..n_gpus)
+                    .map(|g| {
+                        if coord.health().is_alive(g) {
+                            ts.compute[g] * multiplicative_noise(seed, w, g, 0.05)
+                        } else {
+                            1.0
+                        }
+                    })
+                    .collect(),
+                link_ratio: (0..n_gpus)
+                    .map(|g| {
+                        if coord.health().is_alive(g) {
+                            ts.bandwidth[g] * multiplicative_noise(seed, w, n_gpus + g, 0.05)
+                        } else {
+                            1.0
+                        }
+                    })
+                    .collect(),
+            };
+            let dev = detector.observe(&obs);
+            let inferred = detector.scales();
+            for g in 0..n_gpus {
+                assert!(
+                    inferred.compute[g] > 0.0 && inferred.compute[g] <= 1.0,
+                    "seed {seed} window {w}: inferred compute scale {} of GPU {g}",
+                    inferred.compute[g]
+                );
+                assert!(
+                    inferred.bandwidth[g] > 0.0 && inferred.bandwidth[g] <= 1.0,
+                    "seed {seed} window {w}: inferred bandwidth scale {} of GPU {g}",
+                    inferred.bandwidth[g]
+                );
+            }
+            coord.observe_degradation(&dev, &inferred, &cluster);
+            coord.observe_window(&traffic, &cluster);
+
+            // Flap damping: commits are at least cooldown+1 windows apart.
+            if coord.stats.degrade_replans > last_degrade_replans {
+                assert_eq!(
+                    coord.stats.degrade_replans,
+                    last_degrade_replans + 1,
+                    "seed {seed} window {w}: one degrade commit per window"
+                );
+                if let Some(prev) = last_commit_window {
+                    assert!(
+                        w - prev > cooldown as usize,
+                        "seed {seed}: degrade replans at windows {prev} and {w} inside the {cooldown}-window cooldown"
+                    );
+                }
+                last_commit_window = Some(w);
+                last_degrade_replans = coord.stats.degrade_replans;
+            }
+
+            coord.advance(1e9);
+
+            // The installed plan is conservation-exact and never touches a
+            // dead (failed or escalated) GPU.
+            let (rep, splits) = coord.active();
+            let health = coord.health();
+            for m in 0..rep.n_models() {
+                for (e, replica_gpus) in rep.replicas[m].iter().enumerate() {
+                    let wts = &splits.weights[m][e];
+                    assert_eq!(wts.len(), replica_gpus.len());
+                    let sum: f64 = wts.iter().sum();
+                    assert!(
+                        (sum - 1.0).abs() < 1e-9,
+                        "seed {seed} window {w}: splits of ({m},{e}) sum to {sum}"
+                    );
+                    for &g in replica_gpus {
+                        assert!(
+                            health.is_alive(g),
+                            "seed {seed} window {w}: replica of ({m},{e}) on dead GPU {g}"
+                        );
+                    }
+                }
+            }
+            let projected = rep.project_layer_split(0, &layer, splits);
+            assert_eq!(
+                dead_gpu_tokens(&projected.traffic, health.alive()),
+                0,
+                "seed {seed} window {w}: tokens routed through a dead GPU"
+            );
+        }
+
+        // Bounded replans under flapping: the cooldown spacing caps the total.
+        let max_commits = 1 + (windows as u64 - 1) / (cooldown + 1);
+        assert!(
+            coord.stats.degrade_replans <= max_commits,
+            "seed {seed}: {} degrade replans exceed the cooldown bound {max_commits}",
+            coord.stats.degrade_replans
+        );
+        // Escalations, when they fire, run the failure path end to end.
+        assert!(coord.stats.failures >= coord.stats.escalations);
+        assert_eq!(coord.stats.windows, windows as u64);
     }
 }
